@@ -1,0 +1,51 @@
+//! Estimator accuracy demo (§6.2): per-field estimated vs measured
+//! bit-rate and PSNR for both compressors, plus selection accuracy
+//! against the iso-PSNR oracle.
+//!
+//! Run: `cargo run --release --example estimator_accuracy`
+
+use adaptivec::data::Dataset;
+use adaptivec::estimator::eval;
+use adaptivec::estimator::selector::AutoSelector;
+
+fn main() -> adaptivec::Result<()> {
+    let sel = AutoSelector::default();
+    for ds in Dataset::ALL {
+        let fields = ds.generate(2018, 1);
+        println!("\n=== {} ({} fields) ===", ds.name(), fields.len());
+        println!(
+            "{:<22} {:>8} {:>8} {:>8} {:>8} {:>6} {:>6} {:>3}",
+            "field", "estBRsz", "realBRsz", "estBRzfp", "realBRzfp", "pick", "orcl", "ok"
+        );
+        let mut evals = Vec::new();
+        for f in &fields {
+            if f.value_range() <= 0.0 {
+                continue;
+            }
+            let ev = eval::evaluate_field(&sel, f, 1e-4)?;
+            println!(
+                "{:<22} {:>8.3} {:>8.3} {:>8.3} {:>8.3} {:>6} {:>6} {:>3}",
+                ev.name,
+                ev.est_br_sz,
+                ev.real_sz.bit_rate,
+                ev.est_br_zfp,
+                ev.real_zfp.bit_rate,
+                ev.picked.name(),
+                ev.oracle.name(),
+                if ev.correct() { "y" } else { "N" }
+            );
+            evals.push(ev);
+        }
+        let s = eval::aggregate_rel_errors(&evals);
+        println!(
+            "summary: selection accuracy {:.1}% | BR err (mean%) SZ {:+.1} ZFP {:+.1} | \
+             PSNR err SZ {:+.1} ZFP {:+.1}",
+            s.accuracy * 100.0,
+            s.br_sz.0,
+            s.br_zfp.0,
+            s.psnr_sz.0,
+            s.psnr_zfp.0
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Quickstart: compress one climate field with the automatic online
+//! selector, inspect the decision, verify the error bound, round-trip.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use adaptivec::data::atm;
+use adaptivec::estimator::selector::{AutoSelector, SelectorConfig};
+use adaptivec::metrics::error_stats;
+
+fn main() -> adaptivec::Result<()> {
+    // 1. A field: one variable of the synthetic CESM-ATM dataset.
+    let field = atm::generate_field(2018, 0);
+    println!(
+        "field {} ({}), {} values, range {:.4}",
+        field.name,
+        field.dims,
+        field.len(),
+        field.value_range()
+    );
+
+    // 2. The selector (Algorithm 1 of the paper): 5% sampling.
+    let selector = AutoSelector::new(SelectorConfig::default());
+    let eb_rel = 1e-4; // value-range-relative error bound
+
+    // 3. Estimate + select + compress in one call.
+    let out = selector.compress(&field, eb_rel)?;
+    println!(
+        "picked {}: estimated BR_sz {:.2} vs BR_zfp {:.2} bits/value @ target PSNR {:.1} dB",
+        out.choice.name(),
+        out.estimates.br_sz,
+        out.estimates.br_zfp,
+        out.estimates.psnr_target
+    );
+    println!(
+        "compressed {} -> {} bytes (ratio {:.2}, {:.2} bits/value)",
+        out.raw_bytes,
+        out.container.len(),
+        out.ratio(),
+        out.bit_rate()
+    );
+
+    // 4. Round-trip and verify the pointwise bound.
+    let recon = selector.decompress(&out.container)?;
+    let stats = error_stats(&field.data, &recon);
+    let bound = eb_rel * field.value_range();
+    println!(
+        "max |err| {:.3e} <= bound {:.3e}; PSNR {:.1} dB",
+        stats.max_abs_err, bound, stats.psnr
+    );
+    assert!(stats.max_abs_err <= bound * (1.0 + 1e-9));
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Rate-distortion curves (the paper's core comparison, §5.1.3):
+//! sweep error bounds, plot PSNR vs bit-rate for SZ, ZFP, and the
+//! automatic selector on representative fields of all three datasets.
+//!
+//! Run: `cargo run --release --example rate_distortion`
+
+use adaptivec::data::{atm, hurricane, nyx, Field};
+use adaptivec::estimator::eval;
+use adaptivec::estimator::selector::AutoSelector;
+use adaptivec::metrics::error_stats;
+
+fn rd_point_auto(sel: &AutoSelector, f: &Field, eb_rel: f64) -> (f64, f64) {
+    let out = sel.compress(f, eb_rel).unwrap();
+    let recon = sel.decompress(&out.container).unwrap();
+    let stats = error_stats(&f.data, &recon);
+    (out.bit_rate(), stats.psnr)
+}
+
+fn main() -> adaptivec::Result<()> {
+    let sel = AutoSelector::default();
+    let fields = vec![
+        atm::generate_field(2018, 0),      // smooth climate field
+        atm::generate_field(2018, 7),      // rough climate field
+        hurricane::generate_field(2018, 7), // vortex velocity U
+        nyx::generate_field(2018, 0),      // cosmology density
+    ];
+    let bounds = [1e-2, 1e-3, 1e-4, 1e-5, 1e-6];
+
+    for f in &fields {
+        println!("\n=== rate-distortion: {} ({}) ===", f.name, f.dims);
+        println!(
+            "{:>8} | {:>8} {:>8} | {:>8} {:>8} | {:>8} {:>8} {:>6}",
+            "eb_rel", "SZ br", "SZ dB", "ZFP br", "ZFP dB", "auto br", "auto dB", "pick"
+        );
+        for &eb in &bounds {
+            let vr = f.value_range();
+            let eb_abs = eb * vr;
+            let sz = eval::measure_sz(f, eb_abs)?;
+            let zfp = eval::measure_zfp(f, eb_abs)?;
+            let (choice, _) = sel.select(f, eb)?;
+            let (abr, apsnr) = rd_point_auto(&sel, f, eb);
+            println!(
+                "{eb:>8.0e} | {:>8.3} {:>8.2} | {:>8.3} {:>8.2} | {:>8.3} {:>8.2} {:>6}",
+                sz.bit_rate, sz.psnr, zfp.bit_rate, zfp.psnr, abr, apsnr,
+                choice.name()
+            );
+        }
+    }
+    println!("\nHigher PSNR at equal bit-rate = better rate-distortion.");
+    Ok(())
+}

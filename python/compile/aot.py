@@ -1,0 +1,42 @@
+"""AOT lowering: jax -> HLO *text* artifacts for the Rust PJRT loader.
+
+HLO text (NOT serialized HloModuleProto, NOT jax.export): jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published `xla` crate binds) rejects; the HLO text
+parser reassigns ids, so text round-trips cleanly. See
+/opt/xla-example/README.md.
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import export_specs
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name, fn, specs in export_specs():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {name}: {len(text)} chars -> {path}")
+
+
+if __name__ == "__main__":
+    main()

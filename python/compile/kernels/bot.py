@@ -1,0 +1,76 @@
+"""L1 Pallas kernels: blockwise orthogonal transform (BOT).
+
+TPU mapping (DESIGN.md §3): the estimator's hot-spot is thousands of
+independent 4^n-block transforms. We tile TILE blocks per grid step —
+TILE x 16 (or 64) f32 lives comfortably in VMEM (<= 64 KiB including
+the output tile and the 4x4 matrix), and the transform itself is a pair
+of 4x4 matmuls per block, expressed so the MXU sees a batched matmul.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; numerics are validated through this path and the real-TPU
+viability is argued from the VMEM/MXU analysis in EXPERIMENTS.md.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Blocks handled per grid step. 2D: 128*16*4B = 8 KiB/tile; 3D:
+# 64*64*4B = 16 KiB/tile — input+output+scratch stay well under VMEM.
+TILE_2D = 128
+TILE_3D = 64
+
+
+def _bot2d_kernel(x_ref, t_ref, o_ref):
+    t = t_ref[...]
+    x = x_ref[...]  # [TILE, 4, 4]
+    o_ref[...] = jnp.einsum(
+        "ab,nbc,dc->nad", t, x, t, preferred_element_type=jnp.float32
+    )
+
+
+def bot2d(blocks: jnp.ndarray) -> jnp.ndarray:
+    """Forward BOT over [n, 4, 4] blocks; n must be a multiple of TILE_2D."""
+    n = blocks.shape[0]
+    assert n % TILE_2D == 0, f"batch {n} not a multiple of {TILE_2D}"
+    t = jnp.asarray(ref.bot_matrix())
+    return pl.pallas_call(
+        _bot2d_kernel,
+        grid=(n // TILE_2D,),
+        in_specs=[
+            pl.BlockSpec((TILE_2D, 4, 4), lambda i: (i, 0, 0)),
+            pl.BlockSpec((4, 4), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_2D, 4, 4), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 4, 4), jnp.float32),
+        interpret=True,
+    )(blocks, t)
+
+
+def _bot3d_kernel(x_ref, t_ref, o_ref):
+    t = t_ref[...]
+    x = x_ref[...]  # [TILE, 4, 4, 4]
+    out = jnp.einsum("nzyx,ax->nzya", x, t, preferred_element_type=jnp.float32)
+    out = jnp.einsum("nzyx,ay->nzax", out, t, preferred_element_type=jnp.float32)
+    out = jnp.einsum("nzyx,az->nayx", out, t, preferred_element_type=jnp.float32)
+    o_ref[...] = out
+
+
+def bot3d(blocks: jnp.ndarray) -> jnp.ndarray:
+    """Forward BOT over [n, 4, 4, 4] blocks; n multiple of TILE_3D."""
+    n = blocks.shape[0]
+    assert n % TILE_3D == 0, f"batch {n} not a multiple of {TILE_3D}"
+    t = jnp.asarray(ref.bot_matrix())
+    return pl.pallas_call(
+        _bot3d_kernel,
+        grid=(n // TILE_3D,),
+        in_specs=[
+            pl.BlockSpec((TILE_3D, 4, 4, 4), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((4, 4), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_3D, 4, 4, 4), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 4, 4, 4), jnp.float32),
+        interpret=True,
+    )(blocks, t)

@@ -1,0 +1,59 @@
+"""L1 Pallas kernels: Lorenzo prediction errors (elementwise).
+
+The estimator feeds gathered neighbor arrays (the sampled points'
+original neighbors — paper §4.3), so the kernel is a pure elementwise
+fused multiply-add over 1D tiles. VMEM: CHUNK × 4 (or 8) × 4 B ≤ 32 KiB.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CHUNK = 1024
+
+
+def _lorenzo2d_kernel(x_ref, l_ref, u_ref, d_ref, o_ref):
+    o_ref[...] = x_ref[...] - (l_ref[...] + u_ref[...] - d_ref[...])
+
+
+def lorenzo2d(x, left, up, diag):
+    """2D Lorenzo errors over [n] f32 arrays; n multiple of CHUNK."""
+    n = x.shape[0]
+    assert n % CHUNK == 0, f"length {n} not a multiple of {CHUNK}"
+    spec = pl.BlockSpec((CHUNK,), lambda i: (i,))
+    return pl.pallas_call(
+        _lorenzo2d_kernel,
+        grid=(n // CHUNK,),
+        in_specs=[spec] * 4,
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(x, left, up, diag)
+
+
+def _lorenzo3d_kernel(x_ref, a_ref, b_ref, c_ref, ab_ref, ac_ref, bc_ref, abc_ref, o_ref):
+    pred = (
+        a_ref[...]
+        + b_ref[...]
+        + c_ref[...]
+        - ab_ref[...]
+        - ac_ref[...]
+        - bc_ref[...]
+        + abc_ref[...]
+    )
+    o_ref[...] = x_ref[...] - pred
+
+
+def lorenzo3d(x, n100, n010, n001, n110, n101, n011, n111):
+    """3D Lorenzo errors over [n] f32 arrays; n multiple of CHUNK."""
+    n = x.shape[0]
+    assert n % CHUNK == 0, f"length {n} not a multiple of {CHUNK}"
+    spec = pl.BlockSpec((CHUNK,), lambda i: (i,))
+    return pl.pallas_call(
+        _lorenzo3d_kernel,
+        grid=(n // CHUNK,),
+        in_specs=[spec] * 8,
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(x, n100, n010, n001, n110, n101, n011, n111)

@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness
+reference -- pytest asserts kernel == ref across shapes/dtypes).
+
+The transform matrix is the paper's 4.2 parametric orthogonal family
+at t_zfp = (2/pi)*atan(1/3) (the slant/ZFP member), matching the Rust
+`ParametricBot` exactly.
+"""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+T_ZFP = 2.0 / math.pi * math.atan(1.0 / 3.0)
+
+
+def bot_matrix(t: float = T_ZFP) -> np.ndarray:
+    """The 4x4 orthogonal transform matrix T(t) (float64 -> float32)."""
+    s = math.sqrt(2.0) * math.sin(math.pi / 2.0 * t)
+    c = math.sqrt(2.0) * math.cos(math.pi / 2.0 * t)
+    m = np.array(
+        [
+            [1.0, 1.0, 1.0, 1.0],
+            [c, s, -s, -c],
+            [1.0, -1.0, -1.0, 1.0],
+            [s, -c, c, -s],
+        ],
+        dtype=np.float64,
+    )
+    return (0.5 * m).astype(np.float32)
+
+
+def bot2d(blocks: jnp.ndarray) -> jnp.ndarray:
+    """Forward BOT on [n, 4, 4] blocks: T @ X @ T^T (rows then cols --
+    matches Rust's rows-then-columns pencil order)."""
+    t = jnp.asarray(bot_matrix())
+    return jnp.einsum("ab,nbc,dc->nad", t, blocks, t)
+
+
+def bot3d(blocks: jnp.ndarray) -> jnp.ndarray:
+    """Forward BOT on [n, 4, 4, 4] blocks (x, then y, then z axes)."""
+    t = jnp.asarray(bot_matrix())
+    out = jnp.einsum("nzyx,ax->nzya", blocks, t)
+    out = jnp.einsum("nzyx,ay->nzax", out, t)
+    out = jnp.einsum("nzyx,az->nayx", out, t)
+    return out
+
+
+def lorenzo2d(x, left, up, diag):
+    """2D Lorenzo prediction errors: x - (left + up - diag)."""
+    return x - (left + up - diag)
+
+
+def lorenzo3d(x, n100, n010, n001, n110, n101, n011, n111):
+    """3D Lorenzo: 7-neighbor inclusion-exclusion."""
+    pred = n100 + n010 + n001 - n110 - n101 - n011 + n111
+    return x - pred
+
+
+def nsb(coeffs: jnp.ndarray, inv_delta) -> jnp.ndarray:
+    """Significant bits above the delta threshold per coefficient,
+    summed per block: max(0, floor(log2(|c|*inv_delta)) + 1)."""
+    mag = jnp.abs(coeffs) * inv_delta
+    bits = jnp.where(
+        mag >= 1.0, jnp.floor(jnp.log2(jnp.maximum(mag, 1e-37))) + 1.0, 0.0
+    )
+    return jnp.sum(bits.reshape(bits.shape[0], -1), axis=1)
+
+
+def hist64(coeffs: jnp.ndarray, inv_delta) -> jnp.ndarray:
+    """64-bin histogram of quantized coefficients clip(round(c/d), +-32)."""
+    q = jnp.clip(jnp.round(coeffs.reshape(-1) * inv_delta), -32, 31) + 32
+    onehot = (q[:, None] == jnp.arange(64, dtype=q.dtype)[None, :]).astype(jnp.float32)
+    return jnp.sum(onehot, axis=0)
+
+
+def nsb_hist2d(blocks: jnp.ndarray, inv_delta):
+    """Fused estimator reference: transform + n_sb sums + histogram."""
+    coeffs = bot2d(blocks.reshape(-1, 4, 4))
+    return nsb(coeffs, inv_delta), hist64(coeffs, inv_delta)

@@ -1,0 +1,58 @@
+"""L2: the estimator compute graphs exported to the Rust runtime.
+
+Each function here is jitted and AOT-lowered by `aot.py` to HLO text
+with a *fixed* shape (the Rust side pads/chunks — see
+rust/src/runtime/mod.rs). All call the L1 Pallas kernels so the lowered
+HLO contains the kernel bodies (interpret=True lowers them to plain HLO
+ops executable on the CPU PJRT client).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import bot, lorenzo, sigbits
+
+# Fixed AOT shapes — keep in sync with rust/src/runtime/mod.rs.
+BOT2D_BLOCKS = 512
+BOT3D_BLOCKS = 256
+LORENZO_POINTS = 8192
+
+
+def bot2d(blocks):
+    """[512, 4, 4] -> ([512, 4, 4],) forward BOT."""
+    return (bot.bot2d(blocks),)
+
+
+def bot3d(blocks):
+    """[256, 4, 4, 4] -> ([256, 4, 4, 4],) forward BOT."""
+    return (bot.bot3d(blocks),)
+
+
+def lorenzo2d(x, left, up, diag):
+    """[8192] x 4 -> ([8192],) 2D Lorenzo prediction errors."""
+    return (lorenzo.lorenzo2d(x, left, up, diag),)
+
+
+def lorenzo3d(x, n100, n010, n001, n110, n101, n011, n111):
+    """[8192] x 8 -> ([8192],) 3D Lorenzo prediction errors."""
+    return (lorenzo.lorenzo3d(x, n100, n010, n001, n110, n101, n011, n111),)
+
+
+def nsb_hist2d(blocks, inv_delta):
+    """[512, 4, 4], scalar -> ([512], [64]) fused estimator stats."""
+    nsb, hist_tiles = sigbits.nsb_hist2d(blocks, inv_delta)
+    return (nsb, jnp.sum(hist_tiles, axis=0))
+
+
+def export_specs():
+    """(name, fn, example-arg shapes) for every exported graph."""
+    f32 = jnp.float32
+    import jax
+
+    s = jax.ShapeDtypeStruct
+    return [
+        ("bot2d", bot2d, [s((BOT2D_BLOCKS, 4, 4), f32)]),
+        ("bot3d", bot3d, [s((BOT3D_BLOCKS, 4, 4, 4), f32)]),
+        ("lorenzo2d", lorenzo2d, [s((LORENZO_POINTS,), f32)] * 4),
+        ("lorenzo3d", lorenzo3d, [s((LORENZO_POINTS,), f32)] * 8),
+        ("nsb_hist2d", nsb_hist2d, [s((BOT2D_BLOCKS, 4, 4), f32), s((), f32)]),
+    ]

@@ -1,0 +1,146 @@
+"""Kernel-vs-ref correctness: the CORE L1 signal.
+
+Every Pallas kernel must match its pure-jnp oracle to float32
+round-off across a sweep of shapes and value scales (hand-rolled sweep
+— hypothesis is unavailable in the offline image; see DESIGN.md §9).
+"""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import bot, lorenzo, ref, sigbits
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+# Value scales exercising exponent-alignment-ish ranges.
+SCALES = [1.0, 1e-6, 1e6, 123.456]
+
+
+class TestBotMatrix:
+    def test_orthogonal(self):
+        t = ref.bot_matrix().astype(np.float64)
+        np.testing.assert_allclose(t @ t.T, np.eye(4), atol=1e-6)
+
+    def test_matches_rust_constant(self):
+        # t_zfp = (2/pi)atan(1/3); first row all 1/2.
+        t = ref.bot_matrix()
+        np.testing.assert_allclose(t[0], [0.5, 0.5, 0.5, 0.5], atol=1e-7)
+        # s = sqrt(2) sin(pi t/2) with t = (2/pi) atan(1/3)
+        s = math.sqrt(2.0) * math.sin(math.atan(1.0 / 3.0))
+        assert abs(t[3][0] - 0.5 * s) < 1e-6
+
+
+class TestBot2d:
+    @pytest.mark.parametrize("n", [bot.TILE_2D, 2 * bot.TILE_2D, 4 * bot.TILE_2D])
+    @pytest.mark.parametrize("scale", SCALES)
+    def test_matches_ref(self, n, scale):
+        x = jnp.asarray(
+            rng(n + int(scale) % 97).normal(size=(n, 4, 4)) * scale, jnp.float32
+        )
+        got = bot.bot2d(x)
+        want = ref.bot2d(x)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5 * scale)
+
+    def test_l2_norm_preserved(self):
+        # Lemma 2 of the paper, on the kernel itself.
+        x = jnp.asarray(rng(7).normal(size=(bot.TILE_2D, 4, 4)), jnp.float32)
+        y = bot.bot2d(x)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(x).reshape(x.shape[0], -1), axis=1),
+            np.linalg.norm(np.asarray(y).reshape(y.shape[0], -1), axis=1),
+            rtol=1e-5,
+        )
+
+    def test_dc_block(self):
+        x = jnp.ones((bot.TILE_2D, 4, 4), jnp.float32) * 3.0
+        y = np.asarray(bot.bot2d(x))
+        np.testing.assert_allclose(y[:, 0, 0], 12.0, rtol=1e-6)
+        assert np.abs(y[:, 1:, :]).max() < 1e-5
+        assert np.abs(y[:, 0, 1:]).max() < 1e-5
+
+    def test_bad_batch_asserts(self):
+        with pytest.raises(AssertionError):
+            bot.bot2d(jnp.zeros((3, 4, 4), jnp.float32))
+
+
+class TestBot3d:
+    @pytest.mark.parametrize("n", [bot.TILE_3D, 2 * bot.TILE_3D])
+    @pytest.mark.parametrize("scale", SCALES)
+    def test_matches_ref(self, n, scale):
+        x = jnp.asarray(rng(n).normal(size=(n, 4, 4, 4)) * scale, jnp.float32)
+        got = bot.bot3d(x)
+        want = ref.bot3d(x)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5 * scale)
+
+    def test_l2_norm_preserved(self):
+        x = jnp.asarray(rng(9).normal(size=(bot.TILE_3D, 4, 4, 4)), jnp.float32)
+        y = bot.bot3d(x)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(x).reshape(x.shape[0], -1), axis=1),
+            np.linalg.norm(np.asarray(y).reshape(y.shape[0], -1), axis=1),
+            rtol=1e-5,
+        )
+
+
+class TestLorenzo:
+    @pytest.mark.parametrize("n", [lorenzo.CHUNK, 8 * lorenzo.CHUNK])
+    @pytest.mark.parametrize("scale", SCALES)
+    def test_2d_matches_ref(self, n, scale):
+        r = rng(n)
+        arrs = [
+            jnp.asarray(r.normal(size=(n,)) * scale, jnp.float32) for _ in range(4)
+        ]
+        got = lorenzo.lorenzo2d(*arrs)
+        want = ref.lorenzo2d(*arrs)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6 * scale)
+
+    @pytest.mark.parametrize("n", [lorenzo.CHUNK, 4 * lorenzo.CHUNK])
+    def test_3d_matches_ref(self, n):
+        r = rng(n + 1)
+        arrs = [jnp.asarray(r.normal(size=(n,)), jnp.float32) for _ in range(8)]
+        got = lorenzo.lorenzo3d(*arrs)
+        want = ref.lorenzo3d(*arrs)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+    def test_exact_on_plane(self):
+        # Lorenzo is exact on affine data: x = l + u - d for planes.
+        n = lorenzo.CHUNK
+        ys, xs = np.divmod(np.arange(n, dtype=np.float32), 64)
+        f = lambda y, x: 3.0 + 2.0 * y - 1.5 * x
+        x = jnp.asarray(f(ys, xs))
+        left = jnp.asarray(f(ys, xs - 1))
+        up = jnp.asarray(f(ys - 1, xs))
+        diag = jnp.asarray(f(ys - 1, xs - 1))
+        err = np.asarray(lorenzo.lorenzo2d(x, left, up, diag))
+        assert np.abs(err).max() < 1e-4
+
+
+class TestSigbits:
+    @pytest.mark.parametrize("n", [sigbits.TILE, 4 * sigbits.TILE])
+    @pytest.mark.parametrize("inv_delta", [1.0, 100.0, 1e5])
+    def test_matches_ref(self, n, inv_delta):
+        x = jnp.asarray(rng(n).normal(size=(n, 4, 4)), jnp.float32)
+        scale = jnp.asarray(inv_delta, jnp.float32)
+        nsb, hist_tiles = sigbits.nsb_hist2d(x, scale)
+        hist = np.asarray(jnp.sum(hist_tiles, axis=0))
+        want_nsb, want_hist = ref.nsb_hist2d(x, scale)
+        np.testing.assert_allclose(nsb, want_nsb, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(hist, want_hist, rtol=1e-6)
+
+    def test_histogram_total(self):
+        n = sigbits.TILE
+        x = jnp.asarray(rng(3).normal(size=(n, 4, 4)), jnp.float32)
+        _, hist_tiles = sigbits.nsb_hist2d(x, jnp.asarray(1.0, jnp.float32))
+        assert float(jnp.sum(hist_tiles)) == pytest.approx(n * 16)
+
+    def test_zero_blocks_zero_nsb(self):
+        n = sigbits.TILE
+        x = jnp.zeros((n, 4, 4), jnp.float32)
+        nsb, _ = sigbits.nsb_hist2d(x, jnp.asarray(1e6, jnp.float32))
+        assert float(jnp.max(jnp.abs(nsb))) == 0.0

@@ -1,0 +1,165 @@
+//! Figs. 8 & 9: storing (compression + write) and loading (read +
+//! decompression) throughput on the Hurricane dataset vs process count
+//! 1..1024, eb_rel = 1e-4, for baseline / SZ / ZFP / ours — all
+//! compressed solutions at the *same PSNR* per field (the paper's
+//! caption protocol), so the ratio differences come from codec fit,
+//! not from looser bounds.
+//!
+//! Compression and decompression times are MEASURED on this machine
+//! (per-rank, single core); GPFS I/O time comes from the calibrated
+//! contention model in `iosim` (DESIGN.md §2 substitution).
+//! Paper headline: ours beats the second-best by 68% (store) and 79%
+//! (load) at 1,024 ranks.
+
+use adaptivec::bench_util::print_series;
+use adaptivec::data::Dataset;
+use adaptivec::estimator::eval;
+use adaptivec::estimator::selector::{AutoSelector, Choice};
+use adaptivec::iosim::{FsModel, ThroughputModel, PROC_SWEEP};
+use adaptivec::sz::SzCompressor;
+use adaptivec::zfp::ZfpCompressor;
+use std::time::Instant;
+
+struct Cfg {
+    name: &'static str,
+    raw: f64,
+    stored: f64,
+    comp_t: f64,
+    decomp_t: f64,
+}
+
+fn main() {
+    let eb_rel = 1e-4;
+    let fields = Dataset::Hurricane.generate(2018, 1);
+    let tm = ThroughputModel::new(FsModel::default());
+    let sel = AutoSelector::default();
+    let sz = SzCompressor::default();
+    let zfp = ZfpCompressor::default();
+
+    let mut cfgs = vec![
+        Cfg { name: "baseline", raw: 0.0, stored: 0.0, comp_t: 0.0, decomp_t: 0.0 },
+        Cfg { name: "SZ", raw: 0.0, stored: 0.0, comp_t: 0.0, decomp_t: 0.0 },
+        Cfg { name: "ZFP", raw: 0.0, stored: 0.0, comp_t: 0.0, decomp_t: 0.0 },
+        Cfg { name: "ours", raw: 0.0, stored: 0.0, comp_t: 0.0, decomp_t: 0.0 },
+    ];
+
+    for f in fields.iter().filter(|f| f.value_range() > 0.0) {
+        let vr = f.value_range();
+        let eb = eb_rel * vr;
+        // Iso-PSNR bounds per field (paper protocol).
+        let (szt, zfpt, _) = eval::iso_psnr_truths(f, eb).unwrap();
+        let eb_sz = if zfpt.psnr.is_finite() {
+            (adaptivec::estimator::sz_model::delta_from_psnr(zfpt.psnr, vr) / 2.0).min(eb)
+        } else {
+            eb
+        }
+        .max(f64::MIN_POSITIVE);
+        let _ = szt;
+
+        // Measure each configuration's compress + decompress walltime.
+        let t0 = Instant::now();
+        let c_sz = sz.compress(&f.data, f.dims, eb_sz).unwrap();
+        let t_sz_c = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let _ = sz.decompress(&c_sz).unwrap();
+        let t_sz_d = t0.elapsed().as_secs_f64();
+
+        let t0 = Instant::now();
+        let c_zfp = zfp.compress(&f.data, f.dims, eb).unwrap();
+        let t_zfp_c = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let _ = zfp.decompress(&c_zfp).unwrap();
+        let t_zfp_d = t0.elapsed().as_secs_f64();
+
+        let t0 = Instant::now();
+        let (pick, est) = sel.select_abs(f, eb, vr).unwrap();
+        let t_est = t0.elapsed().as_secs_f64();
+        let (ours_bytes, t_ours_c, t_ours_d) = match pick {
+            Choice::Sz => {
+                let t0 = Instant::now();
+                let c = sz.compress(&f.data, f.dims, est.eb_sz.max(f64::MIN_POSITIVE)).unwrap();
+                let tc = t0.elapsed().as_secs_f64();
+                let t0 = Instant::now();
+                let _ = sz.decompress(&c).unwrap();
+                (c.len(), tc + t_est, t0.elapsed().as_secs_f64())
+            }
+            Choice::Zfp => (c_zfp.len(), t_zfp_c + t_est, t_zfp_d),
+        };
+
+        let raw = f.raw_bytes() as f64;
+        for c in cfgs.iter_mut() {
+            c.raw += raw;
+        }
+        cfgs[0].stored += raw;
+        cfgs[1].stored += c_sz.len() as f64;
+        cfgs[1].comp_t += t_sz_c;
+        cfgs[1].decomp_t += t_sz_d;
+        cfgs[2].stored += c_zfp.len() as f64;
+        cfgs[2].comp_t += t_zfp_c;
+        cfgs[2].decomp_t += t_zfp_d;
+        cfgs[3].stored += ours_bytes as f64;
+        cfgs[3].comp_t += t_ours_c;
+        cfgs[3].decomp_t += t_ours_d;
+    }
+
+    println!(
+        "iso-PSNR ratios: SZ {:.2}, ZFP {:.2}, ours {:.2}",
+        cfgs[1].raw / cfgs[1].stored,
+        cfgs[2].raw / cfgs[2].stored,
+        cfgs[3].raw / cfgs[3].stored
+    );
+
+    let xs: Vec<String> = PROC_SWEEP.iter().map(|p| p.to_string()).collect();
+    let store: Vec<(&str, Vec<f64>)> = cfgs
+        .iter()
+        .map(|c| {
+            (
+                c.name,
+                PROC_SWEEP
+                    .iter()
+                    .map(|&p| tm.store_throughput(p, c.raw, c.stored, c.comp_t) / 1e9)
+                    .collect(),
+            )
+        })
+        .collect();
+    print_series(
+        "Fig. 8 — storing throughput (GB/s raw data), Hurricane @ iso-PSNR, eb 1e-4 (paper: ours +68% vs 2nd best at 1024)",
+        "procs",
+        &xs,
+        &store,
+    );
+
+    let load: Vec<(&str, Vec<f64>)> = cfgs
+        .iter()
+        .map(|c| {
+            (
+                c.name,
+                PROC_SWEEP
+                    .iter()
+                    .map(|&p| tm.load_throughput(p, c.raw, c.stored, c.decomp_t) / 1e9)
+                    .collect(),
+            )
+        })
+        .collect();
+    print_series(
+        "Fig. 9 — loading throughput (GB/s raw data), Hurricane @ iso-PSNR, eb 1e-4 (paper: ours +79% vs 2nd best at 1024)",
+        "procs",
+        &xs,
+        &load,
+    );
+
+    let at = |series: &[(&str, Vec<f64>)], name: &str| -> f64 {
+        series.iter().find(|(n, _)| *n == name).unwrap().1[PROC_SWEEP.len() - 1]
+    };
+    for (label, series, paper) in [("store", &store, 68.0), ("load", &load, 79.0)] {
+        let ours = at(series, "ours");
+        let second = at(series, "SZ").max(at(series, "ZFP")).max(at(series, "baseline"));
+        println!(
+            "{label} @1024: ours {:.1} GB/s vs second-best {:.1} GB/s ({:+.0}%; paper {:+.0}%)",
+            ours,
+            second,
+            100.0 * (ours / second - 1.0),
+            paper
+        );
+    }
+}

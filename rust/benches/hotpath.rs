@@ -1,0 +1,65 @@
+//! Hot-path microbenchmarks for the §Perf optimization loop:
+//! per-stage throughput of both codecs and the estimator, in MB/s,
+//! plus coordinator scaling. Run before/after every perf change.
+
+use adaptivec::bench_util::{bench, Table};
+use adaptivec::baseline::Policy;
+use adaptivec::coordinator::Coordinator;
+use adaptivec::data::{atm, hurricane, Dataset};
+use adaptivec::estimator::selector::{AutoSelector, SelectorConfig};
+use adaptivec::sz::SzCompressor;
+use adaptivec::zfp::ZfpCompressor;
+
+fn mbps(bytes: usize, secs: f64) -> String {
+    format!("{:.1}", bytes as f64 / secs / 1e6)
+}
+
+fn main() {
+    let mut t = Table::new(&["stage", "field", "time", "MB/s"]);
+
+    for f in [atm::generate_field(2018, 0), hurricane::generate_field(2018, 7)] {
+        let vr = f.value_range();
+        let eb = 1e-4 * vr;
+        let sz = SzCompressor::default();
+        let zfp = ZfpCompressor::default();
+
+        let tm = bench(1, 5, || sz.compress(&f.data, f.dims, eb).unwrap());
+        t.row(&["SZ compress".into(), f.name.clone(), format!("{tm}"), mbps(f.raw_bytes(), tm.mean_secs())]);
+
+        let comp = sz.compress(&f.data, f.dims, eb).unwrap();
+        let tm = bench(1, 5, || sz.decompress(&comp).unwrap());
+        t.row(&["SZ decompress".into(), f.name.clone(), format!("{tm}"), mbps(f.raw_bytes(), tm.mean_secs())]);
+
+        let tm = bench(1, 5, || zfp.compress(&f.data, f.dims, eb).unwrap());
+        t.row(&["ZFP compress".into(), f.name.clone(), format!("{tm}"), mbps(f.raw_bytes(), tm.mean_secs())]);
+
+        let zcomp = zfp.compress(&f.data, f.dims, eb).unwrap();
+        let tm = bench(1, 5, || zfp.decompress(&zcomp).unwrap());
+        t.row(&["ZFP decompress".into(), f.name.clone(), format!("{tm}"), mbps(f.raw_bytes(), tm.mean_secs())]);
+
+        let sel = AutoSelector::new(SelectorConfig::default());
+        let tm = bench(1, 5, || sel.select_abs(&f, eb, vr).unwrap());
+        t.row(&["estimate (5%)".into(), f.name.clone(), format!("{tm}"), mbps(f.raw_bytes(), tm.mean_secs())]);
+    }
+    t.print("hot paths (single core)");
+
+    // Coordinator scaling on ATM.
+    let fields = Dataset::Atm.generate(2018, 1);
+    let raw: usize = fields.iter().map(|f| f.raw_bytes()).sum();
+    let mut t = Table::new(&["workers", "wall time", "MB/s", "speedup"]);
+    let mut base = 0.0;
+    for w in [1usize, 2, 4, 8] {
+        let coord = Coordinator::new(SelectorConfig::default(), w);
+        let tm = bench(0, 2, || coord.run(&fields, Policy::RateDistortion, 1e-4).unwrap());
+        if w == 1 {
+            base = tm.mean_secs();
+        }
+        t.row(&[
+            w.to_string(),
+            format!("{tm}"),
+            mbps(raw, tm.mean_secs()),
+            format!("{:.2}x", base / tm.mean_secs()),
+        ]);
+    }
+    t.print("coordinator scaling (ATM, 79 fields, policy=ours)");
+}

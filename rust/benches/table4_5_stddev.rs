@@ -1,0 +1,43 @@
+//! Tables 4 & 5: standard deviation of the relative estimation errors
+//! under r_sp ∈ {1%, 5%, 10%} on ATM (2D) and Hurricane (3D).
+
+use adaptivec::bench_util::Table;
+use adaptivec::data::Dataset;
+use adaptivec::estimator::eval;
+use adaptivec::estimator::selector::{AutoSelector, SelectorConfig};
+
+fn run(ds: Dataset, title: &str) {
+    let fields = ds.generate(2018, 1);
+    let mut t = Table::new(&["", "r=1% SZ", "r=1% ZFP", "r=5% SZ", "r=5% ZFP", "r=10% SZ", "r=10% ZFP"]);
+    let mut br_row = vec![String::from("Bit-rate σ")];
+    let mut psnr_row = vec![String::from("PSNR σ")];
+    for &rsp in &[0.01, 0.05, 0.10] {
+        let mut cfg = SelectorConfig::default();
+        cfg.r_sp = rsp;
+        let sel = AutoSelector::new(cfg);
+        let evals: Vec<_> = fields
+            .iter()
+            .filter(|f| f.value_range() > 0.0)
+            .map(|f| eval::evaluate_field(&sel, f, 1e-4).unwrap())
+            .collect();
+        let s = eval::aggregate_rel_errors(&evals);
+        br_row.push(format!("{:.1}%", s.br_sz.1));
+        br_row.push(format!("{:.1}%", s.br_zfp.1));
+        psnr_row.push(format!("{:.1}%", s.psnr_sz.1));
+        psnr_row.push(format!("{:.1}%", s.psnr_zfp.1));
+    }
+    t.row(&br_row);
+    t.row(&psnr_row);
+    t.print(title);
+}
+
+fn main() {
+    run(
+        Dataset::Atm,
+        "Table 4 — std-dev of relative estimation error, 2D ATM (paper: BR 8.8–8.9% SZ / 23.5–23.9% ZFP)",
+    );
+    run(
+        Dataset::Hurricane,
+        "Table 5 — std-dev of relative estimation error, 3D Hurricane (paper: BR 10.4–16% SZ / 2–11.9% ZFP)",
+    );
+}

@@ -1,0 +1,48 @@
+//! Table 6: time overhead of the online estimation per field, compared
+//! with SZ and ZFP compression time, for r_sp ∈ {1%, 5%, 10%} on all
+//! three datasets (paper: ≤ 9.8% SZ / 12.5% ZFP at 10%; ~5–7% at 5%).
+
+use adaptivec::bench_util::{bench, Table};
+use adaptivec::data::Dataset;
+use adaptivec::estimator::selector::{AutoSelector, SelectorConfig};
+use adaptivec::sz::SzCompressor;
+use adaptivec::zfp::ZfpCompressor;
+
+fn main() {
+    let mut t = Table::new(&[
+        "dataset", "est 1% (ms)", "SZ%", "ZFP%", "est 5% (ms)", "SZ%", "ZFP%",
+        "est 10% (ms)", "SZ%", "ZFP%",
+    ]);
+    for ds in Dataset::ALL {
+        let fields = ds.generate(2018, 1);
+        // Representative field: the first with nonzero range.
+        let f = fields.iter().find(|f| f.value_range() > 0.0).unwrap();
+        let vr = f.value_range();
+        let eb = 1e-4 * vr;
+
+        let sz = SzCompressor::default();
+        let zfp = ZfpCompressor::default();
+        let t_sz = bench(1, 5, || sz.compress(&f.data, f.dims, eb).unwrap());
+        let t_zfp = bench(1, 5, || zfp.compress(&f.data, f.dims, eb).unwrap());
+
+        let mut row = vec![ds.name().to_string()];
+        for &rsp in &[0.01, 0.05, 0.10] {
+            let mut cfg = SelectorConfig::default();
+            cfg.r_sp = rsp;
+            let sel = AutoSelector::new(cfg);
+            let t_est = bench(1, 5, || sel.select_abs(f, eb, vr).unwrap());
+            row.push(format!("{:.2}", t_est.mean_secs() * 1e3));
+            row.push(format!("{:.1}%", 100.0 * t_est.mean_secs() / t_sz.mean_secs()));
+            row.push(format!("{:.1}%", 100.0 * t_est.mean_secs() / t_zfp.mean_secs()));
+        }
+        t.row(&row);
+        println!(
+            "{}: field {} — SZ compress {:.2} ms, ZFP compress {:.2} ms",
+            ds.name(),
+            f.name,
+            t_sz.mean_secs() * 1e3,
+            t_zfp.mean_secs() * 1e3
+        );
+    }
+    t.print("Table 6 — estimation time overhead vs compression time (paper: 1.3–1.9% @1%, 4.7–7.2% @5%, 8.4–12.5% @10%)");
+}

@@ -1,0 +1,70 @@
+//! Lu et al. (IPDPS'18)-style selection: given a *fixed* error bound,
+//! estimate both compressors' ratios from samples and pick the higher
+//! ratio. Unlike Algorithm 1, both codecs get the *same* bound, so the
+//! comparison ignores distortion — ZFP over-preserves error and its
+//! PSNR advantage is invisible to this policy (the effect paper §6.4
+//! and Fig. 6(a) demonstrate: it picks SZ essentially everywhere).
+
+use crate::data::field::Field;
+use crate::estimator::sampling::sample_blocks;
+use crate::estimator::selector::Choice;
+use crate::estimator::{sz_model, zfp_model};
+
+/// Selection by estimated compression ratio at one shared error bound.
+/// Returns the choice plus the two estimated bit-rates (SZ, ZFP).
+pub fn select_by_error_bound(field: &Field, eb_abs: f64, r_sp: f64) -> (Choice, f64, f64) {
+    let vr = field.value_range();
+    let sample = sample_blocks(field.dims, r_sp);
+    let sz = sz_model::estimate(
+        &field.data,
+        field.dims,
+        &sample,
+        2.0 * eb_abs,
+        65_535,
+        vr.max(f64::MIN_POSITIVE),
+    );
+    let zfp = zfp_model::estimate(
+        &field.data,
+        field.dims,
+        &sample,
+        eb_abs,
+        vr.max(f64::MIN_POSITIVE),
+        zfp_model::ZfpModelConfig::default(),
+    );
+    let choice = if sz.bit_rate <= zfp.bit_rate { Choice::Sz } else { Choice::Zfp };
+    (choice, sz.bit_rate, zfp.bit_rate)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::atm;
+
+    #[test]
+    fn eb_selection_prefers_sz_at_shared_bound() {
+        // Paper Fig. 6(a): at a shared absolute bound, SZ's ratio
+        // dominates on (nearly) all the tested fields.
+        let mut sz_wins = 0;
+        let total = 10;
+        for idx in 0..total {
+            let f = atm::generate_field_scaled(41, idx, 0);
+            let eb = 1e-3 * f.value_range().max(1e-12);
+            let (c, _, _) = select_by_error_bound(&f, eb, 0.1);
+            if c == Choice::Sz {
+                sz_wins += 1;
+            }
+        }
+        assert!(
+            sz_wins >= total * 7 / 10,
+            "eb-selection should mostly pick SZ: {sz_wins}/{total}"
+        );
+    }
+
+    #[test]
+    fn returns_positive_bitrates() {
+        let f = atm::generate_field_scaled(42, 1, 0);
+        let eb = 1e-4 * f.value_range();
+        let (_, br_sz, br_zfp) = select_by_error_bound(&f, eb, 0.1);
+        assert!(br_sz > 0.0 && br_zfp > 0.0);
+    }
+}

@@ -1,0 +1,62 @@
+//! Comparator policies for the evaluation:
+//!
+//! * [`ebselect`] — Lu et al. (IPDPS'18): pick the compressor with the
+//!   higher compression ratio at a *fixed error bound* (paper §6.4 /
+//!   Fig. 6(a)'s "selection based on error bound").
+//! * [`Policy`] — the fixed policies the paper's Fig. 7/8/9 compare:
+//!   always-SZ, always-ZFP, no-compression baseline, and the oracle
+//!   optimum.
+
+pub mod ebselect;
+
+/// Compression policy for the parallel experiments.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Policy {
+    /// Store raw f32 (Figs. 8–9 "baseline").
+    NoCompression,
+    /// Always SZ at the user bound.
+    AlwaysSz,
+    /// Always ZFP at the user bound.
+    AlwaysZfp,
+    /// Paper's contribution: rate-distortion selection (Algorithm 1).
+    RateDistortion,
+    /// Lu et al.: selection by ratio at fixed error bound.
+    ErrorBound,
+    /// Oracle: per-field best under the iso-PSNR protocol (Fig. 7
+    /// "optimum" bar) — measures both, keeps the better.
+    Optimum,
+}
+
+impl Policy {
+    pub const ALL: [Policy; 6] = [
+        Policy::NoCompression,
+        Policy::AlwaysSz,
+        Policy::AlwaysZfp,
+        Policy::RateDistortion,
+        Policy::ErrorBound,
+        Policy::Optimum,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::NoCompression => "baseline",
+            Policy::AlwaysSz => "SZ",
+            Policy::AlwaysZfp => "ZFP",
+            Policy::RateDistortion => "ours",
+            Policy::ErrorBound => "eb-select",
+            Policy::Optimum => "optimum",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s.to_ascii_lowercase().as_str() {
+            "baseline" | "none" | "raw" => Some(Policy::NoCompression),
+            "sz" => Some(Policy::AlwaysSz),
+            "zfp" => Some(Policy::AlwaysZfp),
+            "ours" | "auto" | "rd" => Some(Policy::RateDistortion),
+            "eb" | "eb-select" | "errorbound" => Some(Policy::ErrorBound),
+            "optimum" | "oracle" => Some(Policy::Optimum),
+            _ => None,
+        }
+    }
+}

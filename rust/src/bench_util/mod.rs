@@ -1,0 +1,164 @@
+//! Manual benchmark harness (criterion is unavailable offline — see
+//! DESIGN.md §9): warmup + timed iterations with mean/σ, plus plain-
+//! text table/series printers shared by all `cargo bench` targets so
+//! every paper table and figure prints in a uniform format that
+//! EXPERIMENTS.md records verbatim.
+
+use std::time::{Duration, Instant};
+
+/// Timing statistics for one benchmark case.
+#[derive(Clone, Copy, Debug)]
+pub struct Timing {
+    pub mean: Duration,
+    pub std_dev: Duration,
+    pub iters: u32,
+}
+
+impl Timing {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for Timing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:>10.3} ms ± {:>7.3} ms (n={})",
+            self.mean.as_secs_f64() * 1e3,
+            self.std_dev.as_secs_f64() * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Time `f`: `warmup` throwaway runs then `iters` measured runs.
+pub fn bench<T>(warmup: u32, iters: u32, mut f: impl FnMut() -> T) -> Timing {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let n = samples.len() as f64;
+    let mean = samples.iter().sum::<f64>() / n;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
+    Timing {
+        mean: Duration::from_secs_f64(mean),
+        std_dev: Duration::from_secs_f64(var.sqrt()),
+        iters,
+    }
+}
+
+/// Time a single run (for expensive end-to-end cases).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+/// Fixed-width table printer.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self, title: &str) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let total: usize = widths.iter().sum::<usize>() + 3 * widths.len() + 1;
+        println!("\n=== {title} ===");
+        let line = |ch: char| println!("{}", ch.to_string().repeat(total.min(160)));
+        line('-');
+        let mut hdr = String::from("|");
+        for (h, w) in self.headers.iter().zip(&widths) {
+            hdr.push_str(&format!(" {h:>w$} |"));
+        }
+        println!("{hdr}");
+        line('-');
+        for row in &self.rows {
+            let mut r = String::from("|");
+            for (c, w) in row.iter().zip(&widths) {
+                r.push_str(&format!(" {c:>w$} |"));
+            }
+            println!("{r}");
+        }
+        line('-');
+    }
+}
+
+/// Print an (x, series...) dataset the way the paper's figures plot it.
+pub fn print_series(title: &str, x_label: &str, x: &[String], series: &[(&str, Vec<f64>)]) {
+    let mut headers = vec![x_label];
+    for (name, _) in series {
+        headers.push(name);
+    }
+    let mut t = Table::new(&headers);
+    for (i, xv) in x.iter().enumerate() {
+        let mut row = vec![xv.clone()];
+        for (_, ys) in series {
+            row.push(format!("{:.3}", ys[i]));
+        }
+        t.row(&row);
+    }
+    t.print(title);
+}
+
+/// Format helpers.
+pub fn pct(x: f64) -> String {
+    format!("{:+.1}%", x)
+}
+
+pub fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let t = bench(1, 5, || {
+            let mut s = 0u64;
+            for i in 0..10_000u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(t.mean > Duration::ZERO);
+        assert_eq!(t.iters, 5);
+    }
+
+    #[test]
+    fn table_prints_without_panic() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print("test table");
+    }
+
+    #[test]
+    #[should_panic(expected = "column count")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into()]);
+    }
+}

@@ -1,0 +1,120 @@
+//! `--key value` argument parsing with typed accessors and unknown-
+//! option detection.
+
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line: positionals + options.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positionals: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse raw argv (after the subcommand). Options take a value
+    /// unless listed in `flag_names`.
+    pub fn parse(argv: &[String], flag_names: &[&str]) -> Result<Args> {
+        let mut a = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if flag_names.contains(&name) {
+                    a.flags.push(name.to_string());
+                } else {
+                    let val = it
+                        .next()
+                        .ok_or_else(|| Error::InvalidArg(format!("--{name} needs a value")))?;
+                    if a.options.insert(name.to_string(), val.clone()).is_some() {
+                        return Err(Error::InvalidArg(format!("duplicate option --{name}")));
+                    }
+                }
+            } else {
+                a.positionals.push(tok.clone());
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.consumed.borrow_mut().push(name.to_string());
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.consumed.borrow_mut().push(name.to_string());
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::InvalidArg(format!("--{name}: cannot parse '{v}'"))),
+        }
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.get(name)
+            .ok_or_else(|| Error::InvalidArg(format!("missing required option --{name}")))
+    }
+
+    /// Error on any option the command never consumed (catches typos).
+    pub fn check_unknown(&self) -> Result<()> {
+        let seen = self.consumed.borrow();
+        for k in self.options.keys().chain(self.flags.iter()) {
+            if !seen.iter().any(|s| s == k) {
+                return Err(Error::InvalidArg(format!("unknown option --{k}")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn options_flags_positionals() {
+        let a = Args::parse(&argv(&["in.bin", "--eb", "1e-4", "--verbose"]), &["verbose"])
+            .unwrap();
+        assert_eq!(a.positionals, vec!["in.bin"]);
+        assert_eq!(a.get("eb"), Some("1e-4"));
+        assert!(a.flag("verbose"));
+        a.check_unknown().unwrap();
+    }
+
+    #[test]
+    fn typed_and_defaults() {
+        let a = Args::parse(&argv(&["--workers", "8"]), &[]).unwrap();
+        assert_eq!(a.get_or("workers", 1usize).unwrap(), 8);
+        assert_eq!(a.get_or("scale", 1u8).unwrap(), 1);
+    }
+
+    #[test]
+    fn missing_value_and_duplicates() {
+        assert!(Args::parse(&argv(&["--eb"]), &[]).is_err());
+        assert!(Args::parse(&argv(&["--a", "1", "--a", "2"]), &[]).is_err());
+    }
+
+    #[test]
+    fn unknown_option_detected() {
+        let a = Args::parse(&argv(&["--typo", "1"]), &[]).unwrap();
+        let _ = a.get("other");
+        assert!(a.check_unknown().is_err());
+    }
+
+    #[test]
+    fn require_errors_when_absent() {
+        let a = Args::parse(&argv(&[]), &[]).unwrap();
+        assert!(a.require("input").is_err());
+    }
+}

@@ -1,0 +1,306 @@
+//! The `adaptivec` subcommands:
+//!
+//! * `compress`   — compress a dataset (or a raw f32 file) with a policy
+//! * `decompress` — restore a container to raw f32 files
+//! * `estimate`   — print Algorithm 1's estimates for every field
+//! * `select`     — selection decisions only (Fig. 6-style map)
+//! * `sweep`      — compression-ratio sweep over error bounds (Fig. 7)
+//! * `iobench`    — modeled parallel store/load throughput (Figs. 8–9)
+//! * `info`       — inspect a container
+
+use super::args::Args;
+use crate::baseline::Policy;
+use crate::coordinator::{store::Container, Coordinator};
+use crate::data::{Dataset, Field};
+use crate::estimator::selector::{AutoSelector, SelectorConfig};
+use crate::iosim::{FsModel, ThroughputModel, PROC_SWEEP};
+use crate::{Error, Result};
+
+pub const USAGE: &str = "adaptivec — online rate-distortion-optimal SZ/ZFP selection
+
+USAGE:
+  adaptivec <command> [options]
+
+COMMANDS:
+  compress    --dataset <nyx|atm|hurricane> [--scale 0|1|2] [--eb 1e-4]
+              [--policy ours|sz|zfp|eb|optimum|baseline] [--workers N]
+              [--out FILE] [--seed N]
+  decompress  --in FILE [--outdir DIR]
+  estimate    --dataset D [--scale S] [--eb E] [--rsp 0.05]
+  select      --dataset D [--scale S] [--eb E]
+  sweep       --dataset D [--scale S] [--bounds 1e-3,1e-4,1e-6]
+  iobench     --dataset D [--scale S] [--eb E]
+  info        --in FILE
+";
+
+fn selector_cfg(args: &Args) -> Result<SelectorConfig> {
+    let mut cfg = SelectorConfig::default();
+    cfg.r_sp = args.get_or("rsp", cfg.r_sp)?;
+    Ok(cfg)
+}
+
+fn load_dataset(args: &Args) -> Result<Vec<Field>> {
+    let name = args.require("dataset")?.to_string();
+    let ds = Dataset::parse(&name)
+        .ok_or_else(|| Error::InvalidArg(format!("unknown dataset '{name}'")))?;
+    let scale: u8 = args.get_or("scale", 1)?;
+    let seed: u64 = args.get_or("seed", 2018)?;
+    Ok(ds.generate(seed, scale))
+}
+
+/// Entry point: dispatch a subcommand.
+pub fn run(cmd: &str, argv: &[String]) -> Result<()> {
+    match cmd {
+        "compress" => cmd_compress(argv),
+        "decompress" => cmd_decompress(argv),
+        "estimate" => cmd_estimate(argv),
+        "select" => cmd_select(argv),
+        "sweep" => cmd_sweep(argv),
+        "iobench" => cmd_iobench(argv),
+        "info" => cmd_info(argv),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => Err(Error::InvalidArg(format!("unknown command '{other}'\n{USAGE}"))),
+    }
+}
+
+fn cmd_compress(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &[])?;
+    let fields = load_dataset(&args)?;
+    let eb: f64 = args.get_or("eb", 1e-4)?;
+    let policy = Policy::parse(args.get("policy").unwrap_or("ours"))
+        .ok_or_else(|| Error::InvalidArg("bad --policy".into()))?;
+    let workers: usize = args.get_or("workers", 0)?;
+    let out = args.get("out").unwrap_or("out.adaptivec").to_string();
+    args.check_unknown()?;
+
+    let coord = Coordinator::new(
+        selector_cfg(&Args::parse(&[], &[])?)?,
+        if workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        } else {
+            workers
+        },
+    );
+    let t0 = std::time::Instant::now();
+    let report = coord.run(&fields, policy, eb)?;
+    let wall = t0.elapsed();
+    report.to_container().write_file(&out)?;
+    let (sz, zfp) = report.choice_counts();
+    println!(
+        "{} fields, policy {}, eb_rel {eb:.0e}: ratio {:.2} ({} -> {} bytes), \
+         SZ {sz} / ZFP {zfp}, est-overhead {:.1}%, wall {:.2}s -> {out}",
+        report.results.len(),
+        policy.name(),
+        report.overall_ratio(),
+        report.total_raw_bytes(),
+        report.total_stored_bytes(),
+        report.overhead_frac() * 100.0,
+        wall.as_secs_f64(),
+    );
+    Ok(())
+}
+
+fn cmd_decompress(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &[])?;
+    let input = args.require("in")?.to_string();
+    let outdir = args.get("outdir").unwrap_or(".").to_string();
+    args.check_unknown()?;
+    let container = Container::read_file(&input)?;
+    let coord = Coordinator::default();
+    let fields = coord.load(&container)?;
+    std::fs::create_dir_all(&outdir)?;
+    for f in &fields {
+        let path = format!("{outdir}/{}.f32", f.name);
+        let mut bytes = Vec::with_capacity(f.raw_bytes());
+        for v in &f.data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(&path, &bytes)?;
+    }
+    println!("restored {} fields to {outdir}/", fields.len());
+    Ok(())
+}
+
+fn cmd_estimate(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &[])?;
+    let fields = load_dataset(&args)?;
+    let eb: f64 = args.get_or("eb", 1e-4)?;
+    let cfg = selector_cfg(&args)?;
+    args.check_unknown()?;
+    let sel = AutoSelector::new(cfg);
+    println!(
+        "{:<22} {:>9} {:>9} {:>10} {:>6}",
+        "field", "BR_sz", "BR_zfp", "PSNR_tgt", "pick"
+    );
+    for f in &fields {
+        let (choice, est) = sel.select(f, eb)?;
+        println!(
+            "{:<22} {:>9.3} {:>9.3} {:>10.2} {:>6}",
+            f.name,
+            est.br_sz,
+            est.br_zfp,
+            est.psnr_target,
+            choice.name()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_select(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &[])?;
+    let fields = load_dataset(&args)?;
+    let eb: f64 = args.get_or("eb", 1e-4)?;
+    let cfg = selector_cfg(&args)?;
+    args.check_unknown()?;
+    let sel = AutoSelector::new(cfg);
+    let mut counts = (0usize, 0usize);
+    for f in &fields {
+        let (choice, _) = sel.select(f, eb)?;
+        match choice {
+            crate::estimator::Choice::Sz => counts.0 += 1,
+            crate::estimator::Choice::Zfp => counts.1 += 1,
+        }
+        println!("{:<22} -> {}", f.name, choice.name());
+    }
+    println!(
+        "summary: SZ {} ({:.1}%), ZFP {}",
+        counts.0,
+        100.0 * counts.0 as f64 / fields.len() as f64,
+        counts.1
+    );
+    Ok(())
+}
+
+fn cmd_sweep(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &[])?;
+    let fields = load_dataset(&args)?;
+    let bounds: Vec<f64> = args
+        .get("bounds")
+        .unwrap_or("1e-3,1e-4,1e-6")
+        .split(',')
+        .map(|s| s.trim().parse::<f64>().map_err(|_| Error::InvalidArg(format!("bad bound {s}"))))
+        .collect::<Result<_>>()?;
+    args.check_unknown()?;
+    let coord = Coordinator::default();
+    println!("{:>8} {:>10} {:>10} {:>10} {:>10}", "eb_rel", "SZ", "ZFP", "ours", "optimum");
+    for &eb in &bounds {
+        let mut row = Vec::new();
+        for p in [Policy::AlwaysSz, Policy::AlwaysZfp, Policy::RateDistortion, Policy::Optimum] {
+            let report = coord.run(&fields, p, eb)?;
+            row.push(report.overall_ratio());
+        }
+        println!(
+            "{eb:>8.0e} {:>10.2} {:>10.2} {:>10.2} {:>10.2}",
+            row[0], row[1], row[2], row[3]
+        );
+    }
+    Ok(())
+}
+
+fn cmd_iobench(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &[])?;
+    let fields = load_dataset(&args)?;
+    let eb: f64 = args.get_or("eb", 1e-4)?;
+    args.check_unknown()?;
+    let coord = Coordinator::default();
+    let tm = ThroughputModel::new(FsModel::default());
+
+    println!("store/load throughput model (GB/s of raw data), eb_rel {eb:.0e}");
+    println!("{:>6} {:>10} {:>10} {:>10} {:>10}", "procs", "baseline", "SZ", "ZFP", "ours");
+    let mut per_policy = Vec::new();
+    for p in [Policy::NoCompression, Policy::AlwaysSz, Policy::AlwaysZfp, Policy::RateDistortion]
+    {
+        let report = coord.run(&fields, p, eb)?;
+        let raw = report.total_raw_bytes() as f64;
+        let stored = report.total_stored_bytes() as f64;
+        let comp_t = report.total_compress_time().as_secs_f64()
+            + report.total_estimate_time().as_secs_f64();
+        per_policy.push((raw, stored, comp_t));
+    }
+    for &p in &PROC_SWEEP {
+        print!("{p:>6}");
+        for &(raw, stored, comp_t) in &per_policy {
+            let tput = tm.store_throughput(p, raw, stored, comp_t);
+            print!(" {:>10.2}", tput / 1e9);
+        }
+        println!();
+    }
+    Ok(())
+}
+
+fn cmd_info(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &[])?;
+    let input = args.require("in")?.to_string();
+    args.check_unknown()?;
+    let c = Container::read_file(&input)?;
+    println!(
+        "{input}: {} fields, {} raw -> {} stored (ratio {:.2})",
+        c.entries.len(),
+        c.raw_bytes(),
+        c.stored_bytes(),
+        c.raw_bytes() as f64 / c.stored_bytes() as f64
+    );
+    for e in &c.entries {
+        let codec = match e.selection {
+            0 => "SZ",
+            1 => "ZFP",
+            _ => "raw",
+        };
+        println!(
+            "  {:<22} {:>5} {:>12} -> {:>10} bytes (x{:.2})",
+            e.name,
+            codec,
+            e.raw_bytes,
+            e.payload.len(),
+            e.raw_bytes as f64 / e.payload.len() as f64
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_command_is_error() {
+        assert!(run("frobnicate", &[]).is_err());
+    }
+
+    #[test]
+    fn help_runs() {
+        run("help", &[]).unwrap();
+    }
+
+    #[test]
+    fn compress_then_info_and_decompress() {
+        let tmp = std::env::temp_dir().join("adaptivec_cli_test");
+        std::fs::create_dir_all(&tmp).unwrap();
+        let out = tmp.join("nyx.adaptivec");
+        let argv: Vec<String> = [
+            "--dataset", "nyx", "--scale", "0", "--eb", "1e-3", "--out",
+            out.to_str().unwrap(), "--workers", "2",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        run("compress", &argv).unwrap();
+        run("info", &["--in".to_string(), out.to_str().unwrap().to_string()]).unwrap();
+        let outdir = tmp.join("restored");
+        run(
+            "decompress",
+            &[
+                "--in".to_string(),
+                out.to_str().unwrap().to_string(),
+                "--outdir".to_string(),
+                outdir.to_str().unwrap().to_string(),
+            ],
+        )
+        .unwrap();
+        assert!(outdir.join("baryon_density.f32").is_file());
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+}

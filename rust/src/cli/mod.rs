@@ -1,0 +1,7 @@
+//! Hand-rolled CLI (clap is unavailable offline — DESIGN.md §9):
+//! `--key value` / `--flag` parsing plus the `adaptivec` subcommands.
+
+pub mod args;
+pub mod commands;
+
+pub use args::Args;

@@ -1,0 +1,294 @@
+//! LSB-first bit streams over byte buffers.
+//!
+//! Word-buffered writer/reader: bits accumulate in a `u64`; flushes are
+//! 8-byte aligned on the fast path. LSB-first ordering matches ZFP's
+//! stream convention, which keeps the embedded coder's group tests
+//! cheap (`x >>= 1` walks the stream order).
+
+/// Append-only bit writer (LSB-first within each byte).
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// Pending bits, LSB-first.
+    acc: u64,
+    /// Number of valid bits in `acc` (0..64).
+    nbits: u32,
+    /// Total bits written (for bit-rate accounting).
+    total_bits: u64,
+}
+
+impl Default for BitWriter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        BitWriter { buf: Vec::new(), acc: 0, nbits: 0, total_bits: 0 }
+    }
+
+    pub fn with_capacity(bytes: usize) -> Self {
+        BitWriter { buf: Vec::with_capacity(bytes), acc: 0, nbits: 0, total_bits: 0 }
+    }
+
+    /// Total number of bits written so far.
+    #[inline]
+    pub fn bit_len(&self) -> u64 {
+        self.total_bits
+    }
+
+    /// Write a single bit.
+    #[inline]
+    pub fn write_bit(&mut self, bit: bool) {
+        self.acc |= (bit as u64) << self.nbits;
+        self.nbits += 1;
+        self.total_bits += 1;
+        if self.nbits == 64 {
+            self.flush_word();
+        }
+    }
+
+    /// Write the low `n` bits of `v` (n ≤ 64), LSB-first.
+    #[inline]
+    pub fn write_bits(&mut self, v: u64, n: u32) {
+        debug_assert!(n <= 64);
+        if n == 0 {
+            return;
+        }
+        let v = if n == 64 { v } else { v & ((1u64 << n) - 1) };
+        self.total_bits += n as u64;
+        let room = 64 - self.nbits;
+        if n < room {
+            self.acc |= v << self.nbits;
+            self.nbits += n;
+        } else {
+            self.acc |= v << self.nbits; // low `room` bits land here (shift overflow is masked by u64)
+            let acc = self.acc;
+            self.buf.extend_from_slice(&acc.to_le_bytes());
+            self.acc = if room == 64 { 0 } else { v >> room };
+            self.nbits = n - room;
+        }
+    }
+
+    #[inline]
+    fn flush_word(&mut self) {
+        self.buf.extend_from_slice(&self.acc.to_le_bytes());
+        self.acc = 0;
+        self.nbits = 0;
+    }
+
+    /// Finish the stream, returning the backing bytes (zero-padded to a
+    /// byte boundary).
+    pub fn finish(mut self) -> Vec<u8> {
+        while self.nbits > 0 {
+            self.buf.push((self.acc & 0xFF) as u8);
+            self.acc >>= 8;
+            self.nbits = self.nbits.saturating_sub(8);
+        }
+        self.buf
+    }
+}
+
+/// LSB-first bit reader over a byte slice.
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    /// Next byte index to refill from.
+    pos: usize,
+    acc: u64,
+    nbits: u32,
+    total_read: u64,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        BitReader { buf, pos: 0, acc: 0, nbits: 0, total_read: 0 }
+    }
+
+    /// Number of bits consumed so far.
+    #[inline]
+    pub fn bits_read(&self) -> u64 {
+        self.total_read
+    }
+
+    #[inline]
+    fn refill(&mut self) {
+        // Fast path: one unaligned 8-byte load fills as many whole
+        // bytes as fit above the pending bits.
+        if self.pos + 8 <= self.buf.len() {
+            let chunk = u64::from_le_bytes(
+                self.buf[self.pos..self.pos + 8].try_into().unwrap(),
+            );
+            let take = (64 - self.nbits) >> 3; // whole bytes that fit
+            if take == 0 {
+                return;
+            }
+            let bits = 8 * take;
+            // Mask to the consumed bytes only — the tail byte must not
+            // leak partial bits into the accumulator.
+            let masked = if bits >= 64 { chunk } else { chunk & ((1u64 << bits) - 1) };
+            self.acc |= masked << self.nbits;
+            self.pos += take as usize;
+            self.nbits += bits;
+            return;
+        }
+        while self.nbits <= 56 && self.pos < self.buf.len() {
+            self.acc |= (self.buf[self.pos] as u64) << self.nbits;
+            self.pos += 1;
+            self.nbits += 8;
+        }
+    }
+
+    /// Read one bit. Reads past the end return 0 (zero-padding
+    /// semantics, matching the writer's `finish`).
+    #[inline]
+    pub fn read_bit(&mut self) -> bool {
+        if self.nbits == 0 {
+            self.refill();
+            if self.nbits == 0 {
+                self.total_read += 1;
+                return false;
+            }
+        }
+        let bit = self.acc & 1 != 0;
+        self.acc >>= 1;
+        self.nbits -= 1;
+        self.total_read += 1;
+        bit
+    }
+
+    /// Peek at the next `n` bits (n ≤ 56) without consuming (LSB-first;
+    /// bits past the end of the stream read as zero). Used by the
+    /// table-driven Huffman decoder and the embedded coder's run scans.
+    #[inline]
+    pub fn peek_bits(&mut self, n: u32) -> u64 {
+        debug_assert!(n <= 56);
+        if self.nbits < n {
+            self.refill();
+        }
+        self.acc & ((1u64 << n) - 1)
+    }
+
+    /// Peek at the next 12 bits without consuming.
+    #[inline]
+    pub fn peek12(&mut self) -> u32 {
+        self.peek_bits(12) as u32
+    }
+
+    /// Consume `n` bits previously examined via a peek (n ≤ 56).
+    /// Consuming past the end is allowed (zero-padding semantics) and
+    /// only advances the counters.
+    #[inline]
+    pub fn consume(&mut self, n: u32) {
+        debug_assert!(n <= 56);
+        self.total_read += n as u64;
+        let take = n.min(self.nbits);
+        self.acc >>= take;
+        self.nbits -= take;
+    }
+
+    /// Read `n` bits (n ≤ 57 fast path; up to 64 supported).
+    #[inline]
+    pub fn read_bits(&mut self, n: u32) -> u64 {
+        debug_assert!(n <= 64);
+        if n == 0 {
+            return 0;
+        }
+        if n <= 57 {
+            if self.nbits < n {
+                self.refill();
+            }
+            let avail = self.nbits.min(n);
+            let mask = if avail == 64 { u64::MAX } else { (1u64 << avail) - 1 };
+            let v = self.acc & mask;
+            self.acc >>= avail;
+            self.nbits -= avail;
+            self.total_read += n as u64;
+            // Past-the-end bits read as zero.
+            v
+        } else {
+            let lo = self.read_bits(32);
+            let hi = self.read_bits(n - 32);
+            lo | (hi << 32)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::Rng;
+
+    #[test]
+    fn roundtrip_single_bits() {
+        let mut w = BitWriter::new();
+        let pattern: Vec<bool> = (0..131).map(|i| i % 3 == 0).collect();
+        for &b in &pattern {
+            w.write_bit(b);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for &b in &pattern {
+            assert_eq!(r.read_bit(), b);
+        }
+    }
+
+    #[test]
+    fn roundtrip_mixed_widths() {
+        let mut rng = Rng::new(11);
+        let items: Vec<(u64, u32)> = (0..2000)
+            .map(|_| {
+                let n = rng.range(1, 65) as u32;
+                let v = rng.next_u64() & if n == 64 { u64::MAX } else { (1 << n) - 1 };
+                (v, n)
+            })
+            .collect();
+        let mut w = BitWriter::new();
+        for &(v, n) in &items {
+            w.write_bits(v, n);
+        }
+        let expected_bits: u64 = items.iter().map(|&(_, n)| n as u64).sum();
+        assert_eq!(w.bit_len(), expected_bits);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for &(v, n) in &items {
+            assert_eq!(r.read_bits(n), v, "width {n}");
+        }
+    }
+
+    #[test]
+    fn read_past_end_is_zero() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b101, 3);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits(3), 0b101);
+        // The rest of the padded byte and beyond reads as zeros.
+        assert_eq!(r.read_bits(64), 0);
+        assert!(!r.read_bit());
+    }
+
+    #[test]
+    fn bit_len_counts() {
+        let mut w = BitWriter::new();
+        w.write_bit(true);
+        w.write_bits(0xFFFF, 16);
+        assert_eq!(w.bit_len(), 17);
+    }
+
+    #[test]
+    fn interleaved_bit_and_word_writes() {
+        let mut w = BitWriter::new();
+        w.write_bit(true);
+        w.write_bits(0xDEADBEEF, 32);
+        w.write_bit(false);
+        w.write_bits(0x123456789ABCDEF0, 64);
+        w.write_bits(0x7F, 7);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert!(r.read_bit());
+        assert_eq!(r.read_bits(32), 0xDEADBEEF);
+        assert!(!r.read_bit());
+        assert_eq!(r.read_bits(64), 0x123456789ABCDEF0);
+        assert_eq!(r.read_bits(7), 0x7F);
+    }
+}

@@ -1,0 +1,501 @@
+//! Canonical Huffman coding over `u32` symbols.
+//!
+//! This is the Stage-III entropy coder used by the SZ reimplementation
+//! (quantization-bin indices, up to 65,535 symbols plus an escape
+//! symbol). Codes are canonical so the table serializes as
+//! `(symbol, length)` pairs only; code length is capped at
+//! [`MAX_CODE_LEN`] via the standard depth-limiting rebalance
+//! (package-merge-lite: scale counts until the tree fits).
+//!
+//! Decoding is canonical limit-search: O(length) per symbol with a
+//! first-code/offset table per length, accelerated by a direct
+//! 12-bit-prefix lookup for short codes (the common case — hot-path
+//! optimization, see EXPERIMENTS.md §Perf).
+
+use super::bitstream::{BitReader, BitWriter};
+use super::varint;
+use crate::{Error, Result};
+
+/// Maximum code length. 32 keeps codes in a u32 and the decoder simple;
+/// depth-limiting only triggers on pathological distributions.
+pub const MAX_CODE_LEN: u32 = 32;
+
+/// Width of the fast decoder prefix table (2^12 entries = 4096).
+const FAST_BITS: u32 = 12;
+
+/// Build-side encoder: symbol → (code, length).
+pub struct HuffmanEncoder {
+    /// Sparse map from symbol to (canonical code value, bit length).
+    codes: Vec<(u32, u32, u32)>, // (symbol, code, len), sorted by symbol
+}
+
+/// One entry of the serialized table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct SymLen {
+    sym: u32,
+    len: u32,
+}
+
+/// Compute Huffman code lengths from frequencies using the classic
+/// two-queue/heap algorithm, then depth-limit to `MAX_CODE_LEN`.
+fn code_lengths(freqs: &[(u32, u64)]) -> Vec<SymLen> {
+    assert!(!freqs.is_empty());
+    if freqs.len() == 1 {
+        return vec![SymLen { sym: freqs[0].0, len: 1 }];
+    }
+
+    // Heap of (weight, node_id); internal nodes get ids >= n.
+    #[derive(PartialEq, Eq)]
+    struct Node(u64, usize);
+    impl Ord for Node {
+        fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+            // Min-heap via reversed compare; tie-break on id for determinism.
+            other.0.cmp(&self.0).then(other.1.cmp(&self.1))
+        }
+    }
+    impl PartialOrd for Node {
+        fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+
+    let n = freqs.len();
+    let mut heap = std::collections::BinaryHeap::with_capacity(n);
+    // parent[i] for all tree nodes; leaves are 0..n.
+    let mut parent = vec![usize::MAX; 2 * n - 1];
+    for (i, &(_, f)) in freqs.iter().enumerate() {
+        heap.push(Node(f.max(1), i));
+    }
+    let mut next_id = n;
+    while heap.len() > 1 {
+        let a = heap.pop().unwrap();
+        let b = heap.pop().unwrap();
+        parent[a.1] = next_id;
+        parent[b.1] = next_id;
+        heap.push(Node(a.0 + b.0, next_id));
+        next_id += 1;
+    }
+
+    // Depth of each leaf = path length to root.
+    let mut lens: Vec<SymLen> = freqs
+        .iter()
+        .enumerate()
+        .map(|(i, &(sym, _))| {
+            let mut d = 0u32;
+            let mut j = i;
+            while parent[j] != usize::MAX {
+                j = parent[j];
+                d += 1;
+            }
+            SymLen { sym, len: d }
+        })
+        .collect();
+
+    // Depth-limit: push over-long codes up, compensating by pushing the
+    // most shallow deep-enough codes down (Kraft-sum repair).
+    if lens.iter().any(|sl| sl.len > MAX_CODE_LEN) {
+        // Kraft units in terms of 2^-MAX_CODE_LEN.
+        let unit = |len: u32| 1u64 << (MAX_CODE_LEN - len.min(MAX_CODE_LEN));
+        let budget = 1u64 << MAX_CODE_LEN;
+        for sl in lens.iter_mut() {
+            if sl.len > MAX_CODE_LEN {
+                sl.len = MAX_CODE_LEN;
+            }
+        }
+        let mut used: u64 = lens.iter().map(|sl| unit(sl.len)).sum();
+        // Lengthen the shortest codes until the Kraft inequality holds.
+        while used > budget {
+            // Find a symbol with smallest length < MAX_CODE_LEN whose
+            // lengthening reclaims the most.
+            let idx = lens
+                .iter()
+                .enumerate()
+                .filter(|(_, sl)| sl.len < MAX_CODE_LEN)
+                .min_by_key(|(_, sl)| sl.len)
+                .map(|(i, _)| i)
+                .expect("kraft repair: no lengthenable code");
+            used -= unit(lens[idx].len) - unit(lens[idx].len + 1);
+            lens[idx].len += 1;
+        }
+    }
+    lens
+}
+
+/// Assign canonical codes given (symbol, length) pairs.
+/// Canonical order: shorter lengths first, ties by symbol value.
+fn canonical_codes(mut lens: Vec<SymLen>) -> Vec<(u32, u32, u32)> {
+    lens.sort_by_key(|sl| (sl.len, sl.sym));
+    let mut out = Vec::with_capacity(lens.len());
+    let mut code: u32 = 0;
+    let mut prev_len = 0u32;
+    for sl in &lens {
+        code <<= sl.len - prev_len;
+        out.push((sl.sym, code, sl.len));
+        prev_len = sl.len;
+        code = code.wrapping_add(1);
+    }
+    out.sort_by_key(|&(sym, _, _)| sym);
+    out
+}
+
+impl HuffmanEncoder {
+    /// Build an encoder from symbol frequencies (`(symbol, count)`,
+    /// zero-count symbols may be omitted).
+    pub fn from_freqs(freqs: &[(u32, u64)]) -> Result<Self> {
+        if freqs.is_empty() {
+            return Err(Error::InvalidArg("huffman: empty alphabet".into()));
+        }
+        let lens = code_lengths(freqs);
+        Ok(HuffmanEncoder { codes: canonical_codes(lens) })
+    }
+
+    /// Build from a raw symbol stream (counts computed internally).
+    /// Dense counting for small alphabets (quantization bins) — ~10×
+    /// faster than hash-map counting on multi-megabyte streams.
+    pub fn from_symbols(symbols: &[u32]) -> Result<Self> {
+        let max_sym = symbols.iter().copied().max().unwrap_or(0);
+        let freqs: Vec<(u32, u64)> = if (max_sym as usize) < 1 << 20 {
+            let mut counts = vec![0u64; max_sym as usize + 1];
+            for &s in symbols {
+                counts[s as usize] += 1;
+            }
+            counts
+                .into_iter()
+                .enumerate()
+                .filter(|&(_, c)| c > 0)
+                .map(|(s, c)| (s as u32, c))
+                .collect()
+        } else {
+            let mut counts = std::collections::HashMap::new();
+            for &s in symbols {
+                *counts.entry(s).or_insert(0u64) += 1;
+            }
+            let mut v: Vec<(u32, u64)> = counts.into_iter().collect();
+            v.sort_unstable();
+            v
+        };
+        Self::from_freqs(&freqs)
+    }
+
+    /// Look up (code, len) for a symbol.
+    #[inline]
+    pub fn code(&self, sym: u32) -> Option<(u32, u32)> {
+        self.codes
+            .binary_search_by_key(&sym, |&(s, _, _)| s)
+            .ok()
+            .map(|i| (self.codes[i].1, self.codes[i].2))
+    }
+
+    /// Encode a symbol stream into `w`. Errors on unknown symbols.
+    pub fn encode(&self, symbols: &[u32], w: &mut BitWriter) -> Result<()> {
+        // Dense LUT when the alphabet is contiguous-ish (quant bins are):
+        // symbol -> (code,len), avoiding the binary search per symbol.
+        let max_sym = self.codes.last().map(|&(s, _, _)| s).unwrap_or(0);
+        if (max_sym as usize) < 1 << 20 {
+            let mut lut: Vec<(u32, u32)> = vec![(0, 0); max_sym as usize + 1];
+            for &(s, c, l) in &self.codes {
+                lut[s as usize] = (c, l);
+            }
+            for &s in symbols {
+                let (code, len) = *lut
+                    .get(s as usize)
+                    .filter(|&&(_, l)| l > 0)
+                    .ok_or_else(|| Error::InvalidArg(format!("huffman: unknown symbol {s}")))?;
+                // Canonical codes are MSB-first; emit reversed for the
+                // LSB-first stream.
+                w.write_bits((code.reverse_bits() >> (32 - len)) as u64, len);
+            }
+        } else {
+            for &s in symbols {
+                let (code, len) = self
+                    .code(s)
+                    .ok_or_else(|| Error::InvalidArg(format!("huffman: unknown symbol {s}")))?;
+                w.write_bits((code.reverse_bits() >> (32 - len)) as u64, len);
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize the code table: varint count, then (symbol, len) pairs
+    /// (delta-coded symbols).
+    pub fn serialize_table(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        varint::write_u64(&mut out, self.codes.len() as u64);
+        let mut prev = 0u32;
+        for &(sym, _, len) in &self.codes {
+            varint::write_u64(&mut out, (sym - prev) as u64);
+            varint::write_u64(&mut out, len as u64);
+            prev = sym;
+        }
+        out
+    }
+
+    /// Expected bit-length of a stream with these counts (for tests /
+    /// estimation cross-checks).
+    pub fn expected_bits(&self, freqs: &[(u32, u64)]) -> u64 {
+        freqs
+            .iter()
+            .map(|&(s, f)| f * self.code(s).map(|(_, l)| l as u64).unwrap_or(0))
+            .sum()
+    }
+}
+
+/// Decoder built from a serialized canonical table.
+pub struct HuffmanDecoder {
+    /// Sorted by (len, sym): canonical order.
+    syms: Vec<u32>,
+    /// first_code[l] = first canonical code of length l (MSB-first value).
+    first_code: [u32; (MAX_CODE_LEN + 1) as usize],
+    /// first_index[l] = index into `syms` of the first length-l code.
+    first_index: [u32; (MAX_CODE_LEN + 1) as usize],
+    /// count[l] = number of codes of length l.
+    count: [u32; (MAX_CODE_LEN + 1) as usize],
+    /// Fast path: FAST_BITS-wide LSB-first prefix -> (symbol, len) when
+    /// len <= FAST_BITS, else len = 0 sentinel.
+    fast: Vec<(u32, u8)>,
+}
+
+impl HuffmanDecoder {
+    /// Deserialize a table produced by [`HuffmanEncoder::serialize_table`].
+    pub fn deserialize_table(buf: &[u8], pos: &mut usize) -> Result<Self> {
+        let n = varint::read_u64(buf, pos)? as usize;
+        if n == 0 {
+            return Err(Error::Corrupt("huffman: empty table".into()));
+        }
+        let mut lens = Vec::with_capacity(n);
+        let mut prev = 0u32;
+        for _ in 0..n {
+            let dsym = varint::read_u64(buf, pos)? as u32;
+            let len = varint::read_u64(buf, pos)? as u32;
+            if len == 0 || len > MAX_CODE_LEN {
+                return Err(Error::Corrupt(format!("huffman: bad code length {len}")));
+            }
+            prev = prev
+                .checked_add(dsym)
+                .ok_or_else(|| Error::Corrupt("huffman: symbol overflow".into()))?;
+            lens.push(SymLen { sym: prev, len });
+            prev = prev.wrapping_add(0); // symbols strictly increasing via delta >= 0
+        }
+        Self::from_lengths(lens)
+    }
+
+    fn from_lengths(mut lens: Vec<SymLen>) -> Result<Self> {
+        lens.sort_by_key(|sl| (sl.len, sl.sym));
+        let mut count = [0u32; (MAX_CODE_LEN + 1) as usize];
+        for sl in &lens {
+            count[sl.len as usize] += 1;
+        }
+        // Kraft check.
+        let mut kraft: u64 = 0;
+        for l in 1..=MAX_CODE_LEN {
+            kraft += (count[l as usize] as u64) << (MAX_CODE_LEN - l);
+        }
+        if kraft > 1u64 << MAX_CODE_LEN {
+            return Err(Error::Corrupt("huffman: over-subscribed code".into()));
+        }
+        let mut first_code = [0u32; (MAX_CODE_LEN + 1) as usize];
+        let mut first_index = [0u32; (MAX_CODE_LEN + 1) as usize];
+        let mut code = 0u32;
+        let mut index = 0u32;
+        for l in 1..=MAX_CODE_LEN as usize {
+            code <<= 1;
+            first_code[l] = code;
+            first_index[l] = index;
+            code = code.wrapping_add(count[l]);
+            index += count[l];
+        }
+        let syms: Vec<u32> = lens.iter().map(|sl| sl.sym).collect();
+
+        // Build the fast prefix table.
+        let mut fast = vec![(0u32, 0u8); 1 << FAST_BITS];
+        {
+            let mut code = 0u32;
+            let mut idx = 0usize;
+            for l in 1..=MAX_CODE_LEN {
+                code <<= 1;
+                for _ in 0..count[l as usize] {
+                    if l <= FAST_BITS {
+                        // LSB-first stream: the code arrives bit-reversed.
+                        let rev = code.reverse_bits() >> (32 - l);
+                        let step = 1u32 << l;
+                        let mut p = rev;
+                        while p < (1 << FAST_BITS) {
+                            fast[p as usize] = (syms[idx], l as u8);
+                            p += step;
+                        }
+                    }
+                    code = code.wrapping_add(1);
+                    idx += 1;
+                }
+            }
+        }
+
+        Ok(HuffmanDecoder { syms, first_code, first_index, count, fast })
+    }
+
+    /// Decode `n` symbols from `r`.
+    pub fn decode(&self, r: &mut BitReader, n: usize, out: &mut Vec<u32>) -> Result<()> {
+        out.reserve(n);
+        for _ in 0..n {
+            out.push(self.decode_one(r)?);
+        }
+        Ok(())
+    }
+
+    /// Decode a single symbol. Fast path: 12-bit prefix lookup (covers
+    /// all codes ≤ 12 bits — the overwhelming majority for peaked
+    /// quantization-symbol distributions); falls back to canonical
+    /// limit-search for longer codes.
+    #[inline]
+    pub fn decode_one(&self, r: &mut BitReader) -> Result<u32> {
+        let (sym, len) = self.fast_lookup(r.peek12());
+        if len != 0 {
+            r.consume(len as u32);
+            return Ok(sym);
+        }
+        self.decode_one_slow(r)
+    }
+
+    /// Canonical limit-search, bit by bit (MSB-first code value
+    /// accumulated from the LSB-first stream).
+    fn decode_one_slow(&self, r: &mut BitReader) -> Result<u32> {
+        let mut code = 0u32;
+        for len in 1..=MAX_CODE_LEN {
+            code = (code << 1) | r.read_bit() as u32;
+            let l = len as usize;
+            if self.count[l] > 0 {
+                let offset = code.wrapping_sub(self.first_code[l]);
+                if offset < self.count[l] {
+                    return Ok(self.syms[(self.first_index[l] + offset) as usize]);
+                }
+            }
+        }
+        Err(Error::Corrupt("huffman: invalid code in stream".into()))
+    }
+
+    /// Number of symbols in the alphabet.
+    pub fn alphabet_len(&self) -> usize {
+        self.syms.len()
+    }
+
+    /// Fast-table accessor.
+    #[inline]
+    fn fast_lookup(&self, prefix: u32) -> (u32, u8) {
+        self.fast[(prefix & ((1 << FAST_BITS) - 1)) as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::Rng;
+
+    fn roundtrip(symbols: &[u32]) {
+        let enc = HuffmanEncoder::from_symbols(symbols).unwrap();
+        let mut w = BitWriter::new();
+        enc.encode(symbols, &mut w).unwrap();
+        let table = enc.serialize_table();
+        let bytes = w.finish();
+
+        let mut pos = 0;
+        let dec = HuffmanDecoder::deserialize_table(&table, &mut pos).unwrap();
+        assert_eq!(pos, table.len());
+        let mut r = BitReader::new(&bytes);
+        let mut out = Vec::new();
+        dec.decode(&mut r, symbols.len(), &mut out).unwrap();
+        assert_eq!(out, symbols);
+    }
+
+    #[test]
+    fn roundtrip_small() {
+        roundtrip(&[1, 2, 3, 1, 1, 1, 2, 5, 5, 5, 5, 5, 9]);
+    }
+
+    #[test]
+    fn roundtrip_single_symbol() {
+        roundtrip(&[42; 100]);
+    }
+
+    #[test]
+    fn roundtrip_two_symbols() {
+        roundtrip(&[0, 1, 0, 0, 0, 1, 1, 0]);
+    }
+
+    #[test]
+    fn roundtrip_random_large_alphabet() {
+        let mut rng = Rng::new(21);
+        // Zipf-ish distribution over 5000 symbols (like quant bins).
+        let symbols: Vec<u32> = (0..50_000)
+            .map(|_| {
+                let u = rng.f64();
+                (5000.0 * u * u * u) as u32
+            })
+            .collect();
+        roundtrip(&symbols);
+    }
+
+    #[test]
+    fn near_entropy_bitrate() {
+        // A strongly skewed distribution should compress near entropy.
+        let mut rng = Rng::new(22);
+        let symbols: Vec<u32> = (0..100_000)
+            .map(|_| if rng.bool(0.9) { 0 } else { rng.range(1, 16) as u32 })
+            .collect();
+        let enc = HuffmanEncoder::from_symbols(&symbols).unwrap();
+        let mut w = BitWriter::new();
+        enc.encode(&symbols, &mut w).unwrap();
+        let bits = w.bit_len() as f64;
+        // entropy of the empirical distribution
+        let mut counts = std::collections::HashMap::new();
+        for &s in &symbols {
+            *counts.entry(s).or_insert(0u64) += 1;
+        }
+        let n = symbols.len() as f64;
+        let entropy: f64 = counts
+            .values()
+            .map(|&c| {
+                let p = c as f64 / n;
+                -p * p.log2()
+            })
+            .sum();
+        let actual_rate = bits / n;
+        assert!(actual_rate >= entropy - 1e-9, "huffman beat entropy?");
+        assert!(
+            actual_rate <= entropy + 1.0,
+            "rate {actual_rate} far above entropy {entropy}"
+        );
+    }
+
+    #[test]
+    fn unknown_symbol_errors() {
+        let enc = HuffmanEncoder::from_symbols(&[1, 2, 3]).unwrap();
+        let mut w = BitWriter::new();
+        assert!(enc.encode(&[99], &mut w).is_err());
+    }
+
+    #[test]
+    fn corrupt_table_errors() {
+        // Length 0 is invalid.
+        let mut buf = Vec::new();
+        varint::write_u64(&mut buf, 1);
+        varint::write_u64(&mut buf, 5);
+        varint::write_u64(&mut buf, 0);
+        let mut pos = 0;
+        assert!(HuffmanDecoder::deserialize_table(&buf, &mut pos).is_err());
+    }
+
+    #[test]
+    fn expected_bits_matches_actual() {
+        let symbols = vec![7u32, 7, 7, 8, 8, 9, 10, 10, 10, 10];
+        let mut freqs = std::collections::HashMap::new();
+        for &s in &symbols {
+            *freqs.entry(s).or_insert(0u64) += 1;
+        }
+        let mut freqs: Vec<(u32, u64)> = freqs.into_iter().collect();
+        freqs.sort_unstable();
+        let enc = HuffmanEncoder::from_freqs(&freqs).unwrap();
+        let mut w = BitWriter::new();
+        enc.encode(&symbols, &mut w).unwrap();
+        assert_eq!(enc.expected_bits(&freqs), w.bit_len());
+    }
+}

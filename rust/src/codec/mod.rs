@@ -1,0 +1,12 @@
+//! Shared entropy-coding substrate: bit-level streams and canonical
+//! Huffman coding. Used by both the [`crate::sz`] (Stage III entropy
+//! coding) and [`crate::zfp`] (bit-plane embedded coding) compressors
+//! and by the container format in [`crate::coordinator::store`].
+
+pub mod arith;
+pub mod bitstream;
+pub mod huffman;
+pub mod varint;
+
+pub use bitstream::{BitReader, BitWriter};
+pub use huffman::{HuffmanDecoder, HuffmanEncoder};

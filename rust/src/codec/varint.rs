@@ -1,0 +1,142 @@
+//! LEB128-style variable-length integers for headers and container
+//! metadata.
+
+use crate::{Error, Result};
+
+/// Append `v` as LEB128.
+pub fn write_u64(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+/// Read a LEB128 u64 from `buf[*pos..]`, advancing `pos`.
+pub fn read_u64(buf: &[u8], pos: &mut usize) -> Result<u64> {
+    let mut v: u64 = 0;
+    let mut shift = 0u32;
+    loop {
+        let byte = *buf
+            .get(*pos)
+            .ok_or_else(|| Error::Corrupt("varint: unexpected end of buffer".into()))?;
+        *pos += 1;
+        if shift >= 64 {
+            return Err(Error::Corrupt("varint: overflow".into()));
+        }
+        v |= ((byte & 0x7F) as u64) << shift;
+        if byte & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+/// Append a length-prefixed byte slice.
+pub fn write_bytes(out: &mut Vec<u8>, bytes: &[u8]) {
+    write_u64(out, bytes.len() as u64);
+    out.extend_from_slice(bytes);
+}
+
+/// Read a length-prefixed byte slice.
+pub fn read_bytes<'a>(buf: &'a [u8], pos: &mut usize) -> Result<&'a [u8]> {
+    let len = read_u64(buf, pos)? as usize;
+    let end = pos
+        .checked_add(len)
+        .ok_or_else(|| Error::Corrupt("length overflow".into()))?;
+    if end > buf.len() {
+        return Err(Error::Corrupt(format!(
+            "length-prefixed slice of {len} bytes exceeds buffer"
+        )));
+    }
+    let s = &buf[*pos..end];
+    *pos = end;
+    Ok(s)
+}
+
+/// Append an f64 (LE bytes).
+pub fn write_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Read an f64.
+pub fn read_f64(buf: &[u8], pos: &mut usize) -> Result<f64> {
+    let end = *pos + 8;
+    if end > buf.len() {
+        return Err(Error::Corrupt("f64: unexpected end of buffer".into()));
+    }
+    let mut b = [0u8; 8];
+    b.copy_from_slice(&buf[*pos..end]);
+    *pos = end;
+    Ok(f64::from_le_bytes(b))
+}
+
+/// Append a UTF-8 string (length-prefixed).
+pub fn write_str(out: &mut Vec<u8>, s: &str) {
+    write_bytes(out, s.as_bytes());
+}
+
+/// Read a UTF-8 string.
+pub fn read_str(buf: &[u8], pos: &mut usize) -> Result<String> {
+    let bytes = read_bytes(buf, pos)?;
+    String::from_utf8(bytes.to_vec())
+        .map_err(|_| Error::Corrupt("invalid utf-8 in string".into()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u64_roundtrip_edges() {
+        for v in [0u64, 1, 127, 128, 16383, 16384, u32::MAX as u64, u64::MAX] {
+            let mut buf = Vec::new();
+            write_u64(&mut buf, v);
+            let mut pos = 0;
+            assert_eq!(read_u64(&buf, &mut pos).unwrap(), v);
+            assert_eq!(pos, buf.len());
+        }
+    }
+
+    #[test]
+    fn truncated_varint_errors() {
+        let mut buf = Vec::new();
+        write_u64(&mut buf, u64::MAX);
+        buf.pop();
+        let mut pos = 0;
+        assert!(read_u64(&buf, &mut pos).is_err());
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let mut buf = Vec::new();
+        write_bytes(&mut buf, b"hello");
+        write_bytes(&mut buf, b"");
+        let mut pos = 0;
+        assert_eq!(read_bytes(&buf, &mut pos).unwrap(), b"hello");
+        assert_eq!(read_bytes(&buf, &mut pos).unwrap(), b"");
+    }
+
+    #[test]
+    fn oversized_length_errors() {
+        let mut buf = Vec::new();
+        write_u64(&mut buf, 1_000_000);
+        buf.extend_from_slice(b"short");
+        let mut pos = 0;
+        assert!(read_bytes(&buf, &mut pos).is_err());
+    }
+
+    #[test]
+    fn str_and_f64_roundtrip() {
+        let mut buf = Vec::new();
+        write_str(&mut buf, "CLDHGH");
+        write_f64(&mut buf, -1.25e-7);
+        let mut pos = 0;
+        assert_eq!(read_str(&buf, &mut pos).unwrap(), "CLDHGH");
+        assert_eq!(read_f64(&buf, &mut pos).unwrap(), -1.25e-7);
+    }
+}

@@ -1,0 +1,144 @@
+//! Minimal typed configuration system (serde/toml are unavailable in
+//! the offline build — DESIGN.md §9). Parses a flat `key = value`
+//! format with `#` comments and `[section]` headers flattened into
+//! `section.key`, plus typed accessors with defaults and unknown-key
+//! detection.
+
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Parsed configuration: flattened key/value map.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    map: BTreeMap<String, String>,
+}
+
+impl Config {
+    /// Parse from text.
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                Error::InvalidArg(format!("config line {}: expected key = value", lineno + 1))
+            })?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            if map.insert(key.clone(), v.trim().to_string()).is_some() {
+                return Err(Error::InvalidArg(format!("duplicate config key '{key}'")));
+            }
+        }
+        Ok(Config { map })
+    }
+
+    /// Load from a file.
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Config> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.map.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                Error::InvalidArg(format!("config key '{key}': cannot parse '{v}'"))
+            }),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+}
+
+/// Experiment configuration (the run-level knobs every bench/example
+/// shares). Every field has a paper-faithful default.
+#[derive(Clone, Copy, Debug)]
+pub struct ExperimentConfig {
+    /// Dataset scale: 0 tiny, 1 bench default, 2 paper-shape.
+    pub scale: u8,
+    /// Value-range-relative error bound.
+    pub eb_rel: f64,
+    /// Stage-I sampling rate.
+    pub r_sp: f64,
+    /// Worker threads (0 = all cores).
+    pub workers: usize,
+    /// RNG seed for dataset generation.
+    pub seed: u64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig { scale: 1, eb_rel: 1e-4, r_sp: 0.05, workers: 0, seed: 2018 }
+    }
+}
+
+impl ExperimentConfig {
+    /// Build from a parsed [`Config`] (`experiment.*` keys).
+    pub fn from_config(c: &Config) -> Result<Self> {
+        let d = Self::default();
+        Ok(ExperimentConfig {
+            scale: c.get_or("experiment.scale", d.scale)?,
+            eb_rel: c.get_or("experiment.eb_rel", d.eb_rel)?,
+            r_sp: c.get_or("experiment.r_sp", d.r_sp)?,
+            workers: c.get_or("experiment.workers", d.workers)?,
+            seed: c.get_or("experiment.seed", d.seed)?,
+        })
+    }
+
+    pub fn effective_workers(&self) -> usize {
+        if self.workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        } else {
+            self.workers
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sections_and_comments() {
+        let c = Config::parse(
+            "# comment\nfoo = 1\n[experiment]\neb_rel = 1e-3  # inline\nscale=2\n",
+        )
+        .unwrap();
+        assert_eq!(c.get("foo"), Some("1"));
+        assert_eq!(c.get("experiment.eb_rel"), Some("1e-3"));
+        assert_eq!(c.get("experiment.scale"), Some("2"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let c = Config::parse("[experiment]\neb_rel = 1e-3\nscale = 2\n").unwrap();
+        let e = ExperimentConfig::from_config(&c).unwrap();
+        assert_eq!(e.scale, 2);
+        assert!((e.eb_rel - 1e-3).abs() < 1e-15);
+        // Defaults preserved for unset keys.
+        assert_eq!(e.seed, 2018);
+    }
+
+    #[test]
+    fn bad_lines_rejected() {
+        assert!(Config::parse("not a kv line").is_err());
+        assert!(Config::parse("a = 1\na = 2").is_err());
+        let c = Config::parse("[experiment]\nscale = abc").unwrap();
+        assert!(ExperimentConfig::from_config(&c).is_err());
+    }
+}

@@ -1,0 +1,40 @@
+//! Work items and results for the coordinator's worker pool.
+
+use crate::estimator::selector::Choice;
+use std::time::Duration;
+
+/// Result of compressing one field.
+#[derive(Clone, Debug)]
+pub struct FieldResult {
+    pub name: String,
+    /// Which codec produced the payload (None for raw/no-compression).
+    pub choice: Option<Choice>,
+    /// Self-describing container payload (selection byte + stream),
+    /// or raw LE f32 bytes for the no-compression policy.
+    pub payload: Vec<u8>,
+    pub raw_bytes: usize,
+    /// Time spent in estimation (Algorithm 1 lines 3–10).
+    pub estimate_time: Duration,
+    /// Time spent in the codec itself.
+    pub compress_time: Duration,
+}
+
+impl FieldResult {
+    pub fn ratio(&self) -> f64 {
+        self.raw_bytes as f64 / self.payload.len() as f64
+    }
+
+    pub fn bit_rate(&self) -> f64 {
+        self.payload.len() as f64 * 8.0 / (self.raw_bytes / 4) as f64
+    }
+
+    /// Estimation overhead relative to compression time (Table 6).
+    pub fn overhead_frac(&self) -> f64 {
+        let c = self.compress_time.as_secs_f64();
+        if c > 0.0 {
+            self.estimate_time.as_secs_f64() / c
+        } else {
+            0.0
+        }
+    }
+}

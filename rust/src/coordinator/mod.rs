@@ -1,0 +1,129 @@
+//! L3 coordinator: drives many fields through estimation + compression
+//! on a worker pool — the in-situ compression runtime of the paper's
+//! parallel evaluation (§6.5).
+//!
+//! * [`job`] — work items and per-field results;
+//! * [`pool`] — the worker pool (std threads, shared queue, panic
+//!   isolation);
+//! * [`router`] — per-field policy dispatch (Algorithm 1 / baselines);
+//! * [`store`] — the on-disk container with selection bits s_i;
+//! * [`stats`] — aggregate metrics for the run.
+
+pub mod job;
+pub mod pool;
+pub mod router;
+pub mod stats;
+pub mod store;
+
+use crate::baseline::Policy;
+use crate::data::field::Field;
+use crate::estimator::selector::SelectorConfig;
+use crate::Result;
+
+/// The coordinator: configuration + entry points.
+#[derive(Clone, Debug)]
+pub struct Coordinator {
+    pub selector_cfg: SelectorConfig,
+    pub workers: usize,
+}
+
+impl Default for Coordinator {
+    fn default() -> Self {
+        Coordinator {
+            selector_cfg: SelectorConfig::default(),
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        }
+    }
+}
+
+impl Coordinator {
+    pub fn new(selector_cfg: SelectorConfig, workers: usize) -> Self {
+        Coordinator { selector_cfg, workers: workers.max(1) }
+    }
+
+    /// Compress every field under `policy`, in parallel, collecting
+    /// per-field results in submission order.
+    pub fn run(
+        &self,
+        fields: &[Field],
+        policy: Policy,
+        eb_rel: f64,
+    ) -> Result<stats::RunReport> {
+        let router = router::Router::new(self.selector_cfg, policy, eb_rel);
+        let results = pool::run_jobs(self.workers, fields, |f| router.process(f))?;
+        Ok(stats::RunReport::from_results(policy, eb_rel, results))
+    }
+
+    /// Decompress every field of a container back to raw data.
+    pub fn load(&self, container: &store::Container) -> Result<Vec<Field>> {
+        let sel = crate::estimator::selector::AutoSelector::new(self.selector_cfg);
+        let entries: Vec<&store::Entry> = container.entries.iter().collect();
+        let fields = pool::run_jobs(self.workers, &entries, |e| {
+            let (data, dims) = sel.decompress_with_dims(&e.payload)?;
+            Ok(Field::new(e.name.clone(), dims, data))
+        })?;
+        Ok(fields)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::atm;
+
+    fn small_fields(n: usize) -> Vec<Field> {
+        (0..n).map(|i| atm::generate_field_scaled(55, i, 0)).collect()
+    }
+
+    #[test]
+    fn run_processes_every_field_once() {
+        let coord = Coordinator::new(SelectorConfig::default(), 4);
+        let fields = small_fields(9);
+        let report = coord.run(&fields, Policy::RateDistortion, 1e-3).unwrap();
+        assert_eq!(report.results.len(), 9);
+        // Order preserved.
+        for (r, f) in report.results.iter().zip(&fields) {
+            assert_eq!(r.name, f.name);
+        }
+    }
+
+    #[test]
+    fn store_load_roundtrip_through_coordinator() {
+        let coord = Coordinator::new(SelectorConfig::default(), 2);
+        let fields = small_fields(4);
+        let report = coord.run(&fields, Policy::RateDistortion, 1e-3).unwrap();
+        let container = report.to_container();
+        let restored = coord.load(&container).unwrap();
+        assert_eq!(restored.len(), fields.len());
+        for (orig, rest) in fields.iter().zip(&restored) {
+            assert_eq!(orig.name, rest.name);
+            assert_eq!(orig.dims, rest.dims);
+            let vr = orig.value_range();
+            let stats = crate::metrics::error_stats(&orig.data, &rest.data);
+            assert!(stats.max_abs_err <= 1e-3 * vr * (1.0 + 1e-9), "{}", orig.name);
+        }
+    }
+
+    #[test]
+    fn all_policies_run() {
+        let coord = Coordinator::new(SelectorConfig::default(), 2);
+        let fields = small_fields(3);
+        for p in Policy::ALL {
+            let report = coord.run(&fields, p, 1e-3).unwrap();
+            assert_eq!(report.results.len(), 3, "{p:?}");
+            assert!(report.total_raw_bytes() > 0);
+        }
+    }
+
+    #[test]
+    fn single_worker_matches_parallel() {
+        let fields = small_fields(5);
+        let c1 = Coordinator::new(SelectorConfig::default(), 1);
+        let c4 = Coordinator::new(SelectorConfig::default(), 4);
+        let r1 = c1.run(&fields, Policy::RateDistortion, 1e-3).unwrap();
+        let r4 = c4.run(&fields, Policy::RateDistortion, 1e-3).unwrap();
+        for (a, b) in r1.results.iter().zip(&r4.results) {
+            assert_eq!(a.payload, b.payload, "worker count must not change output");
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! A small work-stealing-free worker pool on std threads: one shared
+//! FIFO of indexed jobs, results gathered back into submission order.
+//! Worker panics are caught and surfaced as errors instead of hangs
+//! (coordinator invariant #6, DESIGN.md §7).
+
+use crate::{Error, Result};
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+/// Run `f` over `items` on `workers` threads; returns outputs in input
+/// order. `f` must be deterministic per item (verified by tests).
+pub fn run_jobs<T: Sync, R: Send>(
+    workers: usize,
+    items: &[T],
+    f: impl Fn(&T) -> Result<R> + Sync,
+) -> Result<Vec<R>> {
+    let n = items.len();
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        return items.iter().map(&f).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, Result<R>)>();
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let next = &next;
+            let f = &f;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let out = std::panic::catch_unwind(AssertUnwindSafe(|| f(&items[i])))
+                    .unwrap_or_else(|p| {
+                        let msg = p
+                            .downcast_ref::<&str>()
+                            .map(|s| s.to_string())
+                            .or_else(|| p.downcast_ref::<String>().cloned())
+                            .unwrap_or_else(|| "worker panic".into());
+                        Err(Error::Other(format!("worker panicked: {msg}")))
+                    });
+                if tx.send((i, out)).is_err() {
+                    break; // receiver dropped (early error) — stop
+                }
+            });
+        }
+        drop(tx);
+
+        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let mut received = 0usize;
+        while received < n {
+            match rx.recv() {
+                Ok((i, Ok(r))) => {
+                    slots[i] = Some(r);
+                    received += 1;
+                }
+                Ok((_, Err(e))) => return Err(e),
+                Err(_) => {
+                    return Err(Error::Other(
+                        "worker pool: channel closed before all results arrived".into(),
+                    ))
+                }
+            }
+        }
+        Ok(slots.into_iter().map(|s| s.unwrap()).collect())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_in_order() {
+        let items: Vec<usize> = (0..100).collect();
+        let out = run_jobs(8, &items, |&i| Ok(i * 2)).unwrap();
+        assert_eq!(out, (0..100).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_input() {
+        let out: Vec<u32> = run_jobs(4, &Vec::<u32>::new(), |&x| Ok(x)).unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn error_propagates() {
+        let items: Vec<usize> = (0..50).collect();
+        let r = run_jobs(4, &items, |&i| {
+            if i == 25 {
+                Err(Error::Other("boom".into()))
+            } else {
+                Ok(i)
+            }
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn panic_becomes_error_not_hang() {
+        let items: Vec<usize> = (0..20).collect();
+        let r = run_jobs(4, &items, |&i| {
+            if i == 13 {
+                panic!("injected failure");
+            }
+            Ok(i)
+        });
+        let err = r.unwrap_err();
+        assert!(format!("{err}").contains("injected failure"), "{err}");
+    }
+
+    #[test]
+    fn single_worker_path() {
+        let items = vec![1u32, 2, 3];
+        let out = run_jobs(1, &items, |&x| Ok(x + 1)).unwrap();
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn more_workers_than_items() {
+        let items = vec![5u32];
+        let out = run_jobs(64, &items, |&x| Ok(x)).unwrap();
+        assert_eq!(out, vec![5]);
+    }
+}

@@ -1,0 +1,184 @@
+//! Per-field policy dispatch: maps a [`Policy`] to concrete estimation
+//! + compression work, timing the two phases separately (the paper's
+//! Table 6 overhead accounting needs estimate vs. compress split).
+
+use super::job::FieldResult;
+use crate::baseline::{ebselect, Policy};
+use crate::data::field::Field;
+use crate::estimator::selector::{AutoSelector, Choice, SelectorConfig};
+use crate::Result;
+use std::time::Instant;
+
+/// Stateless router: policy + bound, shared across workers.
+#[derive(Clone, Copy, Debug)]
+pub struct Router {
+    pub selector: AutoSelector,
+    pub policy: Policy,
+    pub eb_rel: f64,
+}
+
+impl Router {
+    pub fn new(cfg: SelectorConfig, policy: Policy, eb_rel: f64) -> Self {
+        Router { selector: AutoSelector::new(cfg), policy, eb_rel }
+    }
+
+    /// Process one field under this router's policy.
+    pub fn process(&self, field: &Field) -> Result<FieldResult> {
+        let vr = field.value_range();
+        let eb = if vr > 0.0 { self.eb_rel * vr } else { self.eb_rel };
+        match self.policy {
+            Policy::NoCompression => {
+                let t0 = Instant::now();
+                let mut payload = Vec::with_capacity(field.raw_bytes());
+                for v in &field.data {
+                    payload.extend_from_slice(&v.to_le_bytes());
+                }
+                Ok(FieldResult {
+                    name: field.name.clone(),
+                    choice: None,
+                    payload,
+                    raw_bytes: field.raw_bytes(),
+                    estimate_time: std::time::Duration::ZERO,
+                    compress_time: t0.elapsed(),
+                })
+            }
+            Policy::AlwaysSz | Policy::AlwaysZfp => {
+                let choice = if self.policy == Policy::AlwaysSz { Choice::Sz } else { Choice::Zfp };
+                let t0 = Instant::now();
+                let payload = self.selector.compress_forced(field, eb, choice)?;
+                Ok(FieldResult {
+                    name: field.name.clone(),
+                    choice: Some(choice),
+                    payload,
+                    raw_bytes: field.raw_bytes(),
+                    estimate_time: std::time::Duration::ZERO,
+                    compress_time: t0.elapsed(),
+                })
+            }
+            Policy::RateDistortion => {
+                let t0 = Instant::now();
+                let (choice, est) = self.selector.select_abs(field, eb, vr)?;
+                let estimate_time = t0.elapsed();
+                let t1 = Instant::now();
+                let payload = match choice {
+                    Choice::Sz => {
+                        let mut c = self.selector.compress_forced(field, est.eb_sz, choice)?;
+                        c[0] = 0;
+                        c
+                    }
+                    Choice::Zfp => self.selector.compress_forced(field, est.eb_zfp, choice)?,
+                };
+                Ok(FieldResult {
+                    name: field.name.clone(),
+                    choice: Some(choice),
+                    payload,
+                    raw_bytes: field.raw_bytes(),
+                    estimate_time,
+                    compress_time: t1.elapsed(),
+                })
+            }
+            Policy::ErrorBound => {
+                let t0 = Instant::now();
+                let (choice, _, _) =
+                    ebselect::select_by_error_bound(field, eb, self.selector.cfg.r_sp);
+                let estimate_time = t0.elapsed();
+                let t1 = Instant::now();
+                let payload = self.selector.compress_forced(field, eb, choice)?;
+                Ok(FieldResult {
+                    name: field.name.clone(),
+                    choice: Some(choice),
+                    payload,
+                    raw_bytes: field.raw_bytes(),
+                    estimate_time,
+                    compress_time: t1.elapsed(),
+                })
+            }
+            Policy::Optimum => {
+                // Oracle: run both at iso-PSNR, keep the smaller output.
+                let t0 = Instant::now();
+                let (sz_truth, zfp_truth, oracle) =
+                    crate::estimator::eval::iso_psnr_truths(field, eb)?;
+                let _ = (sz_truth, zfp_truth);
+                let estimate_time = t0.elapsed();
+                let t1 = Instant::now();
+                let eb_used = match oracle {
+                    Choice::Sz => {
+                        let vr = field.value_range();
+                        if zfp_truth.psnr.is_finite() && vr > 0.0 {
+                            (crate::estimator::sz_model::delta_from_psnr(zfp_truth.psnr, vr)
+                                / 2.0)
+                                .min(eb)
+                        } else {
+                            eb
+                        }
+                    }
+                    Choice::Zfp => eb,
+                };
+                let payload = self.selector.compress_forced(field, eb_used, oracle)?;
+                Ok(FieldResult {
+                    name: field.name.clone(),
+                    choice: Some(oracle),
+                    payload,
+                    raw_bytes: field.raw_bytes(),
+                    estimate_time,
+                    compress_time: t1.elapsed(),
+                })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::atm;
+
+    #[test]
+    fn no_compression_is_exact_bytes() {
+        let f = atm::generate_field_scaled(61, 0, 0);
+        let r = Router::new(SelectorConfig::default(), Policy::NoCompression, 1e-3);
+        let out = r.process(&f).unwrap();
+        assert_eq!(out.payload.len(), f.raw_bytes());
+        assert!(out.choice.is_none());
+        assert!((out.ratio() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rd_policy_records_estimate_time() {
+        let f = atm::generate_field_scaled(62, 0, 1);
+        let r = Router::new(SelectorConfig::default(), Policy::RateDistortion, 1e-3);
+        let out = r.process(&f).unwrap();
+        assert!(out.estimate_time.as_nanos() > 0);
+        assert!(out.compress_time.as_nanos() > 0);
+        assert!(out.ratio() > 1.0);
+    }
+
+    #[test]
+    fn optimum_not_worse_than_either_fixed_policy() {
+        let f = atm::generate_field_scaled(63, 2, 0);
+        let mk = |p| Router::new(SelectorConfig::default(), p, 1e-3);
+        let opt = mk(Policy::Optimum).process(&f).unwrap();
+        let zfp = mk(Policy::AlwaysZfp).process(&f).unwrap();
+        // Optimum picks iso-PSNR best; it must be at least as small as
+        // ZFP at the same bound (SZ side uses a tighter bound so only
+        // the ZFP comparison is apples-to-apples here).
+        assert!(
+            opt.payload.len() <= zfp.payload.len() + 64,
+            "optimum {} vs zfp {}",
+            opt.payload.len(),
+            zfp.payload.len()
+        );
+    }
+
+    #[test]
+    fn payloads_decode_via_selector() {
+        let f = atm::generate_field_scaled(64, 1, 0);
+        let sel = AutoSelector::default();
+        for p in [Policy::AlwaysSz, Policy::AlwaysZfp, Policy::RateDistortion, Policy::ErrorBound]
+        {
+            let out = Router::new(SelectorConfig::default(), p, 1e-3).process(&f).unwrap();
+            let recon = sel.decompress(&out.payload).unwrap();
+            assert_eq!(recon.len(), f.len(), "{p:?}");
+        }
+    }
+}

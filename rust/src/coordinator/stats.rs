@@ -1,0 +1,139 @@
+//! Aggregate statistics for one coordinator run — the numbers the
+//! paper's §6.5 reports (compression ratios per policy, timing splits).
+
+use super::job::FieldResult;
+use super::store::{Container, Entry};
+use crate::baseline::Policy;
+use crate::estimator::selector::Choice;
+use std::time::Duration;
+
+/// The outcome of compressing one dataset under one policy.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub policy: Policy,
+    pub eb_rel: f64,
+    pub results: Vec<FieldResult>,
+}
+
+impl RunReport {
+    pub fn from_results(policy: Policy, eb_rel: f64, results: Vec<FieldResult>) -> Self {
+        RunReport { policy, eb_rel, results }
+    }
+
+    pub fn total_raw_bytes(&self) -> u64 {
+        self.results.iter().map(|r| r.raw_bytes as u64).sum()
+    }
+
+    pub fn total_stored_bytes(&self) -> u64 {
+        self.results.iter().map(|r| r.payload.len() as u64).sum()
+    }
+
+    /// Overall (size-weighted) compression ratio.
+    pub fn overall_ratio(&self) -> f64 {
+        self.total_raw_bytes() as f64 / self.total_stored_bytes() as f64
+    }
+
+    /// Sum of per-field compression times (single-rank work estimate).
+    pub fn total_compress_time(&self) -> Duration {
+        self.results.iter().map(|r| r.compress_time).sum()
+    }
+
+    /// Sum of per-field estimation times.
+    pub fn total_estimate_time(&self) -> Duration {
+        self.results.iter().map(|r| r.estimate_time).sum()
+    }
+
+    /// Estimation overhead as a fraction of compression time (Table 6).
+    pub fn overhead_frac(&self) -> f64 {
+        let c = self.total_compress_time().as_secs_f64();
+        if c > 0.0 {
+            self.total_estimate_time().as_secs_f64() / c
+        } else {
+            0.0
+        }
+    }
+
+    /// How many fields picked SZ / ZFP.
+    pub fn choice_counts(&self) -> (usize, usize) {
+        let sz = self.results.iter().filter(|r| r.choice == Some(Choice::Sz)).count();
+        let zfp = self.results.iter().filter(|r| r.choice == Some(Choice::Zfp)).count();
+        (sz, zfp)
+    }
+
+    /// Package results into an on-disk container.
+    pub fn to_container(&self) -> Container {
+        Container {
+            entries: self
+                .results
+                .iter()
+                .map(|r| Entry {
+                    name: r.name.clone(),
+                    selection: match r.choice {
+                        Some(Choice::Sz) => 0,
+                        Some(Choice::Zfp) => 1,
+                        None => 2,
+                    },
+                    payload: r.payload.clone(),
+                    raw_bytes: r.raw_bytes as u64,
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_result(name: &str, raw: usize, stored: usize, choice: Option<Choice>) -> FieldResult {
+        FieldResult {
+            name: name.into(),
+            choice,
+            payload: vec![0; stored],
+            raw_bytes: raw,
+            estimate_time: Duration::from_millis(1),
+            compress_time: Duration::from_millis(20),
+        }
+    }
+
+    #[test]
+    fn ratio_weighted_by_size() {
+        let report = RunReport::from_results(
+            Policy::RateDistortion,
+            1e-4,
+            vec![
+                fake_result("a", 1000, 100, Some(Choice::Sz)),
+                fake_result("b", 1000, 900, Some(Choice::Zfp)),
+            ],
+        );
+        assert!((report.overall_ratio() - 2.0).abs() < 1e-12);
+        assert_eq!(report.choice_counts(), (1, 1));
+    }
+
+    #[test]
+    fn overhead_fraction() {
+        let report = RunReport::from_results(
+            Policy::RateDistortion,
+            1e-4,
+            vec![fake_result("a", 10, 1, Some(Choice::Sz))],
+        );
+        assert!((report.overhead_frac() - 0.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn container_selection_bits() {
+        let report = RunReport::from_results(
+            Policy::RateDistortion,
+            1e-4,
+            vec![
+                fake_result("a", 10, 1, Some(Choice::Sz)),
+                fake_result("b", 10, 1, Some(Choice::Zfp)),
+                fake_result("c", 10, 10, None),
+            ],
+        );
+        let c = report.to_container();
+        assert_eq!(c.entries[0].selection, 0);
+        assert_eq!(c.entries[1].selection, 1);
+        assert_eq!(c.entries[2].selection, 2);
+    }
+}

@@ -1,0 +1,154 @@
+//! On-disk container: magic + version + per-field index (name, dims,
+//! selection bit, payload length) + payloads. This is the "compressed-
+//! byte stream {C_i} with selection bits {s_i}" of Algorithm 1's output,
+//! packaged for file-per-process POSIX I/O.
+
+use crate::codec::varint;
+use crate::{Error, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"ADAPTC01";
+
+/// One stored field.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Entry {
+    pub name: String,
+    /// Selection byte (0 = SZ, 1 = ZFP, 2 = raw).
+    pub selection: u8,
+    /// Self-describing payload (starts with the selection byte for
+    /// compressed entries; raw f32 LE bytes for selection = 2).
+    pub payload: Vec<u8>,
+    pub raw_bytes: u64,
+}
+
+/// A container of fields.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Container {
+    pub entries: Vec<Entry>,
+}
+
+impl Container {
+    /// Serialize to bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        varint::write_u64(&mut out, self.entries.len() as u64);
+        for e in &self.entries {
+            varint::write_str(&mut out, &e.name);
+            out.push(e.selection);
+            varint::write_u64(&mut out, e.raw_bytes);
+            varint::write_bytes(&mut out, &e.payload);
+        }
+        out
+    }
+
+    /// Parse from bytes.
+    pub fn from_bytes(buf: &[u8]) -> Result<Container> {
+        if buf.len() < 8 || &buf[..8] != MAGIC {
+            return Err(Error::Corrupt("bad container magic".into()));
+        }
+        let mut pos = 8usize;
+        let n = varint::read_u64(buf, &mut pos)? as usize;
+        let mut entries = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name = varint::read_str(buf, &mut pos)?;
+            let selection = *buf
+                .get(pos)
+                .ok_or_else(|| Error::Corrupt("truncated entry".into()))?;
+            pos += 1;
+            let raw_bytes = varint::read_u64(buf, &mut pos)?;
+            let payload = varint::read_bytes(buf, &mut pos)?.to_vec();
+            entries.push(Entry { name, selection, payload, raw_bytes });
+        }
+        if pos != buf.len() {
+            return Err(Error::Corrupt("trailing bytes in container".into()));
+        }
+        Ok(Container { entries })
+    }
+
+    /// Write to a file.
+    pub fn write_file(&self, path: impl AsRef<Path>) -> Result<()> {
+        let bytes = self.to_bytes();
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(&bytes)?;
+        Ok(())
+    }
+
+    /// Read from a file.
+    pub fn read_file(path: impl AsRef<Path>) -> Result<Container> {
+        let mut buf = Vec::new();
+        std::fs::File::open(path)?.read_to_end(&mut buf)?;
+        Container::from_bytes(&buf)
+    }
+
+    /// Total payload bytes.
+    pub fn stored_bytes(&self) -> u64 {
+        self.entries.iter().map(|e| e.payload.len() as u64).sum()
+    }
+
+    /// Total raw bytes represented.
+    pub fn raw_bytes(&self) -> u64 {
+        self.entries.iter().map(|e| e.raw_bytes).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Container {
+        Container {
+            entries: vec![
+                Entry {
+                    name: "CLDHGH".into(),
+                    selection: 0,
+                    payload: vec![0, 1, 2, 3],
+                    raw_bytes: 1000,
+                },
+                Entry {
+                    name: "U".into(),
+                    selection: 1,
+                    payload: vec![1, 9, 9],
+                    raw_bytes: 2000,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let c = sample();
+        let bytes = c.to_bytes();
+        assert_eq!(Container::from_bytes(&bytes).unwrap(), c);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let c = sample();
+        let path = std::env::temp_dir().join("adaptivec_store_test.bin");
+        c.write_file(&path).unwrap();
+        assert_eq!(Container::read_file(&path).unwrap(), c);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_rejected() {
+        let c = sample();
+        let mut bytes = c.to_bytes();
+        bytes[0] ^= 0xFF;
+        assert!(Container::from_bytes(&bytes).is_err());
+        let bytes2 = c.to_bytes();
+        assert!(Container::from_bytes(&bytes2[..bytes2.len() - 1]).is_err());
+        let mut bytes3 = c.to_bytes();
+        bytes3.push(0);
+        assert!(Container::from_bytes(&bytes3).is_err());
+    }
+
+    #[test]
+    fn totals() {
+        let c = sample();
+        assert_eq!(c.stored_bytes(), 7);
+        assert_eq!(c.raw_bytes(), 3000);
+    }
+}

@@ -1,0 +1,186 @@
+//! The [`Field`] abstraction: a named, dimensioned single-precision
+//! array — one "variable" of a scientific dataset, the unit at which
+//! the paper's selection algorithm operates.
+
+use crate::{Error, Result};
+
+/// Field dimensionality. Row-major storage; for `D3(nz, ny, nx)` the
+/// linear index is `(z * ny + y) * nx + x` (x fastest).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dims {
+    D1(usize),
+    D2(usize, usize),
+    D3(usize, usize, usize),
+}
+
+impl Dims {
+    /// Total number of elements.
+    #[inline]
+    pub fn len(&self) -> usize {
+        match *self {
+            Dims::D1(n) => n,
+            Dims::D2(ny, nx) => ny * nx,
+            Dims::D3(nz, ny, nx) => nz * ny * nx,
+        }
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Dimensionality (1, 2, or 3).
+    #[inline]
+    pub fn ndim(&self) -> usize {
+        match self {
+            Dims::D1(_) => 1,
+            Dims::D2(..) => 2,
+            Dims::D3(..) => 3,
+        }
+    }
+
+    /// Extents as a slice-friendly array, slowest-varying first,
+    /// padded with 1s: (nz, ny, nx).
+    #[inline]
+    pub fn extents(&self) -> [usize; 3] {
+        match *self {
+            Dims::D1(nx) => [1, 1, nx],
+            Dims::D2(ny, nx) => [1, ny, nx],
+            Dims::D3(nz, ny, nx) => [nz, ny, nx],
+        }
+    }
+
+    /// Serialize to (ndim, e0, e1, e2).
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        use crate::codec::varint::write_u64;
+        write_u64(out, self.ndim() as u64);
+        let e = self.extents();
+        match self.ndim() {
+            1 => write_u64(out, e[2] as u64),
+            2 => {
+                write_u64(out, e[1] as u64);
+                write_u64(out, e[2] as u64);
+            }
+            _ => {
+                write_u64(out, e[0] as u64);
+                write_u64(out, e[1] as u64);
+                write_u64(out, e[2] as u64);
+            }
+        }
+    }
+
+    pub fn decode(buf: &[u8], pos: &mut usize) -> Result<Dims> {
+        use crate::codec::varint::read_u64;
+        let ndim = read_u64(buf, pos)?;
+        Ok(match ndim {
+            1 => Dims::D1(read_u64(buf, pos)? as usize),
+            2 => Dims::D2(read_u64(buf, pos)? as usize, read_u64(buf, pos)? as usize),
+            3 => Dims::D3(
+                read_u64(buf, pos)? as usize,
+                read_u64(buf, pos)? as usize,
+                read_u64(buf, pos)? as usize,
+            ),
+            d => return Err(Error::Corrupt(format!("bad ndim {d}"))),
+        })
+    }
+}
+
+impl std::fmt::Display for Dims {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            Dims::D1(nx) => write!(f, "{nx}"),
+            Dims::D2(ny, nx) => write!(f, "{ny}x{nx}"),
+            Dims::D3(nz, ny, nx) => write!(f, "{nz}x{ny}x{nx}"),
+        }
+    }
+}
+
+/// One variable of a dataset.
+#[derive(Clone, Debug)]
+pub struct Field {
+    pub name: String,
+    pub dims: Dims,
+    pub data: Vec<f32>,
+}
+
+impl Field {
+    pub fn new(name: impl Into<String>, dims: Dims, data: Vec<f32>) -> Self {
+        let f = Field { name: name.into(), dims, data };
+        assert_eq!(
+            f.dims.len(),
+            f.data.len(),
+            "field '{}': dims {} != data len {}",
+            f.name,
+            f.dims,
+            f.data.len()
+        );
+        f
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Uncompressed size in bytes (f32).
+    #[inline]
+    pub fn raw_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    /// Value range of the data.
+    pub fn value_range(&self) -> f64 {
+        crate::metrics::value_range(&self.data)
+    }
+
+    /// Sanity check: finite values only (codecs require it).
+    pub fn validate(&self) -> Result<()> {
+        if self.data.iter().any(|x| !x.is_finite()) {
+            return Err(Error::InvalidArg(format!(
+                "field '{}' contains non-finite values",
+                self.name
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dims_len_and_ndim() {
+        assert_eq!(Dims::D1(10).len(), 10);
+        assert_eq!(Dims::D2(3, 4).len(), 12);
+        assert_eq!(Dims::D3(2, 3, 4).len(), 24);
+        assert_eq!(Dims::D3(2, 3, 4).ndim(), 3);
+    }
+
+    #[test]
+    fn dims_encode_roundtrip() {
+        for d in [Dims::D1(7), Dims::D2(1800, 3600), Dims::D3(100, 500, 500)] {
+            let mut buf = Vec::new();
+            d.encode(&mut buf);
+            let mut pos = 0;
+            assert_eq!(Dims::decode(&buf, &mut pos).unwrap(), d);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "dims")]
+    fn mismatched_field_panics() {
+        Field::new("bad", Dims::D1(5), vec![0.0; 4]);
+    }
+
+    #[test]
+    fn validate_rejects_nan() {
+        let f = Field::new("n", Dims::D1(2), vec![1.0, f32::NAN]);
+        assert!(f.validate().is_err());
+    }
+}

@@ -1,0 +1,222 @@
+//! Hurricane-Isabel-like dataset: 13 three-dimensional fields (QICE,
+//! PRECIP, U, V, W, ... per paper Table 1).
+//!
+//! The real Hurricane data is "relatively easy to compress" (paper
+//! §6.2): many near-zero microphysics fields plus coherent vortex
+//! velocity fields. We synthesize a Rankine-style vortex for U/V, an
+//! updraft field for W, and sparse/thresholded moisture fields, plus a
+//! couple of rough fields so ZFP wins somewhere.
+
+use super::field::{Dims, Field};
+use super::spectral::grf_3d;
+use crate::testing::Rng;
+
+const NAMES: [&str; 13] = [
+    "QICE", "QCLOUD", "QRAIN", "QSNOW", "QGRAUP", "QVAPOR", "PRECIP", "U", "V", "W",
+    "P", "TC", "CLOUD",
+];
+
+/// Grid shape per scale level (paper full scale: 100×500×500).
+pub fn shape(scale: u8) -> (usize, usize, usize) {
+    match scale {
+        0 => (8, 24, 24),
+        1 => (25, 125, 125),
+        _ => (100, 500, 500),
+    }
+}
+
+/// Generate the 13-field dataset.
+pub fn generate(seed: u64, scale: u8) -> Vec<Field> {
+    (0..NAMES.len())
+        .map(|i| generate_field_scaled(seed, i, scale))
+        .collect()
+}
+
+/// Generate one field at bench scale.
+pub fn generate_field(seed: u64, idx: usize) -> Field {
+    generate_field_scaled(seed, idx, 1)
+}
+
+/// Generate one Hurricane-like field by index (0..13).
+pub fn generate_field_scaled(seed: u64, idx: usize, scale: u8) -> Field {
+    let (nz, ny, nx) = shape(scale);
+    let mut rng = Rng::new(seed ^ (0x4002_0000 + idx as u64).wrapping_mul(0x9E37_79B9));
+    let name = NAMES[idx % NAMES.len()];
+    let n = nz * ny * nx;
+    let mut data = vec![0.0f32; n];
+
+    // Vortex center precesses with height; shared by the velocity fields.
+    let cx = nx as f64 / 2.0;
+    let cy = ny as f64 / 2.0;
+
+    match name {
+        // --- Vortex velocities: smooth, coherent -> SZ-friendly.
+        "U" | "V" => {
+            let turb = grf_3d(&mut rng, nz, ny, nx, 2.8);
+            let rmax = 0.15 * nx as f64; // eyewall radius
+            for z in 0..nz {
+                let drift = 3.0 * (z as f64 / nz as f64);
+                for y in 0..ny {
+                    for x in 0..nx {
+                        let dx = x as f64 - (cx + drift);
+                        let dy = y as f64 - cy;
+                        let r = (dx * dx + dy * dy).sqrt().max(1e-9);
+                        // Rankine vortex tangential speed.
+                        let vt = if r < rmax { 60.0 * r / rmax } else { 60.0 * rmax / r };
+                        let (tx, ty) = (-dy / r, dx / r);
+                        let i = (z * ny + y) * nx + x;
+                        let base = if name == "U" { vt * tx } else { vt * ty };
+                        data[i] = (base + 2.0 * turb[i] as f64) as f32;
+                    }
+                }
+            }
+        }
+        // --- Updraft: ring of convection around eyewall, moderate noise.
+        "W" => {
+            let turb = grf_3d(&mut rng, nz, ny, nx, 2.0);
+            let rmax = 0.15 * nx as f64;
+            for z in 0..nz {
+                for y in 0..ny {
+                    for x in 0..nx {
+                        let dx = x as f64 - cx;
+                        let dy = y as f64 - cy;
+                        let r = (dx * dx + dy * dy).sqrt();
+                        let ring = (-(r - rmax).powi(2) / (0.1 * nx as f64).powi(2)).exp();
+                        let i = (z * ny + y) * nx + x;
+                        data[i] = (8.0 * ring + 0.8 * turb[i] as f64) as f32;
+                    }
+                }
+            }
+        }
+        // --- Pressure: radial profile + smooth perturbation.
+        "P" => {
+            let g = grf_3d(&mut rng, nz, ny, nx, 3.2);
+            for z in 0..nz {
+                let zfrac = z as f64 / nz.max(1) as f64;
+                let p0 = 101_325.0 * (1.0 - 0.11 * zfrac);
+                for y in 0..ny {
+                    for x in 0..nx {
+                        let dx = x as f64 - cx;
+                        let dy = y as f64 - cy;
+                        let r = (dx * dx + dy * dy).sqrt();
+                        let drop = 6_000.0 * (-(r / (0.3 * nx as f64)).powi(2)).exp();
+                        let i = (z * ny + y) * nx + x;
+                        data[i] = (p0 - drop + 50.0 * g[i] as f64) as f32;
+                    }
+                }
+            }
+        }
+        // --- Temperature: lapse rate + warm core.
+        "TC" => {
+            let g = grf_3d(&mut rng, nz, ny, nx, 3.0);
+            for z in 0..nz {
+                let zfrac = z as f64 / nz.max(1) as f64;
+                for y in 0..ny {
+                    for x in 0..nx {
+                        let dx = x as f64 - cx;
+                        let dy = y as f64 - cy;
+                        let r = (dx * dx + dy * dy).sqrt();
+                        let core = 4.0 * (-(r / (0.12 * nx as f64)).powi(2)).exp();
+                        let i = (z * ny + y) * nx + x;
+                        data[i] = (28.0 - 75.0 * zfrac + core + 0.5 * g[i] as f64) as f32;
+                    }
+                }
+            }
+        }
+        // --- Moisture/vapor: smooth exponential decay with height.
+        "QVAPOR" => {
+            let g = grf_3d(&mut rng, nz, ny, nx, 2.7);
+            for z in 0..nz {
+                let zfrac = z as f64 / nz.max(1) as f64;
+                for y in 0..ny {
+                    for x in 0..nx {
+                        let i = (z * ny + y) * nx + x;
+                        let q = 0.02 * (-4.0 * zfrac).exp() * (1.0 + 0.2 * g[i] as f64);
+                        data[i] = q.max(0.0) as f32;
+                    }
+                }
+            }
+        }
+        // --- Rough cloud fraction: the ZFP-friendly field.
+        "CLOUD" => {
+            let g = grf_3d(&mut rng, nz, ny, nx, 1.0);
+            for i in 0..n {
+                let v = 0.5 + 0.4 * g[i] as f64 + 0.25 * rng.gauss();
+                data[i] = v.clamp(0.0, 1.0) as f32;
+            }
+        }
+        // --- PRECIP: rough sparse field (ZFP-competitive when dense).
+        "PRECIP" => {
+            let g = grf_3d(&mut rng, nz, ny, nx, 1.4);
+            for i in 0..n {
+                let x = g[i] as f64 + 0.3 * rng.gauss();
+                data[i] = if x > 0.2 { (x - 0.2) as f32 * 1e-2 } else { 0.0 };
+            }
+        }
+        // --- Hydrometeors (QICE, QCLOUD, ...): very sparse, highly
+        // compressible — these give Hurricane its high-CR character.
+        _ => {
+            let g = grf_3d(&mut rng, nz, ny, nx, 2.4);
+            let threshold = 1.1 + 0.1 * (idx % 5) as f64;
+            let scale = 10f64.powi(-(3 + (idx % 3) as i32));
+            for i in 0..n {
+                let x = g[i] as f64;
+                data[i] = if x > threshold {
+                    ((x - threshold) * scale) as f32
+                } else {
+                    0.0
+                };
+            }
+        }
+    }
+
+    Field::new(name, Dims::D3(nz, ny, nx), data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn field_count_and_validity() {
+        let fs = generate(2, 0);
+        assert_eq!(fs.len(), 13);
+        for f in &fs {
+            f.validate().unwrap();
+            assert_eq!(f.dims.ndim(), 3);
+        }
+    }
+
+    #[test]
+    fn hydrometeors_are_sparse() {
+        let fs = generate(2, 0);
+        let qice = fs.iter().find(|f| f.name == "QICE").unwrap();
+        let zeros = qice.data.iter().filter(|&&v| v == 0.0).count();
+        assert!(zeros as f64 > 0.7 * qice.len() as f64, "QICE should be sparse");
+    }
+
+    #[test]
+    fn vortex_velocity_antisymmetric() {
+        // U at mirrored y positions should have opposite tangential sign
+        // near the center (vortex structure sanity check).
+        let f = generate_field_scaled(3, 7, 0); // "U"
+        let (nz, ny, nx) = shape(0);
+        assert_eq!(f.dims, Dims::D3(nz, ny, nx));
+        let z = nz / 2;
+        let x = nx / 2;
+        let top = f.data[(z * ny + ny / 4) * nx + x];
+        let bot = f.data[(z * ny + 3 * ny / 4) * nx + x];
+        assert!(
+            (top > 0.0) != (bot > 0.0) || top.abs() < 1.0 || bot.abs() < 1.0,
+            "expected opposite-sign tangential flow: {top} vs {bot}"
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(
+            generate_field_scaled(7, 2, 0).data,
+            generate_field_scaled(7, 2, 0).data
+        );
+    }
+}

@@ -1,0 +1,56 @@
+//! Synthetic scientific datasets standing in for the paper's NYX
+//! (cosmology), CESM-ATM (climate) and Hurricane-Isabel data (see
+//! DESIGN.md §2 for the substitution argument).
+//!
+//! Each generator produces a list of named [`field::Field`]s whose
+//! *statistical* properties — spectral slope / smoothness, dynamic
+//! range, sparsity, symmetric prediction-error distributions — span the
+//! regimes where SZ wins and where ZFP wins, which is what drives the
+//! paper's selection experiments.
+
+pub mod atm;
+pub mod field;
+pub mod hurricane;
+pub mod nyx;
+pub mod spectral;
+
+pub use field::{Dims, Field};
+
+/// The three datasets of paper Table 1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dataset {
+    Nyx,
+    Atm,
+    Hurricane,
+}
+
+impl Dataset {
+    pub const ALL: [Dataset; 3] = [Dataset::Nyx, Dataset::Atm, Dataset::Hurricane];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dataset::Nyx => "NYX",
+            Dataset::Atm => "ATM",
+            Dataset::Hurricane => "Hurricane",
+        }
+    }
+
+    /// Generate all fields at the given scale (0 = unit-test tiny,
+    /// 1 = default bench scale, 2 = paper-shape full scale).
+    pub fn generate(&self, seed: u64, scale: u8) -> Vec<Field> {
+        match self {
+            Dataset::Nyx => nyx::generate(seed, scale),
+            Dataset::Atm => atm::generate(seed, scale),
+            Dataset::Hurricane => hurricane::generate(seed, scale),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Dataset> {
+        match s.to_ascii_lowercase().as_str() {
+            "nyx" => Some(Dataset::Nyx),
+            "atm" => Some(Dataset::Atm),
+            "hurricane" | "isabel" => Some(Dataset::Hurricane),
+            _ => None,
+        }
+    }
+}

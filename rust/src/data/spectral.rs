@@ -1,0 +1,292 @@
+//! Spectral synthesis machinery: an in-repo radix-2 FFT and Gaussian
+//! random field (GRF) generators with a tunable power-spectrum slope.
+//!
+//! Scientific fields are well modeled as realizations of random fields
+//! with power-law spectra P(k) ∝ k^(−β): large β → smooth fields where
+//! SZ's Lorenzo predictor shines; small β → rough fields where ZFP's
+//! block transform is competitive. Sweeping β across the fields of a
+//! generated dataset reproduces the paper's mixed SZ/ZFP selection
+//! landscape (Fig. 6).
+
+use crate::testing::Rng;
+
+/// In-place iterative radix-2 Cooley–Tukey FFT over interleaved complex
+/// values `(re, im)`. `n` must be a power of two. `inverse` applies the
+/// conjugate transform *without* the 1/n normalization (callers
+/// normalize once).
+pub fn fft(data: &mut [(f64, f64)], inverse: bool) {
+    let n = data.len();
+    assert!(n.is_power_of_two(), "fft size must be a power of two, got {n}");
+    if n <= 1 {
+        return;
+    }
+    // Bit-reversal permutation.
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            data.swap(i, j);
+        }
+    }
+    // Butterflies.
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * std::f64::consts::PI / len as f64;
+        let (wr, wi) = (ang.cos(), ang.sin());
+        let mut i = 0;
+        while i < n {
+            let (mut cr, mut ci) = (1.0f64, 0.0f64);
+            for k in 0..len / 2 {
+                let (ar, ai) = data[i + k];
+                let (br, bi) = data[i + k + len / 2];
+                let (tr, ti) = (br * cr - bi * ci, br * ci + bi * cr);
+                data[i + k] = (ar + tr, ai + ti);
+                data[i + k + len / 2] = (ar - tr, ai - ti);
+                let ncr = cr * wr - ci * wi;
+                ci = cr * wi + ci * wr;
+                cr = ncr;
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+}
+
+/// Next power of two ≥ n.
+#[inline]
+pub fn next_pow2(n: usize) -> usize {
+    n.next_power_of_two()
+}
+
+/// Generate a 2D Gaussian random field of shape (ny, nx) with spectrum
+/// P(k) ∝ k^(−beta), zero mean, unit variance (approximately).
+///
+/// Synthesis happens on a padded power-of-two grid; the requested shape
+/// is cropped out, so arbitrary (e.g. 1800×3600) extents work.
+pub fn grf_2d(rng: &mut Rng, ny: usize, nx: usize, beta: f64) -> Vec<f32> {
+    let py = next_pow2(ny.max(2));
+    let px = next_pow2(nx.max(2));
+    // Fill spectral domain with amplitude-scaled white noise.
+    let mut grid: Vec<(f64, f64)> = vec![(0.0, 0.0); py * px];
+    for ky in 0..py {
+        for kx in 0..px {
+            // Symmetric frequency coordinates.
+            let fy = if ky <= py / 2 { ky as f64 } else { (py - ky) as f64 } / py as f64;
+            let fx = if kx <= px / 2 { kx as f64 } else { (px - kx) as f64 } / px as f64;
+            let k = (fy * fy + fx * fx).sqrt();
+            if k == 0.0 {
+                continue; // zero the DC mode
+            }
+            let amp = k.powf(-beta / 2.0);
+            grid[ky * px + kx] = (rng.gauss() * amp, rng.gauss() * amp);
+        }
+    }
+    // Inverse transform rows then columns (separable 2D FFT).
+    ifft_2d(&mut grid, py, px);
+    // Crop + normalize to unit variance.
+    crop_normalize(&grid, py, px, ny, nx)
+}
+
+/// Generate a 3D GRF of shape (nz, ny, nx), spectrum P(k) ∝ k^(−beta).
+pub fn grf_3d(rng: &mut Rng, nz: usize, ny: usize, nx: usize, beta: f64) -> Vec<f32> {
+    let pz = next_pow2(nz.max(2));
+    let py = next_pow2(ny.max(2));
+    let px = next_pow2(nx.max(2));
+    let mut grid: Vec<(f64, f64)> = vec![(0.0, 0.0); pz * py * px];
+    for kz in 0..pz {
+        let fz = if kz <= pz / 2 { kz as f64 } else { (pz - kz) as f64 } / pz as f64;
+        for ky in 0..py {
+            let fy = if ky <= py / 2 { ky as f64 } else { (py - ky) as f64 } / py as f64;
+            for kx in 0..px {
+                let fx =
+                    if kx <= px / 2 { kx as f64 } else { (px - kx) as f64 } / px as f64;
+                let k = (fz * fz + fy * fy + fx * fx).sqrt();
+                if k == 0.0 {
+                    continue;
+                }
+                let amp = k.powf(-beta / 2.0);
+                grid[(kz * py + ky) * px + kx] = (rng.gauss() * amp, rng.gauss() * amp);
+            }
+        }
+    }
+    // Separable inverse FFT along x, then y, then z.
+    let mut scratch = vec![(0.0, 0.0); px.max(py).max(pz)];
+    for z in 0..pz {
+        for y in 0..py {
+            let row = &mut grid[(z * py + y) * px..(z * py + y + 1) * px];
+            fft(row, true);
+        }
+    }
+    for z in 0..pz {
+        for x in 0..px {
+            for y in 0..py {
+                scratch[y] = grid[(z * py + y) * px + x];
+            }
+            fft(&mut scratch[..py], true);
+            for y in 0..py {
+                grid[(z * py + y) * px + x] = scratch[y];
+            }
+        }
+    }
+    for y in 0..py {
+        for x in 0..px {
+            for z in 0..pz {
+                scratch[z] = grid[(z * py + y) * px + x];
+            }
+            fft(&mut scratch[..pz], true);
+            for z in 0..pz {
+                grid[(z * py + y) * px + x] = scratch[z];
+            }
+        }
+    }
+    // Crop + normalize.
+    let mut out = Vec::with_capacity(nz * ny * nx);
+    let mut sum = 0.0f64;
+    let mut sum2 = 0.0f64;
+    for z in 0..nz {
+        for y in 0..ny {
+            for x in 0..nx {
+                let v = grid[(z * py + y) * px + x].0;
+                sum += v;
+                sum2 += v * v;
+                out.push(v);
+            }
+        }
+    }
+    normalize_into_f32(out, sum, sum2)
+}
+
+fn ifft_2d(grid: &mut [(f64, f64)], py: usize, px: usize) {
+    for y in 0..py {
+        fft(&mut grid[y * px..(y + 1) * px], true);
+    }
+    let mut col = vec![(0.0, 0.0); py];
+    for x in 0..px {
+        for y in 0..py {
+            col[y] = grid[y * px + x];
+        }
+        fft(&mut col, true);
+        for y in 0..py {
+            grid[y * px + x] = col[y];
+        }
+    }
+}
+
+fn crop_normalize(grid: &[(f64, f64)], _py: usize, px: usize, ny: usize, nx: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(ny * nx);
+    let mut sum = 0.0f64;
+    let mut sum2 = 0.0f64;
+    for y in 0..ny {
+        for x in 0..nx {
+            let v = grid[y * px + x].0;
+            sum += v;
+            sum2 += v * v;
+            out.push(v);
+        }
+    }
+    normalize_into_f32(out, sum, sum2)
+}
+
+fn normalize_into_f32(vals: Vec<f64>, sum: f64, sum2: f64) -> Vec<f32> {
+    let n = vals.len() as f64;
+    let mean = sum / n;
+    let var = (sum2 / n - mean * mean).max(1e-300);
+    let inv_std = 1.0 / var.sqrt();
+    vals.into_iter().map(|v| ((v - mean) * inv_std) as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Naive O(n²) DFT for cross-checking the FFT.
+    fn dft(x: &[(f64, f64)], inverse: bool) -> Vec<(f64, f64)> {
+        let n = x.len();
+        let sign = if inverse { 1.0 } else { -1.0 };
+        (0..n)
+            .map(|k| {
+                let mut acc = (0.0, 0.0);
+                for (j, &(re, im)) in x.iter().enumerate() {
+                    let ang = sign * 2.0 * std::f64::consts::PI * (k * j) as f64 / n as f64;
+                    let (c, s) = (ang.cos(), ang.sin());
+                    acc.0 += re * c - im * s;
+                    acc.1 += re * s + im * c;
+                }
+                acc
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fft_matches_naive_dft() {
+        let mut rng = crate::testing::Rng::new(31);
+        for n in [2usize, 4, 8, 16, 64] {
+            let input: Vec<(f64, f64)> =
+                (0..n).map(|_| (rng.gauss(), rng.gauss())).collect();
+            let expected = dft(&input, false);
+            let mut actual = input.clone();
+            fft(&mut actual, false);
+            for (a, e) in actual.iter().zip(&expected) {
+                assert!((a.0 - e.0).abs() < 1e-9 && (a.1 - e.1).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn fft_ifft_roundtrip() {
+        let mut rng = crate::testing::Rng::new(32);
+        let n = 256;
+        let input: Vec<(f64, f64)> = (0..n).map(|_| (rng.gauss(), rng.gauss())).collect();
+        let mut x = input.clone();
+        fft(&mut x, false);
+        fft(&mut x, true);
+        for (a, b) in x.iter().zip(&input) {
+            assert!((a.0 / n as f64 - b.0).abs() < 1e-9);
+            assert!((a.1 / n as f64 - b.1).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn grf_2d_shape_and_moments() {
+        let mut rng = crate::testing::Rng::new(33);
+        let f = grf_2d(&mut rng, 50, 70, 3.0);
+        assert_eq!(f.len(), 3500);
+        let n = f.len() as f64;
+        let mean: f64 = f.iter().map(|&x| x as f64).sum::<f64>() / n;
+        let var: f64 = f.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn grf_smoothness_scales_with_beta() {
+        // Higher beta => smaller mean |gradient|.
+        let mut rng = crate::testing::Rng::new(34);
+        let rough = grf_2d(&mut rng, 64, 64, 1.0);
+        let smooth = grf_2d(&mut rng, 64, 64, 4.0);
+        let grad = |f: &[f32]| -> f64 {
+            let mut g = 0.0;
+            for y in 0..64 {
+                for x in 1..64 {
+                    g += (f[y * 64 + x] - f[y * 64 + x - 1]).abs() as f64;
+                }
+            }
+            g / (64.0 * 63.0)
+        };
+        assert!(grad(&smooth) < grad(&rough) * 0.5);
+    }
+
+    #[test]
+    fn grf_3d_shape() {
+        let mut rng = crate::testing::Rng::new(35);
+        let f = grf_3d(&mut rng, 10, 20, 30, 2.5);
+        assert_eq!(f.len(), 6000);
+        assert!(f.iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,232 @@
+//! The DCT codec: error-bounded blockwise-DCT compression of 1D/2D/3D
+//! f32 fields (SSEM-like; see module docs for the bound argument).
+
+use crate::codec::varint;
+use crate::data::field::Dims;
+use crate::sz::huffman_stage;
+use crate::sz::quant::{LinearQuantizer, ESCAPE};
+use crate::zfp::block::{self, block_size};
+use crate::zfp::transform::{ParametricBot, T_DCT2};
+use crate::{Error, Result};
+
+const MAGIC: u32 = 0x4443_5431; // "DCT1"
+
+/// DCT codec configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct DctConfig {
+    /// Quantization capacity (2n−1 bins + escape), as in SZ.
+    pub capacity: u32,
+}
+
+impl Default for DctConfig {
+    fn default() -> Self {
+        DctConfig { capacity: 65_535 }
+    }
+}
+
+/// The DCT compressor.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DctCompressor {
+    pub cfg: DctConfig,
+}
+
+/// Coefficient bin size that guarantees a pointwise bound `eb`.
+#[inline]
+pub fn coeff_delta(eb: f64, ndim: usize) -> f64 {
+    2.0 * eb / (block_size(ndim) as f64).sqrt()
+}
+
+impl DctCompressor {
+    pub fn new(cfg: DctConfig) -> Self {
+        DctCompressor { cfg }
+    }
+
+    /// Compress with an absolute pointwise error bound.
+    pub fn compress(&self, data: &[f32], dims: Dims, eb_abs: f64) -> Result<Vec<u8>> {
+        if eb_abs <= 0.0 || !eb_abs.is_finite() {
+            return Err(Error::InvalidArg(format!("bad error bound {eb_abs}")));
+        }
+        if dims.len() != data.len() || data.is_empty() {
+            return Err(Error::InvalidArg("dims/data mismatch or empty".into()));
+        }
+        let ndim = dims.ndim();
+        let bs = block_size(ndim);
+        let bot = ParametricBot::new(T_DCT2);
+        let q = LinearQuantizer::from_error_bound(coeff_delta(eb_abs, ndim) / 2.0, self.cfg.capacity);
+
+        let nblocks = block::num_blocks(dims);
+        let mut symbols: Vec<u32> = Vec::with_capacity(nblocks * bs);
+        let mut literals: Vec<u8> = Vec::new();
+        let mut fblock = vec![0.0f32; bs];
+        let mut dblock = vec![0.0f64; bs];
+
+        for coords in block::block_coords(dims) {
+            block::gather(data, dims, coords, &mut fblock);
+            for (d, &f) in dblock.iter_mut().zip(&fblock) {
+                *d = f as f64;
+            }
+            bot.forward(&mut dblock, ndim);
+            for &c in dblock.iter() {
+                match q.quantize(c) {
+                    Some(sym) => symbols.push(sym),
+                    None => {
+                        symbols.push(ESCAPE);
+                        literals.extend_from_slice(&(c as f32).to_le_bytes());
+                    }
+                }
+            }
+        }
+
+        let huff = huffman_stage::encode_symbols(&symbols)?;
+        let mut out = Vec::with_capacity(huff.len() + literals.len() + 32);
+        varint::write_u64(&mut out, MAGIC as u64);
+        dims.encode(&mut out);
+        varint::write_f64(&mut out, eb_abs);
+        varint::write_u64(&mut out, self.cfg.capacity as u64);
+        varint::write_bytes(&mut out, &huff);
+        varint::write_bytes(&mut out, &literals);
+        Ok(out)
+    }
+
+    /// Decompress.
+    pub fn decompress(&self, buf: &[u8]) -> Result<(Vec<f32>, Dims)> {
+        let mut pos = 0usize;
+        let magic = varint::read_u64(buf, &mut pos)?;
+        if magic != MAGIC as u64 {
+            return Err(Error::Corrupt(format!("bad DCT magic {magic:#x}")));
+        }
+        let dims = Dims::decode(buf, &mut pos)?;
+        let eb_abs = varint::read_f64(buf, &mut pos)?;
+        if eb_abs <= 0.0 || !eb_abs.is_finite() {
+            return Err(Error::Corrupt(format!("bad bound {eb_abs}")));
+        }
+        let capacity = varint::read_u64(buf, &mut pos)? as u32;
+        if capacity < 3 {
+            return Err(Error::Corrupt("bad capacity".into()));
+        }
+        let huff = varint::read_bytes(buf, &mut pos)?;
+        let literals = varint::read_bytes(buf, &mut pos)?;
+
+        let ndim = dims.ndim();
+        let bs = block_size(ndim);
+        let bot = ParametricBot::new(T_DCT2);
+        let q = LinearQuantizer::from_error_bound(coeff_delta(eb_abs, ndim) / 2.0, capacity);
+
+        let mut hpos = 0;
+        let symbols = huffman_stage::decode_symbols(huff, &mut hpos)?;
+        let nblocks = block::num_blocks(dims);
+        if symbols.len() != nblocks * bs {
+            return Err(Error::Corrupt(format!(
+                "symbol count {} != {}",
+                symbols.len(),
+                nblocks * bs
+            )));
+        }
+
+        let mut out = vec![0.0f32; dims.len()];
+        let mut dblock = vec![0.0f64; bs];
+        let mut fblock = vec![0.0f32; bs];
+        let mut lit_pos = 0usize;
+        for (bi, coords) in block::block_coords(dims).enumerate() {
+            for (j, d) in dblock.iter_mut().enumerate() {
+                let sym = symbols[bi * bs + j];
+                *d = if sym == ESCAPE {
+                    if lit_pos + 4 > literals.len() {
+                        return Err(Error::Corrupt("literal stream exhausted".into()));
+                    }
+                    let mut b = [0u8; 4];
+                    b.copy_from_slice(&literals[lit_pos..lit_pos + 4]);
+                    lit_pos += 4;
+                    f32::from_le_bytes(b) as f64
+                } else {
+                    q.reconstruct(sym)
+                };
+            }
+            bot.inverse(&mut dblock, ndim);
+            for (f, &d) in fblock.iter_mut().zip(dblock.iter()) {
+                *f = d as f32;
+            }
+            block::scatter(&mut out, dims, coords, &fblock);
+        }
+        Ok((out, dims))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::spectral::{grf_2d, grf_3d};
+    use crate::metrics::error_stats;
+    use crate::testing::Rng;
+
+    fn roundtrip_check(data: &[f32], dims: Dims, eb: f64) -> usize {
+        let dct = DctCompressor::default();
+        let comp = dct.compress(data, dims, eb).unwrap();
+        let (recon, rdims) = dct.decompress(&comp).unwrap();
+        assert_eq!(rdims, dims);
+        let stats = error_stats(data, &recon);
+        assert!(
+            stats.max_abs_err <= eb * (1.0 + 1e-6),
+            "max err {} > bound {eb}",
+            stats.max_abs_err
+        );
+        comp.len()
+    }
+
+    #[test]
+    fn roundtrip_2d() {
+        let mut rng = Rng::new(201);
+        let f = grf_2d(&mut rng, 64, 96, 2.5);
+        let bytes = roundtrip_check(&f, Dims::D2(64, 96), 1e-3);
+        assert!(bytes < f.len() * 3);
+    }
+
+    #[test]
+    fn roundtrip_3d_partial_blocks() {
+        let mut rng = Rng::new(202);
+        let f = grf_3d(&mut rng, 9, 10, 11, 2.0);
+        roundtrip_check(&f, Dims::D3(9, 10, 11), 1e-2);
+    }
+
+    #[test]
+    fn roundtrip_1d() {
+        let f: Vec<f32> = (0..4000).map(|i| (i as f32 * 0.02).cos()).collect();
+        roundtrip_check(&f, Dims::D1(4000), 1e-4);
+    }
+
+    #[test]
+    fn smooth_blocks_compress_well() {
+        // Pure low-frequency content: DCT concentrates energy in DC,
+        // all other coefficients quantize to the zero bin.
+        let (ny, nx) = (64, 64);
+        let f: Vec<f32> = (0..ny * nx)
+            .map(|i| {
+                let (y, x) = (i / nx, i % nx);
+                ((y as f32 / 64.0).sin() + (x as f32 / 64.0).cos()) * 10.0
+            })
+            .collect();
+        let bytes = roundtrip_check(&f, Dims::D2(ny, nx), 1e-2);
+        assert!(bytes * 4 < f.len() * 4, "ratio {} too low", f.len() as f64 * 4.0 / bytes as f64);
+    }
+
+    #[test]
+    fn tighter_bound_bigger_stream() {
+        let mut rng = Rng::new(203);
+        let f = grf_2d(&mut rng, 48, 48, 2.0);
+        let dct = DctCompressor::default();
+        let loose = dct.compress(&f, Dims::D2(48, 48), 1e-2).unwrap();
+        let tight = dct.compress(&f, Dims::D2(48, 48), 1e-5).unwrap();
+        assert!(tight.len() > loose.len());
+    }
+
+    #[test]
+    fn rejects_bad_args_and_corruption() {
+        let dct = DctCompressor::default();
+        assert!(dct.compress(&[1.0], Dims::D1(1), 0.0).is_err());
+        assert!(dct.compress(&[], Dims::D1(0), 1e-3).is_err());
+        let comp = dct.compress(&[1.0; 64], Dims::D2(8, 8), 1e-3).unwrap();
+        let mut bad = comp.clone();
+        bad[0] ^= 0xFF;
+        assert!(dct.decompress(&bad).is_err());
+    }
+}

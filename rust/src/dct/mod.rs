@@ -1,0 +1,19 @@
+//! SSEM-style DCT block compressor — the paper's §7 future-work
+//! extension ("extend our optimization solution to more
+//! error-controlled lossy compression techniques ... and block-based
+//! transformations"), built from the same Stage decomposition:
+//!
+//! * Stage I — blockwise orthogonal DCT-II (the T(1/4) member of the
+//!   §4.2 parametric family) on 4ⁿ blocks;
+//! * Stage II — static linear quantization of coefficients with bin
+//!   size δ_c = 2·eb/√(4ⁿ): orthogonality gives the pointwise
+//!   guarantee |x̃−x|∞ ≤ ‖e_coef‖₂ ≤ (δ_c/2)·√(4ⁿ) = eb;
+//! * Stage III — canonical Huffman (shared with SZ).
+//!
+//! Its quality estimator reuses the §5.1 static-quantization machinery
+//! (entropy bit-rate + closed-form PSNR), so the online selector can
+//! rank it against SZ and ZFP — see [`crate::estimator::multiway`].
+
+pub mod compressor;
+
+pub use compressor::{DctCompressor, DctConfig};

@@ -1,0 +1,28 @@
+//! The paper's contribution: online, low-overhead estimation of SZ and
+//! ZFP compression quality (bit-rate + PSNR) from a small blockwise
+//! sample, and rate-distortion-optimal selection between the two
+//! (Algorithm 1).
+//!
+//! * [`sampling`] — Step 1: uniform blockwise sampling (rate r_sp) and
+//!   pointwise EC subsampling (rate r_sp^ec).
+//! * [`pdf`] — approximate probability density of prediction errors.
+//! * [`sz_model`] — Eqs. 6/9/11: entropy-based bit-rate (+0.5 offset)
+//!   and closed-form PSNR for linear quantization.
+//! * [`zfp_model`] — §5.2: significant-bit staircase interpolation
+//!   (n̄_sb) for bit-rate, sampled truncation error for PSNR.
+//! * [`quant_models`] — §5.1.4 closed forms for log-scale and
+//!   equal-probability quantization (analysis/ablations).
+//! * [`selector`] — Algorithm 1 + the compression front end.
+//! * [`eval`] — ground-truth measurement helpers used by the Table 2–5
+//!   benches.
+
+pub mod eval;
+pub mod multiway;
+pub mod pdf;
+pub mod quant_models;
+pub mod sampling;
+pub mod selector;
+pub mod sz_model;
+pub mod zfp_model;
+
+pub use selector::{AutoSelector, Choice, SelectorConfig};

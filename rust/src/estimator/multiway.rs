@@ -1,0 +1,285 @@
+//! Multi-way online selection — the paper's §7 future-work extension:
+//! rank **three** error-bounded compressors (SZ, ZFP, DCT/SSEM) per
+//! field at iso-PSNR and pick the smallest estimated bit-rate.
+//!
+//! DCT is a static-quantization transform coder, so its estimate
+//! reuses the §5.1 machinery on *DCT coefficients* (instead of
+//! prediction errors): sample blocks → DCT → coefficient PDF →
+//! Eq. 9 entropy bit-rate; PSNR is closed-form in the coefficient bin
+//! size by Theorem 3 (orthogonal transform preserves MSE).
+
+use super::pdf::ErrorPdf;
+use super::sampling::{sample_blocks, BlockSample};
+use super::selector::SelectorConfig;
+use super::{sz_model, zfp_model};
+use crate::data::field::{Dims, Field};
+use crate::dct::compressor::{coeff_delta, DctCompressor};
+use crate::sz::SzCompressor;
+use crate::zfp::block::{self, block_size};
+use crate::zfp::transform::{ParametricBot, T_DCT2};
+use crate::{Error, Result};
+
+/// Three-way codec choice (container selection bytes 0/1/3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Codec3 {
+    Sz,
+    Zfp,
+    Dct,
+}
+
+impl Codec3 {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Codec3::Sz => "SZ",
+            Codec3::Zfp => "ZFP",
+            Codec3::Dct => "DCT",
+        }
+    }
+}
+
+/// Per-codec estimates at the shared target PSNR.
+#[derive(Clone, Copy, Debug)]
+pub struct Estimates3 {
+    pub br_sz: f64,
+    pub br_zfp: f64,
+    pub br_dct: f64,
+    pub psnr_target: f64,
+    pub eb_sz: f64,
+    pub eb_dct: f64,
+    pub eb_zfp: f64,
+}
+
+/// Estimate the DCT codec's bit-rate from sampled blocks at a given
+/// coefficient bin size (Eq. 9 applied to DCT coefficients).
+pub fn estimate_dct_bitrate(
+    data: &[f32],
+    dims: Dims,
+    sample: &BlockSample,
+    delta_c: f64,
+    capacity: u32,
+    field_len: usize,
+) -> f64 {
+    let ndim = dims.ndim();
+    let bs = block_size(ndim);
+    let bot = ParametricBot::new(T_DCT2);
+    let mut fblock = vec![0.0f32; bs];
+    let mut dblock = vec![0.0f64; bs];
+    let mut coeffs: Vec<f32> = Vec::with_capacity(sample.blocks.len() * bs);
+    for &coords in &sample.blocks {
+        block::gather(data, dims, coords, &mut fblock);
+        for (d, &f) in dblock.iter_mut().zip(&fblock) {
+            *d = f as f64;
+        }
+        bot.forward(&mut dblock, ndim);
+        coeffs.extend(dblock.iter().map(|&c| c as f32));
+    }
+    let pdf = ErrorPdf::build(&coeffs, delta_c, capacity);
+    sz_model::bit_rate_from_pdf(&pdf, field_len)
+}
+
+/// The 3-way selector.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MultiSelector {
+    pub cfg: SelectorConfig,
+}
+
+impl MultiSelector {
+    pub fn new(cfg: SelectorConfig) -> Self {
+        MultiSelector { cfg }
+    }
+
+    /// Algorithm 1, extended: ZFP anchors the target PSNR; SZ and DCT
+    /// derive their iso-PSNR bin sizes; smallest estimated BR wins.
+    pub fn select(&self, field: &Field, eb_rel: f64) -> Result<(Codec3, Estimates3)> {
+        let vr = field.value_range();
+        let eb = if vr > 0.0 { eb_rel * vr } else { eb_rel };
+        if eb <= 0.0 || !eb.is_finite() {
+            return Err(Error::InvalidArg(format!("bad bound {eb}")));
+        }
+        let ndim = field.dims.ndim();
+        let sample = sample_blocks(field.dims, self.cfg.r_sp);
+
+        let zfp_est =
+            zfp_model::estimate(&field.data, field.dims, &sample, eb, vr, self.cfg.zfp_model);
+
+        // Iso-PSNR bin sizes (Eq. 10 inversion); clamp to the user
+        // bound so pointwise guarantees never loosen.
+        let delta_sz = if zfp_est.psnr.is_finite() && vr > 0.0 {
+            sz_model::delta_from_psnr(zfp_est.psnr, vr).min(2.0 * eb)
+        } else {
+            2.0 * eb
+        };
+        // DCT quantizes coefficients; Theorem 3 keeps MSE equal across
+        // the transform, so the same Eq. 10 bin size applies to the
+        // coefficient quantizer directly. Its pointwise-safety cap is
+        // the coefficient delta for the user bound.
+        let delta_dct = delta_sz.min(coeff_delta(eb, ndim));
+
+        let sz_est = sz_model::estimate(
+            &field.data,
+            field.dims,
+            &sample,
+            delta_sz,
+            self.cfg.capacity,
+            vr,
+        );
+        let br_dct = estimate_dct_bitrate(
+            &field.data,
+            field.dims,
+            &sample,
+            delta_dct,
+            self.cfg.capacity,
+            field.len(),
+        );
+
+        let est = Estimates3 {
+            br_sz: sz_est.bit_rate,
+            br_zfp: zfp_est.bit_rate,
+            br_dct,
+            psnr_target: zfp_est.psnr,
+            eb_sz: delta_sz / 2.0,
+            // The DCT codec takes a *pointwise* bound and derives its
+            // own coefficient delta; invert coeff_delta.
+            eb_dct: delta_dct * (block_size(ndim) as f64).sqrt() / 2.0,
+            eb_zfp: eb,
+        };
+        let choice = if est.br_sz <= est.br_zfp && est.br_sz <= est.br_dct {
+            Codec3::Sz
+        } else if est.br_zfp <= est.br_dct {
+            Codec3::Zfp
+        } else {
+            Codec3::Dct
+        };
+        Ok((choice, est))
+    }
+
+    /// Select + compress; container = selection byte + codec stream.
+    pub fn compress(&self, field: &Field, eb_rel: f64) -> Result<(Codec3, Vec<u8>)> {
+        let (choice, est) = self.select(field, eb_rel)?;
+        let payload = match choice {
+            Codec3::Sz => SzCompressor::new(self.cfg.sz).compress(
+                &field.data,
+                field.dims,
+                est.eb_sz.max(f64::MIN_POSITIVE),
+            )?,
+            Codec3::Zfp => crate::zfp::ZfpCompressor::new(self.cfg.zfp).compress(
+                &field.data,
+                field.dims,
+                est.eb_zfp,
+            )?,
+            Codec3::Dct => DctCompressor::default().compress(
+                &field.data,
+                field.dims,
+                est.eb_dct.max(f64::MIN_POSITIVE),
+            )?,
+        };
+        let mut container = Vec::with_capacity(payload.len() + 1);
+        container.push(match choice {
+            Codec3::Sz => 0u8,
+            Codec3::Zfp => 1,
+            Codec3::Dct => 3,
+        });
+        container.extend_from_slice(&payload);
+        Ok((choice, container))
+    }
+
+    /// Decompress any 3-way container.
+    pub fn decompress(&self, container: &[u8]) -> Result<(Vec<f32>, Dims)> {
+        let sel = *container
+            .first()
+            .ok_or_else(|| Error::Corrupt("empty container".into()))?;
+        let payload = &container[1..];
+        match sel {
+            0 => SzCompressor::new(self.cfg.sz).decompress(payload),
+            1 => crate::zfp::ZfpCompressor::new(self.cfg.zfp).decompress(payload),
+            3 => DctCompressor::default().decompress(payload),
+            b => Err(Error::Corrupt(format!("bad selection byte {b}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{atm, hurricane};
+    use crate::metrics::error_stats;
+
+    #[test]
+    fn three_way_roundtrip_respects_bound() {
+        let sel = MultiSelector::default();
+        for idx in [0usize, 4, 7] {
+            let f = atm::generate_field_scaled(31, idx, 0);
+            let vr = f.value_range();
+            let (choice, cont) = sel.compress(&f, 1e-3).unwrap();
+            let (recon, _) = sel.decompress(&cont).unwrap();
+            let stats = error_stats(&f.data, &recon);
+            assert!(
+                stats.max_abs_err <= 1e-3 * vr * (1.0 + 1e-6),
+                "idx {idx} ({}): {} > {}",
+                choice.name(),
+                stats.max_abs_err,
+                1e-3 * vr
+            );
+        }
+    }
+
+    #[test]
+    fn never_worse_than_two_way_by_much() {
+        // Adding a candidate can only improve the *estimated* pick; on
+        // real data the 3-way pick's bit-rate must be close to or
+        // better than the 2-way pick.
+        let sel3 = MultiSelector::default();
+        let sel2 = crate::estimator::selector::AutoSelector::default();
+        let mut total3 = 0usize;
+        let mut total2 = 0usize;
+        for idx in 0..10 {
+            let f = hurricane::generate_field_scaled(31, idx, 0);
+            if f.value_range() <= 0.0 {
+                continue;
+            }
+            let (_, c3) = sel3.compress(&f, 1e-3).unwrap();
+            let out2 = sel2.compress(&f, 1e-3).unwrap();
+            total3 += c3.len();
+            total2 += out2.container.len();
+        }
+        assert!(
+            (total3 as f64) < 1.15 * total2 as f64,
+            "3-way {total3} much worse than 2-way {total2}"
+        );
+    }
+
+    #[test]
+    fn dct_wins_on_oscillatory_fields() {
+        // A *multiplicative* band-limited field: additively separable
+        // patterns are in 2D-Lorenzo's null space, so use cos·sin —
+        // prediction struggles while the block DCT stays compact. The
+        // 3-way selector should rank DCT competitively (estimated BR
+        // within 2x of the winner).
+        let (ny, nx) = (64, 64);
+        let data: Vec<f32> = (0..ny * nx)
+            .map(|i| {
+                let (y, x) = (i / nx, i % nx);
+                (x as f32 * 0.8).cos() * (y as f32 * 0.8).sin() * 5.0
+            })
+            .collect();
+        let f = crate::data::field::Field::new("osc", Dims::D2(ny, nx), data);
+        let sel = MultiSelector::default();
+        let (_, est) = sel.select(&f, 1e-4).unwrap();
+        let best = est.br_sz.min(est.br_zfp).min(est.br_dct);
+        assert!(
+            est.br_dct < 2.0 * best,
+            "DCT should be competitive: {est:?}"
+        );
+    }
+
+    #[test]
+    fn estimates_positive_and_bounded() {
+        let sel = MultiSelector::default();
+        let f = atm::generate_field_scaled(33, 2, 0);
+        let (_, est) = sel.select(&f, 1e-4).unwrap();
+        for br in [est.br_sz, est.br_zfp, est.br_dct] {
+            assert!(br > 0.0 && br < 64.0, "{est:?}");
+        }
+        assert!(est.eb_sz <= est.eb_zfp * (1.0 + 1e-12));
+    }
+}

@@ -1,0 +1,263 @@
+//! Approximate probability density of Stage-I transformed data
+//! (prediction errors), built from the sampled points (paper Fig. 4,
+//! §5.1, memory-overhead analysis §6.3.2).
+//!
+//! The PDF is held as a histogram over the *quantization bins* directly
+//! (width δ, centered on zero), so the Eq. 6/9 entropy estimate is an
+//! exact sum over histogram probabilities: with P(mᵢ) = Pᵢ/δ,
+//! −Σ δ·P(mᵢ)·log2(δ·P(mᵢ)) = −Σ Pᵢ·log2 Pᵢ.
+
+/// Histogram of prediction errors over 2n−1 linear quantization bins
+/// plus out-of-range (escape) mass.
+#[derive(Clone, Debug)]
+pub struct ErrorPdf {
+    /// Bin width δ.
+    pub delta: f64,
+    /// Counts per bin; index n−1 is the zero-centered bin.
+    pub counts: Vec<u64>,
+    /// Samples falling outside the binned range ("unpredictable").
+    pub escape_count: u64,
+    /// Total samples.
+    pub total: u64,
+}
+
+impl ErrorPdf {
+    /// Build from prediction errors with `capacity` bins (2n−1, odd) of
+    /// width `delta`.
+    pub fn build(errors: &[f32], delta: f64, capacity: u32) -> Self {
+        assert!(delta > 0.0 && delta.is_finite());
+        assert!(capacity >= 3);
+        let n = (capacity / 2) as i64; // bins: indices 0..2n-2, center n-1
+        let nbins = (2 * n - 1) as usize;
+        let mut counts = vec![0u64; nbins];
+        let mut escape = 0u64;
+        let inv_delta = 1.0 / delta;
+        for &e in errors {
+            let q = (e as f64 * inv_delta).round();
+            if q.abs() < n as f64 {
+                counts[(q as i64 + n - 1) as usize] += 1;
+            } else {
+                escape += 1;
+            }
+        }
+        ErrorPdf { delta, counts, escape_count: escape, total: errors.len() as u64 }
+    }
+
+    /// Probability of the escape symbol.
+    pub fn escape_prob(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.escape_count as f64 / self.total as f64
+        }
+    }
+
+    /// Shannon entropy (bits/value) of the bin distribution, escape
+    /// included as one extra symbol — Eq. 5 of the paper.
+    pub fn entropy(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let n = self.total as f64;
+        let mut h = 0.0;
+        for &c in self.counts.iter().chain(std::iter::once(&self.escape_count)) {
+            if c > 0 {
+                let p = c as f64 / n;
+                h -= p * p.log2();
+            }
+        }
+        h
+    }
+
+    /// Expected Stage-II MSE under midpoint reconstruction — Eq. 7/8's
+    /// (1/12)·Σ δᵢ³·P(mᵢ) specialised to equal bins: δ²/12 · P(in-range).
+    pub fn expected_mse(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let in_range = (self.total - self.escape_count) as f64 / self.total as f64;
+        self.delta * self.delta / 12.0 * in_range
+    }
+
+    /// Number of occupied bins (observed symbol richness k_m).
+    pub fn occupied_bins(&self) -> usize {
+        self.counts.iter().filter(|&&c| c > 0).count()
+            + (self.escape_count > 0) as usize
+    }
+
+    /// Extrapolate (entropy bits/value, distinct-symbol count) from the
+    /// m-point sample to the full field of `field_len` points.
+    ///
+    /// A 5% sample of a heavy-tailed alphabet sees only a fraction of
+    /// the symbols (plug-in entropy is capped at log2(m)), yet the
+    /// Huffman table and code lengths scale with the *full-size*
+    /// alphabet. Model: the sampled tail behaves as K equally-likely
+    /// bins under Poisson occupancy — fit K from k_m = K·(1−e^(−m/K)),
+    /// then k_N = K·(1−e^(−N/K)). Entropy splits into a well-observed
+    /// head (counts ≥ 2, plug-in) and the singleton mass u = f1/m
+    /// spread over the extrapolated tail. For well-sampled (smooth)
+    /// fields f1 ≈ 0 and K ≈ k_m, so both quantities reduce to the
+    /// plug-in values — the regime where the paper's +0.5 offset was
+    /// calibrated stays untouched.
+    /// Method: prediction errors follow a smooth continuous density, so
+    /// we estimate the density on *coarse* bins of g = ⌈N/m⌉ fine bins
+    /// (where the sample has meaningful counts), then refine: a smooth
+    /// density is locally flat, so coarse mass q_j spreads uniformly
+    /// over its g sub-bins — H gains q_j·log2(g) and occupancy follows
+    /// Poisson filling. Coarse bins whose sub-structure *is* observable
+    /// (count ≫ occupied sub-bins: point masses like saturated zeros)
+    /// keep their fine plug-in contribution instead.
+    pub fn extrapolate(&self, field_len: usize) -> (f64, f64) {
+        if self.total == 0 {
+            return (0.0, 0.0);
+        }
+        let m = self.total as f64;
+        let n = field_len as f64;
+        let nb = self.counts.len();
+        let capacity = (nb + 1) as f64;
+        let g = ((n / m).ceil() as usize).max(1);
+
+        let mut h = 0.0f64;
+        let mut k_n = 0.0f64;
+        let mut j = 0usize;
+        while j < nb {
+            let hi = (j + g).min(nb);
+            let c_j: u64 = self.counts[j..hi].iter().sum();
+            if c_j > 0 {
+                let s_j = self.counts[j..hi].iter().filter(|&&c| c > 0).count();
+                let q_j = c_j as f64 / m;
+                // Observable sub-structure: average ≥ 3 samples per
+                // occupied fine bin (point masses, well-sampled cores).
+                if c_j as usize >= 3 * s_j.max(1) && s_j >= 1 {
+                    for &c in &self.counts[j..hi] {
+                        if c > 0 {
+                            let p = c as f64 / m;
+                            h -= p * p.log2();
+                        }
+                    }
+                    k_n += s_j as f64;
+                } else {
+                    // Unobservable: assume locally flat density.
+                    let width = (hi - j) as f64;
+                    h += q_j * (width / q_j).log2();
+                    // Poisson occupancy of sub-bins at N draws:
+                    // λ per sub-bin = N·q_j/width.
+                    let lam = n * q_j / width;
+                    k_n += width * (1.0 - (-lam).exp());
+                }
+            }
+            j = hi;
+        }
+        // Escape symbol contributes as one plug-in symbol.
+        if self.escape_count > 0 {
+            let p = self.escape_count as f64 / m;
+            h -= p * p.log2();
+            k_n += 1.0;
+        }
+        let h = h.min(capacity.min(n).log2()).max(0.0);
+        let k_n = k_n.min(capacity).min(n);
+        (h, k_n)
+    }
+
+    /// Measure of symmetry: |P(left wing) − P(right wing)| (paper
+    /// assumes symmetric pred-error distributions; tested on our data).
+    pub fn asymmetry(&self) -> f64 {
+        let mid = self.counts.len() / 2;
+        let left: u64 = self.counts[..mid].iter().sum();
+        let right: u64 = self.counts[mid + 1..].iter().sum();
+        if self.total == 0 {
+            return 0.0;
+        }
+        (left as f64 - right as f64).abs() / self.total as f64
+    }
+
+    /// Downsampled histogram series for plotting (Fig. 4): returns
+    /// (bin center, probability) pairs for `resolution` aggregated bins.
+    pub fn series(&self, resolution: usize) -> Vec<(f64, f64)> {
+        let nb = self.counts.len();
+        let group = nb.div_ceil(resolution.max(1));
+        let n = (nb + group - 1) / group;
+        let center = (nb / 2) as f64;
+        (0..n)
+            .map(|g| {
+                let lo = g * group;
+                let hi = (lo + group).min(nb);
+                let c: u64 = self.counts[lo..hi].iter().sum();
+                let mid_bin = (lo + hi) as f64 / 2.0 - center;
+                (
+                    mid_bin * self.delta,
+                    c as f64 / self.total.max(1) as f64,
+                )
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::Rng;
+
+    #[test]
+    fn gaussian_errors_are_centered_and_symmetric() {
+        let mut rng = Rng::new(131);
+        let errs: Vec<f32> = (0..100_000).map(|_| (rng.gauss() * 0.01) as f32).collect();
+        let pdf = ErrorPdf::build(&errs, 0.002, 65535);
+        assert_eq!(pdf.escape_count, 0);
+        assert!(pdf.asymmetry() < 0.01, "asymmetry {}", pdf.asymmetry());
+        // Center bin should be the mode.
+        let center = pdf.counts.len() / 2;
+        let max_idx = pdf
+            .counts
+            .iter()
+            .enumerate()
+            .max_by_key(|&(_, &c)| c)
+            .unwrap()
+            .0;
+        assert!((max_idx as i64 - center as i64).abs() <= 1);
+    }
+
+    #[test]
+    fn entropy_bounds() {
+        let mut rng = Rng::new(132);
+        let errs: Vec<f32> = (0..50_000).map(|_| (rng.gauss() * 0.01) as f32).collect();
+        let pdf = ErrorPdf::build(&errs, 0.002, 65535);
+        let h = pdf.entropy();
+        assert!(h > 0.0 && h < 16.0, "entropy {h}");
+        // Wider bins -> lower entropy.
+        let pdf_wide = ErrorPdf::build(&errs, 0.02, 65535);
+        assert!(pdf_wide.entropy() < h);
+    }
+
+    #[test]
+    fn escape_mass_counted() {
+        let errs = vec![1000.0f32; 100];
+        let pdf = ErrorPdf::build(&errs, 0.001, 15); // range ±7δ
+        assert_eq!(pdf.escape_count, 100);
+        assert_eq!(pdf.escape_prob(), 1.0);
+        assert_eq!(pdf.entropy(), 0.0); // single (escape) symbol
+    }
+
+    #[test]
+    fn expected_mse_uniform_in_bin() {
+        // All errors uniform in the central bin: MSE ≈ δ²/12.
+        let mut rng = Rng::new(133);
+        let delta = 0.1;
+        let errs: Vec<f32> = (0..100_000)
+            .map(|_| rng.range_f64(-delta / 2.0, delta / 2.0) as f32)
+            .collect();
+        let pdf = ErrorPdf::build(&errs, delta, 255);
+        let expect = delta * delta / 12.0;
+        assert!((pdf.expected_mse() - expect).abs() < expect * 0.01);
+    }
+
+    #[test]
+    fn series_sums_to_one() {
+        let mut rng = Rng::new(134);
+        let errs: Vec<f32> = (0..10_000).map(|_| (rng.gauss() * 0.05) as f32).collect();
+        let pdf = ErrorPdf::build(&errs, 0.01, 1023);
+        let s = pdf.series(64);
+        let sum: f64 = s.iter().map(|&(_, p)| p).sum();
+        assert!((sum - 1.0).abs() < 1e-9, "sum {sum}");
+    }
+}

@@ -1,0 +1,121 @@
+//! Closed-form quality models for the alternative Stage-II quantizers
+//! of paper §5.1.4 — log-scale and equal-probability quantization.
+//! Used by the `ablation_quant` bench to reproduce the paper's
+//! qualitative claims: log-scale trades compression ratio for PSNR;
+//! equal-probability neutralizes entropy coding entirely.
+
+use super::pdf::ErrorPdf;
+
+/// Rate/distortion estimate for one quantizer choice.
+#[derive(Clone, Copy, Debug)]
+pub struct QuantEstimate {
+    pub bit_rate: f64,
+    pub psnr: f64,
+}
+
+/// Linear quantization (paper Eqs. 9/10) — thin wrapper for symmetry
+/// with the other two models.
+pub fn linear_model(pdf: &ErrorPdf, value_range: f64) -> QuantEstimate {
+    QuantEstimate {
+        bit_rate: pdf.entropy(),
+        psnr: super::sz_model::psnr_from_delta(pdf.delta, value_range),
+    }
+}
+
+/// Log-scale quantization model (§5.1.4): bins δ_{n±i} = bᶦ − bᶦ⁻¹.
+/// Bit-rate from Eq. 6 over the log-binned PDF; PSNR from Eq. 8's
+/// (1/12)·Σ δᵢ³·P(mᵢ).
+pub fn log_scale_model(
+    errors: &[f32],
+    n_half: u32,
+    value_range: f64,
+) -> QuantEstimate {
+    assert!(n_half >= 2);
+    let max_abs = errors.iter().fold(0.0f64, |m, &e| m.max((e as f64).abs()));
+    let q = crate::sz::quant::LogQuantizer::new(max_abs.max(1e-300), n_half);
+    let nbins = (2 * n_half - 1) as usize;
+    let mut counts = vec![0u64; nbins];
+    for &e in errors {
+        counts[q.quantize(e as f64) as usize] += 1;
+    }
+    let total = errors.len().max(1) as f64;
+    // Eq. 6: entropy of the bin occupancy.
+    let bit_rate = crate::metrics::entropy_from_counts(&counts);
+    // Eq. 8: MSE = (1/12)·Σ δᵢ³·P(mᵢ) = (1/12)·Σ δᵢ²·Pᵢ
+    // (with Pᵢ = δᵢ·P(mᵢ) the bin probability).
+    let mut mse = 0.0f64;
+    for (i, &c) in counts.iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        let delta_i = q.bin_width(i as u32);
+        mse += delta_i * delta_i / 12.0 * (c as f64 / total);
+    }
+    QuantEstimate { bit_rate, psnr: crate::metrics::psnr_from_mse(mse, value_range) }
+}
+
+/// Equal-probability quantization model (§5.1.4, NUMARCK-style):
+/// bit-rate = log2(2n−1) exactly (uniform symbols defeat entropy
+/// coding); PSNR from the fitted bin widths.
+pub fn equal_prob_model(errors: &[f32], num_bins: u32, value_range: f64) -> QuantEstimate {
+    let vals: Vec<f64> = errors.iter().map(|&e| e as f64).collect();
+    let q = crate::sz::quant::EqualProbQuantizer::fit(&vals, num_bins);
+    let bit_rate = (num_bins as f64).log2();
+    let total = vals.len().max(1) as f64;
+    let mut counts = vec![0u64; num_bins as usize];
+    for &v in &vals {
+        counts[q.quantize(v) as usize] += 1;
+    }
+    let mut mse = 0.0f64;
+    for (i, &c) in counts.iter().enumerate() {
+        let w = q.edges[i + 1] - q.edges[i];
+        mse += w * w / 12.0 * (c as f64 / total);
+    }
+    QuantEstimate { bit_rate, psnr: crate::metrics::psnr_from_mse(mse, value_range) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimator::pdf::ErrorPdf;
+    use crate::testing::Rng;
+
+    fn gauss_errors(n: usize, sigma: f64, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| (rng.gauss() * sigma) as f32).collect()
+    }
+
+    #[test]
+    fn log_scale_beats_linear_psnr_loses_rate() {
+        // Paper §5.1.4: log-scale usually has higher PSNR but lower
+        // compression ratio (higher bit-rate via flatter occupancy).
+        let errs = gauss_errors(200_000, 0.1, 161);
+        let vr = 100.0;
+        let delta = 0.05;
+        let lin = linear_model(&ErrorPdf::build(&errs, delta, 255), vr);
+        let log = log_scale_model(&errs, 128, vr);
+        assert!(log.psnr > lin.psnr, "log {:.1} vs lin {:.1}", log.psnr, lin.psnr);
+    }
+
+    #[test]
+    fn equal_prob_bitrate_is_log2_bins() {
+        let errs = gauss_errors(10_000, 1.0, 162);
+        let est = equal_prob_model(&errs, 31, 10.0);
+        assert!((est.bit_rate - 31.0f64.log2()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn equal_prob_psnr_finite_and_positive() {
+        let errs = gauss_errors(10_000, 0.01, 163);
+        let est = equal_prob_model(&errs, 63, 10.0);
+        assert!(est.psnr.is_finite() && est.psnr > 0.0);
+    }
+
+    #[test]
+    fn more_bins_higher_psnr() {
+        let errs = gauss_errors(50_000, 0.5, 164);
+        let few = equal_prob_model(&errs, 15, 10.0);
+        let many = equal_prob_model(&errs, 255, 10.0);
+        assert!(many.psnr > few.psnr);
+    }
+}

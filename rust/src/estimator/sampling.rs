@@ -1,0 +1,214 @@
+//! Step 1 of the online selection workflow (paper Fig. 2 / §4.3):
+//! uniform blockwise sampling.
+//!
+//! Blocks are taken on a fixed stride so samples spread uniformly over
+//! the field ("the distance between two data blocks sampled nearby will
+//! be fixed in the same dimension"), making the estimate deterministic
+//! — no RNG on the request path.
+
+use crate::data::field::Dims;
+use crate::zfp::block::{block_grid, block_size};
+
+/// Default Stage-I sampling rate (paper: 5% balances accuracy and
+/// overhead; Tables 2–5 sweep 1/5/10%).
+pub const DEFAULT_RSP: f64 = 0.05;
+
+/// Embedded-coding pointwise subsample counts per block (paper §5.2.2:
+/// 3 points per 1D block, 9 per 4×4, 16 per 4×4×4).
+pub const fn ec_samples_per_block(ndim: usize) -> usize {
+    match ndim {
+        1 => 3,
+        2 => 9,
+        _ => 16,
+    }
+}
+
+/// A blockwise sample of a field.
+#[derive(Clone, Debug)]
+pub struct BlockSample {
+    /// Sampled block coordinates (bz, by, bx).
+    pub blocks: Vec<(usize, usize, usize)>,
+    /// Total blocks in the field.
+    pub total_blocks: usize,
+    /// Field dims.
+    pub dims: Dims,
+}
+
+/// Select every k-th block so that ≈ `r_sp` of all blocks are sampled.
+/// Always samples at least one block.
+pub fn sample_blocks(dims: Dims, r_sp: f64) -> BlockSample {
+    assert!(r_sp > 0.0 && r_sp <= 1.0, "sampling rate {r_sp} out of (0,1]");
+    let g = block_grid(dims);
+    let total = g[0] * g[1] * g[2];
+    let stride = ((1.0 / r_sp).round() as usize).max(1);
+    // Offset by stride/2 so samples sit mid-stride (uniform coverage
+    // even when the field has edge effects).
+    let first = (stride / 2).min(total.saturating_sub(1));
+    let mut blocks = Vec::with_capacity(total / stride + 1);
+    let mut lin = first;
+    while lin < total {
+        let bz = lin / (g[1] * g[2]);
+        let rem = lin % (g[1] * g[2]);
+        blocks.push((bz, rem / g[2], rem % g[2]));
+        lin += stride;
+    }
+    if blocks.is_empty() {
+        blocks.push((0, 0, 0));
+    }
+    BlockSample { blocks, total_blocks: total, dims }
+}
+
+impl BlockSample {
+    /// Achieved sampling rate (fraction of blocks).
+    pub fn rate(&self) -> f64 {
+        self.blocks.len() as f64 / self.total_blocks as f64
+    }
+
+    /// Number of sampled data points (block count × block size; edge
+    /// blocks count padded size — the estimator works on padded blocks).
+    pub fn num_points(&self) -> usize {
+        self.blocks.len() * block_size(self.dims.ndim())
+    }
+
+    /// Linear indices of all *valid* (in-range) points inside the
+    /// sampled blocks — the SZ estimator's sample set.
+    pub fn point_indices(&self) -> Vec<usize> {
+        let e = self.dims.extents();
+        let (nz, ny, nx) = (e[0], e[1], e[2]);
+        let mut idx = Vec::with_capacity(self.num_points());
+        match self.dims.ndim() {
+            1 => {
+                for &(_, _, bx) in &self.blocks {
+                    for i in 0..4 {
+                        let x = bx * 4 + i;
+                        if x < nx {
+                            idx.push(x);
+                        }
+                    }
+                }
+            }
+            2 => {
+                for &(_, by, bx) in &self.blocks {
+                    for j in 0..4 {
+                        let y = by * 4 + j;
+                        if y >= ny {
+                            continue;
+                        }
+                        for i in 0..4 {
+                            let x = bx * 4 + i;
+                            if x < nx {
+                                idx.push(y * nx + x);
+                            }
+                        }
+                    }
+                }
+            }
+            _ => {
+                for &(bz, by, bx) in &self.blocks {
+                    for k in 0..4 {
+                        let z = bz * 4 + k;
+                        if z >= nz {
+                            continue;
+                        }
+                        for j in 0..4 {
+                            let y = by * 4 + j;
+                            if y >= ny {
+                                continue;
+                            }
+                            for i in 0..4 {
+                                let x = bx * 4 + i;
+                                if x < nx {
+                                    idx.push((z * ny + y) * nx + x);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        idx
+    }
+}
+
+/// Deterministic within-block EC subsample: `count` coefficient ranks
+/// spread evenly over the sequency order `0..bs` (includes rank 0, the
+/// DC coefficient, and the last rank — the staircase endpoints the
+/// interpolation needs).
+pub fn ec_sample_ranks(ndim: usize) -> Vec<usize> {
+    let bs = block_size(ndim);
+    let count = ec_samples_per_block(ndim).min(bs);
+    if count >= bs {
+        return (0..bs).collect();
+    }
+    (0..count)
+        .map(|i| i * (bs - 1) / (count - 1))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::field::Dims;
+
+    #[test]
+    fn rate_is_close_to_requested() {
+        let dims = Dims::D2(400, 400); // 100x100 = 10,000 blocks
+        for r in [0.01, 0.05, 0.10] {
+            let s = sample_blocks(dims, r);
+            assert!(
+                (s.rate() - r).abs() / r < 0.1,
+                "requested {r}, got {}",
+                s.rate()
+            );
+        }
+    }
+
+    #[test]
+    fn sampling_is_deterministic() {
+        let dims = Dims::D3(20, 20, 20);
+        let a = sample_blocks(dims, 0.05);
+        let b = sample_blocks(dims, 0.05);
+        assert_eq!(a.blocks, b.blocks);
+    }
+
+    #[test]
+    fn tiny_field_samples_at_least_one_block() {
+        let s = sample_blocks(Dims::D1(4), 0.01);
+        assert_eq!(s.blocks.len(), 1);
+    }
+
+    #[test]
+    fn point_indices_in_range_and_unique() {
+        let dims = Dims::D2(37, 41); // partial edge blocks
+        let s = sample_blocks(dims, 0.25);
+        let idx = s.point_indices();
+        assert!(!idx.is_empty());
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), idx.len(), "duplicate sample indices");
+        assert!(idx.iter().all(|&i| i < dims.len()));
+    }
+
+    #[test]
+    fn blocks_spread_across_field() {
+        let dims = Dims::D2(400, 400);
+        let s = sample_blocks(dims, 0.05);
+        // Samples should span most of the block-row range.
+        let max_by = s.blocks.iter().map(|b| b.1).max().unwrap();
+        let min_by = s.blocks.iter().map(|b| b.1).min().unwrap();
+        assert!(max_by - min_by > 80, "rows {min_by}..{max_by}");
+    }
+
+    #[test]
+    fn ec_ranks_cover_endpoints() {
+        for ndim in 1..=3 {
+            let ranks = ec_sample_ranks(ndim);
+            assert_eq!(ranks.len(), ec_samples_per_block(ndim).min(block_size(ndim)));
+            assert_eq!(ranks[0], 0);
+            assert_eq!(*ranks.last().unwrap(), block_size(ndim) - 1);
+            // strictly increasing
+            assert!(ranks.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+}

@@ -1,0 +1,318 @@
+//! Algorithm 1: the automatic online selection method.
+//!
+//! Per field: estimate ZFP's bit-rate and PSNR from the sample; derive
+//! the SZ bin size δ that matches ZFP's PSNR (iso-distortion, Eq. 10);
+//! estimate SZ's bit-rate at that δ; pick the compressor with the
+//! smaller estimated bit-rate; compress. The output carries the
+//! selection bit s_i (paper's output format) plus the estimates for
+//! observability.
+
+use super::sampling::{sample_blocks, DEFAULT_RSP};
+use super::{sz_model, zfp_model};
+use crate::data::field::{Dims, Field};
+use crate::sz::{SzCompressor, SzConfig};
+use crate::zfp::{ZfpCompressor, ZfpConfig};
+use crate::{Error, Result};
+
+/// Which compressor was (or should be) used.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Choice {
+    Sz,
+    Zfp,
+}
+
+impl Choice {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Choice::Sz => "SZ",
+            Choice::Zfp => "ZFP",
+        }
+    }
+}
+
+/// Selector configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SelectorConfig {
+    /// Stage-I blockwise sampling rate r_sp.
+    pub r_sp: f64,
+    /// SZ quantization capacity.
+    pub capacity: u32,
+    pub sz: SzConfig,
+    pub zfp: ZfpConfig,
+    pub zfp_model: zfp_model::ZfpModelConfig,
+}
+
+impl Default for SelectorConfig {
+    fn default() -> Self {
+        SelectorConfig {
+            r_sp: DEFAULT_RSP,
+            capacity: 65_535,
+            sz: SzConfig::default(),
+            zfp: ZfpConfig::default(),
+            zfp_model: zfp_model::ZfpModelConfig::default(),
+        }
+    }
+}
+
+/// Estimates computed by Algorithm 1 (lines 5–9).
+#[derive(Clone, Copy, Debug)]
+pub struct Estimates {
+    pub br_sz: f64,
+    pub br_zfp: f64,
+    /// The iso-distortion target PSNR (ZFP's estimated PSNR).
+    pub psnr_target: f64,
+    /// Absolute error bound handed to SZ (δ/2, ≤ the user bound).
+    pub eb_sz: f64,
+    /// Absolute error bound handed to ZFP (the user bound).
+    pub eb_zfp: f64,
+}
+
+/// Result of selection + compression for one field.
+#[derive(Clone, Debug)]
+pub struct CompressOutput {
+    pub choice: Choice,
+    /// Self-describing payload: selection byte + codec stream.
+    pub container: Vec<u8>,
+    pub estimates: Estimates,
+    /// Uncompressed size in bytes.
+    pub raw_bytes: usize,
+}
+
+impl CompressOutput {
+    /// Achieved compression ratio.
+    pub fn ratio(&self) -> f64 {
+        self.raw_bytes as f64 / self.container.len() as f64
+    }
+
+    /// Achieved bit-rate (bits/value, f32 input).
+    pub fn bit_rate(&self) -> f64 {
+        self.container.len() as f64 * 8.0 / (self.raw_bytes / 4) as f64
+    }
+}
+
+/// The automatic online selector (Algorithm 1).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AutoSelector {
+    pub cfg: SelectorConfig,
+}
+
+impl AutoSelector {
+    pub fn new(cfg: SelectorConfig) -> Self {
+        AutoSelector { cfg }
+    }
+
+    /// Algorithm 1 lines 2–10: estimate both compressors and choose.
+    /// `eb_rel` is the value-range-based relative error bound; the
+    /// absolute bound is eb = eb_rel · VR (line 2).
+    pub fn select(&self, field: &Field, eb_rel: f64) -> Result<(Choice, Estimates)> {
+        let vr = field.value_range();
+        let eb = self.absolute_bound(vr, eb_rel)?;
+        self.select_abs(field, eb, vr)
+    }
+
+    /// Selection with an explicit absolute bound.
+    pub fn select_abs(&self, field: &Field, eb: f64, vr: f64) -> Result<(Choice, Estimates)> {
+        if eb <= 0.0 || !eb.is_finite() {
+            return Err(Error::InvalidArg(format!("bad error bound {eb}")));
+        }
+        // Line 3–4: blockwise + pointwise sampling.
+        let sample = sample_blocks(field.dims, self.cfg.r_sp);
+
+        // Lines 5–6: ZFP bit-rate (n̄_sb) and PSNR (PSNR_sp).
+        let zfp_est =
+            zfp_model::estimate(&field.data, field.dims, &sample, eb, vr, self.cfg.zfp_model);
+
+        // Line 7: derive SZ's bin size from PSNR_sz := PSNR_zfp.
+        // Clamp so SZ's pointwise bound never exceeds the user's bound
+        // (ZFP over-preserves error, so normally δ/2 < eb already).
+        let delta = if zfp_est.psnr.is_finite() && vr > 0.0 {
+            sz_model::delta_from_psnr(zfp_est.psnr, vr).min(2.0 * eb)
+        } else {
+            2.0 * eb
+        };
+        let delta = if delta > 0.0 { delta } else { 2.0 * eb };
+
+        // Lines 8–9: SZ PDF + bit-rate at that δ.
+        let sz_est =
+            sz_model::estimate(&field.data, field.dims, &sample, delta, self.cfg.capacity, vr);
+
+        // Line 10: pick the smaller estimated bit-rate.
+        let choice = if sz_est.bit_rate < zfp_est.bit_rate { Choice::Sz } else { Choice::Zfp };
+        let est = Estimates {
+            br_sz: sz_est.bit_rate,
+            br_zfp: zfp_est.bit_rate,
+            psnr_target: zfp_est.psnr,
+            eb_sz: delta / 2.0,
+            eb_zfp: eb,
+        };
+        Ok((choice, est))
+    }
+
+    /// Full Algorithm 1: select, then compress with the chosen codec
+    /// (lines 10–15). Output container = selection byte + codec stream.
+    pub fn compress(&self, field: &Field, eb_rel: f64) -> Result<CompressOutput> {
+        let vr = field.value_range();
+        let eb = self.absolute_bound(vr, eb_rel)?;
+        self.compress_abs(field, eb, vr)
+    }
+
+    /// Compression with an explicit absolute bound.
+    pub fn compress_abs(&self, field: &Field, eb: f64, vr: f64) -> Result<CompressOutput> {
+        let (choice, estimates) = self.select_abs(field, eb, vr)?;
+        let payload = match choice {
+            Choice::Sz => SzCompressor::new(self.cfg.sz)
+                .compress(&field.data, field.dims, estimates.eb_sz)?,
+            Choice::Zfp => ZfpCompressor::new(self.cfg.zfp)
+                .compress(&field.data, field.dims, estimates.eb_zfp)?,
+        };
+        let mut container = Vec::with_capacity(payload.len() + 1);
+        container.push(match choice {
+            Choice::Sz => 0u8, // paper: s_i = 0 for SZ
+            Choice::Zfp => 1u8,
+        });
+        container.extend_from_slice(&payload);
+        Ok(CompressOutput { choice, container, estimates, raw_bytes: field.raw_bytes() })
+    }
+
+    /// Compress with a *forced* codec (baseline policies / Fig. 7 bars).
+    pub fn compress_forced(&self, field: &Field, eb: f64, choice: Choice) -> Result<Vec<u8>> {
+        let payload = match choice {
+            Choice::Sz => SzCompressor::new(self.cfg.sz).compress(&field.data, field.dims, eb)?,
+            Choice::Zfp => {
+                ZfpCompressor::new(self.cfg.zfp).compress(&field.data, field.dims, eb)?
+            }
+        };
+        let mut container = Vec::with_capacity(payload.len() + 1);
+        container.push(if choice == Choice::Sz { 0 } else { 1 });
+        container.extend_from_slice(&payload);
+        Ok(container)
+    }
+
+    /// Decompress a container produced by [`Self::compress`].
+    pub fn decompress(&self, container: &[u8]) -> Result<Vec<f32>> {
+        let (data, _dims) = self.decompress_with_dims(container)?;
+        Ok(data)
+    }
+
+    /// Decompress, returning dims too.
+    pub fn decompress_with_dims(&self, container: &[u8]) -> Result<(Vec<f32>, Dims)> {
+        let sel = *container
+            .first()
+            .ok_or_else(|| Error::Corrupt("empty container".into()))?;
+        let payload = &container[1..];
+        match sel {
+            0 => SzCompressor::new(self.cfg.sz).decompress(payload),
+            1 => ZfpCompressor::new(self.cfg.zfp).decompress(payload),
+            b => Err(Error::Corrupt(format!("bad selection bit {b}"))),
+        }
+    }
+
+    fn absolute_bound(&self, vr: f64, eb_rel: f64) -> Result<f64> {
+        if eb_rel <= 0.0 || !eb_rel.is_finite() {
+            return Err(Error::InvalidArg(format!("bad relative bound {eb_rel}")));
+        }
+        // Constant fields have VR = 0; any tiny positive bound works.
+        Ok(if vr > 0.0 { eb_rel * vr } else { eb_rel })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{atm, hurricane};
+    use crate::metrics::error_stats;
+
+    #[test]
+    fn compress_roundtrip_respects_bound() {
+        let sel = AutoSelector::default();
+        for idx in [0usize, 4, 8] {
+            let f = atm::generate_field_scaled(7, idx, 0);
+            let vr = f.value_range();
+            let out = sel.compress(&f, 1e-3).unwrap();
+            let recon = sel.decompress(&out.container).unwrap();
+            let stats = error_stats(&f.data, &recon);
+            assert!(
+                stats.max_abs_err <= 1e-3 * vr * (1.0 + 1e-9),
+                "field {idx} ({:?}): err {} bound {}",
+                out.choice,
+                stats.max_abs_err,
+                1e-3 * vr
+            );
+        }
+    }
+
+    #[test]
+    fn smooth_fields_pick_sz_rough_pick_zfp() {
+        let sel = AutoSelector::default();
+        // idx 0 is a Smooth class (SZ-friendly); idx 7 is Rough.
+        let smooth = atm::generate_field_scaled(11, 0, 1);
+        let rough = atm::generate_field_scaled(11, 7, 1);
+        let (cs, es) = sel.select(&smooth, 1e-4).unwrap();
+        let (cr, er) = sel.select(&rough, 1e-4).unwrap();
+        assert_eq!(cs, Choice::Sz, "smooth: {es:?}");
+        assert_eq!(cr, Choice::Zfp, "rough: {er:?}");
+    }
+
+    #[test]
+    fn selection_bit_matches_choice() {
+        let sel = AutoSelector::default();
+        let f = hurricane::generate_field_scaled(3, 0, 0);
+        let out = sel.compress(&f, 1e-3).unwrap();
+        let expect = if out.choice == Choice::Sz { 0 } else { 1 };
+        assert_eq!(out.container[0], expect);
+    }
+
+    #[test]
+    fn iso_psnr_sz_bound_not_looser_than_user() {
+        let sel = AutoSelector::default();
+        let f = atm::generate_field_scaled(13, 2, 0);
+        let vr = f.value_range();
+        let (_, est) = sel.select(&f, 1e-4).unwrap();
+        assert!(est.eb_sz <= est.eb_zfp * (1.0 + 1e-12));
+        assert!(est.eb_zfp > 0.0 && (est.eb_zfp - 1e-4 * vr).abs() < 1e-12 * vr);
+    }
+
+    #[test]
+    fn constant_field_handled() {
+        let f = Field::new("const", Dims::D2(64, 64), vec![2.5; 4096]);
+        let sel = AutoSelector::default();
+        let out = sel.compress(&f, 1e-4).unwrap();
+        let recon = sel.decompress(&out.container).unwrap();
+        assert!(recon.iter().all(|&v| (v - 2.5).abs() <= 1e-4));
+        // A single-symbol Huffman stream costs 1 bit/value → ratio ≈ 32
+        // minus header overhead (SZ-1.4 behaves the same without gzip).
+        assert!(out.ratio() > 25.0, "constant field ratio {}", out.ratio());
+    }
+
+    #[test]
+    fn forced_choice_roundtrip() {
+        let sel = AutoSelector::default();
+        let f = atm::generate_field_scaled(17, 1, 0);
+        let vr = f.value_range();
+        for c in [Choice::Sz, Choice::Zfp] {
+            let cont = sel.compress_forced(&f, 1e-3 * vr, c).unwrap();
+            let recon = sel.decompress(&cont).unwrap();
+            let stats = error_stats(&f.data, &recon);
+            assert!(stats.max_abs_err <= 1e-3 * vr * (1.0 + 1e-9), "{c:?}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_bounds() {
+        let sel = AutoSelector::default();
+        let f = atm::generate_field_scaled(19, 0, 0);
+        assert!(sel.compress(&f, 0.0).is_err());
+        assert!(sel.compress(&f, -1.0).is_err());
+        assert!(sel.compress(&f, f64::NAN).is_err());
+    }
+
+    #[test]
+    fn corrupt_selection_bit_rejected() {
+        let sel = AutoSelector::default();
+        let f = atm::generate_field_scaled(23, 0, 0);
+        let mut out = sel.compress(&f, 1e-3).unwrap();
+        out.container[0] = 7;
+        assert!(sel.decompress(&out.container).is_err());
+        assert!(sel.decompress(&[]).is_err());
+    }
+}

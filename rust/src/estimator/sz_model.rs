@@ -1,0 +1,187 @@
+//! SZ compression-quality model (paper §5.1, Eqs. 6, 9, 10, 11).
+//!
+//! Bit-rate: Shannon entropy of the quantization-bin distribution of
+//! Stage-I prediction errors (Eq. 9) plus the empirical +0.5 bit/value
+//! offset (§6.2: Huffman coding does not reach the entropy bound;
+//! 0.5 bits/value calibrated on real simulation data), plus the literal
+//! cost of unpredictable points.
+//!
+//! PSNR: closed form, depends only on the bin size (Eq. 10/11) —
+//! "the PSNR depends only on the unified quantization bin size
+//! regardless of the distribution of transformed data".
+
+use super::pdf::ErrorPdf;
+use super::sampling::BlockSample;
+use crate::data::field::Dims;
+use crate::sz::lorenzo;
+
+/// The paper's empirical Huffman-inefficiency offset (bits/value).
+pub const BR_OFFSET: f64 = 0.5;
+
+/// Literal cost (bits) per unpredictable value: escape code ≈ entropy
+/// already counts the escape symbol; the f32 payload adds 32 bits.
+pub const LITERAL_BITS: f64 = 32.0;
+
+/// An SZ quality estimate.
+#[derive(Clone, Copy, Debug)]
+pub struct SzEstimate {
+    /// Estimated bits/value (Eq. 9 + offset + literals).
+    pub bit_rate: f64,
+    /// Estimated PSNR in dB (Eq. 10).
+    pub psnr: f64,
+    /// Fraction of sampled points that were unpredictable.
+    pub escape_frac: f64,
+}
+
+/// Closed-form PSNR for linear quantization with bin size δ (Eq. 10):
+/// PSNR = 20·log10(VR/δ) + 10·log10(12).
+pub fn psnr_from_delta(delta: f64, value_range: f64) -> f64 {
+    if value_range <= 0.0 || delta <= 0.0 {
+        return f64::INFINITY;
+    }
+    20.0 * (value_range / delta).log10() + 10.0 * 12.0f64.log10()
+}
+
+/// Closed-form PSNR from the value-range-relative error bound (Eq. 11):
+/// PSNR = −20·log10(eb_rel) + 10·log10(3), with δ = 2·eb_abs.
+pub fn psnr_from_eb_rel(eb_rel: f64) -> f64 {
+    -20.0 * eb_rel.log10() + 10.0 * 3.0f64.log10()
+}
+
+/// Invert Eq. 10: the bin size δ that yields a target PSNR.
+pub fn delta_from_psnr(psnr: f64, value_range: f64) -> f64 {
+    // δ = VR · √12 · 10^(−PSNR/20)
+    value_range * 12.0f64.sqrt() * 10.0f64.powf(-psnr / 20.0)
+}
+
+/// Serialized Huffman-table cost per symbol: delta-varint symbol
+/// (dense alphabets → 1 byte) + varint code length (1 byte).
+pub const TABLE_BITS_PER_SYMBOL: f64 = 16.0;
+
+/// Estimate SZ's bit-rate (Eq. 9 + offset) from a prediction-error PDF.
+///
+/// Beyond the paper's Eq. 9 + 0.5 offset we add two corrections that
+/// matter on rough fields at tight bounds (alphabet ≫ sample size):
+/// full-size entropy extrapolation (plug-in entropy of a 5% sample is
+/// capped at log2(m)) and the Huffman-table cost, both driven by the
+/// Poisson-occupancy richness model in [`ErrorPdf::extrapolate`].
+/// Both corrections vanish on the smooth fields the paper evaluates
+/// (k ≪ m), so the model stays faithful where the paper's +0.5 offset
+/// was calibrated.
+pub fn bit_rate_from_pdf(pdf: &ErrorPdf, field_len: usize) -> f64 {
+    let esc = pdf.escape_prob();
+    let (h, k_n) = pdf.extrapolate(field_len);
+    let table_bits = k_n * TABLE_BITS_PER_SYMBOL / field_len.max(1) as f64;
+    h + BR_OFFSET + esc * LITERAL_BITS + table_bits
+}
+
+/// Full SZ estimate for a field: Stage-I transform (Lorenzo with
+/// original neighbors, §4.3) on the sampled points, then Eqs. 9/10.
+///
+/// `delta` is the quantization bin size (2·eb for plain SZ; derived
+/// from ZFP's PSNR in Algorithm 1).
+pub fn estimate(
+    data: &[f32],
+    dims: Dims,
+    sample: &BlockSample,
+    delta: f64,
+    capacity: u32,
+    value_range: f64,
+) -> SzEstimate {
+    let idx = sample.point_indices();
+    let errors = lorenzo::prediction_errors_original(data, dims, &idx);
+    let pdf = ErrorPdf::build(&errors, delta, capacity);
+    SzEstimate {
+        bit_rate: bit_rate_from_pdf(&pdf, data.len()),
+        psnr: psnr_from_delta(delta, value_range),
+        escape_frac: pdf.escape_prob(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::spectral::grf_2d;
+    use crate::estimator::sampling::sample_blocks;
+    use crate::metrics::{bit_rate, error_stats};
+    use crate::sz::SzCompressor;
+    use crate::testing::Rng;
+
+    #[test]
+    fn eq10_eq11_consistent() {
+        // Eq. 11 is Eq. 10 with δ = 2·eb_abs and eb_rel = eb_abs/VR.
+        let vr = 123.0;
+        let eb_rel = 1e-4;
+        let delta = 2.0 * eb_rel * vr;
+        let a = psnr_from_delta(delta, vr);
+        let b = psnr_from_eb_rel(eb_rel);
+        assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+    }
+
+    #[test]
+    fn delta_from_psnr_inverts() {
+        let vr = 7.5;
+        for delta in [1e-6, 1e-3, 0.1] {
+            let p = psnr_from_delta(delta, vr);
+            let d = delta_from_psnr(p, vr);
+            assert!((d - delta).abs() < 1e-9 * delta);
+        }
+    }
+
+    #[test]
+    fn psnr_estimate_matches_real_sz_within_2db() {
+        // End-to-end: the Eq. 11 PSNR must track the real SZ PSNR
+        // (paper: within ~1–2% — SZ errors are near-uniform in bins).
+        let mut rng = Rng::new(141);
+        let f = grf_2d(&mut rng, 128, 128, 2.5);
+        let dims = Dims::D2(128, 128);
+        let vr = crate::metrics::value_range(&f);
+        let eb = 1e-3 * vr;
+        let sz = SzCompressor::default();
+        let comp = sz.compress(&f, dims, eb).unwrap();
+        let (recon, _) = sz.decompress(&comp).unwrap();
+        let real = error_stats(&f, &recon);
+        let est = psnr_from_delta(2.0 * eb, vr);
+        assert!(
+            (est - real.psnr).abs() < 2.0,
+            "est {est:.2} dB vs real {:.2} dB",
+            real.psnr
+        );
+        // The estimate is conservative (paper: estimated ≤ real).
+        assert!(est <= real.psnr + 0.5);
+    }
+
+    #[test]
+    fn bit_rate_estimate_tracks_real_sz() {
+        let mut rng = Rng::new(142);
+        let f = grf_2d(&mut rng, 160, 160, 3.0);
+        let dims = Dims::D2(160, 160);
+        let vr = crate::metrics::value_range(&f);
+        let eb = 1e-4 * vr;
+
+        let sample = sample_blocks(dims, 0.05);
+        let est = estimate(&f, dims, &sample, 2.0 * eb, 65_535, vr);
+
+        let sz = SzCompressor::default();
+        let comp = sz.compress(&f, dims, eb).unwrap();
+        let real_br = bit_rate(comp.len(), f.len());
+        let rel = (est.bit_rate - real_br) / real_br;
+        assert!(
+            rel.abs() < 0.25,
+            "BR est {:.3} vs real {real_br:.3} (rel {rel:.3})",
+            est.bit_rate
+        );
+    }
+
+    #[test]
+    fn escape_fraction_detected_on_noise() {
+        // White noise + tiny delta => most samples unpredictable.
+        let mut rng = Rng::new(143);
+        let f: Vec<f32> = (0..4096).map(|_| rng.range_f64(-1e3, 1e3) as f32).collect();
+        let dims = Dims::D1(4096);
+        let sample = sample_blocks(dims, 0.25);
+        let est = estimate(&f, dims, &sample, 1e-9, 65_535, 2e3);
+        assert!(est.escape_frac > 0.9, "escape {}", est.escape_frac);
+        assert!(est.bit_rate > 30.0, "literal cost should dominate");
+    }
+}

@@ -1,0 +1,18 @@
+//! `adaptivec` CLI — the L3 leader entrypoint.
+
+use adaptivec::cli::commands;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match argv.split_first() {
+        Some((c, r)) => (c.as_str(), r.to_vec()),
+        None => {
+            print!("{}", commands::USAGE);
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = commands::run(cmd, &rest) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

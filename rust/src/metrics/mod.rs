@@ -1,0 +1,215 @@
+//! Compression-quality metrics: the L2-norm family the paper's analysis
+//! rests on (MSE → RMSE → NRMSE → PSNR), pointwise max error, bit-rate,
+//! compression ratio, and Shannon entropy.
+//!
+//! All accumulations are f64 even for f32 data — the squared-error sums
+//! over 10⁷-element fields would otherwise lose precision.
+
+/// L2-norm error statistics between an original and a reconstruction.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ErrorStats {
+    pub mse: f64,
+    pub rmse: f64,
+    /// Normalized by the original's value range (paper Eq. 8 context).
+    pub nrmse: f64,
+    /// Peak signal-to-noise ratio, dB: −20·log10(NRMSE).
+    pub psnr: f64,
+    /// L∞: max pointwise |orig − recon|.
+    pub max_abs_err: f64,
+    /// Value range of the original data.
+    pub value_range: f64,
+}
+
+/// Compute all error statistics in one pass.
+pub fn error_stats(orig: &[f32], recon: &[f32]) -> ErrorStats {
+    assert_eq!(orig.len(), recon.len(), "length mismatch");
+    assert!(!orig.is_empty());
+    let mut se = 0.0f64;
+    let mut max_err = 0.0f64;
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for (&a, &b) in orig.iter().zip(recon) {
+        let a = a as f64;
+        let d = a - b as f64;
+        se += d * d;
+        if d.abs() > max_err {
+            max_err = d.abs();
+        }
+        if a < lo {
+            lo = a;
+        }
+        if a > hi {
+            hi = a;
+        }
+    }
+    let mse = se / orig.len() as f64;
+    let rmse = mse.sqrt();
+    let vr = hi - lo;
+    let nrmse = if vr > 0.0 { rmse / vr } else { rmse };
+    let psnr = if nrmse > 0.0 {
+        -20.0 * nrmse.log10()
+    } else {
+        f64::INFINITY
+    };
+    ErrorStats { mse, rmse, nrmse, psnr, max_abs_err: max_err, value_range: vr }
+}
+
+/// Value range (max − min) of a field.
+pub fn value_range(data: &[f32]) -> f64 {
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &x in data {
+        let x = x as f64;
+        if x < lo {
+            lo = x;
+        }
+        if x > hi {
+            hi = x;
+        }
+    }
+    if lo.is_finite() {
+        hi - lo
+    } else {
+        0.0
+    }
+}
+
+/// Bit-rate in bits/value for a compressed representation.
+#[inline]
+pub fn bit_rate(compressed_bytes: usize, n_values: usize) -> f64 {
+    compressed_bytes as f64 * 8.0 / n_values as f64
+}
+
+/// Compression ratio for single-precision input.
+#[inline]
+pub fn compression_ratio_f32(compressed_bytes: usize, n_values: usize) -> f64 {
+    (n_values * 4) as f64 / compressed_bytes as f64
+}
+
+/// Shannon entropy (bits/symbol) of a discrete distribution given raw
+/// counts. Zero-count entries are ignored.
+pub fn entropy_from_counts(counts: &[u64]) -> f64 {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let n = total as f64;
+    counts
+        .iter()
+        .filter(|&&c| c > 0)
+        .map(|&c| {
+            let p = c as f64 / n;
+            -p * p.log2()
+        })
+        .sum()
+}
+
+/// PSNR from MSE and value range: −10·log10(MSE) + 20·log10(VR).
+#[inline]
+pub fn psnr_from_mse(mse: f64, value_range: f64) -> f64 {
+    if mse <= 0.0 {
+        return f64::INFINITY;
+    }
+    -10.0 * mse.log10() + 20.0 * value_range.log10()
+}
+
+/// Relative error of an estimate vs. the measured truth: (est−real)/real.
+#[inline]
+pub fn relative_error(estimate: f64, real: f64) -> f64 {
+    if real == 0.0 {
+        if estimate == 0.0 {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        (estimate - real) / real
+    }
+}
+
+/// Mean and population standard deviation of a sample.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    (mean, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_error_gives_infinite_psnr() {
+        let x = vec![1.0f32, 2.0, 3.0];
+        let s = error_stats(&x, &x);
+        assert_eq!(s.mse, 0.0);
+        assert!(s.psnr.is_infinite());
+        assert_eq!(s.max_abs_err, 0.0);
+    }
+
+    #[test]
+    fn known_mse() {
+        let a = vec![0.0f32, 0.0, 0.0, 0.0];
+        let b = vec![1.0f32, -1.0, 1.0, -1.0];
+        let s = error_stats(&a, &b);
+        assert!((s.mse - 1.0).abs() < 1e-12);
+        assert!((s.rmse - 1.0).abs() < 1e-12);
+        assert_eq!(s.max_abs_err, 1.0);
+    }
+
+    #[test]
+    fn psnr_matches_closed_form() {
+        // Uniform error of ±e on data with range VR:
+        // known PSNR = 20 log10(VR/e).
+        let n = 10_000;
+        let orig: Vec<f32> = (0..n).map(|i| i as f32 / n as f32).collect();
+        let e = 1e-3f32;
+        let recon: Vec<f32> = orig
+            .iter()
+            .enumerate()
+            .map(|(i, &x)| if i % 2 == 0 { x + e } else { x - e })
+            .collect();
+        let s = error_stats(&orig, &recon);
+        let expected = 20.0 * ((s.value_range) / e as f64).log10();
+        assert!((s.psnr - expected).abs() < 0.05, "{} vs {}", s.psnr, expected);
+    }
+
+    #[test]
+    fn entropy_uniform_and_point() {
+        assert!((entropy_from_counts(&[1, 1, 1, 1]) - 2.0).abs() < 1e-12);
+        assert_eq!(entropy_from_counts(&[10, 0, 0]), 0.0);
+        assert_eq!(entropy_from_counts(&[]), 0.0);
+    }
+
+    #[test]
+    fn ratios() {
+        assert_eq!(compression_ratio_f32(100, 100), 4.0);
+        assert_eq!(bit_rate(100, 100), 8.0);
+    }
+
+    #[test]
+    fn psnr_from_mse_consistency() {
+        let orig: Vec<f32> = (0..1000).map(|i| (i as f32).sin()).collect();
+        let recon: Vec<f32> = orig.iter().map(|&x| x + 0.001).collect();
+        let s = error_stats(&orig, &recon);
+        let p = psnr_from_mse(s.mse, s.value_range);
+        assert!((p - s.psnr).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mean_std_basics() {
+        let (m, s) = mean_std(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((m - 5.0).abs() < 1e-12);
+        assert!((s - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn constant_field_value_range_zero() {
+        let x = vec![3.5f32; 64];
+        assert_eq!(value_range(&x), 0.0);
+        let s = error_stats(&x, &x);
+        assert_eq!(s.nrmse, 0.0);
+    }
+}

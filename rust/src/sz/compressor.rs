@@ -1,0 +1,382 @@
+//! The SZ codec: error-bounded lossy compression of 1D/2D/3D f32
+//! fields. Guarantees max pointwise error ≤ the absolute error bound
+//! (verified by property tests and by every round-trip in the benches).
+
+use super::huffman_stage;
+use super::lorenzo;
+use super::quant::{LinearQuantizer, ESCAPE};
+use crate::codec::varint;
+use crate::data::field::Dims;
+use crate::{Error, Result};
+
+/// Stream magic: "SZR1".
+const MAGIC: u32 = 0x535A_5231;
+
+/// SZ configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SzConfig {
+    /// Quantization-bin capacity (2n−1 usable bins + escape). SZ-1.4's
+    /// default is 65,536 intervals; we use 65,535 (odd, symmetric).
+    pub capacity: u32,
+    /// Apply a zstd pass over the entropy-coded payload (SZ's optional
+    /// gzip stage; helps on highly repetitive fields).
+    pub zstd_stage: bool,
+}
+
+impl Default for SzConfig {
+    fn default() -> Self {
+        SzConfig { capacity: 65_535, zstd_stage: false }
+    }
+}
+
+/// The SZ compressor.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SzCompressor {
+    pub cfg: SzConfig,
+}
+
+impl SzCompressor {
+    pub fn new(cfg: SzConfig) -> Self {
+        SzCompressor { cfg }
+    }
+
+    /// Compress `data` with an absolute error bound.
+    pub fn compress(&self, data: &[f32], dims: Dims, eb_abs: f64) -> Result<Vec<u8>> {
+        if eb_abs <= 0.0 || !eb_abs.is_finite() {
+            return Err(Error::InvalidArg(format!("bad error bound {eb_abs}")));
+        }
+        if dims.len() != data.len() {
+            return Err(Error::InvalidArg("dims/data length mismatch".into()));
+        }
+        if data.is_empty() {
+            return Err(Error::InvalidArg("empty input".into()));
+        }
+
+        let q = LinearQuantizer::from_error_bound(eb_abs, self.cfg.capacity);
+        let n = data.len();
+        let mut symbols: Vec<u32> = Vec::with_capacity(n);
+        let mut literals: Vec<u8> = Vec::new();
+        let mut recon = vec![0.0f32; n];
+
+        // Single pass: predict from the reconstructed buffer, quantize
+        // the prediction error, write back the reconstruction.
+        let quantize_point = |i: usize, pred: f32, recon_i: &mut f32,
+                                  symbols: &mut Vec<u32>,
+                                  literals: &mut Vec<u8>| {
+            let x = data[i];
+            let err = x as f64 - pred as f64;
+            if let Some(sym) = q.quantize(err) {
+                let rec = (pred as f64 + q.reconstruct(sym)) as f32;
+                // f32 rounding may push past the bound near huge values;
+                // fall back to a literal then (exactly as SZ does).
+                if (rec as f64 - x as f64).abs() <= eb_abs {
+                    symbols.push(sym);
+                    *recon_i = rec;
+                    return;
+                }
+            }
+            symbols.push(ESCAPE);
+            literals.extend_from_slice(&x.to_le_bytes());
+            *recon_i = x;
+        };
+
+        match dims {
+            Dims::D1(_) => {
+                for i in 0..n {
+                    let pred = lorenzo::predict_1d(&recon, i);
+                    let mut r = 0.0;
+                    quantize_point(i, pred, &mut r, &mut symbols, &mut literals);
+                    recon[i] = r;
+                }
+            }
+            Dims::D2(ny, nx) => {
+                for y in 0..ny {
+                    for x in 0..nx {
+                        let i = y * nx + x;
+                        let pred = lorenzo::predict_2d(&recon, nx, y, x);
+                        let mut r = 0.0;
+                        quantize_point(i, pred, &mut r, &mut symbols, &mut literals);
+                        recon[i] = r;
+                    }
+                }
+            }
+            Dims::D3(nz, ny, nx) => {
+                for z in 0..nz {
+                    for y in 0..ny {
+                        for x in 0..nx {
+                            let i = (z * ny + y) * nx + x;
+                            let pred = lorenzo::predict_3d(&recon, ny, nx, z, y, x);
+                            let mut r = 0.0;
+                            quantize_point(i, pred, &mut r, &mut symbols, &mut literals);
+                            recon[i] = r;
+                        }
+                    }
+                }
+            }
+        }
+
+        // Stage III.
+        let huff = huffman_stage::encode_symbols(&symbols)?;
+
+        let mut out = Vec::with_capacity(huff.len() + literals.len() + 64);
+        varint::write_u64(&mut out, MAGIC as u64);
+        dims.encode(&mut out);
+        varint::write_f64(&mut out, eb_abs);
+        varint::write_u64(&mut out, self.cfg.capacity as u64);
+        varint::write_u64(&mut out, self.cfg.zstd_stage as u64);
+        if self.cfg.zstd_stage {
+            let mut payload = Vec::with_capacity(huff.len() + literals.len());
+            varint::write_bytes(&mut payload, &huff);
+            varint::write_bytes(&mut payload, &literals);
+            let packed = huffman_stage::zstd_pack(&payload)?;
+            varint::write_u64(&mut out, payload.len() as u64);
+            varint::write_bytes(&mut out, &packed);
+        } else {
+            varint::write_bytes(&mut out, &huff);
+            varint::write_bytes(&mut out, &literals);
+        }
+        Ok(out)
+    }
+
+    /// Decompress a stream produced by [`Self::compress`].
+    pub fn decompress(&self, buf: &[u8]) -> Result<(Vec<f32>, Dims)> {
+        let mut pos = 0usize;
+        let magic = varint::read_u64(buf, &mut pos)?;
+        if magic != MAGIC as u64 {
+            return Err(Error::Corrupt(format!("bad SZ magic {magic:#x}")));
+        }
+        let dims = Dims::decode(buf, &mut pos)?;
+        let eb_abs = varint::read_f64(buf, &mut pos)?;
+        let capacity = varint::read_u64(buf, &mut pos)? as u32;
+        let zstd_stage = varint::read_u64(buf, &mut pos)? != 0;
+
+        let (huff, literals): (Vec<u8>, Vec<u8>) = if zstd_stage {
+            let raw_len = varint::read_u64(buf, &mut pos)? as usize;
+            let packed = varint::read_bytes(buf, &mut pos)?;
+            let payload = huffman_stage::zstd_unpack(packed, raw_len)?;
+            let mut p = 0;
+            let h = varint::read_bytes(&payload, &mut p)?.to_vec();
+            let l = varint::read_bytes(&payload, &mut p)?.to_vec();
+            (h, l)
+        } else {
+            let h = varint::read_bytes(buf, &mut pos)?.to_vec();
+            let l = varint::read_bytes(buf, &mut pos)?.to_vec();
+            (h, l)
+        };
+
+        let mut hpos = 0;
+        let symbols = huffman_stage::decode_symbols(&huff, &mut hpos)?;
+        let n = dims.len();
+        if symbols.len() != n {
+            return Err(Error::Corrupt(format!(
+                "symbol count {} != field size {n}",
+                symbols.len()
+            )));
+        }
+
+        let q = LinearQuantizer::from_error_bound(eb_abs, capacity);
+        let mut recon = vec![0.0f32; n];
+        let mut lit_pos = 0usize;
+        let mut next_literal = || -> Result<f32> {
+            if lit_pos + 4 > literals.len() {
+                return Err(Error::Corrupt("literal stream exhausted".into()));
+            }
+            let mut b = [0u8; 4];
+            b.copy_from_slice(&literals[lit_pos..lit_pos + 4]);
+            lit_pos += 4;
+            Ok(f32::from_le_bytes(b))
+        };
+
+        match dims {
+            Dims::D1(_) => {
+                for i in 0..n {
+                    let pred = lorenzo::predict_1d(&recon, i);
+                    recon[i] = if symbols[i] == ESCAPE {
+                        next_literal()?
+                    } else {
+                        (pred as f64 + q.reconstruct(symbols[i])) as f32
+                    };
+                }
+            }
+            Dims::D2(ny, nx) => {
+                for y in 0..ny {
+                    for x in 0..nx {
+                        let i = y * nx + x;
+                        let pred = lorenzo::predict_2d(&recon, nx, y, x);
+                        recon[i] = if symbols[i] == ESCAPE {
+                            next_literal()?
+                        } else {
+                            (pred as f64 + q.reconstruct(symbols[i])) as f32
+                        };
+                    }
+                }
+            }
+            Dims::D3(nz, ny, nx) => {
+                for z in 0..nz {
+                    for y in 0..ny {
+                        for x in 0..nx {
+                            let i = (z * ny + y) * nx + x;
+                            let pred = lorenzo::predict_3d(&recon, ny, nx, z, y, x);
+                            recon[i] = if symbols[i] == ESCAPE {
+                                next_literal()?
+                            } else {
+                                (pred as f64 + q.reconstruct(symbols[i])) as f32
+                            };
+                        }
+                    }
+                }
+            }
+        }
+        Ok((recon, dims))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::spectral::{grf_2d, grf_3d};
+    use crate::metrics::error_stats;
+    use crate::testing::proptest_lite::{forall_vec_f32, Gen};
+    use crate::testing::Rng;
+
+    fn roundtrip_check(data: &[f32], dims: Dims, eb: f64) -> (f64, f64) {
+        let sz = SzCompressor::default();
+        let comp = sz.compress(data, dims, eb).unwrap();
+        let (recon, rdims) = sz.decompress(&comp).unwrap();
+        assert_eq!(rdims, dims);
+        let stats = error_stats(data, &recon);
+        assert!(
+            stats.max_abs_err <= eb * (1.0 + 1e-9),
+            "max err {} > bound {eb}",
+            stats.max_abs_err
+        );
+        (stats.max_abs_err, comp.len() as f64)
+    }
+
+    #[test]
+    fn roundtrip_2d_smooth() {
+        let mut rng = Rng::new(71);
+        let f = grf_2d(&mut rng, 64, 96, 3.0);
+        let (_, bytes) = roundtrip_check(&f, Dims::D2(64, 96), 1e-3);
+        // Smooth field must compress well below 4 B/value.
+        assert!(bytes < (f.len() * 2) as f64, "too large: {bytes}");
+    }
+
+    #[test]
+    fn roundtrip_3d() {
+        let mut rng = Rng::new(72);
+        let f = grf_3d(&mut rng, 16, 24, 24, 2.5);
+        roundtrip_check(&f, Dims::D3(16, 24, 24), 1e-3);
+    }
+
+    #[test]
+    fn roundtrip_1d() {
+        let mut rng = Rng::new(73);
+        let f: Vec<f32> = (0..5000)
+            .map(|i| (i as f32 * 0.01).sin() + 0.001 * rng.gauss() as f32)
+            .collect();
+        roundtrip_check(&f, Dims::D1(5000), 1e-4);
+    }
+
+    #[test]
+    fn constant_field_tiny_output() {
+        let f = vec![3.25f32; 10_000];
+        let sz = SzCompressor::default();
+        let comp = sz.compress(&f, Dims::D1(10_000), 1e-6).unwrap();
+        assert!(comp.len() < 2000, "constant field should compress hard: {}", comp.len());
+        let (recon, _) = sz.decompress(&comp).unwrap();
+        for &v in &recon {
+            assert!((v - 3.25).abs() <= 1e-6);
+        }
+    }
+
+    #[test]
+    fn all_unpredictable_still_bounded() {
+        // White noise with a tiny bound: most points overflow the bins
+        // (become literals) yet the bound must still hold exactly.
+        let mut rng = Rng::new(74);
+        let f: Vec<f32> = (0..4000).map(|_| rng.range_f64(-1e6, 1e6) as f32).collect();
+        roundtrip_check(&f, Dims::D1(4000), 1e-8);
+    }
+
+    #[test]
+    fn tighter_bound_bigger_stream() {
+        let mut rng = Rng::new(75);
+        let f = grf_2d(&mut rng, 64, 64, 2.5);
+        let sz = SzCompressor::default();
+        let loose = sz.compress(&f, Dims::D2(64, 64), 1e-2).unwrap();
+        let tight = sz.compress(&f, Dims::D2(64, 64), 1e-5).unwrap();
+        assert!(tight.len() > loose.len());
+    }
+
+    #[test]
+    fn zstd_stage_roundtrip() {
+        let mut rng = Rng::new(76);
+        let f = grf_2d(&mut rng, 48, 48, 3.5);
+        let sz = SzCompressor::new(SzConfig { zstd_stage: true, ..Default::default() });
+        let comp = sz.compress(&f, Dims::D2(48, 48), 1e-3).unwrap();
+        let (recon, _) = sz.decompress(&comp).unwrap();
+        let stats = error_stats(&f, &recon);
+        assert!(stats.max_abs_err <= 1e-3 * (1.0 + 1e-9));
+    }
+
+    #[test]
+    fn rejects_bad_args() {
+        let sz = SzCompressor::default();
+        assert!(sz.compress(&[1.0], Dims::D1(1), 0.0).is_err());
+        assert!(sz.compress(&[1.0], Dims::D1(2), 1e-3).is_err());
+        assert!(sz.compress(&[], Dims::D1(0), 1e-3).is_err());
+    }
+
+    #[test]
+    fn corrupt_stream_rejected() {
+        let mut rng = Rng::new(77);
+        let f = grf_2d(&mut rng, 16, 16, 2.0);
+        let sz = SzCompressor::default();
+        let mut comp = sz.compress(&f, Dims::D2(16, 16), 1e-3).unwrap();
+        comp[0] ^= 0xFF; // clobber magic
+        assert!(sz.decompress(&comp).is_err());
+        assert!(sz.decompress(&comp[..4]).is_err());
+    }
+
+    #[test]
+    fn prop_error_bound_always_holds() {
+        // Property test (Theorem 1 corollary): the pointwise bound holds
+        // for arbitrary inputs, including wide dynamic range.
+        let sz = SzCompressor::default();
+        forall_vec_f32(
+            "sz pointwise bound",
+            40,
+            Gen::vec_f32_wide(1..400),
+            move |v| {
+                let eb = 1e-3 * crate::metrics::value_range(v).max(1e-6);
+                let comp = match sz.compress(v, Dims::D1(v.len()), eb) {
+                    Ok(c) => c,
+                    Err(_) => return false,
+                };
+                let (recon, _) = sz.decompress(&comp).unwrap();
+                v.iter()
+                    .zip(&recon)
+                    .all(|(&a, &b)| (a as f64 - b as f64).abs() <= eb * (1.0 + 1e-9))
+            },
+        );
+    }
+
+    #[test]
+    fn prop_smooth_fields_compress() {
+        let sz = SzCompressor::default();
+        forall_vec_f32(
+            "sz smooth ratio > 4",
+            15,
+            Gen::vec_f32_smooth(2000..4000, 100.0),
+            move |v| {
+                if v.len() < 1000 {
+                    return true; // fixed headers dominate tiny inputs
+                }
+                let eb = 1e-3 * crate::metrics::value_range(v).max(1e-6);
+                let comp = sz.compress(v, Dims::D1(v.len()), eb).unwrap();
+                comp.len() * 4 < v.len() * 4 // ratio > 4
+            },
+        );
+    }
+}

@@ -1,0 +1,101 @@
+//! Stage III for SZ: canonical Huffman over quantization symbols with a
+//! serialized code table, plus an optional zstd pass over the whole
+//! payload (SZ-1.4's optional gzip stage, upgraded).
+
+use crate::codec::{varint, BitReader, BitWriter, HuffmanDecoder, HuffmanEncoder};
+use crate::{Error, Result};
+
+/// Encode a symbol stream: returns `table ‖ bitstream` with framing.
+pub fn encode_symbols(symbols: &[u32]) -> Result<Vec<u8>> {
+    let enc = HuffmanEncoder::from_symbols(symbols)?;
+    let mut w = BitWriter::with_capacity(symbols.len() / 4);
+    enc.encode(symbols, &mut w)?;
+    let table = enc.serialize_table();
+    let bits = w.finish();
+
+    let mut out = Vec::with_capacity(table.len() + bits.len() + 16);
+    varint::write_u64(&mut out, symbols.len() as u64);
+    varint::write_bytes(&mut out, &table);
+    varint::write_bytes(&mut out, &bits);
+    Ok(out)
+}
+
+/// Decode a stream produced by [`encode_symbols`].
+pub fn decode_symbols(buf: &[u8], pos: &mut usize) -> Result<Vec<u32>> {
+    let n = varint::read_u64(buf, pos)? as usize;
+    let table = varint::read_bytes(buf, pos)?;
+    let bits = varint::read_bytes(buf, pos)?;
+    let mut tpos = 0;
+    let dec = HuffmanDecoder::deserialize_table(table, &mut tpos)?;
+    if tpos != table.len() {
+        return Err(Error::Corrupt("huffman table has trailing bytes".into()));
+    }
+    let mut r = BitReader::new(bits);
+    let mut out = Vec::with_capacity(n);
+    dec.decode(&mut r, n, &mut out)?;
+    Ok(out)
+}
+
+/// Optional lossless recompression of a payload. Level 1 keeps the
+/// throughput hit small; SZ gets most of its ratio from Huffman already.
+pub fn zstd_pack(payload: &[u8]) -> Result<Vec<u8>> {
+    zstd::bulk::compress(payload, 1)
+        .map_err(|e| Error::Other(format!("zstd compress: {e}")))
+}
+
+/// Inverse of [`zstd_pack`].
+pub fn zstd_unpack(payload: &[u8], capacity_hint: usize) -> Result<Vec<u8>> {
+    zstd::bulk::decompress(payload, capacity_hint.max(1 << 16))
+        .map_err(|e| Error::Other(format!("zstd decompress: {e}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::Rng;
+
+    #[test]
+    fn symbols_roundtrip() {
+        let mut rng = Rng::new(61);
+        let syms: Vec<u32> = (0..10_000)
+            .map(|_| {
+                // centered, peaked distribution like quantized pred errors
+                let g = rng.gauss() * 20.0;
+                (32768.0 + g).round().max(1.0) as u32
+            })
+            .collect();
+        let enc = encode_symbols(&syms).unwrap();
+        let mut pos = 0;
+        let dec = decode_symbols(&enc, &mut pos).unwrap();
+        assert_eq!(pos, enc.len());
+        assert_eq!(dec, syms);
+    }
+
+    #[test]
+    fn peaked_stream_compresses() {
+        let mut rng = Rng::new(62);
+        let syms: Vec<u32> = (0..100_000)
+            .map(|_| if rng.bool(0.95) { 32768 } else { 32768 + rng.range(1, 64) as u32 })
+            .collect();
+        let enc = encode_symbols(&syms).unwrap();
+        // 100k symbols at ~0.4 bits each ≈ 5 KB; must beat 2 B/symbol.
+        assert!(enc.len() < syms.len() / 2, "stage III too large: {}", enc.len());
+    }
+
+    #[test]
+    fn zstd_roundtrip() {
+        let data: Vec<u8> = (0..10_000u32).flat_map(|i| (i % 17).to_le_bytes()).collect();
+        let packed = zstd_pack(&data).unwrap();
+        assert!(packed.len() < data.len());
+        let unpacked = zstd_unpack(&packed, data.len()).unwrap();
+        assert_eq!(unpacked, data);
+    }
+
+    #[test]
+    fn truncated_stream_errors() {
+        let syms = vec![1u32, 2, 3, 4, 5];
+        let enc = encode_symbols(&syms).unwrap();
+        let mut pos = 0;
+        assert!(decode_symbols(&enc[..enc.len() - 2], &mut pos).is_err());
+    }
+}

@@ -1,0 +1,159 @@
+//! Lorenzo predictor (Ibarria et al. 2003): approximates each data
+//! point from its preceding adjacent neighbors — 1 neighbor in 1D, 3 in
+//! 2D, 7 in 3D (paper §4.1, footnote 1).
+//!
+//! Two flavours are provided:
+//! * `predict_*_recon` — prediction from the **reconstructed** buffer,
+//!   used inside the codec loop (required for Theorem 1 to hold);
+//! * [`prediction_errors_original`] — prediction from **original**
+//!   neighbors, used by the online estimator on sampled points (paper
+//!   §4.3: "the prediction over the sampled data points is actually
+//!   based on their original real neighbors").
+
+use crate::data::field::Dims;
+
+/// Lorenzo prediction for point `i` of a 1D array from reconstructed
+/// values. Out-of-domain neighbors read as 0 (SZ convention).
+#[inline(always)]
+pub fn predict_1d(recon: &[f32], i: usize) -> f32 {
+    if i >= 1 {
+        recon[i - 1]
+    } else {
+        0.0
+    }
+}
+
+/// 2D Lorenzo: f(x−1,y) + f(x,y−1) − f(x−1,y−1).
+#[inline(always)]
+pub fn predict_2d(recon: &[f32], nx: usize, y: usize, x: usize) -> f32 {
+    let i = y * nx + x;
+    let left = if x >= 1 { recon[i - 1] } else { 0.0 };
+    let up = if y >= 1 { recon[i - nx] } else { 0.0 };
+    let diag = if x >= 1 && y >= 1 { recon[i - nx - 1] } else { 0.0 };
+    left + up - diag
+}
+
+/// 3D Lorenzo: 7-neighbor inclusion–exclusion.
+#[inline(always)]
+pub fn predict_3d(recon: &[f32], ny: usize, nx: usize, z: usize, y: usize, x: usize) -> f32 {
+    let i = (z * ny + y) * nx + x;
+    let sxy = nx * ny;
+    let fx = |c: bool, off: usize| if c { recon[i - off] } else { 0.0 };
+    // + f(x-1) + f(y-1) + f(z-1) - f(x-1,y-1) - f(x-1,z-1) - f(y-1,z-1) + f(x-1,y-1,z-1)
+    fx(x >= 1, 1) + fx(y >= 1, nx) + fx(z >= 1, sxy) - fx(x >= 1 && y >= 1, nx + 1)
+        - fx(x >= 1 && z >= 1, sxy + 1)
+        - fx(y >= 1 && z >= 1, sxy + nx)
+        + fx(x >= 1 && y >= 1 && z >= 1, sxy + nx + 1)
+}
+
+/// Prediction errors computed against **original** neighbors for a set
+/// of sampled linear indices — the estimator's Stage-I transform.
+/// Returns one error per sample.
+pub fn prediction_errors_original(data: &[f32], dims: Dims, samples: &[usize]) -> Vec<f32> {
+    match dims {
+        Dims::D1(_) => samples
+            .iter()
+            .map(|&i| data[i] - if i >= 1 { data[i - 1] } else { 0.0 })
+            .collect(),
+        Dims::D2(_, nx) => samples
+            .iter()
+            .map(|&i| {
+                let (y, x) = (i / nx, i % nx);
+                data[i] - predict_2d(data, nx, y, x)
+            })
+            .collect(),
+        Dims::D3(_, ny, nx) => samples
+            .iter()
+            .map(|&i| {
+                let sxy = ny * nx;
+                let z = i / sxy;
+                let r = i % sxy;
+                let (y, x) = (r / nx, r % nx);
+                data[i] - predict_3d(data, ny, nx, z, y, x)
+            })
+            .collect(),
+    }
+}
+
+/// Full-field prediction errors against original neighbors (used by
+/// Fig. 4's distribution dump and by tests).
+pub fn prediction_errors_full(data: &[f32], dims: Dims) -> Vec<f32> {
+    let idx: Vec<usize> = (0..data.len()).collect();
+    prediction_errors_original(data, dims, &idx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn predict_1d_edges() {
+        let r = [5.0f32, 7.0];
+        assert_eq!(predict_1d(&r, 0), 0.0);
+        assert_eq!(predict_1d(&r, 1), 5.0);
+    }
+
+    #[test]
+    fn predict_2d_plane_is_exact() {
+        // Lorenzo 2D reproduces any affine plane exactly (its null space).
+        let (ny, nx) = (8, 9);
+        let f = |y: usize, x: usize| 3.0 + 2.0 * y as f32 - 1.5 * x as f32;
+        let grid: Vec<f32> = (0..ny * nx).map(|i| f(i / nx, i % nx)).collect();
+        for y in 1..ny {
+            for x in 1..nx {
+                let p = predict_2d(&grid, nx, y, x);
+                assert!((p - f(y, x)).abs() < 1e-4, "at ({y},{x}): {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn predict_3d_trilinear_is_exact() {
+        let (nz, ny, nx) = (4, 5, 6);
+        let f = |z: usize, y: usize, x: usize| {
+            1.0 + 0.5 * z as f32 - 0.25 * y as f32 + 2.0 * x as f32
+        };
+        let grid: Vec<f32> = (0..nz * ny * nx)
+            .map(|i| {
+                let z = i / (ny * nx);
+                let r = i % (ny * nx);
+                f(z, r / nx, r % nx)
+            })
+            .collect();
+        for z in 1..nz {
+            for y in 1..ny {
+                for x in 1..nx {
+                    let p = predict_3d(&grid, ny, nx, z, y, x);
+                    assert!((p - f(z, y, x)).abs() < 1e-3);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn errors_original_match_manual_2d() {
+        let nx = 3;
+        let data = vec![1.0f32, 2.0, 3.0, 4.0, 6.0, 8.0];
+        let errs = prediction_errors_full(&data, Dims::D2(2, 3));
+        // (0,0): pred 0 -> err 1
+        assert_eq!(errs[0], 1.0);
+        // (1,1): pred = 4 + 2 - 1 = 5, err = 1
+        assert_eq!(errs[1 * nx + 1], 1.0);
+    }
+
+    #[test]
+    fn smooth_data_has_small_errors() {
+        use crate::testing::Rng;
+        let mut rng = Rng::new(41);
+        let f = crate::data::spectral::grf_2d(&mut rng, 128, 128, 3.5);
+        let errs = prediction_errors_full(&f, Dims::D2(128, 128));
+        // Interior errors should be much smaller than the data scale
+        // (unit variance): the predictor removes the smooth component.
+        let med = {
+            let mut abs: Vec<f32> = errs[129..].iter().map(|e| e.abs()).collect();
+            abs.sort_by(f32::total_cmp);
+            abs[abs.len() / 2]
+        };
+        assert!(med < 0.2, "median |err| {med} too large for smooth field");
+    }
+}

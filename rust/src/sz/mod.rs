@@ -1,0 +1,22 @@
+//! SZ-style error-bounded lossy compressor (reimplementation of
+//! SZ-1.4's "default mode": Lorenzo prediction → error-controlled
+//! linear quantization → canonical Huffman coding).
+//!
+//! Pipeline per the paper's three-stage decomposition (Fig. 1):
+//! * **Stage I (lossless)** — [`lorenzo`]: prediction-based
+//!   transformation (PBT). The prediction uses *decompressed* neighbor
+//!   values so compression and decompression share the exact predictor
+//!   state (Theorem 1 of the paper).
+//! * **Stage II (lossy)** — [`quant`]: linear quantization with bin
+//!   size δ = 2·eb into 2n−1 bins (default 65,535); out-of-range
+//!   prediction errors become "unpredictable" literals.
+//! * **Stage III (lossless)** — [`huffman_stage`]: canonical Huffman
+//!   over the bin indices, optional zstd recompression of the payload.
+
+pub mod compressor;
+pub mod huffman_stage;
+pub mod lorenzo;
+pub mod quant;
+pub mod relative;
+
+pub use compressor::{SzCompressor, SzConfig};

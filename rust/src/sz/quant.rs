@@ -1,0 +1,274 @@
+//! Stage-II quantizers (paper §5.1.4): linear (SZ's choice), log-scale,
+//! and equal-probability. The codec uses [`LinearQuantizer`]; the other
+//! two exist for the §5.1.4 analysis and the `ablation_quant` bench.
+
+/// Linear quantizer: 2n−1 equal bins of width δ centered on zero.
+/// Bin index `n-1` (0-based "center") holds errors in (−δ/2, δ/2];
+/// symbol 0 is reserved as the "unpredictable" escape.
+#[derive(Clone, Copy, Debug)]
+pub struct LinearQuantizer {
+    /// Bin width δ = 2·eb.
+    pub delta: f64,
+    /// Number of bins on each side of center: total bins = 2n−1.
+    pub n: u32,
+}
+
+/// Reserved escape symbol for unpredictable (out-of-range) values.
+pub const ESCAPE: u32 = 0;
+
+impl LinearQuantizer {
+    /// SZ convention: bin size is twice the absolute error bound so the
+    /// quantized value (bin midpoint) is within `eb` of the input.
+    pub fn from_error_bound(eb_abs: f64, capacity: u32) -> Self {
+        assert!(eb_abs > 0.0, "error bound must be positive");
+        assert!(capacity >= 3, "need at least 3 bins");
+        LinearQuantizer { delta: 2.0 * eb_abs, n: capacity / 2 }
+    }
+
+    /// The absolute error bound this quantizer guarantees.
+    #[inline]
+    pub fn error_bound(&self) -> f64 {
+        self.delta / 2.0
+    }
+
+    /// Total number of quantization bins (2n−1).
+    #[inline]
+    pub fn num_bins(&self) -> u32 {
+        2 * self.n - 1
+    }
+
+    /// Quantize a prediction error. Returns `Some(symbol)` with symbol
+    /// in `1..=2n-1` (center = n), or `None` if out of range
+    /// (unpredictable — caller emits the escape + literal).
+    #[inline(always)]
+    pub fn quantize(&self, err: f64) -> Option<u32> {
+        // round-to-nearest bin index offset from center
+        let q = (err / self.delta).round();
+        if q.abs() < self.n as f64 {
+            Some((q as i64 + self.n as i64) as u32)
+        } else {
+            None
+        }
+    }
+
+    /// Reconstruct the quantized error from a symbol (bin midpoint).
+    #[inline(always)]
+    pub fn reconstruct(&self, symbol: u32) -> f64 {
+        debug_assert!(symbol >= 1 && symbol <= self.num_bins());
+        (symbol as i64 - self.n as i64) as f64 * self.delta
+    }
+}
+
+/// Log-scale quantizer (paper §5.1.4, "Log-scale quantization"):
+/// bin widths grow geometrically away from zero — finer bins at the
+/// high-frequency central region, so PSNR is higher but entropy coding
+/// is poorer.
+///
+/// Magnitudes span [x0, max_abs] over n−1 geometric bins per sign, with
+/// x0 = max_abs·2⁻²⁰ the dynamic floor (|x| ≤ x0 maps to the zero bin).
+#[derive(Clone, Debug)]
+pub struct LogQuantizer {
+    /// Geometric ratio b between consecutive bin edges.
+    pub base: f64,
+    /// Half-bin count n (total 2n−1).
+    pub n: u32,
+    /// Magnitude floor x0 (the central bin is (−x0, x0)).
+    pub floor: f64,
+    /// Width of the central bin (2·x0).
+    pub center_width: f64,
+}
+
+impl LogQuantizer {
+    /// Build covering max absolute value `max_abs` with 2n−1 bins.
+    pub fn new(max_abs: f64, n: u32) -> Self {
+        assert!(n >= 2);
+        let max_abs = max_abs.max(f64::MIN_POSITIVE);
+        let floor = max_abs * 2.0f64.powi(-20);
+        // b^(n-1) spans floor..max_abs.
+        let base = (max_abs / floor).powf(1.0 / (n - 1) as f64).max(1.0 + 1e-12);
+        LogQuantizer { base, n, floor, center_width: 2.0 * floor }
+    }
+
+    /// Quantize to a symbol in 0..2n−1 (center = n−1, 0-based).
+    pub fn quantize(&self, x: f64) -> u32 {
+        let n = self.n as i64;
+        if x.abs() <= self.floor {
+            return (n - 1) as u32;
+        }
+        let k = (x.abs() / self.floor).log(self.base).floor() as i64;
+        let k = k.clamp(0, n - 2);
+        if x < 0.0 {
+            (n - 2 - k) as u32
+        } else {
+            (n + k) as u32
+        }
+    }
+
+    /// Midpoint reconstruction.
+    pub fn reconstruct(&self, symbol: u32) -> f64 {
+        let n = self.n as i64;
+        let s = symbol as i64;
+        if s == n - 1 {
+            return 0.0;
+        }
+        let (sign, k) = if s < n - 1 { (-1.0, n - 2 - s) } else { (1.0, s - n) };
+        // Bin spans floor·[b^k, b^(k+1)): midpoint.
+        sign * 0.5 * self.floor * (self.base.powi(k as i32) + self.base.powi(k as i32 + 1))
+    }
+
+    /// Width of a bin by symbol.
+    pub fn bin_width(&self, symbol: u32) -> f64 {
+        let n = self.n as i64;
+        let s = symbol as i64;
+        if s == n - 1 {
+            return self.center_width;
+        }
+        let k = if s < n - 1 { n - 2 - s } else { s - n };
+        self.floor * (self.base.powi(k as i32 + 1) - self.base.powi(k as i32))
+    }
+}
+
+/// Equal-probability quantizer (paper §5.1.4, NUMARCK-style): bin
+/// edges at empirical quantiles so every bin has probability
+/// ≈ 1/(2n−1). Entropy coding then has no effect (uniform symbols).
+#[derive(Clone, Debug)]
+pub struct EqualProbQuantizer {
+    /// Sorted bin edges, len = num_bins + 1.
+    pub edges: Vec<f64>,
+    /// Midpoints (reconstruction values), len = num_bins.
+    pub mids: Vec<f64>,
+}
+
+impl EqualProbQuantizer {
+    /// Fit edges to the empirical distribution of `values`.
+    pub fn fit(values: &[f64], num_bins: u32) -> Self {
+        assert!(!values.is_empty() && num_bins >= 1);
+        let mut sorted = values.to_vec();
+        sorted.sort_by(f64::total_cmp);
+        let nb = num_bins as usize;
+        let mut edges = Vec::with_capacity(nb + 1);
+        for i in 0..=nb {
+            let q = i as f64 / nb as f64;
+            let pos = (q * (sorted.len() - 1) as f64) as usize;
+            edges.push(sorted[pos.min(sorted.len() - 1)]);
+        }
+        // De-duplicate degenerate edges by nudging.
+        for i in 1..edges.len() {
+            if edges[i] <= edges[i - 1] {
+                edges[i] = edges[i - 1] + f64::EPSILON * edges[i - 1].abs().max(1e-300);
+            }
+        }
+        let mids = (0..nb).map(|i| 0.5 * (edges[i] + edges[i + 1])).collect();
+        EqualProbQuantizer { edges, mids }
+    }
+
+    /// Quantize by binary search over edges.
+    pub fn quantize(&self, x: f64) -> u32 {
+        let nb = self.mids.len();
+        match self.edges[1..nb].binary_search_by(|e| e.total_cmp(&x)) {
+            Ok(i) => (i + 1) as u32,
+            Err(i) => i as u32,
+        }
+    }
+
+    pub fn reconstruct(&self, symbol: u32) -> f64 {
+        self.mids[symbol as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::Rng;
+
+    #[test]
+    fn linear_roundtrip_within_bound() {
+        let q = LinearQuantizer::from_error_bound(0.01, 65535);
+        let mut rng = Rng::new(51);
+        for _ in 0..10_000 {
+            let err = rng.range_f64(-300.0, 300.0);
+            if let Some(sym) = q.quantize(err) {
+                let rec = q.reconstruct(sym);
+                assert!(
+                    (rec - err).abs() <= q.error_bound() * (1.0 + 1e-12),
+                    "err {err} rec {rec}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn linear_center_is_zero() {
+        let q = LinearQuantizer::from_error_bound(0.5, 255);
+        let sym = q.quantize(0.0).unwrap();
+        assert_eq!(q.reconstruct(sym), 0.0);
+    }
+
+    #[test]
+    fn linear_out_of_range_is_none() {
+        let q = LinearQuantizer::from_error_bound(1e-6, 15);
+        assert!(q.quantize(1.0).is_none());
+        assert!(q.quantize(-1.0).is_none());
+        assert!(q.quantize(0.0).is_some());
+    }
+
+    #[test]
+    fn linear_symbols_in_declared_range() {
+        let q = LinearQuantizer::from_error_bound(0.1, 255);
+        for err in [-12.0, -0.05, 0.0, 0.05, 12.0] {
+            if let Some(s) = q.quantize(err) {
+                assert!(s >= 1 && s <= q.num_bins());
+            }
+        }
+    }
+
+    #[test]
+    fn log_quantizer_finer_near_zero() {
+        let q = LogQuantizer::new(1000.0, 32);
+        // Reconstruction error relative to magnitude is bounded by base.
+        let small = 2.0;
+        let big = 800.0;
+        let es = (q.reconstruct(q.quantize(small)) - small).abs();
+        let eb = (q.reconstruct(q.quantize(big)) - big).abs();
+        assert!(es < eb, "log quantizer should be finer near zero: {es} vs {eb}");
+    }
+
+    #[test]
+    fn log_quantizer_sign_symmetry() {
+        let q = LogQuantizer::new(100.0, 16);
+        for x in [1.5f64, 7.0, 42.0, 99.0] {
+            let sp = q.reconstruct(q.quantize(x));
+            let sn = q.reconstruct(q.quantize(-x));
+            assert!((sp + sn).abs() < 1e-9, "x {x}: {sp} vs {sn}");
+        }
+    }
+
+    #[test]
+    fn equal_prob_uniform_occupancy() {
+        let mut rng = Rng::new(52);
+        let vals: Vec<f64> = (0..20_000).map(|_| rng.gauss()).collect();
+        let q = EqualProbQuantizer::fit(&vals, 16);
+        let mut counts = vec![0u64; 16];
+        for &v in &vals {
+            counts[q.quantize(v) as usize] += 1;
+        }
+        let expect = vals.len() as f64 / 16.0;
+        for &c in &counts {
+            assert!(
+                (c as f64) > 0.5 * expect && (c as f64) < 1.6 * expect,
+                "occupancy skewed: {counts:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn equal_prob_reconstruct_in_bin() {
+        let vals: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        let q = EqualProbQuantizer::fit(&vals, 10);
+        for &v in &[0.0, 250.0, 999.0] {
+            let s = q.quantize(v);
+            let r = q.reconstruct(s);
+            assert!(r >= q.edges[s as usize] && r <= q.edges[s as usize + 1]);
+        }
+    }
+}

@@ -1,0 +1,195 @@
+//! Pointwise-relative error bound mode for SZ (the mode Lu et al.'s
+//! selection baseline used, paper §6.4; implemented with the
+//! logarithmic preprocessing of Liang et al. [paper ref 27]).
+//!
+//! |x̃ − x| ≤ eb_rel·|x| for every nonzero x, via:
+//! 1. y = ln|x| (signs and exact zeros kept in bit maps);
+//! 2. absolute-bound SZ on y with eb_log = ln(1 + eb_rel);
+//! 3. x̃ = sign · exp(ỹ): |ỹ − y| ≤ eb_log ⇒ x̃/x ∈ [1/(1+eb_rel), 1+eb_rel].
+
+use super::compressor::{SzCompressor, SzConfig};
+use crate::codec::varint;
+use crate::data::field::Dims;
+use crate::{Error, Result};
+
+const MAGIC: u32 = 0x535A_5250; // "SZRP"
+
+/// Pack a bool slice into bytes (LSB-first).
+fn pack_bits(bits: &[bool]) -> Vec<u8> {
+    let mut out = vec![0u8; bits.len().div_ceil(8)];
+    for (i, &b) in bits.iter().enumerate() {
+        if b {
+            out[i / 8] |= 1 << (i % 8);
+        }
+    }
+    out
+}
+
+fn unpack_bit(bytes: &[u8], i: usize) -> bool {
+    bytes[i / 8] & (1 << (i % 8)) != 0
+}
+
+/// Compress with a pointwise relative error bound.
+pub fn compress_pw_rel(
+    cfg: SzConfig,
+    data: &[f32],
+    dims: Dims,
+    eb_rel: f64,
+) -> Result<Vec<u8>> {
+    if !(eb_rel > 0.0 && eb_rel < 1.0) {
+        return Err(Error::InvalidArg(format!("pointwise relative bound {eb_rel} not in (0,1)")));
+    }
+    if dims.len() != data.len() || data.is_empty() {
+        return Err(Error::InvalidArg("dims/data mismatch or empty".into()));
+    }
+
+    // Log-domain transform. Exact zeros become the domain's floor value
+    // (restored exactly from the zero map, so the floor is arbitrary).
+    let mut min_log = f64::INFINITY;
+    for &x in data {
+        if x != 0.0 {
+            min_log = min_log.min((x.abs() as f64).ln());
+        }
+    }
+    if !min_log.is_finite() {
+        min_log = 0.0; // all-zero field
+    }
+    let signs: Vec<bool> = data.iter().map(|&x| x < 0.0).collect();
+    let zeros: Vec<bool> = data.iter().map(|&x| x == 0.0).collect();
+    let logs: Vec<f32> = data
+        .iter()
+        .map(|&x| if x == 0.0 { min_log as f32 } else { (x.abs() as f64).ln() as f32 })
+        .collect();
+
+    let eb_log = (1.0 + eb_rel).ln();
+    // f32 storage of ln|x| costs up to 2^-24 relative slack; shrink the
+    // quantizer bound so the end-to-end guarantee still holds.
+    let eb_log = eb_log * 0.98;
+    let sz = SzCompressor::new(cfg);
+    let payload = sz.compress(&logs, dims, eb_log)?;
+
+    let mut out = Vec::with_capacity(payload.len() + data.len() / 4 + 32);
+    varint::write_u64(&mut out, MAGIC as u64);
+    varint::write_f64(&mut out, eb_rel);
+    varint::write_bytes(&mut out, &pack_bits(&signs));
+    varint::write_bytes(&mut out, &pack_bits(&zeros));
+    varint::write_bytes(&mut out, &payload);
+    Ok(out)
+}
+
+/// Decompress a pointwise-relative stream.
+pub fn decompress_pw_rel(cfg: SzConfig, buf: &[u8]) -> Result<(Vec<f32>, Dims)> {
+    let mut pos = 0usize;
+    let magic = varint::read_u64(buf, &mut pos)?;
+    if magic != MAGIC as u64 {
+        return Err(Error::Corrupt(format!("bad SZRP magic {magic:#x}")));
+    }
+    let _eb_rel = varint::read_f64(buf, &mut pos)?;
+    let signs = varint::read_bytes(buf, &mut pos)?.to_vec();
+    let zeros = varint::read_bytes(buf, &mut pos)?.to_vec();
+    let payload = varint::read_bytes(buf, &mut pos)?;
+
+    let sz = SzCompressor::new(cfg);
+    let (logs, dims) = sz.decompress(payload)?;
+    if signs.len() < dims.len().div_ceil(8) || zeros.len() < dims.len().div_ceil(8) {
+        return Err(Error::Corrupt("bit maps too short".into()));
+    }
+    let out = logs
+        .iter()
+        .enumerate()
+        .map(|(i, &l)| {
+            if unpack_bit(&zeros, i) {
+                0.0
+            } else {
+                let mag = (l as f64).exp() as f32;
+                if unpack_bit(&signs, i) {
+                    -mag
+                } else {
+                    mag
+                }
+            }
+        })
+        .collect();
+    Ok((out, dims))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::Rng;
+
+    fn check(data: &[f32], eb_rel: f64) {
+        let cfg = SzConfig::default();
+        let comp = compress_pw_rel(cfg, data, Dims::D1(data.len()), eb_rel).unwrap();
+        let (recon, _) = decompress_pw_rel(cfg, &comp).unwrap();
+        for (i, (&a, &b)) in data.iter().zip(&recon).enumerate() {
+            if a == 0.0 {
+                assert_eq!(b, 0.0, "zero not exact at {i}");
+            } else {
+                let rel = ((b as f64 - a as f64) / a as f64).abs();
+                assert!(rel <= eb_rel * (1.0 + 1e-6), "i {i}: rel err {rel} > {eb_rel}");
+                assert_eq!(a < 0.0, b < 0.0, "sign flipped at {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn pointwise_relative_bound_holds() {
+        let mut rng = Rng::new(181);
+        let data: Vec<f32> = (0..5000)
+            .map(|_| ((rng.gauss() * 3.0).exp() * if rng.bool(0.5) { -1.0 } else { 1.0 }) as f32)
+            .collect();
+        check(&data, 1e-2);
+        check(&data, 1e-3);
+    }
+
+    #[test]
+    fn zeros_and_huge_dynamic_range() {
+        let mut rng = Rng::new(182);
+        let data: Vec<f32> = (0..3000)
+            .map(|_| match rng.below(4) {
+                0 => 0.0,
+                1 => (rng.f64() * 1e-20) as f32,
+                2 => (rng.f64() * 1e20) as f32,
+                _ => rng.gauss() as f32,
+            })
+            .collect();
+        check(&data, 1e-2);
+    }
+
+    #[test]
+    fn all_zero_field() {
+        check(&[0.0; 100], 1e-3);
+    }
+
+    #[test]
+    fn smooth_log_data_compresses_well() {
+        // Exponentially varying data is linear in log space — the
+        // whole point of the transform scheme.
+        let data: Vec<f32> = (0..10_000).map(|i| (i as f32 * 1e-3).exp()).collect();
+        let cfg = SzConfig::default();
+        let comp = compress_pw_rel(cfg, &data, Dims::D1(data.len()), 1e-3).unwrap();
+        assert!(
+            comp.len() * 8 < data.len() * 4,
+            "expected ratio > 8, got {}",
+            data.len() as f64 * 4.0 / comp.len() as f64
+        );
+    }
+
+    #[test]
+    fn rejects_bad_bounds() {
+        let cfg = SzConfig::default();
+        assert!(compress_pw_rel(cfg, &[1.0], Dims::D1(1), 0.0).is_err());
+        assert!(compress_pw_rel(cfg, &[1.0], Dims::D1(1), 1.5).is_err());
+    }
+
+    #[test]
+    fn corrupt_stream_rejected() {
+        let cfg = SzConfig::default();
+        let comp = compress_pw_rel(cfg, &[1.0, 2.0, 3.0, 4.0], Dims::D1(4), 1e-2).unwrap();
+        assert!(decompress_pw_rel(cfg, &comp[..5]).is_err());
+        let mut bad = comp.clone();
+        bad[0] ^= 0xFF;
+        assert!(decompress_pw_rel(cfg, &bad).is_err());
+    }
+}

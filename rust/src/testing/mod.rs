@@ -1,0 +1,9 @@
+//! Test / simulation support: deterministic PRNG and a minimal
+//! property-testing harness (`proptest` is unavailable in the offline
+//! build environment; `proptest_lite` covers the same invariant-testing
+//! role — see DESIGN.md §9).
+
+pub mod proptest_lite;
+pub mod rng;
+
+pub use rng::Rng;

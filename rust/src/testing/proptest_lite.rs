@@ -1,0 +1,226 @@
+//! Minimal property-based testing harness.
+//!
+//! The offline build environment has no `proptest`, so this module
+//! provides the subset we need: composable random generators, a
+//! `forall` runner that reports the failing case and seed, and greedy
+//! shrinking for `Vec`-shaped inputs (halving + element-simplification).
+//!
+//! Usage (`no_run`: doctest binaries don't get the xla rpath flags;
+//! the same code paths are exercised by this module's unit tests):
+//! ```no_run
+//! use adaptivec::testing::proptest_lite::{forall, Gen};
+//! forall("sum is commutative", 200, Gen::vec_f32(0..64, -1e3..1e3), |xs| {
+//!     let a: f32 = xs.iter().sum();
+//!     let b: f32 = xs.iter().rev().sum();
+//!     (a - b).abs() <= 1e-3 * a.abs().max(1.0)
+//! });
+//! ```
+
+use super::rng::Rng;
+use std::ops::Range;
+
+/// A reusable random-value generator.
+pub struct Gen<T> {
+    gen: Box<dyn Fn(&mut Rng) -> T>,
+}
+
+impl<T: 'static> Gen<T> {
+    pub fn new(f: impl Fn(&mut Rng) -> T + 'static) -> Self {
+        Gen { gen: Box::new(f) }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> T {
+        (self.gen)(rng)
+    }
+
+    /// Map the generated value.
+    pub fn map<U: 'static>(self, f: impl Fn(T) -> U + 'static) -> Gen<U> {
+        Gen::new(move |r| f(self.sample(r)))
+    }
+}
+
+impl Gen<f32> {
+    /// Uniform f32 in range.
+    pub fn f32(range: Range<f32>) -> Gen<f32> {
+        Gen::new(move |r| r.range_f64(range.start as f64, range.end as f64) as f32)
+    }
+
+    /// "Nasty" floats: mixes uniform values with zeros, denormal-scale,
+    /// huge-scale and negative values — exercises exponent-alignment
+    /// paths in the codecs.
+    pub fn f32_wide() -> Gen<f32> {
+        Gen::new(|r| match r.below(8) {
+            0 => 0.0,
+            1 => r.range_f64(-1e-30, 1e-30) as f32,
+            2 => r.range_f64(-1e30, 1e30) as f32,
+            3 => (r.range_f64(-1.0, 1.0) * 1e-6) as f32,
+            _ => r.range_f64(-1e4, 1e4) as f32,
+        })
+    }
+}
+
+impl Gen<usize> {
+    pub fn usize(range: Range<usize>) -> Gen<usize> {
+        Gen::new(move |r| r.range(range.start, range.end))
+    }
+}
+
+impl Gen<Vec<f32>> {
+    /// Vec of uniform f32 with random length.
+    pub fn vec_f32(len: Range<usize>, vals: Range<f32>) -> Gen<Vec<f32>> {
+        Gen::new(move |r| {
+            let n = r.range(len.start, len.end.max(len.start + 1));
+            (0..n)
+                .map(|_| r.range_f64(vals.start as f64, vals.end as f64) as f32)
+                .collect()
+        })
+    }
+
+    /// Vec of wide-dynamic-range f32.
+    pub fn vec_f32_wide(len: Range<usize>) -> Gen<Vec<f32>> {
+        let elem = Gen::f32_wide();
+        Gen::new(move |r| {
+            let n = r.range(len.start, len.end.max(len.start + 1));
+            (0..n).map(|_| elem.sample(r)).collect()
+        })
+    }
+
+    /// Smooth (correlated) vectors — adjacent values differ slowly.
+    /// Compressor-friendly inputs that exercise the predictive paths.
+    pub fn vec_f32_smooth(len: Range<usize>, scale: f32) -> Gen<Vec<f32>> {
+        Gen::new(move |r| {
+            let n = r.range(len.start, len.end.max(len.start + 1));
+            let mut v = Vec::with_capacity(n);
+            let mut x = r.range_f64(-1.0, 1.0) * scale as f64;
+            for _ in 0..n {
+                x += r.gauss() * 0.01 * scale as f64;
+                v.push(x as f32);
+            }
+            v
+        })
+    }
+}
+
+/// Run `prop` on `iters` random samples from `gen`. Panics with the
+/// (shrunk, when possible) counterexample on failure.
+pub fn forall<T: std::fmt::Debug + Clone + 'static>(
+    name: &str,
+    iters: usize,
+    gen: Gen<T>,
+    prop: impl Fn(&T) -> bool,
+) {
+    // Deterministic per-property seed so failures are reproducible.
+    let seed = name
+        .bytes()
+        .fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+            (h ^ b as u64).wrapping_mul(0x1000_0000_01b3)
+        });
+    let mut rng = Rng::new(seed);
+    for i in 0..iters {
+        let input = gen.sample(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property '{name}' failed at iteration {i} (seed {seed:#x}):\n  input = {input:?}"
+            );
+        }
+    }
+}
+
+/// `forall` specialised to Vec<f32> with greedy shrinking on failure.
+pub fn forall_vec_f32(
+    name: &str,
+    iters: usize,
+    gen: Gen<Vec<f32>>,
+    prop: impl Fn(&[f32]) -> bool,
+) {
+    let seed = name
+        .bytes()
+        .fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+            (h ^ b as u64).wrapping_mul(0x1000_0000_01b3)
+        });
+    let mut rng = Rng::new(seed);
+    for i in 0..iters {
+        let input = gen.sample(&mut rng);
+        if !prop(&input) {
+            let shrunk = shrink_vec_f32(&input, &prop);
+            panic!(
+                "property '{name}' failed at iteration {i} (seed {seed:#x}):\n  \
+                 original len {}, shrunk counterexample = {shrunk:?}",
+                input.len()
+            );
+        }
+    }
+}
+
+/// Greedy shrink: try dropping halves, then chunks, then simplifying
+/// individual elements toward zero. Keeps any transformation that still
+/// fails the property.
+fn shrink_vec_f32(input: &[f32], prop: &impl Fn(&[f32]) -> bool) -> Vec<f32> {
+    let mut cur = input.to_vec();
+    // Phase 1: structural shrinking.
+    let mut chunk = cur.len() / 2;
+    while chunk >= 1 {
+        let mut i = 0;
+        while i + chunk <= cur.len() {
+            let mut cand = cur.clone();
+            cand.drain(i..i + chunk);
+            if !cand.is_empty() && !prop(&cand) {
+                cur = cand;
+            } else {
+                i += chunk;
+            }
+        }
+        chunk /= 2;
+    }
+    // Phase 2: element simplification.
+    for i in 0..cur.len() {
+        for cand_v in [0.0f32, 1.0, -1.0, cur[i].trunc()] {
+            if cur[i] != cand_v {
+                let mut cand = cur.clone();
+                cand[i] = cand_v;
+                if !prop(&cand) {
+                    cur = cand;
+                }
+            }
+        }
+    }
+    cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_true_property() {
+        forall("trivially true", 100, Gen::vec_f32(0..32, -1.0..1.0), |v| {
+            v.len() < 32
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always false'")]
+    fn forall_reports_failure() {
+        forall("always false", 10, Gen::usize(0..10), |_| false);
+    }
+
+    #[test]
+    fn shrinker_minimizes() {
+        // Property: "no element > 100". Counterexamples should shrink to
+        // a single offending element.
+        let prop = |v: &[f32]| v.iter().all(|&x| x <= 100.0);
+        let bad = vec![1.0, 2.0, 555.0, 3.0, 4.0, 5.0];
+        let shrunk = shrink_vec_f32(&bad, &prop);
+        assert_eq!(shrunk.len(), 1);
+        assert!(shrunk[0] > 100.0);
+    }
+
+    #[test]
+    fn wide_gen_produces_zeros_and_large() {
+        let g = Gen::vec_f32_wide(512..513);
+        let mut r = Rng::new(9);
+        let v = g.sample(&mut r);
+        assert!(v.iter().any(|&x| x == 0.0));
+        assert!(v.iter().any(|&x| x.abs() > 1e6));
+    }
+}

@@ -1,0 +1,230 @@
+//! 4ⁿ block decomposition: gather/scatter between a row-major field and
+//! fixed-size blocks, with replicate-padding for partial edge blocks,
+//! plus the sequency reordering permutations (paper §4.2's fold/unfold
+//! index mappings specialised to 4ⁿ).
+
+use crate::data::field::Dims;
+
+/// Values per block for each dimensionality.
+#[inline]
+pub const fn block_size(ndim: usize) -> usize {
+    match ndim {
+        1 => 4,
+        2 => 16,
+        _ => 64,
+    }
+}
+
+/// Number of blocks along each (padded) axis.
+pub fn block_grid(dims: Dims) -> [usize; 3] {
+    let e = dims.extents();
+    match dims.ndim() {
+        1 => [1, 1, e[2].div_ceil(4)],
+        2 => [1, e[1].div_ceil(4), e[2].div_ceil(4)],
+        _ => [e[0].div_ceil(4), e[1].div_ceil(4), e[2].div_ceil(4)],
+    }
+}
+
+/// Total number of blocks.
+pub fn num_blocks(dims: Dims) -> usize {
+    let g = block_grid(dims);
+    g[0] * g[1] * g[2]
+}
+
+/// Gather block `(bz, by, bx)` into `out` (len 4^ndim), replicating the
+/// last valid sample along truncated axes (zfp's padding policy keeps
+/// the transform well-behaved on partial blocks).
+pub fn gather(
+    data: &[f32],
+    dims: Dims,
+    (bz, by, bx): (usize, usize, usize),
+    out: &mut [f32],
+) {
+    let e = dims.extents();
+    let (nz, ny, nx) = (e[0], e[1], e[2]);
+    match dims.ndim() {
+        1 => {
+            debug_assert_eq!(out.len(), 4);
+            for i in 0..4 {
+                let x = (bx * 4 + i).min(nx - 1);
+                out[i] = data[x];
+            }
+        }
+        2 => {
+            debug_assert_eq!(out.len(), 16);
+            for j in 0..4 {
+                let y = (by * 4 + j).min(ny - 1);
+                for i in 0..4 {
+                    let x = (bx * 4 + i).min(nx - 1);
+                    out[j * 4 + i] = data[y * nx + x];
+                }
+            }
+        }
+        _ => {
+            debug_assert_eq!(out.len(), 64);
+            for k in 0..4 {
+                let z = (bz * 4 + k).min(nz - 1);
+                for j in 0..4 {
+                    let y = (by * 4 + j).min(ny - 1);
+                    for i in 0..4 {
+                        let x = (bx * 4 + i).min(nx - 1);
+                        out[(k * 4 + j) * 4 + i] = data[(z * ny + y) * nx + x];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Scatter a block back into the field, writing only in-range samples.
+pub fn scatter(
+    data: &mut [f32],
+    dims: Dims,
+    (bz, by, bx): (usize, usize, usize),
+    block: &[f32],
+) {
+    let e = dims.extents();
+    let (nz, ny, nx) = (e[0], e[1], e[2]);
+    match dims.ndim() {
+        1 => {
+            for i in 0..4 {
+                let x = bx * 4 + i;
+                if x < nx {
+                    data[x] = block[i];
+                }
+            }
+        }
+        2 => {
+            for j in 0..4 {
+                let y = by * 4 + j;
+                if y >= ny {
+                    continue;
+                }
+                for i in 0..4 {
+                    let x = bx * 4 + i;
+                    if x < nx {
+                        data[y * nx + x] = block[j * 4 + i];
+                    }
+                }
+            }
+        }
+        _ => {
+            for k in 0..4 {
+                let z = bz * 4 + k;
+                if z >= nz {
+                    continue;
+                }
+                for j in 0..4 {
+                    let y = by * 4 + j;
+                    if y >= ny {
+                        continue;
+                    }
+                    for i in 0..4 {
+                        let x = bx * 4 + i;
+                        if x < nx {
+                            data[(z * ny + y) * nx + x] = block[(k * 4 + j) * 4 + i];
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Iterate block coordinates in row-major block order.
+pub fn block_coords(dims: Dims) -> impl Iterator<Item = (usize, usize, usize)> {
+    let g = block_grid(dims);
+    (0..g[0]).flat_map(move |z| (0..g[1]).flat_map(move |y| (0..g[2]).map(move |x| (z, y, x))))
+}
+
+/// Sequency permutation: coefficient index order sorted by total degree
+/// i+j+k (low-frequency first), ties by linear index — the "staircase"
+/// order the paper's Fig. 5 estimation depends on. `perm[rank] = linear
+/// index into the block`.
+pub fn sequency_perm(ndim: usize) -> Vec<usize> {
+    let n = block_size(ndim);
+    let mut idx: Vec<usize> = (0..n).collect();
+    let degree = |lin: usize| -> usize {
+        match ndim {
+            1 => lin,
+            2 => (lin % 4) + (lin / 4),
+            _ => (lin % 4) + (lin / 4 % 4) + (lin / 16),
+        }
+    };
+    idx.sort_by_key(|&l| (degree(l), l));
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::Rng;
+
+    #[test]
+    fn grid_counts() {
+        assert_eq!(block_grid(Dims::D1(9)), [1, 1, 3]);
+        assert_eq!(block_grid(Dims::D2(8, 8)), [1, 2, 2]);
+        assert_eq!(block_grid(Dims::D3(5, 4, 13)), [2, 1, 4]);
+        assert_eq!(num_blocks(Dims::D3(5, 4, 13)), 8);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip_aligned() {
+        let mut rng = Rng::new(81);
+        let dims = Dims::D2(8, 12);
+        let data: Vec<f32> = (0..dims.len()).map(|_| rng.gauss() as f32).collect();
+        let mut out = vec![0.0f32; dims.len()];
+        let mut blk = [0.0f32; 16];
+        for c in block_coords(dims) {
+            gather(&data, dims, c, &mut blk);
+            scatter(&mut out, dims, c, &blk);
+        }
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip_partial() {
+        let mut rng = Rng::new(82);
+        // Deliberately non-multiple-of-4 extents in all dims.
+        let dims = Dims::D3(5, 6, 7);
+        let data: Vec<f32> = (0..dims.len()).map(|_| rng.gauss() as f32).collect();
+        let mut out = vec![0.0f32; dims.len()];
+        let mut blk = [0.0f32; 64];
+        for c in block_coords(dims) {
+            gather(&data, dims, c, &mut blk);
+            scatter(&mut out, dims, c, &blk);
+        }
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn padding_replicates_edge() {
+        let dims = Dims::D1(5);
+        let data = [1.0f32, 2.0, 3.0, 4.0, 5.0];
+        let mut blk = [0.0f32; 4];
+        gather(&data, dims, (0, 0, 1), &mut blk);
+        assert_eq!(blk, [5.0, 5.0, 5.0, 5.0]);
+    }
+
+    #[test]
+    fn perm_is_permutation_and_degree_sorted() {
+        for ndim in 1..=3 {
+            let p = sequency_perm(ndim);
+            let mut sorted = p.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..block_size(ndim)).collect::<Vec<_>>());
+            // First entry is always DC (linear 0), last the highest mode.
+            assert_eq!(p[0], 0);
+            assert_eq!(*p.last().unwrap(), block_size(ndim) - 1);
+        }
+    }
+
+    #[test]
+    fn perm_3d_degree_nondecreasing() {
+        let p = sequency_perm(3);
+        let deg = |l: usize| (l % 4) + (l / 4 % 4) + (l / 16);
+        for w in p.windows(2) {
+            assert!(deg(w[0]) <= deg(w[1]));
+        }
+    }
+}

@@ -1,0 +1,505 @@
+//! The ZFP codec: fixed-accuracy compression of 1D/2D/3D f32 fields.
+//!
+//! Per block: exponent alignment → fixed point → lifted decorrelating
+//! transform → sequency reorder → negabinary → embedded bit-plane
+//! coding truncated at the tolerance-implied precision. Like zfp, the
+//! error is *over*-preserved: the observed max error is typically well
+//! below the tolerance (the behaviour paper §6.4 highlights when
+//! comparing against the error-bound-based selection baseline).
+
+use super::block::{self, block_size};
+use super::embedded;
+use super::fixedpoint::{self, INTPREC};
+use super::transform;
+use crate::codec::{varint, BitReader, BitWriter};
+use crate::data::field::Dims;
+use crate::{Error, Result};
+
+/// Stream magic: "ZFR1".
+const MAGIC: u32 = 0x5A46_5231;
+
+/// Biased-exponent width for f32 blocks (8 bits + sign of bias range).
+const EBITS: u32 = 9;
+const EBIAS: i32 = 127;
+
+/// ZFP configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ZfpConfig {
+    /// Cap on encoded bit planes per coefficient (zfp's maxprec).
+    pub max_prec: u32,
+}
+
+impl Default for ZfpConfig {
+    fn default() -> Self {
+        ZfpConfig { max_prec: INTPREC }
+    }
+}
+
+/// Compression mode (zfp's three primary modes).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ZfpMode {
+    /// Error-bounded: encode down to the tolerance-implied plane
+    /// (the paper's evaluation mode).
+    FixedAccuracy { tolerance: f64 },
+    /// Every block occupies exactly `bits_per_block` bits — constant
+    /// bit-rate, random block access (zfp's native headline mode).
+    FixedRate { bits_per_block: u64 },
+    /// Exactly `precision` bit planes per block, rate varies.
+    FixedPrecision { precision: u32 },
+}
+
+impl ZfpMode {
+    /// Fixed-rate from a bits/value budget.
+    pub fn fixed_rate(bits_per_value: f64, ndim: usize) -> ZfpMode {
+        let bpb = (bits_per_value * block_size(ndim) as f64).ceil() as u64;
+        ZfpMode::FixedRate { bits_per_block: bpb.max(10) }
+    }
+
+    fn tag(&self) -> u64 {
+        match self {
+            ZfpMode::FixedAccuracy { .. } => 0,
+            ZfpMode::FixedRate { .. } => 1,
+            ZfpMode::FixedPrecision { .. } => 2,
+        }
+    }
+}
+
+/// The ZFP compressor (fixed-accuracy mode).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ZfpCompressor {
+    pub cfg: ZfpConfig,
+}
+
+/// Precision for a block given its max exponent (zfp's `precision()`):
+/// min(maxprec, max(0, e_max − minexp + 2·(dims+1))).
+#[inline]
+pub fn block_precision(e_max: i32, max_prec: u32, min_exp: i32, ndim: usize) -> u32 {
+    let p = e_max as i64 - min_exp as i64 + 2 * (ndim as i64 + 1);
+    p.clamp(0, max_prec as i64) as u32
+}
+
+/// minexp from an absolute tolerance: floor(log2(tol)).
+#[inline]
+pub fn min_exp_from_tolerance(tol: f64) -> i32 {
+    debug_assert!(tol > 0.0);
+    tol.log2().floor() as i32
+}
+
+impl ZfpCompressor {
+    pub fn new(cfg: ZfpConfig) -> Self {
+        ZfpCompressor { cfg }
+    }
+
+    /// Compress with an absolute error tolerance (fixed-accuracy mode).
+    pub fn compress(&self, data: &[f32], dims: Dims, tolerance: f64) -> Result<Vec<u8>> {
+        if tolerance <= 0.0 || !tolerance.is_finite() {
+            return Err(Error::InvalidArg(format!("bad tolerance {tolerance}")));
+        }
+        self.compress_mode(data, dims, ZfpMode::FixedAccuracy { tolerance })
+    }
+
+    /// Compress with a fixed bit-rate budget (bits/value).
+    pub fn compress_fixed_rate(
+        &self,
+        data: &[f32],
+        dims: Dims,
+        bits_per_value: f64,
+    ) -> Result<Vec<u8>> {
+        if bits_per_value <= 0.0 || !bits_per_value.is_finite() {
+            return Err(Error::InvalidArg(format!("bad rate {bits_per_value}")));
+        }
+        self.compress_mode(data, dims, ZfpMode::fixed_rate(bits_per_value, dims.ndim()))
+    }
+
+    /// Compress with a fixed number of bit planes per block.
+    pub fn compress_fixed_precision(
+        &self,
+        data: &[f32],
+        dims: Dims,
+        precision: u32,
+    ) -> Result<Vec<u8>> {
+        if precision == 0 || precision > INTPREC {
+            return Err(Error::InvalidArg(format!("bad precision {precision}")));
+        }
+        self.compress_mode(data, dims, ZfpMode::FixedPrecision { precision })
+    }
+
+    /// Mode-generic compression.
+    pub fn compress_mode(&self, data: &[f32], dims: Dims, mode: ZfpMode) -> Result<Vec<u8>> {
+        if dims.len() != data.len() {
+            return Err(Error::InvalidArg("dims/data length mismatch".into()));
+        }
+        if data.is_empty() {
+            return Err(Error::InvalidArg("empty input".into()));
+        }
+
+        let ndim = dims.ndim();
+        let bs = block_size(ndim);
+
+        let mut w = BitWriter::with_capacity(data.len());
+        let mut fblock = vec![0.0f32; bs];
+        let mut iblock = vec![0i32; bs];
+        let mut ublock = vec![0u32; bs];
+        let perm = block::sequency_perm(ndim);
+
+        for coords in block::block_coords(dims) {
+            block::gather(data, dims, coords, &mut fblock);
+            self.encode_block(&fblock, ndim, mode, &perm, &mut iblock, &mut ublock, &mut w);
+        }
+
+        let payload = w.finish();
+        let mut out = Vec::with_capacity(payload.len() + 32);
+        varint::write_u64(&mut out, MAGIC as u64);
+        dims.encode(&mut out);
+        varint::write_u64(&mut out, mode.tag());
+        match mode {
+            ZfpMode::FixedAccuracy { tolerance } => varint::write_f64(&mut out, tolerance),
+            ZfpMode::FixedRate { bits_per_block } => varint::write_u64(&mut out, bits_per_block),
+            ZfpMode::FixedPrecision { precision } => {
+                varint::write_u64(&mut out, precision as u64)
+            }
+        }
+        varint::write_u64(&mut out, self.cfg.max_prec as u64);
+        varint::write_bytes(&mut out, &payload);
+        Ok(out)
+    }
+
+    /// (precision, per-block budget) for a mode given the block's
+    /// max exponent.
+    fn mode_params(&self, mode: ZfpMode, e_max: Option<i32>, ndim: usize) -> (u32, u64) {
+        match mode {
+            ZfpMode::FixedAccuracy { tolerance } => {
+                let min_exp = min_exp_from_tolerance(tolerance);
+                let prec = e_max
+                    .map(|e| block_precision(e, self.cfg.max_prec, min_exp, ndim))
+                    .unwrap_or(0);
+                (prec, u64::MAX)
+            }
+            ZfpMode::FixedRate { bits_per_block } => {
+                let prec = if e_max.is_some() { self.cfg.max_prec } else { 0 };
+                // Header bits count against the block budget.
+                (prec, bits_per_block.saturating_sub(1 + EBITS as u64))
+            }
+            ZfpMode::FixedPrecision { precision } => {
+                (if e_max.is_some() { precision.min(self.cfg.max_prec) } else { 0 }, u64::MAX)
+            }
+        }
+    }
+
+    /// Encode one gathered block into the bit stream.
+    #[allow(clippy::too_many_arguments)]
+    fn encode_block(
+        &self,
+        fblock: &[f32],
+        ndim: usize,
+        mode: ZfpMode,
+        perm: &[usize],
+        iblock: &mut [i32],
+        ublock: &mut [u32],
+        w: &mut BitWriter,
+    ) {
+        let start_bits = w.bit_len();
+        let e_max = fixedpoint::max_exponent(fblock);
+        let (prec, budget) = self.mode_params(mode, e_max, ndim);
+        if prec == 0 {
+            // Empty block: single 0 bit (zfp's convention).
+            w.write_bit(false);
+        } else {
+            let e_max = e_max.unwrap();
+            w.write_bit(true);
+            w.write_bits((e_max + EBIAS) as u64, EBITS);
+
+            fixedpoint::to_fixed(fblock, e_max, iblock);
+            transform::forward_block(iblock, ndim);
+            for (rank, &lin) in perm.iter().enumerate() {
+                ublock[rank] = fixedpoint::int2uint(iblock[lin]);
+            }
+            let kmin = INTPREC.saturating_sub(prec);
+            if budget == u64::MAX {
+                embedded::encode_ints(ublock, kmin, w); // run-based fast path
+            } else {
+                embedded::encode_ints_budget(ublock, kmin, budget, w);
+            }
+        }
+        // Fixed-rate blocks are padded to exactly bits_per_block so the
+        // stream supports random block access.
+        if let ZfpMode::FixedRate { bits_per_block } = mode {
+            let used = w.bit_len() - start_bits;
+            let mut pad = bits_per_block.saturating_sub(used);
+            while pad > 0 {
+                let n = pad.min(64) as u32;
+                w.write_bits(0, n);
+                pad -= n as u64;
+            }
+        }
+    }
+
+    /// Decompress a stream produced by any compress mode.
+    pub fn decompress(&self, buf: &[u8]) -> Result<(Vec<f32>, Dims)> {
+        let mut pos = 0usize;
+        let magic = varint::read_u64(buf, &mut pos)?;
+        if magic != MAGIC as u64 {
+            return Err(Error::Corrupt(format!("bad ZFP magic {magic:#x}")));
+        }
+        let dims = Dims::decode(buf, &mut pos)?;
+        let mode = match varint::read_u64(buf, &mut pos)? {
+            0 => ZfpMode::FixedAccuracy { tolerance: varint::read_f64(buf, &mut pos)? },
+            1 => ZfpMode::FixedRate { bits_per_block: varint::read_u64(buf, &mut pos)? },
+            2 => ZfpMode::FixedPrecision {
+                precision: varint::read_u64(buf, &mut pos)? as u32,
+            },
+            t => return Err(Error::Corrupt(format!("bad ZFP mode tag {t}"))),
+        };
+        if let ZfpMode::FixedAccuracy { tolerance } = mode {
+            if tolerance <= 0.0 || !tolerance.is_finite() {
+                return Err(Error::Corrupt(format!("bad tolerance {tolerance}")));
+            }
+        }
+        let max_prec = varint::read_u64(buf, &mut pos)? as u32;
+        if max_prec == 0 || max_prec > INTPREC {
+            return Err(Error::Corrupt(format!("bad max_prec {max_prec}")));
+        }
+        let payload = varint::read_bytes(buf, &mut pos)?;
+
+        let ndim = dims.ndim();
+        let bs = block_size(ndim);
+        let perm = block::sequency_perm(ndim);
+
+        let mut r = BitReader::new(payload);
+        let mut out = vec![0.0f32; dims.len()];
+        let mut fblock = vec![0.0f32; bs];
+        let mut iblock = vec![0i32; bs];
+        let mut ublock = vec![0u32; bs];
+
+        for coords in block::block_coords(dims) {
+            let start_bits = r.bits_read();
+            if !r.read_bit() {
+                fblock.fill(0.0);
+            } else {
+                let e_max = r.read_bits(EBITS) as i32 - EBIAS;
+                let (prec, budget) = self.mode_params(mode, Some(e_max), ndim);
+                let kmin = INTPREC.saturating_sub(prec);
+                if budget == u64::MAX {
+                    embedded::decode_ints(bs, kmin, &mut r, &mut ublock); // fast path
+                } else {
+                    embedded::decode_ints_budget(bs, kmin, budget, &mut r, &mut ublock);
+                }
+                for (rank, &lin) in perm.iter().enumerate() {
+                    iblock[lin] = fixedpoint::uint2int(ublock[rank]);
+                }
+                transform::inverse_block(&mut iblock, ndim);
+                fixedpoint::from_fixed(&iblock, e_max, &mut fblock);
+            }
+            if let ZfpMode::FixedRate { bits_per_block } = mode {
+                // Skip the block's padding.
+                let used = r.bits_read() - start_bits;
+                let mut pad = bits_per_block.saturating_sub(used);
+                while pad > 0 {
+                    let n = pad.min(64) as u32;
+                    r.read_bits(n);
+                    pad -= n as u64;
+                }
+            }
+            block::scatter(&mut out, dims, coords, &fblock);
+        }
+        Ok((out, dims))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::spectral::{grf_2d, grf_3d};
+    use crate::metrics::error_stats;
+    use crate::testing::proptest_lite::{forall_vec_f32, Gen};
+    use crate::testing::Rng;
+
+    fn roundtrip_check(data: &[f32], dims: Dims, tol: f64) -> (f64, usize) {
+        let zfp = ZfpCompressor::default();
+        let comp = zfp.compress(data, dims, tol).unwrap();
+        let (recon, rdims) = zfp.decompress(&comp).unwrap();
+        assert_eq!(rdims, dims);
+        let stats = error_stats(data, &recon);
+        assert!(
+            stats.max_abs_err <= tol,
+            "max err {} > tolerance {tol}",
+            stats.max_abs_err
+        );
+        (stats.max_abs_err, comp.len())
+    }
+
+    #[test]
+    fn roundtrip_2d_smooth() {
+        let mut rng = Rng::new(121);
+        let f = grf_2d(&mut rng, 64, 96, 3.0);
+        let (_, bytes) = roundtrip_check(&f, Dims::D2(64, 96), 1e-3);
+        assert!(bytes < f.len() * 3, "zfp output too large: {bytes}");
+    }
+
+    #[test]
+    fn roundtrip_3d() {
+        let mut rng = Rng::new(122);
+        let f = grf_3d(&mut rng, 17, 23, 29, 2.5); // partial blocks
+        roundtrip_check(&f, Dims::D3(17, 23, 29), 1e-3);
+    }
+
+    #[test]
+    fn roundtrip_1d() {
+        let f: Vec<f32> = (0..4001).map(|i| (i as f32 * 0.01).sin()).collect();
+        roundtrip_check(&f, Dims::D1(4001), 1e-4);
+    }
+
+    #[test]
+    fn zero_field_is_tiny() {
+        let f = vec![0.0f32; 4096];
+        let zfp = ZfpCompressor::default();
+        let comp = zfp.compress(&f, Dims::D3(16, 16, 16), 1e-6).unwrap();
+        // 64 blocks * 1 bit + header.
+        assert!(comp.len() < 64, "all-zero field: {} bytes", comp.len());
+        let (recon, _) = zfp.decompress(&comp).unwrap();
+        assert!(recon.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn error_is_over_preserved() {
+        // Paper §6.4: "ZFP over-preserves the compression error with
+        // respect to the user-set error bound".
+        let mut rng = Rng::new(123);
+        let f = grf_2d(&mut rng, 96, 96, 2.0);
+        let tol = 1e-2;
+        let (max_err, _) = roundtrip_check(&f, Dims::D2(96, 96), tol);
+        assert!(
+            max_err < tol * 0.5,
+            "expected over-preservation, max_err {max_err} vs tol {tol}"
+        );
+    }
+
+    #[test]
+    fn tighter_tolerance_bigger_stream() {
+        let mut rng = Rng::new(124);
+        let f = grf_3d(&mut rng, 16, 16, 16, 2.0);
+        let zfp = ZfpCompressor::default();
+        let loose = zfp.compress(&f, Dims::D3(16, 16, 16), 1e-1).unwrap();
+        let tight = zfp.compress(&f, Dims::D3(16, 16, 16), 1e-6).unwrap();
+        assert!(tight.len() > loose.len());
+    }
+
+    #[test]
+    fn huge_dynamic_range() {
+        let mut rng = Rng::new(125);
+        let f: Vec<f32> = (0..1024)
+            .map(|_| ((rng.gauss() * 2.0).exp() * 1e6) as f32)
+            .collect();
+        let vr = crate::metrics::value_range(&f);
+        roundtrip_check(&f, Dims::D1(1024), 1e-4 * vr);
+    }
+
+    #[test]
+    fn rejects_bad_args() {
+        let zfp = ZfpCompressor::default();
+        assert!(zfp.compress(&[1.0], Dims::D1(1), 0.0).is_err());
+        assert!(zfp.compress(&[1.0, 2.0], Dims::D1(3), 1e-3).is_err());
+        assert!(zfp.compress(&[], Dims::D1(0), 1e-3).is_err());
+    }
+
+    #[test]
+    fn corrupt_stream_rejected() {
+        let mut rng = Rng::new(126);
+        let f = grf_2d(&mut rng, 16, 16, 2.0);
+        let zfp = ZfpCompressor::default();
+        let mut comp = zfp.compress(&f, Dims::D2(16, 16), 1e-3).unwrap();
+        comp[0] ^= 0xFF;
+        assert!(zfp.decompress(&comp).is_err());
+        assert!(zfp.decompress(&comp[..3]).is_err());
+    }
+
+    #[test]
+    fn prop_tolerance_always_holds() {
+        let zfp = ZfpCompressor::default();
+        forall_vec_f32(
+            "zfp pointwise tolerance",
+            40,
+            Gen::vec_f32_wide(1..300),
+            move |v| {
+                let tol = 1e-3 * crate::metrics::value_range(v).max(1e-6);
+                let comp = match zfp.compress(v, Dims::D1(v.len()), tol) {
+                    Ok(c) => c,
+                    Err(_) => return false,
+                };
+                let (recon, _) = zfp.decompress(&comp).unwrap();
+                v.iter()
+                    .zip(&recon)
+                    .all(|(&a, &b)| (a as f64 - b as f64).abs() <= tol)
+            },
+        );
+    }
+
+    #[test]
+    fn fixed_rate_hits_exact_rate() {
+        let mut rng = Rng::new(127);
+        let f = grf_2d(&mut rng, 64, 64, 2.0);
+        let zfp = ZfpCompressor::default();
+        for bpv in [4.0, 8.0, 16.0] {
+            let comp = zfp.compress_fixed_rate(&f, Dims::D2(64, 64), bpv).unwrap();
+            let blocks = crate::zfp::block::num_blocks(Dims::D2(64, 64)) as f64;
+            let payload_bits = blocks * (bpv * 16.0);
+            // Total = header + exactly bits_per_block · blocks (padded).
+            let total_bits = comp.len() as f64 * 8.0;
+            assert!(
+                total_bits >= payload_bits && total_bits < payload_bits + 512.0,
+                "bpv {bpv}: {total_bits} vs {payload_bits}"
+            );
+            let (recon, _) = zfp.decompress(&comp).unwrap();
+            assert_eq!(recon.len(), f.len());
+        }
+    }
+
+    #[test]
+    fn fixed_rate_quality_improves_with_rate() {
+        let mut rng = Rng::new(128);
+        let f = grf_2d(&mut rng, 64, 64, 2.5);
+        let zfp = ZfpCompressor::default();
+        let dims = Dims::D2(64, 64);
+        let mut last_psnr = 0.0;
+        for bpv in [2.0, 6.0, 12.0, 24.0] {
+            let comp = zfp.compress_fixed_rate(&f, dims, bpv).unwrap();
+            let (recon, _) = zfp.decompress(&comp).unwrap();
+            let psnr = error_stats(&f, &recon).psnr;
+            assert!(psnr > last_psnr, "bpv {bpv}: {psnr} !> {last_psnr}");
+            last_psnr = psnr;
+        }
+        assert!(last_psnr > 100.0, "24 bpv should be near-lossless: {last_psnr}");
+    }
+
+    #[test]
+    fn fixed_precision_roundtrip() {
+        let mut rng = Rng::new(129);
+        let f = grf_3d(&mut rng, 12, 12, 12, 2.0);
+        let dims = Dims::D3(12, 12, 12);
+        let zfp = ZfpCompressor::default();
+        let lo = zfp.compress_fixed_precision(&f, dims, 8).unwrap();
+        let hi = zfp.compress_fixed_precision(&f, dims, 28).unwrap();
+        assert!(hi.len() > lo.len());
+        let (r_lo, _) = zfp.decompress(&lo).unwrap();
+        let (r_hi, _) = zfp.decompress(&hi).unwrap();
+        let e_lo = error_stats(&f, &r_lo);
+        let e_hi = error_stats(&f, &r_hi);
+        assert!(e_hi.psnr > e_lo.psnr + 20.0, "{} vs {}", e_hi.psnr, e_lo.psnr);
+    }
+
+    #[test]
+    fn fixed_rate_rejects_bad_rate() {
+        let zfp = ZfpCompressor::default();
+        assert!(zfp.compress_fixed_rate(&[1.0; 16], Dims::D2(4, 4), 0.0).is_err());
+        assert!(zfp.compress_fixed_precision(&[1.0; 16], Dims::D2(4, 4), 0).is_err());
+        assert!(zfp.compress_fixed_precision(&[1.0; 16], Dims::D2(4, 4), 33).is_err());
+    }
+
+    #[test]
+    fn precision_formula() {
+        // zfp's precision(): clamped linear in e_max − min_exp.
+        assert_eq!(block_precision(0, 32, 0, 2), 6); // 2*(2+1)
+        assert_eq!(block_precision(-20, 32, 0, 2), 0); // deep below tolerance
+        assert_eq!(block_precision(100, 32, -100, 3), 32); // clamped at maxprec
+    }
+}

@@ -1,0 +1,184 @@
+//! Exponent alignment and fixed-point conversion (zfp's block-floating-
+//! point front end) plus the negabinary integer↔unsigned mapping used
+//! by the embedded coder.
+
+/// Bits of the fixed-point integer representation (i32 path for f32).
+pub const INTPREC: u32 = 32;
+
+/// Negabinary mask for 32-bit values (0b1010…).
+const NBMASK: u32 = 0xAAAA_AAAA;
+
+/// Exponent of x in zfp's convention: e such that |x| ∈ [2^(e−1), 2^e)
+/// — i.e. `frexp`'s exponent. Returns i32::MIN for 0.
+#[inline]
+pub fn exponent(x: f32) -> i32 {
+    if x == 0.0 {
+        return i32::MIN;
+    }
+    // f32 layout: biased exponent in bits 23..31.
+    let bits = x.to_bits();
+    let biased = ((bits >> 23) & 0xFF) as i32;
+    if biased == 0 {
+        // Subnormal: compute via log2.
+        (x.abs() as f64).log2().floor() as i32 + 1
+    } else {
+        biased - 126 // frexp convention: mantissa in [0.5, 1)
+    }
+}
+
+/// Max zfp exponent over a block; `None` when the block is all zeros.
+pub fn max_exponent(block: &[f32]) -> Option<i32> {
+    let mut maxabs = 0.0f32;
+    for &v in block {
+        let a = v.abs();
+        if a > maxabs {
+            maxabs = a;
+        }
+    }
+    if maxabs == 0.0 {
+        None
+    } else {
+        Some(exponent(maxabs))
+    }
+}
+
+/// Promote a block to fixed point: q_i = x_i · 2^(INTPREC−2−e_max),
+/// guaranteeing |q_i| < 2^(INTPREC−2) so the transform's range
+/// expansion cannot overflow.
+pub fn to_fixed(block: &[f32], e_max: i32, out: &mut [i32]) {
+    let scale = exp2_f64((INTPREC as i32 - 2 - e_max) as i32);
+    for (o, &v) in out.iter_mut().zip(block) {
+        *o = (v as f64 * scale) as i32;
+    }
+}
+
+/// Inverse of [`to_fixed`]: x_i = q_i · 2^(e_max−(INTPREC−2)).
+pub fn from_fixed(block: &[i32], e_max: i32, out: &mut [f32]) {
+    let scale = exp2_f64(e_max - (INTPREC as i32 - 2));
+    for (o, &q) in out.iter_mut().zip(block) {
+        *o = (q as f64 * scale) as f32;
+    }
+}
+
+/// 2^e as f64, handling the full i32 exponent range without overflow
+/// panics (saturates to 0 / inf like ldexp).
+#[inline]
+pub fn exp2_f64(e: i32) -> f64 {
+    if e >= 1024 {
+        f64::INFINITY
+    } else if e <= -1074 {
+        0.0
+    } else {
+        (e as f64).exp2()
+    }
+}
+
+/// Two's-complement → negabinary (order-preserving on magnitude bit
+/// planes; zfp's `int2uint`).
+#[inline(always)]
+pub fn int2uint(x: i32) -> u32 {
+    ((x as u32).wrapping_add(NBMASK)) ^ NBMASK
+}
+
+/// Negabinary → two's-complement (zfp's `uint2int`).
+#[inline(always)]
+pub fn uint2int(u: u32) -> i32 {
+    ((u ^ NBMASK).wrapping_sub(NBMASK)) as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::Rng;
+
+    #[test]
+    fn exponent_matches_frexp_convention() {
+        assert_eq!(exponent(1.0), 1); // 1.0 = 0.5 * 2^1
+        assert_eq!(exponent(0.5), 0);
+        assert_eq!(exponent(0.75), 0);
+        assert_eq!(exponent(2.0), 2);
+        assert_eq!(exponent(-8.0), 4);
+        assert_eq!(exponent(3.0), 2);
+    }
+
+    #[test]
+    fn exponent_bound_property() {
+        let mut rng = Rng::new(101);
+        for _ in 0..10_000 {
+            let x = (rng.range_f64(-1e30, 1e30)) as f32;
+            if x == 0.0 {
+                continue;
+            }
+            let e = exponent(x);
+            let lo = exp2_f64(e - 1);
+            let hi = exp2_f64(e);
+            let a = x.abs() as f64;
+            assert!(a >= lo && a < hi, "x {x} e {e}");
+        }
+    }
+
+    #[test]
+    fn negabinary_roundtrip_all_patterns() {
+        let mut rng = Rng::new(102);
+        for x in [0i32, 1, -1, i32::MAX, i32::MIN, 42, -42] {
+            assert_eq!(uint2int(int2uint(x)), x);
+        }
+        for _ in 0..100_000 {
+            let x = rng.next_u64() as i32;
+            assert_eq!(uint2int(int2uint(x)), x);
+        }
+    }
+
+    #[test]
+    fn negabinary_zero_is_zero() {
+        assert_eq!(int2uint(0), 0);
+    }
+
+    #[test]
+    fn negabinary_small_values_have_few_bits() {
+        // Magnitude ordering: small |x| -> small leading bit position,
+        // which is what makes bit-plane truncation error-bounded.
+        for x in [-8i32..=8].into_iter().flatten() {
+            let u = int2uint(x);
+            assert!(u < 64, "x {x} -> u {u}");
+        }
+    }
+
+    #[test]
+    fn fixed_roundtrip_precision() {
+        let mut rng = Rng::new(103);
+        let block: Vec<f32> = (0..64).map(|_| rng.range_f64(-100.0, 100.0) as f32).collect();
+        let e = max_exponent(&block).unwrap();
+        let mut q = vec![0i32; 64];
+        to_fixed(&block, e, &mut q);
+        let mut back = vec![0.0f32; 64];
+        from_fixed(&q, e, &mut back);
+        let scale = exp2_f64(e);
+        for (a, b) in block.iter().zip(&back) {
+            // Quantization step is 2^(e-30): relative error ~1e-9 * scale.
+            assert!(((a - b).abs() as f64) <= scale * 2.0f64.powi(-29));
+        }
+    }
+
+    #[test]
+    fn to_fixed_never_overflows_after_transform() {
+        // |q| < 2^30 guarantees the lifting transform (gain < 4) fits i32.
+        let mut rng = Rng::new(104);
+        for _ in 0..1000 {
+            let block: Vec<f32> =
+                (0..16).map(|_| (rng.gauss() * 1e20) as f32).collect();
+            if let Some(e) = max_exponent(&block) {
+                let mut q = vec![0i32; 16];
+                to_fixed(&block, e, &mut q);
+                for &v in &q {
+                    assert!((v as i64).abs() < 1 << 30);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_zero_block() {
+        assert_eq!(max_exponent(&[0.0; 16]), None);
+    }
+}

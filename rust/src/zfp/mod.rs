@@ -1,0 +1,22 @@
+//! ZFP-style transform-based lossy compressor (reimplementation of
+//! zfp-0.5's fixed-accuracy mode for f32).
+//!
+//! Pipeline per the paper's three-stage decomposition (Fig. 1):
+//! * **Stage I (lossless)** — [`block`] splits the field into 4ⁿ
+//!   blocks; [`fixedpoint`] aligns each block to its max exponent and
+//!   promotes to 32-bit fixed point; [`transform`] applies the
+//!   decorrelating block orthogonal transform (the lifted ZFP member of
+//!   the t-parameterized family of paper §4.2) along each axis and
+//!   reorders coefficients by total sequency.
+//! * **Stage II (lossy)** — [`embedded`]: negabinary mapping + group-
+//!   tested bit-plane embedded coding, truncated at the precision
+//!   implied by the error tolerance (dynamic quantization, §5.2).
+//! * Stage III is nil for ZFP (the embedded code is self-compressing).
+
+pub mod block;
+pub mod compressor;
+pub mod embedded;
+pub mod fixedpoint;
+pub mod transform;
+
+pub use compressor::{ZfpCompressor, ZfpConfig};

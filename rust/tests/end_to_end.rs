@@ -1,0 +1,105 @@
+//! Integration: full pipeline over real (synthetic) datasets through
+//! the coordinator, on-disk container, and back — every policy, every
+//! dataset, error bounds verified pointwise.
+
+use adaptivec::baseline::Policy;
+use adaptivec::coordinator::{store::Container, Coordinator};
+use adaptivec::data::Dataset;
+use adaptivec::estimator::selector::SelectorConfig;
+use adaptivec::metrics::error_stats;
+
+fn roundtrip_dataset(ds: Dataset, policy: Policy, eb_rel: f64) {
+    let coord = Coordinator::new(SelectorConfig::default(), 4);
+    let fields = ds.generate(7, 0);
+    let report = coord.run(&fields, policy, eb_rel).unwrap();
+    assert_eq!(report.results.len(), fields.len());
+
+    let dir = std::env::temp_dir().join("adaptivec_e2e");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("{}_{}_{}.bin", ds.name(), policy.name(), eb_rel));
+    report.to_container().write_file(&path).unwrap();
+    let container = Container::read_file(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    if policy == Policy::NoCompression {
+        assert_eq!(container.stored_bytes(), container.raw_bytes());
+        return;
+    }
+    let restored = coord.load(&container).unwrap();
+    for (orig, rest) in fields.iter().zip(&restored) {
+        assert_eq!(orig.name, rest.name);
+        assert_eq!(orig.dims, rest.dims);
+        let vr = orig.value_range();
+        let bound = if vr > 0.0 { eb_rel * vr } else { eb_rel };
+        let stats = error_stats(&orig.data, &rest.data);
+        assert!(
+            stats.max_abs_err <= bound * (1.0 + 1e-9),
+            "{} / {} / {}: max err {} > bound {}",
+            ds.name(),
+            policy.name(),
+            orig.name,
+            stats.max_abs_err,
+            bound
+        );
+    }
+}
+
+#[test]
+fn nyx_all_policies() {
+    for p in Policy::ALL {
+        roundtrip_dataset(Dataset::Nyx, p, 1e-3);
+    }
+}
+
+#[test]
+fn atm_rate_distortion_policy() {
+    roundtrip_dataset(Dataset::Atm, Policy::RateDistortion, 1e-3);
+}
+
+#[test]
+fn hurricane_rate_distortion_policy() {
+    roundtrip_dataset(Dataset::Hurricane, Policy::RateDistortion, 1e-3);
+}
+
+#[test]
+fn tight_bound_still_holds() {
+    roundtrip_dataset(Dataset::Hurricane, Policy::RateDistortion, 1e-6);
+}
+
+#[test]
+fn loose_bound_compresses_harder() {
+    let coord = Coordinator::new(SelectorConfig::default(), 2);
+    let fields = Dataset::Atm.generate(7, 0);
+    let loose = coord.run(&fields, Policy::RateDistortion, 1e-2).unwrap();
+    let tight = coord.run(&fields, Policy::RateDistortion, 1e-5).unwrap();
+    assert!(loose.overall_ratio() > tight.overall_ratio());
+}
+
+#[test]
+fn selection_beats_worst_fixed_policy() {
+    // The paper's headline property at dataset level: the automatic
+    // selection's overall ratio is at least that of the worse fixed
+    // codec (it can't lose to the worst choice).
+    let coord = Coordinator::new(SelectorConfig::default(), 4);
+    for ds in Dataset::ALL {
+        let fields = ds.generate(7, 1);
+        let sz = coord.run(&fields, Policy::AlwaysSz, 1e-4).unwrap().overall_ratio();
+        let zfp = coord.run(&fields, Policy::AlwaysZfp, 1e-4).unwrap().overall_ratio();
+        let ours = coord.run(&fields, Policy::RateDistortion, 1e-4).unwrap().overall_ratio();
+        let worst = sz.min(zfp);
+        assert!(
+            ours >= worst * 0.98,
+            "{}: ours {ours:.2} vs worst fixed {worst:.2}",
+            ds.name()
+        );
+    }
+}
+
+#[test]
+fn optimum_dominates_ours() {
+    let coord = Coordinator::new(SelectorConfig::default(), 4);
+    let fields = Dataset::Hurricane.generate(7, 0);
+    let ours = coord.run(&fields, Policy::RateDistortion, 1e-4).unwrap().overall_ratio();
+    let opt = coord.run(&fields, Policy::Optimum, 1e-4).unwrap().overall_ratio();
+    assert!(opt >= ours * 0.95, "optimum {opt:.2} vs ours {ours:.2}");
+}

@@ -1,0 +1,120 @@
+//! Integration: the AOT (JAX/Pallas → HLO text → PJRT) Stage-I engine
+//! agrees with the native Rust Stage-I on real estimator inputs —
+//! proving the three-layer architecture composes end to end.
+//!
+//! Skips (with a message) when `make artifacts` has not run.
+
+use adaptivec::data::atm;
+use adaptivec::estimator::sampling;
+use adaptivec::runtime::{default_artifacts_dir, PjrtEngine};
+use adaptivec::sz::lorenzo;
+use adaptivec::zfp::block;
+use adaptivec::zfp::transform::{t_zfp, ParametricBot};
+
+fn engine() -> Option<PjrtEngine> {
+    let dir = default_artifacts_dir();
+    if !dir.join("bot2d.hlo.txt").is_file() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(PjrtEngine::load_dir(dir).expect("engine"))
+}
+
+#[test]
+fn stage1_bot_agrees_on_real_samples() {
+    let Some(eng) = engine() else { return };
+    let f = atm::generate_field(11, 0);
+    let sample = sampling::sample_blocks(f.dims, 0.05);
+    let mut blocks = Vec::with_capacity(sample.blocks.len() * 16);
+    let mut blk = [0.0f32; 16];
+    for &c in &sample.blocks {
+        block::gather(&f.data, f.dims, c, &mut blk);
+        blocks.extend_from_slice(&blk);
+    }
+    let pjrt = eng.bot_forward_2d(&blocks).unwrap();
+    let bot = ParametricBot::new(t_zfp());
+    let scale = f.value_range();
+    for (b, chunk) in blocks.chunks_exact(16).enumerate() {
+        let mut native: Vec<f64> = chunk.iter().map(|&v| v as f64).collect();
+        bot.forward(&mut native, 2);
+        for (p, n) in pjrt[b * 16..(b + 1) * 16].iter().zip(&native) {
+            assert!(
+                (*p as f64 - n).abs() <= 1e-5 * scale.max(1.0),
+                "block {b}: {p} vs {n}"
+            );
+        }
+    }
+}
+
+#[test]
+fn stage1_lorenzo_agrees_on_real_samples() {
+    let Some(eng) = engine() else { return };
+    let f = atm::generate_field(11, 2);
+    let sample = sampling::sample_blocks(f.dims, 0.05);
+    let idx = sample.point_indices();
+    let native = lorenzo::prediction_errors_original(&f.data, f.dims, &idx);
+
+    // Gather neighbor arrays exactly as the PJRT path expects.
+    let nx = match f.dims {
+        adaptivec::data::field::Dims::D2(_, nx) => nx,
+        _ => unreachable!(),
+    };
+    let at = |i: isize| -> f32 {
+        if i < 0 {
+            0.0
+        } else {
+            f.data[i as usize]
+        }
+    };
+    let mut x = Vec::new();
+    let mut l = Vec::new();
+    let mut u = Vec::new();
+    let mut d = Vec::new();
+    for &i in &idx {
+        let (y, xx) = (i / nx, i % nx);
+        x.push(f.data[i]);
+        l.push(if xx >= 1 { at(i as isize - 1) } else { 0.0 });
+        u.push(if y >= 1 { at(i as isize - nx as isize) } else { 0.0 });
+        d.push(if xx >= 1 && y >= 1 { at(i as isize - nx as isize - 1) } else { 0.0 });
+    }
+    let pjrt = eng.lorenzo_2d(&x, &l, &u, &d).unwrap();
+    for (i, (p, n)) in pjrt.iter().zip(&native).enumerate() {
+        assert!((p - n).abs() <= 1e-5 * n.abs().max(1e-3), "sample {i}: {p} vs {n}");
+    }
+}
+
+#[test]
+fn nsb_hist_consistent_with_native_histogram() {
+    let Some(eng) = engine() else { return };
+    let f = atm::generate_field(11, 1);
+    let sample = sampling::sample_blocks(f.dims, 0.05);
+    let mut blocks = Vec::with_capacity(sample.blocks.len() * 16);
+    let mut blk = [0.0f32; 16];
+    for &c in &sample.blocks {
+        block::gather(&f.data, f.dims, c, &mut blk);
+        blocks.extend_from_slice(&blk);
+    }
+    let inv_delta = 10.0f32 / f.value_range() as f32;
+    let (nsb, hist) = eng.nsb_hist_2d(&blocks, inv_delta).unwrap();
+    assert_eq!(nsb.len(), blocks.len() / 16);
+    // Native recomputation of the histogram (transform + quantize).
+    let bot = ParametricBot::new(t_zfp());
+    let mut native_hist = vec![0.0f32; 64];
+    for chunk in blocks.chunks_exact(16) {
+        let mut d: Vec<f64> = chunk.iter().map(|&v| v as f64).collect();
+        bot.forward(&mut d, 2);
+        for &c in &d {
+            let q = (c * inv_delta as f64).round().clamp(-32.0, 31.0) + 32.0;
+            native_hist[q as usize] += 1.0;
+        }
+    }
+    // PJRT histogram includes zero-padding of the last batch in the
+    // center bin (rank 32); all other bins must match exactly.
+    for (i, (p, n)) in hist.iter().zip(&native_hist).enumerate() {
+        if i == 32 {
+            assert!(p >= n, "center bin loses mass: {p} vs {n}");
+        } else {
+            assert_eq!(*p, *n, "bin {i}");
+        }
+    }
+}
