@@ -33,14 +33,8 @@ fn main() {
                 raw += f.raw_bytes() as u64;
                 sz_b += szt.bytes as u64;
                 zfp_b += zfpt.bytes as u64;
-                ours_b += match pick {
-                    Choice::Sz => szt.bytes,
-                    Choice::Zfp => zfpt.bytes,
-                } as u64;
-                opt_b += match oracle {
-                    Choice::Sz => szt.bytes,
-                    Choice::Zfp => zfpt.bytes,
-                } as u64;
+                ours_b += (if pick == Choice::Sz { szt.bytes } else { zfpt.bytes }) as u64;
+                opt_b += (if oracle == Choice::Sz { szt.bytes } else { zfpt.bytes }) as u64;
             }
             let r = |b: u64| raw as f64 / b as f64;
             let worst = r(sz_b).min(r(zfp_b));

@@ -74,16 +74,15 @@ fn main() {
         let t0 = Instant::now();
         let (pick, est) = sel.select_abs(f, eb, vr).unwrap();
         let t_est = t0.elapsed().as_secs_f64();
-        let (ours_bytes, t_ours_c, t_ours_d) = match pick {
-            Choice::Sz => {
-                let t0 = Instant::now();
-                let c = sz.compress(&f.data, f.dims, est.eb_sz.max(f64::MIN_POSITIVE)).unwrap();
-                let tc = t0.elapsed().as_secs_f64();
-                let t0 = Instant::now();
-                let _ = sz.decompress(&c).unwrap();
-                (c.len(), tc + t_est, t0.elapsed().as_secs_f64())
-            }
-            Choice::Zfp => (c_zfp.len(), t_zfp_c + t_est, t_zfp_d),
+        let (ours_bytes, t_ours_c, t_ours_d) = if pick == Choice::Sz {
+            let t0 = Instant::now();
+            let c = sz.compress(&f.data, f.dims, est.eb_sz.max(f64::MIN_POSITIVE)).unwrap();
+            let tc = t0.elapsed().as_secs_f64();
+            let t0 = Instant::now();
+            let _ = sz.decompress(&c).unwrap();
+            (c.len(), tc + t_est, t0.elapsed().as_secs_f64())
+        } else {
+            (c_zfp.len(), t_zfp_c + t_est, t_zfp_d)
         };
 
         let raw = f.raw_bytes() as f64;

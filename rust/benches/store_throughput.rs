@@ -1,0 +1,96 @@
+//! Container store/load microbenchmarks for the v2 (chunked, seekable)
+//! format:
+//!
+//! * per-field (v1) vs per-chunk (v2) selection — ratio + wall time,
+//!   quantifying what finer selection granularity costs/buys;
+//! * full-container decode vs single-field partial decode — the v2
+//!   index means `load_field` touches one field's payload bytes
+//!   instead of parsing and decoding the whole container.
+
+use adaptivec::baseline::Policy;
+use adaptivec::bench_util::{bench, Table};
+use adaptivec::coordinator::store::ContainerReader;
+use adaptivec::coordinator::Coordinator;
+use adaptivec::data::Dataset;
+
+fn main() {
+    let eb = 1e-4;
+    let fields = Dataset::Atm.generate(2018, 1);
+    let raw: u64 = fields.iter().map(|f| f.raw_bytes() as u64).sum();
+    let coord = Coordinator::default();
+    println!(
+        "ATM, {} fields, {:.1} MB raw, eb_rel {eb:.0e}, {} workers\n",
+        fields.len(),
+        raw as f64 / 1e6,
+        coord.workers
+    );
+
+    // --- selection granularity: per-field vs per-chunk -------------
+    let mut t = Table::new(&["granularity", "chunks", "ratio", "SZ", "ZFP", "compress wall"]);
+    let tm = bench(0, 2, || coord.run(&fields, Policy::RateDistortion, eb).unwrap());
+    let v1 = coord.run(&fields, Policy::RateDistortion, eb).unwrap();
+    let (sz, zfp) = v1.choice_counts();
+    t.row(&[
+        "per-field (v1)".into(),
+        fields.len().to_string(),
+        format!("{:.3}", v1.overall_ratio()),
+        sz.to_string(),
+        zfp.to_string(),
+        format!("{tm}"),
+    ]);
+    for chunk_elems in [16 * 1024usize, 64 * 1024, 256 * 1024] {
+        let tm = bench(0, 2, || {
+            coord.run_chunked(&fields, Policy::RateDistortion, eb, chunk_elems).unwrap()
+        });
+        let rep = coord.run_chunked(&fields, Policy::RateDistortion, eb, chunk_elems).unwrap();
+        let chunks: usize = rep.fields.iter().map(|f| f.chunks.len()).sum();
+        let (sz, zfp) = rep.choice_counts();
+        t.row(&[
+            format!("{}k elems/chunk", chunk_elems / 1024),
+            chunks.to_string(),
+            format!("{:.3}", rep.overall_ratio()),
+            sz.to_string(),
+            zfp.to_string(),
+            format!("{tm}"),
+        ]);
+    }
+    t.print("selection granularity (RateDistortion policy)");
+
+    // --- decode: full container vs single-field partial -------------
+    let rep = coord.run_chunked(&fields, Policy::RateDistortion, eb, 64 * 1024).unwrap();
+    let bytes = rep.to_container().to_bytes();
+    let target = fields[fields.len() / 2].name.clone();
+    let mut t = Table::new(&["operation", "time", "GB/s of raw"]);
+
+    let tm = bench(1, 5, || ContainerReader::from_bytes(bytes.clone()).unwrap());
+    t.row(&["v2 index parse".into(), format!("{tm}"), "-".into()]);
+
+    let reader = ContainerReader::from_bytes(bytes.clone()).unwrap();
+    let tm = bench(1, 3, || coord.load_reader(&reader).unwrap());
+    t.row(&[
+        "full decode (all fields)".into(),
+        format!("{tm}"),
+        format!("{:.2}", raw as f64 / tm.mean_secs() / 1e9),
+    ]);
+
+    let field_raw = fields[fields.len() / 2].raw_bytes() as f64;
+    let tm = bench(1, 5, || coord.load_field(&reader, &target).unwrap());
+    t.row(&[
+        format!("partial decode ('{target}')"),
+        format!("{tm}"),
+        format!("{:.2}", field_raw / tm.mean_secs() / 1e9),
+    ]);
+
+    // v1 comparison point: whole-container parse + decode.
+    let v1_bytes = v1.to_container().to_bytes();
+    let tm = bench(1, 3, || {
+        let r = ContainerReader::from_bytes(v1_bytes.clone()).unwrap();
+        coord.load_reader(&r).unwrap()
+    });
+    t.row(&[
+        "v1 parse + full decode".into(),
+        format!("{tm}"),
+        format!("{:.2}", raw as f64 / tm.mean_secs() / 1e9),
+    ]);
+    t.print("store_throughput — seekable v2 decode paths");
+}

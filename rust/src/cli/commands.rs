@@ -6,17 +6,18 @@
 //! * `select`     — selection decisions only (Fig. 6-style map)
 //! * `sweep`      — compression-ratio sweep over error bounds (Fig. 7)
 //! * `iobench`    — modeled parallel store/load throughput (Figs. 8–9)
-//! * `info`       — inspect a container
+//! * `info`       — container summary (v1 and v2)
+//! * `inspect`    — per-chunk selection map + per-codec byte totals
 
 use super::args::Args;
 use crate::baseline::Policy;
-use crate::coordinator::{store::Container, Coordinator};
+use crate::coordinator::{store::ContainerReader, Coordinator};
 use crate::data::{Dataset, Field};
 use crate::estimator::selector::{AutoSelector, SelectorConfig};
 use crate::iosim::{FsModel, ThroughputModel, PROC_SWEEP};
 use crate::{Error, Result};
 
-pub const USAGE: &str = "adaptivec — online rate-distortion-optimal SZ/ZFP selection
+pub const USAGE: &str = "adaptivec — online rate-distortion-optimal codec selection
 
 USAGE:
   adaptivec <command> [options]
@@ -24,19 +25,21 @@ USAGE:
 COMMANDS:
   compress    --dataset <nyx|atm|hurricane> [--scale 0|1|2] [--eb 1e-4]
               [--policy ours|sz|zfp|eb|optimum|baseline] [--workers N]
-              [--out FILE] [--seed N]
-  decompress  --in FILE [--outdir DIR]
+              [--out FILE] [--seed N] [--rsp 0.05] [--chunk-elems N]
+              (--chunk-elems > 0 writes a chunked, seekable v2
+               container with per-chunk selection)
+  decompress  --in FILE [--outdir DIR] [--field NAME]
   estimate    --dataset D [--scale S] [--eb E] [--rsp 0.05]
   select      --dataset D [--scale S] [--eb E]
   sweep       --dataset D [--scale S] [--bounds 1e-3,1e-4,1e-6]
   iobench     --dataset D [--scale S] [--eb E]
   info        --in FILE
+  inspect     --in FILE
 ";
 
 fn selector_cfg(args: &Args) -> Result<SelectorConfig> {
-    let mut cfg = SelectorConfig::default();
-    cfg.r_sp = args.get_or("rsp", cfg.r_sp)?;
-    Ok(cfg)
+    let r_sp = args.get_or("rsp", SelectorConfig::default().r_sp)?;
+    Ok(SelectorConfig { r_sp, ..SelectorConfig::default() })
 }
 
 fn load_dataset(args: &Args) -> Result<Vec<Field>> {
@@ -58,6 +61,7 @@ pub fn run(cmd: &str, argv: &[String]) -> Result<()> {
         "sweep" => cmd_sweep(argv),
         "iobench" => cmd_iobench(argv),
         "info" => cmd_info(argv),
+        "inspect" => cmd_inspect(argv),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -74,10 +78,12 @@ fn cmd_compress(argv: &[String]) -> Result<()> {
         .ok_or_else(|| Error::InvalidArg("bad --policy".into()))?;
     let workers: usize = args.get_or("workers", 0)?;
     let out = args.get("out").unwrap_or("out.adaptivec").to_string();
+    let chunk_elems: usize = args.get_or("chunk-elems", 0)?;
+    let cfg = selector_cfg(&args)?;
     args.check_unknown()?;
 
     let coord = Coordinator::new(
-        selector_cfg(&Args::parse(&[], &[])?)?,
+        cfg,
         if workers == 0 {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
         } else {
@@ -85,21 +91,41 @@ fn cmd_compress(argv: &[String]) -> Result<()> {
         },
     );
     let t0 = std::time::Instant::now();
-    let report = coord.run(&fields, policy, eb)?;
-    let wall = t0.elapsed();
-    report.to_container().write_file(&out)?;
-    let (sz, zfp) = report.choice_counts();
-    println!(
-        "{} fields, policy {}, eb_rel {eb:.0e}: ratio {:.2} ({} -> {} bytes), \
-         SZ {sz} / ZFP {zfp}, est-overhead {:.1}%, wall {:.2}s -> {out}",
-        report.results.len(),
-        policy.name(),
-        report.overall_ratio(),
-        report.total_raw_bytes(),
-        report.total_stored_bytes(),
-        report.overhead_frac() * 100.0,
-        wall.as_secs_f64(),
-    );
+    if chunk_elems > 0 {
+        // Chunked v2 path: per-chunk selection, seekable index.
+        let report = coord.run_chunked(&fields, policy, eb, chunk_elems)?;
+        let wall = t0.elapsed();
+        report.to_container().write_file(&out)?;
+        let (sz, zfp) = report.choice_counts();
+        let chunks: usize = report.fields.iter().map(|f| f.chunks.len()).sum();
+        println!(
+            "{} fields / {chunks} chunks (v2, {chunk_elems} elems/chunk), policy {}, \
+             eb_rel {eb:.0e}: ratio {:.2} ({} -> {} bytes), SZ {sz} / ZFP {zfp} chunks, \
+             wall {:.2}s -> {out}",
+            report.fields.len(),
+            policy.name(),
+            report.overall_ratio(),
+            report.total_raw_bytes(),
+            report.total_stored_bytes(),
+            wall.as_secs_f64(),
+        );
+    } else {
+        let report = coord.run(&fields, policy, eb)?;
+        let wall = t0.elapsed();
+        report.to_container().write_file(&out)?;
+        let (sz, zfp) = report.choice_counts();
+        println!(
+            "{} fields, policy {}, eb_rel {eb:.0e}: ratio {:.2} ({} -> {} bytes), \
+             SZ {sz} / ZFP {zfp}, est-overhead {:.1}%, wall {:.2}s -> {out}",
+            report.results.len(),
+            policy.name(),
+            report.overall_ratio(),
+            report.total_raw_bytes(),
+            report.total_stored_bytes(),
+            report.overhead_frac() * 100.0,
+            wall.as_secs_f64(),
+        );
+    }
     Ok(())
 }
 
@@ -107,10 +133,15 @@ fn cmd_decompress(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv, &[])?;
     let input = args.require("in")?.to_string();
     let outdir = args.get("outdir").unwrap_or(".").to_string();
+    let field = args.get("field").map(str::to_string);
     args.check_unknown()?;
-    let container = Container::read_file(&input)?;
+    let reader = ContainerReader::open(&input)?;
     let coord = Coordinator::default();
-    let fields = coord.load(&container)?;
+    // --field does a partial, index-driven decode of just that field.
+    let fields = match &field {
+        Some(name) => vec![coord.load_field(&reader, name)?],
+        None => coord.load_reader(&reader)?,
+    };
     std::fs::create_dir_all(&outdir)?;
     for f in &fields {
         let path = format!("{outdir}/{}.f32", f.name);
@@ -156,21 +187,19 @@ fn cmd_select(argv: &[String]) -> Result<()> {
     let cfg = selector_cfg(&args)?;
     args.check_unknown()?;
     let sel = AutoSelector::new(cfg);
-    let mut counts = (0usize, 0usize);
+    let mut counts: std::collections::BTreeMap<&'static str, usize> = Default::default();
     for f in &fields {
         let (choice, _) = sel.select(f, eb)?;
-        match choice {
-            crate::estimator::Choice::Sz => counts.0 += 1,
-            crate::estimator::Choice::Zfp => counts.1 += 1,
-        }
+        *counts.entry(choice.name()).or_insert(0) += 1;
         println!("{:<22} -> {}", f.name, choice.name());
     }
-    println!(
-        "summary: SZ {} ({:.1}%), ZFP {}",
-        counts.0,
-        100.0 * counts.0 as f64 / fields.len() as f64,
-        counts.1
-    );
+    let summary: Vec<String> = counts
+        .iter()
+        .map(|(name, n)| {
+            format!("{name} {n} ({:.1}%)", 100.0 * *n as f64 / fields.len() as f64)
+        })
+        .collect();
+    println!("summary: {}", summary.join(", "));
     Ok(())
 }
 
@@ -235,27 +264,71 @@ fn cmd_info(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv, &[])?;
     let input = args.require("in")?.to_string();
     args.check_unknown()?;
-    let c = Container::read_file(&input)?;
+    let r = ContainerReader::open(&input)?;
+    let registry = AutoSelector::default().registry();
     println!(
-        "{input}: {} fields, {} raw -> {} stored (ratio {:.2})",
-        c.entries.len(),
-        c.raw_bytes(),
-        c.stored_bytes(),
-        c.raw_bytes() as f64 / c.stored_bytes() as f64
+        "{input}: container v{}, {} fields, {} raw -> {} stored (ratio {:.2})",
+        r.version,
+        r.fields.len(),
+        r.raw_bytes(),
+        r.stored_bytes(),
+        r.raw_bytes() as f64 / r.stored_bytes() as f64
     );
-    for e in &c.entries {
-        let codec = match e.selection {
-            0 => "SZ",
-            1 => "ZFP",
-            _ => "raw",
+    for f in &r.fields {
+        // Single-chunk fields show their codec; chunked fields the count.
+        let codec = if f.chunks.len() == 1 {
+            registry.name_of(f.chunks[0].selection).to_string()
+        } else {
+            format!("{}ch", f.chunks.len())
         };
+        let dims = f.dims.map(|d| d.to_string()).unwrap_or_else(|| "?".into());
         println!(
-            "  {:<22} {:>5} {:>12} -> {:>10} bytes (x{:.2})",
-            e.name,
+            "  {:<22} {:>6} {:>12} {:>12} -> {:>10} bytes (x{:.2})",
+            f.name,
             codec,
-            e.raw_bytes,
-            e.payload.len(),
-            e.raw_bytes as f64 / e.payload.len() as f64
+            dims,
+            f.raw_bytes,
+            f.stored_bytes(),
+            f.raw_bytes as f64 / f.stored_bytes() as f64
+        );
+    }
+    Ok(())
+}
+
+fn cmd_inspect(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &[])?;
+    let input = args.require("in")?.to_string();
+    args.check_unknown()?;
+    let r = ContainerReader::open(&input)?;
+    let registry = AutoSelector::default().registry();
+    println!("{input}: container v{}, {} fields", r.version, r.fields.len());
+    // Per-codec byte totals across the whole container.
+    let mut totals: std::collections::BTreeMap<u8, (usize, u64)> = Default::default();
+    for f in &r.fields {
+        // Selection map: one letter per chunk (first letter of the
+        // codec name; '?' for unregistered ids).
+        let map: String = f
+            .chunks
+            .iter()
+            .map(|c| registry.name_of(c.selection).chars().next().unwrap_or('?'))
+            .collect();
+        for c in &f.chunks {
+            let t = totals.entry(c.selection).or_insert((0, 0));
+            t.0 += 1;
+            t.1 += c.len as u64;
+        }
+        let chunk_note = if f.chunk_elems > 0 {
+            format!(" ({} elems/chunk)", f.chunk_elems)
+        } else {
+            String::new()
+        };
+        println!("  {:<22} [{map}]{chunk_note}", f.name);
+    }
+    println!("per-codec totals:");
+    for (sel, (chunks, bytes)) in &totals {
+        println!(
+            "  {:<6} (id {sel}): {chunks:>5} chunks, {bytes:>12} bytes",
+            registry.name_of(*sel)
         );
     }
     Ok(())
@@ -301,6 +374,43 @@ mod tests {
         )
         .unwrap();
         assert!(outdir.join("baryon_density.f32").is_file());
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    fn chunked_compress_inspect_and_partial_decompress() {
+        let tmp = std::env::temp_dir().join("adaptivec_cli_v2_test");
+        std::fs::create_dir_all(&tmp).unwrap();
+        let out = tmp.join("atm.adaptivec2");
+        let argv: Vec<String> = [
+            "--dataset", "atm", "--scale", "0", "--eb", "1e-3", "--out",
+            out.to_str().unwrap(), "--workers", "2", "--chunk-elems", "2048",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        run("compress", &argv).unwrap();
+        run("info", &["--in".to_string(), out.to_str().unwrap().to_string()]).unwrap();
+        run("inspect", &["--in".to_string(), out.to_str().unwrap().to_string()]).unwrap();
+        // Partial decode of a single field out of the v2 container.
+        let outdir = tmp.join("restored");
+        let name = {
+            let reader = ContainerReader::open(&out).unwrap();
+            reader.fields[1].name.clone()
+        };
+        run(
+            "decompress",
+            &[
+                "--in".to_string(),
+                out.to_str().unwrap().to_string(),
+                "--outdir".to_string(),
+                outdir.to_str().unwrap().to_string(),
+                "--field".to_string(),
+                name.clone(),
+            ],
+        )
+        .unwrap();
+        assert!(outdir.join(format!("{name}.f32")).is_file());
         std::fs::remove_dir_all(&tmp).ok();
     }
 }

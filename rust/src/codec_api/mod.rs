@@ -1,0 +1,405 @@
+//! First-class codec dispatch: the [`Codec`] trait and the
+//! [`CodecRegistry`].
+//!
+//! Algorithm 1's output is a compressed byte stream {C_i} plus
+//! selection bits {s_i}. Earlier versions hardcoded the selection as a
+//! two-variant enum with magic bytes `0`/`1` matched independently in
+//! the selector, router, store, and CLI; this module makes the mapping
+//! first-class so every backend — SZ, ZFP, the raw passthrough, and
+//! future codecs such as the dormant `dct` compressor — is one
+//! registry entry behind one interface.
+//!
+//! Contract (DESIGN.md §4):
+//!
+//! * `id()` is the on-disk selection byte. Ids are unique within a
+//!   registry and stable across container versions: 0 = SZ, 1 = ZFP,
+//!   2 = raw. New codecs claim the next free id.
+//! * `compress` produces a *bare* codec stream (no selection byte);
+//!   `decompress` inverts it. SZ and ZFP streams self-describe their
+//!   dims; the raw stream intentionally does not (Container v1
+//!   compatibility) and decodes as [`Dims::D1`] — the container index
+//!   supplies the real dims on the v2 path.
+//! * The registry is the **only** place that maps selection bytes to
+//!   codecs. Container framing (the leading selection byte of a
+//!   self-describing payload, the bare-raw quirk of v1 entries) lives
+//!   in the registry's encode/decode helpers, nowhere else.
+
+use crate::data::field::Dims;
+use crate::sz::{SzCompressor, SzConfig};
+use crate::zfp::{ZfpCompressor, ZfpConfig};
+use crate::{Error, Result};
+
+/// Which codec produced (or should produce) a stream — a thin `Copy`
+/// wrapper over the registry's stable codec ids, kept as the public
+/// selection vocabulary (the paper's s_i bits, generalized).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Choice {
+    Sz,
+    Zfp,
+    /// Uncompressed f32 LE passthrough (the no-compression baseline).
+    Raw,
+}
+
+impl Choice {
+    /// The on-disk selection byte. This is the compatibility shim over
+    /// codec ids; the registry entries are the source of truth.
+    #[inline]
+    pub const fn id(self) -> u8 {
+        match self {
+            Self::Sz => 0,
+            Self::Zfp => 1,
+            Self::Raw => 2,
+        }
+    }
+
+    /// Inverse of [`Choice::id`] for the built-in codecs.
+    #[inline]
+    pub const fn from_id(id: u8) -> Option<Choice> {
+        match id {
+            0 => Some(Self::Sz),
+            1 => Some(Self::Zfp),
+            2 => Some(Self::Raw),
+            _ => None,
+        }
+    }
+
+    pub const fn name(self) -> &'static str {
+        match self {
+            Self::Sz => "SZ",
+            Self::Zfp => "ZFP",
+            Self::Raw => "raw",
+        }
+    }
+}
+
+/// An error-bounded compressor behind a uniform interface.
+///
+/// Implementations must be cheap to construct (the registry is built
+/// per call site) and thread-safe (chunk jobs decode concurrently).
+pub trait Codec: Send + Sync {
+    /// Stable selection byte for this codec.
+    fn id(&self) -> u8;
+
+    /// Human-readable name (CLI tables, selection maps).
+    fn name(&self) -> &'static str;
+
+    /// Compress `data` (shaped `dims`) under absolute bound `eb_abs`
+    /// into a bare codec stream.
+    fn compress(&self, data: &[f32], dims: Dims, eb_abs: f64) -> Result<Vec<u8>>;
+
+    /// Invert [`Codec::compress`].
+    fn decompress(&self, stream: &[u8]) -> Result<(Vec<f32>, Dims)>;
+}
+
+/// SZ (Lorenzo + linear quantization + Huffman) as a registry entry.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SzCodec {
+    pub cfg: SzConfig,
+}
+
+impl Codec for SzCodec {
+    fn id(&self) -> u8 {
+        Choice::Sz.id()
+    }
+
+    fn name(&self) -> &'static str {
+        Choice::Sz.name()
+    }
+
+    fn compress(&self, data: &[f32], dims: Dims, eb_abs: f64) -> Result<Vec<u8>> {
+        SzCompressor::new(self.cfg).compress(data, dims, eb_abs)
+    }
+
+    fn decompress(&self, stream: &[u8]) -> Result<(Vec<f32>, Dims)> {
+        SzCompressor::new(self.cfg).decompress(stream)
+    }
+}
+
+/// ZFP (blockwise orthogonal transform + embedded coding) as a
+/// registry entry.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ZfpCodec {
+    pub cfg: ZfpConfig,
+}
+
+impl Codec for ZfpCodec {
+    fn id(&self) -> u8 {
+        Choice::Zfp.id()
+    }
+
+    fn name(&self) -> &'static str {
+        Choice::Zfp.name()
+    }
+
+    fn compress(&self, data: &[f32], dims: Dims, eb_abs: f64) -> Result<Vec<u8>> {
+        ZfpCompressor::new(self.cfg).compress(data, dims, eb_abs)
+    }
+
+    fn decompress(&self, stream: &[u8]) -> Result<(Vec<f32>, Dims)> {
+        ZfpCompressor::new(self.cfg).decompress(stream)
+    }
+}
+
+/// Lossless f32 LE passthrough. The stream is the bytes themselves —
+/// no dims header, for bit-compatibility with Container v1's raw
+/// entries — so `decompress` reports `Dims::D1`; container indexes
+/// carry the real shape.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RawCodec;
+
+impl Codec for RawCodec {
+    fn id(&self) -> u8 {
+        Choice::Raw.id()
+    }
+
+    fn name(&self) -> &'static str {
+        Choice::Raw.name()
+    }
+
+    fn compress(&self, data: &[f32], dims: Dims, _eb_abs: f64) -> Result<Vec<u8>> {
+        debug_assert_eq!(dims.len(), data.len());
+        let mut out = Vec::with_capacity(data.len() * 4);
+        for v in data {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        Ok(out)
+    }
+
+    fn decompress(&self, stream: &[u8]) -> Result<(Vec<f32>, Dims)> {
+        if stream.len() % 4 != 0 {
+            return Err(Error::Corrupt(format!(
+                "raw stream of {} bytes is not a multiple of 4",
+                stream.len()
+            )));
+        }
+        let data: Vec<f32> = stream
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        let dims = Dims::D1(data.len());
+        Ok((data, dims))
+    }
+}
+
+/// Resolves selection bytes to codecs — the single source of truth for
+/// the {s_i} → codec mapping.
+pub struct CodecRegistry {
+    codecs: Vec<Box<dyn Codec>>,
+}
+
+impl std::fmt::Debug for CodecRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let entries: Vec<String> =
+            self.codecs.iter().map(|c| format!("{}={}", c.id(), c.name())).collect();
+        f.debug_struct("CodecRegistry").field("codecs", &entries).finish()
+    }
+}
+
+impl Default for CodecRegistry {
+    fn default() -> Self {
+        CodecRegistry::standard(SzConfig::default(), ZfpConfig::default())
+    }
+}
+
+impl CodecRegistry {
+    /// An empty registry (for custom codec sets).
+    pub fn empty() -> Self {
+        CodecRegistry { codecs: Vec::new() }
+    }
+
+    /// The standard registry: SZ, ZFP, and the raw passthrough.
+    pub fn standard(sz: SzConfig, zfp: ZfpConfig) -> Self {
+        let mut r = CodecRegistry::empty();
+        r.register(Box::new(SzCodec { cfg: sz })).expect("fresh registry");
+        r.register(Box::new(ZfpCodec { cfg: zfp })).expect("fresh registry");
+        r.register(Box::new(RawCodec)).expect("fresh registry");
+        r
+    }
+
+    /// Add a codec; rejects duplicate selection ids.
+    pub fn register(&mut self, codec: Box<dyn Codec>) -> Result<()> {
+        if self.lookup(codec.id()).is_some() {
+            return Err(Error::InvalidArg(format!(
+                "codec id {} ('{}') already registered",
+                codec.id(),
+                codec.name()
+            )));
+        }
+        self.codecs.push(codec);
+        Ok(())
+    }
+
+    /// Codec for a selection byte, if registered.
+    pub fn lookup(&self, id: u8) -> Option<&dyn Codec> {
+        self.codecs.iter().find(|c| c.id() == id).map(|c| c.as_ref())
+    }
+
+    /// Codec for a selection byte, or a corruption error.
+    pub fn get(&self, id: u8) -> Result<&dyn Codec> {
+        self.lookup(id)
+            .ok_or_else(|| Error::Corrupt(format!("bad selection bit {id}")))
+    }
+
+    /// Codec by name (case-insensitive).
+    pub fn by_name(&self, name: &str) -> Option<&dyn Codec> {
+        self.codecs
+            .iter()
+            .find(|c| c.name().eq_ignore_ascii_case(name))
+            .map(|c| c.as_ref())
+    }
+
+    /// Display name for a selection byte ("?" when unregistered).
+    pub fn name_of(&self, id: u8) -> &'static str {
+        self.lookup(id).map(|c| c.name()).unwrap_or("?")
+    }
+
+    /// Registered (id, name) pairs, in registration order.
+    pub fn entries(&self) -> impl Iterator<Item = (u8, &'static str)> + '_ {
+        self.codecs.iter().map(|c| (c.id(), c.name()))
+    }
+
+    /// Compress into a self-describing container payload: one leading
+    /// selection byte, then the bare codec stream.
+    pub fn encode(&self, choice: Choice, data: &[f32], dims: Dims, eb_abs: f64) -> Result<Vec<u8>> {
+        let codec = self.get(choice.id())?;
+        let stream = codec.compress(data, dims, eb_abs)?;
+        let mut out = Vec::with_capacity(stream.len() + 1);
+        out.push(codec.id());
+        out.extend_from_slice(&stream);
+        Ok(out)
+    }
+
+    /// Decode a self-describing container payload (leading selection
+    /// byte + bare stream).
+    pub fn decode(&self, container: &[u8]) -> Result<(Vec<f32>, Dims)> {
+        let (sel, stream) = split_container(container)?;
+        self.decode_stream(sel, stream)
+    }
+
+    /// Decode a bare codec stream under an explicit selection byte.
+    pub fn decode_stream(&self, selection: u8, stream: &[u8]) -> Result<(Vec<f32>, Dims)> {
+        self.get(selection)?.decompress(stream)
+    }
+
+    /// Decode a Container v1 entry. Compressed v1 entries carry the
+    /// selection byte inline at the head of the payload; raw entries
+    /// (selection = 2) are bare f32 LE bytes. This is the only place
+    /// that knows the v1 framing quirk.
+    pub fn decode_v1_entry(&self, selection: u8, payload: &[u8]) -> Result<(Vec<f32>, Dims)> {
+        if selection == Choice::Raw.id() {
+            return self.decode_stream(selection, payload);
+        }
+        let (inline, stream) = split_container(payload)?;
+        if inline != selection {
+            return Err(Error::Corrupt(format!(
+                "entry selection {selection} disagrees with payload selection {inline}"
+            )));
+        }
+        self.decode_stream(selection, stream)
+    }
+}
+
+/// Split a self-describing container payload into its selection byte
+/// and bare stream.
+pub fn split_container(payload: &[u8]) -> Result<(u8, &[u8])> {
+    match payload.split_first() {
+        Some((sel, stream)) => Ok((*sel, stream)),
+        None => Err(Error::Corrupt("empty container".into())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::atm;
+
+    fn registry() -> CodecRegistry {
+        CodecRegistry::default()
+    }
+
+    #[test]
+    fn choice_ids_roundtrip() {
+        for c in [Choice::Sz, Choice::Zfp, Choice::Raw] {
+            assert_eq!(Choice::from_id(c.id()), Some(c));
+        }
+        assert_eq!(Choice::from_id(7), None);
+    }
+
+    #[test]
+    fn registry_resolves_all_standard_ids() {
+        let r = registry();
+        for c in [Choice::Sz, Choice::Zfp, Choice::Raw] {
+            let codec = r.get(c.id()).unwrap();
+            assert_eq!(codec.id(), c.id());
+            assert_eq!(codec.name(), c.name());
+        }
+        assert!(r.get(9).is_err());
+        assert_eq!(r.name_of(9), "?");
+        assert!(r.by_name("sz").is_some());
+        assert!(r.by_name("zstd").is_none());
+        assert_eq!(r.entries().count(), 3);
+    }
+
+    #[test]
+    fn duplicate_id_rejected() {
+        let mut r = registry();
+        assert!(r.register(Box::new(RawCodec)).is_err());
+    }
+
+    #[test]
+    fn every_codec_roundtrips_through_encode_decode() {
+        let r = registry();
+        let f = atm::generate_field_scaled(31, 0, 0);
+        let vr = f.value_range();
+        let eb = 1e-3 * vr;
+        for choice in [Choice::Sz, Choice::Zfp, Choice::Raw] {
+            let payload = r.encode(choice, &f.data, f.dims, eb).unwrap();
+            assert_eq!(payload[0], choice.id());
+            let (data, dims) = r.decode(&payload).unwrap();
+            assert_eq!(data.len(), f.data.len(), "{choice:?}");
+            if choice != Choice::Raw {
+                assert_eq!(dims, f.dims, "{choice:?}");
+            }
+            let worst = f
+                .data
+                .iter()
+                .zip(&data)
+                .map(|(a, b)| (a - b).abs() as f64)
+                .fold(0.0f64, f64::max);
+            assert!(worst <= eb * (1.0 + 1e-9), "{choice:?}: {worst} > {eb}");
+        }
+    }
+
+    #[test]
+    fn raw_codec_is_exact_and_bare() {
+        let r = registry();
+        let data = [1.5f32, -2.25, 0.0, 3.75];
+        let stream =
+            r.get(Choice::Raw.id()).unwrap().compress(&data, Dims::D1(4), 0.0).unwrap();
+        assert_eq!(stream.len(), 16);
+        let (back, dims) = r.decode_stream(Choice::Raw.id(), &stream).unwrap();
+        assert_eq!(back, data);
+        assert_eq!(dims, Dims::D1(4));
+        assert!(r.decode_stream(Choice::Raw.id(), &stream[..7]).is_err());
+    }
+
+    #[test]
+    fn v1_entry_framing() {
+        let r = registry();
+        let f = atm::generate_field_scaled(37, 1, 0);
+        let eb = 1e-3 * f.value_range();
+        // Compressed entry: selection byte inline.
+        let payload = r.encode(Choice::Zfp, &f.data, f.dims, eb).unwrap();
+        let (data, dims) = r.decode_v1_entry(Choice::Zfp.id(), &payload).unwrap();
+        assert_eq!(dims, f.dims);
+        assert_eq!(data.len(), f.data.len());
+        // Mismatched selection is corruption.
+        assert!(r.decode_v1_entry(Choice::Sz.id(), &payload).is_err());
+        // Raw entry: bare bytes, no inline selection byte.
+        let raw: Vec<u8> = f.data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let (data, _) = r.decode_v1_entry(Choice::Raw.id(), &raw).unwrap();
+        assert_eq!(data, f.data);
+        // Empty payload of a compressed entry is corruption, not panic.
+        assert!(r.decode_v1_entry(Choice::Sz.id(), &[]).is_err());
+    }
+}

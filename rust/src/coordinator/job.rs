@@ -24,8 +24,13 @@ impl FieldResult {
         self.raw_bytes as f64 / self.payload.len() as f64
     }
 
+    /// Bits per value (f32 input); 0.0 for an empty field, computed in
+    /// f64 so non-multiple-of-4 sizes don't floor.
     pub fn bit_rate(&self) -> f64 {
-        self.payload.len() as f64 * 8.0 / (self.raw_bytes / 4) as f64
+        if self.raw_bytes == 0 {
+            return 0.0;
+        }
+        self.payload.len() as f64 * 8.0 / (self.raw_bytes as f64 / 4.0)
     }
 
     /// Estimation overhead relative to compression time (Table 6).

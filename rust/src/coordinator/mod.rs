@@ -6,8 +6,16 @@
 //! * [`pool`] — the worker pool (std threads, shared queue, panic
 //!   isolation);
 //! * [`router`] — per-field policy dispatch (Algorithm 1 / baselines);
-//! * [`store`] — the on-disk container with selection bits s_i;
+//! * [`store`] — the on-disk containers with selection bits s_i
+//!   (per-field v1 and chunked, seekable v2);
 //! * [`stats`] — aggregate metrics for the run.
+//!
+//! The chunked entry points ([`Coordinator::run_chunked`],
+//! [`Coordinator::load_reader`], [`Coordinator::load_field`]) flow
+//! *chunk*-level jobs through the same [`pool::run_jobs`], so a single
+//! huge field parallelizes across workers instead of serializing on
+//! one thread, and loads decode only what the container index says
+//! they need.
 
 pub mod job;
 pub mod pool;
@@ -17,7 +25,7 @@ pub mod store;
 
 use crate::baseline::Policy;
 use crate::data::field::Field;
-use crate::estimator::selector::SelectorConfig;
+use crate::estimator::selector::{AutoSelector, SelectorConfig};
 use crate::Result;
 
 /// The coordinator: configuration + entry points.
@@ -36,13 +44,21 @@ impl Default for Coordinator {
     }
 }
 
+/// One chunk of one field, flattened for the worker pool.
+struct ChunkJob<'a> {
+    field: &'a Field,
+    chunk_idx: usize,
+    start: usize,
+    dims: crate::data::field::Dims,
+}
+
 impl Coordinator {
     pub fn new(selector_cfg: SelectorConfig, workers: usize) -> Self {
         Coordinator { selector_cfg, workers: workers.max(1) }
     }
 
     /// Compress every field under `policy`, in parallel, collecting
-    /// per-field results in submission order.
+    /// per-field results in submission order (v1, one job per field).
     pub fn run(
         &self,
         fields: &[Field],
@@ -54,15 +70,99 @@ impl Coordinator {
         Ok(stats::RunReport::from_results(policy, eb_rel, results))
     }
 
-    /// Decompress every field of a container back to raw data.
+    /// Compress every field split into ~`chunk_elems`-element chunks,
+    /// each chunk independently estimated, selected, and compressed as
+    /// its own pool job (`chunk_elems == 0` keeps whole-field chunks).
+    pub fn run_chunked(
+        &self,
+        fields: &[Field],
+        policy: Policy,
+        eb_rel: f64,
+        chunk_elems: usize,
+    ) -> Result<stats::ChunkedRunReport> {
+        let router = router::Router::new(self.selector_cfg, policy, eb_rel);
+        let mut jobs = Vec::new();
+        let mut chunks_per_field = Vec::with_capacity(fields.len());
+        for f in fields {
+            let spans = store::chunk_spans(f.dims, chunk_elems);
+            chunks_per_field.push(spans.len());
+            for (chunk_idx, (start, dims)) in spans.into_iter().enumerate() {
+                jobs.push(ChunkJob { field: f, chunk_idx, start, dims });
+            }
+        }
+        let results = pool::run_jobs(self.workers, &jobs, |j| {
+            let end = j.start + j.dims.len();
+            let chunk = Field::new(
+                format!("{}#{}", j.field.name, j.chunk_idx),
+                j.dims,
+                j.field.data[j.start..end].to_vec(),
+            );
+            router.process(&chunk)
+        })?;
+        // Regroup chunk results per field, preserving order.
+        let mut it = results.into_iter();
+        let mut out = Vec::with_capacity(fields.len());
+        for (f, n) in fields.iter().zip(chunks_per_field) {
+            out.push(stats::ChunkedFieldResult {
+                name: f.name.clone(),
+                dims: f.dims,
+                chunk_elems,
+                chunks: it.by_ref().take(n).collect(),
+            });
+        }
+        Ok(stats::ChunkedRunReport { policy, eb_rel, fields: out })
+    }
+
+    /// Decompress every field of a v1 container back to raw data.
+    /// Selection bytes — including `2` (raw passthrough, the
+    /// `NoCompression` policy) — resolve through the codec registry.
     pub fn load(&self, container: &store::Container) -> Result<Vec<Field>> {
-        let sel = crate::estimator::selector::AutoSelector::new(self.selector_cfg);
+        let registry = AutoSelector::new(self.selector_cfg).registry();
         let entries: Vec<&store::Entry> = container.entries.iter().collect();
         let fields = pool::run_jobs(self.workers, &entries, |e| {
-            let (data, dims) = sel.decompress_with_dims(&e.payload)?;
+            let (data, dims) = registry.decode_v1_entry(e.selection, &e.payload)?;
             Ok(Field::new(e.name.clone(), dims, data))
         })?;
         Ok(fields)
+    }
+
+    /// Decode every field of an indexed container (v1 or v2), one pool
+    /// job per chunk.
+    pub fn load_reader(&self, reader: &store::ContainerReader) -> Result<Vec<Field>> {
+        let registry = AutoSelector::new(self.selector_cfg).registry();
+        let mut jobs = Vec::new();
+        for (fi, f) in reader.fields.iter().enumerate() {
+            for ci in 0..f.chunks.len() {
+                jobs.push((fi, ci));
+            }
+        }
+        let decoded = pool::run_jobs(self.workers, &jobs, |&(fi, ci)| {
+            reader.decode_chunk(&registry, fi, ci)
+        })?;
+        let mut it = decoded.into_iter();
+        let mut out = Vec::with_capacity(reader.fields.len());
+        for info in &reader.fields {
+            let parts: Vec<_> = it.by_ref().take(info.chunks.len()).collect();
+            out.push(store::assemble_field(info, parts)?);
+        }
+        Ok(out)
+    }
+
+    /// Partial, index-driven decode: reconstruct one field by name
+    /// without touching any other field's payload bytes. The field's
+    /// chunks decode in parallel.
+    pub fn load_field(
+        &self,
+        reader: &store::ContainerReader,
+        name: &str,
+    ) -> Result<Field> {
+        let registry = AutoSelector::new(self.selector_cfg).registry();
+        let (fi, info) = reader.field(name)?;
+        let jobs: Vec<usize> = (0..info.chunks.len()).collect();
+        let parts = pool::run_jobs(self.workers, &jobs, |&ci| {
+            reader.decode_chunk(&registry, fi, ci)
+        })?;
+        store::assemble_field(info, parts)
     }
 }
 
@@ -105,6 +205,76 @@ mod tests {
     }
 
     #[test]
+    fn no_compression_roundtrips_through_load() {
+        // Regression: selection byte 2 (raw f32 LE payload) used to be
+        // rejected by `load`, which only understood 0/1. The registry's
+        // raw codec closes the gap: run -> to_container -> load must be
+        // lossless end to end.
+        let coord = Coordinator::new(SelectorConfig::default(), 2);
+        let fields = small_fields(3);
+        let report = coord.run(&fields, Policy::NoCompression, 1e-3).unwrap();
+        let container = report.to_container();
+        assert!(container.entries.iter().all(|e| e.selection == 2));
+        let restored = coord.load(&container).unwrap();
+        assert_eq!(restored.len(), fields.len());
+        for (orig, rest) in fields.iter().zip(&restored) {
+            assert_eq!(orig.name, rest.name);
+            // v1 raw entries carry no dims; data must be bit-exact.
+            assert_eq!(orig.data, rest.data, "{}", orig.name);
+        }
+    }
+
+    #[test]
+    fn chunked_run_roundtrips_with_per_chunk_selection() {
+        let coord = Coordinator::new(SelectorConfig::default(), 4);
+        let fields = small_fields(3);
+        let chunk_elems = 2048;
+        let report = coord.run_chunked(&fields, Policy::RateDistortion, 1e-3, chunk_elems).unwrap();
+        // Small fields still split into multiple chunks at this size.
+        let total_chunks: usize = report.fields.iter().map(|f| f.chunks.len()).sum();
+        assert!(total_chunks > fields.len(), "expected chunking, got {total_chunks}");
+        let bytes = report.to_container().to_bytes();
+        let reader = store::ContainerReader::from_bytes(bytes).unwrap();
+        assert_eq!(reader.version, 2);
+        let restored = coord.load_reader(&reader).unwrap();
+        for (orig, rest) in fields.iter().zip(&restored) {
+            assert_eq!(orig.name, rest.name);
+            assert_eq!(orig.dims, rest.dims);
+            let vr = orig.value_range();
+            let stats = crate::metrics::error_stats(&orig.data, &rest.data);
+            assert!(stats.max_abs_err <= 1e-3 * vr * (1.0 + 1e-9), "{}", orig.name);
+        }
+    }
+
+    #[test]
+    fn chunked_no_compression_preserves_dims() {
+        let coord = Coordinator::new(SelectorConfig::default(), 2);
+        let fields = small_fields(2);
+        let report = coord.run_chunked(&fields, Policy::NoCompression, 1e-3, 4096).unwrap();
+        let reader = store::ContainerReader::from_bytes(report.to_container().to_bytes()).unwrap();
+        let restored = coord.load_reader(&reader).unwrap();
+        for (orig, rest) in fields.iter().zip(&restored) {
+            assert_eq!(orig.dims, rest.dims, "{}", orig.name);
+            assert_eq!(orig.data, rest.data, "{}", orig.name);
+        }
+    }
+
+    #[test]
+    fn load_field_decodes_only_the_named_field() {
+        let coord = Coordinator::new(SelectorConfig::default(), 2);
+        let fields = small_fields(4);
+        let report = coord.run_chunked(&fields, Policy::RateDistortion, 1e-3, 2048).unwrap();
+        let reader = store::ContainerReader::from_bytes(report.to_container().to_bytes()).unwrap();
+        let target = &fields[2];
+        let got = coord.load_field(&reader, &target.name).unwrap();
+        assert_eq!(got.dims, target.dims);
+        let vr = target.value_range();
+        let stats = crate::metrics::error_stats(&target.data, &got.data);
+        assert!(stats.max_abs_err <= 1e-3 * vr * (1.0 + 1e-9));
+        assert!(coord.load_field(&reader, "missing").is_err());
+    }
+
+    #[test]
     fn all_policies_run() {
         let coord = Coordinator::new(SelectorConfig::default(), 2);
         let fields = small_fields(3);
@@ -125,5 +295,15 @@ mod tests {
         for (a, b) in r1.results.iter().zip(&r4.results) {
             assert_eq!(a.payload, b.payload, "worker count must not change output");
         }
+    }
+
+    #[test]
+    fn chunked_single_worker_matches_parallel() {
+        let fields = small_fields(3);
+        let c1 = Coordinator::new(SelectorConfig::default(), 1);
+        let c4 = Coordinator::new(SelectorConfig::default(), 4);
+        let r1 = c1.run_chunked(&fields, Policy::RateDistortion, 1e-3, 2048).unwrap();
+        let r4 = c4.run_chunked(&fields, Policy::RateDistortion, 1e-3, 2048).unwrap();
+        assert_eq!(r1.to_container().to_bytes(), r4.to_container().to_bytes());
     }
 }

@@ -4,22 +4,34 @@
 
 use super::job::FieldResult;
 use crate::baseline::{ebselect, Policy};
+use crate::codec_api::CodecRegistry;
 use crate::data::field::Field;
 use crate::estimator::selector::{AutoSelector, Choice, SelectorConfig};
 use crate::Result;
 use std::time::Instant;
 
-/// Stateless router: policy + bound, shared across workers.
-#[derive(Clone, Copy, Debug)]
+/// Stateless router: policy + bound, shared across workers. The codec
+/// registry is built once here and dispatched through concurrently —
+/// per-chunk jobs must not pay a registry construction each.
+#[derive(Debug)]
 pub struct Router {
     pub selector: AutoSelector,
     pub policy: Policy,
     pub eb_rel: f64,
+    registry: CodecRegistry,
 }
 
 impl Router {
     pub fn new(cfg: SelectorConfig, policy: Policy, eb_rel: f64) -> Self {
-        Router { selector: AutoSelector::new(cfg), policy, eb_rel }
+        let selector = AutoSelector::new(cfg);
+        let registry = selector.registry();
+        Router { selector, policy, eb_rel, registry }
+    }
+
+    /// Compress through this router's registry: selection byte + bare
+    /// stream (same framing as `AutoSelector::compress_forced`).
+    fn encode(&self, field: &Field, eb: f64, choice: Choice) -> Result<Vec<u8>> {
+        self.registry.encode(choice, &field.data, field.dims, eb)
     }
 
     /// Process one field under this router's policy.
@@ -28,11 +40,14 @@ impl Router {
         let eb = if vr > 0.0 { self.eb_rel * vr } else { self.eb_rel };
         match self.policy {
             Policy::NoCompression => {
+                // Raw passthrough via the registry's raw codec. The
+                // payload stays *bare* (no selection byte) for v1
+                // container compatibility; `choice: None` marks it.
                 let t0 = Instant::now();
-                let mut payload = Vec::with_capacity(field.raw_bytes());
-                for v in &field.data {
-                    payload.extend_from_slice(&v.to_le_bytes());
-                }
+                let payload = self
+                    .registry
+                    .get(Choice::Raw.id())?
+                    .compress(&field.data, field.dims, eb)?;
                 Ok(FieldResult {
                     name: field.name.clone(),
                     choice: None,
@@ -45,7 +60,7 @@ impl Router {
             Policy::AlwaysSz | Policy::AlwaysZfp => {
                 let choice = if self.policy == Policy::AlwaysSz { Choice::Sz } else { Choice::Zfp };
                 let t0 = Instant::now();
-                let payload = self.selector.compress_forced(field, eb, choice)?;
+                let payload = self.encode(field, eb, choice)?;
                 Ok(FieldResult {
                     name: field.name.clone(),
                     choice: Some(choice),
@@ -60,14 +75,7 @@ impl Router {
                 let (choice, est) = self.selector.select_abs(field, eb, vr)?;
                 let estimate_time = t0.elapsed();
                 let t1 = Instant::now();
-                let payload = match choice {
-                    Choice::Sz => {
-                        let mut c = self.selector.compress_forced(field, est.eb_sz, choice)?;
-                        c[0] = 0;
-                        c
-                    }
-                    Choice::Zfp => self.selector.compress_forced(field, est.eb_zfp, choice)?,
-                };
+                let payload = self.encode(field, est.bound_for(choice), choice)?;
                 Ok(FieldResult {
                     name: field.name.clone(),
                     choice: Some(choice),
@@ -83,7 +91,7 @@ impl Router {
                     ebselect::select_by_error_bound(field, eb, self.selector.cfg.r_sp);
                 let estimate_time = t0.elapsed();
                 let t1 = Instant::now();
-                let payload = self.selector.compress_forced(field, eb, choice)?;
+                let payload = self.encode(field, eb, choice)?;
                 Ok(FieldResult {
                     name: field.name.clone(),
                     choice: Some(choice),
@@ -101,20 +109,18 @@ impl Router {
                 let _ = (sz_truth, zfp_truth);
                 let estimate_time = t0.elapsed();
                 let t1 = Instant::now();
-                let eb_used = match oracle {
-                    Choice::Sz => {
-                        let vr = field.value_range();
-                        if zfp_truth.psnr.is_finite() && vr > 0.0 {
-                            (crate::estimator::sz_model::delta_from_psnr(zfp_truth.psnr, vr)
-                                / 2.0)
-                                .min(eb)
-                        } else {
-                            eb
-                        }
-                    }
-                    Choice::Zfp => eb,
+                // SZ runs at the iso-PSNR bound; every other codec at
+                // the user bound.
+                let eb_used = if oracle == Choice::Sz
+                    && zfp_truth.psnr.is_finite()
+                    && vr > 0.0
+                {
+                    (crate::estimator::sz_model::delta_from_psnr(zfp_truth.psnr, vr) / 2.0)
+                        .min(eb)
+                } else {
+                    eb
                 };
-                let payload = self.selector.compress_forced(field, eb_used, oracle)?;
+                let payload = self.encode(field, eb_used, oracle)?;
                 Ok(FieldResult {
                     name: field.name.clone(),
                     choice: Some(oracle),

@@ -2,9 +2,10 @@
 //! paper's §6.5 reports (compression ratios per policy, timing splits).
 
 use super::job::FieldResult;
-use super::store::{Container, Entry};
+use super::store::{Chunk, Container, ContainerV2, Entry, FieldEntry};
 use crate::baseline::Policy;
-use crate::estimator::selector::Choice;
+use crate::codec_api::Choice;
+use crate::data::field::Dims;
 use std::time::Duration;
 
 /// The outcome of compressing one dataset under one policy.
@@ -60,7 +61,7 @@ impl RunReport {
         (sz, zfp)
     }
 
-    /// Package results into an on-disk container.
+    /// Package results into an on-disk container (v1 layout).
     pub fn to_container(&self) -> Container {
         Container {
             entries: self
@@ -68,13 +69,116 @@ impl RunReport {
                 .iter()
                 .map(|r| Entry {
                     name: r.name.clone(),
-                    selection: match r.choice {
-                        Some(Choice::Sz) => 0,
-                        Some(Choice::Zfp) => 1,
-                        None => 2,
-                    },
+                    selection: r.choice.unwrap_or(Choice::Raw).id(),
                     payload: r.payload.clone(),
                     raw_bytes: r.raw_bytes as u64,
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Per-chunk results for one field (Container v2 path): one
+/// [`FieldResult`] per chunk, in chunk order.
+#[derive(Clone, Debug)]
+pub struct ChunkedFieldResult {
+    pub name: String,
+    pub dims: Dims,
+    /// Nominal chunk size the field was split with (elements).
+    pub chunk_elems: usize,
+    pub chunks: Vec<FieldResult>,
+}
+
+impl ChunkedFieldResult {
+    pub fn raw_bytes(&self) -> u64 {
+        self.chunks.iter().map(|c| c.raw_bytes as u64).sum()
+    }
+
+    /// Stored bytes once packaged (bare chunk streams, without the
+    /// inline selection byte of the self-describing payloads).
+    pub fn stored_bytes(&self) -> u64 {
+        self.chunks.iter().map(|c| chunk_stream(c).1.len() as u64).sum()
+    }
+
+    /// The per-chunk selection map (None = raw passthrough).
+    pub fn selections(&self) -> Vec<Option<Choice>> {
+        self.chunks.iter().map(|c| c.choice).collect()
+    }
+}
+
+/// Selection byte + bare stream of one chunk result. Self-describing
+/// payloads (compressed chunks) carry the byte inline at the head; raw
+/// payloads are already bare.
+fn chunk_stream(c: &FieldResult) -> (u8, &[u8]) {
+    match (c.choice, c.payload.split_first()) {
+        (Some(_), Some((sel, stream))) => (*sel, stream),
+        _ => (Choice::Raw.id(), c.payload.as_slice()),
+    }
+}
+
+/// The outcome of one chunked coordinator run.
+#[derive(Clone, Debug)]
+pub struct ChunkedRunReport {
+    pub policy: Policy,
+    pub eb_rel: f64,
+    pub fields: Vec<ChunkedFieldResult>,
+}
+
+impl ChunkedRunReport {
+    pub fn total_raw_bytes(&self) -> u64 {
+        self.fields.iter().map(|f| f.raw_bytes()).sum()
+    }
+
+    pub fn total_stored_bytes(&self) -> u64 {
+        self.fields.iter().map(|f| f.stored_bytes()).sum()
+    }
+
+    /// Overall (size-weighted) compression ratio.
+    pub fn overall_ratio(&self) -> f64 {
+        self.total_raw_bytes() as f64 / self.total_stored_bytes() as f64
+    }
+
+    pub fn total_compress_time(&self) -> Duration {
+        self.fields.iter().flat_map(|f| f.chunks.iter()).map(|c| c.compress_time).sum()
+    }
+
+    pub fn total_estimate_time(&self) -> Duration {
+        self.fields.iter().flat_map(|f| f.chunks.iter()).map(|c| c.estimate_time).sum()
+    }
+
+    /// How many *chunks* picked SZ / ZFP.
+    pub fn choice_counts(&self) -> (usize, usize) {
+        let mut sz = 0;
+        let mut zfp = 0;
+        for c in self.fields.iter().flat_map(|f| f.chunks.iter()) {
+            if c.choice == Some(Choice::Sz) {
+                sz += 1;
+            } else if c.choice == Some(Choice::Zfp) {
+                zfp += 1;
+            }
+        }
+        (sz, zfp)
+    }
+
+    /// Package into a chunked, seekable v2 container.
+    pub fn to_container(&self) -> ContainerV2 {
+        ContainerV2 {
+            fields: self
+                .fields
+                .iter()
+                .map(|f| FieldEntry {
+                    name: f.name.clone(),
+                    dims: f.dims,
+                    raw_bytes: f.raw_bytes(),
+                    chunk_elems: f.chunk_elems as u64,
+                    chunks: f
+                        .chunks
+                        .iter()
+                        .map(|c| {
+                            let (selection, stream) = chunk_stream(c);
+                            Chunk { selection, stream: stream.to_vec() }
+                        })
+                        .collect(),
                 })
                 .collect(),
         }
@@ -118,6 +222,45 @@ mod tests {
             vec![fake_result("a", 10, 1, Some(Choice::Sz))],
         );
         assert!((report.overhead_frac() - 0.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn chunked_report_packages_bare_streams() {
+        let mk = |choice: Option<Choice>, payload: Vec<u8>, raw: usize| FieldResult {
+            name: "f#0".into(),
+            choice,
+            payload,
+            raw_bytes: raw,
+            estimate_time: Duration::from_millis(1),
+            compress_time: Duration::from_millis(2),
+        };
+        let report = ChunkedRunReport {
+            policy: Policy::RateDistortion,
+            eb_rel: 1e-4,
+            fields: vec![ChunkedFieldResult {
+                name: "f".into(),
+                dims: Dims::D1(8),
+                chunk_elems: 4,
+                chunks: vec![
+                    // Self-describing payload: selection byte 0 + stream.
+                    mk(Some(Choice::Sz), vec![0, 7, 7], 16),
+                    // Raw chunk: bare bytes.
+                    mk(None, vec![9; 16], 16),
+                ],
+            }],
+        };
+        let c = report.to_container();
+        assert_eq!(c.fields[0].chunks[0].selection, Choice::Sz.id());
+        assert_eq!(c.fields[0].chunks[0].stream, vec![7, 7]);
+        assert_eq!(c.fields[0].chunks[1].selection, Choice::Raw.id());
+        assert_eq!(c.fields[0].chunks[1].stream, vec![9; 16]);
+        assert_eq!(report.total_raw_bytes(), 32);
+        assert_eq!(report.total_stored_bytes(), 18);
+        assert_eq!(report.choice_counts(), (1, 0));
+        assert_eq!(
+            report.fields[0].selections(),
+            vec![Some(Choice::Sz), None]
+        );
     }
 
     #[test]

@@ -1,20 +1,43 @@
-//! On-disk container: magic + version + per-field index (name, dims,
-//! selection bit, payload length) + payloads. This is the "compressed-
-//! byte stream {C_i} with selection bits {s_i}" of Algorithm 1's output,
-//! packaged for file-per-process POSIX I/O.
+//! On-disk containers: the "compressed byte stream {C_i} with
+//! selection bits {s_i}" of Algorithm 1's output, packaged for
+//! file-per-process POSIX I/O. Two wire formats (DESIGN.md §6):
+//!
+//! * **v1** (`ADAPTC01`): magic + per-field entries (name, selection
+//!   byte, raw size, length-prefixed payload). Payloads of compressed
+//!   entries are self-describing (leading selection byte); raw entries
+//!   (selection 2) are bare f32 LE bytes. Kept for compatibility —
+//!   [`Container`] still writes it and every reader still accepts it.
+//! * **v2** (`ADAPTC02`): magic + length-prefixed *index* + payload
+//!   region. Each field is split into fixed-size chunks, each chunk
+//!   independently selected and compressed (one selection byte per
+//!   chunk — the paper's per-field bits generalized downward), and the
+//!   index records every chunk's byte offset so [`ContainerReader`]
+//!   can decode one field or one chunk without touching the rest of
+//!   the file.
+//!
+//! Selection bytes are resolved through
+//! [`crate::codec_api::CodecRegistry`] — nothing here maps bytes to
+//! codecs.
 
+use crate::codec_api::CodecRegistry;
 use crate::codec::varint;
+use crate::data::field::{Dims, Field};
 use crate::{Error, Result};
 use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"ADAPTC01";
+const MAGIC_V2: &[u8; 8] = b"ADAPTC02";
 
-/// One stored field.
+// ---------------------------------------------------------------------------
+// Container v1 (per-field, kept for compatibility)
+// ---------------------------------------------------------------------------
+
+/// One stored field (v1).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Entry {
     pub name: String,
-    /// Selection byte (0 = SZ, 1 = ZFP, 2 = raw).
+    /// Selection byte (codec id: 0 = SZ, 1 = ZFP, 2 = raw).
     pub selection: u8,
     /// Self-describing payload (starts with the selection byte for
     /// compressed entries; raw f32 LE bytes for selection = 2).
@@ -22,7 +45,7 @@ pub struct Entry {
     pub raw_bytes: u64,
 }
 
-/// A container of fields.
+/// A v1 container of fields.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Container {
     pub entries: Vec<Entry>,
@@ -50,7 +73,9 @@ impl Container {
         }
         let mut pos = 8usize;
         let n = varint::read_u64(buf, &mut pos)? as usize;
-        let mut entries = Vec::with_capacity(n);
+        // Capacity stays bounded by the buffer, not the (untrusted)
+        // count: a corrupt header must not trigger a huge allocation.
+        let mut entries = Vec::with_capacity(n.min(buf.len() / 3));
         for _ in 0..n {
             let name = varint::read_str(buf, &mut pos)?;
             let selection = *buf
@@ -93,9 +118,418 @@ impl Container {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Container v2 (chunked + seekable)
+// ---------------------------------------------------------------------------
+
+/// One compressed chunk of a v2 field: codec id + bare codec stream
+/// (no inline selection byte — the index carries it).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Chunk {
+    pub selection: u8,
+    pub stream: Vec<u8>,
+}
+
+/// One field of a v2 container (writer-side, owns its payloads).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FieldEntry {
+    pub name: String,
+    pub dims: Dims,
+    pub raw_bytes: u64,
+    /// Nominal elements per chunk used when the field was split
+    /// (0 = whole field in one chunk).
+    pub chunk_elems: u64,
+    pub chunks: Vec<Chunk>,
+}
+
+/// A chunked, seekable container (writer side).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ContainerV2 {
+    pub fields: Vec<FieldEntry>,
+}
+
+impl ContainerV2 {
+    /// Serialize: magic, length-prefixed index, then the payload
+    /// region (all chunk streams concatenated in index order).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut index = Vec::new();
+        varint::write_u64(&mut index, self.fields.len() as u64);
+        let mut offset = 0u64;
+        for f in &self.fields {
+            varint::write_str(&mut index, &f.name);
+            f.dims.encode(&mut index);
+            varint::write_u64(&mut index, f.raw_bytes);
+            varint::write_u64(&mut index, f.chunk_elems);
+            varint::write_u64(&mut index, f.chunks.len() as u64);
+            for c in &f.chunks {
+                index.push(c.selection);
+                varint::write_u64(&mut index, offset);
+                varint::write_u64(&mut index, c.stream.len() as u64);
+                offset += c.stream.len() as u64;
+            }
+        }
+        let mut out = Vec::with_capacity(8 + 10 + index.len() + offset as usize);
+        out.extend_from_slice(MAGIC_V2);
+        varint::write_u64(&mut out, index.len() as u64);
+        out.extend_from_slice(&index);
+        for f in &self.fields {
+            for c in &f.chunks {
+                out.extend_from_slice(&c.stream);
+            }
+        }
+        out
+    }
+
+    /// Write to a file.
+    pub fn write_file(&self, path: impl AsRef<Path>) -> Result<()> {
+        let bytes = self.to_bytes();
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(&bytes)?;
+        Ok(())
+    }
+
+    /// Total stored payload bytes (chunk streams).
+    pub fn stored_bytes(&self) -> u64 {
+        self.fields
+            .iter()
+            .flat_map(|f| f.chunks.iter())
+            .map(|c| c.stream.len() as u64)
+            .sum()
+    }
+
+    /// Total raw bytes represented.
+    pub fn raw_bytes(&self) -> u64 {
+        self.fields.iter().map(|f| f.raw_bytes).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Seekable reader over both formats
+// ---------------------------------------------------------------------------
+
+/// Index record for one chunk: selection byte + absolute in-buffer
+/// byte range of its payload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkRef {
+    pub selection: u8,
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// Index record for one field.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FieldInfo {
+    pub name: String,
+    /// `None` for v1 entries (v1 indexes carry no dims; the codec
+    /// stream self-describes them at decode time).
+    pub dims: Option<Dims>,
+    pub raw_bytes: u64,
+    pub chunk_elems: u64,
+    pub chunks: Vec<ChunkRef>,
+}
+
+impl FieldInfo {
+    /// Stored bytes of this field's chunk payloads.
+    pub fn stored_bytes(&self) -> u64 {
+        self.chunks.iter().map(|c| c.len as u64).sum()
+    }
+}
+
+/// Parses only a container's index and decodes fields/chunks on
+/// demand — `load_field`/`load_chunk` never touch other payloads.
+#[derive(Clone, Debug)]
+pub struct ContainerReader {
+    buf: Vec<u8>,
+    /// Wire format version (1 or 2).
+    pub version: u8,
+    pub fields: Vec<FieldInfo>,
+}
+
+impl ContainerReader {
+    /// Parse a container's index from bytes (v1 or v2, auto-detected).
+    pub fn from_bytes(buf: Vec<u8>) -> Result<ContainerReader> {
+        if buf.len() < 8 {
+            return Err(Error::Corrupt("container too short".into()));
+        }
+        if &buf[..8] == MAGIC {
+            Self::parse_v1(buf)
+        } else if &buf[..8] == MAGIC_V2 {
+            Self::parse_v2(buf)
+        } else {
+            Err(Error::Corrupt("bad container magic".into()))
+        }
+    }
+
+    /// Open and index a container file.
+    pub fn open(path: impl AsRef<Path>) -> Result<ContainerReader> {
+        let mut buf = Vec::new();
+        std::fs::File::open(path)?.read_to_end(&mut buf)?;
+        ContainerReader::from_bytes(buf)
+    }
+
+    fn parse_v1(buf: Vec<u8>) -> Result<ContainerReader> {
+        let mut pos = 8usize;
+        let n = varint::read_u64(&buf, &mut pos)? as usize;
+        let mut fields = Vec::with_capacity(n.min(buf.len() / 3));
+        for _ in 0..n {
+            let name = varint::read_str(&buf, &mut pos)?;
+            let selection = *buf
+                .get(pos)
+                .ok_or_else(|| Error::Corrupt("truncated entry".into()))?;
+            pos += 1;
+            let raw_bytes = varint::read_u64(&buf, &mut pos)?;
+            let len = varint::read_u64(&buf, &mut pos)? as usize;
+            let end = pos
+                .checked_add(len)
+                .ok_or_else(|| Error::Corrupt("length overflow".into()))?;
+            if end > buf.len() {
+                return Err(Error::Corrupt(format!(
+                    "payload of {len} bytes exceeds buffer"
+                )));
+            }
+            fields.push(FieldInfo {
+                name,
+                dims: None,
+                raw_bytes,
+                chunk_elems: 0,
+                chunks: vec![ChunkRef { selection, offset: pos, len }],
+            });
+            pos = end;
+        }
+        if pos != buf.len() {
+            return Err(Error::Corrupt("trailing bytes in container".into()));
+        }
+        Ok(ContainerReader { buf, version: 1, fields })
+    }
+
+    fn parse_v2(buf: Vec<u8>) -> Result<ContainerReader> {
+        let mut pos = 8usize;
+        let index_len = varint::read_u64(&buf, &mut pos)? as usize;
+        let index_end = pos
+            .checked_add(index_len)
+            .ok_or_else(|| Error::Corrupt("index length overflow".into()))?;
+        if index_end > buf.len() {
+            return Err(Error::Corrupt("truncated index".into()));
+        }
+        let payload_base = index_end;
+        let payload_len = buf.len() - payload_base;
+
+        let n = varint::read_u64(&buf, &mut pos)? as usize;
+        let mut fields = Vec::with_capacity(n.min(index_len / 2 + 1));
+        let mut payload_end = payload_base;
+        for _ in 0..n {
+            let name = varint::read_str(&buf, &mut pos)?;
+            let dims = Dims::decode(&buf, &mut pos)?;
+            let raw_bytes = varint::read_u64(&buf, &mut pos)?;
+            let chunk_elems = varint::read_u64(&buf, &mut pos)?;
+            let n_chunks = varint::read_u64(&buf, &mut pos)? as usize;
+            let mut chunks = Vec::with_capacity(n_chunks.min(index_len / 3 + 1));
+            for _ in 0..n_chunks {
+                let selection = *buf
+                    .get(pos)
+                    .ok_or_else(|| Error::Corrupt("truncated chunk index".into()))?;
+                pos += 1;
+                let off = varint::read_u64(&buf, &mut pos)? as usize;
+                let len = varint::read_u64(&buf, &mut pos)? as usize;
+                let end = off
+                    .checked_add(len)
+                    .ok_or_else(|| Error::Corrupt("chunk range overflow".into()))?;
+                if end > payload_len {
+                    return Err(Error::Corrupt(format!(
+                        "chunk [{off}, {end}) out of range of {payload_len}-byte payload"
+                    )));
+                }
+                chunks.push(ChunkRef { selection, offset: payload_base + off, len });
+                payload_end = payload_end.max(payload_base + end);
+            }
+            // A record that strayed past the index region is corrupt
+            // even if the reads happened to stay inside the buffer.
+            if pos > index_end {
+                return Err(Error::Corrupt("index record overruns index region".into()));
+            }
+            fields.push(FieldInfo {
+                name,
+                dims: Some(dims),
+                raw_bytes,
+                chunk_elems,
+                chunks,
+            });
+        }
+        if pos != index_end {
+            return Err(Error::Corrupt("index length mismatch".into()));
+        }
+        if payload_end != buf.len() {
+            return Err(Error::Corrupt("trailing bytes in container".into()));
+        }
+        Ok(ContainerReader { buf, version: 2, fields })
+    }
+
+    /// Locate a field by name.
+    pub fn field(&self, name: &str) -> Result<(usize, &FieldInfo)> {
+        self.fields
+            .iter()
+            .enumerate()
+            .find(|(_, f)| f.name == name)
+            .ok_or_else(|| Error::InvalidArg(format!("no field '{name}' in container")))
+    }
+
+    /// Field names in container order.
+    pub fn field_names(&self) -> impl Iterator<Item = &str> {
+        self.fields.iter().map(|f| f.name.as_str())
+    }
+
+    /// Bounds-checked chunk index lookup.
+    fn chunk_ref(&self, field_idx: usize, chunk_idx: usize) -> Result<ChunkRef> {
+        let f = self
+            .fields
+            .get(field_idx)
+            .ok_or_else(|| Error::InvalidArg(format!("field index {field_idx} out of range")))?;
+        f.chunks.get(chunk_idx).copied().ok_or_else(|| {
+            Error::InvalidArg(format!("chunk index {chunk_idx} out of range for '{}'", f.name))
+        })
+    }
+
+    /// Raw payload bytes of one chunk (no decode).
+    pub fn chunk_bytes(&self, field_idx: usize, chunk_idx: usize) -> Result<&[u8]> {
+        let c = self.chunk_ref(field_idx, chunk_idx)?;
+        Ok(&self.buf[c.offset..c.offset + c.len])
+    }
+
+    /// Decode one chunk through the registry.
+    pub fn decode_chunk(
+        &self,
+        registry: &CodecRegistry,
+        field_idx: usize,
+        chunk_idx: usize,
+    ) -> Result<(Vec<f32>, Dims)> {
+        let c = self.chunk_ref(field_idx, chunk_idx)?;
+        let bytes = &self.buf[c.offset..c.offset + c.len];
+        if self.version == 1 {
+            registry.decode_v1_entry(c.selection, bytes)
+        } else {
+            registry.decode_stream(c.selection, bytes)
+        }
+    }
+
+    /// Decode a whole field by name — touches only that field's chunk
+    /// payloads (sequentially; `Coordinator::load_field` parallelizes).
+    pub fn load_field(&self, registry: &CodecRegistry, name: &str) -> Result<Field> {
+        let (fi, info) = self.field(name)?;
+        let parts: Result<Vec<(Vec<f32>, Dims)>> =
+            (0..info.chunks.len()).map(|ci| self.decode_chunk(registry, fi, ci)).collect();
+        assemble_field(info, parts?)
+    }
+
+    /// Decode one chunk of a named field.
+    pub fn load_chunk(
+        &self,
+        registry: &CodecRegistry,
+        name: &str,
+        chunk_idx: usize,
+    ) -> Result<(Vec<f32>, Dims)> {
+        let (fi, _) = self.field(name)?;
+        self.decode_chunk(registry, fi, chunk_idx)
+    }
+
+    /// Total stored payload bytes.
+    pub fn stored_bytes(&self) -> u64 {
+        self.fields.iter().map(|f| f.stored_bytes()).sum()
+    }
+
+    /// Total raw bytes represented.
+    pub fn raw_bytes(&self) -> u64 {
+        self.fields.iter().map(|f| f.raw_bytes).sum()
+    }
+}
+
+/// Element count of `dims` without the unchecked multiply of
+/// [`Dims::len`] — index-supplied dims are untrusted, and huge extents
+/// must surface as `None`, not an overflow panic (debug) or a wrapped
+/// product that could spuriously match a length check (release).
+fn checked_dims_len(dims: Dims) -> Option<usize> {
+    let e = dims.extents();
+    e[0].checked_mul(e[1])?.checked_mul(e[2])
+}
+
+/// Reassemble decoded chunk parts into one [`Field`], validating
+/// lengths so corrupt containers surface as `Err`, never a panic.
+pub fn assemble_field(info: &FieldInfo, parts: Vec<(Vec<f32>, Dims)>) -> Result<Field> {
+    let mismatch = |dims: Dims, got: usize| {
+        Error::Corrupt(format!(
+            "field '{}': dims {dims} disagree with {got} decoded values",
+            info.name
+        ))
+    };
+    if parts.len() == 1 {
+        let (data, decoded_dims) = parts.into_iter().next().expect("len checked");
+        let dims = info.dims.unwrap_or(decoded_dims);
+        if checked_dims_len(dims) != Some(data.len()) {
+            return Err(mismatch(dims, data.len()));
+        }
+        return Ok(Field::new(info.name.clone(), dims, data));
+    }
+    let dims = info.dims.ok_or_else(|| {
+        Error::Corrupt(format!("multi-chunk field '{}' without indexed dims", info.name))
+    })?;
+    let expect = checked_dims_len(dims)
+        .ok_or_else(|| Error::Corrupt(format!("field '{}': dims {dims} overflow", info.name)))?;
+    let mut data = Vec::with_capacity(expect.min(1 << 24));
+    for (part, _) in parts {
+        data.extend_from_slice(&part);
+    }
+    if data.len() != expect {
+        return Err(mismatch(dims, data.len()));
+    }
+    Ok(Field::new(info.name.clone(), dims, data))
+}
+
+/// Split `dims` into contiguous chunk spans of roughly `chunk_elems`
+/// elements along the slowest-varying axis, so every chunk is itself a
+/// well-shaped slab the codecs can exploit spatially. Returns
+/// `(element_offset, chunk_dims)` pairs; `chunk_elems == 0` means one
+/// whole-field chunk.
+pub fn chunk_spans(dims: Dims, chunk_elems: usize) -> Vec<(usize, Dims)> {
+    let total = dims.len();
+    if total == 0 || chunk_elems == 0 || chunk_elems >= total {
+        return vec![(0, dims)];
+    }
+    let mut spans = Vec::new();
+    match dims {
+        Dims::D1(n) => {
+            let mut start = 0;
+            while start < n {
+                let len = chunk_elems.min(n - start);
+                spans.push((start, Dims::D1(len)));
+                start += len;
+            }
+        }
+        Dims::D2(ny, nx) => {
+            let rows = (chunk_elems / nx).max(1);
+            let mut y = 0;
+            while y < ny {
+                let r = rows.min(ny - y);
+                spans.push((y * nx, Dims::D2(r, nx)));
+                y += r;
+            }
+        }
+        Dims::D3(nz, ny, nx) => {
+            let plane = ny * nx;
+            let slabs = (chunk_elems / plane).max(1);
+            let mut z = 0;
+            while z < nz {
+                let s = slabs.min(nz - z);
+                spans.push((z * plane, Dims::D3(s, ny, nx)));
+                z += s;
+            }
+        }
+    }
+    spans
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::codec_api::Choice;
 
     fn sample() -> Container {
         Container {
@@ -111,6 +545,30 @@ mod tests {
                     selection: 1,
                     payload: vec![1, 9, 9],
                     raw_bytes: 2000,
+                },
+            ],
+        }
+    }
+
+    fn sample_v2() -> ContainerV2 {
+        ContainerV2 {
+            fields: vec![
+                FieldEntry {
+                    name: "a".into(),
+                    dims: Dims::D2(2, 4),
+                    raw_bytes: 32,
+                    chunk_elems: 4,
+                    chunks: vec![
+                        Chunk { selection: 0, stream: vec![10, 11, 12] },
+                        Chunk { selection: 1, stream: vec![20] },
+                    ],
+                },
+                FieldEntry {
+                    name: "b".into(),
+                    dims: Dims::D1(3),
+                    raw_bytes: 12,
+                    chunk_elems: 0,
+                    chunks: vec![Chunk { selection: 2, stream: vec![0; 12] }],
                 },
             ],
         }
@@ -150,5 +608,157 @@ mod tests {
         let c = sample();
         assert_eq!(c.stored_bytes(), 7);
         assert_eq!(c.raw_bytes(), 3000);
+    }
+
+    #[test]
+    fn v2_index_roundtrip() {
+        let c = sample_v2();
+        let bytes = c.to_bytes();
+        let r = ContainerReader::from_bytes(bytes).unwrap();
+        assert_eq!(r.version, 2);
+        assert_eq!(r.fields.len(), 2);
+        assert_eq!(r.fields[0].name, "a");
+        assert_eq!(r.fields[0].dims, Some(Dims::D2(2, 4)));
+        assert_eq!(r.fields[0].chunk_elems, 4);
+        assert_eq!(r.fields[0].chunks.len(), 2);
+        assert_eq!(r.fields[1].chunks[0].selection, 2);
+        assert_eq!(r.stored_bytes(), c.stored_bytes());
+        assert_eq!(r.raw_bytes(), c.raw_bytes());
+        // Chunk payloads slice to exactly what the writer put in.
+        assert_eq!(r.chunk_bytes(0, 0).unwrap(), &[10, 11, 12]);
+        assert_eq!(r.chunk_bytes(0, 1).unwrap(), &[20]);
+        assert_eq!(r.chunk_bytes(1, 0).unwrap(), &[0u8; 12][..]);
+    }
+
+    #[test]
+    fn reader_accepts_v1() {
+        let c = sample();
+        let r = ContainerReader::from_bytes(c.to_bytes()).unwrap();
+        assert_eq!(r.version, 1);
+        assert_eq!(r.fields.len(), 2);
+        assert_eq!(r.fields[0].dims, None);
+        assert_eq!(r.fields[0].chunks.len(), 1);
+        // v1 chunk range covers the whole self-describing payload.
+        assert_eq!(r.chunk_bytes(0, 0).unwrap(), &[0, 1, 2, 3]);
+        assert_eq!(r.raw_bytes(), 3000);
+    }
+
+    #[test]
+    fn v2_raw_chunk_decodes_through_registry() {
+        let c = sample_v2();
+        let r = ContainerReader::from_bytes(c.to_bytes()).unwrap();
+        let reg = CodecRegistry::default();
+        let (data, dims) = r.load_chunk(&reg, "b", 0).unwrap();
+        assert_eq!(data, vec![0.0f32; 3]);
+        assert_eq!(dims, Dims::D1(3));
+        let f = r.load_field(&reg, "b").unwrap();
+        assert_eq!(f.dims, Dims::D1(3));
+        assert!(r.load_field(&reg, "nope").is_err());
+    }
+
+    #[test]
+    fn v2_out_of_range_chunk_offset_rejected() {
+        // Hand-build a v2 container whose only chunk points past the
+        // payload region.
+        let mut index = Vec::new();
+        varint::write_u64(&mut index, 1); // one field
+        varint::write_str(&mut index, "x");
+        Dims::D1(1).encode(&mut index);
+        varint::write_u64(&mut index, 4); // raw_bytes
+        varint::write_u64(&mut index, 0); // chunk_elems
+        varint::write_u64(&mut index, 1); // one chunk
+        index.push(Choice::Raw.id());
+        varint::write_u64(&mut index, 1000); // offset: out of range
+        varint::write_u64(&mut index, 4); // len
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"ADAPTC02");
+        varint::write_u64(&mut bytes, index.len() as u64);
+        bytes.extend_from_slice(&index);
+        bytes.extend_from_slice(&[0u8; 4]); // 4-byte payload region
+        let err = ContainerReader::from_bytes(bytes).unwrap_err();
+        assert!(format!("{err}").contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn v2_truncation_and_trailing_rejected() {
+        let bytes = sample_v2().to_bytes();
+        assert!(ContainerReader::from_bytes(bytes[..bytes.len() - 1].to_vec()).is_err());
+        let mut extra = bytes.clone();
+        extra.push(0);
+        assert!(ContainerReader::from_bytes(extra).is_err());
+    }
+
+    #[test]
+    fn chunk_spans_cover_every_element_once() {
+        let cases = [
+            (Dims::D1(10), 4, 3),
+            (Dims::D1(10), 0, 1),
+            (Dims::D1(10), 100, 1),
+            (Dims::D2(6, 5), 10, 3),
+            (Dims::D2(6, 5), 3, 6), // chunk smaller than a row -> row granularity
+            (Dims::D3(5, 4, 3), 24, 3),
+            (Dims::D3(5, 4, 3), 1, 5), // plane granularity
+        ];
+        for (dims, chunk_elems, expect_chunks) in cases {
+            let spans = chunk_spans(dims, chunk_elems);
+            assert_eq!(spans.len(), expect_chunks, "{dims} / {chunk_elems}");
+            let mut covered = 0;
+            for (off, d) in &spans {
+                assert_eq!(*off, covered, "{dims} / {chunk_elems}");
+                covered += d.len();
+            }
+            assert_eq!(covered, dims.len(), "{dims} / {chunk_elems}");
+        }
+    }
+
+    #[test]
+    fn out_of_range_chunk_index_is_err_not_panic() {
+        let r = ContainerReader::from_bytes(sample_v2().to_bytes()).unwrap();
+        let reg = CodecRegistry::default();
+        assert!(r.chunk_bytes(0, 9).is_err());
+        assert!(r.chunk_bytes(9, 0).is_err());
+        assert!(r.decode_chunk(&reg, 0, 9).is_err());
+        assert!(r.decode_chunk(&reg, 9, 0).is_err());
+        assert!(r.load_chunk(&reg, "a", 9).is_err());
+    }
+
+    #[test]
+    fn assemble_rejects_overflowing_dims() {
+        // Index-supplied dims whose product overflows usize must be a
+        // corruption error, not an arithmetic panic.
+        let info = FieldInfo {
+            name: "huge".into(),
+            dims: Some(Dims::D3(usize::MAX / 2, usize::MAX / 2, 2)),
+            raw_bytes: 8,
+            chunk_elems: 1,
+            chunks: vec![
+                ChunkRef { selection: 2, offset: 0, len: 0 },
+                ChunkRef { selection: 2, offset: 0, len: 0 },
+            ],
+        };
+        let parts = vec![(vec![0.0f32; 1], Dims::D1(1)), (vec![0.0f32; 1], Dims::D1(1))];
+        assert!(assemble_field(&info, parts).is_err());
+        // Single-chunk path takes the same checked product.
+        let single = FieldInfo { chunks: info.chunks[..1].to_vec(), ..info };
+        assert!(assemble_field(&single, vec![(vec![0.0f32; 1], Dims::D1(1))]).is_err());
+    }
+
+    #[test]
+    fn assemble_rejects_length_mismatch() {
+        let info = FieldInfo {
+            name: "x".into(),
+            dims: Some(Dims::D1(5)),
+            raw_bytes: 20,
+            chunk_elems: 2,
+            chunks: vec![
+                ChunkRef { selection: 2, offset: 0, len: 0 },
+                ChunkRef { selection: 2, offset: 0, len: 0 },
+            ],
+        };
+        let parts = vec![
+            (vec![0.0f32; 2], Dims::D1(2)),
+            (vec![0.0f32; 2], Dims::D1(2)), // 4 != 5 total
+        ];
+        assert!(assemble_field(&info, parts).is_err());
     }
 }

@@ -9,26 +9,15 @@
 
 use super::sampling::{sample_blocks, DEFAULT_RSP};
 use super::{sz_model, zfp_model};
+use crate::codec_api::CodecRegistry;
 use crate::data::field::{Dims, Field};
-use crate::sz::{SzCompressor, SzConfig};
-use crate::zfp::{ZfpCompressor, ZfpConfig};
+use crate::sz::SzConfig;
+use crate::zfp::ZfpConfig;
 use crate::{Error, Result};
 
-/// Which compressor was (or should be) used.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-pub enum Choice {
-    Sz,
-    Zfp,
-}
-
-impl Choice {
-    pub fn name(&self) -> &'static str {
-        match self {
-            Choice::Sz => "SZ",
-            Choice::Zfp => "ZFP",
-        }
-    }
-}
+// `Choice` is now a thin wrapper over codec-registry ids; re-exported
+// here so `estimator::selector::Choice` keeps working.
+pub use crate::codec_api::Choice;
 
 /// Selector configuration.
 #[derive(Clone, Copy, Debug)]
@@ -67,6 +56,18 @@ pub struct Estimates {
     pub eb_zfp: f64,
 }
 
+impl Estimates {
+    /// The bound Algorithm 1 hands to `choice`'s codec: SZ gets the
+    /// iso-PSNR δ/2, every other codec the user bound.
+    pub fn bound_for(&self, choice: Choice) -> f64 {
+        if choice == Choice::Sz {
+            self.eb_sz
+        } else {
+            self.eb_zfp
+        }
+    }
+}
+
 /// Result of selection + compression for one field.
 #[derive(Clone, Debug)]
 pub struct CompressOutput {
@@ -84,9 +85,13 @@ impl CompressOutput {
         self.raw_bytes as f64 / self.container.len() as f64
     }
 
-    /// Achieved bit-rate (bits/value, f32 input).
+    /// Achieved bit-rate (bits/value, f32 input). Computed in f64 so
+    /// non-multiple-of-4 sizes don't floor; 0.0 for an empty field.
     pub fn bit_rate(&self) -> f64 {
-        self.container.len() as f64 * 8.0 / (self.raw_bytes / 4) as f64
+        if self.raw_bytes == 0 {
+            return 0.0;
+        }
+        self.container.len() as f64 * 8.0 / (self.raw_bytes as f64 / 4.0)
     }
 }
 
@@ -99,6 +104,12 @@ pub struct AutoSelector {
 impl AutoSelector {
     pub fn new(cfg: SelectorConfig) -> Self {
         AutoSelector { cfg }
+    }
+
+    /// The codec registry for this selector's configuration — the one
+    /// place that maps selection bytes to concrete codecs.
+    pub fn registry(&self) -> CodecRegistry {
+        CodecRegistry::standard(self.cfg.sz, self.cfg.zfp)
     }
 
     /// Algorithm 1 lines 2–10: estimate both compressors and choose.
@@ -159,33 +170,16 @@ impl AutoSelector {
     /// Compression with an explicit absolute bound.
     pub fn compress_abs(&self, field: &Field, eb: f64, vr: f64) -> Result<CompressOutput> {
         let (choice, estimates) = self.select_abs(field, eb, vr)?;
-        let payload = match choice {
-            Choice::Sz => SzCompressor::new(self.cfg.sz)
-                .compress(&field.data, field.dims, estimates.eb_sz)?,
-            Choice::Zfp => ZfpCompressor::new(self.cfg.zfp)
-                .compress(&field.data, field.dims, estimates.eb_zfp)?,
-        };
-        let mut container = Vec::with_capacity(payload.len() + 1);
-        container.push(match choice {
-            Choice::Sz => 0u8, // paper: s_i = 0 for SZ
-            Choice::Zfp => 1u8,
-        });
-        container.extend_from_slice(&payload);
+        // Paper output format: selection bit s_i + codec stream — the
+        // registry frames both.
+        let container =
+            self.registry().encode(choice, &field.data, field.dims, estimates.bound_for(choice))?;
         Ok(CompressOutput { choice, container, estimates, raw_bytes: field.raw_bytes() })
     }
 
     /// Compress with a *forced* codec (baseline policies / Fig. 7 bars).
     pub fn compress_forced(&self, field: &Field, eb: f64, choice: Choice) -> Result<Vec<u8>> {
-        let payload = match choice {
-            Choice::Sz => SzCompressor::new(self.cfg.sz).compress(&field.data, field.dims, eb)?,
-            Choice::Zfp => {
-                ZfpCompressor::new(self.cfg.zfp).compress(&field.data, field.dims, eb)?
-            }
-        };
-        let mut container = Vec::with_capacity(payload.len() + 1);
-        container.push(if choice == Choice::Sz { 0 } else { 1 });
-        container.extend_from_slice(&payload);
-        Ok(container)
+        self.registry().encode(choice, &field.data, field.dims, eb)
     }
 
     /// Decompress a container produced by [`Self::compress`].
@@ -194,17 +188,10 @@ impl AutoSelector {
         Ok(data)
     }
 
-    /// Decompress, returning dims too.
+    /// Decompress, returning dims too. Dispatches on the leading
+    /// selection byte through the codec registry.
     pub fn decompress_with_dims(&self, container: &[u8]) -> Result<(Vec<f32>, Dims)> {
-        let sel = *container
-            .first()
-            .ok_or_else(|| Error::Corrupt("empty container".into()))?;
-        let payload = &container[1..];
-        match sel {
-            0 => SzCompressor::new(self.cfg.sz).decompress(payload),
-            1 => ZfpCompressor::new(self.cfg.zfp).decompress(payload),
-            b => Err(Error::Corrupt(format!("bad selection bit {b}"))),
-        }
+        self.registry().decode(container)
     }
 
     fn absolute_bound(&self, vr: f64, eb_rel: f64) -> Result<f64> {
@@ -304,6 +291,40 @@ mod tests {
         assert!(sel.compress(&f, 0.0).is_err());
         assert!(sel.compress(&f, -1.0).is_err());
         assert!(sel.compress(&f, f64::NAN).is_err());
+    }
+
+    #[test]
+    fn bit_rate_guards_empty_and_fractional_sizes() {
+        let mk = |raw_bytes: usize, stored: usize| CompressOutput {
+            choice: Choice::Sz,
+            container: vec![0; stored],
+            estimates: Estimates {
+                br_sz: 0.0,
+                br_zfp: 0.0,
+                psnr_target: 0.0,
+                eb_sz: 1.0,
+                eb_zfp: 1.0,
+            },
+            raw_bytes,
+        };
+        // Empty field: no division by zero.
+        assert_eq!(mk(0, 8).bit_rate(), 0.0);
+        // 4 values, 4 stored bytes -> 8 bits/value exactly.
+        assert!((mk(16, 4).bit_rate() - 8.0).abs() < 1e-12);
+        // Non-multiple-of-4 raw size must not floor the divisor:
+        // 6 raw bytes = 1.5 values; 3 stored bytes = 24 bits -> 16 b/v.
+        assert!((mk(6, 3).bit_rate() - 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn forced_raw_choice_roundtrips_exactly() {
+        let sel = AutoSelector::default();
+        let f = atm::generate_field_scaled(29, 3, 0);
+        let cont = sel.compress_forced(&f, 1e-3, Choice::Raw).unwrap();
+        assert_eq!(cont[0], Choice::Raw.id());
+        assert_eq!(cont.len(), 1 + f.raw_bytes());
+        let recon = sel.decompress(&cont).unwrap();
+        assert_eq!(recon, f.data);
     }
 
     #[test]

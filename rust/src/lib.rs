@@ -43,6 +43,7 @@ pub mod baseline;
 pub mod bench_util;
 pub mod cli;
 pub mod codec;
+pub mod codec_api;
 pub mod config;
 pub mod coordinator;
 pub mod data;
@@ -55,25 +56,42 @@ pub mod sz;
 pub mod testing;
 pub mod zfp;
 
-/// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+/// Crate-wide error type (hand-rolled: the offline build has no
+/// `thiserror` — DESIGN.md §9).
+#[derive(Debug)]
 pub enum Error {
-    #[error("corrupt stream: {0}")]
     Corrupt(String),
-    #[error("invalid argument: {0}")]
     InvalidArg(String),
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("pjrt runtime error: {0}")]
+    Io(std::io::Error),
     Runtime(String),
-    #[error("{0}")]
     Other(String),
 }
 
-pub type Result<T> = std::result::Result<T, Error>;
-
-impl From<anyhow::Error> for Error {
-    fn from(e: anyhow::Error) -> Self {
-        Error::Runtime(format!("{e:#}"))
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Corrupt(m) => write!(f, "corrupt stream: {m}"),
+            Error::InvalidArg(m) => write!(f, "invalid argument: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Runtime(m) => write!(f, "pjrt runtime error: {m}"),
+            Error::Other(m) => write!(f, "{m}"),
+        }
     }
 }
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,71 @@
+//! API-compatible stand-in for [`super::pjrt::PjrtEngine`] used when
+//! the crate is built without the `pjrt` feature (the `xla` bindings
+//! only exist in the internal toolchain image). Every entry point
+//! compiles; `load_dir` fails with a clear message, which callers
+//! already treat the same way as missing artifacts.
+
+use crate::{Error, Result};
+use std::path::Path;
+
+/// Placeholder engine: cannot be constructed.
+#[derive(Debug)]
+pub struct PjrtEngine {
+    _unconstructible: (),
+}
+
+fn unavailable() -> Error {
+    Error::Runtime(
+        "adaptivec was built without the PJRT engine; rebuild inside the \
+         internal toolchain image with `--features pjrt` and the vendored \
+         `xla` dependency added to Cargo.toml (see rust/DESIGN.md §10)"
+            .into(),
+    )
+}
+
+impl PjrtEngine {
+    /// Always fails: the XLA client is not linked into this build.
+    pub fn load_dir(_dir: impl AsRef<Path>) -> Result<Self> {
+        Err(unavailable())
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".into()
+    }
+
+    pub fn bot_forward_2d(&self, _blocks: &[f32]) -> Result<Vec<f32>> {
+        Err(unavailable())
+    }
+
+    pub fn bot_forward_3d(&self, _blocks: &[f32]) -> Result<Vec<f32>> {
+        Err(unavailable())
+    }
+
+    pub fn lorenzo_2d(
+        &self,
+        _x: &[f32],
+        _left: &[f32],
+        _up: &[f32],
+        _diag: &[f32],
+    ) -> Result<Vec<f32>> {
+        Err(unavailable())
+    }
+
+    pub fn lorenzo_3d(&self, _neighbors: &[&[f32]; 8]) -> Result<Vec<f32>> {
+        Err(unavailable())
+    }
+
+    pub fn nsb_hist_2d(&self, _blocks: &[f32], _inv_delta: f32) -> Result<(Vec<f32>, Vec<f32>)> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_load_fails_gracefully() {
+        let err = PjrtEngine::load_dir("artifacts").unwrap_err();
+        assert!(format!("{err}").contains("pjrt"), "{err}");
+    }
+}

@@ -1,0 +1,160 @@
+//! Corruption fuzzing for both container wire formats: `from_bytes`
+//! must return `Err` for malformed input — never panic, abort on a
+//! huge attacker-controlled allocation, or read out of bounds.
+//!
+//! Three attack surfaces, per the v2 design (DESIGN.md §6):
+//! truncation at every prefix length, bit flips in the index, and
+//! out-of-range chunk offsets. Random-bytes parsing rides along via
+//! `testing::proptest_lite`.
+
+use adaptivec::baseline::Policy;
+use adaptivec::codec_api::CodecRegistry;
+use adaptivec::coordinator::store::{Container, ContainerReader};
+use adaptivec::coordinator::Coordinator;
+use adaptivec::data::atm;
+use adaptivec::data::Field;
+use adaptivec::estimator::selector::SelectorConfig;
+use adaptivec::testing::proptest_lite::{forall, Gen};
+
+fn fields(n: usize) -> Vec<Field> {
+    (0..n).map(|i| atm::generate_field_scaled(99, i, 0)).collect()
+}
+
+/// A real v1 container produced by the coordinator.
+fn v1_bytes() -> Vec<u8> {
+    let coord = Coordinator::new(SelectorConfig::default(), 2);
+    let report = coord.run(&fields(2), Policy::RateDistortion, 1e-3).unwrap();
+    report.to_container().to_bytes()
+}
+
+/// A real chunked v2 container produced by the coordinator.
+fn v2_bytes() -> Vec<u8> {
+    let coord = Coordinator::new(SelectorConfig::default(), 2);
+    let report = coord.run_chunked(&fields(2), Policy::RateDistortion, 1e-3, 2048).unwrap();
+    report.to_container().to_bytes()
+}
+
+/// Parse attempts must never panic; Ok is fine (some corruptions are
+/// silent at index level), Err is fine — so just drive the parser.
+fn parse_both(bytes: &[u8]) {
+    let _ = Container::from_bytes(bytes);
+    let _ = ContainerReader::from_bytes(bytes.to_vec());
+}
+
+#[test]
+fn truncation_at_every_prefix_is_an_error_v1() {
+    let bytes = v1_bytes();
+    for len in 0..bytes.len() {
+        assert!(
+            Container::from_bytes(&bytes[..len]).is_err(),
+            "v1 prefix of {len}/{} bytes parsed",
+            bytes.len()
+        );
+        assert!(
+            ContainerReader::from_bytes(bytes[..len].to_vec()).is_err(),
+            "v1 reader prefix of {len}/{} bytes parsed",
+            bytes.len()
+        );
+    }
+    assert!(Container::from_bytes(&bytes).is_ok());
+}
+
+#[test]
+fn truncation_at_every_prefix_is_an_error_v2() {
+    let bytes = v2_bytes();
+    for len in 0..bytes.len() {
+        assert!(
+            ContainerReader::from_bytes(bytes[..len].to_vec()).is_err(),
+            "v2 prefix of {len}/{} bytes parsed",
+            bytes.len()
+        );
+    }
+    let r = ContainerReader::from_bytes(bytes).unwrap();
+    assert_eq!(r.version, 2);
+}
+
+#[test]
+fn single_bit_flips_in_header_and_index_never_panic() {
+    for bytes in [v1_bytes(), v2_bytes()] {
+        // Flip every bit of the first KiB — for these containers that
+        // covers magic, counts, names, dims, selection bytes, offsets
+        // and lengths, plus the head of the payload region.
+        let span = bytes.len().min(1024);
+        for pos in 0..span {
+            for bit in 0..8 {
+                let mut c = bytes.clone();
+                c[pos] ^= 1 << bit;
+                // Parse must be total: Ok or Err, never a panic/abort.
+                parse_both(&c);
+            }
+        }
+    }
+}
+
+#[test]
+fn corrupt_selection_bytes_rejected_at_decode() {
+    // Flipping a chunk's selection byte to an unregistered id must
+    // surface as Err from the registry, not a panic.
+    let registry = CodecRegistry::default();
+    let reader = ContainerReader::from_bytes(v2_bytes()).unwrap();
+    for (fi, f) in reader.fields.iter().enumerate() {
+        for ci in 0..f.chunks.len() {
+            let mut bad = reader.clone();
+            bad.fields[fi].chunks[ci].selection = 0xEE;
+            assert!(bad.decode_chunk(&registry, fi, ci).is_err());
+        }
+    }
+}
+
+#[test]
+fn random_garbage_never_panics() {
+    // Random byte soup, with and without a valid magic prefix.
+    let gen = Gen::<Vec<u8>>::new(|r| {
+        let n = r.range(0, 512);
+        let mut v: Vec<u8> = (0..n).map(|_| r.below(256) as u8).collect();
+        match r.below(3) {
+            0 => {
+                for (i, b) in b"ADAPTC01".iter().enumerate() {
+                    if i < v.len() {
+                        v[i] = *b;
+                    }
+                }
+            }
+            1 => {
+                for (i, b) in b"ADAPTC02".iter().enumerate() {
+                    if i < v.len() {
+                        v[i] = *b;
+                    }
+                }
+            }
+            _ => {}
+        }
+        v
+    });
+    forall("container parsing never panics", 500, gen, |bytes| {
+        parse_both(bytes);
+        true
+    });
+}
+
+#[test]
+fn truncation_points_fuzzed() {
+    // proptest_lite-driven truncation + flip combos on the v2 format:
+    // pure truncation must parse as Err; an extra bit flip could in
+    // principle re-align the framing, so there the bar is "no panic".
+    let bytes = v2_bytes();
+    let n = bytes.len();
+    let gen =
+        Gen::<(usize, usize, bool)>::new(move |r| (r.range(0, n), r.range(0, n * 8), r.bool(0.5)));
+    forall("v2 truncate(+flip) never panics", 300, gen, |&(cut, flip_bit, flip)| {
+        let mut c = bytes[..cut].to_vec();
+        if flip && !c.is_empty() {
+            let pos = (flip_bit / 8) % c.len();
+            c[pos] ^= 1 << (flip_bit % 8);
+            parse_both(&c);
+            true
+        } else {
+            ContainerReader::from_bytes(c).is_err()
+        }
+    });
+}

@@ -103,3 +103,58 @@ fn optimum_dominates_ours() {
     let opt = coord.run(&fields, Policy::Optimum, 1e-4).unwrap().overall_ratio();
     assert!(opt >= ours * 0.95, "optimum {opt:.2} vs ours {ours:.2}");
 }
+
+#[test]
+fn v2_partial_decode_is_independent_of_other_fields() {
+    use adaptivec::coordinator::store::ContainerReader;
+
+    // Write a chunked v2 container with >= 4 fields.
+    let eb_rel = 1e-3;
+    let coord = Coordinator::new(SelectorConfig::default(), 2);
+    let fields = Dataset::Atm.generate(7, 0);
+    assert!(fields.len() >= 4);
+    let report = coord.run_chunked(&fields, Policy::RateDistortion, eb_rel, 2048).unwrap();
+    let bytes = report.to_container().to_bytes();
+
+    // Learn every chunk's byte range from a pristine index, then
+    // trash the payload bytes of every field *except* the target.
+    // If `load_field` touched any other field's payload, the
+    // corruption would surface.
+    let pristine = ContainerReader::from_bytes(bytes.clone()).unwrap();
+    let target = 2usize;
+    let target_name = pristine.fields[target].name.clone();
+    let mut corrupted = bytes.clone();
+    let mut trashed = 0usize;
+    for (fi, f) in pristine.fields.iter().enumerate() {
+        if fi == target {
+            continue;
+        }
+        for c in &f.chunks {
+            for b in &mut corrupted[c.offset..c.offset + c.len] {
+                *b = !*b;
+                trashed += 1;
+            }
+        }
+    }
+    assert!(trashed > 0);
+
+    let reader = ContainerReader::from_bytes(corrupted).unwrap();
+    let got = coord.load_field(&reader, &target_name).unwrap();
+    let orig = &fields[target];
+    assert_eq!(got.name, orig.name);
+    assert_eq!(got.dims, orig.dims);
+    let vr = orig.value_range();
+    let bound = if vr > 0.0 { eb_rel * vr } else { eb_rel };
+    let stats = error_stats(&orig.data, &got.data);
+    assert!(
+        stats.max_abs_err <= bound * (1.0 + 1e-9),
+        "partial decode broke the bound: {} > {bound}",
+        stats.max_abs_err
+    );
+
+    // Sanity: the corruption is real (other fields' payload bytes all
+    // changed, the target's were untouched) and irrelevant (the target
+    // decodes bit-identically from pristine and corrupted containers).
+    let from_pristine = coord.load_field(&pristine, &target_name).unwrap();
+    assert_eq!(got.data, from_pristine.data);
+}

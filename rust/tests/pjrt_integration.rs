@@ -2,7 +2,10 @@
 //! agrees with the native Rust Stage-I on real estimator inputs —
 //! proving the three-layer architecture composes end to end.
 //!
-//! Skips (with a message) when `make artifacts` has not run.
+//! Skips (with a message) when `make artifacts` has not run, and is
+//! compiled out entirely without the `pjrt` feature (default builds
+//! link the stub engine, which can never produce results to compare).
+#![cfg(feature = "pjrt")]
 
 use adaptivec::data::atm;
 use adaptivec::estimator::sampling;
