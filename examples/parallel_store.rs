@@ -10,12 +10,14 @@
 use adaptivec::baseline::Policy;
 use adaptivec::coordinator::{store::Container, Coordinator};
 use adaptivec::data::Dataset;
+use adaptivec::estimator::selector::AutoSelector;
 use adaptivec::iosim::{FsModel, ThroughputModel, PROC_SWEEP};
 use adaptivec::metrics::error_stats;
 use std::time::Instant;
 
 fn main() -> adaptivec::Result<()> {
     let coord = Coordinator::default();
+    let registry = AutoSelector::new(coord.selector_cfg).registry();
     let eb_rel = 1e-4;
     let tmp = std::env::temp_dir().join("adaptivec_parallel_store");
     std::fs::create_dir_all(&tmp)?;
@@ -34,14 +36,15 @@ fn main() -> adaptivec::Result<()> {
             raw as f64 / 1e6
         );
         println!(
-            "{:<10} {:>8} {:>10} {:>10} {:>8} {:>8}",
-            "policy", "ratio", "comp(s)", "decomp(s)", "SZ", "ZFP"
+            "{:<10} {:>8} {:>10} {:>10} {:>22}",
+            "policy", "ratio", "comp(s)", "decomp(s)", "codec picks"
         );
 
         for policy in [
             Policy::NoCompression,
             Policy::AlwaysSz,
             Policy::AlwaysZfp,
+            Policy::AlwaysDct,
             Policy::ErrorBound,
             Policy::RateDistortion,
             Policy::Optimum,
@@ -68,7 +71,7 @@ fn main() -> adaptivec::Result<()> {
                 let bound = if vr > 0.0 { eb_rel * vr } else { eb_rel };
                 let stats = error_stats(&orig.data, &rest.data);
                 assert!(
-                    stats.max_abs_err <= bound * (1.0 + 1e-9),
+                    stats.max_abs_err <= bound * (1.0 + 1e-6),
                     "{} {} {}: {} > {}",
                     ds.name(),
                     policy.name(),
@@ -78,15 +81,13 @@ fn main() -> adaptivec::Result<()> {
                 );
             }
 
-            let (sz, zfp) = report.choice_counts();
             println!(
-                "{:<10} {:>8.2} {:>10.2} {:>10.2} {:>8} {:>8}",
+                "{:<10} {:>8.2} {:>10.2} {:>10.2} {:>22}",
                 policy.name(),
                 report.overall_ratio(),
                 comp_wall,
                 decomp_wall,
-                sz,
-                zfp
+                report.codec_counts().summary(&registry)
             );
 
             if ds == Dataset::Hurricane {

@@ -242,8 +242,12 @@ fn ablate_stage3() {
 
 fn ablate_multiway() {
     use adaptivec::estimator::multiway::MultiSelector;
+    use adaptivec::estimator::selector::CandidateSet;
     let sel3 = MultiSelector::default();
-    let sel2 = AutoSelector::default();
+    let sel2 = AutoSelector::new(SelectorConfig {
+        candidates: CandidateSet::two_way(),
+        ..Default::default()
+    });
     let mut t = Table::new(&["dataset", "2-way ratio", "3-way ratio", "DCT picked"]);
     for ds in Dataset::ALL {
         let fields = ds.generate(2018, 1);

@@ -6,10 +6,15 @@
 
 use adaptivec::baseline::ebselect;
 use adaptivec::data::Dataset;
-use adaptivec::estimator::selector::{AutoSelector, Choice};
+use adaptivec::estimator::selector::{AutoSelector, CandidateSet, Choice, SelectorConfig};
 
 fn main() {
-    let sel = AutoSelector::default();
+    // Pinned to the paper's SZ-vs-ZFP matrix: Fig. 6 reproduces the
+    // published two-way selection maps.
+    let sel = AutoSelector::new(SelectorConfig {
+        candidates: CandidateSet::two_way(),
+        ..Default::default()
+    });
     for ds in Dataset::ALL {
         let fields = ds.generate(2018, 1);
         println!("\n=== Fig. 6 — {} (eb_abs = 1e-3·VR) ===", ds.name());

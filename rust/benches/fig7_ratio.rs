@@ -12,10 +12,16 @@
 use adaptivec::bench_util::Table;
 use adaptivec::data::Dataset;
 use adaptivec::estimator::eval;
-use adaptivec::estimator::selector::{AutoSelector, Choice};
+use adaptivec::estimator::selector::{AutoSelector, CandidateSet, Choice, SelectorConfig};
 
 fn main() {
-    let sel = AutoSelector::default();
+    // Pinned two-way: the oracle and the ratio bars are the paper's
+    // SZ/ZFP comparison; the 3-way selector has its own ablation
+    // (`bench ablations`, Ablation 8).
+    let sel = AutoSelector::new(SelectorConfig {
+        candidates: CandidateSet::two_way(),
+        ..Default::default()
+    });
     let bounds = [1e-3, 1e-4, 1e-6];
     for ds in Dataset::ALL {
         let fields = ds.generate(2018, 1);

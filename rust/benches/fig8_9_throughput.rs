@@ -14,7 +14,7 @@
 use adaptivec::bench_util::print_series;
 use adaptivec::data::Dataset;
 use adaptivec::estimator::eval;
-use adaptivec::estimator::selector::{AutoSelector, Choice};
+use adaptivec::estimator::selector::{AutoSelector, CandidateSet, Choice, SelectorConfig};
 use adaptivec::iosim::{FsModel, ThroughputModel, PROC_SWEEP};
 use adaptivec::sz::SzCompressor;
 use adaptivec::zfp::ZfpCompressor;
@@ -32,7 +32,11 @@ fn main() {
     let eb_rel = 1e-4;
     let fields = Dataset::Hurricane.generate(2018, 1);
     let tm = ThroughputModel::new(FsModel::default());
-    let sel = AutoSelector::default();
+    // Two-way: the figure's "ours" line is the paper's SZ/ZFP pick.
+    let sel = AutoSelector::new(SelectorConfig {
+        candidates: CandidateSet::two_way(),
+        ..Default::default()
+    });
     let sz = SzCompressor::default();
     let zfp = ZfpCompressor::default();
 

@@ -6,18 +6,26 @@
 //! * full-container decode vs single-field partial decode — the v2
 //!   index means `load_field` touches one field's payload bytes
 //!   instead of parsing and decoding the whole container.
+//!
+//! CI smoke knobs (`bench-smoke` job): `ADAPTIVEC_BENCH_ITERS` caps
+//! iterations, `ADAPTIVEC_BENCH_SCALE` shrinks the dataset, and
+//! `ADAPTIVEC_BENCH_JSON=<path>` writes the timings as a JSON artifact
+//! for the perf trajectory.
 
 use adaptivec::baseline::Policy;
-use adaptivec::bench_util::{bench, Table};
+use adaptivec::bench_util::{bench, iters_override, scale_override, JsonReport, Table};
 use adaptivec::coordinator::store::ContainerReader;
 use adaptivec::coordinator::Coordinator;
 use adaptivec::data::Dataset;
+use adaptivec::estimator::selector::AutoSelector;
 
 fn main() {
     let eb = 1e-4;
-    let fields = Dataset::Atm.generate(2018, 1);
+    let fields = Dataset::Atm.generate(2018, scale_override(1));
     let raw: u64 = fields.iter().map(|f| f.raw_bytes() as u64).sum();
     let coord = Coordinator::default();
+    let registry = AutoSelector::new(coord.selector_cfg).registry();
+    let mut json = JsonReport::new();
     println!(
         "ATM, {} fields, {:.1} MB raw, eb_rel {eb:.0e}, {} workers\n",
         fields.len(),
@@ -26,31 +34,31 @@ fn main() {
     );
 
     // --- selection granularity: per-field vs per-chunk -------------
-    let mut t = Table::new(&["granularity", "chunks", "ratio", "SZ", "ZFP", "compress wall"]);
-    let tm = bench(0, 2, || coord.run(&fields, Policy::RateDistortion, eb).unwrap());
+    let mut t = Table::new(&["granularity", "chunks", "ratio", "codec picks", "compress wall"]);
+    let tm = bench(0, iters_override(2), || {
+        coord.run(&fields, Policy::RateDistortion, eb).unwrap()
+    });
+    json.record("run_per_field_v1", tm);
     let v1 = coord.run(&fields, Policy::RateDistortion, eb).unwrap();
-    let (sz, zfp) = v1.choice_counts();
     t.row(&[
         "per-field (v1)".into(),
         fields.len().to_string(),
         format!("{:.3}", v1.overall_ratio()),
-        sz.to_string(),
-        zfp.to_string(),
+        v1.codec_counts().summary(&registry),
         format!("{tm}"),
     ]);
     for chunk_elems in [16 * 1024usize, 64 * 1024, 256 * 1024] {
-        let tm = bench(0, 2, || {
+        let tm = bench(0, iters_override(2), || {
             coord.run_chunked(&fields, Policy::RateDistortion, eb, chunk_elems).unwrap()
         });
+        json.record(&format!("run_chunked_{}k", chunk_elems / 1024), tm);
         let rep = coord.run_chunked(&fields, Policy::RateDistortion, eb, chunk_elems).unwrap();
         let chunks: usize = rep.fields.iter().map(|f| f.chunks.len()).sum();
-        let (sz, zfp) = rep.choice_counts();
         t.row(&[
             format!("{}k elems/chunk", chunk_elems / 1024),
             chunks.to_string(),
             format!("{:.3}", rep.overall_ratio()),
-            sz.to_string(),
-            zfp.to_string(),
+            rep.codec_counts().summary(&registry),
             format!("{tm}"),
         ]);
     }
@@ -62,11 +70,13 @@ fn main() {
     let target = fields[fields.len() / 2].name.clone();
     let mut t = Table::new(&["operation", "time", "GB/s of raw"]);
 
-    let tm = bench(1, 5, || ContainerReader::from_bytes(bytes.clone()).unwrap());
+    let tm = bench(1, iters_override(5), || ContainerReader::from_bytes(bytes.clone()).unwrap());
+    json.record("v2_index_parse", tm);
     t.row(&["v2 index parse".into(), format!("{tm}"), "-".into()]);
 
     let reader = ContainerReader::from_bytes(bytes.clone()).unwrap();
-    let tm = bench(1, 3, || coord.load_reader(&reader).unwrap());
+    let tm = bench(1, iters_override(3), || coord.load_reader(&reader).unwrap());
+    json.record("v2_full_decode", tm);
     t.row(&[
         "full decode (all fields)".into(),
         format!("{tm}"),
@@ -74,7 +84,8 @@ fn main() {
     ]);
 
     let field_raw = fields[fields.len() / 2].raw_bytes() as f64;
-    let tm = bench(1, 5, || coord.load_field(&reader, &target).unwrap());
+    let tm = bench(1, iters_override(5), || coord.load_field(&reader, &target).unwrap());
+    json.record("v2_partial_decode", tm);
     t.row(&[
         format!("partial decode ('{target}')"),
         format!("{tm}"),
@@ -83,14 +94,17 @@ fn main() {
 
     // v1 comparison point: whole-container parse + decode.
     let v1_bytes = v1.to_container().to_bytes();
-    let tm = bench(1, 3, || {
+    let tm = bench(1, iters_override(3), || {
         let r = ContainerReader::from_bytes(v1_bytes.clone()).unwrap();
         coord.load_reader(&r).unwrap()
     });
+    json.record("v1_parse_full_decode", tm);
     t.row(&[
         "v1 parse + full decode".into(),
         format!("{tm}"),
         format!("{:.2}", raw as f64 / tm.mean_secs() / 1e9),
     ]);
     t.print("store_throughput — seekable v2 decode paths");
+
+    json.write_env().expect("write bench JSON");
 }

@@ -18,6 +18,9 @@ pub enum Policy {
     AlwaysSz,
     /// Always ZFP at the user bound.
     AlwaysZfp,
+    /// Always DCT at the user bound (third fixed bar of the multi-way
+    /// evaluation).
+    AlwaysDct,
     /// Paper's contribution: rate-distortion selection (Algorithm 1).
     RateDistortion,
     /// Lu et al.: selection by ratio at fixed error bound.
@@ -28,10 +31,11 @@ pub enum Policy {
 }
 
 impl Policy {
-    pub const ALL: [Policy; 6] = [
+    pub const ALL: [Policy; 7] = [
         Policy::NoCompression,
         Policy::AlwaysSz,
         Policy::AlwaysZfp,
+        Policy::AlwaysDct,
         Policy::RateDistortion,
         Policy::ErrorBound,
         Policy::Optimum,
@@ -42,6 +46,7 @@ impl Policy {
             Policy::NoCompression => "baseline",
             Policy::AlwaysSz => "SZ",
             Policy::AlwaysZfp => "ZFP",
+            Policy::AlwaysDct => "DCT",
             Policy::RateDistortion => "ours",
             Policy::ErrorBound => "eb-select",
             Policy::Optimum => "optimum",
@@ -53,6 +58,7 @@ impl Policy {
             "baseline" | "none" | "raw" => Some(Policy::NoCompression),
             "sz" => Some(Policy::AlwaysSz),
             "zfp" => Some(Policy::AlwaysZfp),
+            "dct" => Some(Policy::AlwaysDct),
             "ours" | "auto" | "rd" => Some(Policy::RateDistortion),
             "eb" | "eb-select" | "errorbound" => Some(Policy::ErrorBound),
             "optimum" | "oracle" => Some(Policy::Optimum),

@@ -32,6 +32,77 @@ impl std::fmt::Display for Timing {
     }
 }
 
+/// CI smoke knob: `ADAPTIVEC_BENCH_ITERS` caps measured iterations so
+/// a bench target can run in seconds on a runner while keeping its
+/// full default locally.
+pub fn iters_override(default: u32) -> u32 {
+    env_parse("ADAPTIVEC_BENCH_ITERS", default).max(1)
+}
+
+/// CI smoke knob: `ADAPTIVEC_BENCH_SCALE` overrides a bench's dataset
+/// scale level (0 = smallest).
+pub fn scale_override(default: u8) -> u8 {
+    env_parse("ADAPTIVEC_BENCH_SCALE", default)
+}
+
+fn env_parse<T: std::str::FromStr>(var: &str, default: T) -> T {
+    std::env::var(var).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Collects named timings and writes them as a JSON array — the
+/// machine-readable artifact the CI `bench-smoke` job uploads so the
+/// perf trajectory is diffable across commits. Hand-rolled (no serde;
+/// DESIGN.md §9): names are escaped, numbers printed in full.
+#[derive(Default)]
+pub struct JsonReport {
+    records: Vec<(String, Timing)>,
+}
+
+impl JsonReport {
+    pub fn new() -> Self {
+        JsonReport::default()
+    }
+
+    /// Record one case's timing under `name`.
+    pub fn record(&mut self, name: &str, t: Timing) {
+        self.records.push((name.to_string(), t));
+    }
+
+    /// Serialize all records as a JSON array.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("[\n");
+        for (i, (name, t)) in self.records.iter().enumerate() {
+            let escaped: String = name
+                .chars()
+                .flat_map(|c| match c {
+                    '"' | '\\' => vec!['\\', c],
+                    c if (c as u32) < 0x20 => vec![' '],
+                    c => vec![c],
+                })
+                .collect();
+            out.push_str(&format!(
+                "  {{\"name\": \"{escaped}\", \"mean_secs\": {}, \"std_secs\": {}, \"iters\": {}}}{}\n",
+                t.mean.as_secs_f64(),
+                t.std_dev.as_secs_f64(),
+                t.iters,
+                if i + 1 < self.records.len() { "," } else { "" }
+            ));
+        }
+        out.push(']');
+        out
+    }
+
+    /// Write the report to `$ADAPTIVEC_BENCH_JSON` if that variable is
+    /// set (the CI artifact path); a no-op otherwise.
+    pub fn write_env(&self) -> std::io::Result<()> {
+        if let Ok(path) = std::env::var("ADAPTIVEC_BENCH_JSON") {
+            std::fs::write(&path, self.to_json())?;
+            eprintln!("wrote bench JSON -> {path}");
+        }
+        Ok(())
+    }
+}
+
 /// Time `f`: `warmup` throwaway runs then `iters` measured runs.
 pub fn bench<T>(warmup: u32, iters: u32, mut f: impl FnMut() -> T) -> Timing {
     assert!(iters > 0);
@@ -160,5 +231,31 @@ mod tests {
     fn table_rejects_bad_row() {
         let mut t = Table::new(&["a", "b"]);
         t.row(&["1".into()]);
+    }
+
+    #[test]
+    fn json_report_escapes_and_lists() {
+        let mut r = JsonReport::new();
+        let t = Timing {
+            mean: Duration::from_millis(5),
+            std_dev: Duration::from_millis(1),
+            iters: 3,
+        };
+        r.record("plain", t);
+        r.record("quo\"te\\back", t);
+        let json = r.to_json();
+        assert!(json.starts_with('[') && json.ends_with(']'), "{json}");
+        assert!(json.contains("\"name\": \"plain\""), "{json}");
+        assert!(json.contains("quo\\\"te\\\\back"), "{json}");
+        assert!(json.contains("\"iters\": 3"), "{json}");
+        // Exactly one separating comma between the two records.
+        assert_eq!(json.matches("},").count(), 1, "{json}");
+    }
+
+    #[test]
+    fn overrides_fall_back_to_defaults() {
+        // The env vars are unset in the test environment.
+        assert_eq!(iters_override(7), 7);
+        assert_eq!(scale_override(1), 1);
     }
 }

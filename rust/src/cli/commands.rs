@@ -13,7 +13,7 @@ use super::args::Args;
 use crate::baseline::Policy;
 use crate::coordinator::{store::ContainerReader, Coordinator};
 use crate::data::{Dataset, Field};
-use crate::estimator::selector::{AutoSelector, SelectorConfig};
+use crate::estimator::selector::{AutoSelector, CandidateSet, SelectorConfig};
 use crate::iosim::{FsModel, ThroughputModel, PROC_SWEEP};
 use crate::{Error, Result};
 
@@ -24,13 +24,18 @@ USAGE:
 
 COMMANDS:
   compress    --dataset <nyx|atm|hurricane> [--scale 0|1|2] [--eb 1e-4]
-              [--policy ours|sz|zfp|eb|optimum|baseline] [--workers N]
+              [--policy ours|sz|zfp|dct|eb|optimum|baseline] [--workers N]
               [--out FILE] [--seed N] [--rsp 0.05] [--chunk-elems N]
+              [--codecs sz,zfp,dct] [--chunk-prior N]
               (--chunk-elems > 0 writes a chunked, seekable v2
-               container with per-chunk selection)
+               container; chunks smaller than --chunk-prior (default
+               65536 elems) share one field-level selection, larger
+               chunks select independently — --chunk-prior 0 forces
+               per-chunk selection everywhere; --codecs restricts the
+               candidates the 'ours' policy ranks)
   decompress  --in FILE [--outdir DIR] [--field NAME]
-  estimate    --dataset D [--scale S] [--eb E] [--rsp 0.05]
-  select      --dataset D [--scale S] [--eb E]
+  estimate    --dataset D [--scale S] [--eb E] [--rsp 0.05] [--codecs C]
+  select      --dataset D [--scale S] [--eb E] [--codecs C]
   sweep       --dataset D [--scale S] [--bounds 1e-3,1e-4,1e-6]
   iobench     --dataset D [--scale S] [--eb E]
   info        --in FILE
@@ -39,7 +44,11 @@ COMMANDS:
 
 fn selector_cfg(args: &Args) -> Result<SelectorConfig> {
     let r_sp = args.get_or("rsp", SelectorConfig::default().r_sp)?;
-    Ok(SelectorConfig { r_sp, ..SelectorConfig::default() })
+    let candidates = match args.get("codecs") {
+        Some(list) => CandidateSet::parse(list)?,
+        None => CandidateSet::all(),
+    };
+    Ok(SelectorConfig { r_sp, candidates, ..SelectorConfig::default() })
 }
 
 fn load_dataset(args: &Args) -> Result<Vec<Field>> {
@@ -79,10 +88,12 @@ fn cmd_compress(argv: &[String]) -> Result<()> {
     let workers: usize = args.get_or("workers", 0)?;
     let out = args.get("out").unwrap_or("out.adaptivec").to_string();
     let chunk_elems: usize = args.get_or("chunk-elems", 0)?;
+    let chunk_prior: usize =
+        args.get_or("chunk-prior", crate::coordinator::DEFAULT_CHUNK_PRIOR_ELEMS)?;
     let cfg = selector_cfg(&args)?;
     args.check_unknown()?;
 
-    let coord = Coordinator::new(
+    let mut coord = Coordinator::new(
         cfg,
         if workers == 0 {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
@@ -90,38 +101,43 @@ fn cmd_compress(argv: &[String]) -> Result<()> {
             workers
         },
     );
+    coord.chunk_prior_elems = chunk_prior;
+    // Per-codec tallies resolve names through the registry, so every
+    // registered codec (including DCT, id 3) prints by name.
+    let registry = AutoSelector::new(cfg).registry();
     let t0 = std::time::Instant::now();
     if chunk_elems > 0 {
-        // Chunked v2 path: per-chunk selection, seekable index.
+        // Chunked v2 path: seekable index; chunks below the prior
+        // threshold share a field-level selection (DESIGN.md §11).
         let report = coord.run_chunked(&fields, policy, eb, chunk_elems)?;
         let wall = t0.elapsed();
         report.to_container().write_file(&out)?;
-        let (sz, zfp) = report.choice_counts();
         let chunks: usize = report.fields.iter().map(|f| f.chunks.len()).sum();
         println!(
             "{} fields / {chunks} chunks (v2, {chunk_elems} elems/chunk), policy {}, \
-             eb_rel {eb:.0e}: ratio {:.2} ({} -> {} bytes), SZ {sz} / ZFP {zfp} chunks, \
+             eb_rel {eb:.0e}: ratio {:.2} ({} -> {} bytes), picks {}, \
              wall {:.2}s -> {out}",
             report.fields.len(),
             policy.name(),
             report.overall_ratio(),
             report.total_raw_bytes(),
             report.total_stored_bytes(),
+            report.codec_counts().summary(&registry),
             wall.as_secs_f64(),
         );
     } else {
         let report = coord.run(&fields, policy, eb)?;
         let wall = t0.elapsed();
         report.to_container().write_file(&out)?;
-        let (sz, zfp) = report.choice_counts();
         println!(
             "{} fields, policy {}, eb_rel {eb:.0e}: ratio {:.2} ({} -> {} bytes), \
-             SZ {sz} / ZFP {zfp}, est-overhead {:.1}%, wall {:.2}s -> {out}",
+             picks {}, est-overhead {:.1}%, wall {:.2}s -> {out}",
             report.results.len(),
             policy.name(),
             report.overall_ratio(),
             report.total_raw_bytes(),
             report.total_stored_bytes(),
+            report.codec_counts().summary(&registry),
             report.overhead_frac() * 100.0,
             wall.as_secs_f64(),
         );
@@ -163,16 +179,24 @@ fn cmd_estimate(argv: &[String]) -> Result<()> {
     args.check_unknown()?;
     let sel = AutoSelector::new(cfg);
     println!(
-        "{:<22} {:>9} {:>9} {:>10} {:>6}",
-        "field", "BR_sz", "BR_zfp", "PSNR_tgt", "pick"
+        "{:<22} {:>9} {:>9} {:>9} {:>10} {:>6}",
+        "field", "BR_sz", "BR_zfp", "BR_dct", "PSNR_tgt", "pick"
     );
     for f in &fields {
         let (choice, est) = sel.select(f, eb)?;
+        // DCT's column is only an estimate when DCT competes;
+        // otherwise it is a sentinel (infinite), shown as "-".
+        let br_dct = if est.br_dct.is_finite() {
+            format!("{:.3}", est.br_dct)
+        } else {
+            "-".into()
+        };
         println!(
-            "{:<22} {:>9.3} {:>9.3} {:>10.2} {:>6}",
+            "{:<22} {:>9.3} {:>9.3} {:>9} {:>10.2} {:>6}",
             f.name,
             est.br_sz,
             est.br_zfp,
+            br_dct,
             est.psnr_target,
             choice.name()
         );
@@ -412,5 +436,58 @@ mod tests {
         .unwrap();
         assert!(outdir.join(format!("{name}.f32")).is_file());
         std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    fn dct_codecs_flag_emits_selection_byte_3_chunks() {
+        use crate::codec_api::Choice;
+        let tmp = std::env::temp_dir().join("adaptivec_cli_dct_test");
+        std::fs::create_dir_all(&tmp).unwrap();
+        let out = tmp.join("hurricane.adaptivec2");
+        let argv: Vec<String> = [
+            "--dataset", "hurricane", "--scale", "0", "--eb", "1e-3", "--out",
+            out.to_str().unwrap(), "--workers", "2", "--chunk-elems", "2048",
+            "--codecs", "dct",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        run("compress", &argv).unwrap();
+        // Every chunk of the v2 container is DCT-selected (byte 3).
+        let reader = ContainerReader::open(&out).unwrap();
+        assert_eq!(reader.version, 2);
+        assert!(reader
+            .fields
+            .iter()
+            .flat_map(|f| f.chunks.iter())
+            .all(|c| c.selection == Choice::Dct.id()));
+        // `inspect` resolves the chunks by registry name, no panic.
+        run("inspect", &["--in".to_string(), out.to_str().unwrap().to_string()]).unwrap();
+        // Partial decode of one DCT field round-trips.
+        let name = reader.fields[0].name.clone();
+        let outdir = tmp.join("restored");
+        run(
+            "decompress",
+            &[
+                "--in".to_string(),
+                out.to_str().unwrap().to_string(),
+                "--outdir".to_string(),
+                outdir.to_str().unwrap().to_string(),
+                "--field".to_string(),
+                name.clone(),
+            ],
+        )
+        .unwrap();
+        assert!(outdir.join(format!("{name}.f32")).is_file());
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    fn bad_codecs_flag_rejected() {
+        let argv: Vec<String> = ["--dataset", "atm", "--codecs", "zstd"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        assert!(run("estimate", &argv).is_err());
     }
 }

@@ -262,7 +262,10 @@ impl HuffmanDecoder {
         if n == 0 {
             return Err(Error::Corrupt("huffman: empty table".into()));
         }
-        let mut lens = Vec::with_capacity(n);
+        // Untrusted entry count: each entry is >= 2 bytes (two
+        // varints), so cap the preallocation by what the buffer could
+        // possibly hold — the read loop errors out on truncation.
+        let mut lens = Vec::with_capacity(n.min(buf.len() / 2 + 1));
         let mut prev = 0u32;
         for _ in 0..n {
             let dsym = varint::read_u64(buf, pos)? as u32;

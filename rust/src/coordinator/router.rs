@@ -6,9 +6,22 @@ use super::job::FieldResult;
 use crate::baseline::{ebselect, Policy};
 use crate::codec_api::CodecRegistry;
 use crate::data::field::Field;
-use crate::estimator::selector::{AutoSelector, Choice, SelectorConfig};
+use crate::estimator::selector::{AutoSelector, Choice, Estimates, SelectorConfig};
 use crate::Result;
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+/// A field-level selection decision shared by that field's chunks
+/// (DESIGN.md §11): the sampled-PDF estimates are computed once on the
+/// whole field, and small chunks inherit the choice and iso-PSNR
+/// bounds instead of re-sampling per chunk.
+#[derive(Clone, Copy, Debug)]
+pub struct FieldPrior {
+    pub choice: Choice,
+    pub estimates: Estimates,
+    /// Wall time of the field-level estimation (attributed to the
+    /// field's first chunk so overhead accounting stays truthful).
+    pub estimate_time: Duration,
+}
 
 /// Stateless router: policy + bound, shared across workers. The codec
 /// registry is built once here and dispatched through concurrently —
@@ -34,6 +47,44 @@ impl Router {
         self.registry.encode(choice, &field.data, field.dims, eb)
     }
 
+    /// Compute the field-level selection prior for the chunked path,
+    /// if this policy has one. Only `RateDistortion` estimates per
+    /// chunk, so only it benefits from sharing a field-level sampled
+    /// PDF; every other policy returns `None` and chunks fall through
+    /// to [`Router::process`].
+    pub fn field_prior(&self, field: &Field) -> Result<Option<FieldPrior>> {
+        if self.policy != Policy::RateDistortion {
+            return Ok(None);
+        }
+        let vr = field.value_range();
+        let eb = if vr > 0.0 { self.eb_rel * vr } else { self.eb_rel };
+        let t0 = Instant::now();
+        let (choice, estimates) = self.selector.select_abs(field, eb, vr)?;
+        Ok(Some(FieldPrior { choice, estimates, estimate_time: t0.elapsed() }))
+    }
+
+    /// Process one chunk of a field. With a prior, the chunk inherits
+    /// the field-level choice and bound and skips estimation entirely;
+    /// the prior's (one-off) estimation time is charged to chunk 0.
+    pub fn process_chunk(
+        &self,
+        chunk: &Field,
+        chunk_idx: usize,
+        prior: Option<&FieldPrior>,
+    ) -> Result<FieldResult> {
+        let Some(p) = prior else { return self.process(chunk) };
+        let t0 = Instant::now();
+        let payload = self.encode(chunk, p.estimates.bound_for(p.choice), p.choice)?;
+        Ok(FieldResult {
+            name: chunk.name.clone(),
+            choice: Some(p.choice),
+            payload,
+            raw_bytes: chunk.raw_bytes(),
+            estimate_time: if chunk_idx == 0 { p.estimate_time } else { Duration::ZERO },
+            compress_time: t0.elapsed(),
+        })
+    }
+
     /// Process one field under this router's policy.
     pub fn process(&self, field: &Field) -> Result<FieldResult> {
         let vr = field.value_range();
@@ -57,8 +108,12 @@ impl Router {
                     compress_time: t0.elapsed(),
                 })
             }
-            Policy::AlwaysSz | Policy::AlwaysZfp => {
-                let choice = if self.policy == Policy::AlwaysSz { Choice::Sz } else { Choice::Zfp };
+            Policy::AlwaysSz | Policy::AlwaysZfp | Policy::AlwaysDct => {
+                let choice = match self.policy {
+                    Policy::AlwaysSz => Choice::Sz,
+                    Policy::AlwaysZfp => Choice::Zfp,
+                    _ => Choice::Dct,
+                };
                 let t0 = Instant::now();
                 let payload = self.encode(field, eb, choice)?;
                 Ok(FieldResult {
@@ -180,11 +235,51 @@ mod tests {
     fn payloads_decode_via_selector() {
         let f = atm::generate_field_scaled(64, 1, 0);
         let sel = AutoSelector::default();
-        for p in [Policy::AlwaysSz, Policy::AlwaysZfp, Policy::RateDistortion, Policy::ErrorBound]
-        {
+        for p in [
+            Policy::AlwaysSz,
+            Policy::AlwaysZfp,
+            Policy::AlwaysDct,
+            Policy::RateDistortion,
+            Policy::ErrorBound,
+        ] {
             let out = Router::new(SelectorConfig::default(), p, 1e-3).process(&f).unwrap();
             let recon = sel.decompress(&out.payload).unwrap();
             assert_eq!(recon.len(), f.len(), "{p:?}");
         }
+    }
+
+    #[test]
+    fn always_dct_emits_selection_byte_3() {
+        let f = atm::generate_field_scaled(65, 0, 0);
+        let r = Router::new(SelectorConfig::default(), Policy::AlwaysDct, 1e-3);
+        let out = r.process(&f).unwrap();
+        assert_eq!(out.choice, Some(Choice::Dct));
+        assert_eq!(out.payload[0], Choice::Dct.id());
+        assert!(out.ratio() > 1.0);
+    }
+
+    #[test]
+    fn field_prior_only_for_rate_distortion_and_chunks_inherit_it() {
+        let f = atm::generate_field_scaled(66, 2, 0);
+        let rd = Router::new(SelectorConfig::default(), Policy::RateDistortion, 1e-3);
+        let prior = rd.field_prior(&f).unwrap().expect("RD has a prior");
+        assert!(prior.estimate_time.as_nanos() > 0);
+        for p in [Policy::NoCompression, Policy::AlwaysSz, Policy::ErrorBound, Policy::Optimum] {
+            let r = Router::new(SelectorConfig::default(), p, 1e-3);
+            assert!(r.field_prior(&f).unwrap().is_none(), "{p:?}");
+        }
+        // A chunk processed under the prior takes its choice + bound
+        // and pays no estimation (except chunk 0, which carries the
+        // field-level estimation time).
+        let c0 = rd.process_chunk(&f, 0, Some(&prior)).unwrap();
+        let c1 = rd.process_chunk(&f, 1, Some(&prior)).unwrap();
+        assert_eq!(c0.choice, Some(prior.choice));
+        assert_eq!(c0.estimate_time, prior.estimate_time);
+        assert_eq!(c1.estimate_time, std::time::Duration::ZERO);
+        assert_eq!(c0.payload, c1.payload);
+        // Without a prior, process_chunk falls back to full per-chunk
+        // processing.
+        let solo = rd.process_chunk(&f, 0, None).unwrap();
+        assert!(solo.estimate_time.as_nanos() > 0);
     }
 }

@@ -4,9 +4,47 @@
 use super::job::FieldResult;
 use super::store::{Chunk, Container, ContainerV2, Entry, FieldEntry};
 use crate::baseline::Policy;
-use crate::codec_api::Choice;
+use crate::codec_api::{Choice, CodecRegistry};
 use crate::data::field::Dims;
+use std::collections::BTreeMap;
 use std::time::Duration;
+
+/// Per-codec accounting for one run: chunk/field counts and stored
+/// bytes keyed by selection byte. Names resolve through the
+/// [`CodecRegistry`] so new codecs never need a code change here.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CodecCounts(pub BTreeMap<u8, (usize, u64)>);
+
+impl CodecCounts {
+    fn add(&mut self, selection: u8, bytes: u64) {
+        let e = self.0.entry(selection).or_insert((0, 0));
+        e.0 += 1;
+        e.1 += bytes;
+    }
+
+    /// Units (fields or chunks) that selected `choice`.
+    pub fn count(&self, choice: Choice) -> usize {
+        self.0.get(&choice.id()).map(|&(n, _)| n).unwrap_or(0)
+    }
+
+    /// Stored bytes attributed to `choice`.
+    pub fn bytes(&self, choice: Choice) -> u64 {
+        self.0.get(&choice.id()).map(|&(_, b)| b).unwrap_or(0)
+    }
+
+    /// Human-readable per-codec tally, e.g. `"SZ 3 / ZFP 2 / DCT 1"`,
+    /// with names resolved through the registry.
+    pub fn summary(&self, registry: &CodecRegistry) -> String {
+        if self.0.is_empty() {
+            return "none".into();
+        }
+        self.0
+            .iter()
+            .map(|(sel, (n, _))| format!("{} {n}", registry.name_of(*sel)))
+            .collect::<Vec<_>>()
+            .join(" / ")
+    }
+}
 
 /// The outcome of compressing one dataset under one policy.
 #[derive(Clone, Debug)]
@@ -54,11 +92,18 @@ impl RunReport {
         }
     }
 
-    /// How many fields picked SZ / ZFP.
-    pub fn choice_counts(&self) -> (usize, usize) {
-        let sz = self.results.iter().filter(|r| r.choice == Some(Choice::Sz)).count();
-        let zfp = self.results.iter().filter(|r| r.choice == Some(Choice::Zfp)).count();
-        (sz, zfp)
+    /// Per-codec field counts and stored bytes (raw passthrough is
+    /// accounted under the raw codec's id). Bytes are the *bare* codec
+    /// stream — the inline selection byte of self-describing v1
+    /// payloads is framing, not codec output — so the attribution
+    /// matches [`ChunkedRunReport::codec_counts`] unit-for-unit.
+    pub fn codec_counts(&self) -> CodecCounts {
+        let mut c = CodecCounts::default();
+        for r in &self.results {
+            let (sel, stream) = chunk_stream(r);
+            c.add(sel, stream.len() as u64);
+        }
+        c
     }
 
     /// Package results into an on-disk container (v1 layout).
@@ -146,18 +191,14 @@ impl ChunkedRunReport {
         self.fields.iter().flat_map(|f| f.chunks.iter()).map(|c| c.estimate_time).sum()
     }
 
-    /// How many *chunks* picked SZ / ZFP.
-    pub fn choice_counts(&self) -> (usize, usize) {
-        let mut sz = 0;
-        let mut zfp = 0;
+    /// Per-codec *chunk* counts and stored (bare-stream) bytes.
+    pub fn codec_counts(&self) -> CodecCounts {
+        let mut counts = CodecCounts::default();
         for c in self.fields.iter().flat_map(|f| f.chunks.iter()) {
-            if c.choice == Some(Choice::Sz) {
-                sz += 1;
-            } else if c.choice == Some(Choice::Zfp) {
-                zfp += 1;
-            }
+            let (sel, stream) = chunk_stream(c);
+            counts.add(sel, stream.len() as u64);
         }
-        (sz, zfp)
+        counts
     }
 
     /// Package into a chunked, seekable v2 container.
@@ -211,7 +252,16 @@ mod tests {
             ],
         );
         assert!((report.overall_ratio() - 2.0).abs() < 1e-12);
-        assert_eq!(report.choice_counts(), (1, 1));
+        let counts = report.codec_counts();
+        assert_eq!(counts.count(Choice::Sz), 1);
+        assert_eq!(counts.count(Choice::Zfp), 1);
+        assert_eq!(counts.count(Choice::Dct), 0);
+        // Bare-stream bytes: the inline selection byte is framing.
+        assert_eq!(counts.bytes(Choice::Sz), 99);
+        assert_eq!(
+            counts.summary(&CodecRegistry::default()),
+            "SZ 1 / ZFP 1"
+        );
     }
 
     #[test]
@@ -256,7 +306,13 @@ mod tests {
         assert_eq!(c.fields[0].chunks[1].stream, vec![9; 16]);
         assert_eq!(report.total_raw_bytes(), 32);
         assert_eq!(report.total_stored_bytes(), 18);
-        assert_eq!(report.choice_counts(), (1, 0));
+        let counts = report.codec_counts();
+        assert_eq!(counts.count(Choice::Sz), 1);
+        assert_eq!(counts.count(Choice::Raw), 1);
+        // Chunk bytes are counted on the bare stream (selection byte
+        // stripped from self-describing payloads).
+        assert_eq!(counts.bytes(Choice::Sz), 2);
+        assert_eq!(counts.bytes(Choice::Raw), 16);
         assert_eq!(
             report.fields[0].selections(),
             vec![Some(Choice::Sz), None]

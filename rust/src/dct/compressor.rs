@@ -52,7 +52,11 @@ impl DctCompressor {
         let ndim = dims.ndim();
         let bs = block_size(ndim);
         let bot = ParametricBot::new(T_DCT2);
-        let q = LinearQuantizer::from_error_bound(coeff_delta(eb_abs, ndim) / 2.0, self.cfg.capacity);
+        let eb_coeff = coeff_delta(eb_abs, ndim) / 2.0;
+        if eb_coeff <= 0.0 {
+            return Err(Error::InvalidArg(format!("bound {eb_abs} underflows")));
+        }
+        let q = LinearQuantizer::from_error_bound(eb_coeff, self.cfg.capacity);
 
         let nblocks = block::num_blocks(dims);
         let mut symbols: Vec<u32> = Vec::with_capacity(nblocks * bs);
@@ -110,20 +114,40 @@ impl DctCompressor {
         let ndim = dims.ndim();
         let bs = block_size(ndim);
         let bot = ParametricBot::new(T_DCT2);
-        let q = LinearQuantizer::from_error_bound(coeff_delta(eb_abs, ndim) / 2.0, capacity);
+        // A denormal eb can underflow the coefficient bin size to 0,
+        // which the quantizer asserts against — corruption, not a
+        // precondition violation.
+        let eb_coeff = coeff_delta(eb_abs, ndim) / 2.0;
+        if eb_coeff <= 0.0 {
+            return Err(Error::Corrupt(format!("bound {eb_abs} underflows")));
+        }
+        let q = LinearQuantizer::from_error_bound(eb_coeff, capacity);
+
+        // Header dims are untrusted: huge extents must surface as
+        // corruption, not an overflow panic or an attacker-sized
+        // allocation (the count check below runs before the output
+        // buffer is allocated).
+        let e = dims.extents();
+        let total = e[0]
+            .checked_mul(e[1])
+            .and_then(|p| p.checked_mul(e[2]))
+            .filter(|&t| t > 0)
+            .ok_or_else(|| Error::Corrupt(format!("bad dims {dims}")))?;
 
         let mut hpos = 0;
         let symbols = huffman_stage::decode_symbols(huff, &mut hpos)?;
         let nblocks = block::num_blocks(dims);
-        if symbols.len() != nblocks * bs {
+        let expect_symbols = nblocks
+            .checked_mul(bs)
+            .ok_or_else(|| Error::Corrupt(format!("bad dims {dims}")))?;
+        if symbols.len() != expect_symbols {
             return Err(Error::Corrupt(format!(
-                "symbol count {} != {}",
-                symbols.len(),
-                nblocks * bs
+                "symbol count {} != {expect_symbols}",
+                symbols.len()
             )));
         }
 
-        let mut out = vec![0.0f32; dims.len()];
+        let mut out = vec![0.0f32; total];
         let mut dblock = vec![0.0f64; bs];
         let mut fblock = vec![0.0f32; bs];
         let mut lit_pos = 0usize;
@@ -139,6 +163,12 @@ impl DctCompressor {
                     lit_pos += 4;
                     f32::from_le_bytes(b) as f64
                 } else {
+                    // Symbols come from an untrusted stream; a bin
+                    // index beyond the quantizer range is corruption,
+                    // not a reconstruct() precondition violation.
+                    if sym > q.num_bins() {
+                        return Err(Error::Corrupt(format!("DCT symbol {sym} out of range")));
+                    }
                     q.reconstruct(sym)
                 };
             }

@@ -1,0 +1,122 @@
+//! DCT (SSEM-style) compression-quality model — the third column of
+//! the multi-way selection matrix (paper §7 extension).
+//!
+//! The DCT codec is a *static-quantization* transform coder, so its
+//! estimate reuses the §5.1 machinery on **DCT coefficients** instead
+//! of prediction errors: sample blocks → forward DCT → coefficient
+//! PDF → Eq. 9 entropy bit-rate (with the same Huffman offset, escape
+//! and table corrections as [`super::sz_model`]).
+//!
+//! PSNR is closed-form in the coefficient bin size by Theorem 3: the
+//! transform is orthogonal, so coefficient-domain MSE equals
+//! data-domain MSE and Eq. 10 applies to δ_c directly.
+
+use super::pdf::ErrorPdf;
+use super::sampling::BlockSample;
+use super::sz_model;
+use crate::data::field::Dims;
+use crate::zfp::block::{self, block_size};
+use crate::zfp::transform::{ParametricBot, T_DCT2};
+
+/// A DCT quality estimate.
+#[derive(Clone, Copy, Debug)]
+pub struct DctEstimate {
+    /// Estimated bits/value (Eq. 9 on the coefficient PDF + offset).
+    pub bit_rate: f64,
+    /// Estimated PSNR in dB (Eq. 10 on the coefficient bin size).
+    pub psnr: f64,
+    /// Fraction of sampled coefficients outside the quantizer range.
+    pub escape_frac: f64,
+}
+
+/// Estimate the DCT codec's quality from sampled blocks at coefficient
+/// bin size `delta_c`.
+pub fn estimate(
+    data: &[f32],
+    dims: Dims,
+    sample: &BlockSample,
+    delta_c: f64,
+    capacity: u32,
+    field_len: usize,
+    value_range: f64,
+) -> DctEstimate {
+    let pdf = coefficient_pdf(data, dims, sample, delta_c, capacity);
+    DctEstimate {
+        bit_rate: sz_model::bit_rate_from_pdf(&pdf, field_len),
+        psnr: sz_model::psnr_from_delta(delta_c, value_range),
+        escape_frac: pdf.escape_prob(),
+    }
+}
+
+/// Build the quantization-bin PDF of the sampled blocks' DCT
+/// coefficients — the transform-domain analogue of the SZ
+/// prediction-error PDF. Shared by per-field estimation and the
+/// chunk-level field prior (DESIGN.md §11).
+pub fn coefficient_pdf(
+    data: &[f32],
+    dims: Dims,
+    sample: &BlockSample,
+    delta_c: f64,
+    capacity: u32,
+) -> ErrorPdf {
+    let ndim = dims.ndim();
+    let bs = block_size(ndim);
+    let bot = ParametricBot::new(T_DCT2);
+    let mut fblock = vec![0.0f32; bs];
+    let mut dblock = vec![0.0f64; bs];
+    let mut coeffs: Vec<f32> = Vec::with_capacity(sample.blocks.len() * bs);
+    for &coords in &sample.blocks {
+        block::gather(data, dims, coords, &mut fblock);
+        for (d, &f) in dblock.iter_mut().zip(&fblock) {
+            *d = f as f64;
+        }
+        bot.forward(&mut dblock, ndim);
+        coeffs.extend(dblock.iter().map(|&c| c as f32));
+    }
+    ErrorPdf::build(&coeffs, delta_c, capacity)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::spectral::grf_2d;
+    use crate::dct::compressor::coeff_delta;
+    use crate::dct::DctCompressor;
+    use crate::estimator::sampling::sample_blocks;
+    use crate::metrics::bit_rate;
+    use crate::testing::Rng;
+
+    #[test]
+    fn bit_rate_estimate_tracks_real_dct() {
+        let mut rng = Rng::new(171);
+        let f = grf_2d(&mut rng, 160, 160, 2.5);
+        let dims = Dims::D2(160, 160);
+        let vr = crate::metrics::value_range(&f);
+        let eb = 1e-4 * vr;
+
+        let sample = sample_blocks(dims, 0.05);
+        let est = estimate(&f, dims, &sample, coeff_delta(eb, 2), 65_535, f.len(), vr);
+
+        let comp = DctCompressor::default().compress(&f, dims, eb).unwrap();
+        let real_br = bit_rate(comp.len(), f.len());
+        let rel = (est.bit_rate - real_br) / real_br;
+        assert!(
+            rel.abs() < 0.30,
+            "BR est {:.3} vs real {real_br:.3} (rel {rel:.3})",
+            est.bit_rate
+        );
+    }
+
+    #[test]
+    fn tighter_delta_raises_estimated_bitrate() {
+        let mut rng = Rng::new(172);
+        let f = grf_2d(&mut rng, 96, 96, 2.0);
+        let dims = Dims::D2(96, 96);
+        let vr = crate::metrics::value_range(&f);
+        let sample = sample_blocks(dims, 0.1);
+        let loose = estimate(&f, dims, &sample, coeff_delta(1e-2 * vr, 2), 65_535, f.len(), vr);
+        let tight = estimate(&f, dims, &sample, coeff_delta(1e-5 * vr, 2), 65_535, f.len(), vr);
+        assert!(tight.bit_rate > loose.bit_rate, "{tight:?} vs {loose:?}");
+        assert!(tight.psnr > loose.psnr);
+    }
+}

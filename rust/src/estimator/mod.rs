@@ -1,7 +1,8 @@
-//! The paper's contribution: online, low-overhead estimation of SZ and
-//! ZFP compression quality (bit-rate + PSNR) from a small blockwise
-//! sample, and rate-distortion-optimal selection between the two
-//! (Algorithm 1).
+//! The paper's contribution: online, low-overhead estimation of each
+//! candidate codec's compression quality (bit-rate + PSNR) from a
+//! small blockwise sample, and rate-distortion-optimal selection
+//! (Algorithm 1, generalized from SZ-vs-ZFP to the registered codec
+//! set — SZ, ZFP, DCT).
 //!
 //! * [`sampling`] — Step 1: uniform blockwise sampling (rate r_sp) and
 //!   pointwise EC subsampling (rate r_sp^ec).
@@ -10,12 +11,15 @@
 //!   and closed-form PSNR for linear quantization.
 //! * [`zfp_model`] — §5.2: significant-bit staircase interpolation
 //!   (n̄_sb) for bit-rate, sampled truncation error for PSNR.
+//! * [`dct_model`] — §7 extension: Eq. 9 entropy bit-rate on sampled
+//!   DCT coefficients, Eq. 10 PSNR on the coefficient bin size.
 //! * [`quant_models`] — §5.1.4 closed forms for log-scale and
 //!   equal-probability quantization (analysis/ablations).
 //! * [`selector`] — Algorithm 1 + the compression front end.
 //! * [`eval`] — ground-truth measurement helpers used by the Table 2–5
 //!   benches.
 
+pub mod dct_model;
 pub mod eval;
 pub mod multiway;
 pub mod pdf;
@@ -25,4 +29,4 @@ pub mod selector;
 pub mod sz_model;
 pub mod zfp_model;
 
-pub use selector::{AutoSelector, Choice, SelectorConfig};
+pub use selector::{AutoSelector, CandidateSet, Choice, SelectorConfig};

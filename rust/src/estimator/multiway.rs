@@ -2,21 +2,17 @@
 //! rank **three** error-bounded compressors (SZ, ZFP, DCT/SSEM) per
 //! field at iso-PSNR and pick the smallest estimated bit-rate.
 //!
-//! DCT is a static-quantization transform coder, so its estimate
-//! reuses the §5.1 machinery on *DCT coefficients* (instead of
-//! prediction errors): sample blocks → DCT → coefficient PDF →
-//! Eq. 9 entropy bit-rate; PSNR is closed-form in the coefficient bin
-//! size by Theorem 3 (orthogonal transform preserves MSE).
+//! The ranking itself now lives in [`super::selector::AutoSelector`]
+//! (Algorithm 1 generalized over [`super::selector::CandidateSet`]),
+//! with the DCT column modeled by [`super::dct_model`]; this module
+//! keeps the original three-way vocabulary ([`Codec3`],
+//! [`Estimates3`], [`MultiSelector`]) as a thin compatibility layer
+//! over it.
 
-use super::pdf::ErrorPdf;
-use super::sampling::{sample_blocks, BlockSample};
-use super::selector::SelectorConfig;
-use super::{sz_model, zfp_model};
+use super::dct_model;
+use super::sampling::BlockSample;
+use super::selector::{AutoSelector, CandidateSet, Choice, Estimates, SelectorConfig};
 use crate::data::field::{Dims, Field};
-use crate::dct::compressor::{coeff_delta, DctCompressor};
-use crate::sz::SzCompressor;
-use crate::zfp::block::{self, block_size};
-use crate::zfp::transform::{ParametricBot, T_DCT2};
 use crate::{Error, Result};
 
 /// Three-way codec choice (container selection bytes 0/1/3).
@@ -29,10 +25,24 @@ pub enum Codec3 {
 
 impl Codec3 {
     pub fn name(&self) -> &'static str {
+        self.choice().name()
+    }
+
+    /// The registry-level [`Choice`] this maps to.
+    pub fn choice(&self) -> Choice {
         match self {
-            Codec3::Sz => "SZ",
-            Codec3::Zfp => "ZFP",
-            Codec3::Dct => "DCT",
+            Codec3::Sz => Choice::Sz,
+            Codec3::Zfp => Choice::Zfp,
+            Codec3::Dct => Choice::Dct,
+        }
+    }
+
+    fn from_choice(c: Choice) -> Result<Codec3> {
+        match c {
+            Choice::Sz => Ok(Codec3::Sz),
+            Choice::Zfp => Ok(Codec3::Zfp),
+            Choice::Dct => Ok(Codec3::Dct),
+            Choice::Raw => Err(Error::InvalidArg("raw is not a 3-way candidate".into())),
         }
     }
 }
@@ -49,8 +59,23 @@ pub struct Estimates3 {
     pub eb_zfp: f64,
 }
 
+impl From<Estimates> for Estimates3 {
+    fn from(e: Estimates) -> Self {
+        Estimates3 {
+            br_sz: e.br_sz,
+            br_zfp: e.br_zfp,
+            br_dct: e.br_dct,
+            psnr_target: e.psnr_target,
+            eb_sz: e.eb_sz,
+            eb_dct: e.eb_dct,
+            eb_zfp: e.eb_zfp,
+        }
+    }
+}
+
 /// Estimate the DCT codec's bit-rate from sampled blocks at a given
-/// coefficient bin size (Eq. 9 applied to DCT coefficients).
+/// coefficient bin size (Eq. 9 applied to DCT coefficients). Kept for
+/// compatibility; [`dct_model::estimate`] is the full model.
 pub fn estimate_dct_bitrate(
     data: &[f32],
     dims: Dims,
@@ -59,25 +84,12 @@ pub fn estimate_dct_bitrate(
     capacity: u32,
     field_len: usize,
 ) -> f64 {
-    let ndim = dims.ndim();
-    let bs = block_size(ndim);
-    let bot = ParametricBot::new(T_DCT2);
-    let mut fblock = vec![0.0f32; bs];
-    let mut dblock = vec![0.0f64; bs];
-    let mut coeffs: Vec<f32> = Vec::with_capacity(sample.blocks.len() * bs);
-    for &coords in &sample.blocks {
-        block::gather(data, dims, coords, &mut fblock);
-        for (d, &f) in dblock.iter_mut().zip(&fblock) {
-            *d = f as f64;
-        }
-        bot.forward(&mut dblock, ndim);
-        coeffs.extend(dblock.iter().map(|&c| c as f32));
-    }
-    let pdf = ErrorPdf::build(&coeffs, delta_c, capacity);
-    sz_model::bit_rate_from_pdf(&pdf, field_len)
+    let pdf = dct_model::coefficient_pdf(data, dims, sample, delta_c, capacity);
+    super::sz_model::bit_rate_from_pdf(&pdf, field_len)
 }
 
-/// The 3-way selector.
+/// The 3-way selector: [`AutoSelector`] pinned to the full SZ/ZFP/DCT
+/// candidate set.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct MultiSelector {
     pub cfg: SelectorConfig,
@@ -88,113 +100,26 @@ impl MultiSelector {
         MultiSelector { cfg }
     }
 
+    fn auto(&self) -> AutoSelector {
+        AutoSelector::new(SelectorConfig { candidates: CandidateSet::all(), ..self.cfg })
+    }
+
     /// Algorithm 1, extended: ZFP anchors the target PSNR; SZ and DCT
     /// derive their iso-PSNR bin sizes; smallest estimated BR wins.
     pub fn select(&self, field: &Field, eb_rel: f64) -> Result<(Codec3, Estimates3)> {
-        let vr = field.value_range();
-        let eb = if vr > 0.0 { eb_rel * vr } else { eb_rel };
-        if eb <= 0.0 || !eb.is_finite() {
-            return Err(Error::InvalidArg(format!("bad bound {eb}")));
-        }
-        let ndim = field.dims.ndim();
-        let sample = sample_blocks(field.dims, self.cfg.r_sp);
-
-        let zfp_est =
-            zfp_model::estimate(&field.data, field.dims, &sample, eb, vr, self.cfg.zfp_model);
-
-        // Iso-PSNR bin sizes (Eq. 10 inversion); clamp to the user
-        // bound so pointwise guarantees never loosen.
-        let delta_sz = if zfp_est.psnr.is_finite() && vr > 0.0 {
-            sz_model::delta_from_psnr(zfp_est.psnr, vr).min(2.0 * eb)
-        } else {
-            2.0 * eb
-        };
-        // DCT quantizes coefficients; Theorem 3 keeps MSE equal across
-        // the transform, so the same Eq. 10 bin size applies to the
-        // coefficient quantizer directly. Its pointwise-safety cap is
-        // the coefficient delta for the user bound.
-        let delta_dct = delta_sz.min(coeff_delta(eb, ndim));
-
-        let sz_est = sz_model::estimate(
-            &field.data,
-            field.dims,
-            &sample,
-            delta_sz,
-            self.cfg.capacity,
-            vr,
-        );
-        let br_dct = estimate_dct_bitrate(
-            &field.data,
-            field.dims,
-            &sample,
-            delta_dct,
-            self.cfg.capacity,
-            field.len(),
-        );
-
-        let est = Estimates3 {
-            br_sz: sz_est.bit_rate,
-            br_zfp: zfp_est.bit_rate,
-            br_dct,
-            psnr_target: zfp_est.psnr,
-            eb_sz: delta_sz / 2.0,
-            // The DCT codec takes a *pointwise* bound and derives its
-            // own coefficient delta; invert coeff_delta.
-            eb_dct: delta_dct * (block_size(ndim) as f64).sqrt() / 2.0,
-            eb_zfp: eb,
-        };
-        let choice = if est.br_sz <= est.br_zfp && est.br_sz <= est.br_dct {
-            Codec3::Sz
-        } else if est.br_zfp <= est.br_dct {
-            Codec3::Zfp
-        } else {
-            Codec3::Dct
-        };
-        Ok((choice, est))
+        let (choice, est) = self.auto().select(field, eb_rel)?;
+        Ok((Codec3::from_choice(choice)?, est.into()))
     }
 
     /// Select + compress; container = selection byte + codec stream.
     pub fn compress(&self, field: &Field, eb_rel: f64) -> Result<(Codec3, Vec<u8>)> {
-        let (choice, est) = self.select(field, eb_rel)?;
-        let payload = match choice {
-            Codec3::Sz => SzCompressor::new(self.cfg.sz).compress(
-                &field.data,
-                field.dims,
-                est.eb_sz.max(f64::MIN_POSITIVE),
-            )?,
-            Codec3::Zfp => crate::zfp::ZfpCompressor::new(self.cfg.zfp).compress(
-                &field.data,
-                field.dims,
-                est.eb_zfp,
-            )?,
-            Codec3::Dct => DctCompressor::default().compress(
-                &field.data,
-                field.dims,
-                est.eb_dct.max(f64::MIN_POSITIVE),
-            )?,
-        };
-        let mut container = Vec::with_capacity(payload.len() + 1);
-        container.push(match choice {
-            Codec3::Sz => 0u8,
-            Codec3::Zfp => 1,
-            Codec3::Dct => 3,
-        });
-        container.extend_from_slice(&payload);
-        Ok((choice, container))
+        let out = self.auto().compress(field, eb_rel)?;
+        Ok((Codec3::from_choice(out.choice)?, out.container))
     }
 
     /// Decompress any 3-way container.
     pub fn decompress(&self, container: &[u8]) -> Result<(Vec<f32>, Dims)> {
-        let sel = *container
-            .first()
-            .ok_or_else(|| Error::Corrupt("empty container".into()))?;
-        let payload = &container[1..];
-        match sel {
-            0 => SzCompressor::new(self.cfg.sz).decompress(payload),
-            1 => crate::zfp::ZfpCompressor::new(self.cfg.zfp).decompress(payload),
-            3 => DctCompressor::default().decompress(payload),
-            b => Err(Error::Corrupt(format!("bad selection byte {b}"))),
-        }
+        self.auto().decompress_with_dims(container)
     }
 }
 
@@ -229,7 +154,10 @@ mod tests {
         // real data the 3-way pick's bit-rate must be close to or
         // better than the 2-way pick.
         let sel3 = MultiSelector::default();
-        let sel2 = crate::estimator::selector::AutoSelector::default();
+        let sel2 = AutoSelector::new(SelectorConfig {
+            candidates: CandidateSet::two_way(),
+            ..Default::default()
+        });
         let mut total3 = 0usize;
         let mut total2 = 0usize;
         for idx in 0..10 {
@@ -281,5 +209,19 @@ mod tests {
             assert!(br > 0.0 && br < 64.0, "{est:?}");
         }
         assert!(est.eb_sz <= est.eb_zfp * (1.0 + 1e-12));
+    }
+
+    #[test]
+    fn codec3_maps_onto_registry_choices() {
+        for (c3, choice) in [
+            (Codec3::Sz, Choice::Sz),
+            (Codec3::Zfp, Choice::Zfp),
+            (Codec3::Dct, Choice::Dct),
+        ] {
+            assert_eq!(c3.choice(), choice);
+            assert_eq!(c3.name(), choice.name());
+            assert_eq!(Codec3::from_choice(choice).unwrap(), c3);
+        }
+        assert!(Codec3::from_choice(Choice::Raw).is_err());
     }
 }

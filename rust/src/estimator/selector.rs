@@ -1,23 +1,132 @@
-//! Algorithm 1: the automatic online selection method.
+//! Algorithm 1: the automatic online selection method, generalized
+//! from the paper's SZ-vs-ZFP decision to a multi-way ranking over the
+//! registered candidate codecs (SZ, ZFP, DCT — §7 extension).
 //!
-//! Per field: estimate ZFP's bit-rate and PSNR from the sample; derive
-//! the SZ bin size δ that matches ZFP's PSNR (iso-distortion, Eq. 10);
-//! estimate SZ's bit-rate at that δ; pick the compressor with the
-//! smaller estimated bit-rate; compress. The output carries the
-//! selection bit s_i (paper's output format) plus the estimates for
-//! observability.
+//! Per field: estimate ZFP's bit-rate and PSNR from the sample (ZFP
+//! anchors the iso-distortion target because its PSNR is data-driven);
+//! derive the SZ quantization bin size δ and the DCT coefficient bin
+//! size δ_c that match that PSNR (Eq. 10 inversion, Theorem 3);
+//! estimate every candidate's bit-rate at its iso-PSNR operating
+//! point; pick the candidate with the smallest estimated bit-rate;
+//! compress. The output carries the selection bit s_i (paper's output
+//! format) plus the estimates for observability.
 
 use super::sampling::{sample_blocks, DEFAULT_RSP};
-use super::{sz_model, zfp_model};
+use super::{dct_model, sz_model, zfp_model};
 use crate::codec_api::CodecRegistry;
 use crate::data::field::{Dims, Field};
+use crate::dct::compressor::coeff_delta;
+use crate::dct::DctConfig;
 use crate::sz::SzConfig;
+use crate::zfp::block::block_size;
 use crate::zfp::ZfpConfig;
 use crate::{Error, Result};
 
 // `Choice` is now a thin wrapper over codec-registry ids; re-exported
 // here so `estimator::selector::Choice` keeps working.
 pub use crate::codec_api::Choice;
+
+/// Which codecs compete in the ranking. `Raw` never competes — it is
+/// the no-compression policy, not a rate-distortion candidate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CandidateSet {
+    pub sz: bool,
+    pub zfp: bool,
+    pub dct: bool,
+}
+
+impl Default for CandidateSet {
+    fn default() -> Self {
+        CandidateSet::all()
+    }
+}
+
+impl CandidateSet {
+    /// Every registered rate-distortion codec (the default).
+    pub const fn all() -> Self {
+        CandidateSet { sz: true, zfp: true, dct: true }
+    }
+
+    /// The paper's original Algorithm 1 matrix (SZ vs ZFP) — used by
+    /// the Table 2–5 / Fig. 6–9 reproductions for fidelity.
+    pub const fn two_way() -> Self {
+        CandidateSet { sz: true, zfp: true, dct: false }
+    }
+
+    /// Parse a comma-separated codec list, e.g. `"sz,zfp,dct"`.
+    /// Empty tokens (trailing commas) are ignored; an entirely empty
+    /// list is an error.
+    pub fn parse(s: &str) -> Result<Self> {
+        let mut set = CandidateSet { sz: false, zfp: false, dct: false };
+        for tok in s.split(',') {
+            match tok.trim().to_ascii_lowercase().as_str() {
+                "" => {}
+                "sz" => set.sz = true,
+                "zfp" => set.zfp = true,
+                "dct" => set.dct = true,
+                other => {
+                    return Err(Error::InvalidArg(format!(
+                        "unknown codec '{other}' (expected sz, zfp, dct)"
+                    )))
+                }
+            }
+        }
+        if !(set.sz || set.zfp || set.dct) {
+            return Err(Error::InvalidArg("empty codec set".into()));
+        }
+        Ok(set)
+    }
+
+    /// Enabled candidates in stable ranking order (ties resolve toward
+    /// the earlier, longer-validated codec: SZ, then ZFP, then DCT).
+    pub fn choices(self) -> impl Iterator<Item = Choice> {
+        [
+            (self.sz, Choice::Sz),
+            (self.zfp, Choice::Zfp),
+            (self.dct, Choice::Dct),
+        ]
+        .into_iter()
+        .filter_map(|(on, c)| on.then_some(c))
+    }
+
+    /// `true` if `choice` competes in this set.
+    pub fn contains(self, choice: Choice) -> bool {
+        match choice {
+            Choice::Sz => self.sz,
+            Choice::Zfp => self.zfp,
+            Choice::Dct => self.dct,
+            Choice::Raw => false,
+        }
+    }
+
+    /// Comma-separated names of the enabled candidates.
+    pub fn names(self) -> String {
+        self.choices().map(|c| c.name()).collect::<Vec<_>>().join(",")
+    }
+
+    /// Rank: smallest estimated bit-rate wins; strict `<` so ties keep
+    /// the earliest candidate in [`CandidateSet::choices`] order. NaN
+    /// estimates never win.
+    pub fn rank(self, est: &Estimates) -> Result<Choice> {
+        let mut best: Option<(Choice, f64)> = None;
+        for c in self.choices() {
+            let br = est.bit_rate_of(c);
+            if br.is_nan() {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some((_, b)) => br < b,
+            };
+            if better {
+                best = Some((c, br));
+            }
+        }
+        best.map(|(c, _)| c).ok_or_else(|| {
+            Error::InvalidArg("no rankable codec candidate (empty set or NaN estimates)".into())
+        })
+    }
+}
 
 /// Selector configuration.
 #[derive(Clone, Copy, Debug)]
@@ -28,7 +137,10 @@ pub struct SelectorConfig {
     pub capacity: u32,
     pub sz: SzConfig,
     pub zfp: ZfpConfig,
+    pub dct: DctConfig,
     pub zfp_model: zfp_model::ZfpModelConfig,
+    /// Codecs competing in the ranking (default: SZ, ZFP, DCT).
+    pub candidates: CandidateSet,
 }
 
 impl Default for SelectorConfig {
@@ -38,32 +150,49 @@ impl Default for SelectorConfig {
             capacity: 65_535,
             sz: SzConfig::default(),
             zfp: ZfpConfig::default(),
+            dct: DctConfig::default(),
             zfp_model: zfp_model::ZfpModelConfig::default(),
+            candidates: CandidateSet::all(),
         }
     }
 }
 
-/// Estimates computed by Algorithm 1 (lines 5–9).
+/// Estimates computed by Algorithm 1 (lines 5–9), one column per
+/// candidate codec.
 #[derive(Clone, Copy, Debug)]
 pub struct Estimates {
     pub br_sz: f64,
     pub br_zfp: f64,
+    pub br_dct: f64,
     /// The iso-distortion target PSNR (ZFP's estimated PSNR).
     pub psnr_target: f64,
     /// Absolute error bound handed to SZ (δ/2, ≤ the user bound).
     pub eb_sz: f64,
     /// Absolute error bound handed to ZFP (the user bound).
     pub eb_zfp: f64,
+    /// Absolute pointwise bound handed to DCT (≤ the user bound; the
+    /// codec derives its own coefficient bin size δ_c from it).
+    pub eb_dct: f64,
 }
 
 impl Estimates {
-    /// The bound Algorithm 1 hands to `choice`'s codec: SZ gets the
-    /// iso-PSNR δ/2, every other codec the user bound.
+    /// The bound Algorithm 1 hands to `choice`'s codec: SZ and DCT get
+    /// their iso-PSNR bounds, every other codec the user bound.
     pub fn bound_for(&self, choice: Choice) -> f64 {
-        if choice == Choice::Sz {
-            self.eb_sz
-        } else {
-            self.eb_zfp
+        match choice {
+            Choice::Sz => self.eb_sz,
+            Choice::Dct => self.eb_dct,
+            _ => self.eb_zfp,
+        }
+    }
+
+    /// Estimated bit-rate of one candidate.
+    pub fn bit_rate_of(&self, choice: Choice) -> f64 {
+        match choice {
+            Choice::Sz => self.br_sz,
+            Choice::Zfp => self.br_zfp,
+            Choice::Dct => self.br_dct,
+            Choice::Raw => 32.0,
         }
     }
 }
@@ -109,12 +238,13 @@ impl AutoSelector {
     /// The codec registry for this selector's configuration — the one
     /// place that maps selection bytes to concrete codecs.
     pub fn registry(&self) -> CodecRegistry {
-        CodecRegistry::standard(self.cfg.sz, self.cfg.zfp)
+        CodecRegistry::standard(self.cfg.sz, self.cfg.zfp, self.cfg.dct)
     }
 
-    /// Algorithm 1 lines 2–10: estimate both compressors and choose.
-    /// `eb_rel` is the value-range-based relative error bound; the
-    /// absolute bound is eb = eb_rel · VR (line 2).
+    /// Algorithm 1 lines 2–10, multi-way: estimate every candidate at
+    /// the shared target PSNR and choose. `eb_rel` is the
+    /// value-range-based relative error bound; the absolute bound is
+    /// eb = eb_rel · VR (line 2).
     pub fn select(&self, field: &Field, eb_rel: f64) -> Result<(Choice, Estimates)> {
         let vr = field.value_range();
         let eb = self.absolute_bound(vr, eb_rel)?;
@@ -123,13 +253,25 @@ impl AutoSelector {
 
     /// Selection with an explicit absolute bound.
     pub fn select_abs(&self, field: &Field, eb: f64, vr: f64) -> Result<(Choice, Estimates)> {
+        let est = self.estimate_abs(field, eb, vr)?;
+        let choice = self.cfg.candidates.rank(&est)?;
+        Ok((choice, est))
+    }
+
+    /// Estimate every candidate's iso-PSNR operating point and
+    /// bit-rate (Algorithm 1 lines 3–9, one column per codec). Split
+    /// from [`Self::select_abs`] so chunked runs can compute one
+    /// field-level estimate and share it across chunks (DESIGN.md §11).
+    pub fn estimate_abs(&self, field: &Field, eb: f64, vr: f64) -> Result<Estimates> {
         if eb <= 0.0 || !eb.is_finite() {
             return Err(Error::InvalidArg(format!("bad error bound {eb}")));
         }
         // Line 3–4: blockwise + pointwise sampling.
         let sample = sample_blocks(field.dims, self.cfg.r_sp);
 
-        // Lines 5–6: ZFP bit-rate (n̄_sb) and PSNR (PSNR_sp).
+        // Lines 5–6: ZFP bit-rate (n̄_sb) and PSNR (PSNR_sp). ZFP is
+        // always modeled — even when not a candidate — because its
+        // data-driven PSNR anchors the iso-distortion target.
         let zfp_est =
             zfp_model::estimate(&field.data, field.dims, &sample, eb, vr, self.cfg.zfp_model);
 
@@ -147,16 +289,39 @@ impl AutoSelector {
         let sz_est =
             sz_model::estimate(&field.data, field.dims, &sample, delta, self.cfg.capacity, vr);
 
-        // Line 10: pick the smaller estimated bit-rate.
-        let choice = if sz_est.bit_rate < zfp_est.bit_rate { Choice::Sz } else { Choice::Zfp };
-        let est = Estimates {
+        // DCT quantizes coefficients; Theorem 3 keeps MSE equal across
+        // the orthogonal transform, so the iso-PSNR bin size δ applies
+        // to the coefficient quantizer directly. Cap it at the
+        // coefficient delta of the user bound so the pointwise
+        // guarantee never loosens.
+        let ndim = field.dims.ndim();
+        let delta_dct = delta.min(coeff_delta(eb, ndim));
+        let dct_est = if self.cfg.candidates.dct {
+            dct_model::estimate(
+                &field.data,
+                field.dims,
+                &sample,
+                delta_dct,
+                self.cfg.capacity,
+                field.len(),
+                vr,
+            )
+            .bit_rate
+        } else {
+            f64::INFINITY
+        };
+
+        Ok(Estimates {
             br_sz: sz_est.bit_rate,
             br_zfp: zfp_est.bit_rate,
+            br_dct: dct_est,
             psnr_target: zfp_est.psnr,
             eb_sz: delta / 2.0,
             eb_zfp: eb,
-        };
-        Ok((choice, est))
+            // The DCT codec takes a *pointwise* bound and derives its
+            // own coefficient bin size; invert `coeff_delta`.
+            eb_dct: delta_dct * (block_size(ndim) as f64).sqrt() / 2.0,
+        })
     }
 
     /// Full Algorithm 1: select, then compress with the chosen codec
@@ -219,7 +384,7 @@ mod tests {
             let recon = sel.decompress(&out.container).unwrap();
             let stats = error_stats(&f.data, &recon);
             assert!(
-                stats.max_abs_err <= 1e-3 * vr * (1.0 + 1e-9),
+                stats.max_abs_err <= 1e-3 * vr * (1.0 + 1e-6),
                 "field {idx} ({:?}): err {} bound {}",
                 out.choice,
                 stats.max_abs_err,
@@ -230,7 +395,11 @@ mod tests {
 
     #[test]
     fn smooth_fields_pick_sz_rough_pick_zfp() {
-        let sel = AutoSelector::default();
+        // The paper's original two-way matrix (Algorithm 1 as
+        // published); DCT is excluded so the assertion stays the
+        // SZ-vs-ZFP decision the paper validates.
+        let cfg = SelectorConfig { candidates: CandidateSet::two_way(), ..Default::default() };
+        let sel = AutoSelector::new(cfg);
         // idx 0 is a Smooth class (SZ-friendly); idx 7 is Rough.
         let smooth = atm::generate_field_scaled(11, 0, 1);
         let rough = atm::generate_field_scaled(11, 7, 1);
@@ -241,12 +410,70 @@ mod tests {
     }
 
     #[test]
+    fn three_way_pick_has_smallest_estimated_bitrate() {
+        let sel = AutoSelector::default();
+        for idx in [0usize, 3, 7] {
+            let f = atm::generate_field_scaled(11, idx, 0);
+            let (choice, est) = sel.select(&f, 1e-4).unwrap();
+            let best = est.br_sz.min(est.br_zfp).min(est.br_dct);
+            assert_eq!(est.bit_rate_of(choice), best, "idx {idx}: {est:?}");
+        }
+    }
+
+    #[test]
+    fn candidate_set_parse_and_rank() {
+        assert_eq!(CandidateSet::parse("sz,zfp,dct").unwrap(), CandidateSet::all());
+        assert_eq!(CandidateSet::parse("SZ , ZFP").unwrap(), CandidateSet::two_way());
+        // Trailing commas are tolerated; empty lists are not.
+        assert_eq!(CandidateSet::parse("sz,zfp,").unwrap(), CandidateSet::two_way());
+        assert!(CandidateSet::parse("zstd").is_err());
+        assert!(CandidateSet::parse("").is_err());
+        assert!(CandidateSet::parse(",").is_err());
+        let est = Estimates {
+            br_sz: 2.0,
+            br_zfp: 2.0,
+            br_dct: 1.0,
+            psnr_target: 60.0,
+            eb_sz: 1.0,
+            eb_zfp: 1.0,
+            eb_dct: 1.0,
+        };
+        // Smallest BR wins; ties keep the earlier candidate.
+        assert_eq!(CandidateSet::all().rank(&est).unwrap(), Choice::Dct);
+        assert_eq!(CandidateSet::two_way().rank(&est).unwrap(), Choice::Sz);
+        assert_eq!(CandidateSet::parse("dct").unwrap().names(), "DCT");
+        assert!(CandidateSet::all().contains(Choice::Dct));
+        assert!(!CandidateSet::all().contains(Choice::Raw));
+    }
+
+    #[test]
+    fn dct_only_candidates_select_and_roundtrip() {
+        let cfg = SelectorConfig {
+            candidates: CandidateSet::parse("dct").unwrap(),
+            ..Default::default()
+        };
+        let sel = AutoSelector::new(cfg);
+        let f = atm::generate_field_scaled(41, 2, 0);
+        let vr = f.value_range();
+        let out = sel.compress(&f, 1e-3).unwrap();
+        assert_eq!(out.choice, Choice::Dct);
+        assert_eq!(out.container[0], Choice::Dct.id());
+        let recon = sel.decompress(&out.container).unwrap();
+        let stats = error_stats(&f.data, &recon);
+        assert!(
+            stats.max_abs_err <= 1e-3 * vr * (1.0 + 1e-6),
+            "err {} bound {}",
+            stats.max_abs_err,
+            1e-3 * vr
+        );
+    }
+
+    #[test]
     fn selection_bit_matches_choice() {
         let sel = AutoSelector::default();
         let f = hurricane::generate_field_scaled(3, 0, 0);
         let out = sel.compress(&f, 1e-3).unwrap();
-        let expect = if out.choice == Choice::Sz { 0 } else { 1 };
-        assert_eq!(out.container[0], expect);
+        assert_eq!(out.container[0], out.choice.id());
     }
 
     #[test]
@@ -256,6 +483,7 @@ mod tests {
         let vr = f.value_range();
         let (_, est) = sel.select(&f, 1e-4).unwrap();
         assert!(est.eb_sz <= est.eb_zfp * (1.0 + 1e-12));
+        assert!(est.eb_dct <= est.eb_zfp * (1.0 + 1e-12));
         assert!(est.eb_zfp > 0.0 && (est.eb_zfp - 1e-4 * vr).abs() < 1e-12 * vr);
     }
 
@@ -276,11 +504,12 @@ mod tests {
         let sel = AutoSelector::default();
         let f = atm::generate_field_scaled(17, 1, 0);
         let vr = f.value_range();
-        for c in [Choice::Sz, Choice::Zfp] {
+        for c in [Choice::Sz, Choice::Zfp, Choice::Dct] {
             let cont = sel.compress_forced(&f, 1e-3 * vr, c).unwrap();
+            assert_eq!(cont[0], c.id());
             let recon = sel.decompress(&cont).unwrap();
             let stats = error_stats(&f.data, &recon);
-            assert!(stats.max_abs_err <= 1e-3 * vr * (1.0 + 1e-9), "{c:?}");
+            assert!(stats.max_abs_err <= 1e-3 * vr * (1.0 + 1e-6), "{c:?}");
         }
     }
 
@@ -301,9 +530,11 @@ mod tests {
             estimates: Estimates {
                 br_sz: 0.0,
                 br_zfp: 0.0,
+                br_dct: 0.0,
                 psnr_target: 0.0,
                 eb_sz: 1.0,
                 eb_zfp: 1.0,
+                eb_dct: 1.0,
             },
             raw_bytes,
         };

@@ -1,8 +1,9 @@
-//! API-compatible stand-in for [`super::pjrt::PjrtEngine`] used when
-//! the crate is built without the `pjrt` feature (the `xla` bindings
-//! only exist in the internal toolchain image). Every entry point
-//! compiles; `load_dir` fails with a clear message, which callers
-//! already treat the same way as missing artifacts.
+//! API-compatible stand-in for the real PJRT engine
+//! (`runtime/pjrt.rs`) used whenever the crate is built without the
+//! `pjrt` feature *or* without the `pjrt_xla` cfg (the `xla` bindings
+//! only exist in the internal toolchain image — DESIGN.md §10). Every
+//! entry point compiles; `load_dir` fails with a clear message, which
+//! callers already treat the same way as missing artifacts.
 
 use crate::{Error, Result};
 use std::path::Path;
@@ -16,8 +17,9 @@ pub struct PjrtEngine {
 fn unavailable() -> Error {
     Error::Runtime(
         "adaptivec was built without the PJRT engine; rebuild inside the \
-         internal toolchain image with `--features pjrt` and the vendored \
-         `xla` dependency added to Cargo.toml (see rust/DESIGN.md §10)"
+         internal toolchain image with `--features pjrt`, \
+         RUSTFLAGS=\"--cfg pjrt_xla\", and the vendored `xla` dependency \
+         added to Cargo.toml (see rust/DESIGN.md §10)"
             .into(),
     )
 }

@@ -25,6 +25,15 @@ pub fn decode_symbols(buf: &[u8], pos: &mut usize) -> Result<Vec<u32>> {
     let n = varint::read_u64(buf, pos)? as usize;
     let table = varint::read_bytes(buf, pos)?;
     let bits = varint::read_bytes(buf, pos)?;
+    // The symbol count is untrusted: every canonical code is >= 1 bit,
+    // so a count beyond bits.len()*8 is corruption — reject it before
+    // it sizes an attacker-controlled allocation.
+    if n > bits.len().saturating_mul(8) {
+        return Err(Error::Corrupt(format!(
+            "huffman: {n} symbols cannot fit in {} payload bytes",
+            bits.len()
+        )));
+    }
     let mut tpos = 0;
     let dec = HuffmanDecoder::deserialize_table(table, &mut tpos)?;
     if tpos != table.len() {

@@ -101,6 +101,24 @@ impl Gen<Vec<f32>> {
     }
 }
 
+/// Deterministic per-property seed (FNV-1a over the property name),
+/// mixed with `ADAPTIVEC_FUZZ_SEED` when set — the CI fuzz job runs a
+/// fixed seed matrix so every scheduled run explores different inputs
+/// while any failure stays reproducible from the printed seed.
+fn property_seed(name: &str) -> u64 {
+    let base = name
+        .bytes()
+        .fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+            (h ^ b as u64).wrapping_mul(0x1000_0000_01b3)
+        });
+    match std::env::var("ADAPTIVEC_FUZZ_SEED").ok().and_then(|v| v.parse::<u64>().ok()) {
+        // Golden-ratio odd multiplier decorrelates consecutive matrix
+        // seeds before the XOR fold.
+        Some(s) => base ^ s.wrapping_mul(0x9e37_79b9_7f4a_7c15),
+        None => base,
+    }
+}
+
 /// Run `prop` on `iters` random samples from `gen`. Panics with the
 /// (shrunk, when possible) counterexample on failure.
 pub fn forall<T: std::fmt::Debug + Clone + 'static>(
@@ -109,12 +127,7 @@ pub fn forall<T: std::fmt::Debug + Clone + 'static>(
     gen: Gen<T>,
     prop: impl Fn(&T) -> bool,
 ) {
-    // Deterministic per-property seed so failures are reproducible.
-    let seed = name
-        .bytes()
-        .fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
-            (h ^ b as u64).wrapping_mul(0x1000_0000_01b3)
-        });
+    let seed = property_seed(name);
     let mut rng = Rng::new(seed);
     for i in 0..iters {
         let input = gen.sample(&mut rng);
@@ -133,11 +146,7 @@ pub fn forall_vec_f32(
     gen: Gen<Vec<f32>>,
     prop: impl Fn(&[f32]) -> bool,
 ) {
-    let seed = name
-        .bytes()
-        .fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
-            (h ^ b as u64).wrapping_mul(0x1000_0000_01b3)
-        });
+    let seed = property_seed(name);
     let mut rng = Rng::new(seed);
     for i in 0..iters {
         let input = gen.sample(&mut rng);
@@ -190,6 +199,12 @@ fn shrink_vec_f32(input: &[f32], prop: &impl Fn(&[f32]) -> bool) -> Vec<f32> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn property_seed_is_deterministic_per_name() {
+        assert_eq!(property_seed("a"), property_seed("a"));
+        assert_ne!(property_seed("a"), property_seed("b"));
+    }
 
     #[test]
     fn forall_passes_true_property() {

@@ -1,0 +1,63 @@
+//! Multiway-vs-exhaustive selection accuracy (the §6.2 accuracy
+//! protocol extended to three candidates): on the synthetic corpus,
+//! the three-way estimator's pick must be the codec whose *real*
+//! compressed output at its iso-PSNR operating point is the smallest,
+//! with near-ties (within 10% of the best size) not counted as misses
+//! — misselection among near-equal candidates costs almost nothing
+//! (the paper's "wrong picks cost ≤ 3.3%" observation).
+
+use adaptivec::codec_api::Choice;
+use adaptivec::data::Dataset;
+use adaptivec::estimator::selector::AutoSelector;
+
+const CANDIDATES: [Choice; 3] = [Choice::Sz, Choice::Zfp, Choice::Dct];
+
+#[test]
+fn three_way_pick_matches_exhaustive_size_ranking() {
+    let sel = AutoSelector::default();
+    let mut total = 0usize;
+    let mut correct = 0usize;
+    let mut picked_bytes = 0u64;
+    let mut best_bytes = 0u64;
+    for ds in Dataset::ALL {
+        for f in ds.generate(2018, 0) {
+            let vr = f.value_range();
+            if vr <= 0.0 {
+                continue;
+            }
+            for eb_rel in [1e-3, 1e-4] {
+                let eb = eb_rel * vr;
+                let (pick, est) = sel.select_abs(&f, eb, vr).unwrap();
+                // Exhaustive ground truth: run every candidate at the
+                // operating point the estimator modeled for it.
+                let sizes: Vec<(Choice, usize)> = CANDIDATES
+                    .into_iter()
+                    .map(|c| {
+                        let bound = est.bound_for(c).max(f64::MIN_POSITIVE);
+                        (c, sel.compress_forced(&f, bound, c).unwrap().len())
+                    })
+                    .collect();
+                let best = sizes.iter().map(|&(_, s)| s).min().unwrap();
+                let picked = sizes.iter().find(|&&(c, _)| c == pick).unwrap().1;
+                total += 1;
+                picked_bytes += picked as u64;
+                best_bytes += best as u64;
+                if picked as f64 <= best as f64 * 1.10 {
+                    correct += 1;
+                }
+            }
+        }
+    }
+    assert!(total >= 20, "corpus unexpectedly small: {total}");
+    let acc = correct as f64 / total as f64;
+    assert!(
+        acc >= 0.90,
+        "three-way selection accuracy {acc:.3} ({correct}/{total}) below 90%"
+    );
+    // Aggregate cost of every misselection stays small: the picked
+    // outputs together are within 10% of the exhaustive optimum.
+    assert!(
+        (picked_bytes as f64) <= best_bytes as f64 * 1.10,
+        "picked {picked_bytes} vs exhaustive best {best_bytes}"
+    );
+}

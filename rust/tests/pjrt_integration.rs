@@ -3,9 +3,10 @@
 //! proving the three-layer architecture composes end to end.
 //!
 //! Skips (with a message) when `make artifacts` has not run, and is
-//! compiled out entirely without the `pjrt` feature (default builds
-//! link the stub engine, which can never produce results to compare).
-#![cfg(feature = "pjrt")]
+//! compiled out entirely unless both the `pjrt` feature and the
+//! `pjrt_xla` cfg are active (stub-path builds link an engine that can
+//! never produce results to compare — DESIGN.md §10).
+#![cfg(all(feature = "pjrt", pjrt_xla))]
 
 use adaptivec::data::atm;
 use adaptivec::estimator::sampling;
