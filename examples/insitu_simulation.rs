@@ -6,11 +6,16 @@
 //!
 //! Demonstrates: per-timestep selection stability, accumulated ratio,
 //! and that compression error does NOT feed back into the simulation
-//! (compression is on the output path only).
+//! (compression is on the output path only). Each output step is
+//! *streamed* to its own v2 container file through the index-first
+//! writer — the compressed payload is never buffered whole, exactly
+//! the bounded-memory discipline an in-situ pipeline needs — and then
+//! verified by reading the file back through the pread-backed reader.
 //!
 //! Run: `cargo run --release --example insitu_simulation`
 
 use adaptivec::baseline::Policy;
+use adaptivec::coordinator::store::ContainerReader;
 use adaptivec::coordinator::Coordinator;
 use adaptivec::data::field::{Dims, Field};
 use adaptivec::estimator::selector::AutoSelector;
@@ -94,6 +99,9 @@ fn main() -> adaptivec::Result<()> {
     let eb_rel = 1e-4;
     let steps = 40;
     let output_every = 4;
+    let chunk_elems = 16 * 1024;
+    let tmp = std::env::temp_dir().join("adaptivec_insitu");
+    std::fs::create_dir_all(&tmp)?;
 
     println!("in-situ simulation: 192x192 advection-diffusion, {steps} steps, output every {output_every}");
     let registry = AutoSelector::new(coord.selector_cfg).registry();
@@ -103,18 +111,29 @@ fn main() -> adaptivec::Result<()> {
     );
 
     let (mut total_raw, mut total_stored) = (0u64, 0u64);
+    let (mut peak_payload, mut outputs) = (0u64, 0u64);
     for step in 0..steps {
         sim.step();
         if step % output_every != 0 {
             continue;
         }
         let fields = sim.snapshot(step);
-        let report = coord.run(&fields, Policy::RateDistortion, eb_rel)?;
+        // Stream this step's state straight to its own container file
+        // (file-per-timestep, the paper's file-per-process I/O shape).
+        let path = tmp.join(format!("step{step:04}.adaptivec2"));
+        let sink = std::io::BufWriter::new(std::fs::File::create(&path)?);
+        let (report, _) =
+            coord.run_chunked_to(&fields, Policy::RateDistortion, eb_rel, chunk_elems, sink)?;
         total_raw += report.total_raw_bytes();
         total_stored += report.total_stored_bytes();
+        peak_payload = peak_payload.max(report.peak_payload_bytes);
+        outputs += 1;
 
-        // Verify in-situ output quality (decompress what was stored).
-        let restored = coord.load(&report.to_container())?;
+        // Verify in-situ output quality by reading the step file back
+        // through the pread-backed reader.
+        let reader = ContainerReader::open(&path)?;
+        let restored = coord.load_reader(&reader)?;
+        std::fs::remove_file(&path).ok();
         let mut worst = (0.0f64, 0.0f64);
         for (orig, rest) in fields.iter().zip(&restored) {
             let vr = orig.value_range();
@@ -135,11 +154,15 @@ fn main() -> adaptivec::Result<()> {
         );
     }
     println!(
-        "\naccumulated: {:.1} MB raw -> {:.1} MB stored (ratio {:.2})",
+        "\naccumulated: {:.1} MB raw -> {:.1} MB stored (ratio {:.2}); \
+         peak in-memory payload {:.1} KB vs {:.1} KB avg stored per step",
         total_raw as f64 / 1e6,
         total_stored as f64 / 1e6,
-        total_raw as f64 / total_stored as f64
+        total_raw as f64 / total_stored as f64,
+        peak_payload as f64 / 1e3,
+        total_stored as f64 / outputs.max(1) as f64 / 1e3
     );
+    std::fs::remove_dir_all(&tmp).ok();
     println!("insitu_simulation OK — all bounds verified");
     Ok(())
 }

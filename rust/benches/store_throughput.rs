@@ -13,7 +13,9 @@
 //! for the perf trajectory.
 
 use adaptivec::baseline::Policy;
-use adaptivec::bench_util::{bench, iters_override, scale_override, JsonReport, Table};
+use adaptivec::bench_util::{
+    bench, bytes_h, iters_override, scale_override, speedup, JsonReport, Table,
+};
 use adaptivec::coordinator::store::ContainerReader;
 use adaptivec::coordinator::Coordinator;
 use adaptivec::data::Dataset;
@@ -105,6 +107,82 @@ fn main() {
         format!("{:.2}", raw as f64 / tm.mean_secs() / 1e9),
     ]);
     t.print("store_throughput — seekable v2 decode paths");
+
+    // --- write: buffered build-then-write vs streamed sink ----------
+    let tmp = std::env::temp_dir().join("adaptivec_store_throughput_bench");
+    std::fs::create_dir_all(&tmp).unwrap();
+    let buf_path = tmp.join("buffered.adaptivec2");
+    let stream_path = tmp.join("streamed.adaptivec2");
+    let mut t = Table::new(&["write path", "time", "peak payload", "vs buffered"]);
+
+    let tm_buffered = bench(0, iters_override(2), || {
+        let rep = coord.run_chunked(&fields, Policy::RateDistortion, eb, 64 * 1024).unwrap();
+        rep.to_container().write_file(&buf_path).unwrap();
+    });
+    json.record("v2_write_buffered", tm_buffered);
+    t.row(&[
+        "buffered (run_chunked + write_file)".into(),
+        format!("{tm_buffered}"),
+        bytes_h(reader.stored_bytes()),
+        "1.00x".into(),
+    ]);
+
+    let mut peak = 0u64;
+    let tm_streamed = bench(0, iters_override(2), || {
+        let sink = std::io::BufWriter::new(std::fs::File::create(&stream_path).unwrap());
+        let (srep, _) = coord
+            .run_chunked_to(&fields, Policy::RateDistortion, eb, 64 * 1024, sink)
+            .unwrap();
+        peak = srep.peak_payload_bytes;
+    });
+    json.record("v2_write_streamed", tm_streamed);
+    t.row(&[
+        "streamed (run_chunked_to)".into(),
+        format!("{tm_streamed}"),
+        bytes_h(peak),
+        speedup(&tm_buffered, &tm_streamed),
+    ]);
+    t.print("store_throughput — streamed vs buffered write");
+
+    // The two paths must produce byte-identical containers.
+    let streamed_bytes = std::fs::read(&stream_path).unwrap();
+    assert!(
+        streamed_bytes == std::fs::read(&buf_path).unwrap(),
+        "streamed and buffered containers diverged"
+    );
+
+    // --- read: in-memory reader vs pread-backed file reader ---------
+    let mut t = Table::new(&["read path", "time", "vs in-memory"]);
+    let tm_slurp = bench(1, iters_override(5), || {
+        ContainerReader::from_bytes(std::fs::read(&stream_path).unwrap()).unwrap()
+    });
+    json.record("v2_open_slurp", tm_slurp);
+    t.row(&["open: slurp + parse".into(), format!("{tm_slurp}"), "1.00x".into()]);
+    let tm_open = bench(1, iters_override(5), || ContainerReader::open(&stream_path).unwrap());
+    json.record("v2_open_index_only_pread", tm_open);
+    t.row(&[
+        "open: index-only pread".into(),
+        format!("{tm_open}"),
+        speedup(&tm_slurp, &tm_open),
+    ]);
+
+    let tm_mem_field = bench(1, iters_override(5), || coord.load_field(&reader, &target).unwrap());
+    t.row(&[
+        format!("load_field '{target}' (in-memory)"),
+        format!("{tm_mem_field}"),
+        "1.00x".into(),
+    ]);
+    let file_reader = ContainerReader::open(&stream_path).unwrap();
+    let tm_pread_field =
+        bench(1, iters_override(5), || coord.load_field(&file_reader, &target).unwrap());
+    json.record("v2_partial_decode_streamed_pread", tm_pread_field);
+    t.row(&[
+        format!("load_field '{target}' (pread file)"),
+        format!("{tm_pread_field}"),
+        speedup(&tm_mem_field, &tm_pread_field),
+    ]);
+    t.print("store_throughput — pread-backed partial reads");
+    std::fs::remove_dir_all(&tmp).ok();
 
     json.write_env().expect("write bench JSON");
 }

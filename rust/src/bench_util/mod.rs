@@ -193,6 +193,27 @@ pub fn print_series(title: &str, x_label: &str, x: &[String], series: &[(&str, V
     t.print(title);
 }
 
+/// Relative speed of `new` vs `baseline` as a table cell, e.g.
+/// `"1.73x"` (>1 = `new` is faster).
+pub fn speedup(baseline: &Timing, new: &Timing) -> String {
+    let n = new.mean.as_secs_f64();
+    if n <= 0.0 {
+        return "-".into();
+    }
+    format!("{:.2}x", baseline.mean.as_secs_f64() / n)
+}
+
+/// Human-readable byte count (KiB/MiB granularity for bench tables).
+pub fn bytes_h(b: u64) -> String {
+    if b >= 1 << 20 {
+        format!("{:.1} MiB", b as f64 / (1u64 << 20) as f64)
+    } else if b >= 1 << 10 {
+        format!("{:.1} KiB", b as f64 / 1024.0)
+    } else {
+        format!("{b} B")
+    }
+}
+
 /// Format helpers.
 pub fn pct(x: f64) -> String {
     format!("{:+.1}%", x)
@@ -250,6 +271,20 @@ mod tests {
         assert!(json.contains("\"iters\": 3"), "{json}");
         // Exactly one separating comma between the two records.
         assert_eq!(json.matches("},").count(), 1, "{json}");
+    }
+
+    #[test]
+    fn speedup_and_bytes_format() {
+        let mk = |ms: u64| Timing {
+            mean: Duration::from_millis(ms),
+            std_dev: Duration::ZERO,
+            iters: 1,
+        };
+        assert_eq!(speedup(&mk(200), &mk(100)), "2.00x");
+        assert_eq!(speedup(&mk(100), &mk(0)), "-");
+        assert_eq!(bytes_h(512), "512 B");
+        assert_eq!(bytes_h(2048), "2.0 KiB");
+        assert_eq!(bytes_h(3 << 20), "3.0 MiB");
     }
 
     #[test]

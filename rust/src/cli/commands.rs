@@ -27,8 +27,9 @@ COMMANDS:
               [--policy ours|sz|zfp|dct|eb|optimum|baseline] [--workers N]
               [--out FILE] [--seed N] [--rsp 0.05] [--chunk-elems N]
               [--codecs sz,zfp,dct] [--chunk-prior N]
-              (--chunk-elems > 0 writes a chunked, seekable v2
-               container; chunks smaller than --chunk-prior (default
+              (--chunk-elems > 0 streams a chunked, seekable v2
+               container straight to disk — the full payload is never
+               held in memory; chunks smaller than --chunk-prior (default
                65536 elems) share one field-level selection, larger
                chunks select independently — --chunk-prior 0 forces
                per-chunk selection everywhere; --codecs restricts the
@@ -107,22 +108,43 @@ fn cmd_compress(argv: &[String]) -> Result<()> {
     let registry = AutoSelector::new(cfg).registry();
     let t0 = std::time::Instant::now();
     if chunk_elems > 0 {
-        // Chunked v2 path: seekable index; chunks below the prior
-        // threshold share a field-level selection (DESIGN.md §11).
-        let report = coord.run_chunked(&fields, policy, eb, chunk_elems)?;
+        // Chunked v2 path, streamed: compressed chunks flow straight
+        // into the output file through the index-first writer, so the
+        // full payload is never resident (chunks below the prior
+        // threshold still share a field-level selection, DESIGN.md §11).
+        // Stream into a sibling temp file (pid-suffixed so concurrent
+        // runs against the same --out cannot interleave) and rename on
+        // success, so a mid-run failure can neither truncate a
+        // pre-existing archive at `out` nor leave a half-written
+        // container behind.
+        let tmp_out = format!("{out}.{}.tmp", std::process::id());
+        let sink = std::io::BufWriter::new(std::fs::File::create(&tmp_out)?);
+        let (report, _) = match coord.run_chunked_to(&fields, policy, eb, chunk_elems, sink) {
+            Ok(v) => v,
+            Err(e) => {
+                std::fs::remove_file(&tmp_out).ok();
+                return Err(e);
+            }
+        };
+        if let Err(e) = std::fs::rename(&tmp_out, &out) {
+            std::fs::remove_file(&tmp_out).ok();
+            return Err(e.into());
+        }
         let wall = t0.elapsed();
-        report.to_container().write_file(&out)?;
         let chunks: usize = report.fields.iter().map(|f| f.chunks.len()).sum();
         println!(
-            "{} fields / {chunks} chunks (v2, {chunk_elems} elems/chunk), policy {}, \
+            "{} fields / {chunks} chunks (v2 streamed, {chunk_elems} elems/chunk), policy {}, \
              eb_rel {eb:.0e}: ratio {:.2} ({} -> {} bytes), picks {}, \
-             wall {:.2}s -> {out}",
+             peak payload write buffer {} B vs {} B buffered ({:.1}%), wall {:.2}s -> {out}",
             report.fields.len(),
             policy.name(),
             report.overall_ratio(),
             report.total_raw_bytes(),
             report.total_stored_bytes(),
             report.codec_counts().summary(&registry),
+            report.peak_payload_bytes,
+            report.total_stored_bytes(),
+            report.peak_payload_frac() * 100.0,
             wall.as_secs_f64(),
         );
     } else {
@@ -151,23 +173,40 @@ fn cmd_decompress(argv: &[String]) -> Result<()> {
     let outdir = args.get("outdir").unwrap_or(".").to_string();
     let field = args.get("field").map(str::to_string);
     args.check_unknown()?;
+    // `open` parses only the index — chunk payloads are pread on
+    // demand, a window of fields at a time, so peak memory is one
+    // decode window, not the whole archive.
     let reader = ContainerReader::open(&input)?;
     let coord = Coordinator::default();
-    // --field does a partial, index-driven decode of just that field.
-    let fields = match &field {
-        Some(name) => vec![coord.load_field(&reader, name)?],
-        None => coord.load_reader(&reader)?,
-    };
     std::fs::create_dir_all(&outdir)?;
-    for f in &fields {
+    fn write_field(outdir: &str, f: &Field) -> Result<()> {
+        use std::io::Write as _;
         let path = format!("{outdir}/{}.f32", f.name);
-        let mut bytes = Vec::with_capacity(f.raw_bytes());
+        let mut w = std::io::BufWriter::new(std::fs::File::create(&path)?);
         for v in &f.data {
-            bytes.extend_from_slice(&v.to_le_bytes());
+            w.write_all(&v.to_le_bytes())?;
         }
-        std::fs::write(&path, &bytes)?;
+        w.flush()?;
+        Ok(())
     }
-    println!("restored {} fields to {outdir}/", fields.len());
+    let mut restored = 0usize;
+    match &field {
+        // --field does a partial, index-driven decode of just that field.
+        Some(name) => {
+            write_field(&outdir, &coord.load_field(&reader, name)?)?;
+            restored += 1;
+        }
+        None => coord.load_fields_streaming(&reader, |f| {
+            write_field(&outdir, &f)?;
+            restored += 1;
+            Ok(())
+        })?,
+    }
+    println!(
+        "restored {restored} fields to {outdir}/ ({} index bytes read up front of {}-byte container)",
+        reader.index_bytes(),
+        reader.source_len()
+    );
     Ok(())
 }
 
@@ -271,15 +310,41 @@ fn cmd_iobench(argv: &[String]) -> Result<()> {
         let stored = report.total_stored_bytes() as f64;
         let comp_t = report.total_compress_time().as_secs_f64()
             + report.total_estimate_time().as_secs_f64();
-        per_policy.push((raw, stored, comp_t));
+        per_policy.push((p, raw, stored, comp_t));
     }
     for &p in &PROC_SWEEP {
         print!("{p:>6}");
-        for &(raw, stored, comp_t) in &per_policy {
+        for &(_, raw, stored, comp_t) in &per_policy {
             let tput = tm.store_throughput(p, raw, stored, comp_t);
             print!(" {:>10.2}", tput / 1e9);
         }
         println!();
+    }
+
+    // Partial-load comparison (v2 index path): reconstructing one
+    // field by slurping the whole container vs pread-ing only that
+    // field's chunk ranges.
+    let n = fields.len().max(1) as f64;
+    let &(_, raw, stored, _) = per_policy
+        .iter()
+        .find(|(p, ..)| *p == Policy::RateDistortion)
+        .expect("RateDistortion is in the policy sweep");
+    println!(
+        "\npartial load of 1/{} fields (modeled, GB/s of raw): {:>10} {:>10}",
+        fields.len(),
+        "slurp",
+        "pread"
+    );
+    for &p in &[1usize, 64, 1024] {
+        let slurp = tm.load_throughput(p, raw / n, stored, 0.0);
+        let pread = tm.partial_load_throughput(p, raw / n, stored / n, 4, 0.0);
+        let label = format!("p={p}");
+        println!(
+            "{label:>42} {:>10.2} {:>10.2}  ({:.1}x)",
+            slurp / 1e9,
+            pread / 1e9,
+            pread / slurp.max(f64::MIN_POSITIVE)
+        );
     }
     Ok(())
 }
@@ -291,12 +356,14 @@ fn cmd_info(argv: &[String]) -> Result<()> {
     let r = ContainerReader::open(&input)?;
     let registry = AutoSelector::default().registry();
     println!(
-        "{input}: container v{}, {} fields, {} raw -> {} stored (ratio {:.2})",
+        "{input}: container v{}, {} fields, {} raw -> {} stored (ratio {:.2}); \
+         answered from {} index bytes, payload untouched",
         r.version,
         r.fields.len(),
         r.raw_bytes(),
         r.stored_bytes(),
-        r.raw_bytes() as f64 / r.stored_bytes() as f64
+        r.raw_bytes() as f64 / r.stored_bytes() as f64,
+        r.index_bytes()
     );
     for f in &r.fields {
         // Single-chunk fields show their codec; chunked fields the count.
@@ -325,7 +392,13 @@ fn cmd_inspect(argv: &[String]) -> Result<()> {
     args.check_unknown()?;
     let r = ContainerReader::open(&input)?;
     let registry = AutoSelector::default().registry();
-    println!("{input}: container v{}, {} fields", r.version, r.fields.len());
+    println!(
+        "{input}: container v{}, {} fields (index-only open: {} of {} bytes read)",
+        r.version,
+        r.fields.len(),
+        r.index_bytes(),
+        r.source_len()
+    );
     // Per-codec byte totals across the whole container.
     let mut totals: std::collections::BTreeMap<u8, (usize, u64)> = Default::default();
     for f in &r.fields {
@@ -435,6 +508,20 @@ mod tests {
         )
         .unwrap();
         assert!(outdir.join(format!("{name}.f32")).is_file());
+        // Full decompress walks the container field by field through
+        // the pread-backed reader.
+        let outdir_all = tmp.join("restored_all");
+        run(
+            "decompress",
+            &[
+                "--in".to_string(),
+                out.to_str().unwrap().to_string(),
+                "--outdir".to_string(),
+                outdir_all.to_str().unwrap().to_string(),
+            ],
+        )
+        .unwrap();
+        assert!(outdir_all.join(format!("{name}.f32")).is_file());
         std::fs::remove_dir_all(&tmp).ok();
     }
 

@@ -28,7 +28,15 @@ pub fn read_u64(buf: &[u8], pos: &mut usize) -> Result<u64> {
         if shift >= 64 {
             return Err(Error::Corrupt("varint: overflow".into()));
         }
-        v |= ((byte & 0x7F) as u64) << shift;
+        let bits = (byte & 0x7F) as u64;
+        // Payload bits past bit 63 would be shifted out silently,
+        // letting distinct corrupt encodings decode to the same value —
+        // reject anything that doesn't fit the remaining width (only
+        // reachable on the 10th byte, where 1 payload bit remains).
+        if shift > 57 && (bits >> (64 - shift)) != 0 {
+            return Err(Error::Corrupt("varint: overflow".into()));
+        }
+        v |= bits << shift;
         if byte & 0x80 == 0 {
             return Ok(v);
         }
@@ -109,6 +117,26 @@ mod tests {
         buf.pop();
         let mut pos = 0;
         assert!(read_u64(&buf, &mut pos).is_err());
+    }
+
+    #[test]
+    fn ten_byte_varint_rejects_out_of_width_bits() {
+        // u64::MAX is the canonical 10-byte case: nine continuation
+        // bytes carrying 63 bits + a final 0x01 carrying bit 63.
+        let mut buf = Vec::new();
+        write_u64(&mut buf, u64::MAX);
+        assert_eq!(buf.len(), 10);
+        assert_eq!(buf[9], 0x01);
+        let mut pos = 0;
+        assert_eq!(read_u64(&buf, &mut pos).unwrap(), u64::MAX);
+        // 10th-byte payload bits above bit 63 used to be shifted out
+        // silently (aliasing distinct encodings); now they are errors.
+        for tenth in [0x02u8, 0x03, 0x42, 0x7F] {
+            let mut bad = buf.clone();
+            bad[9] = tenth;
+            let mut pos = 0;
+            assert!(read_u64(&bad, &mut pos).is_err(), "10th byte {tenth:#x} accepted");
+        }
     }
 
     #[test]

@@ -67,6 +67,18 @@ struct ChunkJob<'a> {
     prior: Option<router::FieldPrior>,
 }
 
+impl ChunkJob<'_> {
+    /// Materialize this chunk as its own [`Field`] (copies the span).
+    fn chunk_field(&self) -> Field {
+        let end = self.start + self.dims.len();
+        Field::new(
+            format!("{}#{}", self.field.name, self.chunk_idx),
+            self.dims,
+            self.field.data[self.start..end].to_vec(),
+        )
+    }
+}
+
 impl Coordinator {
     pub fn new(selector_cfg: SelectorConfig, workers: usize) -> Self {
         Coordinator {
@@ -103,6 +115,34 @@ impl Coordinator {
         chunk_elems: usize,
     ) -> Result<stats::ChunkedRunReport> {
         let router = router::Router::new(self.selector_cfg, policy, eb_rel);
+        let (jobs, chunks_per_field) = self.chunk_jobs(&router, fields, chunk_elems)?;
+        let results = pool::run_jobs(self.workers, &jobs, |j| {
+            router.process_chunk(&j.chunk_field(), j.chunk_idx, j.prior.as_ref())
+        })?;
+        // Regroup chunk results per field, preserving order.
+        let mut it = results.into_iter();
+        let mut out = Vec::with_capacity(fields.len());
+        for (f, n) in fields.iter().zip(chunks_per_field) {
+            out.push(stats::ChunkedFieldResult {
+                name: f.name.clone(),
+                dims: f.dims,
+                chunk_elems,
+                chunks: it.by_ref().take(n).collect(),
+            });
+        }
+        Ok(stats::ChunkedRunReport { policy, eb_rel, fields: out })
+    }
+
+    /// Split every field into chunk jobs and compute the field-level
+    /// selection priors (shared by `run_chunked` and `run_chunked_to`).
+    /// Returns the flattened jobs in index order plus the chunk count
+    /// of each field.
+    fn chunk_jobs<'a>(
+        &self,
+        router: &router::Router,
+        fields: &'a [Field],
+        chunk_elems: usize,
+    ) -> Result<(Vec<ChunkJob<'a>>, Vec<usize>)> {
         // The prior pays off only when a field actually splits and its
         // chunks are small; whole-field "chunks" estimate once anyway,
         // on their own data. Field-level estimation runs on the worker
@@ -112,7 +152,7 @@ impl Coordinator {
             fields.iter().map(|f| store::chunk_spans(f.dims, chunk_elems)).collect();
         // Only RateDistortion estimates per chunk, so only it has a
         // prior to share — skip the pool phase for every other policy.
-        let prior_eligible = policy == Policy::RateDistortion
+        let prior_eligible = router.policy == Policy::RateDistortion
             && chunk_elems < self.chunk_prior_elems
             && self.chunk_prior_elems > 0;
         let prior_fields: Vec<&Field> = fields
@@ -137,27 +177,132 @@ impl Coordinator {
                 jobs.push(ChunkJob { field: f, chunk_idx, start, dims, prior });
             }
         }
-        let results = pool::run_jobs(self.workers, &jobs, |j| {
-            let end = j.start + j.dims.len();
-            let chunk = Field::new(
-                format!("{}#{}", j.field.name, j.chunk_idx),
-                j.dims,
-                j.field.data[j.start..end].to_vec(),
-            );
-            router.process_chunk(&chunk, j.chunk_idx, j.prior.as_ref())
+        Ok((jobs, chunks_per_field))
+    }
+
+    /// Chunked compression streamed straight to an [`std::io::Write`]
+    /// sink: the container lands on disk without the full payload ever
+    /// being resident. Output is byte-identical to
+    /// `run_chunked(...).to_container().to_bytes()`.
+    ///
+    /// Two-pass, index-first protocol (DESIGN.md §6): pass 1 decides
+    /// and compresses every chunk for its *size only* (payloads are
+    /// dropped as soon as they are measured), which lets the
+    /// [`store::ContainerV2Writer`] emit the complete index up front;
+    /// pass 2 regenerates each stream from its pinned
+    /// [`router::Decision`] in bounded parallel batches and appends it
+    /// in index order. Codecs are deterministic (DESIGN.md §7), so the
+    /// regenerated bytes match the declared sizes — the writer verifies
+    /// every length. Peak payload memory is the in-flight batch, not
+    /// the archive; the report records the observed peak.
+    pub fn run_chunked_to<W: std::io::Write>(
+        &self,
+        fields: &[Field],
+        policy: Policy,
+        eb_rel: f64,
+        chunk_elems: usize,
+        sink: W,
+    ) -> Result<(stats::StreamedRunReport, W)> {
+        struct Sizing {
+            decision: router::Decision,
+            stream_len: u64,
+            raw_bytes: usize,
+            compress_time: std::time::Duration,
+        }
+        let router = router::Router::new(self.selector_cfg, policy, eb_rel);
+        let (jobs, chunks_per_field) = self.chunk_jobs(&router, fields, chunk_elems)?;
+
+        // Pass 1 — decide + compress for sizes; payloads are dropped
+        // immediately, so peak memory stays O(workers × chunk).
+        let sizings = pool::run_jobs(self.workers, &jobs, |j| {
+            let chunk = j.chunk_field();
+            let decision = router.decide_chunk(&chunk, j.chunk_idx, j.prior.as_ref())?;
+            let t0 = std::time::Instant::now();
+            let stream = router.compress_decided(&chunk, &decision)?;
+            Ok(Sizing {
+                decision,
+                stream_len: stream.len() as u64,
+                raw_bytes: chunk.raw_bytes(),
+                compress_time: t0.elapsed(),
+            })
         })?;
-        // Regroup chunk results per field, preserving order.
-        let mut it = results.into_iter();
+
+        // Every chunk's size is now known: declare the layout and emit
+        // magic + index before the first payload byte.
+        let mut decls = Vec::with_capacity(fields.len());
+        {
+            let mut it = sizings.iter();
+            for (f, &n) in fields.iter().zip(&chunks_per_field) {
+                decls.push(store::FieldDecl {
+                    name: f.name.clone(),
+                    dims: f.dims,
+                    raw_bytes: f.raw_bytes() as u64,
+                    chunk_elems: chunk_elems as u64,
+                    chunks: it
+                        .by_ref()
+                        .take(n)
+                        .map(|s| store::ChunkDecl {
+                            selection: s.decision.selection(),
+                            len: s.stream_len,
+                        })
+                        .collect(),
+                });
+            }
+        }
+        let mut writer = store::ContainerV2Writer::new(sink, &decls)?;
+
+        // Pass 2 — regenerate streams in bounded batches, appending
+        // each batch in index order as its workers finish.
+        let window = self.workers.max(1) * 2;
+        let mut peak_payload = 0u64;
+        let mut recompress_time = std::time::Duration::ZERO;
+        let paired: Vec<(&ChunkJob, &Sizing)> = jobs.iter().zip(&sizings).collect();
+        for batch in paired.chunks(window) {
+            let streams = pool::run_jobs(self.workers, batch, |&(j, s)| {
+                let chunk = j.chunk_field();
+                let t0 = std::time::Instant::now();
+                let stream = router.compress_decided(&chunk, &s.decision)?;
+                Ok((stream, t0.elapsed()))
+            })?;
+            let in_flight: u64 = streams.iter().map(|(s, _)| s.len() as u64).sum();
+            peak_payload = peak_payload.max(in_flight);
+            for (stream, dur) in streams {
+                recompress_time += dur;
+                writer.write_chunk(&stream)?;
+            }
+        }
+        drop(paired);
+        let sink = writer.finish()?;
+
+        // Summaries regrouped per field, as run_chunked does.
+        let mut it = sizings.into_iter();
         let mut out = Vec::with_capacity(fields.len());
         for (f, n) in fields.iter().zip(chunks_per_field) {
-            out.push(stats::ChunkedFieldResult {
+            out.push(stats::StreamedFieldSummary {
                 name: f.name.clone(),
                 dims: f.dims,
                 chunk_elems,
-                chunks: it.by_ref().take(n).collect(),
+                chunks: it
+                    .by_ref()
+                    .take(n)
+                    .map(|s| stats::StreamedChunkStat {
+                        selection: s.decision.selection(),
+                        stored_bytes: s.stream_len,
+                        raw_bytes: s.raw_bytes as u64,
+                        estimate_time: s.decision.estimate_time,
+                        compress_time: s.compress_time,
+                    })
+                    .collect(),
             });
         }
-        Ok(stats::ChunkedRunReport { policy, eb_rel, fields: out })
+        let report = stats::StreamedRunReport {
+            policy,
+            eb_rel,
+            fields: out,
+            peak_payload_bytes: peak_payload,
+            recompress_time,
+        };
+        Ok((report, sink))
     }
 
     /// Decompress every field of a v1 container back to raw data.
@@ -174,25 +319,49 @@ impl Coordinator {
     }
 
     /// Decode every field of an indexed container (v1 or v2), one pool
-    /// job per chunk.
+    /// job per chunk. Thin wrapper over
+    /// [`Coordinator::load_fields_streaming`] that collects the whole
+    /// archive.
     pub fn load_reader(&self, reader: &store::ContainerReader) -> Result<Vec<Field>> {
+        let mut out = Vec::with_capacity(reader.fields.len());
+        self.load_fields_streaming(reader, |f| {
+            out.push(f);
+            Ok(())
+        })?;
+        Ok(out)
+    }
+
+    /// Bounded-memory full decode: decode the container in windows of
+    /// `workers` fields — chunks of the whole window run in parallel
+    /// on the pool, so single-chunk (v1) fields still decode
+    /// `workers`-wide — and hand each assembled [`Field`] to `emit` as
+    /// soon as it is complete. Peak residency is one window of
+    /// decoded fields, not the archive; the registry is built once.
+    pub fn load_fields_streaming(
+        &self,
+        reader: &store::ContainerReader,
+        mut emit: impl FnMut(Field) -> Result<()>,
+    ) -> Result<()> {
         let registry = AutoSelector::new(self.selector_cfg).registry();
-        let mut jobs = Vec::new();
-        for (fi, f) in reader.fields.iter().enumerate() {
-            for ci in 0..f.chunks.len() {
-                jobs.push((fi, ci));
+        let field_indices: Vec<usize> = (0..reader.fields.len()).collect();
+        for window in field_indices.chunks(self.workers.max(1)) {
+            let mut jobs = Vec::new();
+            for &fi in window {
+                for ci in 0..reader.fields[fi].chunks.len() {
+                    jobs.push((fi, ci));
+                }
+            }
+            let decoded = pool::run_jobs(self.workers, &jobs, |&(fi, ci)| {
+                reader.decode_chunk(&registry, fi, ci)
+            })?;
+            let mut it = decoded.into_iter();
+            for &fi in window {
+                let info = &reader.fields[fi];
+                let parts: Vec<_> = it.by_ref().take(info.chunks.len()).collect();
+                emit(store::assemble_field(info, parts)?)?;
             }
         }
-        let decoded = pool::run_jobs(self.workers, &jobs, |&(fi, ci)| {
-            reader.decode_chunk(&registry, fi, ci)
-        })?;
-        let mut it = decoded.into_iter();
-        let mut out = Vec::with_capacity(reader.fields.len());
-        for info in &reader.fields {
-            let parts: Vec<_> = it.by_ref().take(info.chunks.len()).collect();
-            out.push(store::assemble_field(info, parts)?);
-        }
-        Ok(out)
+        Ok(())
     }
 
     /// Partial, index-driven decode: reconstruct one field by name
@@ -319,6 +488,88 @@ mod tests {
         let stats = crate::metrics::error_stats(&target.data, &got.data);
         assert!(stats.max_abs_err <= 1e-3 * vr * (1.0 + 1e-6));
         assert!(coord.load_field(&reader, "missing").is_err());
+    }
+
+    #[test]
+    fn run_chunked_to_is_byte_identical_to_buffered_path() {
+        let coord = Coordinator::new(SelectorConfig::default(), 4);
+        let fields = small_fields(3);
+        for chunk_elems in [0usize, 2048] {
+            let buffered = coord
+                .run_chunked(&fields, Policy::RateDistortion, 1e-3, chunk_elems)
+                .unwrap()
+                .to_container()
+                .to_bytes();
+            let (report, streamed) = coord
+                .run_chunked_to(&fields, Policy::RateDistortion, 1e-3, chunk_elems, Vec::new())
+                .unwrap();
+            assert_eq!(streamed, buffered, "chunk_elems {chunk_elems}");
+            assert_eq!(report.total_stored_bytes(), {
+                let r = store::ContainerReader::from_bytes(buffered).unwrap();
+                r.stored_bytes()
+            });
+            // The streaming window never held the whole payload (for
+            // the multi-chunk case with more chunks than the window).
+            if chunk_elems > 0 {
+                assert!(report.peak_payload_bytes <= report.total_stored_bytes());
+                assert!(report.peak_payload_bytes > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn load_fields_streaming_matches_load_reader() {
+        let coord = Coordinator::new(SelectorConfig::default(), 2);
+        let fields = small_fields(5);
+        for (version, bytes) in [
+            (1u8, {
+                let r = coord.run(&fields, Policy::RateDistortion, 1e-3).unwrap();
+                r.to_container().to_bytes()
+            }),
+            (2u8, {
+                let r = coord.run_chunked(&fields, Policy::RateDistortion, 1e-3, 2048).unwrap();
+                r.to_container().to_bytes()
+            }),
+        ] {
+            let reader = store::ContainerReader::from_bytes(bytes).unwrap();
+            assert_eq!(reader.version, version);
+            let all = coord.load_reader(&reader).unwrap();
+            let mut streamed = Vec::new();
+            coord
+                .load_fields_streaming(&reader, |f| {
+                    streamed.push(f);
+                    Ok(())
+                })
+                .unwrap();
+            assert_eq!(streamed.len(), all.len(), "v{version}");
+            for (a, b) in all.iter().zip(&streamed) {
+                assert_eq!(a.name, b.name, "v{version}");
+                assert_eq!(a.dims, b.dims, "v{version}");
+                assert_eq!(a.data, b.data, "v{version}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_chunked_to_file_roundtrips_through_pread_reader() {
+        let coord = Coordinator::new(SelectorConfig::default(), 2);
+        let fields = small_fields(2);
+        let path = std::env::temp_dir().join("adaptivec_run_chunked_to_test.adaptivec2");
+        let sink = std::io::BufWriter::new(std::fs::File::create(&path).unwrap());
+        let (report, _) = coord
+            .run_chunked_to(&fields, Policy::RateDistortion, 1e-3, 2048, sink)
+            .unwrap();
+        assert!(report.total_stored_bytes() > 0);
+        let reader = store::ContainerReader::open(&path).unwrap();
+        assert_eq!(reader.version, 2);
+        let restored = coord.load_reader(&reader).unwrap();
+        for (orig, rest) in fields.iter().zip(&restored) {
+            assert_eq!(orig.dims, rest.dims);
+            let vr = orig.value_range();
+            let stats = crate::metrics::error_stats(&orig.data, &rest.data);
+            assert!(stats.max_abs_err <= 1e-3 * vr * (1.0 + 1e-6), "{}", orig.name);
+        }
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

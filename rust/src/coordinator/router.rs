@@ -23,6 +23,28 @@ pub struct FieldPrior {
     pub estimate_time: Duration,
 }
 
+/// One selection decision: which codec at what absolute bound —
+/// everything needed to (re)produce a chunk's exact byte stream. The
+/// streaming writer's two-pass protocol relies on this: pass 1 decides
+/// and sizes, pass 2 regenerates the identical stream from the pinned
+/// decision without re-estimating.
+#[derive(Clone, Copy, Debug)]
+pub struct Decision {
+    /// `None` = raw passthrough (no selection ran; bare f32 LE bytes).
+    pub choice: Option<Choice>,
+    /// Absolute error bound handed to the codec (ignored by raw).
+    pub eb_abs: f64,
+    /// Wall time of the estimation that produced this decision.
+    pub estimate_time: Duration,
+}
+
+impl Decision {
+    /// On-disk selection byte for this decision.
+    pub fn selection(&self) -> u8 {
+        self.choice.unwrap_or(Choice::Raw).id()
+    }
+}
+
 /// Stateless router: policy + bound, shared across workers. The codec
 /// registry is built once here and dispatched through concurrently —
 /// per-chunk jobs must not pay a registry construction each.
@@ -41,12 +63,6 @@ impl Router {
         Router { selector, policy, eb_rel, registry }
     }
 
-    /// Compress through this router's registry: selection byte + bare
-    /// stream (same framing as `AutoSelector::compress_forced`).
-    fn encode(&self, field: &Field, eb: f64, choice: Choice) -> Result<Vec<u8>> {
-        self.registry.encode(choice, &field.data, field.dims, eb)
-    }
-
     /// Compute the field-level selection prior for the chunked path,
     /// if this policy has one. Only `RateDistortion` estimates per
     /// chunk, so only it benefits from sharing a field-level sampled
@@ -63,50 +79,19 @@ impl Router {
         Ok(Some(FieldPrior { choice, estimates, estimate_time: t0.elapsed() }))
     }
 
-    /// Process one chunk of a field. With a prior, the chunk inherits
-    /// the field-level choice and bound and skips estimation entirely;
-    /// the prior's (one-off) estimation time is charged to chunk 0.
-    pub fn process_chunk(
-        &self,
-        chunk: &Field,
-        chunk_idx: usize,
-        prior: Option<&FieldPrior>,
-    ) -> Result<FieldResult> {
-        let Some(p) = prior else { return self.process(chunk) };
-        let t0 = Instant::now();
-        let payload = self.encode(chunk, p.estimates.bound_for(p.choice), p.choice)?;
-        Ok(FieldResult {
-            name: chunk.name.clone(),
-            choice: Some(p.choice),
-            payload,
-            raw_bytes: chunk.raw_bytes(),
-            estimate_time: if chunk_idx == 0 { p.estimate_time } else { Duration::ZERO },
-            compress_time: t0.elapsed(),
-        })
-    }
-
-    /// Process one field under this router's policy.
-    pub fn process(&self, field: &Field) -> Result<FieldResult> {
+    /// Estimation + selection only — no compression. The returned
+    /// [`Decision`] pins (codec, bound), so compressing it later (or
+    /// twice, as the streaming writer's two passes do) reproduces the
+    /// byte-identical stream.
+    pub fn decide(&self, field: &Field) -> Result<Decision> {
         let vr = field.value_range();
         let eb = if vr > 0.0 { self.eb_rel * vr } else { self.eb_rel };
         match self.policy {
             Policy::NoCompression => {
                 // Raw passthrough via the registry's raw codec. The
-                // payload stays *bare* (no selection byte) for v1
+                // stream stays *bare* (no selection byte) for v1
                 // container compatibility; `choice: None` marks it.
-                let t0 = Instant::now();
-                let payload = self
-                    .registry
-                    .get(Choice::Raw.id())?
-                    .compress(&field.data, field.dims, eb)?;
-                Ok(FieldResult {
-                    name: field.name.clone(),
-                    choice: None,
-                    payload,
-                    raw_bytes: field.raw_bytes(),
-                    estimate_time: std::time::Duration::ZERO,
-                    compress_time: t0.elapsed(),
-                })
+                Ok(Decision { choice: None, eb_abs: eb, estimate_time: Duration::ZERO })
             }
             Policy::AlwaysSz | Policy::AlwaysZfp | Policy::AlwaysDct => {
                 let choice = match self.policy {
@@ -114,56 +99,29 @@ impl Router {
                     Policy::AlwaysZfp => Choice::Zfp,
                     _ => Choice::Dct,
                 };
-                let t0 = Instant::now();
-                let payload = self.encode(field, eb, choice)?;
-                Ok(FieldResult {
-                    name: field.name.clone(),
-                    choice: Some(choice),
-                    payload,
-                    raw_bytes: field.raw_bytes(),
-                    estimate_time: std::time::Duration::ZERO,
-                    compress_time: t0.elapsed(),
-                })
+                Ok(Decision { choice: Some(choice), eb_abs: eb, estimate_time: Duration::ZERO })
             }
             Policy::RateDistortion => {
                 let t0 = Instant::now();
                 let (choice, est) = self.selector.select_abs(field, eb, vr)?;
-                let estimate_time = t0.elapsed();
-                let t1 = Instant::now();
-                let payload = self.encode(field, est.bound_for(choice), choice)?;
-                Ok(FieldResult {
-                    name: field.name.clone(),
+                Ok(Decision {
                     choice: Some(choice),
-                    payload,
-                    raw_bytes: field.raw_bytes(),
-                    estimate_time,
-                    compress_time: t1.elapsed(),
+                    eb_abs: est.bound_for(choice),
+                    estimate_time: t0.elapsed(),
                 })
             }
             Policy::ErrorBound => {
                 let t0 = Instant::now();
                 let (choice, _, _) =
                     ebselect::select_by_error_bound(field, eb, self.selector.cfg.r_sp);
-                let estimate_time = t0.elapsed();
-                let t1 = Instant::now();
-                let payload = self.encode(field, eb, choice)?;
-                Ok(FieldResult {
-                    name: field.name.clone(),
-                    choice: Some(choice),
-                    payload,
-                    raw_bytes: field.raw_bytes(),
-                    estimate_time,
-                    compress_time: t1.elapsed(),
-                })
+                Ok(Decision { choice: Some(choice), eb_abs: eb, estimate_time: t0.elapsed() })
             }
             Policy::Optimum => {
                 // Oracle: run both at iso-PSNR, keep the smaller output.
                 let t0 = Instant::now();
                 let (sz_truth, zfp_truth, oracle) =
                     crate::estimator::eval::iso_psnr_truths(field, eb)?;
-                let _ = (sz_truth, zfp_truth);
-                let estimate_time = t0.elapsed();
-                let t1 = Instant::now();
+                let _ = sz_truth;
                 // SZ runs at the iso-PSNR bound; every other codec at
                 // the user bound.
                 let eb_used = if oracle == Choice::Sz
@@ -175,17 +133,82 @@ impl Router {
                 } else {
                     eb
                 };
-                let payload = self.encode(field, eb_used, oracle)?;
-                Ok(FieldResult {
-                    name: field.name.clone(),
+                Ok(Decision {
                     choice: Some(oracle),
-                    payload,
-                    raw_bytes: field.raw_bytes(),
-                    estimate_time,
-                    compress_time: t1.elapsed(),
+                    eb_abs: eb_used,
+                    estimate_time: t0.elapsed(),
                 })
             }
         }
+    }
+
+    /// Decision for one chunk of a field. With a prior, the chunk
+    /// inherits the field-level choice and bound and skips estimation
+    /// entirely; the prior's (one-off) estimation time is charged to
+    /// chunk 0 (DESIGN.md §11).
+    pub fn decide_chunk(
+        &self,
+        chunk: &Field,
+        chunk_idx: usize,
+        prior: Option<&FieldPrior>,
+    ) -> Result<Decision> {
+        let Some(p) = prior else { return self.decide(chunk) };
+        Ok(Decision {
+            choice: Some(p.choice),
+            eb_abs: p.estimates.bound_for(p.choice),
+            estimate_time: if chunk_idx == 0 { p.estimate_time } else { Duration::ZERO },
+        })
+    }
+
+    /// Compress `field` under a pinned decision into a *bare* codec
+    /// stream (no selection byte) — the v2 chunk payload form.
+    /// Deterministic: identical (data, dims, decision) gives identical
+    /// bytes, which the streaming writer's length checks enforce.
+    pub fn compress_decided(&self, field: &Field, d: &Decision) -> Result<Vec<u8>> {
+        self.registry.get(d.selection())?.compress(&field.data, field.dims, d.eb_abs)
+    }
+
+    /// Process one chunk of a field: decision + compression + v1-style
+    /// self-describing framing.
+    pub fn process_chunk(
+        &self,
+        chunk: &Field,
+        chunk_idx: usize,
+        prior: Option<&FieldPrior>,
+    ) -> Result<FieldResult> {
+        let d = self.decide_chunk(chunk, chunk_idx, prior)?;
+        self.finish(chunk, &d)
+    }
+
+    /// Process one field under this router's policy.
+    pub fn process(&self, field: &Field) -> Result<FieldResult> {
+        let d = self.decide(field)?;
+        self.finish(field, &d)
+    }
+
+    /// Compress under `d` and frame the payload the way
+    /// [`FieldResult`] carries it: selection byte + stream for
+    /// compressed entries, bare bytes for raw passthrough.
+    fn finish(&self, field: &Field, d: &Decision) -> Result<FieldResult> {
+        let t0 = Instant::now();
+        let stream = self.compress_decided(field, d)?;
+        let payload = match d.choice {
+            Some(c) => {
+                let mut p = Vec::with_capacity(stream.len() + 1);
+                p.push(c.id());
+                p.extend_from_slice(&stream);
+                p
+            }
+            None => stream,
+        };
+        Ok(FieldResult {
+            name: field.name.clone(),
+            choice: d.choice,
+            payload,
+            raw_bytes: field.raw_bytes(),
+            estimate_time: d.estimate_time,
+            compress_time: t0.elapsed(),
+        })
     }
 }
 

@@ -226,6 +226,110 @@ impl ChunkedRunReport {
     }
 }
 
+/// Per-chunk record of one *streamed* run: decision and sizes only —
+/// the payload bytes went straight to the sink and were never
+/// retained.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamedChunkStat {
+    /// Selection byte recorded in the container index.
+    pub selection: u8,
+    /// Bare-stream bytes written for this chunk.
+    pub stored_bytes: u64,
+    pub raw_bytes: u64,
+    pub estimate_time: Duration,
+    /// First-pass (sizing) compression time; the second pass's
+    /// regeneration cost is totalled in
+    /// [`StreamedRunReport::recompress_time`].
+    pub compress_time: Duration,
+}
+
+/// Per-field regrouping of [`StreamedChunkStat`]s, in chunk order.
+#[derive(Clone, Debug)]
+pub struct StreamedFieldSummary {
+    pub name: String,
+    pub dims: Dims,
+    pub chunk_elems: usize,
+    pub chunks: Vec<StreamedChunkStat>,
+}
+
+impl StreamedFieldSummary {
+    pub fn raw_bytes(&self) -> u64 {
+        self.chunks.iter().map(|c| c.raw_bytes).sum()
+    }
+
+    pub fn stored_bytes(&self) -> u64 {
+        self.chunks.iter().map(|c| c.stored_bytes).sum()
+    }
+}
+
+/// The outcome of one streaming chunked run
+/// ([`crate::coordinator::Coordinator::run_chunked_to`]): everything
+/// [`ChunkedRunReport`] reports except the payloads themselves, plus
+/// the streaming-specific memory/compute accounting.
+#[derive(Clone, Debug)]
+pub struct StreamedRunReport {
+    pub policy: Policy,
+    pub eb_rel: f64,
+    pub fields: Vec<StreamedFieldSummary>,
+    /// Peak compressed payload bytes resident at once in the *write
+    /// window* (pass 2's bounded batches). Pass 1's transient sizing
+    /// buffers are not counted — they are bounded by
+    /// `workers × largest chunk stream` and dropped as measured — so
+    /// this is the write path's high-water mark, not total process
+    /// residency. Compare against
+    /// [`StreamedRunReport::total_stored_bytes`], which is what the
+    /// buffered `to_bytes` path holds — the delta is the memory the
+    /// streaming protocol saves.
+    pub peak_payload_bytes: u64,
+    /// Second-pass (stream regeneration) compression time — the
+    /// compute price of the two-pass, index-first protocol.
+    pub recompress_time: Duration,
+}
+
+impl StreamedRunReport {
+    pub fn total_raw_bytes(&self) -> u64 {
+        self.fields.iter().map(|f| f.raw_bytes()).sum()
+    }
+
+    pub fn total_stored_bytes(&self) -> u64 {
+        self.fields.iter().map(|f| f.stored_bytes()).sum()
+    }
+
+    /// Overall (size-weighted) compression ratio.
+    pub fn overall_ratio(&self) -> f64 {
+        self.total_raw_bytes() as f64 / self.total_stored_bytes() as f64
+    }
+
+    pub fn total_estimate_time(&self) -> Duration {
+        self.fields.iter().flat_map(|f| f.chunks.iter()).map(|c| c.estimate_time).sum()
+    }
+
+    /// First-pass compression time (the figure comparable to
+    /// [`ChunkedRunReport::total_compress_time`]).
+    pub fn total_compress_time(&self) -> Duration {
+        self.fields.iter().flat_map(|f| f.chunks.iter()).map(|c| c.compress_time).sum()
+    }
+
+    /// Per-codec *chunk* counts and stored bytes.
+    pub fn codec_counts(&self) -> CodecCounts {
+        let mut counts = CodecCounts::default();
+        for c in self.fields.iter().flat_map(|f| f.chunks.iter()) {
+            counts.add(c.selection, c.stored_bytes);
+        }
+        counts
+    }
+
+    /// Fraction of the buffered payload memory the streaming window
+    /// actually used (1.0 = no saving, -> 0 as archives grow).
+    pub fn peak_payload_frac(&self) -> f64 {
+        let total = self.total_stored_bytes();
+        if total == 0 {
+            return 0.0;
+        }
+        self.peak_payload_bytes as f64 / total as f64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -317,6 +421,39 @@ mod tests {
             report.fields[0].selections(),
             vec![Some(Choice::Sz), None]
         );
+    }
+
+    #[test]
+    fn streamed_report_totals_and_counts() {
+        let mk = |selection: u8, stored: u64, raw: u64| StreamedChunkStat {
+            selection,
+            stored_bytes: stored,
+            raw_bytes: raw,
+            estimate_time: Duration::from_millis(1),
+            compress_time: Duration::from_millis(2),
+        };
+        let report = StreamedRunReport {
+            policy: Policy::RateDistortion,
+            eb_rel: 1e-4,
+            fields: vec![StreamedFieldSummary {
+                name: "f".into(),
+                dims: Dims::D1(8),
+                chunk_elems: 4,
+                chunks: vec![mk(Choice::Sz.id(), 10, 16), mk(Choice::Raw.id(), 16, 16)],
+            }],
+            peak_payload_bytes: 16,
+            recompress_time: Duration::from_millis(4),
+        };
+        assert_eq!(report.total_raw_bytes(), 32);
+        assert_eq!(report.total_stored_bytes(), 26);
+        assert!((report.overall_ratio() - 32.0 / 26.0).abs() < 1e-12);
+        assert!((report.peak_payload_frac() - 16.0 / 26.0).abs() < 1e-12);
+        let counts = report.codec_counts();
+        assert_eq!(counts.count(Choice::Sz), 1);
+        assert_eq!(counts.count(Choice::Raw), 1);
+        assert_eq!(counts.bytes(Choice::Sz), 10);
+        assert_eq!(report.total_estimate_time(), Duration::from_millis(2));
+        assert_eq!(report.total_compress_time(), Duration::from_millis(4));
     }
 
     #[test]

@@ -18,6 +18,13 @@
 //! Selection bytes are resolved through
 //! [`crate::codec_api::CodecRegistry`] — nothing here maps bytes to
 //! codecs.
+//!
+//! Both directions stream (DESIGN.md §6): [`ContainerV2Writer`] emits
+//! `ADAPTC02` incrementally to any [`Write`] sink from pre-declared
+//! chunk sizes (the two-pass, index-first protocol), and
+//! [`ContainerReader`] is backed by a [`ByteSource`] — in-memory or
+//! pread-on-demand over a file — so partial loads read exactly the
+//! indexed byte ranges they need.
 
 use crate::codec_api::CodecRegistry;
 use crate::codec::varint;
@@ -84,6 +91,14 @@ impl Container {
             pos += 1;
             let raw_bytes = varint::read_u64(buf, &mut pos)?;
             let payload = varint::read_bytes(buf, &mut pos)?.to_vec();
+            // Raw entries are bare f32 LE words (DESIGN.md §6); a
+            // ragged length is corruption, not a short read.
+            if selection == crate::codec_api::Choice::Raw.id() && payload.len() % 4 != 0 {
+                return Err(Error::Corrupt(format!(
+                    "raw entry '{name}' of {} bytes is not a multiple of 4",
+                    payload.len()
+                )));
+            }
             entries.push(Entry { name, selection, payload, raw_bytes });
         }
         if pos != buf.len() {
@@ -149,43 +164,54 @@ pub struct ContainerV2 {
 }
 
 impl ContainerV2 {
+    /// Size/selection declarations of every field, in container order
+    /// — the pre-declared plan a [`ContainerV2Writer`] writes its
+    /// index from.
+    pub fn declarations(&self) -> Vec<FieldDecl> {
+        self.fields
+            .iter()
+            .map(|f| FieldDecl {
+                name: f.name.clone(),
+                dims: f.dims,
+                raw_bytes: f.raw_bytes,
+                chunk_elems: f.chunk_elems,
+                chunks: f
+                    .chunks
+                    .iter()
+                    .map(|c| ChunkDecl { selection: c.selection, len: c.stream.len() as u64 })
+                    .collect(),
+            })
+            .collect()
+    }
+
     /// Serialize: magic, length-prefixed index, then the payload
     /// region (all chunk streams concatenated in index order).
+    /// Implemented on [`ContainerV2Writer`] so the buffered and
+    /// streamed paths cannot drift — they are the same code.
     pub fn to_bytes(&self) -> Vec<u8> {
-        let mut index = Vec::new();
-        varint::write_u64(&mut index, self.fields.len() as u64);
-        let mut offset = 0u64;
-        for f in &self.fields {
-            varint::write_str(&mut index, &f.name);
-            f.dims.encode(&mut index);
-            varint::write_u64(&mut index, f.raw_bytes);
-            varint::write_u64(&mut index, f.chunk_elems);
-            varint::write_u64(&mut index, f.chunks.len() as u64);
-            for c in &f.chunks {
-                index.push(c.selection);
-                varint::write_u64(&mut index, offset);
-                varint::write_u64(&mut index, c.stream.len() as u64);
-                offset += c.stream.len() as u64;
-            }
-        }
-        let mut out = Vec::with_capacity(8 + 10 + index.len() + offset as usize);
-        out.extend_from_slice(MAGIC_V2);
-        varint::write_u64(&mut out, index.len() as u64);
-        out.extend_from_slice(&index);
-        for f in &self.fields {
-            for c in &f.chunks {
-                out.extend_from_slice(&c.stream);
-            }
-        }
+        let mut out = Vec::with_capacity(64 + self.stored_bytes() as usize);
+        self.write_to(&mut out).expect("in-memory sink cannot fail");
         out
     }
 
-    /// Write to a file.
-    pub fn write_file(&self, path: impl AsRef<Path>) -> Result<()> {
-        let bytes = self.to_bytes();
-        let mut f = std::fs::File::create(path)?;
-        f.write_all(&bytes)?;
+    /// Stream the container to any [`Write`] sink, one chunk at a
+    /// time; output is byte-identical to [`ContainerV2::to_bytes`].
+    pub fn write_to<W: Write>(&self, sink: W) -> Result<()> {
+        let mut w = ContainerV2Writer::new(sink, &self.declarations())?;
+        for f in &self.fields {
+            for c in &f.chunks {
+                w.write_chunk(&c.stream)?;
+            }
+        }
+        w.finish()?;
         Ok(())
+    }
+
+    /// Write to a file (streamed through a buffered writer — the full
+    /// archive is never materialized in memory).
+    pub fn write_file(&self, path: impl AsRef<Path>) -> Result<()> {
+        let f = std::fs::File::create(path)?;
+        self.write_to(std::io::BufWriter::new(f))
     }
 
     /// Total stored payload bytes (chunk streams).
@@ -200,6 +226,135 @@ impl ContainerV2 {
     /// Total raw bytes represented.
     pub fn raw_bytes(&self) -> u64 {
         self.fields.iter().map(|f| f.raw_bytes).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Streaming v2 writer (index-first, pre-declared chunk sizes)
+// ---------------------------------------------------------------------------
+
+/// Pre-declared size + selection of one chunk (DESIGN.md §6): the v2
+/// index carries every chunk's byte range, so an incremental writer
+/// must know the sizes before the first payload byte lands.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkDecl {
+    pub selection: u8,
+    /// Exact bare-stream length in bytes; `write_chunk` enforces it.
+    pub len: u64,
+}
+
+/// Pre-declared layout of one field for [`ContainerV2Writer`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct FieldDecl {
+    pub name: String,
+    pub dims: Dims,
+    pub raw_bytes: u64,
+    pub chunk_elems: u64,
+    pub chunks: Vec<ChunkDecl>,
+}
+
+/// Incremental `ADAPTC02` emitter over any [`Write`] sink.
+///
+/// The wire format puts the index *before* the payload region, so a
+/// forward-only writer needs every chunk's compressed size up front:
+/// [`ContainerV2Writer::new`] takes the full declaration list, writes
+/// magic + index immediately, and then accepts payload streams one
+/// chunk at a time (in index order) via [`ContainerV2Writer::write_chunk`].
+/// Peak memory is the index plus one chunk — never the whole payload.
+///
+/// Every supplied stream must match its declared length exactly
+/// (non-deterministic regeneration would silently corrupt the index),
+/// and [`ContainerV2Writer::finish`] refuses to complete until every
+/// declared chunk has been written. Output is byte-identical to
+/// [`ContainerV2::to_bytes`], which is itself implemented on this type.
+pub struct ContainerV2Writer<W: Write> {
+    sink: W,
+    /// Declared chunk lengths, flattened in index order.
+    declared: Vec<u64>,
+    /// Index of the next chunk `write_chunk` expects.
+    next: usize,
+    /// Total bytes pushed to the sink so far (header + payload).
+    written: u64,
+}
+
+impl<W: Write> ContainerV2Writer<W> {
+    /// Serialize the index from `fields` and write magic + index to
+    /// the sink; payload streams follow via `write_chunk`.
+    pub fn new(mut sink: W, fields: &[FieldDecl]) -> Result<ContainerV2Writer<W>> {
+        let mut index = Vec::new();
+        varint::write_u64(&mut index, fields.len() as u64);
+        let mut offset = 0u64;
+        let mut declared = Vec::new();
+        for f in fields {
+            varint::write_str(&mut index, &f.name);
+            f.dims.encode(&mut index);
+            varint::write_u64(&mut index, f.raw_bytes);
+            varint::write_u64(&mut index, f.chunk_elems);
+            varint::write_u64(&mut index, f.chunks.len() as u64);
+            for c in &f.chunks {
+                index.push(c.selection);
+                varint::write_u64(&mut index, offset);
+                varint::write_u64(&mut index, c.len);
+                offset = offset.checked_add(c.len).ok_or_else(|| {
+                    Error::InvalidArg("declared payload exceeds u64".into())
+                })?;
+                declared.push(c.len);
+            }
+        }
+        let mut header = Vec::with_capacity(8 + 10);
+        header.extend_from_slice(MAGIC_V2);
+        varint::write_u64(&mut header, index.len() as u64);
+        sink.write_all(&header)?;
+        sink.write_all(&index)?;
+        let written = (header.len() + index.len()) as u64;
+        Ok(ContainerV2Writer { sink, declared, next: 0, written })
+    }
+
+    /// Append the next chunk's bare stream. Chunks arrive in index
+    /// order; the length must match the declaration exactly.
+    pub fn write_chunk(&mut self, stream: &[u8]) -> Result<()> {
+        let Some(&want) = self.declared.get(self.next) else {
+            return Err(Error::InvalidArg(format!(
+                "chunk {} written but only {} declared",
+                self.next,
+                self.declared.len()
+            )));
+        };
+        if stream.len() as u64 != want {
+            return Err(Error::InvalidArg(format!(
+                "chunk {} is {} bytes but was declared as {want}",
+                self.next,
+                stream.len()
+            )));
+        }
+        self.sink.write_all(stream)?;
+        self.written += want;
+        self.next += 1;
+        Ok(())
+    }
+
+    /// Chunks still owed before `finish` will succeed.
+    pub fn chunks_remaining(&self) -> usize {
+        self.declared.len() - self.next
+    }
+
+    /// Total bytes pushed to the sink so far (header + payload).
+    pub fn bytes_written(&self) -> u64 {
+        self.written
+    }
+
+    /// Flush and return the sink; errors if any declared chunk was
+    /// never written (the index would point at absent bytes).
+    pub fn finish(mut self) -> Result<W> {
+        if self.next != self.declared.len() {
+            return Err(Error::InvalidArg(format!(
+                "container incomplete: {} of {} chunks written",
+                self.next,
+                self.declared.len()
+            )));
+        }
+        self.sink.flush()?;
+        Ok(self.sink)
     }
 }
 
@@ -235,56 +390,262 @@ impl FieldInfo {
     }
 }
 
+/// Random-access byte provider behind [`ContainerReader`]. The
+/// in-memory impl serves an owned buffer; [`FileSource`] issues
+/// positioned reads (pread) of exactly the requested range, so a
+/// file-backed reader touches only the index plus whatever chunks the
+/// caller asks for — never the whole file.
+///
+/// Implementations must be `Send + Sync`: chunk decode jobs read
+/// concurrently from worker threads.
+pub trait ByteSource: Send + Sync {
+    /// Total bytes available.
+    fn len(&self) -> u64;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Fill `buf` from absolute byte `offset`; the whole range must be
+    /// available or the read is an error.
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<()>;
+
+    /// Borrow the range directly when this source already holds it in
+    /// memory — the zero-copy fast path. `None` (the default) means
+    /// callers must go through [`ByteSource::read_at`].
+    fn slice(&self, offset: u64, len: usize) -> Option<&[u8]> {
+        let _ = (offset, len);
+        None
+    }
+}
+
+/// In-memory [`ByteSource`] over an owned buffer.
+pub struct MemSource(pub Vec<u8>);
+
+impl ByteSource for MemSource {
+    fn len(&self) -> u64 {
+        self.0.len() as u64
+    }
+
+    fn slice(&self, offset: u64, len: usize) -> Option<&[u8]> {
+        let start = usize::try_from(offset).ok()?;
+        self.0.get(start..start.checked_add(len)?)
+    }
+
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<()> {
+        let start = usize::try_from(offset)
+            .map_err(|_| Error::Corrupt("read offset exceeds address space".into()))?;
+        let end = start
+            .checked_add(buf.len())
+            .filter(|&e| e <= self.0.len())
+            .ok_or_else(|| Error::Corrupt("read past end of buffer".into()))?;
+        buf.copy_from_slice(&self.0[start..end]);
+        Ok(())
+    }
+}
+
+/// pread-backed [`ByteSource`]: every read is a positioned read of
+/// exactly the requested byte range. On Unix this is a true `pread`
+/// (no shared cursor, no locking); elsewhere a mutex serializes a
+/// seek+read pair with the same semantics.
+pub struct FileSource {
+    #[cfg(unix)]
+    file: std::fs::File,
+    #[cfg(not(unix))]
+    file: std::sync::Mutex<std::fs::File>,
+    len: u64,
+}
+
+impl FileSource {
+    /// Open `path` for positioned reads.
+    pub fn open(path: impl AsRef<Path>) -> Result<FileSource> {
+        let file = std::fs::File::open(path)?;
+        let len = file.metadata()?.len();
+        #[cfg(not(unix))]
+        let file = std::sync::Mutex::new(file);
+        Ok(FileSource { file, len })
+    }
+}
+
+impl ByteSource for FileSource {
+    fn len(&self) -> u64 {
+        self.len
+    }
+
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<()> {
+        let end = offset
+            .checked_add(buf.len() as u64)
+            .ok_or_else(|| Error::Corrupt("read range overflow".into()))?;
+        if end > self.len {
+            return Err(Error::Corrupt(format!(
+                "read [{offset}, {end}) past end of {}-byte file",
+                self.len
+            )));
+        }
+        #[cfg(unix)]
+        {
+            use std::os::unix::fs::FileExt;
+            self.file.read_exact_at(buf, offset)?;
+        }
+        #[cfg(not(unix))]
+        {
+            use std::io::{Seek, SeekFrom};
+            let mut f = self
+                .file
+                .lock()
+                .map_err(|_| Error::Other("file source lock poisoned".into()))?;
+            f.seek(SeekFrom::Start(offset))?;
+            f.read_exact(buf)?;
+        }
+        Ok(())
+    }
+}
+
+/// Bounded sequential cursor over a [`ByteSource`] for header/index
+/// parsing. Only metadata flows through it — payload bytes are served
+/// directly by `read_at` on demand.
+struct SourceCursor<'a> {
+    src: &'a dyn ByteSource,
+    pos: u64,
+}
+
+impl SourceCursor<'_> {
+    fn remaining(&self) -> u64 {
+        self.src.len().saturating_sub(self.pos)
+    }
+
+    fn read_u8(&mut self) -> Result<u8> {
+        let mut b = [0u8; 1];
+        self.src.read_at(self.pos, &mut b)?;
+        self.pos += 1;
+        Ok(b[0])
+    }
+
+    /// Read a LEB128 u64 through the canonical slice decoder (one
+    /// bounded `read_at` of at most 10 bytes).
+    fn read_varint(&mut self) -> Result<u64> {
+        let take = self.remaining().min(10) as usize;
+        let mut buf = [0u8; 10];
+        self.src.read_at(self.pos, &mut buf[..take])?;
+        let mut p = 0usize;
+        let v = varint::read_u64(&buf[..take], &mut p)?;
+        self.pos += p as u64;
+        Ok(v)
+    }
+
+    /// Read exactly `n` bytes. The bound check precedes the allocation
+    /// so a corrupt length cannot trigger an attacker-sized alloc.
+    fn read_bytes(&mut self, n: u64) -> Result<Vec<u8>> {
+        if n > self.remaining() {
+            return Err(Error::Corrupt(format!(
+                "length-prefixed slice of {n} bytes exceeds container"
+            )));
+        }
+        let mut b = vec![0u8; n as usize];
+        self.src.read_at(self.pos, &mut b)?;
+        self.pos += n;
+        Ok(b)
+    }
+
+    fn read_string(&mut self) -> Result<String> {
+        let n = self.read_varint()?;
+        let bytes = self.read_bytes(n)?;
+        String::from_utf8(bytes).map_err(|_| Error::Corrupt("invalid utf-8 in string".into()))
+    }
+}
+
 /// Parses only a container's index and decodes fields/chunks on
 /// demand — `load_field`/`load_chunk` never touch other payloads.
-#[derive(Clone, Debug)]
+/// Backed by a [`ByteSource`]: in-memory via [`ContainerReader::from_bytes`],
+/// pread-backed via [`ContainerReader::open`] (which reads the index
+/// up front and each requested chunk's exact byte range thereafter).
+#[derive(Clone)]
 pub struct ContainerReader {
-    buf: Vec<u8>,
+    source: std::sync::Arc<dyn ByteSource>,
     /// Wire format version (1 or 2).
     pub version: u8,
     pub fields: Vec<FieldInfo>,
 }
 
+impl std::fmt::Debug for ContainerReader {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ContainerReader")
+            .field("version", &self.version)
+            .field("source_len", &self.source.len())
+            .field("fields", &self.fields)
+            .finish()
+    }
+}
+
 impl ContainerReader {
     /// Parse a container's index from bytes (v1 or v2, auto-detected).
     pub fn from_bytes(buf: Vec<u8>) -> Result<ContainerReader> {
-        if buf.len() < 8 {
+        Self::from_source(std::sync::Arc::new(MemSource(buf)))
+    }
+
+    /// Open and index a container file: only the header and index are
+    /// read eagerly; chunk payloads are pread on demand.
+    pub fn open(path: impl AsRef<Path>) -> Result<ContainerReader> {
+        Self::from_source(std::sync::Arc::new(FileSource::open(path)?))
+    }
+
+    /// Parse a container's index from any [`ByteSource`].
+    pub fn from_source(source: std::sync::Arc<dyn ByteSource>) -> Result<ContainerReader> {
+        if source.len() < 8 {
             return Err(Error::Corrupt("container too short".into()));
         }
-        if &buf[..8] == MAGIC {
-            Self::parse_v1(buf)
-        } else if &buf[..8] == MAGIC_V2 {
-            Self::parse_v2(buf)
+        // Chunk ranges are addressed with usize offsets ([`ChunkRef`]);
+        // a source larger than the address space (possible for a file
+        // on 32-bit targets, unlike the old Vec-backed reader) would
+        // silently wrap every `as usize` below — refuse it up front so
+        // all later in-bounds offsets/lengths are known to fit.
+        if usize::try_from(source.len()).is_err() {
+            return Err(Error::Corrupt(format!(
+                "{}-byte container exceeds this target's address space",
+                source.len()
+            )));
+        }
+        let mut magic = [0u8; 8];
+        source.read_at(0, &mut magic)?;
+        if &magic == MAGIC {
+            Self::parse_v1(source)
+        } else if &magic == MAGIC_V2 {
+            Self::parse_v2(source)
         } else {
             Err(Error::Corrupt("bad container magic".into()))
         }
     }
 
-    /// Open and index a container file.
-    pub fn open(path: impl AsRef<Path>) -> Result<ContainerReader> {
-        let mut buf = Vec::new();
-        std::fs::File::open(path)?.read_to_end(&mut buf)?;
-        ContainerReader::from_bytes(buf)
-    }
-
-    fn parse_v1(buf: Vec<u8>) -> Result<ContainerReader> {
-        let mut pos = 8usize;
-        let n = varint::read_u64(&buf, &mut pos)? as usize;
-        let mut fields = Vec::with_capacity(n.min(buf.len() / 3));
+    /// v1 has no index section, but every payload is length-prefixed,
+    /// so the scan reads only entry headers and seeks over payloads —
+    /// a file-backed open stays O(metadata).
+    fn parse_v1(source: std::sync::Arc<dyn ByteSource>) -> Result<ContainerReader> {
+        let total = source.len();
+        let mut cur = SourceCursor { src: source.as_ref(), pos: 8 };
+        let n = cur.read_varint()? as usize;
+        let mut fields = Vec::with_capacity(n.min((total / 3) as usize));
         for _ in 0..n {
-            let name = varint::read_str(&buf, &mut pos)?;
-            let selection = *buf
-                .get(pos)
-                .ok_or_else(|| Error::Corrupt("truncated entry".into()))?;
-            pos += 1;
-            let raw_bytes = varint::read_u64(&buf, &mut pos)?;
-            let len = varint::read_u64(&buf, &mut pos)? as usize;
-            let end = pos
+            let name = cur.read_string()?;
+            let selection = cur
+                .read_u8()
+                .map_err(|_| Error::Corrupt("truncated entry".into()))?;
+            let raw_bytes = cur.read_varint()?;
+            let len = cur.read_varint()?;
+            let end = cur
+                .pos
                 .checked_add(len)
                 .ok_or_else(|| Error::Corrupt("length overflow".into()))?;
-            if end > buf.len() {
+            if end > total {
                 return Err(Error::Corrupt(format!(
                     "payload of {len} bytes exceeds buffer"
+                )));
+            }
+            // Raw entries are bare f32 LE words; a ragged length can
+            // only come from corruption and would otherwise surface as
+            // a confusing short read at decode time.
+            if selection == crate::codec_api::Choice::Raw.id() && len % 4 != 0 {
+                return Err(Error::Corrupt(format!(
+                    "raw entry '{name}' of {len} bytes is not a multiple of 4"
                 )));
             }
             fields.push(FieldInfo {
@@ -292,45 +653,49 @@ impl ContainerReader {
                 dims: None,
                 raw_bytes,
                 chunk_elems: 0,
-                chunks: vec![ChunkRef { selection, offset: pos, len }],
+                chunks: vec![ChunkRef { selection, offset: cur.pos as usize, len: len as usize }],
             });
-            pos = end;
+            cur.pos = end;
         }
-        if pos != buf.len() {
+        if cur.pos != total {
             return Err(Error::Corrupt("trailing bytes in container".into()));
         }
-        Ok(ContainerReader { buf, version: 1, fields })
+        Ok(ContainerReader { source, version: 1, fields })
     }
 
-    fn parse_v2(buf: Vec<u8>) -> Result<ContainerReader> {
-        let mut pos = 8usize;
-        let index_len = varint::read_u64(&buf, &mut pos)? as usize;
-        let index_end = pos
-            .checked_add(index_len)
-            .ok_or_else(|| Error::Corrupt("index length overflow".into()))?;
-        if index_end > buf.len() {
-            return Err(Error::Corrupt("truncated index".into()));
-        }
-        let payload_base = index_end;
-        let payload_len = buf.len() - payload_base;
+    fn parse_v2(source: std::sync::Arc<dyn ByteSource>) -> Result<ContainerReader> {
+        let total = source.len();
+        let mut cur = SourceCursor { src: source.as_ref(), pos: 8 };
+        let index_len = cur.read_varint()?;
+        let index = cur
+            .read_bytes(index_len)
+            .map_err(|_| Error::Corrupt("truncated index".into()))?;
+        let payload_base = cur.pos;
+        let payload_len = total - payload_base;
 
-        let n = varint::read_u64(&buf, &mut pos)? as usize;
-        let mut fields = Vec::with_capacity(n.min(index_len / 2 + 1));
-        let mut payload_end = payload_base;
+        let buf = &index[..];
+        let mut pos = 0usize;
+        let n = varint::read_u64(buf, &mut pos)? as usize;
+        let mut fields = Vec::with_capacity(n.min(index.len() / 2 + 1));
+        // Chunk ranges must tile the payload region contiguously in
+        // index order — the writer's invariant. Anything else (overlap
+        // aliasing one region to several chunks, or unreferenced
+        // holes) is corruption.
+        let mut next_off = 0u64;
         for _ in 0..n {
-            let name = varint::read_str(&buf, &mut pos)?;
-            let dims = Dims::decode(&buf, &mut pos)?;
-            let raw_bytes = varint::read_u64(&buf, &mut pos)?;
-            let chunk_elems = varint::read_u64(&buf, &mut pos)?;
-            let n_chunks = varint::read_u64(&buf, &mut pos)? as usize;
-            let mut chunks = Vec::with_capacity(n_chunks.min(index_len / 3 + 1));
+            let name = varint::read_str(buf, &mut pos)?;
+            let dims = Dims::decode(buf, &mut pos)?;
+            let raw_bytes = varint::read_u64(buf, &mut pos)?;
+            let chunk_elems = varint::read_u64(buf, &mut pos)?;
+            let n_chunks = varint::read_u64(buf, &mut pos)? as usize;
+            let mut chunks = Vec::with_capacity(n_chunks.min(index.len() / 3 + 1));
             for _ in 0..n_chunks {
                 let selection = *buf
                     .get(pos)
                     .ok_or_else(|| Error::Corrupt("truncated chunk index".into()))?;
                 pos += 1;
-                let off = varint::read_u64(&buf, &mut pos)? as usize;
-                let len = varint::read_u64(&buf, &mut pos)? as usize;
+                let off = varint::read_u64(buf, &mut pos)?;
+                let len = varint::read_u64(buf, &mut pos)?;
                 let end = off
                     .checked_add(len)
                     .ok_or_else(|| Error::Corrupt("chunk range overflow".into()))?;
@@ -339,13 +704,18 @@ impl ContainerReader {
                         "chunk [{off}, {end}) out of range of {payload_len}-byte payload"
                     )));
                 }
-                chunks.push(ChunkRef { selection, offset: payload_base + off, len });
-                payload_end = payload_end.max(payload_base + end);
-            }
-            // A record that strayed past the index region is corrupt
-            // even if the reads happened to stay inside the buffer.
-            if pos > index_end {
-                return Err(Error::Corrupt("index record overruns index region".into()));
+                if off != next_off {
+                    return Err(Error::Corrupt(format!(
+                        "chunk [{off}, {end}) breaks contiguous payload tiling \
+                         (expected offset {next_off})"
+                    )));
+                }
+                next_off = end;
+                chunks.push(ChunkRef {
+                    selection,
+                    offset: (payload_base + off) as usize,
+                    len: len as usize,
+                });
             }
             fields.push(FieldInfo {
                 name,
@@ -355,13 +725,13 @@ impl ContainerReader {
                 chunks,
             });
         }
-        if pos != index_end {
+        if pos != index.len() {
             return Err(Error::Corrupt("index length mismatch".into()));
         }
-        if payload_end != buf.len() {
+        if next_off != payload_len {
             return Err(Error::Corrupt("trailing bytes in container".into()));
         }
-        Ok(ContainerReader { buf, version: 2, fields })
+        Ok(ContainerReader { source, version: 2, fields })
     }
 
     /// Locate a field by name.
@@ -389,13 +759,18 @@ impl ContainerReader {
         })
     }
 
-    /// Raw payload bytes of one chunk (no decode).
-    pub fn chunk_bytes(&self, field_idx: usize, chunk_idx: usize) -> Result<&[u8]> {
+    /// Raw payload bytes of one chunk — a positioned read of exactly
+    /// that chunk's indexed byte range (no decode).
+    pub fn chunk_bytes(&self, field_idx: usize, chunk_idx: usize) -> Result<Vec<u8>> {
         let c = self.chunk_ref(field_idx, chunk_idx)?;
-        Ok(&self.buf[c.offset..c.offset + c.len])
+        let mut buf = vec![0u8; c.len];
+        self.source.read_at(c.offset as u64, &mut buf)?;
+        Ok(buf)
     }
 
-    /// Decode one chunk through the registry.
+    /// Decode one chunk through the registry. In-memory sources decode
+    /// straight from their buffer (zero-copy); file sources pread the
+    /// chunk's exact byte range first.
     pub fn decode_chunk(
         &self,
         registry: &CodecRegistry,
@@ -403,12 +778,28 @@ impl ContainerReader {
         chunk_idx: usize,
     ) -> Result<(Vec<f32>, Dims)> {
         let c = self.chunk_ref(field_idx, chunk_idx)?;
-        let bytes = &self.buf[c.offset..c.offset + c.len];
-        if self.version == 1 {
-            registry.decode_v1_entry(c.selection, bytes)
-        } else {
-            registry.decode_stream(c.selection, bytes)
+        let decode = |bytes: &[u8]| {
+            if self.version == 1 {
+                registry.decode_v1_entry(c.selection, bytes)
+            } else {
+                registry.decode_stream(c.selection, bytes)
+            }
+        };
+        if let Some(bytes) = self.source.slice(c.offset as u64, c.len) {
+            return decode(bytes);
         }
+        decode(&self.chunk_bytes(field_idx, chunk_idx)?)
+    }
+
+    /// Total bytes of the backing source (file size or buffer length).
+    pub fn source_len(&self) -> u64 {
+        self.source.len()
+    }
+
+    /// Bytes outside the chunk payloads (magic + headers + index) —
+    /// what an index-only `open` reads up front.
+    pub fn index_bytes(&self) -> u64 {
+        self.source_len().saturating_sub(self.stored_bytes())
     }
 
     /// Decode a whole field by name — touches only that field's chunk
@@ -686,6 +1077,122 @@ mod tests {
         let mut extra = bytes.clone();
         extra.push(0);
         assert!(ContainerReader::from_bytes(extra).is_err());
+    }
+
+    #[test]
+    fn writer_output_matches_to_bytes_and_enforces_declarations() {
+        let c = sample_v2();
+        // Streamed write into a Vec is byte-identical to to_bytes.
+        let mut streamed = Vec::new();
+        c.write_to(&mut streamed).unwrap();
+        assert_eq!(streamed, c.to_bytes());
+
+        // Wrong chunk length is rejected before any bytes land.
+        let decls = c.declarations();
+        let mut w = ContainerV2Writer::new(Vec::new(), &decls).unwrap();
+        assert!(w.write_chunk(&[1, 2]).is_err(), "declared 3 bytes, wrote 2");
+        // The declared 3-byte chunk still goes through afterwards.
+        w.write_chunk(&[10, 11, 12]).unwrap();
+        // Finishing with chunks missing is an error.
+        assert_eq!(w.chunks_remaining(), 2);
+        assert!(w.finish().is_err());
+
+        // Writing more chunks than declared is an error.
+        let mut w = ContainerV2Writer::new(Vec::new(), &decls).unwrap();
+        for f in &c.fields {
+            for ch in &f.chunks {
+                w.write_chunk(&ch.stream).unwrap();
+            }
+        }
+        assert!(w.write_chunk(&[]).is_err());
+        assert_eq!(w.bytes_written() as usize, c.to_bytes().len());
+        let out = w.finish().unwrap();
+        assert_eq!(out, c.to_bytes());
+    }
+
+    #[test]
+    fn v2_overlapping_or_gapped_chunk_ranges_rejected() {
+        // Hand-build a v2 container whose two chunks alias the same
+        // payload range (overlap) or skip bytes (gap): both must be
+        // corruption — the writer only ever emits contiguous tilings.
+        let build = |off0: u64, len0: u64, off1: u64, len1: u64, payload: usize| {
+            let mut index = Vec::new();
+            varint::write_u64(&mut index, 1); // one field
+            varint::write_str(&mut index, "x");
+            Dims::D1(4).encode(&mut index);
+            varint::write_u64(&mut index, 16); // raw_bytes
+            varint::write_u64(&mut index, 2); // chunk_elems
+            varint::write_u64(&mut index, 2); // two chunks
+            for (off, len) in [(off0, len0), (off1, len1)] {
+                index.push(Choice::Raw.id());
+                varint::write_u64(&mut index, off);
+                varint::write_u64(&mut index, len);
+            }
+            let mut bytes = Vec::new();
+            bytes.extend_from_slice(b"ADAPTC02");
+            varint::write_u64(&mut bytes, index.len() as u64);
+            bytes.extend_from_slice(&index);
+            bytes.extend_from_slice(&vec![0u8; payload]);
+            bytes
+        };
+        // Contiguous tiling parses.
+        assert!(ContainerReader::from_bytes(build(0, 8, 8, 8, 16)).is_ok());
+        // Overlap: both chunks claim [0, 8).
+        let err = ContainerReader::from_bytes(build(0, 8, 0, 8, 16)).unwrap_err();
+        assert!(format!("{err}").contains("tiling"), "{err}");
+        // Gap: hole at [8, 12) never referenced.
+        let err = ContainerReader::from_bytes(build(0, 8, 12, 4, 16)).unwrap_err();
+        assert!(format!("{err}").contains("tiling"), "{err}");
+        // Out-of-order (descending) ranges are also non-contiguous.
+        let err = ContainerReader::from_bytes(build(8, 8, 0, 8, 16)).unwrap_err();
+        assert!(format!("{err}").contains("tiling"), "{err}");
+    }
+
+    #[test]
+    fn v1_odd_length_raw_entry_rejected_at_parse() {
+        let build = |payload_len: usize| {
+            let mut bytes = Vec::new();
+            bytes.extend_from_slice(MAGIC);
+            varint::write_u64(&mut bytes, 1);
+            varint::write_str(&mut bytes, "r");
+            bytes.push(Choice::Raw.id());
+            varint::write_u64(&mut bytes, payload_len as u64);
+            varint::write_bytes(&mut bytes, &vec![0u8; payload_len]);
+            bytes
+        };
+        // A multiple of 4 parses in both v1 readers.
+        assert!(Container::from_bytes(&build(8)).is_ok());
+        assert!(ContainerReader::from_bytes(build(8)).is_ok());
+        // A ragged raw payload is corruption, not a short f32 read.
+        for odd in [1usize, 5, 7] {
+            let err = Container::from_bytes(&build(odd)).unwrap_err();
+            assert!(format!("{err}").contains("multiple of 4"), "{err}");
+            let err = ContainerReader::from_bytes(build(odd)).unwrap_err();
+            assert!(format!("{err}").contains("multiple of 4"), "{err}");
+        }
+    }
+
+    #[test]
+    fn file_backed_reader_matches_memory_reader() {
+        let bytes = sample_v2().to_bytes();
+        let path = std::env::temp_dir().join("adaptivec_store_pread_test.bin");
+        std::fs::write(&path, &bytes).unwrap();
+        let mem = ContainerReader::from_bytes(bytes).unwrap();
+        let file = ContainerReader::open(&path).unwrap();
+        assert_eq!(file.version, mem.version);
+        assert_eq!(file.fields, mem.fields);
+        assert_eq!(file.source_len(), mem.source_len());
+        assert_eq!(file.index_bytes(), mem.index_bytes());
+        for (fi, f) in mem.fields.iter().enumerate() {
+            for ci in 0..f.chunks.len() {
+                assert_eq!(
+                    file.chunk_bytes(fi, ci).unwrap(),
+                    mem.chunk_bytes(fi, ci).unwrap(),
+                    "field {fi} chunk {ci}"
+                );
+            }
+        }
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

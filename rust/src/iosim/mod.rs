@@ -37,6 +37,10 @@ pub struct FsModel {
     pub client_bw: f64,
     /// Per-file open/close latency (s).
     pub file_latency: f64,
+    /// Per-positioned-read (pread) request overhead (s): seek +
+    /// metadata round-trip for each non-contiguous range a partial
+    /// load issues.
+    pub seek_latency: f64,
     /// Management-overhead decay coefficient β.
     pub beta: f64,
     /// Saturation process count.
@@ -50,6 +54,7 @@ impl Default for FsModel {
             agg_read: 18e9,
             client_bw: 0.7e9,
             file_latency: 2e-3,
+            seek_latency: 1e-4,
             beta: 0.08,
             p_sat: 64.0,
         }
@@ -85,6 +90,16 @@ impl FsModel {
     /// Modeled wall time for `p` processes each reading `bytes_per_proc`.
     pub fn read_time(&self, p: usize, bytes_per_proc: f64) -> f64 {
         self.file_latency + bytes_per_proc / self.read_bw_per_proc(p)
+    }
+
+    /// Modeled wall time for `p` processes each issuing `reads`
+    /// positioned reads totalling `bytes_per_proc` — the index-driven
+    /// partial-load pattern of the v2 container (one pread per chunk
+    /// range instead of slurping the file).
+    pub fn pread_time(&self, p: usize, bytes_per_proc: f64, reads: usize) -> f64 {
+        self.file_latency
+            + reads as f64 * self.seek_latency
+            + bytes_per_proc / self.read_bw_per_proc(p)
     }
 }
 
@@ -128,6 +143,23 @@ impl ThroughputModel {
         let t = self.fs.read_time(p, stored_per_proc) + decomp_secs_per_proc;
         (raw_per_proc * p as f64) / t
     }
+
+    /// Partial-load throughput (bytes/s of raw data) for `p`
+    /// processes, each reconstructing `raw_per_proc` raw bytes from
+    /// `chunk_bytes_per_proc` stored bytes fetched with `reads`
+    /// positioned reads — the v2 index path, where a one-field load
+    /// reads O(field) bytes instead of O(file).
+    pub fn partial_load_throughput(
+        &self,
+        p: usize,
+        raw_per_proc: f64,
+        chunk_bytes_per_proc: f64,
+        reads: usize,
+        decomp_secs_per_proc: f64,
+    ) -> f64 {
+        let t = self.fs.pread_time(p, chunk_bytes_per_proc, reads) + decomp_secs_per_proc;
+        (raw_per_proc * p as f64) / t
+    }
 }
 
 /// The process-count sweep of Figs. 8–9.
@@ -162,6 +194,31 @@ mod tests {
     fn read_faster_than_write() {
         let fs = FsModel::default();
         assert!(fs.read_bw_per_proc(512) > fs.write_bw_per_proc(512));
+    }
+
+    #[test]
+    fn pread_time_grows_with_request_count() {
+        let fs = FsModel::default();
+        let t1 = fs.pread_time(64, 1e6, 1);
+        let t64 = fs.pread_time(64, 1e6, 64);
+        assert!(t64 > t1);
+        assert!((t64 - t1 - 63.0 * fs.seek_latency).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partial_load_of_one_field_beats_full_slurp() {
+        // Reading 1/32 of the stored bytes via a handful of preads
+        // must beat reading the whole file to reconstruct one field.
+        let tm = ThroughputModel::new(FsModel::default());
+        let stored = 256e6;
+        let field_stored = stored / 32.0;
+        let field_raw = 8.0 * field_stored;
+        let full = tm.load_throughput(64, field_raw, stored, 0.01);
+        let partial = tm.partial_load_throughput(64, field_raw, field_stored, 8, 0.01);
+        assert!(
+            partial > 2.0 * full,
+            "partial {partial:.2e} should far exceed full-slurp {full:.2e}"
+        );
     }
 
     #[test]

@@ -1,0 +1,253 @@
+//! Integration tests for the streaming storage layer: the index-first
+//! `ContainerV2Writer`, the pread-backed `ByteSource` reader, and the
+//! three wire-format bugfixes that rode along (10-byte varint
+//! truncation, overlapping/gapped v2 chunk ranges, odd-length v1 raw
+//! entries).
+
+use adaptivec::baseline::Policy;
+use adaptivec::codec::varint;
+use adaptivec::codec_api::CodecRegistry;
+use adaptivec::coordinator::store::{
+    ChunkDecl, Container, ContainerReader, ContainerV2Writer, FieldDecl,
+};
+use adaptivec::coordinator::Coordinator;
+use adaptivec::data::atm;
+use adaptivec::data::field::Dims;
+use adaptivec::data::Field;
+use adaptivec::estimator::selector::SelectorConfig;
+use adaptivec::testing::proptest_lite::{forall, Gen};
+
+fn fields(seed: u64, n: usize) -> Vec<Field> {
+    (0..n).map(|i| atm::generate_field_scaled(seed, i, 0)).collect()
+}
+
+fn tmp_path(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("adaptivec_streaming_{name}"))
+}
+
+#[test]
+fn streamed_write_is_byte_identical_across_policies() {
+    let coord = Coordinator::new(SelectorConfig::default(), 3);
+    let fs = fields(11, 3);
+    for policy in [Policy::RateDistortion, Policy::NoCompression, Policy::AlwaysZfp] {
+        for chunk_elems in [0usize, 2048] {
+            let buffered = coord
+                .run_chunked(&fs, policy, 1e-3, chunk_elems)
+                .unwrap()
+                .to_container()
+                .to_bytes();
+            let (report, streamed) = coord
+                .run_chunked_to(&fs, policy, 1e-3, chunk_elems, Vec::new())
+                .unwrap();
+            assert!(
+                streamed == buffered,
+                "streamed and buffered outputs diverged: {policy:?} / {chunk_elems}"
+            );
+            // The summary's totals agree with the parsed container.
+            let reader = ContainerReader::from_bytes(buffered).unwrap();
+            assert_eq!(report.total_stored_bytes(), reader.stored_bytes());
+            assert_eq!(report.total_raw_bytes(), reader.raw_bytes());
+        }
+    }
+}
+
+#[test]
+fn file_backed_pread_reader_equals_memory_reader_fuzz() {
+    // Fuzz-style: random seeds, chunk granularities, and both wire
+    // formats; every field and chunk must read and decode identically
+    // through the in-memory buffer and the pread-backed file source.
+    let coord = Coordinator::new(SelectorConfig::default(), 2);
+    let registry = CodecRegistry::default();
+    let gen = Gen::<(u64, usize, bool)>::new(|r| {
+        let chunk_elems = [0usize, 1024, 2048, 4096][r.below(4)];
+        (r.below(1 << 30) as u64, chunk_elems, r.bool(0.3))
+    });
+    forall("pread reader == memory reader", 6, gen, |&(seed, chunk_elems, v1)| {
+        let fs = fields(seed, 2);
+        let bytes = if v1 {
+            coord.run(&fs, Policy::RateDistortion, 1e-3).unwrap().to_container().to_bytes()
+        } else {
+            let (_, b) = coord
+                .run_chunked_to(&fs, Policy::RateDistortion, 1e-3, chunk_elems, Vec::new())
+                .unwrap();
+            b
+        };
+        let path = tmp_path(&format!("eq_{seed}_{chunk_elems}_{v1}.bin"));
+        std::fs::write(&path, &bytes).unwrap();
+        let mem = ContainerReader::from_bytes(bytes).unwrap();
+        let file = ContainerReader::open(&path).unwrap();
+        let mut ok = mem.version == file.version
+            && mem.fields == file.fields
+            && mem.source_len() == file.source_len();
+        for (fi, f) in mem.fields.iter().enumerate() {
+            for ci in 0..f.chunks.len() {
+                ok &= mem.chunk_bytes(fi, ci).unwrap() == file.chunk_bytes(fi, ci).unwrap();
+                ok &= mem.decode_chunk(&registry, fi, ci).unwrap()
+                    == file.decode_chunk(&registry, fi, ci).unwrap();
+            }
+            let a = mem.load_field(&registry, &f.name).unwrap();
+            let b = file.load_field(&registry, &f.name).unwrap();
+            ok &= a.data == b.data && a.dims == b.dims;
+        }
+        std::fs::remove_file(&path).ok();
+        ok
+    });
+}
+
+#[test]
+fn raw_v1_container_roundtrips_through_file_source() {
+    // NoCompression exercises the v1 raw-entry path (selection 2,
+    // bare f32 LE bytes) through the pread-backed reader.
+    let coord = Coordinator::new(SelectorConfig::default(), 2);
+    let fs = fields(5, 2);
+    let bytes = coord.run(&fs, Policy::NoCompression, 1e-3).unwrap().to_container().to_bytes();
+    let path = tmp_path("raw_v1.bin");
+    std::fs::write(&path, &bytes).unwrap();
+    let reader = ContainerReader::open(&path).unwrap();
+    assert_eq!(reader.version, 1);
+    let restored = coord.load_reader(&reader).unwrap();
+    for (orig, rest) in fs.iter().zip(&restored) {
+        assert_eq!(orig.data, rest.data, "{}", orig.name);
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn writer_streams_through_a_file_sink() {
+    let decls = vec![FieldDecl {
+        name: "x".into(),
+        dims: Dims::D1(4),
+        raw_bytes: 16,
+        chunk_elems: 2,
+        chunks: vec![
+            ChunkDecl { selection: 2, len: 8 },
+            ChunkDecl { selection: 2, len: 8 },
+        ],
+    }];
+    let path = tmp_path("writer_file_sink.bin");
+    let sink = std::io::BufWriter::new(std::fs::File::create(&path).unwrap());
+    let mut w = ContainerV2Writer::new(sink, &decls).unwrap();
+    w.write_chunk(&[1u8; 8]).unwrap();
+    w.write_chunk(&[2u8; 8]).unwrap();
+    w.finish().unwrap();
+    let reader = ContainerReader::open(&path).unwrap();
+    assert_eq!(reader.version, 2);
+    assert_eq!(reader.fields.len(), 1);
+    assert_eq!(reader.chunk_bytes(0, 0).unwrap(), vec![1u8; 8]);
+    assert_eq!(reader.chunk_bytes(0, 1).unwrap(), vec![2u8; 8]);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn truncated_file_rejected_by_pread_open() {
+    let coord = Coordinator::new(SelectorConfig::default(), 2);
+    let fs = fields(9, 1);
+    let (_, bytes) = coord
+        .run_chunked_to(&fs, Policy::RateDistortion, 1e-3, 2048, Vec::new())
+        .unwrap();
+    for cut in [0, 4, 9, bytes.len() / 2, bytes.len() - 1] {
+        let path = tmp_path(&format!("trunc_{cut}.bin"));
+        std::fs::write(&path, &bytes[..cut]).unwrap();
+        assert!(ContainerReader::open(&path).is_err(), "prefix of {cut} bytes parsed");
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Regression tests for the three wire-format bugfixes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn regression_ten_byte_varint_high_bits_rejected() {
+    // Before the fix, 10th-byte payload bits above bit 63 were shifted
+    // out silently, so `[0xFF; 9] + 0x7F` decoded to the same value as
+    // the canonical `[0xFF; 9] + 0x01` (u64::MAX) instead of erroring.
+    let mut canonical = Vec::new();
+    varint::write_u64(&mut canonical, u64::MAX);
+    assert_eq!(canonical.len(), 10);
+    let mut pos = 0;
+    assert_eq!(varint::read_u64(&canonical, &mut pos).unwrap(), u64::MAX);
+    let mut aliased = canonical.clone();
+    aliased[9] = 0x7F;
+    let mut pos = 0;
+    assert!(varint::read_u64(&aliased, &mut pos).is_err());
+}
+
+/// Hand-build a v2 container with one two-chunk field at the given
+/// (offset, len) pairs over a `payload`-byte payload region.
+fn v2_two_chunks(ranges: [(u64, u64); 2], payload: usize) -> Vec<u8> {
+    let mut index = Vec::new();
+    varint::write_u64(&mut index, 1);
+    varint::write_str(&mut index, "x");
+    Dims::D1(4).encode(&mut index);
+    varint::write_u64(&mut index, 16); // raw_bytes
+    varint::write_u64(&mut index, 2); // chunk_elems
+    varint::write_u64(&mut index, 2); // n_chunks
+    for (off, len) in ranges {
+        index.push(2); // raw selection
+        varint::write_u64(&mut index, off);
+        varint::write_u64(&mut index, len);
+    }
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(b"ADAPTC02");
+    varint::write_u64(&mut bytes, index.len() as u64);
+    bytes.extend_from_slice(&index);
+    bytes.extend_from_slice(&vec![0u8; payload]);
+    bytes
+}
+
+#[test]
+fn regression_overlapping_and_gapped_indexes_rejected() {
+    // Contiguous tiling (the writer's invariant) parses...
+    assert!(ContainerReader::from_bytes(v2_two_chunks([(0, 8), (8, 8)], 16)).is_ok());
+    // ...but overlap (payload aliased to both chunks), gaps
+    // (unreferenced holes), and out-of-order ranges are corruption —
+    // in memory and through the file source alike.
+    let cases = [
+        v2_two_chunks([(0, 8), (0, 8)], 16),  // overlap
+        v2_two_chunks([(0, 8), (12, 4)], 16), // gap
+        v2_two_chunks([(8, 8), (0, 8)], 16),  // out of order
+    ];
+    for (i, bytes) in cases.iter().enumerate() {
+        let err = ContainerReader::from_bytes(bytes.clone()).unwrap_err();
+        assert!(format!("{err}").contains("tiling"), "case {i}: {err}");
+        let path = tmp_path(&format!("tiling_{i}.bin"));
+        std::fs::write(&path, bytes).unwrap();
+        assert!(ContainerReader::open(&path).is_err(), "case {i} parsed from file");
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+/// Hand-build a v1 container with one raw (selection 2) entry of
+/// `payload_len` bytes.
+fn v1_raw_entry(payload_len: usize) -> Vec<u8> {
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(b"ADAPTC01");
+    varint::write_u64(&mut bytes, 1);
+    varint::write_str(&mut bytes, "r");
+    bytes.push(2); // raw selection
+    varint::write_u64(&mut bytes, payload_len as u64);
+    varint::write_bytes(&mut bytes, &vec![0u8; payload_len]);
+    bytes
+}
+
+#[test]
+fn regression_odd_length_raw_v1_entry_rejected() {
+    // A multiple of 4 parses and decodes losslessly...
+    let good = v1_raw_entry(12);
+    assert!(Container::from_bytes(&good).is_ok());
+    let reader = ContainerReader::from_bytes(good).unwrap();
+    let registry = CodecRegistry::default();
+    let (data, _) = reader.decode_chunk(&registry, 0, 0).unwrap();
+    assert_eq!(data, vec![0.0f32; 3]);
+    // ...but a ragged raw payload is Corrupt at parse time in both v1
+    // parsers, not a silent short read of f32s.
+    for odd in [2usize, 5, 1023] {
+        let bad = v1_raw_entry(odd);
+        assert!(Container::from_bytes(&bad).is_err(), "{odd}-byte raw entry parsed (v1)");
+        assert!(
+            ContainerReader::from_bytes(bad).is_err(),
+            "{odd}-byte raw entry parsed (reader)"
+        );
+    }
+}
