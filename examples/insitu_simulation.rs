@@ -112,6 +112,7 @@ fn main() -> adaptivec::Result<()> {
 
     let (mut total_raw, mut total_stored) = (0u64, 0u64);
     let (mut peak_payload, mut outputs) = (0u64, 0u64);
+    let (mut peak_scratch, mut compress_calls, mut total_chunks) = (0u64, 0u64, 0u64);
     for step in 0..steps {
         sim.step();
         if step % output_every != 0 {
@@ -120,6 +121,8 @@ fn main() -> adaptivec::Result<()> {
         let fields = sim.snapshot(step);
         // Stream this step's state straight to its own container file
         // (file-per-timestep, the paper's file-per-process I/O shape).
+        // The default single-pass plan compresses each chunk exactly
+        // once, spilling payloads to scratch until the index settles.
         let path = tmp.join(format!("step{step:04}.adaptivec2"));
         let sink = std::io::BufWriter::new(std::fs::File::create(&path)?);
         let (report, _) =
@@ -127,6 +130,9 @@ fn main() -> adaptivec::Result<()> {
         total_raw += report.total_raw_bytes();
         total_stored += report.total_stored_bytes();
         peak_payload = peak_payload.max(report.peak_payload_bytes);
+        peak_scratch = peak_scratch.max(report.peak_scratch_bytes);
+        compress_calls += report.compress_calls.total();
+        total_chunks += report.total_chunks() as u64;
         outputs += 1;
 
         // Verify in-situ output quality by reading the step file back
@@ -155,12 +161,19 @@ fn main() -> adaptivec::Result<()> {
     }
     println!(
         "\naccumulated: {:.1} MB raw -> {:.1} MB stored (ratio {:.2}); \
-         peak in-memory payload {:.1} KB vs {:.1} KB avg stored per step",
+         peak in-memory payload {:.1} KB vs {:.1} KB avg stored per step; \
+         {compress_calls} codec calls for {total_chunks} chunks \
+         (single-pass: compressed once), peak scratch {:.1} KB",
         total_raw as f64 / 1e6,
         total_stored as f64 / 1e6,
         total_raw as f64 / total_stored as f64,
         peak_payload as f64 / 1e3,
-        total_stored as f64 / outputs.max(1) as f64 / 1e3
+        total_stored as f64 / outputs.max(1) as f64 / 1e3,
+        peak_scratch as f64 / 1e3
+    );
+    assert_eq!(
+        compress_calls, total_chunks,
+        "single-pass writer must invoke each codec exactly once per chunk"
     );
     std::fs::remove_dir_all(&tmp).ok();
     println!("insitu_simulation OK — all bounds verified");

@@ -137,12 +137,23 @@ fn main() -> adaptivec::Result<()> {
     let (srep, _) =
         coord.run_chunked_to(&fields, Policy::RateDistortion, eb_rel, 64 * 1024, sink)?;
     println!(
-        "streamed {} fields: ratio {:.2}, peak payload {} B vs {} B buffered ({:.1}%)",
+        "streamed {} fields ({}): ratio {:.2}, peak payload {} B vs {} B buffered ({:.1}%); \
+         {} codec calls for {} chunks, peak scratch {} B{}",
         srep.fields.len(),
+        srep.write_plan.name(),
         srep.overall_ratio(),
         srep.peak_payload_bytes,
         srep.total_stored_bytes(),
-        srep.peak_payload_frac() * 100.0
+        srep.peak_payload_frac() * 100.0,
+        srep.compress_calls.total(),
+        srep.total_chunks(),
+        srep.peak_scratch_bytes,
+        if srep.scratch_spilled { " (spilled to temp file)" } else { " (in memory)" }
+    );
+    assert_eq!(
+        srep.compress_calls.total(),
+        srep.total_chunks() as u64,
+        "single-pass writer must compress each chunk exactly once"
     );
     let reader = ContainerReader::open(&path)?; // index-only pread open
     let target = &fields[fields.len() / 2];

@@ -1,11 +1,15 @@
-//! Container store/load microbenchmarks for the v2 (chunked, seekable)
+//! Container store/load microbenchmarks for the chunked, seekable
 //! format:
 //!
 //! * per-field (v1) vs per-chunk (v2) selection — ratio + wall time,
 //!   quantifying what finer selection granularity costs/buys;
 //! * full-container decode vs single-field partial decode — the v2
 //!   index means `load_field` touches one field's payload bytes
-//!   instead of parsing and decoding the whole container.
+//!   instead of parsing and decoding the whole container;
+//! * streamed write plans — single-pass spill (compress once, splice
+//!   from scratch) vs two-pass recompress (compress twice), the
+//!   headline write-path comparison, plus scratch accounting;
+//! * pread partial reads, raw vs through the LRU `CachedSource`.
 //!
 //! CI smoke knobs (`bench-smoke` job): `ADAPTIVEC_BENCH_ITERS` caps
 //! iterations, `ADAPTIVEC_BENCH_SCALE` shrinks the dataset, and
@@ -17,7 +21,7 @@ use adaptivec::bench_util::{
     bench, bytes_h, iters_override, scale_override, speedup, JsonReport, Table,
 };
 use adaptivec::coordinator::store::ContainerReader;
-use adaptivec::coordinator::Coordinator;
+use adaptivec::coordinator::{Coordinator, WritePlan};
 use adaptivec::data::Dataset;
 use adaptivec::estimator::selector::AutoSelector;
 
@@ -108,12 +112,20 @@ fn main() {
     ]);
     t.print("store_throughput — seekable v2 decode paths");
 
-    // --- write: buffered build-then-write vs streamed sink ----------
+    // --- write: buffered build-then-write vs streamed plans ---------
     let tmp = std::env::temp_dir().join("adaptivec_store_throughput_bench");
     std::fs::create_dir_all(&tmp).unwrap();
     let buf_path = tmp.join("buffered.adaptivec2");
     let stream_path = tmp.join("streamed.adaptivec2");
-    let mut t = Table::new(&["write path", "time", "peak payload", "vs buffered"]);
+    let two_pass_path = tmp.join("two_pass.adaptivec2");
+    let mut t = Table::new(&[
+        "write path",
+        "time",
+        "compress calls",
+        "peak scratch",
+        "vs buffered",
+        "single_pass_vs_two_pass",
+    ]);
 
     let tm_buffered = bench(0, iters_override(2), || {
         let rep = coord.run_chunked(&fields, Policy::RateDistortion, eb, 64 * 1024).unwrap();
@@ -123,32 +135,72 @@ fn main() {
     t.row(&[
         "buffered (run_chunked + write_file)".into(),
         format!("{tm_buffered}"),
-        bytes_h(reader.stored_bytes()),
+        "-".into(),
+        format!("{} (whole payload resident)", bytes_h(reader.stored_bytes())),
+        "1.00x".into(),
+        "-".into(),
+    ]);
+
+    // Two-pass recompress: the pre-spill protocol, compresses twice.
+    let mut two_pass_coord = coord.clone();
+    two_pass_coord.write_plan = WritePlan::TwoPassRecompress;
+    let mut two_calls = 0u64;
+    let tm_two_pass = bench(0, iters_override(2), || {
+        let sink = std::io::BufWriter::new(std::fs::File::create(&two_pass_path).unwrap());
+        let (srep, _) = two_pass_coord
+            .run_chunked_to(&fields, Policy::RateDistortion, eb, 64 * 1024, sink)
+            .unwrap();
+        two_calls = srep.compress_calls.total();
+    });
+    json.record("v2_write_two_pass", tm_two_pass);
+    t.row(&[
+        "streamed two-pass (recompress)".into(),
+        format!("{tm_two_pass}"),
+        two_calls.to_string(),
+        "0 B".into(),
+        speedup(&tm_buffered, &tm_two_pass),
         "1.00x".into(),
     ]);
 
-    let mut peak = 0u64;
-    let tm_streamed = bench(0, iters_override(2), || {
+    // Single-pass spill: compress once, splice from scratch. The
+    // `single_pass_vs_two_pass` column is the headline speedup.
+    let mut single_coord = coord.clone();
+    single_coord.write_plan = WritePlan::SinglePassSpill;
+    let (mut peak_scratch, mut single_calls, mut spilled) = (0u64, 0u64, false);
+    let tm_single = bench(0, iters_override(2), || {
         let sink = std::io::BufWriter::new(std::fs::File::create(&stream_path).unwrap());
-        let (srep, _) = coord
+        let (srep, _) = single_coord
             .run_chunked_to(&fields, Policy::RateDistortion, eb, 64 * 1024, sink)
             .unwrap();
-        peak = srep.peak_payload_bytes;
+        peak_scratch = srep.peak_scratch_bytes;
+        single_calls = srep.compress_calls.total();
+        spilled = srep.scratch_spilled;
     });
-    json.record("v2_write_streamed", tm_streamed);
+    json.record("v2_write_single_pass", tm_single);
+    json.record("v2_write_streamed", tm_single); // continuity alias for the perf trajectory
     t.row(&[
-        "streamed (run_chunked_to)".into(),
-        format!("{tm_streamed}"),
-        bytes_h(peak),
-        speedup(&tm_buffered, &tm_streamed),
+        format!(
+            "streamed single-pass (spill{})",
+            if spilled { " file" } else { ", in mem" }
+        ),
+        format!("{tm_single}"),
+        single_calls.to_string(),
+        format!("peak_scratch_bytes {}", bytes_h(peak_scratch)),
+        speedup(&tm_buffered, &tm_single),
+        speedup(&tm_two_pass, &tm_single),
     ]);
-    t.print("store_throughput — streamed vs buffered write");
+    t.print("store_throughput — streamed write plans (single_pass_vs_two_pass)");
+    assert_eq!(two_calls, 2 * single_calls, "two-pass must pay exactly double");
 
-    // The two paths must produce byte-identical containers.
+    // All three paths must produce byte-identical containers.
     let streamed_bytes = std::fs::read(&stream_path).unwrap();
     assert!(
         streamed_bytes == std::fs::read(&buf_path).unwrap(),
         "streamed and buffered containers diverged"
+    );
+    assert!(
+        streamed_bytes == std::fs::read(&two_pass_path).unwrap(),
+        "single-pass and two-pass containers diverged"
     );
 
     // --- read: in-memory reader vs pread-backed file reader ---------
@@ -180,6 +232,17 @@ fn main() {
         format!("load_field '{target}' (pread file)"),
         format!("{tm_pread_field}"),
         speedup(&tm_mem_field, &tm_pread_field),
+    ]);
+    // Hot repeated loads through the LRU chunk-range cache: after the
+    // warmup iteration every chunk read is a memory copy, no syscall.
+    let cached_reader = ContainerReader::open_cached(&stream_path, 64 << 20).unwrap();
+    let tm_cached_field =
+        bench(1, iters_override(5), || coord.load_field(&cached_reader, &target).unwrap());
+    json.record("v2_partial_decode_cached_pread", tm_cached_field);
+    t.row(&[
+        format!("load_field '{target}' (cached pread)"),
+        format!("{tm_cached_field}"),
+        speedup(&tm_mem_field, &tm_cached_field),
     ]);
     t.print("store_throughput — pread-backed partial reads");
     std::fs::remove_dir_all(&tmp).ok();

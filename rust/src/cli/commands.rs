@@ -11,7 +11,7 @@
 
 use super::args::Args;
 use crate::baseline::Policy;
-use crate::coordinator::{store::ContainerReader, Coordinator};
+use crate::coordinator::{store::ContainerReader, Coordinator, WritePlan};
 use crate::data::{Dataset, Field};
 use crate::estimator::selector::{AutoSelector, CandidateSet, SelectorConfig};
 use crate::iosim::{FsModel, ThroughputModel, PROC_SWEEP};
@@ -27,9 +27,15 @@ COMMANDS:
               [--policy ours|sz|zfp|dct|eb|optimum|baseline] [--workers N]
               [--out FILE] [--seed N] [--rsp 0.05] [--chunk-elems N]
               [--codecs sz,zfp,dct] [--chunk-prior N]
-              (--chunk-elems > 0 streams a chunked, seekable v2
-               container straight to disk — the full payload is never
-               held in memory; chunks smaller than --chunk-prior (default
+              [--write-plan single|two-pass] [--spill-mem BYTES]
+              (--chunk-elems > 0 streams a chunked, seekable container
+               straight to disk — the full payload is never held in
+               memory. The default single-pass plan compresses each
+               chunk exactly once, spilling payloads to scratch space
+               until the index is written; --write-plan two-pass keeps
+               the scratch-free protocol that compresses twice, and
+               --spill-mem caps the in-memory scratch before a temp
+               file is used. Chunks smaller than --chunk-prior (default
                65536 elems) share one field-level selection, larger
                chunks select independently — --chunk-prior 0 forces
                per-chunk selection everywhere; --codecs restricts the
@@ -91,6 +97,14 @@ fn cmd_compress(argv: &[String]) -> Result<()> {
     let chunk_elems: usize = args.get_or("chunk-elems", 0)?;
     let chunk_prior: usize =
         args.get_or("chunk-prior", crate::coordinator::DEFAULT_CHUNK_PRIOR_ELEMS)?;
+    let write_plan = match args.get("write-plan") {
+        None => WritePlan::default(),
+        Some(s) => WritePlan::parse(s).ok_or_else(|| {
+            Error::InvalidArg(format!("--write-plan: '{s}' (expected single or two-pass)"))
+        })?,
+    };
+    let spill_mem: usize =
+        args.get_or("spill-mem", crate::coordinator::spill::DEFAULT_SPILL_MEM_BUDGET)?;
     let cfg = selector_cfg(&args)?;
     args.check_unknown()?;
 
@@ -103,6 +117,8 @@ fn cmd_compress(argv: &[String]) -> Result<()> {
         },
     );
     coord.chunk_prior_elems = chunk_prior;
+    coord.write_plan = write_plan;
+    coord.spill.mem_budget = spill_mem;
     // Per-codec tallies resolve names through the registry, so every
     // registered codec (including DCT, id 3) prints by name.
     let registry = AutoSelector::new(cfg).registry();
@@ -131,10 +147,25 @@ fn cmd_compress(argv: &[String]) -> Result<()> {
             return Err(e.into());
         }
         let wall = t0.elapsed();
-        let chunks: usize = report.fields.iter().map(|f| f.chunks.len()).sum();
+        let chunks = report.total_chunks();
+        // The compression-work line is what the single-pass protocol
+        // is for: each chunk's codec ran exactly once (vs twice under
+        // two-pass), proven by the report's call counters.
+        let work = match report.write_plan {
+            WritePlan::SinglePassSpill => format!(
+                "{} of {chunks} chunks compressed once (single-pass spill, peak scratch {} B{})",
+                report.compress_calls.total(),
+                report.peak_scratch_bytes,
+                if report.scratch_spilled { ", spilled to temp file" } else { ", in memory" },
+            ),
+            WritePlan::TwoPassRecompress => format!(
+                "{chunks} chunks compressed twice (two-pass recompress, {:.2}s regenerating)",
+                report.recompress_time.as_secs_f64(),
+            ),
+        };
         println!(
-            "{} fields / {chunks} chunks (v2 streamed, {chunk_elems} elems/chunk), policy {}, \
-             eb_rel {eb:.0e}: ratio {:.2} ({} -> {} bytes), picks {}, \
+            "{} fields / {chunks} chunks (streamed, {chunk_elems} elems/chunk), policy {}, \
+             eb_rel {eb:.0e}: ratio {:.2} ({} -> {} bytes), picks {}, {work}, \
              peak payload write buffer {} B vs {} B buffered ({:.1}%), wall {:.2}s -> {out}",
             report.fields.len(),
             policy.name(),
@@ -319,6 +350,32 @@ fn cmd_iobench(argv: &[String]) -> Result<()> {
             print!(" {:>10.2}", tput / 1e9);
         }
         println!();
+    }
+
+    // Streamed-write protocol comparison (modeled): the single-pass
+    // spill plan pays a scratch round-trip over the *compressed*
+    // bytes (slab-granular reads — one positioned read per chunk, as
+    // the splice visits completion-order slabs in declared order);
+    // two-pass re-runs compression over the raw bytes. Compression
+    // time is the measured RateDistortion figure; slab count is one
+    // per field at this whole-field granularity.
+    let &(_, _, rd_stored, rd_comp) = per_policy
+        .iter()
+        .find(|(p, ..)| *p == Policy::RateDistortion)
+        .expect("RateDistortion is in the policy sweep");
+    let slabs = fields.len();
+    println!(
+        "\nstreamed write plans (modeled wall s/proc, 'ours' policy): {:>12} {:>12} {:>8}",
+        "single-pass", "two-pass", "speedup"
+    );
+    for &p in &[1usize, 64, 1024] {
+        let single = tm.fs.single_pass_store_time(p, rd_stored, slabs, rd_comp, 0.0);
+        let two = tm.fs.two_pass_store_time(p, rd_stored, rd_comp);
+        let label = format!("p={p}");
+        println!(
+            "{label:>58} {single:>12.3} {two:>12.3} {:>7.2}x",
+            two / single.max(f64::MIN_POSITIVE)
+        );
     }
 
     // Partial-load comparison (v2 index path): reconstructing one
@@ -540,9 +597,9 @@ mod tests {
         .map(|s| s.to_string())
         .collect();
         run("compress", &argv).unwrap();
-        // Every chunk of the v2 container is DCT-selected (byte 3).
+        // Every chunk of the chunked container is DCT-selected (byte 3).
         let reader = ContainerReader::open(&out).unwrap();
-        assert_eq!(reader.version, 2);
+        assert_eq!(reader.version, 3);
         assert!(reader
             .fields
             .iter()
@@ -566,6 +623,51 @@ mod tests {
         )
         .unwrap();
         assert!(outdir.join(format!("{name}.f32")).is_file());
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    fn write_plan_flag_both_protocols_roundtrip() {
+        let tmp = std::env::temp_dir().join("adaptivec_cli_write_plan_test");
+        std::fs::create_dir_all(&tmp).unwrap();
+        let single = tmp.join("single.adaptivec2");
+        let two = tmp.join("two.adaptivec2");
+        for (plan, out) in [("single", &single), ("two-pass", &two)] {
+            let argv: Vec<String> = [
+                "--dataset", "atm", "--scale", "0", "--eb", "1e-3", "--out",
+                out.to_str().unwrap(), "--workers", "2", "--chunk-elems", "2048",
+                "--write-plan", plan,
+            ]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+            run("compress", &argv).unwrap();
+        }
+        // The protocol is invisible in the bytes.
+        assert_eq!(
+            std::fs::read(&single).unwrap(),
+            std::fs::read(&two).unwrap(),
+            "write plans must produce identical containers"
+        );
+        // --spill-mem 0 forces the temp-file path; output unchanged.
+        let spilled = tmp.join("spilled.adaptivec2");
+        let argv: Vec<String> = [
+            "--dataset", "atm", "--scale", "0", "--eb", "1e-3", "--out",
+            spilled.to_str().unwrap(), "--workers", "2", "--chunk-elems", "2048",
+            "--spill-mem", "0",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        run("compress", &argv).unwrap();
+        assert_eq!(std::fs::read(&single).unwrap(), std::fs::read(&spilled).unwrap());
+        // Unknown plan names are rejected.
+        let argv: Vec<String> =
+            ["--dataset", "atm", "--scale", "0", "--write-plan", "zigzag"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        assert!(run("compress", &argv).is_err());
         std::fs::remove_dir_all(&tmp).ok();
     }
 

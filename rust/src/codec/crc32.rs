@@ -1,0 +1,81 @@
+//! CRC-32 (IEEE 802.3, reflected polynomial 0xEDB88320) — the
+//! per-chunk payload checksum of the `ADAPTC03` container index
+//! (DESIGN.md §6). Hand-rolled and std-only: the offline build has no
+//! `crc32fast` (DESIGN.md §9), and the container only needs bit-rot
+//! detection, not cryptographic strength. Table-driven, one byte per
+//! step; CRC-32 detects all single-bit and all burst errors up to 32
+//! bits, which is exactly the "flipped bits surface at read time, not
+//! as a confusing codec `Corrupt`" contract the store wants.
+
+/// The 256-entry lookup table for the reflected IEEE polynomial,
+/// generated at compile time.
+const TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            crc = if crc & 1 != 0 { (crc >> 1) ^ 0xEDB8_8320 } else { crc >> 1 };
+            bit += 1;
+        }
+        table[i] = crc;
+        i += 1;
+    }
+    table
+};
+
+/// CRC-32 of `bytes` (initial value 0, i.e. a fresh stream).
+#[inline]
+pub fn crc32(bytes: &[u8]) -> u32 {
+    update(0, bytes)
+}
+
+/// Continue a CRC-32 over more bytes: `update(update(0, a), b) ==
+/// crc32(a ++ b)`, so streamed producers can checksum incrementally.
+pub fn update(crc: u32, bytes: &[u8]) -> u32 {
+    let mut state = !crc;
+    for &b in bytes {
+        state = TABLE[((state ^ b as u32) & 0xFF) as usize] ^ (state >> 8);
+    }
+    !state
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // The standard CRC-32 check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"a"), 0xE8B7_BE43);
+        // 32 zero bytes are not a fixed point.
+        assert_eq!(crc32(&[0u8; 32]), 0x190A_55AD);
+    }
+
+    #[test]
+    fn incremental_update_matches_one_shot() {
+        let data: Vec<u8> = (0u16..1500).map(|i| (i * 7 % 251) as u8).collect();
+        for split in [0usize, 1, 2, 700, data.len() - 1, data.len()] {
+            let inc = update(crc32(&data[..split]), &data[split..]);
+            assert_eq!(inc, crc32(&data), "split at {split}");
+        }
+    }
+
+    #[test]
+    fn single_bit_flips_always_detected() {
+        // CRC-32 guarantees detection of every single-bit error; the
+        // container fuzz tests lean on this, so pin it here.
+        let data: Vec<u8> = (0u16..256).map(|i| i as u8).collect();
+        let base = crc32(&data);
+        for pos in (0..data.len()).step_by(17) {
+            for bit in 0..8 {
+                let mut c = data.clone();
+                c[pos] ^= 1 << bit;
+                assert_ne!(crc32(&c), base, "flip at {pos}.{bit} undetected");
+            }
+        }
+    }
+}

@@ -5,6 +5,7 @@
 
 pub mod arith;
 pub mod bitstream;
+pub mod crc32;
 pub mod huffman;
 pub mod varint;
 

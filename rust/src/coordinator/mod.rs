@@ -6,8 +6,10 @@
 //! * [`pool`] — the worker pool (std threads, shared queue, panic
 //!   isolation);
 //! * [`router`] — per-field policy dispatch (Algorithm 1 / baselines);
+//! * [`spill`] — scratch slab store for the single-pass streaming
+//!   writer (in-memory fast path, delete-on-drop temp-file overflow);
 //! * [`store`] — the on-disk containers with selection bits s_i
-//!   (per-field v1 and chunked, seekable v2);
+//!   (per-field v1 and chunked, seekable v2/v3);
 //! * [`stats`] — aggregate metrics for the run.
 //!
 //! The chunked entry points ([`Coordinator::run_chunked`],
@@ -22,6 +24,7 @@
 pub mod job;
 pub mod pool;
 pub mod router;
+pub mod spill;
 pub mod stats;
 pub mod store;
 
@@ -34,6 +37,47 @@ use crate::Result;
 /// field's selection prior instead of re-sampling (DESIGN.md §11).
 pub const DEFAULT_CHUNK_PRIOR_ELEMS: usize = 64 * 1024;
 
+/// Which protocol [`Coordinator::run_chunked_to`] streams a container
+/// with (DESIGN.md §6).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum WritePlan {
+    /// Compress each chunk exactly once: workers append finished
+    /// payloads to a scratch slab store ([`spill::SpillStore`]) in
+    /// completion order, and once every size is known the index is
+    /// written and the slabs are spliced into the sink in declared
+    /// order — the sink written sequentially, each slab read exactly
+    /// once (slab-granular positioned reads, since slabs landed in
+    /// completion order). Trades the two-pass protocol's second
+    /// compression pass for one extra scratch I/O pass over the
+    /// *compressed* bytes — compression is orders of magnitude slower
+    /// than scratch I/O, so this is the default.
+    #[default]
+    SinglePassSpill,
+    /// The original two-pass protocol: pass 1 compresses every chunk
+    /// for its size only (payloads dropped), pass 2 regenerates each
+    /// stream from its pinned decision. Needs no scratch space at all
+    /// — for environments without writable temp storage.
+    TwoPassRecompress,
+}
+
+impl WritePlan {
+    /// Parse a CLI name; `None` for unknown values.
+    pub fn parse(s: &str) -> Option<WritePlan> {
+        match s.to_ascii_lowercase().as_str() {
+            "single" | "single-pass" | "spill" => Some(WritePlan::SinglePassSpill),
+            "two-pass" | "twopass" | "recompress" => Some(WritePlan::TwoPassRecompress),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            WritePlan::SinglePassSpill => "single-pass-spill",
+            WritePlan::TwoPassRecompress => "two-pass-recompress",
+        }
+    }
+}
+
 /// The coordinator: configuration + entry points.
 #[derive(Clone, Debug)]
 pub struct Coordinator {
@@ -44,6 +88,11 @@ pub struct Coordinator {
     /// larger chunks keep independent per-chunk selection. 0 disables
     /// the prior entirely.
     pub chunk_prior_elems: usize,
+    /// Streaming write protocol for [`Coordinator::run_chunked_to`].
+    pub write_plan: WritePlan,
+    /// Scratch-space configuration for the single-pass spill protocol
+    /// (memory budget before a temp file is created, and where).
+    pub spill: spill::SpillConfig,
 }
 
 impl Default for Coordinator {
@@ -52,6 +101,8 @@ impl Default for Coordinator {
             selector_cfg: SelectorConfig::default(),
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
             chunk_prior_elems: DEFAULT_CHUNK_PRIOR_ELEMS,
+            write_plan: WritePlan::default(),
+            spill: spill::SpillConfig::default(),
         }
     }
 }
@@ -79,12 +130,79 @@ impl ChunkJob<'_> {
     }
 }
 
+/// Everything the streaming write path learns about one chunk from its
+/// (single or sizing) compression: the pinned decision, the declared
+/// layout entry (size + CRC), and — on the single-pass plan — where
+/// the finished payload landed in the spill store.
+struct ChunkOutcome {
+    decision: router::Decision,
+    decl: store::ChunkDecl,
+    raw_bytes: u64,
+    compress_time: std::time::Duration,
+    /// `Some` when the payload was spilled (single-pass); `None` when
+    /// it was dropped after sizing (two-pass).
+    slab: Option<spill::SlabRef>,
+}
+
+/// Regroup flat chunk outcomes into the per-field declaration list the
+/// [`store::ContainerV2Writer`] serializes its index from.
+fn build_decls(
+    fields: &[Field],
+    chunks_per_field: &[usize],
+    outcomes: &[ChunkOutcome],
+    chunk_elems: usize,
+) -> Vec<store::FieldDecl> {
+    let mut it = outcomes.iter();
+    fields
+        .iter()
+        .zip(chunks_per_field)
+        .map(|(f, &n)| store::FieldDecl {
+            name: f.name.clone(),
+            dims: f.dims,
+            raw_bytes: f.raw_bytes() as u64,
+            chunk_elems: chunk_elems as u64,
+            chunks: it.by_ref().take(n).map(|s| s.decl).collect(),
+        })
+        .collect()
+}
+
+/// Regroup flat chunk outcomes into per-field streamed summaries, in
+/// chunk order (what [`stats::StreamedRunReport`] reports).
+fn streamed_summaries(
+    fields: &[Field],
+    chunks_per_field: &[usize],
+    outcomes: &[ChunkOutcome],
+    chunk_elems: usize,
+) -> Vec<stats::StreamedFieldSummary> {
+    let mut it = outcomes.iter();
+    fields
+        .iter()
+        .zip(chunks_per_field)
+        .map(|(f, &n)| stats::StreamedFieldSummary {
+            name: f.name.clone(),
+            dims: f.dims,
+            chunk_elems,
+            chunks: it
+                .by_ref()
+                .take(n)
+                .map(|s| stats::StreamedChunkStat {
+                    selection: s.decl.selection,
+                    stored_bytes: s.decl.len,
+                    raw_bytes: s.raw_bytes,
+                    estimate_time: s.decision.estimate_time,
+                    compress_time: s.compress_time,
+                })
+                .collect(),
+        })
+        .collect()
+}
+
 impl Coordinator {
     pub fn new(selector_cfg: SelectorConfig, workers: usize) -> Self {
         Coordinator {
             selector_cfg,
             workers: workers.max(1),
-            chunk_prior_elems: DEFAULT_CHUNK_PRIOR_ELEMS,
+            ..Coordinator::default()
         }
     }
 
@@ -183,18 +301,33 @@ impl Coordinator {
     /// Chunked compression streamed straight to an [`std::io::Write`]
     /// sink: the container lands on disk without the full payload ever
     /// being resident. Output is byte-identical to
-    /// `run_chunked(...).to_container().to_bytes()`.
+    /// `run_chunked(...).to_container().to_bytes()` under *both*
+    /// [`WritePlan`]s — the protocol choice is invisible in the bytes.
     ///
-    /// Two-pass, index-first protocol (DESIGN.md §6): pass 1 decides
-    /// and compresses every chunk for its *size only* (payloads are
-    /// dropped as soon as they are measured), which lets the
-    /// [`store::ContainerV2Writer`] emit the complete index up front;
-    /// pass 2 regenerates each stream from its pinned
-    /// [`router::Decision`] in bounded parallel batches and appends it
-    /// in index order. Codecs are deterministic (DESIGN.md §7), so the
-    /// regenerated bytes match the declared sizes — the writer verifies
-    /// every length. Peak payload memory is the in-flight batch, not
-    /// the archive; the report records the observed peak.
+    /// The index-first wire format needs every chunk's compressed size
+    /// before the first payload byte, and the two plans pay for that
+    /// differently (DESIGN.md §6):
+    ///
+    /// * [`WritePlan::SinglePassSpill`] (default) — workers compress
+    ///   each chunk **once**, appending the finished payload to a
+    ///   [`spill::SpillStore`] in completion order (in memory for
+    ///   small runs, a delete-on-drop temp file past the budget).
+    ///   Once all sizes and CRCs are known, the index is written and
+    ///   the slabs are spliced into the sink in declared order in one
+    ///   copy pass (sink sequential, slab reads positioned). Per-worker
+    ///   [`router::CompressScratch`] staging removes per-chunk
+    ///   allocation churn; prior-covered chunks compress straight out
+    ///   of the parent field's buffer with no copy at all.
+    /// * [`WritePlan::TwoPassRecompress`] — pass 1 sizes and drops
+    ///   payloads, pass 2 regenerates each stream from its pinned
+    ///   [`router::Decision`] in bounded parallel batches. No scratch
+    ///   space, but every chunk is compressed twice
+    ///   (`recompress_time` records the price).
+    ///
+    /// The writer verifies every stream against its declared length
+    /// *and* CRC-32, so a non-deterministic codec can never silently
+    /// corrupt the index; the report's `compress_calls` counter proves
+    /// the single-pass guarantee (exactly one `compress` per chunk).
     pub fn run_chunked_to<W: std::io::Write>(
         &self,
         fields: &[Field],
@@ -203,12 +336,104 @@ impl Coordinator {
         chunk_elems: usize,
         sink: W,
     ) -> Result<(stats::StreamedRunReport, W)> {
-        struct Sizing {
-            decision: router::Decision,
-            stream_len: u64,
-            raw_bytes: usize,
-            compress_time: std::time::Duration,
+        match self.write_plan {
+            WritePlan::SinglePassSpill => {
+                self.run_chunked_single_pass(fields, policy, eb_rel, chunk_elems, sink)
+            }
+            WritePlan::TwoPassRecompress => {
+                self.run_chunked_two_pass(fields, policy, eb_rel, chunk_elems, sink)
+            }
         }
+    }
+
+    /// Single-pass spill protocol: compress once, spill, splice.
+    fn run_chunked_single_pass<W: std::io::Write>(
+        &self,
+        fields: &[Field],
+        policy: Policy,
+        eb_rel: f64,
+        chunk_elems: usize,
+        sink: W,
+    ) -> Result<(stats::StreamedRunReport, W)> {
+        let router = router::Router::new(self.selector_cfg, policy, eb_rel);
+        let (jobs, chunks_per_field) = self.chunk_jobs(&router, fields, chunk_elems)?;
+        let scratch_store = spill::SpillStore::new(self.spill.clone());
+
+        // The only compression pass: decide + compress each chunk and
+        // append the finished payload to the spill store in completion
+        // order. Prior-covered chunks skip staging entirely (the span
+        // compresses in place); the rest stage into the per-worker
+        // reusable scratch. The store deletes its temp file on drop,
+        // so every `?` below also cleans up the scratch space.
+        let store_ref = &scratch_store;
+        let sizings = pool::run_jobs_scoped(
+            self.workers,
+            &jobs,
+            router::CompressScratch::default,
+            |j, scratch| {
+                let span = &j.field.data[j.start..j.start + j.dims.len()];
+                let decision = match j.prior.as_ref() {
+                    Some(p) => router.decide_from_prior(p, j.chunk_idx),
+                    None => {
+                        router.decide(scratch.stage_chunk(j.field, j.chunk_idx, j.start, j.dims))?
+                    }
+                };
+                let t0 = std::time::Instant::now();
+                let stream = router.compress_decided_span(span, j.dims, &decision)?;
+                let compress_time = t0.elapsed();
+                let decl = store::ChunkDecl::of(decision.selection(), &stream);
+                let slab = store_ref.append(&stream)?;
+                Ok(ChunkOutcome {
+                    decision,
+                    decl,
+                    raw_bytes: span.len() as u64 * 4,
+                    compress_time,
+                    slab: Some(slab),
+                })
+            },
+        )?;
+        let peak_scratch_bytes = scratch_store.total_bytes();
+        let scratch_spilled = scratch_store.spilled();
+
+        // All sizes + CRCs known: emit magic + index, then splice the
+        // slabs into the sink in declared order — the sink written
+        // sequentially, each slab read exactly once (positioned).
+        let decls = build_decls(fields, &chunks_per_field, &sizings, chunk_elems);
+        let mut writer = store::ContainerV2Writer::new(sink, &decls)?;
+        let mut buf = Vec::new();
+        let mut peak_payload = 0u64;
+        for (idx, s) in sizings.iter().enumerate() {
+            scratch_store.read_slab(s.slab.expect("single-pass chunks spill"), &mut buf)?;
+            peak_payload = peak_payload.max(buf.len() as u64);
+            writer.put_chunk(idx, &buf)?;
+        }
+        let sink = writer.finish()?;
+        drop(scratch_store); // scratch file (if any) deleted here on success
+
+        let report = stats::StreamedRunReport {
+            policy,
+            eb_rel,
+            write_plan: WritePlan::SinglePassSpill,
+            fields: streamed_summaries(fields, &chunks_per_field, &sizings, chunk_elems),
+            peak_payload_bytes: peak_payload,
+            peak_scratch_bytes,
+            scratch_spilled,
+            compress_calls: stats::CompressCalls(router.compress_calls().snapshot()),
+            recompress_time: std::time::Duration::ZERO,
+        };
+        Ok((report, sink))
+    }
+
+    /// Two-pass recompress protocol (no scratch space): size, index,
+    /// regenerate.
+    fn run_chunked_two_pass<W: std::io::Write>(
+        &self,
+        fields: &[Field],
+        policy: Policy,
+        eb_rel: f64,
+        chunk_elems: usize,
+        sink: W,
+    ) -> Result<(stats::StreamedRunReport, W)> {
         let router = router::Router::new(self.selector_cfg, policy, eb_rel);
         let (jobs, chunks_per_field) = self.chunk_jobs(&router, fields, chunk_elems)?;
 
@@ -219,36 +444,18 @@ impl Coordinator {
             let decision = router.decide_chunk(&chunk, j.chunk_idx, j.prior.as_ref())?;
             let t0 = std::time::Instant::now();
             let stream = router.compress_decided(&chunk, &decision)?;
-            Ok(Sizing {
+            Ok(ChunkOutcome {
                 decision,
-                stream_len: stream.len() as u64,
-                raw_bytes: chunk.raw_bytes(),
+                decl: store::ChunkDecl::of(decision.selection(), &stream),
+                raw_bytes: chunk.raw_bytes() as u64,
                 compress_time: t0.elapsed(),
+                slab: None,
             })
         })?;
 
         // Every chunk's size is now known: declare the layout and emit
         // magic + index before the first payload byte.
-        let mut decls = Vec::with_capacity(fields.len());
-        {
-            let mut it = sizings.iter();
-            for (f, &n) in fields.iter().zip(&chunks_per_field) {
-                decls.push(store::FieldDecl {
-                    name: f.name.clone(),
-                    dims: f.dims,
-                    raw_bytes: f.raw_bytes() as u64,
-                    chunk_elems: chunk_elems as u64,
-                    chunks: it
-                        .by_ref()
-                        .take(n)
-                        .map(|s| store::ChunkDecl {
-                            selection: s.decision.selection(),
-                            len: s.stream_len,
-                        })
-                        .collect(),
-                });
-            }
-        }
+        let decls = build_decls(fields, &chunks_per_field, &sizings, chunk_elems);
         let mut writer = store::ContainerV2Writer::new(sink, &decls)?;
 
         // Pass 2 — regenerate streams in bounded batches, appending
@@ -256,7 +463,7 @@ impl Coordinator {
         let window = self.workers.max(1) * 2;
         let mut peak_payload = 0u64;
         let mut recompress_time = std::time::Duration::ZERO;
-        let paired: Vec<(&ChunkJob, &Sizing)> = jobs.iter().zip(&sizings).collect();
+        let paired: Vec<(&ChunkJob, &ChunkOutcome)> = jobs.iter().zip(&sizings).collect();
         for batch in paired.chunks(window) {
             let streams = pool::run_jobs(self.workers, batch, |&(j, s)| {
                 let chunk = j.chunk_field();
@@ -274,32 +481,15 @@ impl Coordinator {
         drop(paired);
         let sink = writer.finish()?;
 
-        // Summaries regrouped per field, as run_chunked does.
-        let mut it = sizings.into_iter();
-        let mut out = Vec::with_capacity(fields.len());
-        for (f, n) in fields.iter().zip(chunks_per_field) {
-            out.push(stats::StreamedFieldSummary {
-                name: f.name.clone(),
-                dims: f.dims,
-                chunk_elems,
-                chunks: it
-                    .by_ref()
-                    .take(n)
-                    .map(|s| stats::StreamedChunkStat {
-                        selection: s.decision.selection(),
-                        stored_bytes: s.stream_len,
-                        raw_bytes: s.raw_bytes as u64,
-                        estimate_time: s.decision.estimate_time,
-                        compress_time: s.compress_time,
-                    })
-                    .collect(),
-            });
-        }
         let report = stats::StreamedRunReport {
             policy,
             eb_rel,
-            fields: out,
+            write_plan: WritePlan::TwoPassRecompress,
+            fields: streamed_summaries(fields, &chunks_per_field, &sizings, chunk_elems),
             peak_payload_bytes: peak_payload,
+            peak_scratch_bytes: 0,
+            scratch_spilled: false,
+            compress_calls: stats::CompressCalls(router.compress_calls().snapshot()),
             recompress_time,
         };
         Ok((report, sink))
@@ -451,7 +641,7 @@ mod tests {
         assert!(total_chunks > fields.len(), "expected chunking, got {total_chunks}");
         let bytes = report.to_container().to_bytes();
         let reader = store::ContainerReader::from_bytes(bytes).unwrap();
-        assert_eq!(reader.version, 2);
+        assert_eq!(reader.version, 3);
         let restored = coord.load_reader(&reader).unwrap();
         for (orig, rest) in fields.iter().zip(&restored) {
             assert_eq!(orig.name, rest.name);
@@ -492,29 +682,91 @@ mod tests {
 
     #[test]
     fn run_chunked_to_is_byte_identical_to_buffered_path() {
-        let coord = Coordinator::new(SelectorConfig::default(), 4);
+        let mut coord = Coordinator::new(SelectorConfig::default(), 4);
         let fields = small_fields(3);
-        for chunk_elems in [0usize, 2048] {
-            let buffered = coord
-                .run_chunked(&fields, Policy::RateDistortion, 1e-3, chunk_elems)
-                .unwrap()
-                .to_container()
-                .to_bytes();
-            let (report, streamed) = coord
-                .run_chunked_to(&fields, Policy::RateDistortion, 1e-3, chunk_elems, Vec::new())
-                .unwrap();
-            assert_eq!(streamed, buffered, "chunk_elems {chunk_elems}");
-            assert_eq!(report.total_stored_bytes(), {
-                let r = store::ContainerReader::from_bytes(buffered).unwrap();
-                r.stored_bytes()
-            });
-            // The streaming window never held the whole payload (for
-            // the multi-chunk case with more chunks than the window).
-            if chunk_elems > 0 {
-                assert!(report.peak_payload_bytes <= report.total_stored_bytes());
-                assert!(report.peak_payload_bytes > 0);
+        for plan in [WritePlan::SinglePassSpill, WritePlan::TwoPassRecompress] {
+            coord.write_plan = plan;
+            for chunk_elems in [0usize, 2048] {
+                let buffered = coord
+                    .run_chunked(&fields, Policy::RateDistortion, 1e-3, chunk_elems)
+                    .unwrap()
+                    .to_container()
+                    .to_bytes();
+                let (report, streamed) = coord
+                    .run_chunked_to(&fields, Policy::RateDistortion, 1e-3, chunk_elems, Vec::new())
+                    .unwrap();
+                assert_eq!(report.write_plan, plan);
+                assert_eq!(streamed, buffered, "{plan:?} / chunk_elems {chunk_elems}");
+                assert_eq!(report.total_stored_bytes(), {
+                    let r = store::ContainerReader::from_bytes(buffered).unwrap();
+                    r.stored_bytes()
+                });
+                // The streaming window never held the whole payload
+                // (for the multi-chunk case with more chunks than the
+                // window).
+                if chunk_elems > 0 {
+                    assert!(report.peak_payload_bytes <= report.total_stored_bytes());
+                    assert!(report.peak_payload_bytes > 0);
+                }
             }
         }
+    }
+
+    #[test]
+    fn single_pass_compresses_each_chunk_exactly_once() {
+        let mut coord = Coordinator::new(SelectorConfig::default(), 4);
+        let fields = small_fields(3);
+        coord.write_plan = WritePlan::SinglePassSpill;
+        let (single, _) = coord
+            .run_chunked_to(&fields, Policy::RateDistortion, 1e-3, 2048, Vec::new())
+            .unwrap();
+        let chunks = single.total_chunks() as u64;
+        assert!(chunks > 3, "expected real chunking, got {chunks}");
+        // The headline guarantee: one codec compress per chunk — and
+        // the per-codec split matches the selection tally exactly.
+        assert_eq!(single.compress_calls.total(), chunks);
+        for (sel, (n, _)) in &single.codec_counts().0 {
+            assert_eq!(
+                single.compress_calls.0.get(sel),
+                Some(&(*n as u64)),
+                "selection byte {sel}"
+            );
+        }
+        assert_eq!(single.recompress_time, std::time::Duration::ZERO);
+        // Scratch accounting: the spill store held exactly the payload.
+        assert_eq!(single.peak_scratch_bytes, single.total_stored_bytes());
+        assert!(!single.scratch_spilled, "default budget keeps small runs in memory");
+
+        // The two-pass protocol pays double — that is the work the
+        // spill plan eliminates.
+        coord.write_plan = WritePlan::TwoPassRecompress;
+        let (two, _) = coord
+            .run_chunked_to(&fields, Policy::RateDistortion, 1e-3, 2048, Vec::new())
+            .unwrap();
+        assert_eq!(two.compress_calls.total(), 2 * chunks);
+        assert_eq!(two.peak_scratch_bytes, 0);
+    }
+
+    #[test]
+    fn single_pass_spills_to_disk_under_tiny_budget() {
+        let mut coord = Coordinator::new(SelectorConfig::default(), 2);
+        let dir = std::env::temp_dir().join("adaptivec_coord_spill_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        coord.spill = spill::SpillConfig { mem_budget: 256, dir: Some(dir.clone()) };
+        let fields = small_fields(2);
+        let buffered = coord
+            .run_chunked(&fields, Policy::RateDistortion, 1e-3, 2048)
+            .unwrap()
+            .to_container()
+            .to_bytes();
+        let (report, streamed) = coord
+            .run_chunked_to(&fields, Policy::RateDistortion, 1e-3, 2048, Vec::new())
+            .unwrap();
+        assert_eq!(streamed, buffered, "spilled output must stay byte-identical");
+        assert!(report.scratch_spilled, "256-byte budget must overflow to disk");
+        // The scratch file is gone after a successful run.
+        assert_eq!(std::fs::read_dir(&dir).unwrap().count(), 0);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
@@ -526,7 +778,7 @@ mod tests {
                 let r = coord.run(&fields, Policy::RateDistortion, 1e-3).unwrap();
                 r.to_container().to_bytes()
             }),
-            (2u8, {
+            (3u8, {
                 let r = coord.run_chunked(&fields, Policy::RateDistortion, 1e-3, 2048).unwrap();
                 r.to_container().to_bytes()
             }),
@@ -561,7 +813,7 @@ mod tests {
             .unwrap();
         assert!(report.total_stored_bytes() > 0);
         let reader = store::ContainerReader::open(&path).unwrap();
-        assert_eq!(reader.version, 2);
+        assert_eq!(reader.version, 3);
         let restored = coord.load_reader(&reader).unwrap();
         for (orig, rest) in fields.iter().zip(&restored) {
             assert_eq!(orig.dims, rest.dims);

@@ -15,13 +15,30 @@ pub fn run_jobs<T: Sync, R: Send>(
     items: &[T],
     f: impl Fn(&T) -> Result<R> + Sync,
 ) -> Result<Vec<R>> {
+    run_jobs_scoped(workers, items, || (), |item, _| f(item))
+}
+
+/// [`run_jobs`] with per-worker scratch state: `init` runs once on
+/// each worker thread and the resulting state is threaded through
+/// every job that worker executes — the hook the streaming write path
+/// uses to reuse compression scratch buffers across chunks instead of
+/// allocating per job. `f` must not let the scratch change its output
+/// (worker count and job interleaving stay invisible; verified by
+/// tests).
+pub fn run_jobs_scoped<T: Sync, R: Send, S>(
+    workers: usize,
+    items: &[T],
+    init: impl Fn() -> S + Sync,
+    f: impl Fn(&T, &mut S) -> Result<R> + Sync,
+) -> Result<Vec<R>> {
     let n = items.len();
     if n == 0 {
         return Ok(Vec::new());
     }
     let workers = workers.max(1).min(n);
     if workers == 1 {
-        return items.iter().map(&f).collect();
+        let mut scratch = init();
+        return items.iter().map(|item| f(item, &mut scratch)).collect();
     }
 
     let next = AtomicUsize::new(0);
@@ -32,22 +49,27 @@ pub fn run_jobs<T: Sync, R: Send>(
             let tx = tx.clone();
             let next = &next;
             let f = &f;
-            scope.spawn(move || loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let out = std::panic::catch_unwind(AssertUnwindSafe(|| f(&items[i])))
-                    .unwrap_or_else(|p| {
-                        let msg = p
-                            .downcast_ref::<&str>()
-                            .map(|s| s.to_string())
-                            .or_else(|| p.downcast_ref::<String>().cloned())
-                            .unwrap_or_else(|| "worker panic".into());
-                        Err(Error::Other(format!("worker panicked: {msg}")))
-                    });
-                if tx.send((i, out)).is_err() {
-                    break; // receiver dropped (early error) — stop
+            let init = &init;
+            scope.spawn(move || {
+                let mut scratch = init();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let out =
+                        std::panic::catch_unwind(AssertUnwindSafe(|| f(&items[i], &mut scratch)))
+                            .unwrap_or_else(|p| {
+                                let msg = p
+                                    .downcast_ref::<&str>()
+                                    .map(|s| s.to_string())
+                                    .or_else(|| p.downcast_ref::<String>().cloned())
+                                    .unwrap_or_else(|| "worker panic".into());
+                                Err(Error::Other(format!("worker panicked: {msg}")))
+                            });
+                    if tx.send((i, out)).is_err() {
+                        break; // receiver dropped (early error) — stop
+                    }
                 }
             });
         }
@@ -128,5 +150,43 @@ mod tests {
         let items = vec![5u32];
         let out = run_jobs(64, &items, |&x| Ok(x)).unwrap();
         assert_eq!(out, vec![5]);
+    }
+
+    #[test]
+    fn scoped_scratch_reused_within_a_worker() {
+        // Each worker gets its own scratch; jobs observe (and mutate)
+        // it, and outputs still return in submission order.
+        let items: Vec<usize> = (0..200).collect();
+        let out = run_jobs_scoped(
+            4,
+            &items,
+            Vec::<u8>::new,
+            |&i, scratch| {
+                scratch.push(1);
+                Ok((i * 3, scratch.len()))
+            },
+        )
+        .unwrap();
+        for (k, (v, uses)) in out.iter().enumerate() {
+            assert_eq!(*v, k * 3);
+            // The scratch accumulated at least this job's own push.
+            assert!(*uses >= 1);
+        }
+        // With 4 workers and 200 jobs, at least one worker must have
+        // run many jobs on the same scratch.
+        assert!(out.iter().any(|&(_, uses)| uses > 1));
+    }
+
+    #[test]
+    fn scoped_single_worker_matches_parallel_outputs() {
+        let items: Vec<u64> = (0..64).collect();
+        let run = |w| {
+            run_jobs_scoped(w, &items, || 0u64, |&i, acc| {
+                *acc = acc.wrapping_add(i);
+                Ok(i * i)
+            })
+            .unwrap()
+        };
+        assert_eq!(run(1), run(8));
     }
 }

@@ -5,9 +5,11 @@
 use super::job::FieldResult;
 use crate::baseline::{ebselect, Policy};
 use crate::codec_api::CodecRegistry;
-use crate::data::field::Field;
+use crate::data::field::{Dims, Field};
 use crate::estimator::selector::{AutoSelector, Choice, Estimates, SelectorConfig};
 use crate::Result;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 /// A field-level selection decision shared by that field's chunks
@@ -45,6 +47,99 @@ impl Decision {
     }
 }
 
+/// Per-worker reusable compression scratch: the chunk staging [`Field`]
+/// is overwritten per job (capacity persists across a worker's whole
+/// run), so the hot single-pass write loop performs no per-chunk field
+/// allocation. Created once per pool worker via
+/// [`super::pool::run_jobs_scoped`].
+pub struct CompressScratch {
+    stage: Field,
+}
+
+impl Default for CompressScratch {
+    fn default() -> Self {
+        CompressScratch {
+            stage: Field { name: String::new(), dims: Dims::D1(0), data: Vec::new() },
+        }
+    }
+}
+
+impl CompressScratch {
+    /// Stage one chunk span of `parent` as a reusable [`Field`]
+    /// (replaces the allocating `ChunkJob::chunk_field` on the
+    /// streaming path).
+    pub fn stage_chunk(
+        &mut self,
+        parent: &Field,
+        chunk_idx: usize,
+        start: usize,
+        dims: Dims,
+    ) -> &Field {
+        use std::fmt::Write as _;
+        self.stage.data.clear();
+        self.stage.data.extend_from_slice(&parent.data[start..start + dims.len()]);
+        self.stage.dims = dims;
+        self.stage.name.clear();
+        let _ = write!(self.stage.name, "{}#{chunk_idx}", parent.name);
+        &self.stage
+    }
+}
+
+/// Codec `compress` invocation tally, keyed by selection byte — the
+/// counter behind the single-pass guarantee ("each chunk compressed
+/// exactly once"), exported into
+/// [`super::stats::StreamedRunReport::compress_calls`].
+#[derive(Debug)]
+pub struct CompressCallCounter {
+    /// One lock-free slot per registered selection byte.
+    slots: [AtomicU64; 8],
+    /// Ids past the fixed slots (future codecs), rare enough to take
+    /// a mutex.
+    overflow: std::sync::Mutex<BTreeMap<u8, u64>>,
+}
+
+impl Default for CompressCallCounter {
+    fn default() -> Self {
+        CompressCallCounter {
+            slots: std::array::from_fn(|_| AtomicU64::new(0)),
+            overflow: std::sync::Mutex::new(BTreeMap::new()),
+        }
+    }
+}
+
+impl CompressCallCounter {
+    fn bump(&self, selection: u8) {
+        match self.slots.get(selection as usize) {
+            Some(slot) => {
+                slot.fetch_add(1, Ordering::Relaxed);
+            }
+            None => {
+                if let Ok(mut m) = self.overflow.lock() {
+                    *m.entry(selection).or_insert(0) += 1;
+                }
+            }
+        }
+    }
+
+    /// Snapshot of every non-zero (selection byte, call count).
+    pub fn snapshot(&self) -> BTreeMap<u8, u64> {
+        let mut out: BTreeMap<u8, u64> =
+            self.overflow.lock().map(|m| m.clone()).unwrap_or_default();
+        for (id, slot) in self.slots.iter().enumerate() {
+            let n = slot.load(Ordering::Relaxed);
+            if n > 0 {
+                *out.entry(id as u8).or_insert(0) += n;
+            }
+        }
+        out
+    }
+
+    /// Total `compress` invocations across all codecs.
+    pub fn total(&self) -> u64 {
+        self.snapshot().values().sum()
+    }
+}
+
 /// Stateless router: policy + bound, shared across workers. The codec
 /// registry is built once here and dispatched through concurrently —
 /// per-chunk jobs must not pay a registry construction each.
@@ -54,13 +149,28 @@ pub struct Router {
     pub policy: Policy,
     pub eb_rel: f64,
     registry: CodecRegistry,
+    /// Payload-compression call tally (estimation sampling is not
+    /// counted — only [`Router::compress_decided`]-family calls that
+    /// produce container payload bytes).
+    compress_calls: CompressCallCounter,
 }
 
 impl Router {
     pub fn new(cfg: SelectorConfig, policy: Policy, eb_rel: f64) -> Self {
         let selector = AutoSelector::new(cfg);
         let registry = selector.registry();
-        Router { selector, policy, eb_rel, registry }
+        Router {
+            selector,
+            policy,
+            eb_rel,
+            registry,
+            compress_calls: CompressCallCounter::default(),
+        }
+    }
+
+    /// The payload-compression call tally for this router's lifetime.
+    pub fn compress_calls(&self) -> &CompressCallCounter {
+        &self.compress_calls
     }
 
     /// Compute the field-level selection prior for the chunked path,
@@ -152,20 +262,45 @@ impl Router {
         chunk_idx: usize,
         prior: Option<&FieldPrior>,
     ) -> Result<Decision> {
-        let Some(p) = prior else { return self.decide(chunk) };
-        Ok(Decision {
+        match prior {
+            Some(p) => Ok(self.decide_from_prior(p, chunk_idx)),
+            None => self.decide(chunk),
+        }
+    }
+
+    /// The prior-inheritance arm of [`Router::decide_chunk`], usable
+    /// without materializing the chunk at all — the single-pass writer
+    /// compresses prior-covered chunks straight out of the parent
+    /// field's buffer.
+    pub fn decide_from_prior(&self, p: &FieldPrior, chunk_idx: usize) -> Decision {
+        Decision {
             choice: Some(p.choice),
             eb_abs: p.estimates.bound_for(p.choice),
             estimate_time: if chunk_idx == 0 { p.estimate_time } else { Duration::ZERO },
-        })
+        }
     }
 
     /// Compress `field` under a pinned decision into a *bare* codec
     /// stream (no selection byte) — the v2 chunk payload form.
     /// Deterministic: identical (data, dims, decision) gives identical
-    /// bytes, which the streaming writer's length checks enforce.
+    /// bytes, which the streaming writer's length + CRC checks enforce.
     pub fn compress_decided(&self, field: &Field, d: &Decision) -> Result<Vec<u8>> {
-        self.registry.get(d.selection())?.compress(&field.data, field.dims, d.eb_abs)
+        self.compress_decided_span(&field.data, field.dims, d)
+    }
+
+    /// [`Router::compress_decided`] on a bare `(data, dims)` span —
+    /// the single-pass writer compresses chunk spans straight out of
+    /// the parent field's buffer, with no staging copy at all when the
+    /// decision came from a field-level prior. Every call lands in the
+    /// router's [`CompressCallCounter`].
+    pub fn compress_decided_span(
+        &self,
+        data: &[f32],
+        dims: Dims,
+        d: &Decision,
+    ) -> Result<Vec<u8>> {
+        self.compress_calls.bump(d.selection());
+        self.registry.get(d.selection())?.compress(data, dims, d.eb_abs)
     }
 
     /// Process one chunk of a field: decision + compression + v1-style
@@ -279,6 +414,44 @@ mod tests {
         assert_eq!(out.choice, Some(Choice::Dct));
         assert_eq!(out.payload[0], Choice::Dct.id());
         assert!(out.ratio() > 1.0);
+    }
+
+    #[test]
+    fn compress_calls_counted_per_codec() {
+        let f = atm::generate_field_scaled(67, 0, 0);
+        let r = Router::new(SelectorConfig::default(), Policy::AlwaysZfp, 1e-3);
+        assert_eq!(r.compress_calls().total(), 0);
+        let d = r.decide(&f).unwrap();
+        let a = r.compress_decided(&f, &d).unwrap();
+        let b = r.compress_decided_span(&f.data, f.dims, &d).unwrap();
+        assert_eq!(a, b, "span path must be byte-identical");
+        assert_eq!(r.compress_calls().total(), 2);
+        assert_eq!(r.compress_calls().snapshot().get(&Choice::Zfp.id()), Some(&2));
+    }
+
+    #[test]
+    fn scratch_staging_matches_fresh_field() {
+        let f = atm::generate_field_scaled(68, 1, 0);
+        let r = Router::new(SelectorConfig::default(), Policy::RateDistortion, 1e-3);
+        let mut scratch = CompressScratch::default();
+        // Stage two different chunks through the same scratch: each
+        // must behave exactly like a freshly allocated chunk field.
+        for (idx, start, n) in [(0usize, 0usize, 512usize), (1, 512, 256)] {
+            let dims = crate::data::field::Dims::D1(n);
+            let fresh = Field::new(
+                format!("{}#{idx}", f.name),
+                dims,
+                f.data[start..start + n].to_vec(),
+            );
+            let staged = scratch.stage_chunk(&f, idx, start, dims);
+            assert_eq!(staged.name, fresh.name);
+            assert_eq!(staged.dims, fresh.dims);
+            assert_eq!(staged.data, fresh.data);
+            let d = r.decide(staged).unwrap();
+            let via_staged = r.compress_decided(staged, &d).unwrap();
+            let via_fresh = r.compress_decided(&fresh, &d).unwrap();
+            assert_eq!(via_staged, via_fresh);
+        }
     }
 
     #[test]

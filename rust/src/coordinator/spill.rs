@@ -1,0 +1,365 @@
+//! Scratch-space slab store for the single-pass streaming writer
+//! (DESIGN.md §6): workers append finished chunk payloads in
+//! *completion* order and get back a [`SlabRef`]; once every size is
+//! known the coordinator splices the slabs into the real sink in
+//! *declared* order. Small runs never touch disk — slabs accumulate in
+//! memory until [`SpillConfig::mem_budget`] is exceeded, and only then
+//! does the store create a temp file and migrate. The temp file is
+//! deleted on [`Drop`], so every error path (sink failure, worker
+//! error, panic unwind) cleans up without bookkeeping at the call
+//! sites.
+//!
+//! Appends are `&self` (a mutex serializes them) so pool workers can
+//! push payloads concurrently; compression dominates each job, so the
+//! short append critical section is not a scaling hazard. File writes
+//! go through a write-behind buffer flushed in large sequential
+//! extents; reads (the splice pass) flush first and then read each
+//! slab exactly once.
+
+use crate::{Error, Result};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Default in-memory budget before slabs spill to a temp file (8 MiB —
+/// comfortably above a whole small-run archive, far below an archive
+/// worth streaming).
+pub const DEFAULT_SPILL_MEM_BUDGET: usize = 8 << 20;
+
+/// Write-behind buffer size for the spill file: appends gather into
+/// extents of this size so the scratch device sees large sequential
+/// writes, not per-chunk syscalls.
+const WRITE_BEHIND: usize = 256 << 10;
+
+/// Where (and whether) payload slabs may spill.
+#[derive(Clone, Debug)]
+pub struct SpillConfig {
+    /// Bytes of slab data kept in memory before the store migrates to
+    /// a temp file. `usize::MAX` pins the store fully in memory.
+    pub mem_budget: usize,
+    /// Directory for the scratch file; `None` = [`std::env::temp_dir`].
+    pub dir: Option<PathBuf>,
+}
+
+impl Default for SpillConfig {
+    fn default() -> Self {
+        SpillConfig { mem_budget: DEFAULT_SPILL_MEM_BUDGET, dir: None }
+    }
+}
+
+/// One appended slab: its byte range in the store's logical stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SlabRef {
+    pub offset: u64,
+    pub len: u64,
+}
+
+/// Backing state: all slabs live either in `mem` or, after migration,
+/// in `file` (never split across the two).
+struct Inner {
+    /// In-memory slab bytes (empty once spilled).
+    mem: Vec<u8>,
+    /// Scratch file, created lazily on first overflow.
+    file: Option<std::fs::File>,
+    /// Bytes buffered for the file but not yet written through.
+    wbuf: Vec<u8>,
+    /// Bytes durably in the file (excludes `wbuf`).
+    flushed: u64,
+    /// Logical length of the slab stream (mem or file + wbuf).
+    total: u64,
+}
+
+/// Append-only slab allocator with an in-memory fast path and a
+/// delete-on-drop temp-file overflow.
+pub struct SpillStore {
+    cfg: SpillConfig,
+    inner: Mutex<Inner>,
+    /// Path of the scratch file once created (for delete-on-drop).
+    path: Mutex<Option<PathBuf>>,
+    slabs: AtomicU64,
+}
+
+impl std::fmt::Debug for SpillStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SpillStore")
+            .field("total_bytes", &self.total_bytes())
+            .field("slabs", &self.slab_count())
+            .field("spilled", &self.spilled())
+            .finish()
+    }
+}
+
+impl SpillStore {
+    pub fn new(cfg: SpillConfig) -> SpillStore {
+        SpillStore {
+            cfg,
+            inner: Mutex::new(Inner {
+                mem: Vec::new(),
+                file: None,
+                wbuf: Vec::new(),
+                flushed: 0,
+                total: 0,
+            }),
+            path: Mutex::new(None),
+            slabs: AtomicU64::new(0),
+        }
+    }
+
+    fn lock(&self) -> Result<std::sync::MutexGuard<'_, Inner>> {
+        self.inner
+            .lock()
+            .map_err(|_| Error::Other("spill store lock poisoned".into()))
+    }
+
+    /// Append one finished payload; returns its slab. Thread-safe —
+    /// pool workers append in completion order.
+    pub fn append(&self, bytes: &[u8]) -> Result<SlabRef> {
+        let mut inner = self.lock()?;
+        let offset = inner.total;
+        if inner.file.is_none() && inner.mem.len() + bytes.len() <= self.cfg.mem_budget {
+            inner.mem.extend_from_slice(bytes);
+        } else {
+            if inner.file.is_none() {
+                self.create_file(&mut inner)?;
+            }
+            inner.wbuf.extend_from_slice(bytes);
+            if inner.wbuf.len() >= WRITE_BEHIND {
+                Self::flush(&mut inner)?;
+            }
+        }
+        inner.total += bytes.len() as u64;
+        self.slabs.fetch_add(1, Ordering::Relaxed);
+        Ok(SlabRef { offset, len: bytes.len() as u64 })
+    }
+
+    /// First overflow: create the scratch file and migrate the
+    /// in-memory prefix into the write-behind buffer, so the logical
+    /// stream stays a single contiguous file image.
+    fn create_file(&self, inner: &mut Inner) -> Result<()> {
+        let dir = self.cfg.dir.clone().unwrap_or_else(std::env::temp_dir);
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let name = format!(
+            "adaptivec-spill-{}-{}.tmp",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        );
+        let path = dir.join(name);
+        let file = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create_new(true)
+            .open(&path)?;
+        inner.file = Some(file);
+        inner.wbuf = std::mem::take(&mut inner.mem);
+        *self
+            .path
+            .lock()
+            .map_err(|_| Error::Other("spill path lock poisoned".into()))? = Some(path);
+        Ok(())
+    }
+
+    /// Write the write-behind buffer through to the file (appends go
+    /// at the logical end even if a read seeked elsewhere).
+    fn flush(inner: &mut Inner) -> Result<()> {
+        if inner.wbuf.is_empty() {
+            return Ok(());
+        }
+        let file = inner.file.as_mut().expect("flush only after spill");
+        file.seek(SeekFrom::Start(inner.flushed))?;
+        file.write_all(&inner.wbuf)?;
+        inner.flushed += inner.wbuf.len() as u64;
+        inner.wbuf.clear();
+        Ok(())
+    }
+
+    /// Read one slab back into `buf` (resized to the slab length).
+    /// Used by the splice pass, which reads each slab exactly once in
+    /// declared order.
+    pub fn read_slab(&self, slab: SlabRef, buf: &mut Vec<u8>) -> Result<()> {
+        let mut inner = self.lock()?;
+        let (start, end) = (slab.offset, slab.offset.checked_add(slab.len));
+        let end = end
+            .filter(|&e| e <= inner.total)
+            .ok_or_else(|| Error::InvalidArg(format!(
+                "slab [{start}, +{}) out of range of {}-byte spill store",
+                slab.len, inner.total
+            )))?;
+        buf.clear();
+        buf.resize(slab.len as usize, 0);
+        if inner.file.is_none() {
+            buf.copy_from_slice(&inner.mem[start as usize..end as usize]);
+            return Ok(());
+        }
+        Self::flush(&mut inner)?;
+        let file = inner.file.as_mut().expect("spilled store has a file");
+        file.seek(SeekFrom::Start(start))?;
+        file.read_exact(buf)?;
+        Ok(())
+    }
+
+    /// Logical bytes appended so far — the scratch-space high-water
+    /// mark the streamed report records.
+    pub fn total_bytes(&self) -> u64 {
+        self.lock().map(|i| i.total).unwrap_or(0)
+    }
+
+    /// Number of slabs appended.
+    pub fn slab_count(&self) -> u64 {
+        self.slabs.load(Ordering::Relaxed)
+    }
+
+    /// Whether the store overflowed its memory budget into a file.
+    pub fn spilled(&self) -> bool {
+        self.lock().map(|i| i.file.is_some()).unwrap_or(false)
+    }
+
+    /// Path of the scratch file, if one was created.
+    pub fn scratch_path(&self) -> Option<PathBuf> {
+        self.path.lock().ok().and_then(|p| p.clone())
+    }
+}
+
+impl Drop for SpillStore {
+    fn drop(&mut self) {
+        // Delete the scratch file on every exit path — success, error
+        // propagation, and panic unwind alike.
+        if let Ok(mut p) = self.path.lock() {
+            if let Some(path) = p.take() {
+                std::fs::remove_file(path).ok();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(cfg: SpillConfig, slabs: &[Vec<u8>]) {
+        let store = SpillStore::new(cfg);
+        let refs: Vec<SlabRef> = slabs.iter().map(|s| store.append(s).unwrap()).collect();
+        assert_eq!(store.slab_count(), slabs.len() as u64);
+        assert_eq!(
+            store.total_bytes(),
+            slabs.iter().map(|s| s.len() as u64).sum::<u64>()
+        );
+        // Read back in reverse (worst case for the file cursor).
+        let mut buf = Vec::new();
+        for (r, s) in refs.iter().zip(slabs).rev() {
+            store.read_slab(*r, &mut buf).unwrap();
+            assert_eq!(&buf, s);
+        }
+        // And again in declared order (the splice pattern).
+        for (r, s) in refs.iter().zip(slabs) {
+            store.read_slab(*r, &mut buf).unwrap();
+            assert_eq!(&buf, s);
+        }
+    }
+
+    fn slabs(n: usize, max_len: usize) -> Vec<Vec<u8>> {
+        (0..n)
+            .map(|i| {
+                let len = (i * 37 + 11) % max_len + 1;
+                (0..len).map(|j| ((i * 131 + j * 7) % 251) as u8).collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn in_memory_fast_path_never_creates_a_file() {
+        let dir = std::env::temp_dir().join("adaptivec_spill_mem_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg = SpillConfig { mem_budget: 1 << 20, dir: Some(dir.clone()) };
+        roundtrip(cfg, &slabs(40, 200));
+        assert_eq!(std::fs::read_dir(&dir).unwrap().count(), 0, "no scratch file expected");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn overflow_spills_and_drop_removes_the_file() {
+        let dir = std::env::temp_dir().join("adaptivec_spill_file_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        {
+            let cfg = SpillConfig { mem_budget: 64, dir: Some(dir.clone()) };
+            let store = SpillStore::new(cfg.clone());
+            let data = slabs(30, 100);
+            let refs: Vec<SlabRef> =
+                data.iter().map(|s| store.append(s).unwrap()).collect();
+            assert!(store.spilled());
+            let path = store.scratch_path().expect("spilled store has a path");
+            assert!(path.is_file());
+            let mut buf = Vec::new();
+            for (r, s) in refs.iter().zip(&data) {
+                store.read_slab(*r, &mut buf).unwrap();
+                assert_eq!(&buf, s, "slab at {}", r.offset);
+            }
+            // Interleave appends after reads: the cursor must return
+            // to the logical end.
+            let r = store.append(&[9u8; 33]).unwrap();
+            store.read_slab(r, &mut buf).unwrap();
+            assert_eq!(buf, vec![9u8; 33]);
+        }
+        assert_eq!(
+            std::fs::read_dir(&dir).unwrap().count(),
+            0,
+            "scratch file must be deleted on drop"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn zero_budget_spills_immediately() {
+        let dir = std::env::temp_dir().join("adaptivec_spill_zero_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg = SpillConfig { mem_budget: 0, dir: Some(dir.clone()) };
+        {
+            let store = SpillStore::new(cfg);
+            let r = store.append(b"abc").unwrap();
+            assert!(store.spilled());
+            let mut buf = Vec::new();
+            store.read_slab(r, &mut buf).unwrap();
+            assert_eq!(buf, b"abc");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn out_of_range_slab_is_err() {
+        let store = SpillStore::new(SpillConfig::default());
+        store.append(b"xyz").unwrap();
+        let mut buf = Vec::new();
+        assert!(store.read_slab(SlabRef { offset: 1, len: 5 }, &mut buf).is_err());
+        assert!(store
+            .read_slab(SlabRef { offset: u64::MAX, len: 1 }, &mut buf)
+            .is_err());
+    }
+
+    #[test]
+    fn concurrent_appends_all_land() {
+        let store = std::sync::Arc::new(SpillStore::new(SpillConfig {
+            mem_budget: 128,
+            dir: None,
+        }));
+        let mut handles = Vec::new();
+        for t in 0..4u8 {
+            let store = store.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut refs = Vec::new();
+                for i in 0..50usize {
+                    let payload = vec![t; i % 17 + 1];
+                    refs.push((store.append(&payload).unwrap(), payload));
+                }
+                refs
+            }));
+        }
+        let mut buf = Vec::new();
+        for h in handles {
+            for (r, payload) in h.join().unwrap() {
+                store.read_slab(r, &mut buf).unwrap();
+                assert_eq!(buf, payload);
+            }
+        }
+        assert_eq!(store.slab_count(), 200);
+    }
+}

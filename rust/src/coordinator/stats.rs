@@ -226,6 +226,26 @@ impl ChunkedRunReport {
     }
 }
 
+/// Codec `compress` invocation counts for one streamed run, keyed by
+/// selection byte — the observable behind the single-pass guarantee
+/// ("each chunk compressed exactly once"): under
+/// [`super::WritePlan::SinglePassSpill`] the total equals the chunk
+/// count; the two-pass protocol pays double.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CompressCalls(pub BTreeMap<u8, u64>);
+
+impl CompressCalls {
+    /// Total `compress` invocations across all codecs.
+    pub fn total(&self) -> u64 {
+        self.0.values().sum()
+    }
+
+    /// Invocations attributed to `choice`.
+    pub fn count(&self, choice: Choice) -> u64 {
+        self.0.get(&choice.id()).copied().unwrap_or(0)
+    }
+}
+
 /// Per-chunk record of one *streamed* run: decision and sizes only —
 /// the payload bytes went straight to the sink and were never
 /// retained.
@@ -270,25 +290,45 @@ impl StreamedFieldSummary {
 pub struct StreamedRunReport {
     pub policy: Policy,
     pub eb_rel: f64,
+    /// Which write protocol produced the container.
+    pub write_plan: super::WritePlan,
     pub fields: Vec<StreamedFieldSummary>,
-    /// Peak compressed payload bytes resident at once in the *write
-    /// window* (pass 2's bounded batches). Pass 1's transient sizing
-    /// buffers are not counted — they are bounded by
-    /// `workers × largest chunk stream` and dropped as measured — so
-    /// this is the write path's high-water mark, not total process
-    /// residency. Compare against
+    /// Peak compressed payload bytes resident at once in the write
+    /// window: pass 2's bounded batches under the two-pass protocol,
+    /// the single reused splice buffer (= largest chunk stream) under
+    /// single-pass spill. Transient per-worker compression buffers are
+    /// not counted — they are bounded by `workers × largest chunk
+    /// stream` and dropped as measured — so this is the write path's
+    /// high-water mark, not total process residency. Compare against
     /// [`StreamedRunReport::total_stored_bytes`], which is what the
     /// buffered `to_bytes` path holds — the delta is the memory the
     /// streaming protocol saves.
     pub peak_payload_bytes: u64,
+    /// Scratch-space high-water mark of the single-pass spill store
+    /// (its logical slab bytes; 0 under the two-pass protocol, which
+    /// uses no scratch space).
+    pub peak_scratch_bytes: u64,
+    /// Whether the spill store overflowed its memory budget into a
+    /// temp file (always `false` for two-pass).
+    pub scratch_spilled: bool,
+    /// Codec `compress` invocations by selection byte: single-pass
+    /// totals exactly one per chunk; two-pass pays one extra per chunk
+    /// for regeneration.
+    pub compress_calls: CompressCalls,
     /// Second-pass (stream regeneration) compression time — the
-    /// compute price of the two-pass, index-first protocol.
+    /// compute price of the two-pass, index-first protocol (zero for
+    /// single-pass spill, which is the point of it).
     pub recompress_time: Duration,
 }
 
 impl StreamedRunReport {
     pub fn total_raw_bytes(&self) -> u64 {
         self.fields.iter().map(|f| f.raw_bytes()).sum()
+    }
+
+    /// Total chunks across every field.
+    pub fn total_chunks(&self) -> usize {
+        self.fields.iter().map(|f| f.chunks.len()).sum()
     }
 
     pub fn total_stored_bytes(&self) -> u64 {
@@ -435,6 +475,7 @@ mod tests {
         let report = StreamedRunReport {
             policy: Policy::RateDistortion,
             eb_rel: 1e-4,
+            write_plan: super::super::WritePlan::SinglePassSpill,
             fields: vec![StreamedFieldSummary {
                 name: "f".into(),
                 dims: Dims::D1(8),
@@ -442,10 +483,19 @@ mod tests {
                 chunks: vec![mk(Choice::Sz.id(), 10, 16), mk(Choice::Raw.id(), 16, 16)],
             }],
             peak_payload_bytes: 16,
+            peak_scratch_bytes: 26,
+            scratch_spilled: false,
+            compress_calls: CompressCalls(
+                [(Choice::Sz.id(), 1u64), (Choice::Raw.id(), 1)].into_iter().collect(),
+            ),
             recompress_time: Duration::from_millis(4),
         };
         assert_eq!(report.total_raw_bytes(), 32);
         assert_eq!(report.total_stored_bytes(), 26);
+        assert_eq!(report.total_chunks(), 2);
+        assert_eq!(report.compress_calls.total(), 2);
+        assert_eq!(report.compress_calls.count(Choice::Sz), 1);
+        assert_eq!(report.compress_calls.count(Choice::Dct), 0);
         assert!((report.overall_ratio() - 32.0 / 26.0).abs() < 1e-12);
         assert!((report.peak_payload_frac() - 16.0 / 26.0).abs() < 1e-12);
         let counts = report.codec_counts();

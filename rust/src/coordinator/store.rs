@@ -14,20 +14,30 @@
 //!   index records every chunk's byte offset so [`ContainerReader`]
 //!   can decode one field or one chunk without touching the rest of
 //!   the file.
+//! * **v3** (`ADAPTC03`): the v2 layout with a CRC-32 per chunk in the
+//!   index, so payload bit rot surfaces as a checksum error at read
+//!   time instead of a confusing codec `Corrupt` (or, worse, silent
+//!   garbage from the raw codec). This is what the writer emits now;
+//!   v1 and v2 stay readable.
 //!
 //! Selection bytes are resolved through
 //! [`crate::codec_api::CodecRegistry`] — nothing here maps bytes to
 //! codecs.
 //!
 //! Both directions stream (DESIGN.md §6): [`ContainerV2Writer`] emits
-//! `ADAPTC02` incrementally to any [`Write`] sink from pre-declared
-//! chunk sizes (the two-pass, index-first protocol), and
-//! [`ContainerReader`] is backed by a [`ByteSource`] — in-memory or
-//! pread-on-demand over a file — so partial loads read exactly the
-//! indexed byte ranges they need.
+//! `ADAPTC03` incrementally to any [`Write`] sink from pre-declared
+//! chunk sizes — in declared order via [`ContainerV2Writer::write_chunk`]
+//! or in any completion order via [`ContainerV2Writer::put_chunk`],
+//! which parks out-of-order chunks in a [`SpillStore`] — and
+//! [`ContainerReader`] is backed by a [`ByteSource`] — in-memory,
+//! pread-on-demand over a file, or either wrapped in the LRU
+//! [`CachedSource`] — so partial loads read exactly the indexed byte
+//! ranges they need.
 
-use crate::codec_api::CodecRegistry;
+use super::spill::{SlabRef, SpillConfig, SpillStore};
+use crate::codec::crc32;
 use crate::codec::varint;
+use crate::codec_api::CodecRegistry;
 use crate::data::field::{Dims, Field};
 use crate::{Error, Result};
 use std::io::{Read, Write};
@@ -35,6 +45,7 @@ use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"ADAPTC01";
 const MAGIC_V2: &[u8; 8] = b"ADAPTC02";
+const MAGIC_V3: &[u8; 8] = b"ADAPTC03";
 
 // ---------------------------------------------------------------------------
 // Container v1 (per-field, kept for compatibility)
@@ -175,11 +186,7 @@ impl ContainerV2 {
                 dims: f.dims,
                 raw_bytes: f.raw_bytes,
                 chunk_elems: f.chunk_elems,
-                chunks: f
-                    .chunks
-                    .iter()
-                    .map(|c| ChunkDecl { selection: c.selection, len: c.stream.len() as u64 })
-                    .collect(),
+                chunks: f.chunks.iter().map(|c| ChunkDecl::of(c.selection, &c.stream)).collect(),
             })
             .collect()
     }
@@ -233,14 +240,26 @@ impl ContainerV2 {
 // Streaming v2 writer (index-first, pre-declared chunk sizes)
 // ---------------------------------------------------------------------------
 
-/// Pre-declared size + selection of one chunk (DESIGN.md §6): the v2
-/// index carries every chunk's byte range, so an incremental writer
-/// must know the sizes before the first payload byte lands.
+/// Pre-declared size + selection + checksum of one chunk
+/// (DESIGN.md §6): the index carries every chunk's byte range and
+/// CRC-32, so an incremental writer must know both before the first
+/// payload byte lands.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ChunkDecl {
     pub selection: u8,
     /// Exact bare-stream length in bytes; `write_chunk` enforces it.
     pub len: u64,
+    /// CRC-32 of the bare stream; recorded in the index and enforced
+    /// by `write_chunk`, so a regenerated stream that diverged from
+    /// its declaration can never land silently.
+    pub crc: u32,
+}
+
+impl ChunkDecl {
+    /// Declaration of a finished stream (length + CRC measured here).
+    pub fn of(selection: u8, stream: &[u8]) -> ChunkDecl {
+        ChunkDecl { selection, len: stream.len() as u64, crc: crc32::crc32(stream) }
+    }
 }
 
 /// Pre-declared layout of one field for [`ContainerV2Writer`].
@@ -253,33 +272,50 @@ pub struct FieldDecl {
     pub chunks: Vec<ChunkDecl>,
 }
 
-/// Incremental `ADAPTC02` emitter over any [`Write`] sink.
+/// Incremental `ADAPTC03` emitter over any [`Write`] sink.
 ///
 /// The wire format puts the index *before* the payload region, so a
-/// forward-only writer needs every chunk's compressed size up front:
-/// [`ContainerV2Writer::new`] takes the full declaration list, writes
-/// magic + index immediately, and then accepts payload streams one
-/// chunk at a time (in index order) via [`ContainerV2Writer::write_chunk`].
-/// Peak memory is the index plus one chunk — never the whole payload.
+/// forward-only writer needs every chunk's compressed size (and CRC)
+/// up front: [`ContainerV2Writer::new`] takes the full declaration
+/// list, writes magic + index immediately, and then accepts payload
+/// streams one chunk at a time — in index order via
+/// [`ContainerV2Writer::write_chunk`], or in any completion order via
+/// [`ContainerV2Writer::put_chunk`], which streams in-order chunks
+/// straight through and parks out-of-order ones in a [`SpillStore`]
+/// until the gap fills. Peak sink-side memory is the index plus one
+/// chunk — never the whole payload.
 ///
-/// Every supplied stream must match its declared length exactly
-/// (non-deterministic regeneration would silently corrupt the index),
-/// and [`ContainerV2Writer::finish`] refuses to complete until every
-/// declared chunk has been written. Output is byte-identical to
+/// Every supplied stream must match its declared length *and* CRC-32
+/// exactly (non-deterministic regeneration would silently corrupt the
+/// index), and [`ContainerV2Writer::finish`] refuses to complete until
+/// every declared chunk has been written. Output is byte-identical to
 /// [`ContainerV2::to_bytes`], which is itself implemented on this type.
 pub struct ContainerV2Writer<W: Write> {
     sink: W,
-    /// Declared chunk lengths, flattened in index order.
-    declared: Vec<u64>,
-    /// Index of the next chunk `write_chunk` expects.
+    /// Declarations, flattened in index order.
+    declared: Vec<ChunkDecl>,
+    /// Index of the next chunk the sink expects.
     next: usize,
     /// Total bytes pushed to the sink so far (header + payload).
     written: u64,
+    /// Out-of-order chunks accepted by `put_chunk`, parked until the
+    /// sink cursor reaches them. Lazily allocated — the in-order path
+    /// never pays for it.
+    parked: Option<Parked>,
+    /// Spill configuration for the parking store.
+    spill_cfg: SpillConfig,
+}
+
+/// Parking state for out-of-order `put_chunk` arrivals.
+struct Parked {
+    store: SpillStore,
+    /// chunk index -> slab holding its verified stream.
+    pending: std::collections::BTreeMap<usize, SlabRef>,
 }
 
 impl<W: Write> ContainerV2Writer<W> {
     /// Serialize the index from `fields` and write magic + index to
-    /// the sink; payload streams follow via `write_chunk`.
+    /// the sink; payload streams follow via `write_chunk`/`put_chunk`.
     pub fn new(mut sink: W, fields: &[FieldDecl]) -> Result<ContainerV2Writer<W>> {
         let mut index = Vec::new();
         varint::write_u64(&mut index, fields.len() as u64);
@@ -295,45 +331,137 @@ impl<W: Write> ContainerV2Writer<W> {
                 index.push(c.selection);
                 varint::write_u64(&mut index, offset);
                 varint::write_u64(&mut index, c.len);
+                index.extend_from_slice(&c.crc.to_le_bytes());
                 offset = offset.checked_add(c.len).ok_or_else(|| {
                     Error::InvalidArg("declared payload exceeds u64".into())
                 })?;
-                declared.push(c.len);
+                declared.push(*c);
             }
         }
         let mut header = Vec::with_capacity(8 + 10);
-        header.extend_from_slice(MAGIC_V2);
+        header.extend_from_slice(MAGIC_V3);
         varint::write_u64(&mut header, index.len() as u64);
         sink.write_all(&header)?;
         sink.write_all(&index)?;
         let written = (header.len() + index.len()) as u64;
-        Ok(ContainerV2Writer { sink, declared, next: 0, written })
+        Ok(ContainerV2Writer {
+            sink,
+            declared,
+            next: 0,
+            written,
+            parked: None,
+            spill_cfg: SpillConfig::default(),
+        })
     }
 
-    /// Append the next chunk's bare stream. Chunks arrive in index
-    /// order; the length must match the declaration exactly.
-    pub fn write_chunk(&mut self, stream: &[u8]) -> Result<()> {
-        let Some(&want) = self.declared.get(self.next) else {
+    /// Replace the spill configuration `put_chunk` parks out-of-order
+    /// chunks under (scratch directory / memory budget).
+    pub fn with_spill_config(mut self, cfg: SpillConfig) -> Self {
+        self.spill_cfg = cfg;
+        self
+    }
+
+    /// Check `stream` against chunk `idx`'s declaration (length and
+    /// CRC-32), so divergent regeneration fails at the supply site.
+    fn check_declared(&self, idx: usize, stream: &[u8]) -> Result<()> {
+        let Some(d) = self.declared.get(idx) else {
             return Err(Error::InvalidArg(format!(
-                "chunk {} written but only {} declared",
-                self.next,
+                "chunk {idx} written but only {} declared",
                 self.declared.len()
             )));
         };
-        if stream.len() as u64 != want {
+        if stream.len() as u64 != d.len {
             return Err(Error::InvalidArg(format!(
-                "chunk {} is {} bytes but was declared as {want}",
-                self.next,
-                stream.len()
+                "chunk {idx} is {} bytes but was declared as {}",
+                stream.len(),
+                d.len
             )));
         }
+        let crc = crc32::crc32(stream);
+        if crc != d.crc {
+            return Err(Error::InvalidArg(format!(
+                "chunk {idx} crc {crc:#010x} disagrees with declared {:#010x}",
+                d.crc
+            )));
+        }
+        Ok(())
+    }
+
+    /// Write the chunk at the sink cursor without draining parked
+    /// successors (the primitive under both public supply APIs).
+    fn emit_next(&mut self, stream: &[u8]) -> Result<()> {
+        self.check_declared(self.next, stream)?;
         self.sink.write_all(stream)?;
-        self.written += want;
+        self.written += stream.len() as u64;
         self.next += 1;
         Ok(())
     }
 
-    /// Chunks still owed before `finish` will succeed.
+    /// Append the next chunk's bare stream. Chunks arrive in index
+    /// order; length and CRC must match the declaration exactly. Any
+    /// chunks previously parked by [`ContainerV2Writer::put_chunk`]
+    /// that now continue the cursor are spliced in afterwards, so the
+    /// two supply APIs compose.
+    pub fn write_chunk(&mut self, stream: &[u8]) -> Result<()> {
+        self.emit_next(stream)?;
+        self.drain_parked()
+    }
+
+    /// Append declared chunk `idx`'s bare stream, in *any* completion
+    /// order: the chunk at the sink cursor streams straight through
+    /// (followed by any parked successors it unblocks); chunks ahead
+    /// of the cursor park in the writer's [`SpillStore`] until the gap
+    /// fills. Each chunk may be supplied exactly once.
+    pub fn put_chunk(&mut self, idx: usize, stream: &[u8]) -> Result<()> {
+        match idx.cmp(&self.next) {
+            std::cmp::Ordering::Equal => self.write_chunk(stream),
+            std::cmp::Ordering::Greater => {
+                self.check_declared(idx, stream)?;
+                if self.parked.is_none() {
+                    self.parked = Some(Parked {
+                        store: SpillStore::new(self.spill_cfg.clone()),
+                        pending: std::collections::BTreeMap::new(),
+                    });
+                }
+                let park = self.parked.as_mut().expect("just initialized");
+                if park.pending.contains_key(&idx) {
+                    return Err(Error::InvalidArg(format!(
+                        "chunk {idx} supplied twice (already parked)"
+                    )));
+                }
+                let slab = park.store.append(stream)?;
+                park.pending.insert(idx, slab);
+                Ok(())
+            }
+            std::cmp::Ordering::Less => Err(Error::InvalidArg(format!(
+                "chunk {idx} supplied twice (sink cursor already at {})",
+                self.next
+            ))),
+        }
+    }
+
+    /// Splice parked chunks into the sink while they continue the
+    /// cursor position. Parked keys are always ahead of the cursor,
+    /// so draining after every cursor advance keeps the two supply
+    /// APIs composable.
+    fn drain_parked(&mut self) -> Result<()> {
+        let mut buf = Vec::new();
+        loop {
+            let slab = match self.parked.as_mut() {
+                Some(p) => match p.pending.remove(&self.next) {
+                    Some(s) => s,
+                    None => return Ok(()),
+                },
+                None => return Ok(()),
+            };
+            let park = self.parked.as_ref().expect("checked above");
+            park.store.read_slab(slab, &mut buf)?;
+            self.emit_next(&buf)?;
+        }
+    }
+
+    /// Chunks still owed before `finish` will succeed (parked chunks
+    /// count as owed — they are not in the sink yet).
     pub fn chunks_remaining(&self) -> usize {
         self.declared.len() - self.next
     }
@@ -344,11 +472,13 @@ impl<W: Write> ContainerV2Writer<W> {
     }
 
     /// Flush and return the sink; errors if any declared chunk was
-    /// never written (the index would point at absent bytes).
+    /// never written (the index would point at absent bytes). The
+    /// parking scratch file, if any, is deleted here (and on drop).
     pub fn finish(mut self) -> Result<W> {
         if self.next != self.declared.len() {
+            let parked = self.parked.as_ref().map(|p| p.pending.len()).unwrap_or(0);
             return Err(Error::InvalidArg(format!(
-                "container incomplete: {} of {} chunks written",
+                "container incomplete: {} of {} chunks written ({parked} parked out of order)",
                 self.next,
                 self.declared.len()
             )));
@@ -363,12 +493,16 @@ impl<W: Write> ContainerV2Writer<W> {
 // ---------------------------------------------------------------------------
 
 /// Index record for one chunk: selection byte + absolute in-buffer
-/// byte range of its payload.
+/// byte range of its payload (+ the indexed CRC-32 on v3 containers).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ChunkRef {
     pub selection: u8,
     pub offset: usize,
     pub len: usize,
+    /// Indexed payload CRC-32; `None` on v1/v2 containers (written
+    /// before checksums existed), `Some` on v3, where every
+    /// `chunk_bytes`/`decode_chunk` verifies it.
+    pub crc: Option<u32>,
 }
 
 /// Index record for one field.
@@ -501,6 +635,130 @@ impl ByteSource for FileSource {
     }
 }
 
+/// Zero-dep LRU byte-range cache over any [`ByteSource`]: repeated
+/// reads of the same `(offset, len)` range — the hot-chunk pattern of
+/// repeated `load_field`/`decode_chunk` calls — are served from memory
+/// instead of re-issuing pread syscalls. Stands in for an mmap-backed
+/// source under the no-external-deps policy: the OS page cache would
+/// also absorb repeats, but this cache works on any source, keeps its
+/// own strict byte budget, and reports hit/miss counts.
+///
+/// Ranges larger than the whole capacity bypass the cache. The default
+/// [`ByteSource::slice`] (`None`) is kept: cached bytes live behind a
+/// mutex, so borrowing out is impossible — callers pay one memcpy on a
+/// hit, which is still orders of magnitude cheaper than a syscall.
+pub struct CachedSource {
+    inner: std::sync::Arc<dyn ByteSource>,
+    capacity: usize,
+    state: std::sync::Mutex<CacheState>,
+    hits: std::sync::atomic::AtomicU64,
+    misses: std::sync::atomic::AtomicU64,
+}
+
+#[derive(Default)]
+struct CacheState {
+    /// Range -> (bytes, recency generation). Hits bump the generation
+    /// in O(1); eviction scans for the minimum — misses already pay a
+    /// real read, so the scan rides on the slow path only.
+    map: std::collections::HashMap<(u64, usize), (Vec<u8>, u64)>,
+    /// Monotonic recency clock.
+    tick: u64,
+    /// Cached payload bytes currently held.
+    bytes: usize,
+}
+
+impl CacheState {
+    fn next_tick(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    /// Evict least-recently-used entries until `bytes <= capacity`.
+    fn evict_to(&mut self, capacity: usize) {
+        while self.bytes > capacity {
+            let Some(oldest) = self
+                .map
+                .iter()
+                .min_by_key(|(_, (_, gen))| *gen)
+                .map(|(k, _)| *k)
+            else {
+                return;
+            };
+            if let Some((v, _)) = self.map.remove(&oldest) {
+                self.bytes -= v.len();
+            }
+        }
+    }
+}
+
+impl CachedSource {
+    /// Wrap `inner` with an LRU cache holding at most `capacity`
+    /// payload bytes.
+    pub fn new(inner: std::sync::Arc<dyn ByteSource>, capacity: usize) -> CachedSource {
+        CachedSource {
+            inner,
+            capacity,
+            state: std::sync::Mutex::new(CacheState::default()),
+            hits: std::sync::atomic::AtomicU64::new(0),
+            misses: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// `(hits, misses)` served so far.
+    pub fn stats(&self) -> (u64, u64) {
+        use std::sync::atomic::Ordering::Relaxed;
+        (self.hits.load(Relaxed), self.misses.load(Relaxed))
+    }
+
+    /// Bytes currently cached.
+    pub fn cached_bytes(&self) -> usize {
+        self.state.lock().map(|s| s.bytes).unwrap_or(0)
+    }
+
+    fn lock(&self) -> Result<std::sync::MutexGuard<'_, CacheState>> {
+        self.state
+            .lock()
+            .map_err(|_| Error::Other("cached source lock poisoned".into()))
+    }
+}
+
+impl ByteSource for CachedSource {
+    fn len(&self) -> u64 {
+        self.inner.len()
+    }
+
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<()> {
+        use std::sync::atomic::Ordering::Relaxed;
+        let key = (offset, buf.len());
+        {
+            let mut st = self.lock()?;
+            let tick = st.next_tick();
+            if let Some((v, gen)) = st.map.get_mut(&key) {
+                buf.copy_from_slice(v);
+                *gen = tick; // O(1) recency refresh on the hot path
+                self.hits.fetch_add(1, Relaxed);
+                return Ok(());
+            }
+        }
+        // Miss: read outside the lock so concurrent decoders do not
+        // serialize on each other's I/O.
+        self.inner.read_at(offset, buf)?;
+        self.misses.fetch_add(1, Relaxed);
+        if buf.len() <= self.capacity {
+            let mut st = self.lock()?;
+            // A racing reader may have inserted the range meanwhile.
+            let raced = st.map.contains_key(&key);
+            if !raced {
+                st.bytes += buf.len();
+                let tick = st.next_tick();
+                st.map.insert(key, (buf.to_vec(), tick));
+                st.evict_to(self.capacity);
+            }
+        }
+        Ok(())
+    }
+}
+
 /// Bounded sequential cursor over a [`ByteSource`] for header/index
 /// parsing. Only metadata flows through it — payload bytes are served
 /// directly by `read_at` on demand.
@@ -589,6 +847,14 @@ impl ContainerReader {
         Self::from_source(std::sync::Arc::new(FileSource::open(path)?))
     }
 
+    /// [`ContainerReader::open`] with an LRU chunk-range cache of
+    /// `capacity` bytes in front of the file, so hot repeated
+    /// `load_field`/`decode_chunk` reads skip pread syscalls.
+    pub fn open_cached(path: impl AsRef<Path>, capacity: usize) -> Result<ContainerReader> {
+        let file = std::sync::Arc::new(FileSource::open(path)?);
+        Self::from_source(std::sync::Arc::new(CachedSource::new(file, capacity)))
+    }
+
     /// Parse a container's index from any [`ByteSource`].
     pub fn from_source(source: std::sync::Arc<dyn ByteSource>) -> Result<ContainerReader> {
         if source.len() < 8 {
@@ -610,7 +876,9 @@ impl ContainerReader {
         if &magic == MAGIC {
             Self::parse_v1(source)
         } else if &magic == MAGIC_V2 {
-            Self::parse_v2(source)
+            Self::parse_v2(source, false)
+        } else if &magic == MAGIC_V3 {
+            Self::parse_v2(source, true)
         } else {
             Err(Error::Corrupt("bad container magic".into()))
         }
@@ -653,7 +921,12 @@ impl ContainerReader {
                 dims: None,
                 raw_bytes,
                 chunk_elems: 0,
-                chunks: vec![ChunkRef { selection, offset: cur.pos as usize, len: len as usize }],
+                chunks: vec![ChunkRef {
+                    selection,
+                    offset: cur.pos as usize,
+                    len: len as usize,
+                    crc: None,
+                }],
             });
             cur.pos = end;
         }
@@ -663,7 +936,10 @@ impl ContainerReader {
         Ok(ContainerReader { source, version: 1, fields })
     }
 
-    fn parse_v2(source: std::sync::Arc<dyn ByteSource>) -> Result<ContainerReader> {
+    /// Parse the chunked, indexed layout — shared by v2 (`ADAPTC02`)
+    /// and v3 (`ADAPTC03`, `has_crc`: each chunk record ends with a
+    /// 4-byte LE CRC-32 of its payload).
+    fn parse_v2(source: std::sync::Arc<dyn ByteSource>, has_crc: bool) -> Result<ContainerReader> {
         let total = source.len();
         let mut cur = SourceCursor { src: source.as_ref(), pos: 8 };
         let index_len = cur.read_varint()?;
@@ -696,6 +972,15 @@ impl ContainerReader {
                 pos += 1;
                 let off = varint::read_u64(buf, &mut pos)?;
                 let len = varint::read_u64(buf, &mut pos)?;
+                let crc = if has_crc {
+                    let b = buf
+                        .get(pos..pos + 4)
+                        .ok_or_else(|| Error::Corrupt("truncated chunk crc".into()))?;
+                    pos += 4;
+                    Some(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                } else {
+                    None
+                };
                 let end = off
                     .checked_add(len)
                     .ok_or_else(|| Error::Corrupt("chunk range overflow".into()))?;
@@ -715,6 +1000,7 @@ impl ContainerReader {
                     selection,
                     offset: (payload_base + off) as usize,
                     len: len as usize,
+                    crc,
                 });
             }
             fields.push(FieldInfo {
@@ -731,7 +1017,7 @@ impl ContainerReader {
         if next_off != payload_len {
             return Err(Error::Corrupt("trailing bytes in container".into()));
         }
-        Ok(ContainerReader { source, version: 2, fields })
+        Ok(ContainerReader { source, version: if has_crc { 3 } else { 2 }, fields })
     }
 
     /// Locate a field by name.
@@ -759,18 +1045,38 @@ impl ContainerReader {
         })
     }
 
+    /// Verify `bytes` against the chunk's indexed CRC-32 (v3); a no-op
+    /// for v1/v2 chunks, which carry no checksum.
+    fn verify_crc(c: ChunkRef, bytes: &[u8]) -> Result<()> {
+        if let Some(want) = c.crc {
+            let got = crc32::crc32(bytes);
+            if got != want {
+                return Err(Error::Corrupt(format!(
+                    "chunk payload crc {got:#010x} disagrees with indexed {want:#010x} \
+                     (payload bit rot)"
+                )));
+            }
+        }
+        Ok(())
+    }
+
     /// Raw payload bytes of one chunk — a positioned read of exactly
-    /// that chunk's indexed byte range (no decode).
+    /// that chunk's indexed byte range (no decode). On v3 containers
+    /// the bytes are verified against the indexed CRC-32.
     pub fn chunk_bytes(&self, field_idx: usize, chunk_idx: usize) -> Result<Vec<u8>> {
         let c = self.chunk_ref(field_idx, chunk_idx)?;
         let mut buf = vec![0u8; c.len];
         self.source.read_at(c.offset as u64, &mut buf)?;
+        Self::verify_crc(c, &buf)?;
         Ok(buf)
     }
 
     /// Decode one chunk through the registry. In-memory sources decode
     /// straight from their buffer (zero-copy); file sources pread the
-    /// chunk's exact byte range first.
+    /// chunk's exact byte range first. On v3 containers the payload is
+    /// CRC-verified before it reaches the codec, so bit rot surfaces
+    /// as a checksum `Corrupt`, not a codec decode failure (or silent
+    /// garbage from the raw codec).
     pub fn decode_chunk(
         &self,
         registry: &CodecRegistry,
@@ -786,8 +1092,10 @@ impl ContainerReader {
             }
         };
         if let Some(bytes) = self.source.slice(c.offset as u64, c.len) {
+            Self::verify_crc(c, bytes)?;
             return decode(bytes);
         }
+        // chunk_bytes verifies the CRC on the pread path.
         decode(&self.chunk_bytes(field_idx, chunk_idx)?)
     }
 
@@ -1006,7 +1314,7 @@ mod tests {
         let c = sample_v2();
         let bytes = c.to_bytes();
         let r = ContainerReader::from_bytes(bytes).unwrap();
-        assert_eq!(r.version, 2);
+        assert_eq!(r.version, 3);
         assert_eq!(r.fields.len(), 2);
         assert_eq!(r.fields[0].name, "a");
         assert_eq!(r.fields[0].dims, Some(Dims::D2(2, 4)));
@@ -1108,6 +1416,214 @@ mod tests {
         assert_eq!(w.bytes_written() as usize, c.to_bytes().len());
         let out = w.finish().unwrap();
         assert_eq!(out, c.to_bytes());
+    }
+
+    #[test]
+    fn put_chunk_accepts_any_completion_order() {
+        let c = sample_v2();
+        let want = c.to_bytes();
+        let decls = c.declarations();
+        let streams: Vec<&[u8]> = c
+            .fields
+            .iter()
+            .flat_map(|f| f.chunks.iter().map(|ch| ch.stream.as_slice()))
+            .collect();
+        // Every permutation of the 3 chunks lands byte-identically.
+        for order in [[0usize, 1, 2], [0, 2, 1], [1, 0, 2], [1, 2, 0], [2, 0, 1], [2, 1, 0]] {
+            let mut w = ContainerV2Writer::new(Vec::new(), &decls).unwrap();
+            for &i in &order {
+                w.put_chunk(i, streams[i]).unwrap();
+            }
+            assert_eq!(w.chunks_remaining(), 0, "{order:?}");
+            assert_eq!(w.finish().unwrap(), want, "{order:?}");
+        }
+        // Duplicate supply — parked or already written — is an error.
+        let mut w = ContainerV2Writer::new(Vec::new(), &decls).unwrap();
+        w.put_chunk(2, streams[2]).unwrap();
+        assert!(w.put_chunk(2, streams[2]).is_err(), "parked twice");
+        w.put_chunk(0, streams[0]).unwrap();
+        assert!(w.put_chunk(0, streams[0]).is_err(), "written twice");
+        // Finishing with a parked chunk but a gap still open errors.
+        let err = w.finish().unwrap_err();
+        assert!(format!("{err}").contains("parked"), "{err}");
+        // Out-of-range index and divergent stream are rejected.
+        let mut w = ContainerV2Writer::new(Vec::new(), &decls).unwrap();
+        assert!(w.put_chunk(3, &[]).is_err());
+        assert!(w.put_chunk(1, &[9, 9, 9, 9]).is_err(), "undeclared length");
+    }
+
+    #[test]
+    fn write_chunk_drains_chunks_parked_by_put_chunk() {
+        // The two supply APIs compose: park chunk 1 out of order, then
+        // feed chunks 0 and 2 through plain write_chunk — the parked
+        // chunk splices in automatically when the cursor reaches it.
+        let c = sample_v2();
+        let decls = c.declarations();
+        let streams: Vec<&[u8]> = c
+            .fields
+            .iter()
+            .flat_map(|f| f.chunks.iter().map(|ch| ch.stream.as_slice()))
+            .collect();
+        let mut w = ContainerV2Writer::new(Vec::new(), &decls).unwrap();
+        w.put_chunk(1, streams[1]).unwrap();
+        w.write_chunk(streams[0]).unwrap(); // drains parked chunk 1
+        assert_eq!(w.chunks_remaining(), 1);
+        // Chunk 1 is already in the sink: supplying it again errors.
+        assert!(w.put_chunk(1, streams[1]).is_err());
+        w.write_chunk(streams[2]).unwrap();
+        assert_eq!(w.finish().unwrap(), c.to_bytes());
+    }
+
+    #[test]
+    fn write_chunk_rejects_crc_divergence_at_declared_length() {
+        // Same length as declared, different bytes: the CRC check must
+        // catch what the length check cannot.
+        let c = sample_v2();
+        let decls = c.declarations();
+        let mut w = ContainerV2Writer::new(Vec::new(), &decls).unwrap();
+        let err = w.write_chunk(&[10, 11, 13]).unwrap_err();
+        assert!(format!("{err}").contains("crc"), "{err}");
+        // The declared bytes still go through afterwards.
+        w.write_chunk(&[10, 11, 12]).unwrap();
+    }
+
+    #[test]
+    fn v3_crc_catches_payload_corruption() {
+        let c = sample_v2();
+        let bytes = c.to_bytes();
+        let reg = CodecRegistry::default();
+        let clean = ContainerReader::from_bytes(bytes.clone()).unwrap();
+        assert_eq!(clean.version, 3);
+        assert!(clean.fields.iter().all(|f| f.chunks.iter().all(|ch| ch.crc.is_some())));
+        // Flip one bit in field b's raw payload: decoding through the
+        // registry would happily return wrong f32s (raw accepts any
+        // multiple of 4); the indexed CRC turns it into Corrupt.
+        let payload_off = clean.fields[1].chunks[0].offset;
+        let mut corrupt = bytes;
+        corrupt[payload_off] ^= 0x10;
+        let r = ContainerReader::from_bytes(corrupt).unwrap();
+        let err = r.chunk_bytes(1, 0).unwrap_err();
+        assert!(format!("{err}").contains("crc"), "{err}");
+        let err = r.decode_chunk(&reg, 1, 0).unwrap_err();
+        assert!(format!("{err}").contains("crc"), "{err}");
+        // Untouched chunks still decode.
+        assert!(r.chunk_bytes(0, 0).is_ok());
+    }
+
+    #[test]
+    fn v2_without_crc_still_readable() {
+        // Hand-build an ADAPTC02 (pre-checksum) container: it must
+        // parse as version 2 with `crc: None` and decode unverified.
+        let mut index = Vec::new();
+        varint::write_u64(&mut index, 1);
+        varint::write_str(&mut index, "x");
+        Dims::D1(2).encode(&mut index);
+        varint::write_u64(&mut index, 8); // raw_bytes
+        varint::write_u64(&mut index, 0); // chunk_elems
+        varint::write_u64(&mut index, 1); // one chunk
+        index.push(Choice::Raw.id());
+        varint::write_u64(&mut index, 0);
+        varint::write_u64(&mut index, 8);
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"ADAPTC02");
+        varint::write_u64(&mut bytes, index.len() as u64);
+        bytes.extend_from_slice(&index);
+        bytes.extend_from_slice(&[0u8; 8]);
+        let r = ContainerReader::from_bytes(bytes).unwrap();
+        assert_eq!(r.version, 2);
+        assert_eq!(r.fields[0].chunks[0].crc, None);
+        let reg = CodecRegistry::default();
+        let (data, _) = r.decode_chunk(&reg, 0, 0).unwrap();
+        assert_eq!(data, vec![0.0f32; 2]);
+    }
+
+    /// A [`ByteSource`] that counts `read_at` calls, for cache tests.
+    struct CountingSource {
+        inner: MemSource,
+        reads: std::sync::atomic::AtomicU64,
+    }
+
+    impl ByteSource for CountingSource {
+        fn len(&self) -> u64 {
+            self.inner.len()
+        }
+
+        fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<()> {
+            self.reads.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            self.inner.read_at(offset, buf)
+        }
+    }
+
+    #[test]
+    fn cached_source_serves_repeats_from_memory() {
+        let data: Vec<u8> = (0u16..1000).map(|i| (i % 251) as u8).collect();
+        let counting = std::sync::Arc::new(CountingSource {
+            inner: MemSource(data.clone()),
+            reads: std::sync::atomic::AtomicU64::new(0),
+        });
+        let cached = CachedSource::new(counting.clone(), 1 << 16);
+        let mut buf = vec![0u8; 100];
+        for round in 0..3 {
+            for off in [0u64, 100, 500] {
+                cached.read_at(off, &mut buf).unwrap();
+                assert_eq!(buf, data[off as usize..off as usize + 100], "round {round}");
+            }
+        }
+        // 3 distinct ranges -> 3 underlying reads, 6 hits.
+        assert_eq!(counting.reads.load(std::sync::atomic::Ordering::Relaxed), 3);
+        assert_eq!(cached.stats(), (6, 3));
+    }
+
+    #[test]
+    fn cached_source_evicts_lru_under_budget() {
+        let data = vec![7u8; 4096];
+        let counting = std::sync::Arc::new(CountingSource {
+            inner: MemSource(data),
+            reads: std::sync::atomic::AtomicU64::new(0),
+        });
+        // Capacity of two 100-byte ranges.
+        let cached = CachedSource::new(counting.clone(), 200);
+        let mut buf = vec![0u8; 100];
+        cached.read_at(0, &mut buf).unwrap(); // miss, cache {0}
+        cached.read_at(100, &mut buf).unwrap(); // miss, cache {0, 100}
+        cached.read_at(0, &mut buf).unwrap(); // hit, refresh 0
+        cached.read_at(200, &mut buf).unwrap(); // miss, evicts LRU (100)
+        assert!(cached.cached_bytes() <= 200);
+        cached.read_at(0, &mut buf).unwrap(); // still cached (refreshed)
+        cached.read_at(100, &mut buf).unwrap(); // evicted -> miss again
+        assert_eq!(counting.reads.load(std::sync::atomic::Ordering::Relaxed), 4);
+        // Oversized requests bypass the cache entirely.
+        let mut big = vec![0u8; 300];
+        cached.read_at(0, &mut big).unwrap();
+        cached.read_at(0, &mut big).unwrap();
+        assert_eq!(counting.reads.load(std::sync::atomic::Ordering::Relaxed), 6);
+    }
+
+    #[test]
+    fn cached_reader_decodes_identically() {
+        let bytes = sample_v2().to_bytes();
+        let path = std::env::temp_dir().join("adaptivec_store_cached_test.bin");
+        std::fs::write(&path, &bytes).unwrap();
+        let plain = ContainerReader::from_bytes(bytes).unwrap();
+        let cached = ContainerReader::open_cached(&path, 1 << 20).unwrap();
+        assert_eq!(cached.version, plain.version);
+        assert_eq!(cached.fields, plain.fields);
+        let reg = CodecRegistry::default();
+        for (fi, f) in plain.fields.iter().enumerate() {
+            for ci in 0..f.chunks.len() {
+                // Twice: the second pass exercises cache hits.
+                for _ in 0..2 {
+                    assert_eq!(
+                        cached.chunk_bytes(fi, ci).unwrap(),
+                        plain.chunk_bytes(fi, ci).unwrap()
+                    );
+                }
+            }
+        }
+        let a = cached.load_field(&reg, "b").unwrap();
+        let b = plain.load_field(&reg, "b").unwrap();
+        assert_eq!(a.data, b.data);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]
@@ -1239,8 +1755,8 @@ mod tests {
             raw_bytes: 8,
             chunk_elems: 1,
             chunks: vec![
-                ChunkRef { selection: 2, offset: 0, len: 0 },
-                ChunkRef { selection: 2, offset: 0, len: 0 },
+                ChunkRef { selection: 2, offset: 0, len: 0, crc: None },
+                ChunkRef { selection: 2, offset: 0, len: 0, crc: None },
             ],
         };
         let parts = vec![(vec![0.0f32; 1], Dims::D1(1)), (vec![0.0f32; 1], Dims::D1(1))];
@@ -1258,8 +1774,8 @@ mod tests {
             raw_bytes: 20,
             chunk_elems: 2,
             chunks: vec![
-                ChunkRef { selection: 2, offset: 0, len: 0 },
-                ChunkRef { selection: 2, offset: 0, len: 0 },
+                ChunkRef { selection: 2, offset: 0, len: 0, crc: None },
+                ChunkRef { selection: 2, offset: 0, len: 0, crc: None },
             ],
         };
         let parts = vec![

@@ -45,6 +45,14 @@ pub struct FsModel {
     pub beta: f64,
     /// Saturation process count.
     pub p_sat: f64,
+    /// Node-local scratch write bandwidth (bytes/s) — where the
+    /// single-pass writer spills compressed slabs. Local SSD/tmpfs,
+    /// not the shared filesystem, so it does not contend with the
+    /// aggregate bandwidths above.
+    pub scratch_write_bw: f64,
+    /// Node-local scratch read bandwidth (bytes/s) — the splice pass
+    /// reads every slab back exactly once.
+    pub scratch_read_bw: f64,
 }
 
 impl Default for FsModel {
@@ -57,6 +65,8 @@ impl Default for FsModel {
             seek_latency: 1e-4,
             beta: 0.08,
             p_sat: 64.0,
+            scratch_write_bw: 2.0e9,
+            scratch_read_bw: 2.5e9,
         }
     }
 }
@@ -100,6 +110,48 @@ impl FsModel {
         self.file_latency
             + reads as f64 * self.seek_latency
             + bytes_per_proc / self.read_bw_per_proc(p)
+    }
+
+    /// Modeled wall time of the single-pass spill write path
+    /// (DESIGN.md §6) for `p` processes each storing
+    /// `stored_per_proc` compressed bytes in `slabs` chunks after
+    /// `comp_secs_per_proc` of (single-pass) compression: the payload
+    /// is written once to node-local scratch (large sequential
+    /// write-behind extents), read back once by the splice pass, and
+    /// written once to the shared filesystem. Slabs land in worker
+    /// *completion* order but are read back in *declared* order, so
+    /// the splice is slab-granular random access — each slab costs a
+    /// positioned-read overhead on top of its bytes. The in-memory
+    /// fast path skips the scratch round-trip entirely for payloads
+    /// under `mem_budget` bytes.
+    pub fn single_pass_store_time(
+        &self,
+        p: usize,
+        stored_per_proc: f64,
+        slabs: usize,
+        comp_secs_per_proc: f64,
+        mem_budget: f64,
+    ) -> f64 {
+        let scratch = if stored_per_proc <= mem_budget {
+            0.0
+        } else {
+            stored_per_proc / self.scratch_write_bw
+                + stored_per_proc / self.scratch_read_bw
+                + slabs as f64 * self.seek_latency
+        };
+        comp_secs_per_proc + scratch + self.write_time(p, stored_per_proc)
+    }
+
+    /// Modeled wall time of the two-pass recompress write path: no
+    /// scratch I/O, but the compression cost is paid twice (sizing
+    /// pass + regeneration pass).
+    pub fn two_pass_store_time(
+        &self,
+        p: usize,
+        stored_per_proc: f64,
+        comp_secs_per_proc: f64,
+    ) -> f64 {
+        2.0 * comp_secs_per_proc + self.write_time(p, stored_per_proc)
     }
 }
 
@@ -158,6 +210,41 @@ impl ThroughputModel {
         decomp_secs_per_proc: f64,
     ) -> f64 {
         let t = self.fs.pread_time(p, chunk_bytes_per_proc, reads) + decomp_secs_per_proc;
+        (raw_per_proc * p as f64) / t
+    }
+
+    /// Storing throughput (bytes/s of raw data) of the single-pass
+    /// spill write path — one compression pass plus the scratch
+    /// round-trip (skipped below `mem_budget`).
+    pub fn single_pass_store_throughput(
+        &self,
+        p: usize,
+        raw_per_proc: f64,
+        stored_per_proc: f64,
+        slabs: usize,
+        comp_secs_per_proc: f64,
+        mem_budget: f64,
+    ) -> f64 {
+        let t = self.fs.single_pass_store_time(
+            p,
+            stored_per_proc,
+            slabs,
+            comp_secs_per_proc,
+            mem_budget,
+        );
+        (raw_per_proc * p as f64) / t
+    }
+
+    /// Storing throughput (bytes/s of raw data) of the two-pass
+    /// recompress write path — compression paid twice, no scratch.
+    pub fn two_pass_store_throughput(
+        &self,
+        p: usize,
+        raw_per_proc: f64,
+        stored_per_proc: f64,
+        comp_secs_per_proc: f64,
+    ) -> f64 {
+        let t = self.fs.two_pass_store_time(p, stored_per_proc, comp_secs_per_proc);
         (raw_per_proc * p as f64) / t
     }
 }
@@ -236,6 +323,52 @@ mod tests {
         assert!(
             ours_1024 > 1.5 * base_1024,
             "at scale compression must win: {ours_1024:.2e} vs {base_1024:.2e}"
+        );
+    }
+
+    #[test]
+    fn single_pass_beats_two_pass_when_compression_dominates() {
+        // Compression runs ~100 MB/s; scratch streams at GB/s. Paying
+        // one extra sequential pass over the *compressed* bytes must
+        // beat compressing the raw bytes a second time — the whole
+        // premise of the spill protocol.
+        let fs = FsModel::default();
+        let stored = 25.6e6; // 256 MB raw at 10:1
+        let slabs = 400; // 64 KiB-ish chunks
+        let comp_t = 2.56; // 256 MB at 100 MB/s
+        for p in [1usize, 64, 1024] {
+            let single = fs.single_pass_store_time(p, stored, slabs, comp_t, 0.0);
+            let two = fs.two_pass_store_time(p, stored, comp_t);
+            assert!(
+                single < two,
+                "p={p}: single {single:.3}s must beat two-pass {two:.3}s"
+            );
+            // The saving approaches one full compression pass.
+            assert!(two - single > 0.8 * comp_t, "p={p}");
+        }
+        // In-memory fast path: no scratch cost at all.
+        let mem = fs.single_pass_store_time(64, stored, slabs, comp_t, stored + 1.0);
+        let spilled = fs.single_pass_store_time(64, stored, slabs, comp_t, 0.0);
+        assert!(mem < spilled);
+        assert!((mem - comp_t - fs.write_time(64, stored)).abs() < 1e-12);
+        // The splice is slab-granular random access over the scratch
+        // file, not one sequential read: more slabs, more seek cost.
+        let fine = fs.single_pass_store_time(64, stored, 4000, comp_t, 0.0);
+        assert!(fine > spilled);
+        assert!((fine - spilled - 3600.0 * fs.seek_latency).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_pass_throughput_advantage_shows_in_model() {
+        let tm = ThroughputModel::new(FsModel::default());
+        let raw = 256e6;
+        let stored = raw / 10.0;
+        let comp_t = raw / 100e6;
+        let single = tm.single_pass_store_throughput(1024, raw, stored, 400, comp_t, 0.0);
+        let two = tm.two_pass_store_throughput(1024, raw, stored, comp_t);
+        assert!(
+            single > 1.3 * two,
+            "single-pass {single:.2e} should clearly beat two-pass {two:.2e}"
         );
     }
 

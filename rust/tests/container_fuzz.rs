@@ -70,7 +70,37 @@ fn truncation_at_every_prefix_is_an_error_v2() {
         );
     }
     let r = ContainerReader::from_bytes(bytes).unwrap();
-    assert_eq!(r.version, 2);
+    assert_eq!(r.version, 3);
+}
+
+#[test]
+fn payload_bit_flips_always_caught_by_chunk_crc() {
+    // CRC-32 detects every single-bit error, so flipping ANY payload
+    // bit of a v3 container must surface as Err from the chunk that
+    // owns it — seeded sweep over positions and bits.
+    let registry = CodecRegistry::default();
+    let bytes = v2_bytes();
+    let reader = ContainerReader::from_bytes(bytes.clone()).unwrap();
+    assert_eq!(reader.version, 3);
+    let payload_start = reader.fields[0].chunks[0].offset;
+    let payload_len: usize = reader.fields.iter().flat_map(|f| &f.chunks).map(|c| c.len).sum();
+    let gen = Gen::<(usize, u8)>::new(move |r| (r.below(payload_len), (1u8) << r.below(8)));
+    forall("every payload flip is caught", 60, gen, |&(pos, mask)| {
+        let mut corrupt = bytes.clone();
+        corrupt[payload_start + pos] ^= mask;
+        let r = ContainerReader::from_bytes(corrupt).unwrap();
+        // Find the chunk owning the flipped byte; its decode must err.
+        for (fi, f) in r.fields.iter().enumerate() {
+            for (ci, c) in f.chunks.iter().enumerate() {
+                let abs = payload_start + pos;
+                if abs >= c.offset && abs < c.offset + c.len {
+                    return r.chunk_bytes(fi, ci).is_err()
+                        && r.decode_chunk(&registry, fi, ci).is_err();
+                }
+            }
+        }
+        false // flipped byte must belong to some chunk
+    });
 }
 
 #[test]
@@ -112,22 +142,18 @@ fn random_garbage_never_panics() {
     let gen = Gen::<Vec<u8>>::new(|r| {
         let n = r.range(0, 512);
         let mut v: Vec<u8> = (0..n).map(|_| r.below(256) as u8).collect();
-        match r.below(3) {
-            0 => {
-                for (i, b) in b"ADAPTC01".iter().enumerate() {
-                    if i < v.len() {
-                        v[i] = *b;
-                    }
+        let magic: Option<&[u8; 8]> = match r.below(4) {
+            0 => Some(b"ADAPTC01"),
+            1 => Some(b"ADAPTC02"),
+            2 => Some(b"ADAPTC03"),
+            _ => None,
+        };
+        if let Some(magic) = magic {
+            for (i, b) in magic.iter().enumerate() {
+                if i < v.len() {
+                    v[i] = *b;
                 }
             }
-            1 => {
-                for (i, b) in b"ADAPTC02".iter().enumerate() {
-                    if i < v.len() {
-                        v[i] = *b;
-                    }
-                }
-            }
-            _ => {}
         }
         v
     });

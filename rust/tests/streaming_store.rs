@@ -1,5 +1,7 @@
 //! Integration tests for the streaming storage layer: the index-first
-//! `ContainerV2Writer`, the pread-backed `ByteSource` reader, and the
+//! `ContainerV2Writer` (single-pass spill and two-pass recompress
+//! protocols), per-chunk CRC verification, the pread-backed
+//! `ByteSource` reader (with and without the LRU cache), and the
 //! three wire-format bugfixes that rode along (10-byte varint
 //! truncation, overlapping/gapped v2 chunk ranges, odd-length v1 raw
 //! entries).
@@ -7,14 +9,15 @@
 use adaptivec::baseline::Policy;
 use adaptivec::codec::varint;
 use adaptivec::codec_api::CodecRegistry;
+use adaptivec::coordinator::spill::SpillConfig;
 use adaptivec::coordinator::store::{
     ChunkDecl, Container, ContainerReader, ContainerV2Writer, FieldDecl,
 };
-use adaptivec::coordinator::Coordinator;
+use adaptivec::coordinator::{Coordinator, WritePlan};
 use adaptivec::data::atm;
 use adaptivec::data::field::Dims;
 use adaptivec::data::Field;
-use adaptivec::estimator::selector::SelectorConfig;
+use adaptivec::estimator::selector::{CandidateSet, SelectorConfig};
 use adaptivec::testing::proptest_lite::{forall, Gen};
 
 fn fields(seed: u64, n: usize) -> Vec<Field> {
@@ -26,8 +29,8 @@ fn tmp_path(name: &str) -> std::path::PathBuf {
 }
 
 #[test]
-fn streamed_write_is_byte_identical_across_policies() {
-    let coord = Coordinator::new(SelectorConfig::default(), 3);
+fn streamed_write_is_byte_identical_across_policies_and_plans() {
+    let mut coord = Coordinator::new(SelectorConfig::default(), 3);
     let fs = fields(11, 3);
     for policy in [Policy::RateDistortion, Policy::NoCompression, Policy::AlwaysZfp] {
         for chunk_elems in [0usize, 2048] {
@@ -36,17 +39,160 @@ fn streamed_write_is_byte_identical_across_policies() {
                 .unwrap()
                 .to_container()
                 .to_bytes();
-            let (report, streamed) = coord
-                .run_chunked_to(&fs, policy, 1e-3, chunk_elems, Vec::new())
+            for plan in [WritePlan::SinglePassSpill, WritePlan::TwoPassRecompress] {
+                coord.write_plan = plan;
+                let (report, streamed) = coord
+                    .run_chunked_to(&fs, policy, 1e-3, chunk_elems, Vec::new())
+                    .unwrap();
+                assert!(
+                    streamed == buffered,
+                    "streamed and buffered outputs diverged: {policy:?} / {chunk_elems} / {plan:?}"
+                );
+                // The summary's totals agree with the parsed container.
+                let reader = ContainerReader::from_bytes(buffered.clone()).unwrap();
+                assert_eq!(report.total_stored_bytes(), reader.stored_bytes());
+                assert_eq!(report.total_raw_bytes(), reader.raw_bytes());
+            }
+        }
+    }
+}
+
+#[test]
+fn single_pass_equals_two_pass_across_codec_sets() {
+    // The write plan must be invisible in the bytes for every
+    // candidate set the selector can rank (restricting candidates
+    // changes which codecs the chunks pick, so each set exercises
+    // different payload streams).
+    let fs = fields(17, 2);
+    for codecs in ["sz", "zfp", "dct", "sz,zfp", "sz,zfp,dct"] {
+        let cfg = SelectorConfig {
+            candidates: CandidateSet::parse(codecs).unwrap(),
+            ..SelectorConfig::default()
+        };
+        let mut coord = Coordinator::new(cfg, 3);
+        let mut outputs = Vec::new();
+        for plan in [WritePlan::SinglePassSpill, WritePlan::TwoPassRecompress] {
+            coord.write_plan = plan;
+            let (report, bytes) = coord
+                .run_chunked_to(&fs, Policy::RateDistortion, 1e-3, 2048, Vec::new())
                 .unwrap();
-            assert!(
-                streamed == buffered,
-                "streamed and buffered outputs diverged: {policy:?} / {chunk_elems}"
-            );
-            // The summary's totals agree with the parsed container.
-            let reader = ContainerReader::from_bytes(buffered).unwrap();
-            assert_eq!(report.total_stored_bytes(), reader.stored_bytes());
-            assert_eq!(report.total_raw_bytes(), reader.raw_bytes());
+            // Single-pass: exactly one compress per chunk; two-pass:
+            // exactly two.
+            let expect = match plan {
+                WritePlan::SinglePassSpill => report.total_chunks() as u64,
+                WritePlan::TwoPassRecompress => 2 * report.total_chunks() as u64,
+            };
+            assert_eq!(report.compress_calls.total(), expect, "{codecs} / {plan:?}");
+            outputs.push(bytes);
+        }
+        assert!(outputs[0] == outputs[1], "plans diverged for codec set {codecs}");
+        let buffered = coord
+            .run_chunked(&fs, Policy::RateDistortion, 1e-3, 2048)
+            .unwrap()
+            .to_container()
+            .to_bytes();
+        assert!(outputs[0] == buffered, "streamed != buffered for codec set {codecs}");
+    }
+}
+
+/// An `io::Write` sink that fails once `limit` bytes have been
+/// accepted — simulates the shared filesystem filling up mid-splice.
+struct FailingSink {
+    accepted: usize,
+    limit: usize,
+}
+
+impl std::io::Write for FailingSink {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        if self.accepted + buf.len() > self.limit {
+            return Err(std::io::Error::other("sink full"));
+        }
+        self.accepted += buf.len();
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+#[test]
+fn scratch_file_cleaned_up_on_sink_failure() {
+    // Force everything through a scratch file (zero memory budget,
+    // private directory), then fail the sink at several points:
+    // during the index write and during the splice. Every failure
+    // must propagate as Err AND leave the scratch directory empty.
+    let dir = tmp_path("scratch_cleanup_dir");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut coord = Coordinator::new(SelectorConfig::default(), 2);
+    coord.spill = SpillConfig { mem_budget: 0, dir: Some(dir.clone()) };
+    let fs = fields(23, 2);
+    // Reference run to size the container, so the failure limits hit
+    // each phase deterministically: 0 = the magic itself, 16 =
+    // mid-index, len-1 = the very last payload write of the splice.
+    let (_, full) = coord
+        .run_chunked_to(&fs, Policy::RateDistortion, 1e-3, 2048, Vec::new())
+        .unwrap();
+    assert_eq!(std::fs::read_dir(&dir).unwrap().count(), 0, "reference run leaked");
+    for limit in [0usize, 16, full.len() - 1] {
+        let sink = FailingSink { accepted: 0, limit };
+        let result = coord.run_chunked_to(&fs, Policy::RateDistortion, 1e-3, 2048, sink);
+        assert!(result.is_err(), "limit {limit}: a full sink must error");
+        assert_eq!(
+            std::fs::read_dir(&dir).unwrap().count(),
+            0,
+            "limit {limit}: scratch file leaked"
+        );
+    }
+    // And the success path leaves nothing behind either.
+    let (report, bytes) = coord
+        .run_chunked_to(&fs, Policy::RateDistortion, 1e-3, 2048, Vec::new())
+        .unwrap();
+    assert!(report.scratch_spilled);
+    assert!(report.peak_scratch_bytes > 0);
+    assert_eq!(std::fs::read_dir(&dir).unwrap().count(), 0, "scratch leaked on success");
+    // The spilled run still produced a valid, decodable container.
+    let reader = ContainerReader::from_bytes(bytes).unwrap();
+    assert_eq!(reader.version, 3);
+    let restored = coord.load_reader(&reader).unwrap();
+    assert_eq!(restored.len(), fs.len());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn crc_catches_bit_rot_in_every_chunk() {
+    // Flip one bit in each chunk's payload of a real container: the
+    // v3 index CRC must turn every flip into a Corrupt error at
+    // chunk_bytes/decode_chunk — including raw chunks, where decode
+    // alone would silently return wrong values.
+    let coord = Coordinator::new(SelectorConfig::default(), 2);
+    let registry = CodecRegistry::default();
+    let fs = fields(29, 2);
+    for policy in [Policy::RateDistortion, Policy::NoCompression] {
+        let (_, bytes) = coord
+            .run_chunked_to(&fs, policy, 1e-3, 2048, Vec::new())
+            .unwrap();
+        let clean = ContainerReader::from_bytes(bytes.clone()).unwrap();
+        assert_eq!(clean.version, 3);
+        for (fi, f) in clean.fields.iter().enumerate() {
+            for (ci, c) in f.chunks.iter().enumerate() {
+                if c.len == 0 {
+                    continue;
+                }
+                let mut corrupt = bytes.clone();
+                corrupt[c.offset + c.len / 2] ^= 0x40;
+                let r = ContainerReader::from_bytes(corrupt).unwrap();
+                let err = r.chunk_bytes(fi, ci).unwrap_err();
+                assert!(
+                    format!("{err}").contains("crc"),
+                    "{policy:?} field {fi} chunk {ci}: {err}"
+                );
+                assert!(r.decode_chunk(&registry, fi, ci).is_err());
+                // Sibling chunks are untouched and still verify.
+                if ci > 0 {
+                    assert!(r.chunk_bytes(fi, ci - 1).is_ok());
+                }
+            }
         }
     }
 }
@@ -119,10 +265,7 @@ fn writer_streams_through_a_file_sink() {
         dims: Dims::D1(4),
         raw_bytes: 16,
         chunk_elems: 2,
-        chunks: vec![
-            ChunkDecl { selection: 2, len: 8 },
-            ChunkDecl { selection: 2, len: 8 },
-        ],
+        chunks: vec![ChunkDecl::of(2, &[1u8; 8]), ChunkDecl::of(2, &[2u8; 8])],
     }];
     let path = tmp_path("writer_file_sink.bin");
     let sink = std::io::BufWriter::new(std::fs::File::create(&path).unwrap());
@@ -131,11 +274,24 @@ fn writer_streams_through_a_file_sink() {
     w.write_chunk(&[2u8; 8]).unwrap();
     w.finish().unwrap();
     let reader = ContainerReader::open(&path).unwrap();
-    assert_eq!(reader.version, 2);
+    assert_eq!(reader.version, 3);
     assert_eq!(reader.fields.len(), 1);
     assert_eq!(reader.chunk_bytes(0, 0).unwrap(), vec![1u8; 8]);
     assert_eq!(reader.chunk_bytes(0, 1).unwrap(), vec![2u8; 8]);
+    // Out-of-order supply through a file sink, byte-identical result.
+    let ooo = tmp_path("writer_file_sink_ooo.bin");
+    let sink = std::io::BufWriter::new(std::fs::File::create(&ooo).unwrap());
+    let mut w = ContainerV2Writer::new(sink, &decls).unwrap();
+    w.put_chunk(1, &[2u8; 8]).unwrap();
+    w.put_chunk(0, &[1u8; 8]).unwrap();
+    w.finish().unwrap();
+    assert_eq!(
+        std::fs::read(&ooo).unwrap(),
+        std::fs::read(&path).unwrap(),
+        "completion-order writes must match index-order bytes"
+    );
     std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&ooo).ok();
 }
 
 #[test]
