@@ -1,6 +1,6 @@
 //! In-situ compression driver (paper §3's "practical in situ model"):
 //! a small 2D advection–diffusion simulation produces evolving fields;
-//! after every simulation step the coordinator compresses the state
+//! after every simulation step the engine compresses the state
 //! in-memory with the online selector, exactly as an HPC code would
 //! hand its analysis output to the compression layer before I/O.
 //!
@@ -16,9 +16,8 @@
 
 use adaptivec::baseline::Policy;
 use adaptivec::coordinator::store::ContainerReader;
-use adaptivec::coordinator::Coordinator;
 use adaptivec::data::field::{Dims, Field};
-use adaptivec::estimator::selector::AutoSelector;
+use adaptivec::engine::Engine;
 use adaptivec::metrics::error_stats;
 use adaptivec::testing::Rng;
 
@@ -95,7 +94,7 @@ impl Sim {
 
 fn main() -> adaptivec::Result<()> {
     let mut sim = Sim::new(192, 192, 42);
-    let coord = Coordinator::default();
+    let engine = Engine::default();
     let eb_rel = 1e-4;
     let steps = 40;
     let output_every = 4;
@@ -104,7 +103,7 @@ fn main() -> adaptivec::Result<()> {
     std::fs::create_dir_all(&tmp)?;
 
     println!("in-situ simulation: 192x192 advection-diffusion, {steps} steps, output every {output_every}");
-    let registry = AutoSelector::new(coord.selector_cfg).registry();
+    let registry = engine.registry();
     println!(
         "{:>6} {:>8} {:>18} {:>10} {:>12}",
         "step", "ratio", "codec picks", "max|err|", "bound"
@@ -126,7 +125,7 @@ fn main() -> adaptivec::Result<()> {
         let path = tmp.join(format!("step{step:04}.adaptivec2"));
         let sink = std::io::BufWriter::new(std::fs::File::create(&path)?);
         let (report, _) =
-            coord.run_chunked_to(&fields, Policy::RateDistortion, eb_rel, chunk_elems, sink)?;
+            engine.compress_chunked_to(&fields, Policy::RateDistortion, eb_rel, chunk_elems, sink)?;
         total_raw += report.total_raw_bytes();
         total_stored += report.total_stored_bytes();
         peak_payload = peak_payload.max(report.peak_payload_bytes);
@@ -138,7 +137,7 @@ fn main() -> adaptivec::Result<()> {
         // Verify in-situ output quality by reading the step file back
         // through the pread-backed reader.
         let reader = ContainerReader::open(&path)?;
-        let restored = coord.load_reader(&reader)?;
+        let restored = engine.load_reader(&reader)?;
         std::fs::remove_file(&path).ok();
         let mut worst = (0.0f64, 0.0f64);
         for (orig, rest) in fields.iter().zip(&restored) {
@@ -154,7 +153,7 @@ fn main() -> adaptivec::Result<()> {
             "{:>6} {:>8.2} {:>18} {:>10.2e} {:>12.2e}",
             step,
             report.overall_ratio(),
-            report.codec_counts().summary(&registry),
+            report.codec_counts().summary(registry),
             worst.0,
             worst.1
         );

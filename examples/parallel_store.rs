@@ -1,5 +1,5 @@
 //! END-TO-END driver (the validation run recorded in EXPERIMENTS.md):
-//! generate all three datasets, run the full coordinator under every
+//! generate all three datasets, run the full engine under every
 //! policy, write/read real container files, verify every field's error
 //! bound, and report the paper's headline metrics: compression ratios
 //! (Fig. 7 protocol) and modeled 1..1024-rank store/load throughput
@@ -9,21 +9,20 @@
 
 use adaptivec::baseline::Policy;
 use adaptivec::coordinator::store::{Container, ContainerReader};
-use adaptivec::coordinator::Coordinator;
 use adaptivec::data::Dataset;
-use adaptivec::estimator::selector::AutoSelector;
+use adaptivec::engine::Engine;
 use adaptivec::iosim::{FsModel, ThroughputModel, PROC_SWEEP};
 use adaptivec::metrics::error_stats;
 use std::time::Instant;
 
 fn main() -> adaptivec::Result<()> {
-    let coord = Coordinator::default();
-    let registry = AutoSelector::new(coord.selector_cfg).registry();
+    let engine = Engine::default();
+    let registry = engine.registry();
     let eb_rel = 1e-4;
     let tmp = std::env::temp_dir().join("adaptivec_parallel_store");
     std::fs::create_dir_all(&tmp)?;
 
-    println!("workers: {}, eb_rel: {eb_rel:.0e}", coord.workers);
+    println!("workers: {}, eb_rel: {eb_rel:.0e}", engine.workers());
 
     let mut hurricane_stats: Vec<(Policy, f64, f64, f64, f64)> = Vec::new();
 
@@ -51,7 +50,7 @@ fn main() -> adaptivec::Result<()> {
             Policy::Optimum,
         ] {
             let t0 = Instant::now();
-            let report = coord.run(&fields, policy, eb_rel)?;
+            let report = engine.run(&fields, policy, eb_rel)?;
             let comp_wall = t0.elapsed().as_secs_f64();
 
             // Real file I/O round-trip.
@@ -62,7 +61,7 @@ fn main() -> adaptivec::Result<()> {
             let restored = if policy == Policy::NoCompression {
                 Vec::new() // raw entries hold LE bytes; skip decode
             } else {
-                coord.load(&container)?
+                engine.load(&container)?
             };
             let decomp_wall = t1.elapsed().as_secs_f64();
 
@@ -88,7 +87,7 @@ fn main() -> adaptivec::Result<()> {
                 report.overall_ratio(),
                 comp_wall,
                 decomp_wall,
-                report.codec_counts().summary(&registry)
+                report.codec_counts().summary(registry)
             );
 
             if ds == Dataset::Hurricane {
@@ -135,7 +134,7 @@ fn main() -> adaptivec::Result<()> {
     let path = tmp.join("hurricane_streamed.adaptivec2");
     let sink = std::io::BufWriter::new(std::fs::File::create(&path)?);
     let (srep, _) =
-        coord.run_chunked_to(&fields, Policy::RateDistortion, eb_rel, 64 * 1024, sink)?;
+        engine.compress_chunked_to(&fields, Policy::RateDistortion, eb_rel, 64 * 1024, sink)?;
     println!(
         "streamed {} fields ({}): ratio {:.2}, peak payload {} B vs {} B buffered ({:.1}%); \
          {} codec calls for {} chunks, peak scratch {} B{}",
@@ -157,7 +156,7 @@ fn main() -> adaptivec::Result<()> {
     );
     let reader = ContainerReader::open(&path)?; // index-only pread open
     let target = &fields[fields.len() / 2];
-    let got = coord.load_field(&reader, &target.name)?;
+    let got = engine.load_field(&reader, &target.name)?;
     let vr = target.value_range();
     let bound = if vr > 0.0 { eb_rel * vr } else { eb_rel };
     let stats = error_stats(&target.data, &got.data);

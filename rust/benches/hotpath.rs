@@ -4,7 +4,7 @@
 
 use adaptivec::bench_util::{bench, Table};
 use adaptivec::baseline::Policy;
-use adaptivec::coordinator::Coordinator;
+use adaptivec::engine::{Engine, EngineConfig};
 use adaptivec::data::{atm, hurricane, Dataset};
 use adaptivec::estimator::selector::{AutoSelector, SelectorConfig};
 use adaptivec::sz::SzCompressor;
@@ -43,14 +43,14 @@ fn main() {
     }
     t.print("hot paths (single core)");
 
-    // Coordinator scaling on ATM.
+    // Engine scaling on ATM.
     let fields = Dataset::Atm.generate(2018, 1);
     let raw: usize = fields.iter().map(|f| f.raw_bytes()).sum();
     let mut t = Table::new(&["workers", "wall time", "MB/s", "speedup"]);
     let mut base = 0.0;
     for w in [1usize, 2, 4, 8] {
-        let coord = Coordinator::new(SelectorConfig::default(), w);
-        let tm = bench(0, 2, || coord.run(&fields, Policy::RateDistortion, 1e-4).unwrap());
+        let engine = Engine::new(EngineConfig { workers: w, ..EngineConfig::default() });
+        let tm = bench(0, 2, || engine.run(&fields, Policy::RateDistortion, 1e-4).unwrap());
         if w == 1 {
             base = tm.mean_secs();
         }
@@ -61,5 +61,5 @@ fn main() {
             format!("{:.2}x", base / tm.mean_secs()),
         ]);
     }
-    t.print("coordinator scaling (ATM, 79 fields, policy=ours)");
+    t.print("engine scaling (ATM, 79 fields, policy=ours)");
 }

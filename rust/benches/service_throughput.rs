@@ -1,0 +1,144 @@
+//! Service front-end throughput: requests/sec and tail latency vs
+//! batch size (1, 4, 16) through the full concurrent path — bounded
+//! queue, batcher, worker threads, shared engine — plus the matching
+//! analytical [`SvcModel`] numbers so the measured batching knee can
+//! be compared against the model.
+//!
+//! CI smoke knobs as in `store_throughput`: `ADAPTIVEC_BENCH_ITERS`
+//! scales the per-client request count (default 4 → 24 requests per
+//! client; CI's `1` sends 6), `ADAPTIVEC_BENCH_SCALE` sizes the
+//! dataset, `ADAPTIVEC_BENCH_JSON=<path>` writes the artifact.
+
+use adaptivec::bench_util::{bytes_h, iters_override, scale_override, JsonReport, Table, Timing};
+use adaptivec::data::Dataset;
+use adaptivec::engine::{Engine, EngineConfig};
+use adaptivec::iosim::SvcModel;
+use adaptivec::service::{Request, Service, ServiceConfig};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let eb = 1e-4;
+    let scale = scale_override(0);
+    let base_fields = Dataset::Atm.generate(2018, scale);
+    // Enough requests to form real batches: each client thread streams
+    // its own renamed copies of the dataset fields.
+    let client_threads = 4usize;
+    let per_client = 6 * iters_override(4) as usize;
+    let total_requests = client_threads * per_client;
+    let raw_per_req: u64 = base_fields[0].raw_bytes() as u64;
+    println!(
+        "service_throughput: {} requests ({} client threads x {}), {} per field, eb_rel {eb:.0e}\n",
+        total_requests,
+        client_threads,
+        per_client,
+        bytes_h(raw_per_req),
+    );
+
+    let mut json = JsonReport::new();
+    let mut t = Table::new(&[
+        "batch_max",
+        "wall",
+        "req/s",
+        "batches",
+        "avg batch",
+        "p50",
+        "p99",
+        "rejected",
+    ]);
+
+    for &batch_max in &[1usize, 4, 16] {
+        let engine = Arc::new(Engine::new(EngineConfig {
+            workers: 2,
+            ..EngineConfig::default()
+        }));
+        let svc = Service::start(
+            engine,
+            ServiceConfig {
+                workers: 2,
+                // Admission never sheds in the bench: the queue is
+                // deep enough for every in-flight request.
+                queue_depth: total_requests + client_threads,
+                batch_max,
+                eb_rel: eb,
+                chunk_elems: 2048,
+                ..ServiceConfig::default()
+            },
+        );
+        let handle = svc.handle();
+
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for c in 0..client_threads {
+                let handle = handle.clone();
+                let base = &base_fields;
+                scope.spawn(move || {
+                    let mut tickets = Vec::with_capacity(per_client);
+                    for i in 0..per_client {
+                        let mut field = base[i % base.len()].clone();
+                        field.name = format!("{}@c{c}r{i}", field.name);
+                        tickets.push(
+                            handle
+                                .submit(Request::Compress { field })
+                                .expect("bench queue is deep enough"),
+                        );
+                    }
+                    for tk in tickets {
+                        tk.wait().expect("bench request must succeed");
+                    }
+                });
+            }
+        });
+        let wall = t0.elapsed();
+        let report = svc.shutdown();
+        assert_eq!(report.completed, total_requests as u64, "no request may be lost");
+        assert_eq!(report.rejected, 0, "bench queue must never shed");
+        assert!(report.max_batch <= batch_max as u64, "batcher exceeded its cap");
+
+        let rps = total_requests as f64 / wall.as_secs_f64();
+        json.record(
+            &format!("service_throughput_batch_{batch_max}"),
+            Timing { mean: wall, std_dev: Duration::ZERO, iters: 1 },
+        );
+        json.record(
+            &format!("service_p99_batch_{batch_max}"),
+            Timing { mean: report.p99, std_dev: Duration::ZERO, iters: 1 },
+        );
+        t.row(&[
+            batch_max.to_string(),
+            format!("{:.3} s", wall.as_secs_f64()),
+            format!("{rps:.1}"),
+            report.batches.to_string(),
+            format!("{:.2}", report.mean_batch()),
+            format!("{:.3} ms", report.p50.as_secs_f64() * 1e3),
+            format!("{:.3} ms", report.p99.as_secs_f64() * 1e3),
+            report.rejected.to_string(),
+        ]);
+    }
+    t.print("service_throughput — requests/sec and latency vs batch_max");
+
+    // The analytical counterpart (iosim::SvcModel): same batch sweep,
+    // compression time approximated from one offline run.
+    let engine = Engine::default();
+    let rep = engine
+        .run(
+            &base_fields[..1],
+            adaptivec::baseline::Policy::RateDistortion,
+            eb,
+        )
+        .expect("offline reference run");
+    let comp_per_req =
+        rep.total_compress_time().as_secs_f64() + rep.total_estimate_time().as_secs_f64();
+    let model = SvcModel::default();
+    let mut t = Table::new(&["batch", "modeled MB/s raw", "modeled last-reply ms"]);
+    for &b in &[1usize, 4, 16] {
+        t.row(&[
+            b.to_string(),
+            format!("{:.2}", model.throughput(b, raw_per_req as f64, comp_per_req) / 1e6),
+            format!("{:.3}", model.batch_latency(b, comp_per_req) * 1e3),
+        ]);
+    }
+    t.print("service_throughput — iosim SvcModel (analytical)");
+
+    json.write_env().expect("write bench JSON");
+}

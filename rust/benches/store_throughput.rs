@@ -21,31 +21,30 @@ use adaptivec::bench_util::{
     bench, bytes_h, iters_override, scale_override, speedup, JsonReport, Table,
 };
 use adaptivec::coordinator::store::ContainerReader;
-use adaptivec::coordinator::{Coordinator, WritePlan};
 use adaptivec::data::Dataset;
-use adaptivec::estimator::selector::AutoSelector;
+use adaptivec::engine::{Engine, EngineConfig, WritePlan};
 
 fn main() {
     let eb = 1e-4;
     let fields = Dataset::Atm.generate(2018, scale_override(1));
     let raw: u64 = fields.iter().map(|f| f.raw_bytes() as u64).sum();
-    let coord = Coordinator::default();
-    let registry = AutoSelector::new(coord.selector_cfg).registry();
+    let engine = Engine::default();
+    let registry = engine.registry();
     let mut json = JsonReport::new();
     println!(
         "ATM, {} fields, {:.1} MB raw, eb_rel {eb:.0e}, {} workers\n",
         fields.len(),
         raw as f64 / 1e6,
-        coord.workers
+        engine.workers()
     );
 
     // --- selection granularity: per-field vs per-chunk -------------
     let mut t = Table::new(&["granularity", "chunks", "ratio", "codec picks", "compress wall"]);
     let tm = bench(0, iters_override(2), || {
-        coord.run(&fields, Policy::RateDistortion, eb).unwrap()
+        engine.run(&fields, Policy::RateDistortion, eb).unwrap()
     });
     json.record("run_per_field_v1", tm);
-    let v1 = coord.run(&fields, Policy::RateDistortion, eb).unwrap();
+    let v1 = engine.run(&fields, Policy::RateDistortion, eb).unwrap();
     t.row(&[
         "per-field (v1)".into(),
         fields.len().to_string(),
@@ -55,10 +54,10 @@ fn main() {
     ]);
     for chunk_elems in [16 * 1024usize, 64 * 1024, 256 * 1024] {
         let tm = bench(0, iters_override(2), || {
-            coord.run_chunked(&fields, Policy::RateDistortion, eb, chunk_elems).unwrap()
+            engine.run_chunked(&fields, Policy::RateDistortion, eb, chunk_elems).unwrap()
         });
         json.record(&format!("run_chunked_{}k", chunk_elems / 1024), tm);
-        let rep = coord.run_chunked(&fields, Policy::RateDistortion, eb, chunk_elems).unwrap();
+        let rep = engine.run_chunked(&fields, Policy::RateDistortion, eb, chunk_elems).unwrap();
         let chunks: usize = rep.fields.iter().map(|f| f.chunks.len()).sum();
         t.row(&[
             format!("{}k elems/chunk", chunk_elems / 1024),
@@ -71,7 +70,7 @@ fn main() {
     t.print("selection granularity (RateDistortion policy)");
 
     // --- decode: full container vs single-field partial -------------
-    let rep = coord.run_chunked(&fields, Policy::RateDistortion, eb, 64 * 1024).unwrap();
+    let rep = engine.run_chunked(&fields, Policy::RateDistortion, eb, 64 * 1024).unwrap();
     let bytes = rep.to_container().to_bytes();
     let target = fields[fields.len() / 2].name.clone();
     let mut t = Table::new(&["operation", "time", "GB/s of raw"]);
@@ -81,7 +80,7 @@ fn main() {
     t.row(&["v2 index parse".into(), format!("{tm}"), "-".into()]);
 
     let reader = ContainerReader::from_bytes(bytes.clone()).unwrap();
-    let tm = bench(1, iters_override(3), || coord.load_reader(&reader).unwrap());
+    let tm = bench(1, iters_override(3), || engine.load_reader(&reader).unwrap());
     json.record("v2_full_decode", tm);
     t.row(&[
         "full decode (all fields)".into(),
@@ -90,7 +89,7 @@ fn main() {
     ]);
 
     let field_raw = fields[fields.len() / 2].raw_bytes() as f64;
-    let tm = bench(1, iters_override(5), || coord.load_field(&reader, &target).unwrap());
+    let tm = bench(1, iters_override(5), || engine.load_field(&reader, &target).unwrap());
     json.record("v2_partial_decode", tm);
     t.row(&[
         format!("partial decode ('{target}')"),
@@ -102,7 +101,7 @@ fn main() {
     let v1_bytes = v1.to_container().to_bytes();
     let tm = bench(1, iters_override(3), || {
         let r = ContainerReader::from_bytes(v1_bytes.clone()).unwrap();
-        coord.load_reader(&r).unwrap()
+        engine.load_reader(&r).unwrap()
     });
     json.record("v1_parse_full_decode", tm);
     t.row(&[
@@ -128,7 +127,7 @@ fn main() {
     ]);
 
     let tm_buffered = bench(0, iters_override(2), || {
-        let rep = coord.run_chunked(&fields, Policy::RateDistortion, eb, 64 * 1024).unwrap();
+        let rep = engine.run_chunked(&fields, Policy::RateDistortion, eb, 64 * 1024).unwrap();
         rep.to_container().write_file(&buf_path).unwrap();
     });
     json.record("v2_write_buffered", tm_buffered);
@@ -142,13 +141,15 @@ fn main() {
     ]);
 
     // Two-pass recompress: the pre-spill protocol, compresses twice.
-    let mut two_pass_coord = coord.clone();
-    two_pass_coord.write_plan = WritePlan::TwoPassRecompress;
+    let two_pass_engine = Engine::new(EngineConfig {
+        write_plan: WritePlan::TwoPassRecompress,
+        ..EngineConfig::default()
+    });
     let mut two_calls = 0u64;
     let tm_two_pass = bench(0, iters_override(2), || {
         let sink = std::io::BufWriter::new(std::fs::File::create(&two_pass_path).unwrap());
-        let (srep, _) = two_pass_coord
-            .run_chunked_to(&fields, Policy::RateDistortion, eb, 64 * 1024, sink)
+        let (srep, _) = two_pass_engine
+            .compress_chunked_to(&fields, Policy::RateDistortion, eb, 64 * 1024, sink)
             .unwrap();
         two_calls = srep.compress_calls.total();
     });
@@ -162,15 +163,14 @@ fn main() {
         "1.00x".into(),
     ]);
 
-    // Single-pass spill: compress once, splice from scratch. The
-    // `single_pass_vs_two_pass` column is the headline speedup.
-    let mut single_coord = coord.clone();
-    single_coord.write_plan = WritePlan::SinglePassSpill;
+    // Single-pass spill: compress once, splice from scratch (the
+    // engine default). The `single_pass_vs_two_pass` column is the
+    // headline speedup.
     let (mut peak_scratch, mut single_calls, mut spilled) = (0u64, 0u64, false);
     let tm_single = bench(0, iters_override(2), || {
         let sink = std::io::BufWriter::new(std::fs::File::create(&stream_path).unwrap());
-        let (srep, _) = single_coord
-            .run_chunked_to(&fields, Policy::RateDistortion, eb, 64 * 1024, sink)
+        let (srep, _) = engine
+            .compress_chunked_to(&fields, Policy::RateDistortion, eb, 64 * 1024, sink)
             .unwrap();
         peak_scratch = srep.peak_scratch_bytes;
         single_calls = srep.compress_calls.total();
@@ -218,7 +218,7 @@ fn main() {
         speedup(&tm_slurp, &tm_open),
     ]);
 
-    let tm_mem_field = bench(1, iters_override(5), || coord.load_field(&reader, &target).unwrap());
+    let tm_mem_field = bench(1, iters_override(5), || engine.load_field(&reader, &target).unwrap());
     t.row(&[
         format!("load_field '{target}' (in-memory)"),
         format!("{tm_mem_field}"),
@@ -226,7 +226,7 @@ fn main() {
     ]);
     let file_reader = ContainerReader::open(&stream_path).unwrap();
     let tm_pread_field =
-        bench(1, iters_override(5), || coord.load_field(&file_reader, &target).unwrap());
+        bench(1, iters_override(5), || engine.load_field(&file_reader, &target).unwrap());
     json.record("v2_partial_decode_streamed_pread", tm_pread_field);
     t.row(&[
         format!("load_field '{target}' (pread file)"),
@@ -237,7 +237,7 @@ fn main() {
     // warmup iteration every chunk read is a memory copy, no syscall.
     let cached_reader = ContainerReader::open_cached(&stream_path, 64 << 20).unwrap();
     let tm_cached_field =
-        bench(1, iters_override(5), || coord.load_field(&cached_reader, &target).unwrap());
+        bench(1, iters_override(5), || engine.load_field(&cached_reader, &target).unwrap());
     json.record("v2_partial_decode_cached_pread", tm_cached_field);
     t.row(&[
         format!("load_field '{target}' (cached pread)"),

@@ -11,11 +11,15 @@
 
 use super::args::Args;
 use crate::baseline::Policy;
-use crate::coordinator::{store::ContainerReader, Coordinator, WritePlan};
+use crate::coordinator::store::ContainerReader;
 use crate::data::{Dataset, Field};
+use crate::engine::{Engine, EngineConfig, WritePlan};
 use crate::estimator::selector::{AutoSelector, CandidateSet, SelectorConfig};
-use crate::iosim::{FsModel, ThroughputModel, PROC_SWEEP};
+use crate::iosim::{FsModel, SvcModel, ThroughputModel, PROC_SWEEP};
+use crate::service::net::{Client, Server};
+use crate::service::{Service, ServiceConfig};
 use crate::{Error, Result};
+use std::sync::Arc;
 
 pub const USAGE: &str = "adaptivec — online rate-distortion-optimal codec selection
 
@@ -26,7 +30,7 @@ COMMANDS:
   compress    --dataset <nyx|atm|hurricane> [--scale 0|1|2] [--eb 1e-4]
               [--policy ours|sz|zfp|dct|eb|optimum|baseline] [--workers N]
               [--out FILE] [--seed N] [--rsp 0.05] [--chunk-elems N]
-              [--codecs sz,zfp,dct] [--chunk-prior N]
+              [--codecs sz,zfp,dct] [--chunk-prior N] [--prior-band B]
               [--write-plan single|two-pass] [--spill-mem BYTES]
               (--chunk-elems > 0 streams a chunked, seekable container
                straight to disk — the full payload is never held in
@@ -38,8 +42,11 @@ COMMANDS:
                file is used. Chunks smaller than --chunk-prior (default
                65536 elems) share one field-level selection, larger
                chunks select independently — --chunk-prior 0 forces
-               per-chunk selection everywhere; --codecs restricts the
-               candidates the 'ours' policy ranks)
+               per-chunk selection everywhere; --prior-band > 0 lets a
+               prior-covered chunk whose value range drifts past that
+               relative band re-estimate itself (adaptive refresh);
+               --codecs restricts the candidates the 'ours' policy
+               ranks)
   decompress  --in FILE [--outdir DIR] [--field NAME]
   estimate    --dataset D [--scale S] [--eb E] [--rsp 0.05] [--codecs C]
   select      --dataset D [--scale S] [--eb E] [--codecs C]
@@ -47,6 +54,22 @@ COMMANDS:
   iobench     --dataset D [--scale S] [--eb E]
   info        --in FILE
   inspect     --in FILE
+  serve       [--addr 127.0.0.1:7845] [--workers N] [--queue-depth N]
+              [--batch-max N] [--eb E] [--policy P] [--chunk-elems N]
+              [--codecs C]
+              (concurrent service front end over one shared engine:
+               bounded request queue with Busy admission control,
+               batched store passes, length-prefixed TCP frames; runs
+               until a client sends --op shutdown, then prints the
+               final ServiceReport line)
+  client      --op compress --dataset D [--scale S] [--seed N]
+              [--retry-ms MS] [--retries N]
+              | --op fetch --field NAME [--out FILE]
+              | --op stats | --op shutdown
+              [--addr 127.0.0.1:7845]
+              (drives a running `adaptivec serve`; compress retries
+               Busy rejections with backoff and reports how many it
+               absorbed)
 ";
 
 fn selector_cfg(args: &Args) -> Result<SelectorConfig> {
@@ -78,6 +101,8 @@ pub fn run(cmd: &str, argv: &[String]) -> Result<()> {
         "iobench" => cmd_iobench(argv),
         "info" => cmd_info(argv),
         "inspect" => cmd_inspect(argv),
+        "serve" => cmd_serve(argv),
+        "client" => cmd_client(argv),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -105,23 +130,25 @@ fn cmd_compress(argv: &[String]) -> Result<()> {
     };
     let spill_mem: usize =
         args.get_or("spill-mem", crate::coordinator::spill::DEFAULT_SPILL_MEM_BUDGET)?;
+    let prior_band: f64 = args.get_or("prior-band", 0.0)?;
     let cfg = selector_cfg(&args)?;
     args.check_unknown()?;
 
-    let mut coord = Coordinator::new(
-        cfg,
-        if workers == 0 {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
-        } else {
-            workers
-        },
-    );
-    coord.chunk_prior_elems = chunk_prior;
-    coord.write_plan = write_plan;
-    coord.spill.mem_budget = spill_mem;
-    // Per-codec tallies resolve names through the registry, so every
-    // registered codec (including DCT, id 3) prints by name.
-    let registry = AutoSelector::new(cfg).registry();
+    let mut ecfg = EngineConfig {
+        selector_cfg: cfg,
+        chunk_prior_elems: chunk_prior,
+        write_plan,
+        prior_drift_band: prior_band,
+        ..EngineConfig::default()
+    };
+    if workers != 0 {
+        ecfg.workers = workers;
+    }
+    ecfg.spill.mem_budget = spill_mem;
+    let engine = Engine::new(ecfg);
+    // Per-codec tallies resolve names through the engine's registry,
+    // so every registered codec (including DCT, id 3) prints by name.
+    let registry = engine.registry();
     let t0 = std::time::Instant::now();
     if chunk_elems > 0 {
         // Chunked v2 path, streamed: compressed chunks flow straight
@@ -135,7 +162,8 @@ fn cmd_compress(argv: &[String]) -> Result<()> {
         // container behind.
         let tmp_out = format!("{out}.{}.tmp", std::process::id());
         let sink = std::io::BufWriter::new(std::fs::File::create(&tmp_out)?);
-        let (report, _) = match coord.run_chunked_to(&fields, policy, eb, chunk_elems, sink) {
+        let (report, _) = match engine.compress_chunked_to(&fields, policy, eb, chunk_elems, sink)
+        {
             Ok(v) => v,
             Err(e) => {
                 std::fs::remove_file(&tmp_out).ok();
@@ -163,23 +191,28 @@ fn cmd_compress(argv: &[String]) -> Result<()> {
                 report.recompress_time.as_secs_f64(),
             ),
         };
+        let refresh_note = if prior_band > 0.0 {
+            format!(", {} prior refreshes (band {prior_band})", report.prior_refreshes)
+        } else {
+            String::new()
+        };
         println!(
             "{} fields / {chunks} chunks (streamed, {chunk_elems} elems/chunk), policy {}, \
-             eb_rel {eb:.0e}: ratio {:.2} ({} -> {} bytes), picks {}, {work}, \
+             eb_rel {eb:.0e}: ratio {:.2} ({} -> {} bytes), picks {}, {work}{refresh_note}, \
              peak payload write buffer {} B vs {} B buffered ({:.1}%), wall {:.2}s -> {out}",
             report.fields.len(),
             policy.name(),
             report.overall_ratio(),
             report.total_raw_bytes(),
             report.total_stored_bytes(),
-            report.codec_counts().summary(&registry),
+            report.codec_counts().summary(registry),
             report.peak_payload_bytes,
             report.total_stored_bytes(),
             report.peak_payload_frac() * 100.0,
             wall.as_secs_f64(),
         );
     } else {
-        let report = coord.run(&fields, policy, eb)?;
+        let report = engine.run(&fields, policy, eb)?;
         let wall = t0.elapsed();
         report.to_container().write_file(&out)?;
         println!(
@@ -190,7 +223,7 @@ fn cmd_compress(argv: &[String]) -> Result<()> {
             report.overall_ratio(),
             report.total_raw_bytes(),
             report.total_stored_bytes(),
-            report.codec_counts().summary(&registry),
+            report.codec_counts().summary(registry),
             report.overhead_frac() * 100.0,
             wall.as_secs_f64(),
         );
@@ -208,7 +241,7 @@ fn cmd_decompress(argv: &[String]) -> Result<()> {
     // demand, a window of fields at a time, so peak memory is one
     // decode window, not the whole archive.
     let reader = ContainerReader::open(&input)?;
-    let coord = Coordinator::default();
+    let engine = Engine::default();
     std::fs::create_dir_all(&outdir)?;
     fn write_field(outdir: &str, f: &Field) -> Result<()> {
         use std::io::Write as _;
@@ -224,10 +257,10 @@ fn cmd_decompress(argv: &[String]) -> Result<()> {
     match &field {
         // --field does a partial, index-driven decode of just that field.
         Some(name) => {
-            write_field(&outdir, &coord.load_field(&reader, name)?)?;
+            write_field(&outdir, &engine.load_field(&reader, name)?)?;
             restored += 1;
         }
-        None => coord.load_fields_streaming(&reader, |f| {
+        None => engine.load_fields_streaming(&reader, |f| {
             write_field(&outdir, &f)?;
             restored += 1;
             Ok(())
@@ -307,12 +340,12 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
         .map(|s| s.trim().parse::<f64>().map_err(|_| Error::InvalidArg(format!("bad bound {s}"))))
         .collect::<Result<_>>()?;
     args.check_unknown()?;
-    let coord = Coordinator::default();
+    let engine = Engine::default();
     println!("{:>8} {:>10} {:>10} {:>10} {:>10}", "eb_rel", "SZ", "ZFP", "ours", "optimum");
     for &eb in &bounds {
         let mut row = Vec::new();
         for p in [Policy::AlwaysSz, Policy::AlwaysZfp, Policy::RateDistortion, Policy::Optimum] {
-            let report = coord.run(&fields, p, eb)?;
+            let report = engine.run(&fields, p, eb)?;
             row.push(report.overall_ratio());
         }
         println!(
@@ -328,7 +361,7 @@ fn cmd_iobench(argv: &[String]) -> Result<()> {
     let fields = load_dataset(&args)?;
     let eb: f64 = args.get_or("eb", 1e-4)?;
     args.check_unknown()?;
-    let coord = Coordinator::default();
+    let engine = Engine::default();
     let tm = ThroughputModel::new(FsModel::default());
 
     println!("store/load throughput model (GB/s of raw data), eb_rel {eb:.0e}");
@@ -336,7 +369,7 @@ fn cmd_iobench(argv: &[String]) -> Result<()> {
     let mut per_policy = Vec::new();
     for p in [Policy::NoCompression, Policy::AlwaysSz, Policy::AlwaysZfp, Policy::RateDistortion]
     {
-        let report = coord.run(&fields, p, eb)?;
+        let report = engine.run(&fields, p, eb)?;
         let raw = report.total_raw_bytes() as f64;
         let stored = report.total_stored_bytes() as f64;
         let comp_t = report.total_compress_time().as_secs_f64()
@@ -402,6 +435,159 @@ fn cmd_iobench(argv: &[String]) -> Result<()> {
             pread / 1e9,
             pread / slurp.max(f64::MIN_POSITIVE)
         );
+    }
+
+    // Service batching model: per-pass dispatch overhead amortized
+    // over the batch, against the measured per-field compression time
+    // of the 'ours' policy — the knee the service_throughput bench
+    // measures empirically.
+    let svc = SvcModel::default();
+    let per_req_raw = raw / n;
+    let per_req_comp = rd_comp / n;
+    println!(
+        "\nservice batching model ('ours' policy, {:.1} KB/request): {:>12} {:>12}",
+        per_req_raw / 1e3,
+        "MB/s raw",
+        "last-reply ms"
+    );
+    for &b in &[1usize, 4, 16] {
+        let tput = svc.throughput(b, per_req_raw, per_req_comp);
+        let lat = svc.batch_latency(b, per_req_comp);
+        let label = format!("batch={b}");
+        println!("{label:>56} {:>12.2} {:>12.3}", tput / 1e6, lat * 1e3);
+    }
+    Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &[])?;
+    let addr = args.get("addr").unwrap_or("127.0.0.1:7845").to_string();
+    let workers: usize = args.get_or("workers", 2)?;
+    let queue_depth: usize = args.get_or("queue-depth", 64)?;
+    let batch_max: usize = args.get_or("batch-max", 8)?;
+    let eb: f64 = args.get_or("eb", 1e-4)?;
+    let chunk_elems: usize = args.get_or("chunk-elems", 64 * 1024)?;
+    let policy = Policy::parse(args.get("policy").unwrap_or("ours"))
+        .ok_or_else(|| Error::InvalidArg("bad --policy".into()))?;
+    let cfg = selector_cfg(&args)?;
+    args.check_unknown()?;
+
+    let engine = Arc::new(Engine::new(EngineConfig {
+        selector_cfg: cfg,
+        ..EngineConfig::default()
+    }));
+    let svc = Service::start(
+        engine,
+        ServiceConfig {
+            workers,
+            queue_depth,
+            batch_max,
+            policy,
+            eb_rel: eb,
+            chunk_elems,
+            ..ServiceConfig::default()
+        },
+    );
+    let server = Server::bind(svc.handle(), &addr)?;
+    println!(
+        "serving on {} (workers {workers}, queue depth {queue_depth}, batch max {batch_max}, \
+         policy {}, eb_rel {eb:.0e}, {chunk_elems} elems/chunk)",
+        server.local_addr(),
+        policy.name()
+    );
+    server.run()?;
+    // Shutdown requested by a client: drain, join, report.
+    println!("{}", svc.shutdown().summary());
+    Ok(())
+}
+
+fn cmd_client(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &[])?;
+    let addr = args.get("addr").unwrap_or("127.0.0.1:7845").to_string();
+    let op = args.get("op").unwrap_or("stats").to_string();
+    match op.as_str() {
+        "compress" => {
+            let fields = load_dataset(&args)?;
+            let retry_ms: u64 = args.get_or("retry-ms", 10)?;
+            let retries: u32 = args.get_or("retries", 500)?;
+            args.check_unknown()?;
+            let mut client = Client::connect(&addr)?;
+            let t0 = std::time::Instant::now();
+            let (mut raw, mut stored, mut busy) = (0u64, 0u64, 0u64);
+            for f in &fields {
+                // Busy is the admission-control signal, not a failure:
+                // back off and retry (bounded), counting what we absorbed.
+                let mut attempt = 0u32;
+                let ack = loop {
+                    match client.compress(f) {
+                        Ok(ack) => break ack,
+                        Err(Error::Busy) if attempt < retries => {
+                            busy += 1;
+                            attempt += 1;
+                            std::thread::sleep(std::time::Duration::from_millis(retry_ms));
+                        }
+                        Err(e) => return Err(e),
+                    }
+                };
+                raw += ack.raw_bytes;
+                stored += ack.stored_bytes;
+                println!(
+                    "compressed {:<22} {:>10} -> {:>9} bytes ({} chunks, batch of {})",
+                    ack.name, ack.raw_bytes, ack.stored_bytes, ack.chunks, ack.batch_size
+                );
+            }
+            println!(
+                "client: {} fields, {} -> {} bytes (ratio {:.2}), {busy} busy retries, \
+                 wall {:.2}s",
+                fields.len(),
+                raw,
+                stored,
+                raw as f64 / stored.max(1) as f64,
+                t0.elapsed().as_secs_f64()
+            );
+        }
+        "fetch" => {
+            let name = args.require("field")?.to_string();
+            let out = args.get("out").map(str::to_string);
+            args.check_unknown()?;
+            let field = Client::connect(&addr)?.fetch(&name)?;
+            match out {
+                Some(path) => {
+                    use std::io::Write as _;
+                    let mut w = std::io::BufWriter::new(std::fs::File::create(&path)?);
+                    for v in &field.data {
+                        w.write_all(&v.to_le_bytes())?;
+                    }
+                    w.flush()?;
+                    println!(
+                        "fetched {} ({} values, dims {}) -> {path}",
+                        field.name,
+                        field.data.len(),
+                        field.dims
+                    );
+                }
+                None => println!(
+                    "fetched {} ({} values, dims {})",
+                    field.name,
+                    field.data.len(),
+                    field.dims
+                ),
+            }
+        }
+        "stats" => {
+            args.check_unknown()?;
+            println!("{}", Client::connect(&addr)?.stats()?);
+        }
+        "shutdown" => {
+            args.check_unknown()?;
+            Client::connect(&addr)?.shutdown()?;
+            println!("server shutdown requested");
+        }
+        other => {
+            return Err(Error::InvalidArg(format!(
+                "unknown --op '{other}' (expected compress, fetch, stats, shutdown)"
+            )))
+        }
     }
     Ok(())
 }
@@ -668,6 +854,64 @@ mod tests {
                 .map(|s| s.to_string())
                 .collect();
         assert!(run("compress", &argv).is_err());
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    fn serve_client_loopback_roundtrip() {
+        // Let the OS pick a free port (bind :0, read it back, release
+        // it) so parallel test runs cannot collide on a fixed number.
+        let addr = {
+            let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            probe.local_addr().unwrap().to_string()
+        };
+        fn argv(parts: &[&str]) -> Vec<String> {
+            parts.iter().map(|s| s.to_string()).collect()
+        }
+        let server = {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                run(
+                    "serve",
+                    &argv(&[
+                        "--addr", &addr, "--workers", "1", "--eb", "1e-3",
+                        "--chunk-elems", "2048", "--queue-depth", "8",
+                    ]),
+                )
+            })
+        };
+        // Wait for the listener to come up.
+        let mut up = false;
+        for _ in 0..100 {
+            if std::net::TcpStream::connect(&addr).is_ok() {
+                up = true;
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        }
+        assert!(up, "server never bound {addr}");
+
+        run(
+            "client",
+            &argv(&["--addr", &addr, "--op", "compress", "--dataset", "nyx", "--scale", "0"]),
+        )
+        .unwrap();
+        let tmp = std::env::temp_dir().join("adaptivec_cli_serve_test");
+        std::fs::create_dir_all(&tmp).unwrap();
+        let out = tmp.join("svc_field.f32");
+        run(
+            "client",
+            &argv(&[
+                "--addr", &addr, "--op", "fetch", "--field", "baryon_density",
+                "--out", out.to_str().unwrap(),
+            ]),
+        )
+        .unwrap();
+        assert!(out.is_file());
+        assert!(std::fs::metadata(&out).unwrap().len() > 0);
+        run("client", &argv(&["--addr", &addr, "--op", "stats"])).unwrap();
+        run("client", &argv(&["--addr", &addr, "--op", "shutdown"])).unwrap();
+        server.join().unwrap().unwrap();
         std::fs::remove_dir_all(&tmp).ok();
     }
 

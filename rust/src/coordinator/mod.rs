@@ -1,25 +1,27 @@
-//! L3 coordinator: drives many fields through estimation + compression
-//! on a worker pool — the in-situ compression runtime of the paper's
-//! parallel evaluation (§6.5).
+//! L3 coordinator module: the container/store layer, the worker
+//! pool, the per-chunk router, and the spill store — the internals the
+//! extracted [`crate::engine::Engine`] drives — plus a thin
+//! [`Coordinator`] compat shim over that engine.
 //!
 //! * [`job`] — work items and per-field results;
 //! * [`pool`] — the worker pool (std threads, shared queue, panic
 //!   isolation);
-//! * [`router`] — per-field policy dispatch (Algorithm 1 / baselines);
+//! * [`router`] — per-field policy dispatch (Algorithm 1 / baselines)
+//!   and the adaptive chunk prior (refresh band, DESIGN.md §11);
 //! * [`spill`] — scratch slab store for the single-pass streaming
 //!   writer (in-memory fast path, delete-on-drop temp-file overflow);
 //! * [`store`] — the on-disk containers with selection bits s_i
 //!   (per-field v1 and chunked, seekable v2/v3);
 //! * [`stats`] — aggregate metrics for the run.
 //!
-//! The chunked entry points ([`Coordinator::run_chunked`],
-//! [`Coordinator::load_reader`], [`Coordinator::load_field`]) flow
-//! *chunk*-level jobs through the same [`pool::run_jobs`], so a single
-//! huge field parallelizes across workers instead of serializing on
-//! one thread, and loads decode only what the container index says
-//! they need. Small chunks share a field-level sampled-PDF prior
-//! ([`router::FieldPrior`], DESIGN.md §11) so selection overhead is
-//! paid once per field, not once per chunk.
+//! The run/load orchestration that used to live here moved to
+//! [`crate::engine`] (DESIGN.md §12): the engine is stateless and
+//! `Send + Sync`, so the CLI, examples, benches, and the concurrent
+//! [`crate::service`] front end all drive one shared instance. The
+//! [`Coordinator`] below survives for source compatibility — it is a
+//! plain configuration bag whose every method builds an [`Engine`] and
+//! delegates, so old call sites keep compiling while new code should
+//! construct [`Engine`] directly.
 
 pub mod job;
 pub mod pool;
@@ -30,55 +32,19 @@ pub mod store;
 
 use crate::baseline::Policy;
 use crate::data::field::Field;
-use crate::estimator::selector::{AutoSelector, SelectorConfig};
+use crate::engine::{Engine, EngineConfig};
+use crate::estimator::selector::SelectorConfig;
 use crate::Result;
 
-/// Default threshold (elements) below which a chunk inherits its
-/// field's selection prior instead of re-sampling (DESIGN.md §11).
-pub const DEFAULT_CHUNK_PRIOR_ELEMS: usize = 64 * 1024;
+// Canonical homes moved to `crate::engine`; re-exported so existing
+// `coordinator::{WritePlan, DEFAULT_CHUNK_PRIOR_ELEMS}` paths keep
+// resolving.
+pub use crate::engine::{WritePlan, DEFAULT_CHUNK_PRIOR_ELEMS};
 
-/// Which protocol [`Coordinator::run_chunked_to`] streams a container
-/// with (DESIGN.md §6).
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
-pub enum WritePlan {
-    /// Compress each chunk exactly once: workers append finished
-    /// payloads to a scratch slab store ([`spill::SpillStore`]) in
-    /// completion order, and once every size is known the index is
-    /// written and the slabs are spliced into the sink in declared
-    /// order — the sink written sequentially, each slab read exactly
-    /// once (slab-granular positioned reads, since slabs landed in
-    /// completion order). Trades the two-pass protocol's second
-    /// compression pass for one extra scratch I/O pass over the
-    /// *compressed* bytes — compression is orders of magnitude slower
-    /// than scratch I/O, so this is the default.
-    #[default]
-    SinglePassSpill,
-    /// The original two-pass protocol: pass 1 compresses every chunk
-    /// for its size only (payloads dropped), pass 2 regenerates each
-    /// stream from its pinned decision. Needs no scratch space at all
-    /// — for environments without writable temp storage.
-    TwoPassRecompress,
-}
-
-impl WritePlan {
-    /// Parse a CLI name; `None` for unknown values.
-    pub fn parse(s: &str) -> Option<WritePlan> {
-        match s.to_ascii_lowercase().as_str() {
-            "single" | "single-pass" | "spill" => Some(WritePlan::SinglePassSpill),
-            "two-pass" | "twopass" | "recompress" => Some(WritePlan::TwoPassRecompress),
-            _ => None,
-        }
-    }
-
-    pub fn name(self) -> &'static str {
-        match self {
-            WritePlan::SinglePassSpill => "single-pass-spill",
-            WritePlan::TwoPassRecompress => "two-pass-recompress",
-        }
-    }
-}
-
-/// The coordinator: configuration + entry points.
+/// Compat shim over [`Engine`]: the old coordinator's public fields,
+/// with every entry point delegating to a per-call engine. Kept so the
+/// pre-engine API keeps working; new code should build an [`Engine`]
+/// (one registry, shareable across threads) instead.
 #[derive(Clone, Debug)]
 pub struct Coordinator {
     pub selector_cfg: SelectorConfig,
@@ -93,108 +59,23 @@ pub struct Coordinator {
     /// Scratch-space configuration for the single-pass spill protocol
     /// (memory budget before a temp file is created, and where).
     pub spill: spill::SpillConfig,
+    /// Adaptive prior refresh band (0 = off); see
+    /// [`EngineConfig::prior_drift_band`].
+    pub prior_drift_band: f64,
 }
 
 impl Default for Coordinator {
     fn default() -> Self {
+        let cfg = EngineConfig::default();
         Coordinator {
-            selector_cfg: SelectorConfig::default(),
-            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
-            chunk_prior_elems: DEFAULT_CHUNK_PRIOR_ELEMS,
-            write_plan: WritePlan::default(),
-            spill: spill::SpillConfig::default(),
+            selector_cfg: cfg.selector_cfg,
+            workers: cfg.workers,
+            chunk_prior_elems: cfg.chunk_prior_elems,
+            write_plan: cfg.write_plan,
+            spill: cfg.spill,
+            prior_drift_band: cfg.prior_drift_band,
         }
     }
-}
-
-/// One chunk of one field, flattened for the worker pool.
-struct ChunkJob<'a> {
-    field: &'a Field,
-    chunk_idx: usize,
-    start: usize,
-    dims: crate::data::field::Dims,
-    /// Field-level selection prior, shared by every chunk of the field
-    /// when the chunk granularity is below the prior threshold.
-    prior: Option<router::FieldPrior>,
-}
-
-impl ChunkJob<'_> {
-    /// Materialize this chunk as its own [`Field`] (copies the span).
-    fn chunk_field(&self) -> Field {
-        let end = self.start + self.dims.len();
-        Field::new(
-            format!("{}#{}", self.field.name, self.chunk_idx),
-            self.dims,
-            self.field.data[self.start..end].to_vec(),
-        )
-    }
-}
-
-/// Everything the streaming write path learns about one chunk from its
-/// (single or sizing) compression: the pinned decision, the declared
-/// layout entry (size + CRC), and — on the single-pass plan — where
-/// the finished payload landed in the spill store.
-struct ChunkOutcome {
-    decision: router::Decision,
-    decl: store::ChunkDecl,
-    raw_bytes: u64,
-    compress_time: std::time::Duration,
-    /// `Some` when the payload was spilled (single-pass); `None` when
-    /// it was dropped after sizing (two-pass).
-    slab: Option<spill::SlabRef>,
-}
-
-/// Regroup flat chunk outcomes into the per-field declaration list the
-/// [`store::ContainerV2Writer`] serializes its index from.
-fn build_decls(
-    fields: &[Field],
-    chunks_per_field: &[usize],
-    outcomes: &[ChunkOutcome],
-    chunk_elems: usize,
-) -> Vec<store::FieldDecl> {
-    let mut it = outcomes.iter();
-    fields
-        .iter()
-        .zip(chunks_per_field)
-        .map(|(f, &n)| store::FieldDecl {
-            name: f.name.clone(),
-            dims: f.dims,
-            raw_bytes: f.raw_bytes() as u64,
-            chunk_elems: chunk_elems as u64,
-            chunks: it.by_ref().take(n).map(|s| s.decl).collect(),
-        })
-        .collect()
-}
-
-/// Regroup flat chunk outcomes into per-field streamed summaries, in
-/// chunk order (what [`stats::StreamedRunReport`] reports).
-fn streamed_summaries(
-    fields: &[Field],
-    chunks_per_field: &[usize],
-    outcomes: &[ChunkOutcome],
-    chunk_elems: usize,
-) -> Vec<stats::StreamedFieldSummary> {
-    let mut it = outcomes.iter();
-    fields
-        .iter()
-        .zip(chunks_per_field)
-        .map(|(f, &n)| stats::StreamedFieldSummary {
-            name: f.name.clone(),
-            dims: f.dims,
-            chunk_elems,
-            chunks: it
-                .by_ref()
-                .take(n)
-                .map(|s| stats::StreamedChunkStat {
-                    selection: s.decl.selection,
-                    stored_bytes: s.decl.len,
-                    raw_bytes: s.raw_bytes,
-                    estimate_time: s.decision.estimate_time,
-                    compress_time: s.compress_time,
-                })
-                .collect(),
-        })
-        .collect()
 }
 
 impl Coordinator {
@@ -206,25 +87,31 @@ impl Coordinator {
         }
     }
 
-    /// Compress every field under `policy`, in parallel, collecting
-    /// per-field results in submission order (v1, one job per field).
+    /// The engine this shim's current field values describe. Built per
+    /// call — field mutations between calls keep taking effect, exactly
+    /// like the pre-engine coordinator.
+    pub fn engine(&self) -> Engine {
+        Engine::new(EngineConfig {
+            selector_cfg: self.selector_cfg,
+            workers: self.workers,
+            chunk_prior_elems: self.chunk_prior_elems,
+            write_plan: self.write_plan,
+            spill: self.spill.clone(),
+            prior_drift_band: self.prior_drift_band,
+        })
+    }
+
+    /// See [`Engine::run`].
     pub fn run(
         &self,
         fields: &[Field],
         policy: Policy,
         eb_rel: f64,
     ) -> Result<stats::RunReport> {
-        let router = router::Router::new(self.selector_cfg, policy, eb_rel);
-        let results = pool::run_jobs(self.workers, fields, |f| router.process(f))?;
-        Ok(stats::RunReport::from_results(policy, eb_rel, results))
+        self.engine().run(fields, policy, eb_rel)
     }
 
-    /// Compress every field split into ~`chunk_elems`-element chunks,
-    /// each chunk selected and compressed as its own pool job
-    /// (`chunk_elems == 0` keeps whole-field chunks). Chunks below
-    /// [`Coordinator::chunk_prior_elems`] share one field-level
-    /// estimation (the sampled-PDF prior); larger chunks estimate and
-    /// select independently.
+    /// See [`Engine::run_chunked`].
     pub fn run_chunked(
         &self,
         fields: &[Field],
@@ -232,102 +119,10 @@ impl Coordinator {
         eb_rel: f64,
         chunk_elems: usize,
     ) -> Result<stats::ChunkedRunReport> {
-        let router = router::Router::new(self.selector_cfg, policy, eb_rel);
-        let (jobs, chunks_per_field) = self.chunk_jobs(&router, fields, chunk_elems)?;
-        let results = pool::run_jobs(self.workers, &jobs, |j| {
-            router.process_chunk(&j.chunk_field(), j.chunk_idx, j.prior.as_ref())
-        })?;
-        // Regroup chunk results per field, preserving order.
-        let mut it = results.into_iter();
-        let mut out = Vec::with_capacity(fields.len());
-        for (f, n) in fields.iter().zip(chunks_per_field) {
-            out.push(stats::ChunkedFieldResult {
-                name: f.name.clone(),
-                dims: f.dims,
-                chunk_elems,
-                chunks: it.by_ref().take(n).collect(),
-            });
-        }
-        Ok(stats::ChunkedRunReport { policy, eb_rel, fields: out })
+        self.engine().run_chunked(fields, policy, eb_rel, chunk_elems)
     }
 
-    /// Split every field into chunk jobs and compute the field-level
-    /// selection priors (shared by `run_chunked` and `run_chunked_to`).
-    /// Returns the flattened jobs in index order plus the chunk count
-    /// of each field.
-    fn chunk_jobs<'a>(
-        &self,
-        router: &router::Router,
-        fields: &'a [Field],
-        chunk_elems: usize,
-    ) -> Result<(Vec<ChunkJob<'a>>, Vec<usize>)> {
-        // The prior pays off only when a field actually splits and its
-        // chunks are small; whole-field "chunks" estimate once anyway,
-        // on their own data. Field-level estimation runs on the worker
-        // pool (one job per eligible field) so the estimation phase
-        // keeps the parallelism the per-chunk path had.
-        let spans_per_field: Vec<Vec<(usize, crate::data::field::Dims)>> =
-            fields.iter().map(|f| store::chunk_spans(f.dims, chunk_elems)).collect();
-        // Only RateDistortion estimates per chunk, so only it has a
-        // prior to share — skip the pool phase for every other policy.
-        let prior_eligible = router.policy == Policy::RateDistortion
-            && chunk_elems < self.chunk_prior_elems
-            && self.chunk_prior_elems > 0;
-        let prior_fields: Vec<&Field> = fields
-            .iter()
-            .zip(&spans_per_field)
-            .filter(|(_, spans)| prior_eligible && spans.len() > 1)
-            .map(|(f, _)| f)
-            .collect();
-        let computed = pool::run_jobs(self.workers, &prior_fields, |f| router.field_prior(f))?;
-        let mut computed = computed.into_iter();
-
-        let mut jobs = Vec::new();
-        let mut chunks_per_field = Vec::with_capacity(fields.len());
-        for (f, spans) in fields.iter().zip(spans_per_field) {
-            let prior = if prior_eligible && spans.len() > 1 {
-                computed.next().expect("one prior per eligible field")
-            } else {
-                None
-            };
-            chunks_per_field.push(spans.len());
-            for (chunk_idx, (start, dims)) in spans.into_iter().enumerate() {
-                jobs.push(ChunkJob { field: f, chunk_idx, start, dims, prior });
-            }
-        }
-        Ok((jobs, chunks_per_field))
-    }
-
-    /// Chunked compression streamed straight to an [`std::io::Write`]
-    /// sink: the container lands on disk without the full payload ever
-    /// being resident. Output is byte-identical to
-    /// `run_chunked(...).to_container().to_bytes()` under *both*
-    /// [`WritePlan`]s — the protocol choice is invisible in the bytes.
-    ///
-    /// The index-first wire format needs every chunk's compressed size
-    /// before the first payload byte, and the two plans pay for that
-    /// differently (DESIGN.md §6):
-    ///
-    /// * [`WritePlan::SinglePassSpill`] (default) — workers compress
-    ///   each chunk **once**, appending the finished payload to a
-    ///   [`spill::SpillStore`] in completion order (in memory for
-    ///   small runs, a delete-on-drop temp file past the budget).
-    ///   Once all sizes and CRCs are known, the index is written and
-    ///   the slabs are spliced into the sink in declared order in one
-    ///   copy pass (sink sequential, slab reads positioned). Per-worker
-    ///   [`router::CompressScratch`] staging removes per-chunk
-    ///   allocation churn; prior-covered chunks compress straight out
-    ///   of the parent field's buffer with no copy at all.
-    /// * [`WritePlan::TwoPassRecompress`] — pass 1 sizes and drops
-    ///   payloads, pass 2 regenerates each stream from its pinned
-    ///   [`router::Decision`] in bounded parallel batches. No scratch
-    ///   space, but every chunk is compressed twice
-    ///   (`recompress_time` records the price).
-    ///
-    /// The writer verifies every stream against its declared length
-    /// *and* CRC-32, so a non-deterministic codec can never silently
-    /// corrupt the index; the report's `compress_calls` counter proves
-    /// the single-pass guarantee (exactly one `compress` per chunk).
+    /// See [`Engine::compress_chunked_to`] (the canonical name).
     pub fn run_chunked_to<W: std::io::Write>(
         &self,
         fields: &[Field],
@@ -336,239 +131,35 @@ impl Coordinator {
         chunk_elems: usize,
         sink: W,
     ) -> Result<(stats::StreamedRunReport, W)> {
-        match self.write_plan {
-            WritePlan::SinglePassSpill => {
-                self.run_chunked_single_pass(fields, policy, eb_rel, chunk_elems, sink)
-            }
-            WritePlan::TwoPassRecompress => {
-                self.run_chunked_two_pass(fields, policy, eb_rel, chunk_elems, sink)
-            }
-        }
+        self.engine().compress_chunked_to(fields, policy, eb_rel, chunk_elems, sink)
     }
 
-    /// Single-pass spill protocol: compress once, spill, splice.
-    fn run_chunked_single_pass<W: std::io::Write>(
-        &self,
-        fields: &[Field],
-        policy: Policy,
-        eb_rel: f64,
-        chunk_elems: usize,
-        sink: W,
-    ) -> Result<(stats::StreamedRunReport, W)> {
-        let router = router::Router::new(self.selector_cfg, policy, eb_rel);
-        let (jobs, chunks_per_field) = self.chunk_jobs(&router, fields, chunk_elems)?;
-        let scratch_store = spill::SpillStore::new(self.spill.clone());
-
-        // The only compression pass: decide + compress each chunk and
-        // append the finished payload to the spill store in completion
-        // order. Prior-covered chunks skip staging entirely (the span
-        // compresses in place); the rest stage into the per-worker
-        // reusable scratch. The store deletes its temp file on drop,
-        // so every `?` below also cleans up the scratch space.
-        let store_ref = &scratch_store;
-        let sizings = pool::run_jobs_scoped(
-            self.workers,
-            &jobs,
-            router::CompressScratch::default,
-            |j, scratch| {
-                let span = &j.field.data[j.start..j.start + j.dims.len()];
-                let decision = match j.prior.as_ref() {
-                    Some(p) => router.decide_from_prior(p, j.chunk_idx),
-                    None => {
-                        router.decide(scratch.stage_chunk(j.field, j.chunk_idx, j.start, j.dims))?
-                    }
-                };
-                let t0 = std::time::Instant::now();
-                let stream = router.compress_decided_span(span, j.dims, &decision)?;
-                let compress_time = t0.elapsed();
-                let decl = store::ChunkDecl::of(decision.selection(), &stream);
-                let slab = store_ref.append(&stream)?;
-                Ok(ChunkOutcome {
-                    decision,
-                    decl,
-                    raw_bytes: span.len() as u64 * 4,
-                    compress_time,
-                    slab: Some(slab),
-                })
-            },
-        )?;
-        let peak_scratch_bytes = scratch_store.total_bytes();
-        let scratch_spilled = scratch_store.spilled();
-
-        // All sizes + CRCs known: emit magic + index, then splice the
-        // slabs into the sink in declared order — the sink written
-        // sequentially, each slab read exactly once (positioned).
-        let decls = build_decls(fields, &chunks_per_field, &sizings, chunk_elems);
-        let mut writer = store::ContainerV2Writer::new(sink, &decls)?;
-        let mut buf = Vec::new();
-        let mut peak_payload = 0u64;
-        for (idx, s) in sizings.iter().enumerate() {
-            scratch_store.read_slab(s.slab.expect("single-pass chunks spill"), &mut buf)?;
-            peak_payload = peak_payload.max(buf.len() as u64);
-            writer.put_chunk(idx, &buf)?;
-        }
-        let sink = writer.finish()?;
-        drop(scratch_store); // scratch file (if any) deleted here on success
-
-        let report = stats::StreamedRunReport {
-            policy,
-            eb_rel,
-            write_plan: WritePlan::SinglePassSpill,
-            fields: streamed_summaries(fields, &chunks_per_field, &sizings, chunk_elems),
-            peak_payload_bytes: peak_payload,
-            peak_scratch_bytes,
-            scratch_spilled,
-            compress_calls: stats::CompressCalls(router.compress_calls().snapshot()),
-            recompress_time: std::time::Duration::ZERO,
-        };
-        Ok((report, sink))
-    }
-
-    /// Two-pass recompress protocol (no scratch space): size, index,
-    /// regenerate.
-    fn run_chunked_two_pass<W: std::io::Write>(
-        &self,
-        fields: &[Field],
-        policy: Policy,
-        eb_rel: f64,
-        chunk_elems: usize,
-        sink: W,
-    ) -> Result<(stats::StreamedRunReport, W)> {
-        let router = router::Router::new(self.selector_cfg, policy, eb_rel);
-        let (jobs, chunks_per_field) = self.chunk_jobs(&router, fields, chunk_elems)?;
-
-        // Pass 1 — decide + compress for sizes; payloads are dropped
-        // immediately, so peak memory stays O(workers × chunk).
-        let sizings = pool::run_jobs(self.workers, &jobs, |j| {
-            let chunk = j.chunk_field();
-            let decision = router.decide_chunk(&chunk, j.chunk_idx, j.prior.as_ref())?;
-            let t0 = std::time::Instant::now();
-            let stream = router.compress_decided(&chunk, &decision)?;
-            Ok(ChunkOutcome {
-                decision,
-                decl: store::ChunkDecl::of(decision.selection(), &stream),
-                raw_bytes: chunk.raw_bytes() as u64,
-                compress_time: t0.elapsed(),
-                slab: None,
-            })
-        })?;
-
-        // Every chunk's size is now known: declare the layout and emit
-        // magic + index before the first payload byte.
-        let decls = build_decls(fields, &chunks_per_field, &sizings, chunk_elems);
-        let mut writer = store::ContainerV2Writer::new(sink, &decls)?;
-
-        // Pass 2 — regenerate streams in bounded batches, appending
-        // each batch in index order as its workers finish.
-        let window = self.workers.max(1) * 2;
-        let mut peak_payload = 0u64;
-        let mut recompress_time = std::time::Duration::ZERO;
-        let paired: Vec<(&ChunkJob, &ChunkOutcome)> = jobs.iter().zip(&sizings).collect();
-        for batch in paired.chunks(window) {
-            let streams = pool::run_jobs(self.workers, batch, |&(j, s)| {
-                let chunk = j.chunk_field();
-                let t0 = std::time::Instant::now();
-                let stream = router.compress_decided(&chunk, &s.decision)?;
-                Ok((stream, t0.elapsed()))
-            })?;
-            let in_flight: u64 = streams.iter().map(|(s, _)| s.len() as u64).sum();
-            peak_payload = peak_payload.max(in_flight);
-            for (stream, dur) in streams {
-                recompress_time += dur;
-                writer.write_chunk(&stream)?;
-            }
-        }
-        drop(paired);
-        let sink = writer.finish()?;
-
-        let report = stats::StreamedRunReport {
-            policy,
-            eb_rel,
-            write_plan: WritePlan::TwoPassRecompress,
-            fields: streamed_summaries(fields, &chunks_per_field, &sizings, chunk_elems),
-            peak_payload_bytes: peak_payload,
-            peak_scratch_bytes: 0,
-            scratch_spilled: false,
-            compress_calls: stats::CompressCalls(router.compress_calls().snapshot()),
-            recompress_time,
-        };
-        Ok((report, sink))
-    }
-
-    /// Decompress every field of a v1 container back to raw data.
-    /// Selection bytes — including `2` (raw passthrough, the
-    /// `NoCompression` policy) — resolve through the codec registry.
+    /// See [`Engine::load`].
     pub fn load(&self, container: &store::Container) -> Result<Vec<Field>> {
-        let registry = AutoSelector::new(self.selector_cfg).registry();
-        let entries: Vec<&store::Entry> = container.entries.iter().collect();
-        let fields = pool::run_jobs(self.workers, &entries, |e| {
-            let (data, dims) = registry.decode_v1_entry(e.selection, &e.payload)?;
-            Ok(Field::new(e.name.clone(), dims, data))
-        })?;
-        Ok(fields)
+        self.engine().load(container)
     }
 
-    /// Decode every field of an indexed container (v1 or v2), one pool
-    /// job per chunk. Thin wrapper over
-    /// [`Coordinator::load_fields_streaming`] that collects the whole
-    /// archive.
+    /// See [`Engine::load_reader`].
     pub fn load_reader(&self, reader: &store::ContainerReader) -> Result<Vec<Field>> {
-        let mut out = Vec::with_capacity(reader.fields.len());
-        self.load_fields_streaming(reader, |f| {
-            out.push(f);
-            Ok(())
-        })?;
-        Ok(out)
+        self.engine().load_reader(reader)
     }
 
-    /// Bounded-memory full decode: decode the container in windows of
-    /// `workers` fields — chunks of the whole window run in parallel
-    /// on the pool, so single-chunk (v1) fields still decode
-    /// `workers`-wide — and hand each assembled [`Field`] to `emit` as
-    /// soon as it is complete. Peak residency is one window of
-    /// decoded fields, not the archive; the registry is built once.
+    /// See [`Engine::load_fields_streaming`].
     pub fn load_fields_streaming(
         &self,
         reader: &store::ContainerReader,
-        mut emit: impl FnMut(Field) -> Result<()>,
+        emit: impl FnMut(Field) -> Result<()>,
     ) -> Result<()> {
-        let registry = AutoSelector::new(self.selector_cfg).registry();
-        let field_indices: Vec<usize> = (0..reader.fields.len()).collect();
-        for window in field_indices.chunks(self.workers.max(1)) {
-            let mut jobs = Vec::new();
-            for &fi in window {
-                for ci in 0..reader.fields[fi].chunks.len() {
-                    jobs.push((fi, ci));
-                }
-            }
-            let decoded = pool::run_jobs(self.workers, &jobs, |&(fi, ci)| {
-                reader.decode_chunk(&registry, fi, ci)
-            })?;
-            let mut it = decoded.into_iter();
-            for &fi in window {
-                let info = &reader.fields[fi];
-                let parts: Vec<_> = it.by_ref().take(info.chunks.len()).collect();
-                emit(store::assemble_field(info, parts)?)?;
-            }
-        }
-        Ok(())
+        self.engine().load_fields_streaming(reader, emit)
     }
 
-    /// Partial, index-driven decode: reconstruct one field by name
-    /// without touching any other field's payload bytes. The field's
-    /// chunks decode in parallel.
+    /// See [`Engine::load_field`].
     pub fn load_field(
         &self,
         reader: &store::ContainerReader,
         name: &str,
     ) -> Result<Field> {
-        let registry = AutoSelector::new(self.selector_cfg).registry();
-        let (fi, info) = reader.field(name)?;
-        let jobs: Vec<usize> = (0..info.chunks.len()).collect();
-        let parts = pool::run_jobs(self.workers, &jobs, |&ci| {
-            reader.decode_chunk(&registry, fi, ci)
-        })?;
-        store::assemble_field(info, parts)
+        self.engine().load_field(reader, name)
     }
 }
 

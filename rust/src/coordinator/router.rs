@@ -20,6 +20,10 @@ use std::time::{Duration, Instant};
 pub struct FieldPrior {
     pub choice: Choice,
     pub estimates: Estimates,
+    /// Value range of the field the prior was estimated on — the cheap
+    /// per-chunk drift statistic the adaptive refresh band compares
+    /// against ([`Router::prior_drifted`]).
+    pub value_range: f64,
     /// Wall time of the field-level estimation (attributed to the
     /// field's first chunk so overhead accounting stays truthful).
     pub estimate_time: Duration,
@@ -148,11 +152,20 @@ pub struct Router {
     pub selector: AutoSelector,
     pub policy: Policy,
     pub eb_rel: f64,
+    /// Adaptive prior refresh band (DESIGN.md §11): a prior-covered
+    /// chunk whose value range drifts more than this *relative* amount
+    /// away from the field-level range re-estimates independently
+    /// instead of inheriting a stale choice. 0 disables the check
+    /// (every covered chunk inherits, the pre-refresh behavior).
+    pub drift_band: f64,
     registry: CodecRegistry,
     /// Payload-compression call tally (estimation sampling is not
     /// counted — only [`Router::compress_decided`]-family calls that
     /// produce container payload bytes).
     compress_calls: CompressCallCounter,
+    /// Chunks that tripped the drift band this run (the report's
+    /// `prior_refreshes` counter).
+    prior_refreshes: AtomicU64,
 }
 
 impl Router {
@@ -163,14 +176,54 @@ impl Router {
             selector,
             policy,
             eb_rel,
+            drift_band: 0.0,
             registry,
             compress_calls: CompressCallCounter::default(),
+            prior_refreshes: AtomicU64::new(0),
         }
+    }
+
+    /// Enable the adaptive prior refresh with the given relative band.
+    pub fn with_drift_band(mut self, band: f64) -> Self {
+        self.drift_band = band;
+        self
     }
 
     /// The payload-compression call tally for this router's lifetime.
     pub fn compress_calls(&self) -> &CompressCallCounter {
         &self.compress_calls
+    }
+
+    /// Chunks that tripped the drift band and re-estimated this run.
+    pub fn prior_refreshes(&self) -> u64 {
+        self.prior_refreshes.load(Ordering::Relaxed)
+    }
+
+    /// Adaptive prior refresh (minimal band version): does `data`'s
+    /// value range drift more than [`Router::drift_band`] (relative)
+    /// away from the range the prior was estimated on? A drifted chunk
+    /// re-estimates *independently* — the shared prior itself is never
+    /// mutated, so the refresh decision depends only on the chunk's own
+    /// data and output stays invariant to worker count and job
+    /// interleaving (coordinator invariant, DESIGN.md §7). Bumps the
+    /// run's refresh counter when the band trips; O(chunk) min/max
+    /// scan, skipped entirely when the band is disabled.
+    pub fn prior_drifted(&self, data: &[f32], prior: &FieldPrior) -> bool {
+        if self.drift_band <= 0.0 {
+            return false;
+        }
+        let vr = crate::metrics::value_range(data);
+        let base = prior.value_range;
+        let drifted = if base > 0.0 {
+            (vr - base).abs() / base > self.drift_band
+        } else {
+            // Degenerate prior (constant field): any spread is drift.
+            vr > 0.0
+        };
+        if drifted {
+            self.prior_refreshes.fetch_add(1, Ordering::Relaxed);
+        }
+        drifted
     }
 
     /// Compute the field-level selection prior for the chunked path,
@@ -186,7 +239,12 @@ impl Router {
         let eb = if vr > 0.0 { self.eb_rel * vr } else { self.eb_rel };
         let t0 = Instant::now();
         let (choice, estimates) = self.selector.select_abs(field, eb, vr)?;
-        Ok(Some(FieldPrior { choice, estimates, estimate_time: t0.elapsed() }))
+        Ok(Some(FieldPrior {
+            choice,
+            estimates,
+            value_range: vr,
+            estimate_time: t0.elapsed(),
+        }))
     }
 
     /// Estimation + selection only — no compression. The returned
@@ -255,7 +313,10 @@ impl Router {
     /// Decision for one chunk of a field. With a prior, the chunk
     /// inherits the field-level choice and bound and skips estimation
     /// entirely; the prior's (one-off) estimation time is charged to
-    /// chunk 0 (DESIGN.md §11).
+    /// chunk 0 (DESIGN.md §11). When the router's drift band is
+    /// enabled, a chunk whose value range drifted outside the band
+    /// falls through to full per-chunk estimation instead (adaptive
+    /// prior refresh).
     pub fn decide_chunk(
         &self,
         chunk: &Field,
@@ -263,8 +324,10 @@ impl Router {
         prior: Option<&FieldPrior>,
     ) -> Result<Decision> {
         match prior {
-            Some(p) => Ok(self.decide_from_prior(p, chunk_idx)),
-            None => self.decide(chunk),
+            Some(p) if !self.prior_drifted(&chunk.data, p) => {
+                Ok(self.decide_from_prior(p, chunk_idx))
+            }
+            _ => self.decide(chunk),
         }
     }
 
@@ -452,6 +515,33 @@ mod tests {
             let via_fresh = r.compress_decided(&fresh, &d).unwrap();
             assert_eq!(via_staged, via_fresh);
         }
+    }
+
+    #[test]
+    fn drift_band_refreshes_outlier_chunks() {
+        let f = atm::generate_field_scaled(66, 2, 0);
+        let rd = Router::new(SelectorConfig::default(), Policy::RateDistortion, 1e-3)
+            .with_drift_band(0.5);
+        let prior = rd.field_prior(&f).unwrap().expect("RD has a prior");
+        assert!(prior.value_range > 0.0);
+        // A chunk spanning the field's own range stays inside the band.
+        assert!(!rd.prior_drifted(&f.data, &prior));
+        assert_eq!(rd.prior_refreshes(), 0);
+        // A chunk with 1/1000th the range drifts far outside it.
+        let shrunk: Vec<f32> = f.data[..1024].iter().map(|v| v * 1e-3).collect();
+        assert!(rd.prior_drifted(&shrunk, &prior));
+        assert_eq!(rd.prior_refreshes(), 1);
+        // decide_chunk on the drifted chunk re-estimates on its own
+        // data (non-zero estimation time even at chunk_idx > 0).
+        let chunk = Field::new("out#1", Dims::D1(1024), shrunk);
+        let d = rd.decide_chunk(&chunk, 1, Some(&prior)).unwrap();
+        assert!(d.estimate_time.as_nanos() > 0, "refreshed chunk estimates itself");
+        assert_eq!(rd.prior_refreshes(), 2, "the decide_chunk check counts too");
+        // With the band disabled the same chunk silently inherits.
+        let off = Router::new(SelectorConfig::default(), Policy::RateDistortion, 1e-3);
+        let d = off.decide_chunk(&chunk, 1, Some(&prior)).unwrap();
+        assert_eq!(d.estimate_time, Duration::ZERO);
+        assert_eq!(off.prior_refreshes(), 0);
     }
 
     #[test]

@@ -167,6 +167,10 @@ pub struct ChunkedRunReport {
     pub policy: Policy,
     pub eb_rel: f64,
     pub fields: Vec<ChunkedFieldResult>,
+    /// Prior-covered chunks that tripped the adaptive refresh band and
+    /// re-estimated independently (0 when the band is disabled; see
+    /// [`crate::engine::EngineConfig::prior_drift_band`]).
+    pub prior_refreshes: u64,
 }
 
 impl ChunkedRunReport {
@@ -319,6 +323,10 @@ pub struct StreamedRunReport {
     /// compute price of the two-pass, index-first protocol (zero for
     /// single-pass spill, which is the point of it).
     pub recompress_time: Duration,
+    /// Prior-covered chunks that tripped the adaptive refresh band and
+    /// re-estimated independently (0 when the band is disabled; see
+    /// [`crate::engine::EngineConfig::prior_drift_band`]).
+    pub prior_refreshes: u64,
 }
 
 impl StreamedRunReport {
@@ -442,6 +450,7 @@ mod tests {
                     mk(None, vec![9; 16], 16),
                 ],
             }],
+            prior_refreshes: 0,
         };
         let c = report.to_container();
         assert_eq!(c.fields[0].chunks[0].selection, Choice::Sz.id());
@@ -489,6 +498,7 @@ mod tests {
                 [(Choice::Sz.id(), 1u64), (Choice::Raw.id(), 1)].into_iter().collect(),
             ),
             recompress_time: Duration::from_millis(4),
+            prior_refreshes: 0,
         };
         assert_eq!(report.total_raw_bytes(), 32);
         assert_eq!(report.total_stored_bytes(), 26);

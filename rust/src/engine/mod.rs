@@ -1,0 +1,831 @@
+//! The reusable engine core: a stateless, `Send + Sync` compression
+//! engine extracted from the old monolithic coordinator (DESIGN.md
+//! §12). One [`Engine`] value owns the selector configuration, the
+//! codec registry, and the run-shaping knobs (workers, chunk prior,
+//! write plan, spill budget, prior-drift band); every entry point takes
+//! `&self`, so a single `Arc<Engine>` can be shared by the CLI, the
+//! examples, the benches, and the concurrent [`crate::service`] front
+//! end without cloning registries per request.
+//!
+//! * [`Engine::run`] / [`Engine::compress_field`] — per-field (v1) jobs;
+//! * [`Engine::run_chunked`] / [`Engine::compress_chunked_to`] — chunked
+//!   v2/v3 jobs, buffered or streamed through a [`WritePlan`];
+//! * [`Engine::load_reader`] / [`Engine::load_field`] /
+//!   [`Engine::load_fields_streaming`] — index-driven decodes.
+//!
+//! The thread pool ([`crate::coordinator::pool`]), the spill store
+//! ([`crate::coordinator::spill`]), and the write plans are engine
+//! *internals*: callers configure an [`EngineConfig`] and never see
+//! them. The old [`crate::coordinator::Coordinator`] survives as a thin
+//! compat shim that builds an `Engine` per call.
+
+use crate::baseline::Policy;
+use crate::codec_api::CodecRegistry;
+use crate::coordinator::{job, pool, router, spill, stats, store};
+use crate::data::field::Field;
+use crate::estimator::selector::{AutoSelector, SelectorConfig};
+use crate::Result;
+
+/// Default threshold (elements) below which a chunk inherits its
+/// field's selection prior instead of re-sampling (DESIGN.md §11).
+pub const DEFAULT_CHUNK_PRIOR_ELEMS: usize = 64 * 1024;
+
+/// Which protocol [`Engine::compress_chunked_to`] streams a container
+/// with (DESIGN.md §6).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum WritePlan {
+    /// Compress each chunk exactly once: workers append finished
+    /// payloads to a scratch slab store ([`spill::SpillStore`]) in
+    /// completion order, and once every size is known the index is
+    /// written and the slabs are spliced into the sink in declared
+    /// order — the sink written sequentially, each slab read exactly
+    /// once (slab-granular positioned reads, since slabs landed in
+    /// completion order). Trades the two-pass protocol's second
+    /// compression pass for one extra scratch I/O pass over the
+    /// *compressed* bytes — compression is orders of magnitude slower
+    /// than scratch I/O, so this is the default.
+    #[default]
+    SinglePassSpill,
+    /// The original two-pass protocol: pass 1 compresses every chunk
+    /// for its size only (payloads dropped), pass 2 regenerates each
+    /// stream from its pinned decision. Needs no scratch space at all
+    /// — for environments without writable temp storage.
+    TwoPassRecompress,
+}
+
+impl WritePlan {
+    /// Parse a CLI name; `None` for unknown values.
+    pub fn parse(s: &str) -> Option<WritePlan> {
+        match s.to_ascii_lowercase().as_str() {
+            "single" | "single-pass" | "spill" => Some(WritePlan::SinglePassSpill),
+            "two-pass" | "twopass" | "recompress" => Some(WritePlan::TwoPassRecompress),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            WritePlan::SinglePassSpill => "single-pass-spill",
+            WritePlan::TwoPassRecompress => "two-pass-recompress",
+        }
+    }
+}
+
+/// Everything that shapes an [`Engine`]'s runs. Plain data: build one,
+/// hand it to [`Engine::new`], share the engine.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub selector_cfg: SelectorConfig,
+    /// Worker threads per run (pool jobs; also the streaming decode
+    /// window width).
+    pub workers: usize,
+    /// Chunks smaller than this share a field-level sampled-PDF prior
+    /// (one estimation per field) instead of estimating per chunk;
+    /// larger chunks keep independent per-chunk selection. 0 disables
+    /// the prior entirely.
+    pub chunk_prior_elems: usize,
+    /// Streaming write protocol for [`Engine::compress_chunked_to`].
+    pub write_plan: WritePlan,
+    /// Scratch-space configuration for the single-pass spill protocol
+    /// (memory budget before a temp file is created, and where).
+    pub spill: spill::SpillConfig,
+    /// Adaptive prior refresh (DESIGN.md §11): when > 0, a prior-covered
+    /// chunk whose value range drifts more than this relative band away
+    /// from the field-level range re-estimates independently instead of
+    /// inheriting the stale prior. 0 disables refresh (every covered
+    /// chunk inherits). Refreshes are counted per run
+    /// ([`stats::StreamedRunReport::prior_refreshes`]).
+    pub prior_drift_band: f64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            selector_cfg: SelectorConfig::default(),
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            chunk_prior_elems: DEFAULT_CHUNK_PRIOR_ELEMS,
+            write_plan: WritePlan::default(),
+            spill: spill::SpillConfig::default(),
+            prior_drift_band: 0.0,
+        }
+    }
+}
+
+/// The stateless engine core: selector config + codec registry +
+/// run-shaping knobs. All entry points take `&self`; the only mutable
+/// state is per-run (routers, pools, spill stores), so one engine is
+/// safely shared across threads (`Arc<Engine>` in the service layer).
+#[derive(Debug)]
+pub struct Engine {
+    cfg: EngineConfig,
+    /// Built once from the selector config — decode paths dispatch
+    /// through this registry without per-call reconstruction.
+    registry: CodecRegistry,
+}
+
+impl Default for Engine {
+    fn default() -> Self {
+        Engine::new(EngineConfig::default())
+    }
+}
+
+/// One chunk of one field, flattened for the worker pool.
+struct ChunkJob<'a> {
+    field: &'a Field,
+    chunk_idx: usize,
+    start: usize,
+    dims: crate::data::field::Dims,
+    /// Field-level selection prior, shared by every chunk of the field
+    /// when the chunk granularity is below the prior threshold.
+    prior: Option<router::FieldPrior>,
+}
+
+impl ChunkJob<'_> {
+    /// Materialize this chunk as its own [`Field`] (copies the span).
+    fn chunk_field(&self) -> Field {
+        let end = self.start + self.dims.len();
+        Field::new(
+            format!("{}#{}", self.field.name, self.chunk_idx),
+            self.dims,
+            self.field.data[self.start..end].to_vec(),
+        )
+    }
+}
+
+/// Everything the streaming write path learns about one chunk from its
+/// (single or sizing) compression: the pinned decision, the declared
+/// layout entry (size + CRC), and — on the single-pass plan — where
+/// the finished payload landed in the spill store.
+struct ChunkOutcome {
+    decision: router::Decision,
+    decl: store::ChunkDecl,
+    raw_bytes: u64,
+    compress_time: std::time::Duration,
+    /// `Some` when the payload was spilled (single-pass); `None` when
+    /// it was dropped after sizing (two-pass).
+    slab: Option<spill::SlabRef>,
+}
+
+/// Regroup flat chunk outcomes into the per-field declaration list the
+/// [`store::ContainerV2Writer`] serializes its index from.
+fn build_decls(
+    fields: &[Field],
+    chunks_per_field: &[usize],
+    outcomes: &[ChunkOutcome],
+    chunk_elems: usize,
+) -> Vec<store::FieldDecl> {
+    let mut it = outcomes.iter();
+    fields
+        .iter()
+        .zip(chunks_per_field)
+        .map(|(f, &n)| store::FieldDecl {
+            name: f.name.clone(),
+            dims: f.dims,
+            raw_bytes: f.raw_bytes() as u64,
+            chunk_elems: chunk_elems as u64,
+            chunks: it.by_ref().take(n).map(|s| s.decl).collect(),
+        })
+        .collect()
+}
+
+/// Regroup flat chunk outcomes into per-field streamed summaries, in
+/// chunk order (what [`stats::StreamedRunReport`] reports).
+fn streamed_summaries(
+    fields: &[Field],
+    chunks_per_field: &[usize],
+    outcomes: &[ChunkOutcome],
+    chunk_elems: usize,
+) -> Vec<stats::StreamedFieldSummary> {
+    let mut it = outcomes.iter();
+    fields
+        .iter()
+        .zip(chunks_per_field)
+        .map(|(f, &n)| stats::StreamedFieldSummary {
+            name: f.name.clone(),
+            dims: f.dims,
+            chunk_elems,
+            chunks: it
+                .by_ref()
+                .take(n)
+                .map(|s| stats::StreamedChunkStat {
+                    selection: s.decl.selection,
+                    stored_bytes: s.decl.len,
+                    raw_bytes: s.raw_bytes,
+                    estimate_time: s.decision.estimate_time,
+                    compress_time: s.compress_time,
+                })
+                .collect(),
+        })
+        .collect()
+}
+
+impl Engine {
+    pub fn new(cfg: EngineConfig) -> Engine {
+        let registry = AutoSelector::new(cfg.selector_cfg).registry();
+        Engine { cfg, registry }
+    }
+
+    /// The engine's configuration (read-only after construction — the
+    /// statelessness contract).
+    pub fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    /// Worker threads per run.
+    pub fn workers(&self) -> usize {
+        self.cfg.workers.max(1)
+    }
+
+    /// The selection-byte → codec mapping this engine dispatches
+    /// through (built once at construction).
+    pub fn registry(&self) -> &CodecRegistry {
+        &self.registry
+    }
+
+    /// A per-run router for `policy` at `eb_rel`, carrying the engine's
+    /// prior-drift band. Routers hold per-run counters (compress calls,
+    /// prior refreshes), so each run gets a fresh one.
+    fn router(&self, policy: Policy, eb_rel: f64) -> router::Router {
+        router::Router::new(self.cfg.selector_cfg, policy, eb_rel)
+            .with_drift_band(self.cfg.prior_drift_band)
+    }
+
+    /// Compress one field under `policy` — the single-request entry
+    /// point the service front end batches over.
+    pub fn compress_field(
+        &self,
+        field: &Field,
+        policy: Policy,
+        eb_rel: f64,
+    ) -> Result<job::FieldResult> {
+        self.router(policy, eb_rel).process(field)
+    }
+
+    /// Compress every field under `policy`, in parallel, collecting
+    /// per-field results in submission order (v1, one job per field).
+    pub fn run(
+        &self,
+        fields: &[Field],
+        policy: Policy,
+        eb_rel: f64,
+    ) -> Result<stats::RunReport> {
+        let router = self.router(policy, eb_rel);
+        let results = pool::run_jobs(self.workers(), fields, |f| router.process(f))?;
+        Ok(stats::RunReport::from_results(policy, eb_rel, results))
+    }
+
+    /// Compress every field split into ~`chunk_elems`-element chunks,
+    /// each chunk selected and compressed as its own pool job
+    /// (`chunk_elems == 0` keeps whole-field chunks). Chunks below
+    /// [`EngineConfig::chunk_prior_elems`] share one field-level
+    /// estimation (the sampled-PDF prior); larger chunks estimate and
+    /// select independently.
+    pub fn run_chunked(
+        &self,
+        fields: &[Field],
+        policy: Policy,
+        eb_rel: f64,
+        chunk_elems: usize,
+    ) -> Result<stats::ChunkedRunReport> {
+        let router = self.router(policy, eb_rel);
+        let (jobs, chunks_per_field) = self.chunk_jobs(&router, fields, chunk_elems)?;
+        let results = pool::run_jobs(self.workers(), &jobs, |j| {
+            router.process_chunk(&j.chunk_field(), j.chunk_idx, j.prior.as_ref())
+        })?;
+        // Regroup chunk results per field, preserving order.
+        let mut it = results.into_iter();
+        let mut out = Vec::with_capacity(fields.len());
+        for (f, n) in fields.iter().zip(chunks_per_field) {
+            out.push(stats::ChunkedFieldResult {
+                name: f.name.clone(),
+                dims: f.dims,
+                chunk_elems,
+                chunks: it.by_ref().take(n).collect(),
+            });
+        }
+        Ok(stats::ChunkedRunReport {
+            policy,
+            eb_rel,
+            fields: out,
+            prior_refreshes: router.prior_refreshes(),
+        })
+    }
+
+    /// Split every field into chunk jobs and compute the field-level
+    /// selection priors (shared by `run_chunked` and
+    /// `compress_chunked_to`). Returns the flattened jobs in index
+    /// order plus the chunk count of each field.
+    fn chunk_jobs<'a>(
+        &self,
+        router: &router::Router,
+        fields: &'a [Field],
+        chunk_elems: usize,
+    ) -> Result<(Vec<ChunkJob<'a>>, Vec<usize>)> {
+        // The prior pays off only when a field actually splits and its
+        // chunks are small; whole-field "chunks" estimate once anyway,
+        // on their own data. Field-level estimation runs on the worker
+        // pool (one job per eligible field) so the estimation phase
+        // keeps the parallelism the per-chunk path had.
+        let spans_per_field: Vec<Vec<(usize, crate::data::field::Dims)>> =
+            fields.iter().map(|f| store::chunk_spans(f.dims, chunk_elems)).collect();
+        // Only RateDistortion estimates per chunk, so only it has a
+        // prior to share — skip the pool phase for every other policy.
+        let prior_eligible = router.policy == Policy::RateDistortion
+            && chunk_elems < self.cfg.chunk_prior_elems
+            && self.cfg.chunk_prior_elems > 0;
+        let prior_fields: Vec<&Field> = fields
+            .iter()
+            .zip(&spans_per_field)
+            .filter(|(_, spans)| prior_eligible && spans.len() > 1)
+            .map(|(f, _)| f)
+            .collect();
+        let computed =
+            pool::run_jobs(self.workers(), &prior_fields, |f| router.field_prior(f))?;
+        let mut computed = computed.into_iter();
+
+        let mut jobs = Vec::new();
+        let mut chunks_per_field = Vec::with_capacity(fields.len());
+        for (f, spans) in fields.iter().zip(spans_per_field) {
+            let prior = if prior_eligible && spans.len() > 1 {
+                computed.next().expect("one prior per eligible field")
+            } else {
+                None
+            };
+            chunks_per_field.push(spans.len());
+            for (chunk_idx, (start, dims)) in spans.into_iter().enumerate() {
+                jobs.push(ChunkJob { field: f, chunk_idx, start, dims, prior });
+            }
+        }
+        Ok((jobs, chunks_per_field))
+    }
+
+    /// Chunked compression streamed straight to an [`std::io::Write`]
+    /// sink: the container lands on disk without the full payload ever
+    /// being resident. Output is byte-identical to
+    /// `run_chunked(...).to_container().to_bytes()` under *both*
+    /// [`WritePlan`]s — the protocol choice is invisible in the bytes.
+    ///
+    /// The index-first wire format needs every chunk's compressed size
+    /// before the first payload byte, and the two plans pay for that
+    /// differently (DESIGN.md §6):
+    ///
+    /// * [`WritePlan::SinglePassSpill`] (default) — workers compress
+    ///   each chunk **once**, appending the finished payload to a
+    ///   [`spill::SpillStore`] in completion order (in memory for
+    ///   small runs, a delete-on-drop temp file past the budget).
+    ///   Once all sizes and CRCs are known, the index is written and
+    ///   the slabs are spliced into the sink in declared order in one
+    ///   copy pass (sink sequential, slab reads positioned). Per-worker
+    ///   [`router::CompressScratch`] staging removes per-chunk
+    ///   allocation churn; prior-covered chunks compress straight out
+    ///   of the parent field's buffer with no copy at all.
+    /// * [`WritePlan::TwoPassRecompress`] — pass 1 sizes and drops
+    ///   payloads, pass 2 regenerates each stream from its pinned
+    ///   [`router::Decision`] in bounded parallel batches. No scratch
+    ///   space, but every chunk is compressed twice
+    ///   (`recompress_time` records the price).
+    ///
+    /// The writer verifies every stream against its declared length
+    /// *and* CRC-32, so a non-deterministic codec can never silently
+    /// corrupt the index; the report's `compress_calls` counter proves
+    /// the single-pass guarantee (exactly one `compress` per chunk).
+    pub fn compress_chunked_to<W: std::io::Write>(
+        &self,
+        fields: &[Field],
+        policy: Policy,
+        eb_rel: f64,
+        chunk_elems: usize,
+        sink: W,
+    ) -> Result<(stats::StreamedRunReport, W)> {
+        match self.cfg.write_plan {
+            WritePlan::SinglePassSpill => {
+                self.run_chunked_single_pass(fields, policy, eb_rel, chunk_elems, sink)
+            }
+            WritePlan::TwoPassRecompress => {
+                self.run_chunked_two_pass(fields, policy, eb_rel, chunk_elems, sink)
+            }
+        }
+    }
+
+    /// Single-pass spill protocol: compress once, spill, splice.
+    fn run_chunked_single_pass<W: std::io::Write>(
+        &self,
+        fields: &[Field],
+        policy: Policy,
+        eb_rel: f64,
+        chunk_elems: usize,
+        sink: W,
+    ) -> Result<(stats::StreamedRunReport, W)> {
+        let router = self.router(policy, eb_rel);
+        let (jobs, chunks_per_field) = self.chunk_jobs(&router, fields, chunk_elems)?;
+        let scratch_store = spill::SpillStore::new(self.cfg.spill.clone());
+
+        // The only compression pass: decide + compress each chunk and
+        // append the finished payload to the spill store in completion
+        // order. Prior-covered chunks skip staging entirely (the span
+        // compresses in place); the rest stage into the per-worker
+        // reusable scratch. The store deletes its temp file on drop,
+        // so every `?` below also cleans up the scratch space.
+        let store_ref = &scratch_store;
+        let sizings = pool::run_jobs_scoped(
+            self.workers(),
+            &jobs,
+            router::CompressScratch::default,
+            |j, scratch| {
+                let span = &j.field.data[j.start..j.start + j.dims.len()];
+                let decision = match j.prior.as_ref() {
+                    // Adaptive prior refresh: a drifted chunk falls
+                    // through to independent estimation below.
+                    Some(p) if !router.prior_drifted(span, p) => {
+                        router.decide_from_prior(p, j.chunk_idx)
+                    }
+                    _ => {
+                        router.decide(scratch.stage_chunk(j.field, j.chunk_idx, j.start, j.dims))?
+                    }
+                };
+                let t0 = std::time::Instant::now();
+                let stream = router.compress_decided_span(span, j.dims, &decision)?;
+                let compress_time = t0.elapsed();
+                let decl = store::ChunkDecl::of(decision.selection(), &stream);
+                let slab = store_ref.append(&stream)?;
+                Ok(ChunkOutcome {
+                    decision,
+                    decl,
+                    raw_bytes: span.len() as u64 * 4,
+                    compress_time,
+                    slab: Some(slab),
+                })
+            },
+        )?;
+        let peak_scratch_bytes = scratch_store.total_bytes();
+        let scratch_spilled = scratch_store.spilled();
+
+        // All sizes + CRCs known: emit magic + index, then splice the
+        // slabs into the sink in declared order — the sink written
+        // sequentially, each slab read exactly once (positioned).
+        let decls = build_decls(fields, &chunks_per_field, &sizings, chunk_elems);
+        let mut writer = store::ContainerV2Writer::new(sink, &decls)?;
+        let mut buf = Vec::new();
+        let mut peak_payload = 0u64;
+        for (idx, s) in sizings.iter().enumerate() {
+            scratch_store.read_slab(s.slab.expect("single-pass chunks spill"), &mut buf)?;
+            peak_payload = peak_payload.max(buf.len() as u64);
+            writer.put_chunk(idx, &buf)?;
+        }
+        let sink = writer.finish()?;
+        drop(scratch_store); // scratch file (if any) deleted here on success
+
+        let report = stats::StreamedRunReport {
+            policy,
+            eb_rel,
+            write_plan: WritePlan::SinglePassSpill,
+            fields: streamed_summaries(fields, &chunks_per_field, &sizings, chunk_elems),
+            peak_payload_bytes: peak_payload,
+            peak_scratch_bytes,
+            scratch_spilled,
+            compress_calls: stats::CompressCalls(router.compress_calls().snapshot()),
+            recompress_time: std::time::Duration::ZERO,
+            prior_refreshes: router.prior_refreshes(),
+        };
+        Ok((report, sink))
+    }
+
+    /// Two-pass recompress protocol (no scratch space): size, index,
+    /// regenerate.
+    fn run_chunked_two_pass<W: std::io::Write>(
+        &self,
+        fields: &[Field],
+        policy: Policy,
+        eb_rel: f64,
+        chunk_elems: usize,
+        sink: W,
+    ) -> Result<(stats::StreamedRunReport, W)> {
+        let router = self.router(policy, eb_rel);
+        let (jobs, chunks_per_field) = self.chunk_jobs(&router, fields, chunk_elems)?;
+
+        // Pass 1 — decide + compress for sizes; payloads are dropped
+        // immediately, so peak memory stays O(workers × chunk).
+        let sizings = pool::run_jobs(self.workers(), &jobs, |j| {
+            let chunk = j.chunk_field();
+            let decision = router.decide_chunk(&chunk, j.chunk_idx, j.prior.as_ref())?;
+            let t0 = std::time::Instant::now();
+            let stream = router.compress_decided(&chunk, &decision)?;
+            Ok(ChunkOutcome {
+                decision,
+                decl: store::ChunkDecl::of(decision.selection(), &stream),
+                raw_bytes: chunk.raw_bytes() as u64,
+                compress_time: t0.elapsed(),
+                slab: None,
+            })
+        })?;
+
+        // Every chunk's size is now known: declare the layout and emit
+        // magic + index before the first payload byte.
+        let decls = build_decls(fields, &chunks_per_field, &sizings, chunk_elems);
+        let mut writer = store::ContainerV2Writer::new(sink, &decls)?;
+
+        // Pass 2 — regenerate streams in bounded batches, appending
+        // each batch in index order as its workers finish.
+        let window = self.workers() * 2;
+        let mut peak_payload = 0u64;
+        let mut recompress_time = std::time::Duration::ZERO;
+        let paired: Vec<(&ChunkJob, &ChunkOutcome)> = jobs.iter().zip(&sizings).collect();
+        for batch in paired.chunks(window) {
+            let streams = pool::run_jobs(self.workers(), batch, |&(j, s)| {
+                let chunk = j.chunk_field();
+                let t0 = std::time::Instant::now();
+                let stream = router.compress_decided(&chunk, &s.decision)?;
+                Ok((stream, t0.elapsed()))
+            })?;
+            let in_flight: u64 = streams.iter().map(|(s, _)| s.len() as u64).sum();
+            peak_payload = peak_payload.max(in_flight);
+            for (stream, dur) in streams {
+                recompress_time += dur;
+                writer.write_chunk(&stream)?;
+            }
+        }
+        drop(paired);
+        let sink = writer.finish()?;
+
+        let report = stats::StreamedRunReport {
+            policy,
+            eb_rel,
+            write_plan: WritePlan::TwoPassRecompress,
+            fields: streamed_summaries(fields, &chunks_per_field, &sizings, chunk_elems),
+            peak_payload_bytes: peak_payload,
+            peak_scratch_bytes: 0,
+            scratch_spilled: false,
+            compress_calls: stats::CompressCalls(router.compress_calls().snapshot()),
+            recompress_time,
+            prior_refreshes: router.prior_refreshes(),
+        };
+        Ok((report, sink))
+    }
+
+    /// Decompress every field of a v1 container back to raw data.
+    /// Selection bytes — including `2` (raw passthrough, the
+    /// `NoCompression` policy) — resolve through the codec registry.
+    pub fn load(&self, container: &store::Container) -> Result<Vec<Field>> {
+        let entries: Vec<&store::Entry> = container.entries.iter().collect();
+        let fields = pool::run_jobs(self.workers(), &entries, |e| {
+            let (data, dims) = self.registry.decode_v1_entry(e.selection, &e.payload)?;
+            Ok(Field::new(e.name.clone(), dims, data))
+        })?;
+        Ok(fields)
+    }
+
+    /// Decode every field of an indexed container (v1 or v2), one pool
+    /// job per chunk. Thin wrapper over
+    /// [`Engine::load_fields_streaming`] that collects the whole
+    /// archive.
+    pub fn load_reader(&self, reader: &store::ContainerReader) -> Result<Vec<Field>> {
+        let mut out = Vec::with_capacity(reader.fields.len());
+        self.load_fields_streaming(reader, |f| {
+            out.push(f);
+            Ok(())
+        })?;
+        Ok(out)
+    }
+
+    /// Bounded-memory full decode: decode the container in windows of
+    /// `workers` fields — chunks of the whole window run in parallel
+    /// on the pool, so single-chunk (v1) fields still decode
+    /// `workers`-wide — and hand each assembled [`Field`] to `emit` as
+    /// soon as it is complete. Peak residency is one window of
+    /// decoded fields, not the archive; the registry is the engine's,
+    /// built once.
+    pub fn load_fields_streaming(
+        &self,
+        reader: &store::ContainerReader,
+        mut emit: impl FnMut(Field) -> Result<()>,
+    ) -> Result<()> {
+        let field_indices: Vec<usize> = (0..reader.fields.len()).collect();
+        for window in field_indices.chunks(self.workers()) {
+            let mut jobs = Vec::new();
+            for &fi in window {
+                for ci in 0..reader.fields[fi].chunks.len() {
+                    jobs.push((fi, ci));
+                }
+            }
+            let decoded = pool::run_jobs(self.workers(), &jobs, |&(fi, ci)| {
+                reader.decode_chunk(&self.registry, fi, ci)
+            })?;
+            let mut it = decoded.into_iter();
+            for &fi in window {
+                let info = &reader.fields[fi];
+                let parts: Vec<_> = it.by_ref().take(info.chunks.len()).collect();
+                emit(store::assemble_field(info, parts)?)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Partial, index-driven decode: reconstruct one field by name
+    /// without touching any other field's payload bytes. The field's
+    /// chunks decode in parallel.
+    pub fn load_field(
+        &self,
+        reader: &store::ContainerReader,
+        name: &str,
+    ) -> Result<Field> {
+        let (fi, info) = reader.field(name)?;
+        let jobs: Vec<usize> = (0..info.chunks.len()).collect();
+        let parts = pool::run_jobs(self.workers(), &jobs, |&ci| {
+            reader.decode_chunk(&self.registry, fi, ci)
+        })?;
+        store::assemble_field(info, parts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::atm;
+    use std::sync::Arc;
+
+    fn small_fields(n: usize) -> Vec<Field> {
+        (0..n).map(|i| atm::generate_field_scaled(55, i, 0)).collect()
+    }
+
+    fn engine_with(workers: usize) -> Engine {
+        Engine::new(EngineConfig { workers, ..EngineConfig::default() })
+    }
+
+    #[test]
+    fn engine_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Engine>();
+        assert_send_sync::<Arc<Engine>>();
+    }
+
+    #[test]
+    fn shared_engine_runs_from_many_threads() {
+        // The statelessness contract: one Arc<Engine>, concurrent runs,
+        // every thread sees byte-identical output.
+        let engine = Arc::new(engine_with(2));
+        let fields = small_fields(2);
+        let reference = engine
+            .run_chunked(&fields, Policy::RateDistortion, 1e-3, 2048)
+            .unwrap()
+            .to_container()
+            .to_bytes();
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let engine = Arc::clone(&engine);
+                let fields = &fields;
+                let reference = &reference;
+                scope.spawn(move || {
+                    let bytes = engine
+                        .run_chunked(fields, Policy::RateDistortion, 1e-3, 2048)
+                        .unwrap()
+                        .to_container()
+                        .to_bytes();
+                    assert_eq!(&bytes, reference);
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn compress_field_matches_run() {
+        let engine = engine_with(2);
+        let fields = small_fields(3);
+        let report = engine.run(&fields, Policy::RateDistortion, 1e-3).unwrap();
+        for (f, r) in fields.iter().zip(&report.results) {
+            let single = engine.compress_field(f, Policy::RateDistortion, 1e-3).unwrap();
+            assert_eq!(single.payload, r.payload, "{}", f.name);
+            assert_eq!(single.choice, r.choice, "{}", f.name);
+        }
+    }
+
+    #[test]
+    fn streamed_path_byte_identical_across_plans() {
+        let fields = small_fields(3);
+        let mut reference: Option<Vec<u8>> = None;
+        for plan in [WritePlan::SinglePassSpill, WritePlan::TwoPassRecompress] {
+            let engine = Engine::new(EngineConfig {
+                workers: 3,
+                write_plan: plan,
+                ..EngineConfig::default()
+            });
+            let (report, bytes) = engine
+                .compress_chunked_to(&fields, Policy::RateDistortion, 1e-3, 2048, Vec::new())
+                .unwrap();
+            assert_eq!(report.write_plan, plan);
+            assert_eq!(report.prior_refreshes, 0, "drift band disabled by default");
+            match &reference {
+                None => reference = Some(bytes),
+                Some(r) => assert_eq!(&bytes, r, "{plan:?}"),
+            }
+        }
+        // The buffered path agrees too.
+        let engine = engine_with(3);
+        let buffered = engine
+            .run_chunked(&fields, Policy::RateDistortion, 1e-3, 2048)
+            .unwrap()
+            .to_container()
+            .to_bytes();
+        assert_eq!(reference.unwrap(), buffered);
+    }
+
+    #[test]
+    fn prior_drift_band_refreshes_drifting_chunks() {
+        use crate::data::field::Dims;
+        // A field whose tail chunk has 1/100th the head's value range
+        // (so the field-level range is set by the head and the tail
+        // drifts far outside the band): with the band enabled the tail
+        // re-estimates independently while the head chunks inherit.
+        let n = 4096usize;
+        let data: Vec<f32> = (0..n)
+            .map(|i| {
+                let base = (i as f32 * 0.01).sin();
+                if i < 3 * n / 4 {
+                    base * 100.0
+                } else {
+                    base
+                }
+            })
+            .collect();
+        let fields = vec![Field::new("drifty", Dims::D1(n), data)];
+        let chunk = 1024usize;
+
+        let engine_off = Engine::new(EngineConfig {
+            workers: 2,
+            chunk_prior_elems: 1 << 20, // force the prior for 1k chunks
+            prior_drift_band: 0.0,
+            ..EngineConfig::default()
+        });
+        let off = engine_off.run_chunked(&fields, Policy::RateDistortion, 1e-3, chunk).unwrap();
+        assert_eq!(off.prior_refreshes, 0);
+
+        let engine_on = Engine::new(EngineConfig {
+            workers: 2,
+            chunk_prior_elems: 1 << 20,
+            prior_drift_band: 0.5,
+            ..EngineConfig::default()
+        });
+        let on = engine_on.run_chunked(&fields, Policy::RateDistortion, 1e-3, chunk).unwrap();
+        assert!(on.prior_refreshes >= 1, "tail chunk must trip the band");
+        // Refreshed chunks carry their own estimation time.
+        let fr = &on.fields[0];
+        assert!(
+            fr.chunks[3].estimate_time.as_nanos() > 0,
+            "drifted chunk re-estimates"
+        );
+
+        // The streamed path counts the same refreshes and still
+        // round-trips byte-identically against its own buffered run.
+        let (srep, streamed) = engine_on
+            .compress_chunked_to(&fields, Policy::RateDistortion, 1e-3, chunk, Vec::new())
+            .unwrap();
+        assert_eq!(srep.prior_refreshes, on.prior_refreshes);
+        assert_eq!(streamed, on.to_container().to_bytes());
+
+        // Decodes stay within bound.
+        let reader = store::ContainerReader::from_bytes(streamed).unwrap();
+        let restored = engine_on.load_reader(&reader).unwrap();
+        let vr = fields[0].value_range();
+        let stats = crate::metrics::error_stats(&fields[0].data, &restored[0].data);
+        assert!(stats.max_abs_err <= 1e-3 * vr * (1.0 + 1e-6));
+    }
+
+    #[test]
+    fn drift_refresh_is_worker_count_invariant() {
+        // Refresh decisions depend only on chunk data, never on worker
+        // interleaving — the determinism invariant (DESIGN.md §7).
+        let fields = small_fields(3);
+        let mk = |workers| {
+            Engine::new(EngineConfig {
+                workers,
+                chunk_prior_elems: 1 << 20,
+                prior_drift_band: 0.25,
+                ..EngineConfig::default()
+            })
+        };
+        let (r1, b1) = mk(1)
+            .compress_chunked_to(&fields, Policy::RateDistortion, 1e-3, 2048, Vec::new())
+            .unwrap();
+        let (r4, b4) = mk(4)
+            .compress_chunked_to(&fields, Policy::RateDistortion, 1e-3, 2048, Vec::new())
+            .unwrap();
+        assert_eq!(b1, b4, "worker count must not change output");
+        assert_eq!(r1.prior_refreshes, r4.prior_refreshes);
+    }
+
+    #[test]
+    fn load_field_roundtrips_through_engine() {
+        let engine = engine_with(2);
+        let fields = small_fields(4);
+        let (_, bytes) = engine
+            .compress_chunked_to(&fields, Policy::RateDistortion, 1e-3, 2048, Vec::new())
+            .unwrap();
+        let reader = store::ContainerReader::from_bytes(bytes).unwrap();
+        let target = &fields[2];
+        let got = engine.load_field(&reader, &target.name).unwrap();
+        assert_eq!(got.dims, target.dims);
+        let vr = target.value_range();
+        let stats = crate::metrics::error_stats(&target.data, &got.data);
+        assert!(stats.max_abs_err <= 1e-3 * vr * (1.0 + 1e-6));
+        assert!(engine.load_field(&reader, "missing").is_err());
+    }
+}

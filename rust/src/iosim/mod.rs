@@ -249,6 +249,57 @@ impl ThroughputModel {
     }
 }
 
+/// Analytical model of the service front end's batching trade-off
+/// (DESIGN.md §12): each store pass pays a fixed dispatch cost (queue
+/// pop, router + spill-store setup, index emit) that batching amortizes
+/// over its requests, plus a small per-request cost (reply channel,
+/// archive index insert) and the per-request compression itself.
+///
+/// ```text
+/// t_batch(b)     = dispatch + b · (per_request + comp_per_req)
+/// throughput(b)  = b · raw_per_req / t_batch(b)      (raw bytes/s)
+/// latency(b)     ≈ t_batch(b)                        (last reply in
+///                                                     the pass)
+/// ```
+///
+/// Throughput rises monotonically with `b` and saturates at
+/// `raw_per_req / (per_request + comp_per_req)`; tail latency grows
+/// linearly — the classic batching knee the `service_throughput` bench
+/// measures empirically.
+#[derive(Clone, Copy, Debug)]
+pub struct SvcModel {
+    /// Fixed cost per store pass (s).
+    pub dispatch_latency: f64,
+    /// Marginal cost per request in a pass, excluding compression (s).
+    pub per_request_overhead: f64,
+}
+
+impl Default for SvcModel {
+    fn default() -> Self {
+        SvcModel { dispatch_latency: 400e-6, per_request_overhead: 20e-6 }
+    }
+}
+
+impl SvcModel {
+    /// Modeled wall time of one store pass over `batch` requests.
+    pub fn batch_time(&self, batch: usize, comp_secs_per_req: f64) -> f64 {
+        let b = batch.max(1) as f64;
+        self.dispatch_latency + b * (self.per_request_overhead + comp_secs_per_req)
+    }
+
+    /// Modeled service throughput (raw bytes/s) at one batch size.
+    pub fn throughput(&self, batch: usize, raw_per_req: f64, comp_secs_per_req: f64) -> f64 {
+        let b = batch.max(1) as f64;
+        b * raw_per_req / self.batch_time(batch, comp_secs_per_req)
+    }
+
+    /// Modeled worst-case (last-reply) latency at one batch size — the
+    /// p99 proxy the bench compares against.
+    pub fn batch_latency(&self, batch: usize, comp_secs_per_req: f64) -> f64 {
+        self.batch_time(batch, comp_secs_per_req)
+    }
+}
+
 /// The process-count sweep of Figs. 8–9.
 pub const PROC_SWEEP: [usize; 11] = [1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024];
 
@@ -370,6 +421,28 @@ mod tests {
             single > 1.3 * two,
             "single-pass {single:.2e} should clearly beat two-pass {two:.2e}"
         );
+    }
+
+    #[test]
+    fn service_batching_amortizes_dispatch_and_saturates() {
+        let m = SvcModel::default();
+        let raw = 1e6; // 1 MB per request
+        let comp = 0.01; // 10 ms compression per request
+        // Throughput is monotone in batch size...
+        let t1 = m.throughput(1, raw, comp);
+        let t4 = m.throughput(4, raw, comp);
+        let t16 = m.throughput(16, raw, comp);
+        assert!(t4 > t1 && t16 > t4, "{t1:.3e} {t4:.3e} {t16:.3e}");
+        // ...and saturates at the dispatch-free rate.
+        let limit = raw / (m.per_request_overhead + comp);
+        assert!(t16 < limit);
+        let t1024 = m.throughput(1024, raw, comp);
+        assert!(t1024 > 0.99 * limit, "{t1024:.3e} vs {limit:.3e}");
+        // Tail latency pays for it linearly.
+        assert!(m.batch_latency(16, comp) > 10.0 * m.batch_latency(1, comp));
+        // The dispatch share shrinks with batch size (the amortization).
+        let share = |b: usize| m.dispatch_latency / m.batch_time(b, comp);
+        assert!(share(16) < share(4) && share(4) < share(1));
     }
 
     #[test]

@@ -48,10 +48,12 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod dct;
+pub mod engine;
 pub mod estimator;
 pub mod iosim;
 pub mod metrics;
 pub mod runtime;
+pub mod service;
 pub mod sz;
 pub mod testing;
 pub mod zfp;
@@ -64,6 +66,9 @@ pub enum Error {
     InvalidArg(String),
     Io(std::io::Error),
     Runtime(String),
+    /// The service request queue is at its high-water mark — the
+    /// admission-control rejection (back off and retry, or shed).
+    Busy,
     Other(String),
 }
 
@@ -74,6 +79,7 @@ impl std::fmt::Display for Error {
             Error::InvalidArg(m) => write!(f, "invalid argument: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Runtime(m) => write!(f, "pjrt runtime error: {m}"),
+            Error::Busy => write!(f, "service busy: request queue at high-water mark"),
             Error::Other(m) => write!(f, "{m}"),
         }
     }

@@ -1,0 +1,191 @@
+//! Request coalescing: groups the compress requests of one queue drain
+//! into shared chunked store passes, so N small-field requests cost one
+//! [`crate::engine::Engine::compress_chunked_to`] run (one router, one
+//! spill store, one index emit) instead of N. Non-compress requests
+//! (fetch, stats, stall) pass through as singletons, preserving FIFO
+//! order between them and the batches around them.
+
+use super::{Job, Request};
+
+/// One unit of planned work for a service worker.
+pub(crate) enum Planned {
+    /// Compress these requests in one chunked store pass.
+    Batch(Vec<Job>),
+    /// Handle this request on its own.
+    Single(Job),
+}
+
+/// Batching policy: how many compress requests may share one store
+/// pass, and how many total elements a pass may hold (an oversized
+/// field never drags small peers behind its compression time — it
+/// closes the batch and runs alone).
+#[derive(Clone, Copy, Debug)]
+pub struct Batcher {
+    /// Max compress requests per store pass (≥ 1).
+    pub batch_max: usize,
+    /// Element budget per store pass; a batch closes before exceeding
+    /// it (a single field larger than the budget still runs, alone).
+    pub max_batch_elems: usize,
+}
+
+impl Default for Batcher {
+    fn default() -> Self {
+        Batcher { batch_max: 8, max_batch_elems: 4 << 20 }
+    }
+}
+
+impl Batcher {
+    /// Partition one drained FIFO slice into batches and singletons,
+    /// preserving arrival order.
+    pub(crate) fn plan(&self, jobs: Vec<Job>) -> Vec<Planned> {
+        let batch_max = self.batch_max.max(1);
+        let mut out = Vec::new();
+        let mut cur: Vec<Job> = Vec::new();
+        let mut cur_elems = 0usize;
+        for job in jobs {
+            match &job.req {
+                Request::Compress { field } => {
+                    let elems = field.data.len();
+                    // A store pass must never hold two fields of the
+                    // same name: the container index resolves names
+                    // first-match, which would pin a re-compression to
+                    // its *stale* payload. Splitting keeps last-write-
+                    // wins (later batch, later archive insert).
+                    let dup = cur.iter().any(|j| match &j.req {
+                        Request::Compress { field: f } => f.name == field.name,
+                        _ => false,
+                    });
+                    let over = dup
+                        || cur.len() >= batch_max
+                        || cur_elems.saturating_add(elems) > self.max_batch_elems;
+                    if !cur.is_empty() && over {
+                        out.push(Planned::Batch(std::mem::take(&mut cur)));
+                        cur_elems = 0;
+                    }
+                    cur_elems += elems;
+                    cur.push(job);
+                }
+                _ => {
+                    if !cur.is_empty() {
+                        out.push(Planned::Batch(std::mem::take(&mut cur)));
+                        cur_elems = 0;
+                    }
+                    out.push(Planned::Single(job));
+                }
+            }
+        }
+        if !cur.is_empty() {
+            out.push(Planned::Batch(cur));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::field::{Dims, Field};
+    use std::sync::mpsc;
+    use std::time::Instant;
+
+    fn compress_job(name: &str, elems: usize) -> Job {
+        // The receiver is dropped on purpose: plan() never replies.
+        let (tx, _rx) = mpsc::channel();
+        Job {
+            req: Request::Compress {
+                field: Field::new(name, Dims::D1(elems), vec![1.0; elems]),
+            },
+            reply: tx,
+            enqueued: Instant::now(),
+        }
+    }
+
+    fn fetch_job(name: &str) -> Job {
+        let (tx, _rx) = mpsc::channel();
+        Job { req: Request::Fetch { name: name.into() }, reply: tx, enqueued: Instant::now() }
+    }
+
+    fn shape(planned: &[Planned]) -> Vec<(bool, usize)> {
+        planned
+            .iter()
+            .map(|p| match p {
+                Planned::Batch(b) => (true, b.len()),
+                Planned::Single(_) => (false, 1),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn coalesces_up_to_batch_max() {
+        let b = Batcher { batch_max: 3, max_batch_elems: usize::MAX };
+        let jobs: Vec<Job> = (0..7).map(|i| compress_job(&format!("f{i}"), 8)).collect();
+        let planned = b.plan(jobs);
+        assert_eq!(shape(&planned), vec![(true, 3), (true, 3), (true, 1)]);
+    }
+
+    #[test]
+    fn singles_split_batches_in_fifo_order() {
+        let b = Batcher { batch_max: 8, max_batch_elems: usize::MAX };
+        let jobs = vec![
+            compress_job("a", 8),
+            compress_job("b", 8),
+            fetch_job("a"),
+            compress_job("c", 8),
+        ];
+        let planned = b.plan(jobs);
+        assert_eq!(shape(&planned), vec![(true, 2), (false, 1), (true, 1)]);
+    }
+
+    #[test]
+    fn element_budget_closes_batches() {
+        let b = Batcher { batch_max: 8, max_batch_elems: 100 };
+        let jobs = vec![
+            compress_job("a", 60),
+            compress_job("b", 60), // 120 > 100: closes after 'a'
+            compress_job("big", 500), // oversized: runs alone
+            compress_job("c", 10),
+        ];
+        let planned = b.plan(jobs);
+        assert_eq!(shape(&planned), vec![(true, 1), (true, 1), (true, 1), (true, 1)]);
+
+        let b = Batcher { batch_max: 8, max_batch_elems: 130 };
+        let jobs = vec![compress_job("a", 60), compress_job("b", 60), compress_job("c", 60)];
+        assert_eq!(shape(&b.plan(jobs)), vec![(true, 2), (true, 1)]);
+    }
+
+    #[test]
+    fn duplicate_names_never_share_a_store_pass() {
+        // Re-compressions of one field arriving in the same drain must
+        // split, so the archive's last-write-wins holds within a drain
+        // too (the container index resolves duplicate names
+        // first-match).
+        let b = Batcher { batch_max: 8, max_batch_elems: usize::MAX };
+        let jobs = vec![
+            compress_job("a", 8),
+            compress_job("b", 8),
+            compress_job("a", 8), // updated payload for 'a'
+            compress_job("c", 8),
+        ];
+        let planned = b.plan(jobs);
+        assert_eq!(shape(&planned), vec![(true, 2), (true, 2)]);
+        match &planned[1] {
+            Planned::Batch(batch) => {
+                let names: Vec<&str> = batch
+                    .iter()
+                    .map(|j| match &j.req {
+                        Request::Compress { field } => field.name.as_str(),
+                        _ => unreachable!(),
+                    })
+                    .collect();
+                assert_eq!(names, ["a", "c"], "the re-compression opens the next pass");
+            }
+            Planned::Single(_) => panic!("expected a batch"),
+        }
+    }
+
+    #[test]
+    fn empty_input_plans_nothing() {
+        let b = Batcher::default();
+        assert!(b.plan(Vec::new()).is_empty());
+    }
+}

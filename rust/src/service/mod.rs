@@ -1,0 +1,571 @@
+//! Concurrent service front end over the shared [`Engine`]: the
+//! request path that turns the library into a server (DESIGN.md §12).
+//!
+//! * [`queue`] — bounded [`queue::RequestQueue`] with admission
+//!   control: past the high-water mark requests are rejected with
+//!   [`crate::Error::Busy`] instead of growing an unbounded backlog;
+//! * [`batcher`] — coalesces small compress requests from one queue
+//!   drain into a single chunked store pass;
+//! * worker threads (this module) — drain the queue, drive the shared
+//!   `Arc<Engine>`, and answer through per-request channels;
+//! * [`stats`] — admit/reject/batch counters and a fixed-bucket
+//!   latency histogram behind [`stats::ServiceReport`];
+//! * [`net`] — a std-only `std::net` TCP front end speaking
+//!   length-prefixed frames, plus the matching client.
+//!
+//! In-process callers use a [`ServiceHandle`] (cheap to clone, safe
+//! from any thread); remote callers go through [`net::Server`] /
+//! [`net::Client`], which translate frames into the same handle calls.
+//! Compressed batches land in an in-memory archive of container bytes,
+//! indexed per field, so `Fetch` decodes exactly one field's chunks
+//! through the engine's pread-style partial decode — byte-identical to
+//! the offline `compress_chunked_to` + `load_field` path, because it
+//! *is* that path.
+
+pub mod batcher;
+pub mod net;
+pub mod queue;
+pub mod stats;
+
+use crate::baseline::Policy;
+use crate::coordinator::store::ContainerReader;
+use crate::data::field::Field;
+use crate::engine::Engine;
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+/// One request a client can make of the service.
+#[derive(Debug)]
+pub enum Request {
+    /// Compress `field` into the service archive (batched with
+    /// neighbors by the [`batcher::Batcher`]).
+    Compress { field: Field },
+    /// Decode a previously compressed field by name.
+    Fetch { name: String },
+    /// Snapshot the service counters.
+    Stats,
+    /// Test/bench instrumentation: occupy one worker for `millis`
+    /// milliseconds (deterministic queue-pressure injection — the
+    /// over-capacity burst tests and the throughput bench lean on it).
+    #[doc(hidden)]
+    Stall { millis: u64 },
+}
+
+/// The service's answer to one [`Request`].
+#[derive(Debug)]
+pub enum Response {
+    /// `Compress` accepted and stored.
+    Compressed {
+        name: String,
+        raw_bytes: u64,
+        stored_bytes: u64,
+        chunks: usize,
+        /// How many requests shared this store pass.
+        batch_size: usize,
+    },
+    /// `Fetch` result.
+    Field(Field),
+    /// `Stats` snapshot.
+    Stats(stats::ServiceReport),
+    /// `Stall` finished.
+    Stalled,
+}
+
+/// One queued request: what was asked, where to answer, and when it
+/// was admitted (end-to-end latency anchor).
+pub(crate) struct Job {
+    pub(crate) req: Request,
+    pub(crate) reply: mpsc::Sender<Result<Response>>,
+    pub(crate) enqueued: Instant,
+}
+
+/// Service tuning knobs.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Worker threads draining the queue.
+    pub workers: usize,
+    /// Admission high-water mark: queued requests past this are
+    /// rejected with [`Error::Busy`].
+    pub queue_depth: usize,
+    /// Max compress requests coalesced into one store pass (also the
+    /// queue drain granularity).
+    pub batch_max: usize,
+    /// Element budget per store pass (see [`batcher::Batcher`]).
+    pub max_batch_elems: usize,
+    /// Policy every compress request runs under.
+    pub policy: Policy,
+    /// Relative error bound for compress requests.
+    pub eb_rel: f64,
+    /// Chunk granularity of the archive containers.
+    pub chunk_elems: usize,
+    /// How many recent [`BatchRecord`]s (raw batch container bytes)
+    /// the archive retains for inspection — a bounded diagnostic ring,
+    /// not the archive itself (per-field readers are kept regardless).
+    pub batch_log_max: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            workers: 2,
+            queue_depth: 64,
+            batch_max: 8,
+            max_batch_elems: 4 << 20,
+            policy: Policy::RateDistortion,
+            eb_rel: 1e-4,
+            chunk_elems: 64 * 1024,
+            batch_log_max: 16,
+        }
+    }
+}
+
+/// One stored batch: the fields it covered and the exact container
+/// bytes the store pass produced (what the byte-identity tests compare
+/// against the offline `compress_chunked_to` output).
+#[derive(Clone, Debug)]
+pub struct BatchRecord {
+    pub names: Vec<String>,
+    pub bytes: Vec<u8>,
+}
+
+/// In-memory archive of compressed batches: per-field readers for
+/// `Fetch`, plus a bounded ring of recent raw batch container bytes
+/// for inspection (the byte-identity tests and diagnostics read it;
+/// capping it keeps a long-running server's residency proportional to
+/// the live field set, not to everything it ever ingested).
+struct Archive {
+    readers: Mutex<BTreeMap<String, Arc<ContainerReader>>>,
+    batches: Mutex<std::collections::VecDeque<BatchRecord>>,
+    log_max: usize,
+}
+
+impl Archive {
+    fn new(log_max: usize) -> Archive {
+        Archive {
+            readers: Mutex::new(BTreeMap::new()),
+            batches: Mutex::new(std::collections::VecDeque::new()),
+            log_max,
+        }
+    }
+
+    /// Index one finished batch. Re-compressing a name replaces its
+    /// mapping (last write wins — the batcher guarantees one name
+    /// never appears twice within a pass); the raw-bytes log keeps
+    /// only the most recent `log_max` batches.
+    fn insert(&self, names: Vec<String>, bytes: Vec<u8>) -> Result<()> {
+        let reader = Arc::new(ContainerReader::from_bytes(bytes.clone())?);
+        {
+            let mut m = self
+                .readers
+                .lock()
+                .map_err(|_| Error::Other("service archive lock poisoned".into()))?;
+            for n in &names {
+                m.insert(n.clone(), Arc::clone(&reader));
+            }
+        }
+        let mut log = self
+            .batches
+            .lock()
+            .map_err(|_| Error::Other("service archive lock poisoned".into()))?;
+        log.push_back(BatchRecord { names, bytes });
+        while log.len() > self.log_max.max(1) {
+            log.pop_front();
+        }
+        Ok(())
+    }
+
+    fn reader_for(&self, name: &str) -> Option<Arc<ContainerReader>> {
+        self.readers.lock().ok()?.get(name).cloned()
+    }
+
+    fn records(&self) -> Vec<BatchRecord> {
+        self.batches.lock().map(|b| b.iter().cloned().collect()).unwrap_or_default()
+    }
+}
+
+/// A running service: worker threads + queue + archive around one
+/// shared engine. Dropping (or [`Service::shutdown`]) closes the queue,
+/// drains the backlog, and joins the workers.
+pub struct Service {
+    queue: Arc<queue::RequestQueue<Job>>,
+    counters: Arc<stats::ServiceCounters>,
+    archive: Arc<Archive>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Service {
+    /// Spawn the worker threads and start serving.
+    pub fn start(engine: Arc<Engine>, cfg: ServiceConfig) -> Service {
+        let queue = Arc::new(queue::RequestQueue::new(cfg.queue_depth));
+        let counters = Arc::new(stats::ServiceCounters::new());
+        let archive = Arc::new(Archive::new(cfg.batch_log_max));
+        let mut workers = Vec::new();
+        for i in 0..cfg.workers.max(1) {
+            let engine = Arc::clone(&engine);
+            let queue = Arc::clone(&queue);
+            let counters = Arc::clone(&counters);
+            let archive = Arc::clone(&archive);
+            let cfg = cfg.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("adaptivec-svc-{i}"))
+                    .spawn(move || worker_loop(&engine, &cfg, &queue, &archive, &counters))
+                    .expect("spawn service worker"),
+            );
+        }
+        Service { queue, counters, archive, workers }
+    }
+
+    /// A clonable, thread-safe submission handle.
+    pub fn handle(&self) -> ServiceHandle {
+        ServiceHandle {
+            queue: Arc::clone(&self.queue),
+            counters: Arc::clone(&self.counters),
+        }
+    }
+
+    /// Direct counter snapshot (no queue round-trip).
+    pub fn report(&self) -> stats::ServiceReport {
+        snapshot(&self.queue, &self.counters)
+    }
+
+    /// The most recent per-batch container bytes (a bounded ring of
+    /// [`ServiceConfig::batch_log_max`] records — the test/diagnostic
+    /// surface for the byte-identity guarantee).
+    pub fn batch_containers(&self) -> Vec<BatchRecord> {
+        self.archive.records()
+    }
+
+    /// Stop admitting, drain the backlog, join the workers, and return
+    /// the final report.
+    pub fn shutdown(mut self) -> stats::ServiceReport {
+        self.queue.close();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        snapshot(&self.queue, &self.counters)
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        self.queue.close();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Clonable submission handle: the in-process client.
+#[derive(Clone)]
+pub struct ServiceHandle {
+    queue: Arc<queue::RequestQueue<Job>>,
+    counters: Arc<stats::ServiceCounters>,
+}
+
+impl ServiceHandle {
+    /// Submit without waiting. `Err(Error::Busy)` when the queue is at
+    /// its high-water mark — the admission-control rejection.
+    pub fn submit(&self, req: Request) -> Result<Ticket> {
+        let (tx, rx) = mpsc::channel();
+        let job = Job { req, reply: tx, enqueued: Instant::now() };
+        match self.queue.push(job) {
+            Ok(()) => Ok(Ticket { rx }),
+            Err(_rejected) => Err(Error::Busy),
+        }
+    }
+
+    /// Submit and block for the answer.
+    pub fn call(&self, req: Request) -> Result<Response> {
+        self.submit(req)?.wait()
+    }
+
+    /// Compress one field (blocking convenience).
+    pub fn compress(&self, field: Field) -> Result<Response> {
+        self.call(Request::Compress { field })
+    }
+
+    /// Fetch one field back (blocking convenience).
+    pub fn fetch(&self, name: &str) -> Result<Field> {
+        match self.call(Request::Fetch { name: name.to_string() })? {
+            Response::Field(f) => Ok(f),
+            other => Err(Error::Other(format!("unexpected fetch response: {other:?}"))),
+        }
+    }
+
+    /// Direct counter snapshot — never queued, so it works even when
+    /// admission is rejecting.
+    pub fn report(&self) -> stats::ServiceReport {
+        snapshot(&self.queue, &self.counters)
+    }
+}
+
+/// A pending answer.
+pub struct Ticket {
+    rx: mpsc::Receiver<Result<Response>>,
+}
+
+impl Ticket {
+    /// Block until the service answers. An error here means the
+    /// request was admitted but the service shut down before replying.
+    pub fn wait(self) -> Result<Response> {
+        self.rx
+            .recv()
+            .map_err(|_| Error::Other("service shut down before answering".into()))?
+    }
+}
+
+fn snapshot(
+    queue: &queue::RequestQueue<Job>,
+    counters: &stats::ServiceCounters,
+) -> stats::ServiceReport {
+    let q = queue.stats();
+    stats::ServiceReport {
+        admitted: q.admitted,
+        rejected: q.rejected,
+        completed: counters.completed.load(Ordering::Relaxed),
+        errors: counters.errors.load(Ordering::Relaxed),
+        queue_depth: q.depth,
+        queue_peak: q.peak_depth,
+        batches: counters.batches.load(Ordering::Relaxed),
+        batched_requests: counters.batched_requests.load(Ordering::Relaxed),
+        max_batch: counters.max_batch.load(Ordering::Relaxed),
+        p50: counters.latency.quantile(0.50),
+        p99: counters.latency.quantile(0.99),
+        latency_count: counters.latency.count(),
+    }
+}
+
+/// Answer one job and account for it. A dropped receiver (client gave
+/// up) is not an error — the work is already done.
+fn respond(
+    counters: &stats::ServiceCounters,
+    reply: &mpsc::Sender<Result<Response>>,
+    enqueued: Instant,
+    result: Result<Response>,
+) {
+    match &result {
+        Ok(_) => counters.completed.fetch_add(1, Ordering::Relaxed),
+        Err(_) => counters.errors.fetch_add(1, Ordering::Relaxed),
+    };
+    counters.latency.record(enqueued.elapsed());
+    let _ = reply.send(result);
+}
+
+fn worker_loop(
+    engine: &Engine,
+    cfg: &ServiceConfig,
+    queue: &queue::RequestQueue<Job>,
+    archive: &Archive,
+    counters: &stats::ServiceCounters,
+) {
+    let batcher = batcher::Batcher {
+        batch_max: cfg.batch_max,
+        max_batch_elems: cfg.max_batch_elems,
+    };
+    while let Some(jobs) = queue.pop_batch(cfg.batch_max) {
+        for planned in batcher.plan(jobs) {
+            match planned {
+                batcher::Planned::Batch(batch) => {
+                    compress_batch(engine, cfg, archive, counters, batch)
+                }
+                batcher::Planned::Single(job) => {
+                    handle_single(engine, queue, archive, counters, job)
+                }
+            }
+        }
+    }
+}
+
+/// One coalesced store pass: N compress requests → one
+/// `compress_chunked_to` run → one archived container.
+fn compress_batch(
+    engine: &Engine,
+    cfg: &ServiceConfig,
+    archive: &Archive,
+    counters: &stats::ServiceCounters,
+    batch: Vec<Job>,
+) {
+    let batch_size = batch.len();
+    let mut fields = Vec::with_capacity(batch_size);
+    let mut replies = Vec::with_capacity(batch_size);
+    for job in batch {
+        match job.req {
+            Request::Compress { field } => {
+                fields.push(field);
+                replies.push((job.reply, job.enqueued));
+            }
+            _ => unreachable!("batcher only batches compress requests"),
+        }
+    }
+    let outcome = engine
+        .compress_chunked_to(&fields, cfg.policy, cfg.eb_rel, cfg.chunk_elems, Vec::new())
+        .and_then(|(report, bytes)| {
+            let names: Vec<String> = fields.iter().map(|f| f.name.clone()).collect();
+            archive.insert(names, bytes)?;
+            Ok(report)
+        });
+    match outcome {
+        Ok(report) => {
+            counters.record_batch(batch_size);
+            for ((reply, enqueued), fs) in replies.iter().zip(&report.fields) {
+                respond(
+                    counters,
+                    reply,
+                    *enqueued,
+                    Ok(Response::Compressed {
+                        name: fs.name.clone(),
+                        raw_bytes: fs.raw_bytes(),
+                        stored_bytes: fs.stored_bytes(),
+                        chunks: fs.chunks.len(),
+                        batch_size,
+                    }),
+                );
+            }
+        }
+        Err(e) => {
+            // The whole pass failed: every requester learns why.
+            let msg = format!("batch compression failed: {e}");
+            for (reply, enqueued) in &replies {
+                respond(counters, reply, *enqueued, Err(Error::Other(msg.clone())));
+            }
+        }
+    }
+}
+
+fn handle_single(
+    engine: &Engine,
+    queue: &queue::RequestQueue<Job>,
+    archive: &Archive,
+    counters: &stats::ServiceCounters,
+    job: Job,
+) {
+    let Job { req, reply, enqueued } = job;
+    let result = match req {
+        Request::Compress { .. } => unreachable!("batcher routes compress into batches"),
+        Request::Fetch { name } => match archive.reader_for(&name) {
+            Some(reader) => engine.load_field(&reader, &name).map(Response::Field),
+            None => Err(Error::InvalidArg(format!(
+                "field '{name}' is not in the service archive"
+            ))),
+        },
+        Request::Stats => Ok(Response::Stats(snapshot(queue, counters))),
+        Request::Stall { millis } => {
+            std::thread::sleep(std::time::Duration::from_millis(millis));
+            Ok(Response::Stalled)
+        }
+    };
+    respond(counters, &reply, enqueued, result);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::atm;
+    use crate::engine::{Engine, EngineConfig};
+
+    fn test_engine() -> Arc<Engine> {
+        Arc::new(Engine::new(EngineConfig { workers: 2, ..EngineConfig::default() }))
+    }
+
+    fn test_cfg() -> ServiceConfig {
+        ServiceConfig {
+            workers: 2,
+            queue_depth: 32,
+            batch_max: 4,
+            eb_rel: 1e-3,
+            chunk_elems: 2048,
+            ..ServiceConfig::default()
+        }
+    }
+
+    #[test]
+    fn handle_is_send_sync_and_clonable() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<ServiceHandle>();
+        assert_send_sync::<Service>();
+    }
+
+    #[test]
+    fn compress_fetch_roundtrip() {
+        let svc = Service::start(test_engine(), test_cfg());
+        let handle = svc.handle();
+        let field = atm::generate_field_scaled(71, 0, 0);
+        match handle.compress(field.clone()).unwrap() {
+            Response::Compressed { name, raw_bytes, stored_bytes, chunks, batch_size } => {
+                assert_eq!(name, field.name);
+                assert_eq!(raw_bytes, field.raw_bytes() as u64);
+                assert!(stored_bytes > 0 && stored_bytes < raw_bytes);
+                assert!(chunks >= 1);
+                assert!(batch_size >= 1);
+            }
+            other => panic!("unexpected response {other:?}"),
+        }
+        let restored = handle.fetch(&field.name).unwrap();
+        assert_eq!(restored.dims, field.dims);
+        let vr = field.value_range();
+        let stats = crate::metrics::error_stats(&field.data, &restored.data);
+        assert!(stats.max_abs_err <= 1e-3 * vr * (1.0 + 1e-6));
+        let report = svc.shutdown();
+        assert_eq!(report.admitted, 2);
+        assert_eq!(report.completed, 2);
+        assert_eq!(report.rejected, 0);
+        assert!(report.latency_count >= 2);
+    }
+
+    #[test]
+    fn fetch_of_unknown_field_is_an_error_not_a_hang() {
+        let svc = Service::start(test_engine(), test_cfg());
+        let handle = svc.handle();
+        assert!(handle.fetch("never-compressed").is_err());
+        let report = svc.shutdown();
+        assert_eq!(report.errors, 1);
+    }
+
+    #[test]
+    fn stats_request_flows_through_the_queue() {
+        let svc = Service::start(test_engine(), test_cfg());
+        let handle = svc.handle();
+        let field = atm::generate_field_scaled(72, 1, 0);
+        handle.compress(field).unwrap();
+        match handle.call(Request::Stats).unwrap() {
+            Response::Stats(r) => {
+                assert!(r.admitted >= 1);
+                assert!(r.batches >= 1);
+                assert!(r.summary().contains("admitted"));
+            }
+            other => panic!("unexpected response {other:?}"),
+        }
+    }
+
+    #[test]
+    fn shutdown_drains_admitted_backlog() {
+        // Requests admitted before shutdown must be answered, not lost.
+        let svc = Service::start(
+            test_engine(),
+            ServiceConfig { workers: 1, ..test_cfg() },
+        );
+        let handle = svc.handle();
+        // Occupy the worker, then queue real work behind it.
+        let stall = handle.submit(Request::Stall { millis: 150 }).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        let mut tickets = Vec::new();
+        for i in 0..3 {
+            let field = atm::generate_field_scaled(73, i, 0);
+            tickets.push((field.name.clone(), handle.submit(Request::Compress { field }).unwrap()));
+        }
+        let report = svc.shutdown();
+        stall.wait().unwrap();
+        for (name, t) in tickets {
+            match t.wait().unwrap() {
+                Response::Compressed { name: got, .. } => assert_eq!(got, name),
+                other => panic!("unexpected response {other:?}"),
+            }
+        }
+        assert_eq!(report.admitted, 4);
+        assert_eq!(report.completed, 4);
+    }
+}

@@ -1,0 +1,560 @@
+//! std-only TCP front end: length-prefixed request/response frames
+//! over `std::net`, one thread per connection, translating the wire
+//! into [`ServiceHandle`] calls (no protocol state lives here — the
+//! queue and its admission control see remote and in-process requests
+//! identically).
+//!
+//! ## Frame format
+//!
+//! ```text
+//! frame  := len:u32le body            (len = body length, ≤ 1 GiB)
+//! body   := opcode:u8 payload
+//! ```
+//!
+//! Request opcodes: `0x01` compress (name, dims, f32 data), `0x02`
+//! fetch (name), `0x03` stats, `0x04` shutdown, `0x05` stall (millis —
+//! test instrumentation). Response opcodes: `0x80` compressed ack,
+//! `0x81` field, `0x82` stats text, `0x83` ok, `0xFE` **busy** (the
+//! admission-control rejection, surfaced to clients as
+//! [`Error::Busy`]), `0xFF` error text. All integers little-endian;
+//! strings and byte runs are `u32` length-prefixed.
+
+use super::{Request, Response, ServiceHandle};
+use crate::data::field::{Dims, Field};
+use crate::{Error, Result};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Upper bound on one frame body — rejects corrupt/hostile lengths
+/// before any allocation.
+const MAX_FRAME: u32 = 1 << 30;
+
+// Request opcodes.
+const OP_COMPRESS: u8 = 0x01;
+const OP_FETCH: u8 = 0x02;
+const OP_STATS: u8 = 0x03;
+const OP_SHUTDOWN: u8 = 0x04;
+const OP_STALL: u8 = 0x05;
+// Response opcodes.
+const OP_COMPRESSED: u8 = 0x80;
+const OP_FIELD: u8 = 0x81;
+const OP_STATS_TEXT: u8 = 0x82;
+const OP_OK: u8 = 0x83;
+const OP_BUSY: u8 = 0xFE;
+const OP_ERROR: u8 = 0xFF;
+
+// ---------------------------------------------------------------- codec
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_dims(out: &mut Vec<u8>, dims: Dims) {
+    out.push(dims.ndim() as u8);
+    let e = dims.extents();
+    match dims.ndim() {
+        1 => put_u64(out, e[2] as u64),
+        2 => {
+            put_u64(out, e[1] as u64);
+            put_u64(out, e[2] as u64);
+        }
+        _ => {
+            put_u64(out, e[0] as u64);
+            put_u64(out, e[1] as u64);
+            put_u64(out, e[2] as u64);
+        }
+    }
+}
+
+fn put_data(out: &mut Vec<u8>, data: &[f32]) {
+    put_u64(out, data.len() as u64);
+    for v in data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Bounds-checked cursor over one frame body.
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(buf: &'a [u8]) -> Cur<'a> {
+        Cur { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| Error::Corrupt("frame truncated".into()))?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().expect("8-byte slice")))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        let b = self.take(n)?;
+        String::from_utf8(b.to_vec()).map_err(|_| Error::Corrupt("invalid utf-8".into()))
+    }
+
+    fn dims(&mut self) -> Result<Dims> {
+        Ok(match self.u8()? {
+            1 => Dims::D1(self.u64()? as usize),
+            2 => Dims::D2(self.u64()? as usize, self.u64()? as usize),
+            3 => Dims::D3(
+                self.u64()? as usize,
+                self.u64()? as usize,
+                self.u64()? as usize,
+            ),
+            d => return Err(Error::Corrupt(format!("bad ndim {d}"))),
+        })
+    }
+
+    fn data(&mut self) -> Result<Vec<f32>> {
+        let n = self.u64()? as usize;
+        // The bytes must actually be present — bounds the allocation.
+        let b = self.take(n.checked_mul(4).ok_or_else(|| Error::Corrupt("data overflow".into()))?)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(Error::Corrupt("trailing bytes in frame".into()))
+        }
+    }
+}
+
+fn encode_field(out: &mut Vec<u8>, field: &Field) {
+    put_str(out, &field.name);
+    put_dims(out, field.dims);
+    put_data(out, &field.data);
+}
+
+fn decode_field(cur: &mut Cur) -> Result<Field> {
+    let name = cur.str()?;
+    let dims = cur.dims()?;
+    let data = cur.data()?;
+    if dims.len() != data.len() {
+        return Err(Error::Corrupt(format!(
+            "field '{name}': dims {dims} disagree with {} data values",
+            data.len()
+        )));
+    }
+    Ok(Field::new(name, dims, data))
+}
+
+fn write_frame(w: &mut impl Write, body: &[u8]) -> Result<()> {
+    if body.len() as u64 > MAX_FRAME as u64 {
+        return Err(Error::InvalidArg(format!("frame of {} bytes exceeds cap", body.len())));
+    }
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(body)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame body. `Ok(None)` = clean EOF at a frame boundary
+/// (the peer closed the connection).
+fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
+    let mut len = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        match r.read(&mut len[got..])? {
+            0 if got == 0 => return Ok(None),
+            0 => return Err(Error::Corrupt("connection closed mid-frame".into())),
+            n => got += n,
+        }
+    }
+    let len = u32::from_le_bytes(len);
+    if len > MAX_FRAME {
+        return Err(Error::Corrupt(format!("frame length {len} exceeds cap")));
+    }
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body)?;
+    Ok(Some(body))
+}
+
+// ---------------------------------------------------------------- server
+
+/// TCP acceptor bound to an address, serving a [`ServiceHandle`].
+pub struct Server {
+    listener: TcpListener,
+    addr: SocketAddr,
+    handle: ServiceHandle,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `"127.0.0.1:7845"`, or port 0 for an
+    /// ephemeral port — tests read it back via
+    /// [`Server::local_addr`]).
+    pub fn bind(handle: ServiceHandle, addr: &str) -> Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        Ok(Server { listener, addr, handle, stop: Arc::new(AtomicBool::new(false)) })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Accept loop: one thread per connection, until a shutdown frame
+    /// arrives. Blocking — callers wanting a background server spawn
+    /// this on a thread.
+    pub fn run(self) -> Result<()> {
+        for stream in self.listener.incoming() {
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = match stream {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            let handle = self.handle.clone();
+            let stop = Arc::clone(&self.stop);
+            let addr = self.addr;
+            std::thread::spawn(move || {
+                let _ = serve_conn(stream, &handle, &stop, addr);
+            });
+        }
+        Ok(())
+    }
+}
+
+/// Handle one client connection: frames in, service calls, frames out.
+fn serve_conn(
+    mut stream: TcpStream,
+    handle: &ServiceHandle,
+    stop: &AtomicBool,
+    addr: SocketAddr,
+) -> Result<()> {
+    loop {
+        let body = match read_frame(&mut stream)? {
+            Some(b) => b,
+            None => return Ok(()),
+        };
+        let mut cur = Cur::new(&body);
+        let opcode = cur.u8()?;
+        let reply = match opcode {
+            OP_SHUTDOWN => {
+                cur.done()?;
+                stop.store(true, Ordering::SeqCst);
+                write_frame(&mut stream, &[OP_OK])?;
+                // Wake the (blocking) acceptor so `run` observes
+                // `stop`. A 0.0.0.0 / :: bind is not connectable on
+                // every platform — aim the wake at loopback instead.
+                let mut wake = addr;
+                if wake.ip().is_unspecified() {
+                    wake.set_ip(match wake.ip() {
+                        std::net::IpAddr::V4(_) => {
+                            std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST)
+                        }
+                        std::net::IpAddr::V6(_) => {
+                            std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST)
+                        }
+                    });
+                }
+                let _ = TcpStream::connect(wake);
+                return Ok(());
+            }
+            OP_STATS => {
+                cur.done()?;
+                // Answered directly from the counters — works even
+                // while admission is rejecting.
+                let mut out = vec![OP_STATS_TEXT];
+                put_str(&mut out, &handle.report().summary());
+                out
+            }
+            OP_COMPRESS => {
+                let field = decode_field(&mut cur)?;
+                cur.done()?;
+                respond_frame(handle.call(Request::Compress { field }))
+            }
+            OP_FETCH => {
+                let name = cur.str()?;
+                cur.done()?;
+                respond_frame(handle.call(Request::Fetch { name }))
+            }
+            OP_STALL => {
+                let millis = cur.u64()?;
+                cur.done()?;
+                respond_frame(handle.call(Request::Stall { millis }))
+            }
+            other => {
+                let mut out = vec![OP_ERROR];
+                put_str(&mut out, &format!("unknown opcode {other:#04x}"));
+                out
+            }
+        };
+        write_frame(&mut stream, &reply)?;
+    }
+}
+
+/// Map a service outcome onto a response frame body.
+fn respond_frame(outcome: Result<Response>) -> Vec<u8> {
+    match outcome {
+        Ok(Response::Compressed { name, raw_bytes, stored_bytes, chunks, batch_size }) => {
+            let mut out = vec![OP_COMPRESSED];
+            put_str(&mut out, &name);
+            put_u64(&mut out, raw_bytes);
+            put_u64(&mut out, stored_bytes);
+            put_u64(&mut out, chunks as u64);
+            put_u64(&mut out, batch_size as u64);
+            out
+        }
+        Ok(Response::Field(field)) => {
+            let mut out = vec![OP_FIELD];
+            encode_field(&mut out, &field);
+            out
+        }
+        Ok(Response::Stats(report)) => {
+            let mut out = vec![OP_STATS_TEXT];
+            put_str(&mut out, &report.summary());
+            out
+        }
+        Ok(Response::Stalled) => vec![OP_OK],
+        Err(Error::Busy) => vec![OP_BUSY],
+        Err(e) => {
+            let mut out = vec![OP_ERROR];
+            put_str(&mut out, &e.to_string());
+            out
+        }
+    }
+}
+
+// ---------------------------------------------------------------- client
+
+/// Acknowledgement of one compressed field.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CompressAck {
+    pub name: String,
+    pub raw_bytes: u64,
+    pub stored_bytes: u64,
+    pub chunks: u64,
+    /// Requests that shared the server-side store pass.
+    pub batch_size: u64,
+}
+
+/// Blocking TCP client for the frame protocol. Busy rejections surface
+/// as [`Error::Busy`] so callers can back off and retry.
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        Ok(Client { stream: TcpStream::connect(addr)? })
+    }
+
+    /// One request/response exchange; returns the response body with
+    /// busy/error frames already mapped onto `Err`.
+    fn call(&mut self, body: &[u8]) -> Result<Vec<u8>> {
+        write_frame(&mut self.stream, body)?;
+        let resp = read_frame(&mut self.stream)?
+            .ok_or_else(|| Error::Other("server closed the connection".into()))?;
+        match resp.first().copied() {
+            Some(OP_BUSY) => Err(Error::Busy),
+            Some(OP_ERROR) => {
+                let mut cur = Cur::new(&resp[1..]);
+                Err(Error::Other(format!("server error: {}", cur.str()?)))
+            }
+            Some(_) => Ok(resp),
+            None => Err(Error::Corrupt("empty response frame".into())),
+        }
+    }
+
+    fn expect(resp: &[u8], opcode: u8) -> Result<Cur<'_>> {
+        let mut cur = Cur::new(resp);
+        let got = cur.u8()?;
+        if got != opcode {
+            return Err(Error::Corrupt(format!(
+                "expected response opcode {opcode:#04x}, got {got:#04x}"
+            )));
+        }
+        Ok(cur)
+    }
+
+    /// Compress one field on the server.
+    pub fn compress(&mut self, field: &Field) -> Result<CompressAck> {
+        let mut body = vec![OP_COMPRESS];
+        encode_field(&mut body, field);
+        let resp = self.call(&body)?;
+        let mut cur = Self::expect(&resp, OP_COMPRESSED)?;
+        let ack = CompressAck {
+            name: cur.str()?,
+            raw_bytes: cur.u64()?,
+            stored_bytes: cur.u64()?,
+            chunks: cur.u64()?,
+            batch_size: cur.u64()?,
+        };
+        cur.done()?;
+        Ok(ack)
+    }
+
+    /// Fetch one field back from the server archive.
+    pub fn fetch(&mut self, name: &str) -> Result<Field> {
+        let mut body = vec![OP_FETCH];
+        put_str(&mut body, name);
+        let resp = self.call(&body)?;
+        let mut cur = Self::expect(&resp, OP_FIELD)?;
+        let field = decode_field(&mut cur)?;
+        cur.done()?;
+        Ok(field)
+    }
+
+    /// The server's one-line [`super::stats::ServiceReport`] summary.
+    pub fn stats(&mut self) -> Result<String> {
+        let resp = self.call(&[OP_STATS])?;
+        let mut cur = Self::expect(&resp, OP_STATS_TEXT)?;
+        let text = cur.str()?;
+        cur.done()?;
+        Ok(text)
+    }
+
+    /// Test instrumentation: occupy one server worker for `millis`.
+    #[doc(hidden)]
+    pub fn stall(&mut self, millis: u64) -> Result<()> {
+        let mut body = vec![OP_STALL];
+        put_u64(&mut body, millis);
+        let resp = self.call(&body)?;
+        Self::expect(&resp, OP_OK)?.done()
+    }
+
+    /// Ask the server to stop accepting connections and exit its
+    /// accept loop (in-flight connections finish their current
+    /// request).
+    pub fn shutdown(&mut self) -> Result<()> {
+        let resp = self.call(&[OP_SHUTDOWN])?;
+        Self::expect(&resp, OP_OK)?.done()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::atm;
+    use crate::engine::{Engine, EngineConfig};
+    use crate::service::{Service, ServiceConfig};
+
+    #[test]
+    fn field_codec_roundtrips_all_dims() {
+        for dims in [Dims::D1(7), Dims::D2(3, 5), Dims::D3(2, 3, 4)] {
+            let f = Field::new("t", dims, (0..dims.len()).map(|i| i as f32 * 0.5).collect());
+            let mut buf = Vec::new();
+            encode_field(&mut buf, &f);
+            let mut cur = Cur::new(&buf);
+            let back = decode_field(&mut cur).unwrap();
+            cur.done().unwrap();
+            assert_eq!(back.name, f.name);
+            assert_eq!(back.dims, f.dims);
+            assert_eq!(back.data, f.data);
+        }
+    }
+
+    #[test]
+    fn corrupt_frames_error_not_panic() {
+        // Truncated body.
+        let f = Field::new("t", Dims::D1(4), vec![1.0; 4]);
+        let mut buf = Vec::new();
+        encode_field(&mut buf, &f);
+        for cut in [0, 3, buf.len() - 1] {
+            assert!(decode_field(&mut Cur::new(&buf[..cut])).is_err(), "cut {cut}");
+        }
+        // Dims/data mismatch.
+        let mut bad = Vec::new();
+        put_str(&mut bad, "t");
+        put_dims(&mut bad, Dims::D1(5));
+        put_data(&mut bad, &[1.0; 4]);
+        assert!(decode_field(&mut Cur::new(&bad)).is_err());
+        // Oversized frame length is rejected before allocation.
+        let mut r = std::io::Cursor::new((MAX_FRAME + 1).to_le_bytes().to_vec());
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn frame_roundtrip_and_eof() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, b"hello").unwrap();
+        write_frame(&mut wire, b"").unwrap();
+        let mut r = std::io::Cursor::new(wire);
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"");
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF");
+    }
+
+    #[test]
+    fn loopback_compress_fetch_stats_shutdown() {
+        let engine = Arc::new(Engine::new(EngineConfig { workers: 2, ..EngineConfig::default() }));
+        let svc = Service::start(
+            engine.clone(),
+            ServiceConfig { eb_rel: 1e-3, chunk_elems: 2048, ..ServiceConfig::default() },
+        );
+        let server = Server::bind(svc.handle(), "127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+        let acceptor = std::thread::spawn(move || server.run());
+
+        let field = atm::generate_field_scaled(81, 2, 0);
+        let mut client = Client::connect(&addr).unwrap();
+        let ack = client.compress(&field).unwrap();
+        assert_eq!(ack.name, field.name);
+        assert_eq!(ack.raw_bytes, field.raw_bytes() as u64);
+        assert!(ack.stored_bytes > 0);
+
+        // The fetched field matches the offline engine path bit-exactly.
+        let fetched = client.fetch(&field.name).unwrap();
+        let (_, bytes) = engine
+            .compress_chunked_to(
+                std::slice::from_ref(&field),
+                crate::baseline::Policy::RateDistortion,
+                1e-3,
+                2048,
+                Vec::new(),
+            )
+            .unwrap();
+        let reader = crate::coordinator::store::ContainerReader::from_bytes(bytes).unwrap();
+        let offline = engine.load_field(&reader, &field.name).unwrap();
+        assert_eq!(fetched.dims, offline.dims);
+        assert_eq!(fetched.data, offline.data, "service and offline decode must agree bit-exactly");
+
+        let stats = client.stats().unwrap();
+        assert!(stats.contains("admitted"), "{stats}");
+        assert!(client.fetch("missing").is_err());
+
+        client.shutdown().unwrap();
+        acceptor.join().unwrap().unwrap();
+        svc.shutdown();
+    }
+}

@@ -1,0 +1,245 @@
+//! Bounded request queue with admission control: the front door of the
+//! service layer. Producers [`RequestQueue::push`] and are rejected
+//! with `Busy` once the depth reaches the high-water mark — load is
+//! shed at the door instead of growing an unbounded backlog — while
+//! workers [`RequestQueue::pop_batch`] up to a batch of items at a
+//! time. Backpressure is observable: admitted/rejected totals and the
+//! depth high-water mark feed [`super::stats::ServiceReport`].
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+
+/// Admission-side counters of one queue (completion-side counters live
+/// in [`super::stats::ServiceCounters`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct QueueStats {
+    pub admitted: u64,
+    pub rejected: u64,
+    pub depth: usize,
+    pub peak_depth: usize,
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    peak: usize,
+    closed: bool,
+}
+
+/// Bounded MPMC queue: `Mutex<VecDeque>` + `Condvar`, std-only. The
+/// admission decision (reject past `high_water`) happens under the
+/// same lock as the insert, so the bound is exact, never approximate.
+pub struct RequestQueue<T> {
+    state: Mutex<State<T>>,
+    ready: Condvar,
+    high_water: usize,
+    admitted: AtomicU64,
+    rejected: AtomicU64,
+}
+
+impl<T> std::fmt::Debug for RequestQueue<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        f.debug_struct("RequestQueue")
+            .field("high_water", &self.high_water)
+            .field("stats", &s)
+            .finish()
+    }
+}
+
+impl<T> RequestQueue<T> {
+    /// A queue admitting at most `high_water` queued items (≥ 1).
+    pub fn new(high_water: usize) -> RequestQueue<T> {
+        RequestQueue {
+            state: Mutex::new(State { items: VecDeque::new(), peak: 0, closed: false }),
+            ready: Condvar::new(),
+            high_water: high_water.max(1),
+            admitted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+        }
+    }
+
+    /// The admission bound.
+    pub fn high_water(&self) -> usize {
+        self.high_water
+    }
+
+    /// Try to admit `item`. `Err(item)` gives it back when the queue is
+    /// at its high-water mark (the `Busy` rejection) or closed; the
+    /// caller decides whether to retry, shed, or surface the error.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut st = match self.state.lock() {
+            Ok(g) => g,
+            Err(_) => {
+                self.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(item);
+            }
+        };
+        if st.closed || st.items.len() >= self.high_water {
+            drop(st);
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(item);
+        }
+        st.items.push_back(item);
+        if st.items.len() > st.peak {
+            st.peak = st.items.len();
+        }
+        drop(st);
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Block until at least one item is queued, then drain up to `max`
+    /// items in FIFO order. Returns `None` once the queue is closed
+    /// *and* empty — the worker shutdown signal.
+    pub fn pop_batch(&self, max: usize) -> Option<Vec<T>> {
+        let max = max.max(1);
+        let mut st = self.state.lock().ok()?;
+        loop {
+            if !st.items.is_empty() {
+                let take = st.items.len().min(max);
+                let batch: Vec<T> = st.items.drain(..take).collect();
+                // More work left: wake another worker.
+                if !st.items.is_empty() {
+                    self.ready.notify_one();
+                }
+                return Some(batch);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.ready.wait(st).ok()?;
+        }
+    }
+
+    /// Close the queue: further pushes are rejected, and workers drain
+    /// what is left before [`RequestQueue::pop_batch`] returns `None`.
+    pub fn close(&self) {
+        if let Ok(mut st) = self.state.lock() {
+            st.closed = true;
+        }
+        self.ready.notify_all();
+    }
+
+    /// Current depth.
+    pub fn depth(&self) -> usize {
+        self.state.lock().map(|s| s.items.len()).unwrap_or(0)
+    }
+
+    /// Admission counters + depth snapshot.
+    pub fn stats(&self) -> QueueStats {
+        let (depth, peak) = self
+            .state
+            .lock()
+            .map(|s| (s.items.len(), s.peak))
+            .unwrap_or((0, 0));
+        QueueStats {
+            admitted: self.admitted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            depth,
+            peak_depth: peak,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_and_batch_cap() {
+        let q = RequestQueue::new(16);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(q.depth(), 5);
+        assert_eq!(q.pop_batch(3), Some(vec![0, 1, 2]));
+        assert_eq!(q.pop_batch(3), Some(vec![3, 4]));
+        let s = q.stats();
+        assert_eq!(s.admitted, 5);
+        assert_eq!(s.rejected, 0);
+        assert_eq!(s.peak_depth, 5);
+        assert_eq!(s.depth, 0);
+    }
+
+    #[test]
+    fn high_water_rejects_exactly_past_the_mark() {
+        let q = RequestQueue::new(3);
+        assert!(q.push(1).is_ok());
+        assert!(q.push(2).is_ok());
+        assert!(q.push(3).is_ok());
+        // Fourth push bounces and hands the item back.
+        assert_eq!(q.push(4), Err(4));
+        let s = q.stats();
+        assert_eq!((s.admitted, s.rejected), (3, 1));
+        // Draining reopens admission.
+        assert_eq!(q.pop_batch(8), Some(vec![1, 2, 3]));
+        assert!(q.push(5).is_ok());
+    }
+
+    #[test]
+    fn close_drains_then_signals_none() {
+        let q = RequestQueue::new(8);
+        q.push("a").unwrap();
+        q.close();
+        assert_eq!(q.push("b"), Err("b"), "closed queue rejects");
+        assert_eq!(q.pop_batch(4), Some(vec!["a"]), "backlog drains first");
+        assert_eq!(q.pop_batch(4), None, "then workers see shutdown");
+    }
+
+    #[test]
+    fn blocked_pop_wakes_on_push_and_close() {
+        let q = Arc::new(RequestQueue::new(8));
+        let qc = Arc::clone(&q);
+        let h = std::thread::spawn(move || qc.pop_batch(4));
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        q.push(7u32).unwrap();
+        assert_eq!(h.join().unwrap(), Some(vec![7]));
+
+        let qc = Arc::clone(&q);
+        let h = std::thread::spawn(move || qc.pop_batch(4));
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        q.close();
+        assert_eq!(h.join().unwrap(), None);
+    }
+
+    #[test]
+    fn concurrent_producers_never_exceed_high_water() {
+        let q = Arc::new(RequestQueue::new(4));
+        let mut handles = Vec::new();
+        for t in 0..8u32 {
+            let q = Arc::clone(&q);
+            handles.push(std::thread::spawn(move || {
+                let mut admitted = 0u32;
+                for i in 0..100 {
+                    if q.push(t * 1000 + i).is_ok() {
+                        admitted += 1;
+                    }
+                    assert!(q.depth() <= 4, "depth bound violated");
+                }
+                admitted
+            }));
+        }
+        // One slow consumer keeps some space opening up.
+        let qc = Arc::clone(&q);
+        let consumer = std::thread::spawn(move || {
+            let mut got = 0usize;
+            loop {
+                match qc.pop_batch(2) {
+                    Some(b) => got += b.len(),
+                    None => return got,
+                }
+            }
+        });
+        let produced: u32 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        q.close();
+        let consumed = consumer.join().unwrap();
+        assert_eq!(consumed as u32, produced, "no admitted item may be lost");
+        let s = q.stats();
+        assert_eq!(s.admitted, produced as u64);
+        assert_eq!(s.admitted + s.rejected, 800);
+        assert!(s.peak_depth <= 4);
+    }
+}

@@ -1,0 +1,245 @@
+//! Service observability: lock-free counters, a fixed-bucket latency
+//! histogram, and the [`ServiceReport`] snapshot the `stats` request
+//! and the CLI `serve`/`client --op stats` surface.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Number of power-of-two latency buckets: bucket `i` covers
+/// `[2^i, 2^(i+1))` microseconds, bucket 0 also absorbing sub-µs
+/// samples. 40 buckets reach ~2^40 µs ≈ 12 days — everything above
+/// clamps into the last bucket.
+const BUCKETS: usize = 40;
+
+/// Fixed-bucket, lock-free latency histogram. Power-of-two microsecond
+/// buckets keep `record` to a couple of instructions (no allocation,
+/// no lock) while giving quantiles within a 2x bucket width — plenty
+/// for p50/p99 service dashboards.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; BUCKETS],
+}
+
+// Manual: `[T; 40]` has no derived `Default` (std stops at 32).
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram { buckets: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+
+    fn bucket_of(d: Duration) -> usize {
+        let us = d.as_micros().min(u128::from(u64::MAX)) as u64;
+        if us <= 1 {
+            0
+        } else {
+            ((63 - us.leading_zeros()) as usize).min(BUCKETS - 1)
+        }
+    }
+
+    /// Upper bound (exclusive) of bucket `i`, as a duration.
+    fn bucket_upper(i: usize) -> Duration {
+        Duration::from_micros(1u64 << (i as u32 + 1))
+    }
+
+    pub fn record(&self, d: Duration) {
+        self.buckets[Self::bucket_of(d)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total samples recorded.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// The latency quantile `q` in [0, 1], reported as the upper edge
+    /// of the bucket the q-th sample falls in (conservative: the true
+    /// value is at most one bucket width below). Zero when empty.
+    pub fn quantile(&self, q: f64) -> Duration {
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        // Rank of the target sample (1-based), clamped into range.
+        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::bucket_upper(i);
+            }
+        }
+        Self::bucket_upper(BUCKETS - 1)
+    }
+}
+
+/// Shared mutable counters behind a running service (workers bump,
+/// snapshots read). Queue-side admission counters live on the
+/// [`super::queue::RequestQueue`] itself; these cover the completion
+/// side.
+#[derive(Debug, Default)]
+pub struct ServiceCounters {
+    /// Requests answered successfully (any kind).
+    pub completed: AtomicU64,
+    /// Requests answered with an error.
+    pub errors: AtomicU64,
+    /// Compress store passes executed (each covers ≥ 1 request).
+    pub batches: AtomicU64,
+    /// Compress requests that went through those passes.
+    pub batched_requests: AtomicU64,
+    /// Largest single store pass so far.
+    pub max_batch: AtomicU64,
+    /// End-to-end (enqueue → reply ready) request latency.
+    pub latency: LatencyHistogram,
+}
+
+impl ServiceCounters {
+    pub fn new() -> ServiceCounters {
+        ServiceCounters::default()
+    }
+
+    /// Record one compress store pass of `size` requests.
+    pub fn record_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests.fetch_add(size as u64, Ordering::Relaxed);
+        self.max_batch.fetch_max(size as u64, Ordering::Relaxed);
+    }
+}
+
+/// One point-in-time snapshot of a service's health: admission,
+/// batching, and latency. Plain data — safe to ship over the wire or
+/// print.
+#[derive(Clone, Debug)]
+pub struct ServiceReport {
+    /// Requests accepted into the queue.
+    pub admitted: u64,
+    /// Requests rejected with `Busy` at the high-water mark.
+    pub rejected: u64,
+    /// Requests answered successfully.
+    pub completed: u64,
+    /// Requests answered with an error.
+    pub errors: u64,
+    /// Queue depth at snapshot time.
+    pub queue_depth: usize,
+    /// Deepest the queue has been.
+    pub queue_peak: usize,
+    /// Compress store passes executed.
+    pub batches: u64,
+    /// Compress requests coalesced into those passes.
+    pub batched_requests: u64,
+    /// Largest single store pass.
+    pub max_batch: u64,
+    /// Median end-to-end latency (bucket upper edge).
+    pub p50: Duration,
+    /// 99th-percentile end-to-end latency (bucket upper edge).
+    pub p99: Duration,
+    /// Samples behind the latency quantiles.
+    pub latency_count: u64,
+}
+
+impl ServiceReport {
+    /// Mean compress requests per store pass.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_requests as f64 / self.batches as f64
+        }
+    }
+
+    /// The grep-able one-line summary (CI pins the `admitted` /
+    /// `batches` fields of this line).
+    pub fn summary(&self) -> String {
+        format!(
+            "service: admitted {} / rejected {} / completed {} / errors {}; \
+             queue depth {} (peak {}); batches {} (avg {:.2}, max {}); \
+             latency p50 {:.3} ms / p99 {:.3} ms over {} requests",
+            self.admitted,
+            self.rejected,
+            self.completed,
+            self.errors,
+            self.queue_depth,
+            self.queue_peak,
+            self.batches,
+            self.mean_batch(),
+            self.max_batch,
+            self.p50.as_secs_f64() * 1e3,
+            self.p99.as_secs_f64() * 1e3,
+            self.latency_count,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_bracket_samples() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile(0.5), Duration::ZERO, "empty histogram");
+        // 99 fast samples, 1 slow one.
+        for _ in 0..99 {
+            h.record(Duration::from_micros(100));
+        }
+        h.record(Duration::from_millis(50));
+        assert_eq!(h.count(), 100);
+        let p50 = h.quantile(0.50);
+        let p99 = h.quantile(0.99);
+        let p100 = h.quantile(1.0);
+        // p50/p99 land in the 100 µs bucket [64, 128) µs → edge 128 µs.
+        assert_eq!(p50, Duration::from_micros(128));
+        assert_eq!(p99, Duration::from_micros(128));
+        // The max lands in the 50 ms bucket [32.768, 65.536) ms.
+        assert_eq!(p100, Duration::from_micros(65_536));
+        assert!(p100 > p99);
+    }
+
+    #[test]
+    fn histogram_handles_extremes() {
+        let h = LatencyHistogram::new();
+        h.record(Duration::ZERO);
+        h.record(Duration::from_secs(1 << 30)); // clamps to last bucket
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile(0.0) >= Duration::from_micros(2));
+        assert!(h.quantile(1.0) >= Duration::from_secs(1));
+    }
+
+    #[test]
+    fn counters_track_batches() {
+        let c = ServiceCounters::new();
+        c.record_batch(4);
+        c.record_batch(8);
+        c.record_batch(1);
+        assert_eq!(c.batches.load(Ordering::Relaxed), 3);
+        assert_eq!(c.batched_requests.load(Ordering::Relaxed), 13);
+        assert_eq!(c.max_batch.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn report_summary_has_grep_anchors() {
+        let r = ServiceReport {
+            admitted: 10,
+            rejected: 2,
+            completed: 10,
+            errors: 0,
+            queue_depth: 0,
+            queue_peak: 5,
+            batches: 3,
+            batched_requests: 9,
+            max_batch: 4,
+            p50: Duration::from_micros(128),
+            p99: Duration::from_micros(1024),
+            latency_count: 10,
+        };
+        let s = r.summary();
+        assert!(s.contains("admitted 10"), "{s}");
+        assert!(s.contains("rejected 2"), "{s}");
+        assert!(s.contains("batches 3"), "{s}");
+        assert!((r.mean_batch() - 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,247 @@
+//! Service front-end end-to-end guarantees:
+//!
+//! * the in-process `ServiceHandle` round-trip is **byte-identical** to
+//!   the offline `compress_chunked_to` + `load_field` path — both for
+//!   decoded field data and, when a batch covers the same field set,
+//!   for the container bytes themselves;
+//! * admission control sheds load with `Busy` past the high-water mark
+//!   and never loses or corrupts an *accepted* request;
+//! * a shared `Engine` + `CachedSource`-backed reader serve concurrent
+//!   readers byte-identically with coherent LRU hit/miss accounting.
+
+use adaptivec::baseline::Policy;
+use adaptivec::coordinator::store::{CachedSource, ContainerReader, FileSource};
+use adaptivec::data::atm;
+use adaptivec::data::field::Field;
+use adaptivec::engine::{Engine, EngineConfig};
+use adaptivec::service::{Request, Response, Service, ServiceConfig};
+use adaptivec::Error;
+use std::sync::Arc;
+
+const EB: f64 = 1e-3;
+const CHUNK: usize = 2048;
+
+fn engine() -> Arc<Engine> {
+    Arc::new(Engine::new(EngineConfig { workers: 2, ..EngineConfig::default() }))
+}
+
+fn svc_cfg() -> ServiceConfig {
+    ServiceConfig {
+        workers: 2,
+        queue_depth: 64,
+        batch_max: 4,
+        eb_rel: EB,
+        chunk_elems: CHUNK,
+        ..ServiceConfig::default()
+    }
+}
+
+fn fields(n: usize, seed: u64) -> Vec<Field> {
+    (0..n).map(|i| atm::generate_field_scaled(seed, i, 0)).collect()
+}
+
+/// Offline reference: the same engine, the same policy knobs, no
+/// service in between.
+fn offline_decode(engine: &Engine, fields: &[Field]) -> Vec<Field> {
+    let (_, bytes) = engine
+        .compress_chunked_to(fields, Policy::RateDistortion, EB, CHUNK, Vec::new())
+        .unwrap();
+    let reader = ContainerReader::from_bytes(bytes).unwrap();
+    fields.iter().map(|f| engine.load_field(&reader, &f.name).unwrap()).collect()
+}
+
+/// Poll the handle's report until the queue is empty (the stall job
+/// was picked up) — makes the single-batch tests deterministic.
+fn wait_queue_drained(handle: &adaptivec::service::ServiceHandle) {
+    for _ in 0..200 {
+        if handle.report().queue_depth == 0 {
+            return;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    panic!("queue never drained");
+}
+
+#[test]
+fn handle_roundtrip_is_byte_identical_to_offline_path() {
+    let engine = engine();
+    let svc = Service::start(Arc::clone(&engine), svc_cfg());
+    let handle = svc.handle();
+    let fields = fields(6, 91);
+
+    // Pipeline all submissions, then collect — lets batches form.
+    let tickets: Vec<_> = fields
+        .iter()
+        .map(|f| handle.submit(Request::Compress { field: f.clone() }).unwrap())
+        .collect();
+    for (t, f) in tickets.into_iter().zip(&fields) {
+        match t.wait().unwrap() {
+            Response::Compressed { name, raw_bytes, .. } => {
+                assert_eq!(name, f.name);
+                assert_eq!(raw_bytes, f.raw_bytes() as u64);
+            }
+            other => panic!("unexpected response {other:?}"),
+        }
+    }
+
+    // Every fetched field is bit-identical to the offline decode —
+    // regardless of how the service happened to batch the requests,
+    // because chunk decisions depend only on the field's own data.
+    let offline = offline_decode(&engine, &fields);
+    for (f, off) in fields.iter().zip(&offline) {
+        let served = handle.fetch(&f.name).unwrap();
+        assert_eq!(served.dims, off.dims, "{}", f.name);
+        assert_eq!(served.data, off.data, "{}: served decode differs from offline", f.name);
+    }
+    let report = svc.shutdown();
+    assert_eq!(report.rejected, 0);
+    assert_eq!(report.completed, 12);
+}
+
+#[test]
+fn one_coalesced_batch_reproduces_offline_container_bytes() {
+    let engine = engine();
+    let svc = Service::start(
+        Arc::clone(&engine),
+        ServiceConfig { workers: 1, batch_max: 16, ..svc_cfg() },
+    );
+    let handle = svc.handle();
+    let fields = fields(4, 92);
+
+    // Occupy the single worker, then queue every compress behind it so
+    // one drain coalesces them all into one store pass.
+    let stall = handle.submit(Request::Stall { millis: 300 }).unwrap();
+    wait_queue_drained(&handle);
+    let tickets: Vec<_> = fields
+        .iter()
+        .map(|f| handle.submit(Request::Compress { field: f.clone() }).unwrap())
+        .collect();
+    stall.wait().unwrap();
+    for t in tickets {
+        match t.wait().unwrap() {
+            Response::Compressed { batch_size, .. } => assert_eq!(batch_size, fields.len()),
+            other => panic!("unexpected response {other:?}"),
+        }
+    }
+
+    // The batch's archived container is byte-identical to the offline
+    // compress_chunked_to output for the same fields in the same order.
+    let (_, offline_bytes) = engine
+        .compress_chunked_to(&fields, Policy::RateDistortion, EB, CHUNK, Vec::new())
+        .unwrap();
+    let records = svc.batch_containers();
+    assert_eq!(records.len(), 1, "all four compresses must share one store pass");
+    let names: Vec<String> = fields.iter().map(|f| f.name.clone()).collect();
+    assert_eq!(records[0].names, names);
+    assert_eq!(
+        records[0].bytes, offline_bytes,
+        "service batch container must be byte-identical to the offline writer"
+    );
+    svc.shutdown();
+}
+
+#[test]
+fn over_capacity_burst_rejects_busy_without_losing_accepted_requests() {
+    let engine = engine();
+    let svc = Service::start(
+        Arc::clone(&engine),
+        ServiceConfig { workers: 1, queue_depth: 2, batch_max: 1, ..svc_cfg() },
+    );
+    let handle = svc.handle();
+
+    // Pin the only worker, deterministically, then burst far past the
+    // 2-slot queue.
+    let stall = handle.submit(Request::Stall { millis: 400 }).unwrap();
+    wait_queue_drained(&handle);
+    let mut accepted: Vec<(Field, adaptivec::service::Ticket)> = Vec::new();
+    let mut busy = 0u64;
+    for i in 0..20usize {
+        let mut field = atm::generate_field_scaled(93, i % 8, 0);
+        field.name = format!("burst{i}");
+        match handle.submit(Request::Compress { field: field.clone() }) {
+            Ok(t) => accepted.push((field, t)),
+            Err(Error::Busy) => busy += 1,
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    assert!(busy >= 1, "the burst must observe at least one Busy rejection");
+    assert!(!accepted.is_empty(), "admission must accept up to the high-water mark");
+    assert!(accepted.len() <= 2, "never more than queue_depth in flight");
+    stall.wait().unwrap();
+
+    // Every *accepted* request completes and round-trips bit-exactly
+    // against the offline path — shedding lost nothing that was
+    // admitted, and corrupted nothing.
+    for (field, ticket) in accepted {
+        match ticket.wait().unwrap() {
+            Response::Compressed { name, .. } => assert_eq!(name, field.name),
+            other => panic!("unexpected response {other:?}"),
+        }
+        let served = handle.fetch(&field.name).unwrap();
+        let offline = offline_decode(&engine, std::slice::from_ref(&field));
+        assert_eq!(served.data, offline[0].data, "{}", field.name);
+    }
+
+    let report = svc.shutdown();
+    assert_eq!(report.rejected, busy);
+    assert!(report.queue_peak <= 2, "admission bound held");
+    assert_eq!(report.errors, 0);
+}
+
+#[test]
+fn concurrent_readers_share_a_cached_archive_byte_identically() {
+    let engine = engine();
+    let fields = fields(4, 94);
+    let path = std::env::temp_dir().join("adaptivec_service_e2e_cached.adaptivec2");
+    {
+        let sink = std::io::BufWriter::new(std::fs::File::create(&path).unwrap());
+        engine
+            .compress_chunked_to(&fields, Policy::RateDistortion, EB, CHUNK, sink)
+            .unwrap();
+    }
+
+    // One pread file source behind one LRU cache, shared by N threads
+    // through one reader and one engine.
+    let file = Arc::new(FileSource::open(&path).unwrap());
+    let cached = Arc::new(CachedSource::new(file, 64 << 20));
+    let reader = ContainerReader::from_source(cached.clone()).unwrap();
+    let baseline = engine.load_reader(&reader).unwrap();
+    let total_chunks: usize = reader.fields.iter().map(|f| f.chunks.len()).sum();
+    assert!(total_chunks > fields.len(), "chunked archive expected");
+    let (h0, m0) = cached.stats();
+    assert!(m0 > 0, "the warmup pass reads through the cache");
+
+    let threads = 4usize;
+    let iters = 3usize;
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let engine = &engine;
+            let reader = &reader;
+            let baseline = &baseline;
+            scope.spawn(move || {
+                for _ in 0..iters {
+                    for expect in baseline {
+                        let got = engine.load_field(reader, &expect.name).unwrap();
+                        assert_eq!(got.dims, expect.dims, "{}", expect.name);
+                        assert_eq!(
+                            got.data, expect.data,
+                            "{}: concurrent load diverged",
+                            expect.name
+                        );
+                    }
+                }
+            });
+        }
+    });
+
+    // Coherent cache accounting: the hammer phase was all hits (the
+    // warm cache holds every chunk range), one per chunk decode.
+    let (h1, m1) = cached.stats();
+    assert_eq!(m1, m0, "no new misses once warm");
+    assert_eq!(
+        h1 - h0,
+        (threads * iters * total_chunks) as u64,
+        "every concurrent chunk read must be served by the cache"
+    );
+    std::fs::remove_file(&path).ok();
+}
