@@ -1,12 +1,23 @@
 //! Hot-path microbenchmarks for the §Perf optimization loop:
 //! per-stage throughput of both codecs and the estimator, in MB/s,
-//! plus coordinator scaling. Run before/after every perf change.
+//! plus coordinator scaling and the hardware-dispatch paths of
+//! DESIGN.md §13 (CRC backends, batch/SIMD kernels, sharded spill)
+//! with explicit before/after rows. Run before/after every perf
+//! change. CI smoke knobs: `ADAPTIVEC_BENCH_ITERS`,
+//! `ADAPTIVEC_BENCH_JSON=<path>` (JSON artifact with the per-backend
+//! records `crc_hw`/`crc_slice8`/`crc_bytewise`,
+//! `quantize_simd`/`quantize_scalar`, `sharded_spill`/`spill_single`).
 
-use adaptivec::bench_util::{bench, Table};
+use adaptivec::bench_util::{
+    bench, iters_override, scale_override, speedup, JsonReport, Table, Timing,
+};
 use adaptivec::baseline::Policy;
+use adaptivec::codec::crc32;
+use adaptivec::coordinator::spill::{SpillConfig, SpillStore};
 use adaptivec::engine::{Engine, EngineConfig};
 use adaptivec::data::{atm, hurricane, Dataset};
 use adaptivec::estimator::selector::{AutoSelector, SelectorConfig};
+use adaptivec::sz::kernels;
 use adaptivec::sz::SzCompressor;
 use adaptivec::zfp::ZfpCompressor;
 
@@ -14,7 +25,159 @@ fn mbps(bytes: usize, secs: f64) -> String {
     format!("{:.1}", bytes as f64 / secs / 1e6)
 }
 
+fn gbps(bytes: usize, tm: &Timing) -> String {
+    format!("{:.2}", bytes as f64 / tm.mean_secs() / 1e9)
+}
+
+/// Hardware-dispatch hot paths: each row pairs the portable reference
+/// ("before") with the dispatched backend ("after") on identical
+/// inputs, asserting output equality before timing — the bench is a
+/// cheap differential test as well as a throughput meter.
+fn hardware_paths(json: &mut JsonReport) {
+    let mut t = Table::new(&["path", "backend", "time", "GB/s", "speedup"]);
+
+    // --- CRC32 backends over a payload-sized buffer ----------------
+    let buf: Vec<u8> = (0..(16usize << 20)).map(|i| (i.wrapping_mul(31) >> 3) as u8).collect();
+    let d_byte = crc32::update_bytewise(!0, &buf);
+    assert_eq!(crc32::update_slice8(!0, &buf), d_byte, "slice8 digest mismatch");
+    if let Some(d_hw) = crc32::update_hw(!0, &buf) {
+        assert_eq!(d_hw, d_byte, "hw digest mismatch");
+    }
+
+    let tm_byte = bench(1, iters_override(5), || crc32::update_bytewise(!0, &buf));
+    json.record("crc_bytewise", tm_byte);
+    t.row(&[
+        "crc32".into(),
+        "bytewise (reference)".into(),
+        format!("{tm_byte}"),
+        gbps(buf.len(), &tm_byte),
+        "1.00x".into(),
+    ]);
+    let tm_s8 = bench(1, iters_override(5), || crc32::update_slice8(!0, &buf));
+    json.record("crc_slice8", tm_s8);
+    t.row(&[
+        "crc32".into(),
+        "slice-by-8 (portable)".into(),
+        format!("{tm_s8}"),
+        gbps(buf.len(), &tm_s8),
+        speedup(&tm_byte, &tm_s8),
+    ]);
+    // When PCLMULQDQ is unavailable the dispatched path IS slice8; the
+    // record still lands so the perf trajectory stays grep-able.
+    let tm_hw = bench(1, iters_override(5), || {
+        crc32::update_hw(!0, &buf).unwrap_or_else(|| crc32::update_slice8(!0, &buf))
+    });
+    json.record("crc_hw", tm_hw);
+    t.row(&[
+        "crc32".into(),
+        format!("dispatched ({})", crc32::active_backend().name()),
+        format!("{tm_hw}"),
+        gbps(buf.len(), &tm_hw),
+        speedup(&tm_s8, &tm_hw),
+    ]);
+
+    // --- quantizer/Lorenzo prediction-error kernels ----------------
+    // 2D original-neighbor transform (the estimator's Stage-I shape):
+    // row kernels vs the per-row scalar reference on the same field.
+    let (ny, nx) = (1024usize, 2048usize);
+    let field: Vec<f32> = (0..ny * nx)
+        .map(|i| ((i % nx) as f32 * 1e-3).sin() + (i / nx) as f32 * 1e-3)
+        .collect();
+    let zeros = vec![0.0f32; nx];
+    let run_rows = |scalar: bool, out: &mut [f32]| {
+        for y in 0..ny {
+            let row = &field[y * nx..(y + 1) * nx];
+            let prev: &[f32] = if y > 0 { &field[(y - 1) * nx..] } else { &zeros };
+            let o = &mut out[y * nx..(y + 1) * nx];
+            if scalar {
+                kernels::row_errors_2d_scalar(row, prev, o);
+            } else {
+                kernels::row_errors_2d(row, prev, o);
+            }
+        }
+    };
+    let raw = ny * nx * 4;
+    let mut out_a = vec![0.0f32; ny * nx];
+    let mut out_b = vec![0.0f32; ny * nx];
+    run_rows(false, &mut out_a);
+    run_rows(true, &mut out_b);
+    assert!(
+        out_a.iter().zip(&out_b).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "kernel outputs diverge"
+    );
+    let tm_scalar = bench(1, iters_override(5), || {
+        run_rows(true, &mut out_b);
+        out_b[0]
+    });
+    json.record("quantize_scalar", tm_scalar);
+    t.row(&[
+        "lorenzo errors 2d".into(),
+        "scalar rows (reference)".into(),
+        format!("{tm_scalar}"),
+        gbps(raw, &tm_scalar),
+        "1.00x".into(),
+    ]);
+    let tm_simd = bench(1, iters_override(5), || {
+        run_rows(false, &mut out_a);
+        out_a[0]
+    });
+    json.record("quantize_simd", tm_simd);
+    t.row(&[
+        "lorenzo errors 2d".into(),
+        format!("dispatched ({})", kernels::active_kernel()),
+        format!("{tm_simd}"),
+        gbps(raw, &tm_simd),
+        speedup(&tm_scalar, &tm_simd),
+    ]);
+
+    // --- spill slab appends: single mutex vs per-worker arenas -----
+    let payload = vec![0xA5u8; 8 << 10];
+    let (threads, appends) = (4usize, 512usize);
+    let spill_raw = threads * appends * payload.len();
+    let run_spill = |shards: usize| {
+        let store = SpillStore::new(SpillConfig {
+            mem_budget: usize::MAX,
+            dir: None,
+            shards,
+        });
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                s.spawn(|| {
+                    for _ in 0..appends {
+                        store.append(&payload).unwrap();
+                    }
+                });
+            }
+        });
+        assert_eq!(store.total_bytes(), spill_raw as u64);
+        store.slab_count()
+    };
+    let tm_one = bench(1, iters_override(3), || run_spill(1));
+    json.record("spill_single", tm_one);
+    t.row(&[
+        format!("spill append x{threads} threads"),
+        "1 shard (single mutex)".into(),
+        format!("{tm_one}"),
+        gbps(spill_raw, &tm_one),
+        "1.00x".into(),
+    ]);
+    let tm_sharded = bench(1, iters_override(3), || run_spill(0));
+    json.record("sharded_spill", tm_sharded);
+    t.row(&[
+        format!("spill append x{threads} threads"),
+        format!("{} shards (per-worker)", adaptivec::coordinator::spill::default_shards()),
+        format!("{tm_sharded}"),
+        gbps(spill_raw, &tm_sharded),
+        speedup(&tm_one, &tm_sharded),
+    ]);
+
+    t.print("hardware dispatch hot paths (before/after per backend)");
+}
+
 fn main() {
+    let mut json = JsonReport::new();
+    hardware_paths(&mut json);
+
     let mut t = Table::new(&["stage", "field", "time", "MB/s"]);
 
     for f in [atm::generate_field(2018, 0), hurricane::generate_field(2018, 7)] {
@@ -23,34 +186,34 @@ fn main() {
         let sz = SzCompressor::default();
         let zfp = ZfpCompressor::default();
 
-        let tm = bench(1, 5, || sz.compress(&f.data, f.dims, eb).unwrap());
+        let tm = bench(1, iters_override(5), || sz.compress(&f.data, f.dims, eb).unwrap());
         t.row(&["SZ compress".into(), f.name.clone(), format!("{tm}"), mbps(f.raw_bytes(), tm.mean_secs())]);
 
         let comp = sz.compress(&f.data, f.dims, eb).unwrap();
-        let tm = bench(1, 5, || sz.decompress(&comp).unwrap());
+        let tm = bench(1, iters_override(5), || sz.decompress(&comp).unwrap());
         t.row(&["SZ decompress".into(), f.name.clone(), format!("{tm}"), mbps(f.raw_bytes(), tm.mean_secs())]);
 
-        let tm = bench(1, 5, || zfp.compress(&f.data, f.dims, eb).unwrap());
+        let tm = bench(1, iters_override(5), || zfp.compress(&f.data, f.dims, eb).unwrap());
         t.row(&["ZFP compress".into(), f.name.clone(), format!("{tm}"), mbps(f.raw_bytes(), tm.mean_secs())]);
 
         let zcomp = zfp.compress(&f.data, f.dims, eb).unwrap();
-        let tm = bench(1, 5, || zfp.decompress(&zcomp).unwrap());
+        let tm = bench(1, iters_override(5), || zfp.decompress(&zcomp).unwrap());
         t.row(&["ZFP decompress".into(), f.name.clone(), format!("{tm}"), mbps(f.raw_bytes(), tm.mean_secs())]);
 
         let sel = AutoSelector::new(SelectorConfig::default());
-        let tm = bench(1, 5, || sel.select_abs(&f, eb, vr).unwrap());
+        let tm = bench(1, iters_override(5), || sel.select_abs(&f, eb, vr).unwrap());
         t.row(&["estimate (5%)".into(), f.name.clone(), format!("{tm}"), mbps(f.raw_bytes(), tm.mean_secs())]);
     }
     t.print("hot paths (single core)");
 
     // Engine scaling on ATM.
-    let fields = Dataset::Atm.generate(2018, 1);
+    let fields = Dataset::Atm.generate(2018, scale_override(1));
     let raw: usize = fields.iter().map(|f| f.raw_bytes()).sum();
     let mut t = Table::new(&["workers", "wall time", "MB/s", "speedup"]);
     let mut base = 0.0;
     for w in [1usize, 2, 4, 8] {
         let engine = Engine::new(EngineConfig { workers: w, ..EngineConfig::default() });
-        let tm = bench(0, 2, || engine.run(&fields, Policy::RateDistortion, 1e-4).unwrap());
+        let tm = bench(0, iters_override(2), || engine.run(&fields, Policy::RateDistortion, 1e-4).unwrap());
         if w == 1 {
             base = tm.mean_secs();
         }
@@ -62,4 +225,6 @@ fn main() {
         ]);
     }
     t.print("engine scaling (ATM, 79 fields, policy=ours)");
+
+    json.write_env().expect("write bench JSON");
 }

@@ -9,7 +9,8 @@
 //! * streamed write plans — single-pass spill (compress once, splice
 //!   from scratch) vs two-pass recompress (compress twice), the
 //!   headline write-path comparison, plus scratch accounting;
-//! * pread partial reads, raw vs through the LRU `CachedSource`.
+//! * pread partial reads, raw vs through the LRU `CachedSource` vs
+//!   the zero-copy mmap source (`mmap_load` vs `pread_load` records).
 //!
 //! CI smoke knobs (`bench-smoke` job): `ADAPTIVEC_BENCH_ITERS` caps
 //! iterations, `ADAPTIVEC_BENCH_SCALE` shrinks the dataset, and
@@ -20,7 +21,7 @@ use adaptivec::baseline::Policy;
 use adaptivec::bench_util::{
     bench, bytes_h, iters_override, scale_override, speedup, JsonReport, Table,
 };
-use adaptivec::coordinator::store::ContainerReader;
+use adaptivec::coordinator::store::{CachedSource, ContainerReader, FileSource};
 use adaptivec::data::Dataset;
 use adaptivec::engine::{Engine, EngineConfig, WritePlan};
 
@@ -233,9 +234,16 @@ fn main() {
         format!("{tm_pread_field}"),
         speedup(&tm_mem_field, &tm_pread_field),
     ]);
+    json.record("pread_load", tm_pread_field);
     // Hot repeated loads through the LRU chunk-range cache: after the
     // warmup iteration every chunk read is a memory copy, no syscall.
-    let cached_reader = ContainerReader::open_cached(&stream_path, 64 << 20).unwrap();
+    // Built explicitly (FileSource + CachedSource) because
+    // `open_cached` now prefers the mmap source — benched next.
+    let cached_reader = {
+        use std::sync::Arc;
+        let file = Arc::new(FileSource::open(&stream_path).unwrap());
+        ContainerReader::from_source(Arc::new(CachedSource::new(file, 64 << 20))).unwrap()
+    };
     let tm_cached_field =
         bench(1, iters_override(5), || engine.load_field(&cached_reader, &target).unwrap());
     json.record("v2_partial_decode_cached_pread", tm_cached_field);
@@ -243,6 +251,19 @@ fn main() {
         format!("load_field '{target}' (cached pread)"),
         format!("{tm_cached_field}"),
         speedup(&tm_mem_field, &tm_cached_field),
+    ]);
+    // mmap-backed source: chunk decodes borrow the mapping zero-copy
+    // (DESIGN.md §13), so the per-hit copy of the LRU cache vanishes.
+    // `open_cached` dispatches here by default on 64-bit unix;
+    // `ADAPTIVEC_NO_MMAP=1` pins the pread + cache path above.
+    let mmap_reader = ContainerReader::open_cached(&stream_path, 64 << 20).unwrap();
+    let tm_mmap_field =
+        bench(1, iters_override(5), || engine.load_field(&mmap_reader, &target).unwrap());
+    json.record("mmap_load", tm_mmap_field);
+    t.row(&[
+        format!("load_field '{target}' (open_cached: mmap)"),
+        format!("{tm_mmap_field}"),
+        speedup(&tm_mem_field, &tm_mmap_field),
     ]);
     t.print("store_throughput — pread-backed partial reads");
     std::fs::remove_dir_all(&tmp).ok();

@@ -343,7 +343,8 @@ mod tests {
         let mut coord = Coordinator::new(SelectorConfig::default(), 2);
         let dir = std::env::temp_dir().join("adaptivec_coord_spill_test");
         std::fs::create_dir_all(&dir).unwrap();
-        coord.spill = spill::SpillConfig { mem_budget: 256, dir: Some(dir.clone()) };
+        coord.spill =
+            spill::SpillConfig { mem_budget: 256, dir: Some(dir.clone()), shards: 0 };
         let fields = small_fields(2);
         let buffered = coord
             .run_chunked(&fields, Policy::RateDistortion, 1e-3, 2048)

@@ -4,80 +4,142 @@
 //! known the coordinator splices the slabs into the real sink in
 //! *declared* order. Small runs never touch disk — slabs accumulate in
 //! memory until [`SpillConfig::mem_budget`] is exceeded, and only then
-//! does the store create a temp file and migrate. The temp file is
-//! deleted on [`Drop`], so every error path (sink failure, worker
-//! error, panic unwind) cleans up without bookkeeping at the call
-//! sites.
+//! does a shard create a temp file and migrate. Temp files are deleted
+//! on [`Drop`], so every error path (sink failure, worker error, panic
+//! unwind) cleans up without bookkeeping at the call sites.
 //!
-//! Appends are `&self` (a mutex serializes them) so pool workers can
-//! push payloads concurrently; compression dominates each job, so the
-//! short append critical section is not a scaling hazard. File writes
-//! go through a write-behind buffer flushed in large sequential
-//! extents; reads (the splice pass) flush first and then read each
-//! slab exactly once.
+//! The store is **sharded** (DESIGN.md §13): appends from different
+//! worker threads land in per-worker slab arenas, each with its own
+//! mutex and scratch file, so the append critical section never
+//! serializes the pool at high worker counts. A [`SlabRef`] names its
+//! shard, so the splice pass reads slabs in declared order regardless
+//! of which arena holds them — the container bytes are identical to
+//! the single-arena layout because splice order, not append order,
+//! defines the output. Within a shard, file writes go through a
+//! write-behind buffer flushed in large sequential extents; spilled
+//! reads use positioned I/O outside the shard lock (the flushed prefix
+//! of a shard file is immutable), so concurrent readers do not
+//! serialize on each other's disk time.
 
 use crate::{Error, Result};
-use std::io::{Read, Seek, SeekFrom, Write};
+use std::io::{Seek, SeekFrom, Write};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
 
 /// Default in-memory budget before slabs spill to a temp file (8 MiB —
 /// comfortably above a whole small-run archive, far below an archive
-/// worth streaming).
+/// worth streaming). The budget is global across shards.
 pub const DEFAULT_SPILL_MEM_BUDGET: usize = 8 << 20;
 
-/// Write-behind buffer size for the spill file: appends gather into
-/// extents of this size so the scratch device sees large sequential
-/// writes, not per-chunk syscalls.
+/// Write-behind buffer size for a shard's spill file: appends gather
+/// into extents of this size so the scratch device sees large
+/// sequential writes, not per-chunk syscalls.
 const WRITE_BEHIND: usize = 256 << 10;
+
+/// Hard cap on auto-selected shard count: beyond this, arenas stop
+/// buying contention relief and only cost scratch-file descriptors.
+const MAX_AUTO_SHARDS: usize = 16;
+
+/// Shard count used when [`SpillConfig::shards`] is 0: one arena per
+/// available CPU, capped.
+pub fn default_shards() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(1, MAX_AUTO_SHARDS)
+}
 
 /// Where (and whether) payload slabs may spill.
 #[derive(Clone, Debug)]
 pub struct SpillConfig {
-    /// Bytes of slab data kept in memory before the store migrates to
-    /// a temp file. `usize::MAX` pins the store fully in memory.
+    /// Bytes of slab data kept in memory (across all shards) before
+    /// overflowing shards migrate to temp files. `usize::MAX` pins the
+    /// store fully in memory.
     pub mem_budget: usize,
-    /// Directory for the scratch file; `None` = [`std::env::temp_dir`].
+    /// Directory for scratch files; `None` = [`std::env::temp_dir`].
     pub dir: Option<PathBuf>,
+    /// Number of independent slab arenas appends shard across.
+    /// 0 = auto ([`default_shards`]); 1 reproduces the old
+    /// single-mutex behavior exactly.
+    pub shards: usize,
 }
 
 impl Default for SpillConfig {
     fn default() -> Self {
-        SpillConfig { mem_budget: DEFAULT_SPILL_MEM_BUDGET, dir: None }
+        SpillConfig { mem_budget: DEFAULT_SPILL_MEM_BUDGET, dir: None, shards: 0 }
     }
 }
 
-/// One appended slab: its byte range in the store's logical stream.
+/// One appended slab: its byte range in the logical stream of the
+/// shard that holds it.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct SlabRef {
+    /// Arena that holds the slab.
+    pub shard: u32,
     pub offset: u64,
     pub len: u64,
 }
 
-/// Backing state: all slabs live either in `mem` or, after migration,
-/// in `file` (never split across the two).
-struct Inner {
+/// Per-shard backing state: all of a shard's slabs live either in
+/// `mem` or, after migration, in the shard file (never split across
+/// the two).
+struct ShardMeta {
     /// In-memory slab bytes (empty once spilled).
     mem: Vec<u8>,
-    /// Scratch file, created lazily on first overflow.
-    file: Option<std::fs::File>,
     /// Bytes buffered for the file but not yet written through.
     wbuf: Vec<u8>,
-    /// Bytes durably in the file (excludes `wbuf`).
+    /// Bytes durably in the file (excludes `wbuf`). Only grows, and
+    /// flushes never rewrite `[0, flushed)` — this is what lets
+    /// spilled reads drop the lock before touching the disk.
     flushed: u64,
-    /// Logical length of the slab stream (mem or file + wbuf).
+    /// Logical length of the shard's slab stream (mem or file + wbuf).
     total: u64,
+    /// Path of the shard's scratch file once created (delete-on-drop).
+    path: Option<PathBuf>,
 }
 
-/// Append-only slab allocator with an in-memory fast path and a
-/// delete-on-drop temp-file overflow.
+struct Shard {
+    meta: Mutex<ShardMeta>,
+    /// Scratch file, set once on first overflow. Lives outside the
+    /// metadata mutex so positioned reads of the immutable flushed
+    /// prefix don't hold it.
+    file: OnceLock<std::fs::File>,
+}
+
+impl Shard {
+    fn new() -> Shard {
+        Shard {
+            meta: Mutex::new(ShardMeta {
+                mem: Vec::new(),
+                wbuf: Vec::new(),
+                flushed: 0,
+                total: 0,
+                path: None,
+            }),
+            file: OnceLock::new(),
+        }
+    }
+}
+
+/// Process-wide worker sequence counter backing [`WORKER_SEQ`].
+static NEXT_WORKER_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Stable per-thread worker number: each pool worker keeps hitting
+    /// the same shard, so every arena sees an append stream as
+    /// sequential as the old single-mutex store's.
+    static WORKER_SEQ: usize = NEXT_WORKER_SEQ.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Append-only slab allocator with an in-memory fast path, per-worker
+/// arenas, and delete-on-drop temp-file overflow.
 pub struct SpillStore {
     cfg: SpillConfig,
-    inner: Mutex<Inner>,
-    /// Path of the scratch file once created (for delete-on-drop).
-    path: Mutex<Option<PathBuf>>,
+    shards: Vec<Shard>,
     slabs: AtomicU64,
+    /// Global in-memory byte count across shards (budget accounting).
+    mem_bytes: AtomicUsize,
 }
 
 impl std::fmt::Debug for SpillStore {
@@ -85,6 +147,7 @@ impl std::fmt::Debug for SpillStore {
         f.debug_struct("SpillStore")
             .field("total_bytes", &self.total_bytes())
             .field("slabs", &self.slab_count())
+            .field("shards", &self.shards.len())
             .field("spilled", &self.spilled())
             .finish()
     }
@@ -92,51 +155,64 @@ impl std::fmt::Debug for SpillStore {
 
 impl SpillStore {
     pub fn new(cfg: SpillConfig) -> SpillStore {
+        let n = if cfg.shards == 0 { default_shards() } else { cfg.shards };
         SpillStore {
             cfg,
-            inner: Mutex::new(Inner {
-                mem: Vec::new(),
-                file: None,
-                wbuf: Vec::new(),
-                flushed: 0,
-                total: 0,
-            }),
-            path: Mutex::new(None),
+            shards: (0..n).map(|_| Shard::new()).collect(),
             slabs: AtomicU64::new(0),
+            mem_bytes: AtomicUsize::new(0),
         }
     }
 
-    fn lock(&self) -> Result<std::sync::MutexGuard<'_, Inner>> {
-        self.inner
+    fn lock(shard: &Shard) -> Result<std::sync::MutexGuard<'_, ShardMeta>> {
+        shard
+            .meta
             .lock()
-            .map_err(|_| Error::Other("spill store lock poisoned".into()))
+            .map_err(|_| Error::Other("spill shard lock poisoned".into()))
+    }
+
+    /// Arena for the calling thread: a stable per-thread worker number
+    /// modulo the shard count, so a fixed pool spreads across arenas
+    /// and a single thread always appends sequentially to one.
+    fn shard_for_this_thread(&self) -> usize {
+        WORKER_SEQ.with(|s| *s) % self.shards.len()
     }
 
     /// Append one finished payload; returns its slab. Thread-safe —
-    /// pool workers append in completion order.
+    /// pool workers append in completion order, each to its own arena,
+    /// so appends from different workers don't contend.
     pub fn append(&self, bytes: &[u8]) -> Result<SlabRef> {
-        let mut inner = self.lock()?;
-        let offset = inner.total;
-        if inner.file.is_none() && inner.mem.len() + bytes.len() <= self.cfg.mem_budget {
-            inner.mem.extend_from_slice(bytes);
-        } else {
-            if inner.file.is_none() {
-                self.create_file(&mut inner)?;
+        let idx = self.shard_for_this_thread();
+        let shard = &self.shards[idx];
+        let mut meta = Self::lock(shard)?;
+        let offset = meta.total;
+        if shard.file.get().is_none() {
+            let claimed = self.mem_bytes.fetch_add(bytes.len(), Ordering::Relaxed);
+            if claimed.saturating_add(bytes.len()) <= self.cfg.mem_budget {
+                meta.mem.extend_from_slice(bytes);
+            } else {
+                // Over budget: this shard migrates to its scratch file
+                // (releasing its share of the budget); other shards
+                // keep their fast path until they overflow themselves.
+                self.mem_bytes.fetch_sub(bytes.len(), Ordering::Relaxed);
+                self.create_file(shard, &mut meta)?;
+                meta.wbuf.extend_from_slice(bytes);
             }
-            inner.wbuf.extend_from_slice(bytes);
-            if inner.wbuf.len() >= WRITE_BEHIND {
-                Self::flush(&mut inner)?;
+        } else {
+            meta.wbuf.extend_from_slice(bytes);
+            if meta.wbuf.len() >= WRITE_BEHIND {
+                Self::flush(shard, &mut meta)?;
             }
         }
-        inner.total += bytes.len() as u64;
+        meta.total += bytes.len() as u64;
         self.slabs.fetch_add(1, Ordering::Relaxed);
-        Ok(SlabRef { offset, len: bytes.len() as u64 })
+        Ok(SlabRef { shard: idx as u32, offset, len: bytes.len() as u64 })
     }
 
-    /// First overflow: create the scratch file and migrate the
-    /// in-memory prefix into the write-behind buffer, so the logical
-    /// stream stays a single contiguous file image.
-    fn create_file(&self, inner: &mut Inner) -> Result<()> {
+    /// First overflow of a shard: create its scratch file and migrate
+    /// the in-memory prefix into the write-behind buffer, so the
+    /// shard's logical stream stays a single contiguous file image.
+    fn create_file(&self, shard: &Shard, meta: &mut ShardMeta) -> Result<()> {
         let dir = self.cfg.dir.clone().unwrap_or_else(std::env::temp_dir);
         static SEQ: AtomicU64 = AtomicU64::new(0);
         let name = format!(
@@ -150,58 +226,109 @@ impl SpillStore {
             .write(true)
             .create_new(true)
             .open(&path)?;
-        inner.file = Some(file);
-        inner.wbuf = std::mem::take(&mut inner.mem);
-        *self
-            .path
-            .lock()
-            .map_err(|_| Error::Other("spill path lock poisoned".into()))? = Some(path);
+        shard
+            .file
+            .set(file)
+            .map_err(|_| Error::Other("spill shard scratch file created twice".into()))?;
+        meta.path = Some(path);
+        let migrated = std::mem::take(&mut meta.mem);
+        self.mem_bytes.fetch_sub(migrated.len(), Ordering::Relaxed);
+        meta.wbuf = migrated;
         Ok(())
     }
 
-    /// Write the write-behind buffer through to the file (appends go
-    /// at the logical end even if a read seeked elsewhere).
-    fn flush(inner: &mut Inner) -> Result<()> {
-        if inner.wbuf.is_empty() {
+    /// Write the shard's write-behind buffer through to its file.
+    /// Always called under the shard lock; writes land at the logical
+    /// end `[flushed, ..)`, never rewriting already-flushed bytes.
+    fn flush(shard: &Shard, meta: &mut ShardMeta) -> Result<()> {
+        if meta.wbuf.is_empty() {
             return Ok(());
         }
-        let file = inner.file.as_mut().expect("flush only after spill");
-        file.seek(SeekFrom::Start(inner.flushed))?;
-        file.write_all(&inner.wbuf)?;
-        inner.flushed += inner.wbuf.len() as u64;
-        inner.wbuf.clear();
+        let mut file = shard.file.get().expect("flush only after spill");
+        file.seek(SeekFrom::Start(meta.flushed))?;
+        file.write_all(&meta.wbuf)?;
+        meta.flushed += meta.wbuf.len() as u64;
+        meta.wbuf.clear();
         Ok(())
     }
 
     /// Read one slab back into `buf` (resized to the slab length).
     /// Used by the splice pass, which reads each slab exactly once in
-    /// declared order.
+    /// declared order. The shard lock is scoped to metadata lookup
+    /// (and any needed flush); spilled-file I/O happens after it is
+    /// released, so concurrent readers overlap their disk time.
     pub fn read_slab(&self, slab: SlabRef, buf: &mut Vec<u8>) -> Result<()> {
-        let mut inner = self.lock()?;
+        let shard = self.shards.get(slab.shard as usize).ok_or_else(|| {
+            Error::InvalidArg(format!(
+                "slab shard {} out of range of {}-shard spill store",
+                slab.shard,
+                self.shards.len()
+            ))
+        })?;
+        let mut meta = Self::lock(shard)?;
         let (start, end) = (slab.offset, slab.offset.checked_add(slab.len));
-        let end = end
-            .filter(|&e| e <= inner.total)
-            .ok_or_else(|| Error::InvalidArg(format!(
-                "slab [{start}, +{}) out of range of {}-byte spill store",
-                slab.len, inner.total
-            )))?;
+        let end = end.filter(|&e| e <= meta.total).ok_or_else(|| {
+            Error::InvalidArg(format!(
+                "slab [{start}, +{}) out of range of {}-byte spill shard",
+                slab.len, meta.total
+            ))
+        })?;
         buf.clear();
         buf.resize(slab.len as usize, 0);
-        if inner.file.is_none() {
-            buf.copy_from_slice(&inner.mem[start as usize..end as usize]);
+        if shard.file.get().is_none() {
+            buf.copy_from_slice(&meta.mem[start as usize..end as usize]);
             return Ok(());
         }
-        Self::flush(&mut inner)?;
-        let file = inner.file.as_mut().expect("spilled store has a file");
-        file.seek(SeekFrom::Start(start))?;
+        if end > meta.flushed {
+            Self::flush(shard, &mut meta)?;
+        }
+        Self::read_spilled(shard, meta, start, buf)
+    }
+
+    /// Positioned read of a spilled, already-flushed range.
+    ///
+    /// Unix: `flushed` only grows and flushes never rewrite
+    /// `[0, flushed)`, so once the requested range is durable a pread
+    /// cannot observe a concurrent append/flush — the metadata lock is
+    /// dropped *before* the syscall and readers don't serialize.
+    #[cfg(unix)]
+    fn read_spilled(
+        shard: &Shard,
+        meta: std::sync::MutexGuard<'_, ShardMeta>,
+        offset: u64,
+        buf: &mut [u8],
+    ) -> Result<()> {
+        drop(meta);
+        use std::os::unix::fs::FileExt;
+        let file = shard.file.get().expect("spilled shard has a file");
+        file.read_exact_at(buf, offset)?;
+        Ok(())
+    }
+
+    /// Non-unix fallback: no pread, so the shared cursor forces the
+    /// read to stay under the shard lock (flush also seeks it).
+    #[cfg(not(unix))]
+    fn read_spilled(
+        shard: &Shard,
+        meta: std::sync::MutexGuard<'_, ShardMeta>,
+        offset: u64,
+        buf: &mut [u8],
+    ) -> Result<()> {
+        use std::io::Read;
+        let _hold_cursor = meta;
+        let mut file = shard.file.get().expect("spilled shard has a file");
+        file.seek(SeekFrom::Start(offset))?;
         file.read_exact(buf)?;
         Ok(())
     }
 
-    /// Logical bytes appended so far — the scratch-space high-water
-    /// mark the streamed report records.
+    /// Logical bytes appended so far across all shards — the
+    /// scratch-space high-water mark the streamed report records.
     pub fn total_bytes(&self) -> u64 {
-        self.lock().map(|i| i.total).unwrap_or(0)
+        self.shards
+            .iter()
+            .map(|s| Self::lock(s).map(|m| m.total).unwrap_or(0))
+            .sum()
     }
 
     /// Number of slabs appended.
@@ -209,23 +336,39 @@ impl SpillStore {
         self.slabs.load(Ordering::Relaxed)
     }
 
-    /// Whether the store overflowed its memory budget into a file.
-    pub fn spilled(&self) -> bool {
-        self.lock().map(|i| i.file.is_some()).unwrap_or(false)
+    /// Number of independent slab arenas.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
     }
 
-    /// Path of the scratch file, if one was created.
+    /// Whether any shard overflowed its memory budget into a file.
+    pub fn spilled(&self) -> bool {
+        self.shards.iter().any(|s| s.file.get().is_some())
+    }
+
+    /// Path of the first shard scratch file, if any was created.
     pub fn scratch_path(&self) -> Option<PathBuf> {
-        self.path.lock().ok().and_then(|p| p.clone())
+        self.shards
+            .iter()
+            .find_map(|s| Self::lock(s).ok().and_then(|m| m.path.clone()))
+    }
+
+    /// Paths of every shard scratch file created so far.
+    pub fn scratch_paths(&self) -> Vec<PathBuf> {
+        self.shards
+            .iter()
+            .filter_map(|s| Self::lock(s).ok().and_then(|m| m.path.clone()))
+            .collect()
     }
 }
 
 impl Drop for SpillStore {
     fn drop(&mut self) {
-        // Delete the scratch file on every exit path — success, error
-        // propagation, and panic unwind alike.
-        if let Ok(mut p) = self.path.lock() {
-            if let Some(path) = p.take() {
+        // Delete every shard's scratch file on every exit path —
+        // success, error propagation, and panic unwind alike.
+        for shard in &mut self.shards {
+            let meta = shard.meta.get_mut().unwrap_or_else(|e| e.into_inner());
+            if let Some(path) = meta.path.take() {
                 std::fs::remove_file(path).ok();
             }
         }
@@ -270,7 +413,7 @@ mod tests {
     fn in_memory_fast_path_never_creates_a_file() {
         let dir = std::env::temp_dir().join("adaptivec_spill_mem_test");
         std::fs::create_dir_all(&dir).unwrap();
-        let cfg = SpillConfig { mem_budget: 1 << 20, dir: Some(dir.clone()) };
+        let cfg = SpillConfig { mem_budget: 1 << 20, dir: Some(dir.clone()), shards: 0 };
         roundtrip(cfg, &slabs(40, 200));
         assert_eq!(std::fs::read_dir(&dir).unwrap().count(), 0, "no scratch file expected");
         std::fs::remove_dir_all(&dir).ok();
@@ -281,7 +424,7 @@ mod tests {
         let dir = std::env::temp_dir().join("adaptivec_spill_file_test");
         std::fs::create_dir_all(&dir).unwrap();
         {
-            let cfg = SpillConfig { mem_budget: 64, dir: Some(dir.clone()) };
+            let cfg = SpillConfig { mem_budget: 64, dir: Some(dir.clone()), shards: 0 };
             let store = SpillStore::new(cfg.clone());
             let data = slabs(30, 100);
             let refs: Vec<SlabRef> =
@@ -303,7 +446,7 @@ mod tests {
         assert_eq!(
             std::fs::read_dir(&dir).unwrap().count(),
             0,
-            "scratch file must be deleted on drop"
+            "scratch files must be deleted on drop"
         );
         std::fs::remove_dir_all(&dir).ok();
     }
@@ -312,7 +455,7 @@ mod tests {
     fn zero_budget_spills_immediately() {
         let dir = std::env::temp_dir().join("adaptivec_spill_zero_test");
         std::fs::create_dir_all(&dir).unwrap();
-        let cfg = SpillConfig { mem_budget: 0, dir: Some(dir.clone()) };
+        let cfg = SpillConfig { mem_budget: 0, dir: Some(dir.clone()), shards: 0 };
         {
             let store = SpillStore::new(cfg);
             let r = store.append(b"abc").unwrap();
@@ -327,12 +470,13 @@ mod tests {
     #[test]
     fn out_of_range_slab_is_err() {
         let store = SpillStore::new(SpillConfig::default());
-        store.append(b"xyz").unwrap();
+        let r = store.append(b"xyz").unwrap();
         let mut buf = Vec::new();
-        assert!(store.read_slab(SlabRef { offset: 1, len: 5 }, &mut buf).is_err());
+        assert!(store.read_slab(SlabRef { offset: 1, len: 5, ..r }, &mut buf).is_err());
         assert!(store
-            .read_slab(SlabRef { offset: u64::MAX, len: 1 }, &mut buf)
+            .read_slab(SlabRef { offset: u64::MAX, len: 1, ..r }, &mut buf)
             .is_err());
+        assert!(store.read_slab(SlabRef { shard: 9999, ..r }, &mut buf).is_err());
     }
 
     #[test]
@@ -340,6 +484,7 @@ mod tests {
         let store = std::sync::Arc::new(SpillStore::new(SpillConfig {
             mem_budget: 128,
             dir: None,
+            shards: 4,
         }));
         let mut handles = Vec::new();
         for t in 0..4u8 {
@@ -361,5 +506,63 @@ mod tests {
             }
         }
         assert_eq!(store.slab_count(), 200);
+        assert_eq!(store.shard_count(), 4);
+    }
+
+    #[test]
+    fn single_shard_reproduces_unsharded_layout() {
+        // With shards = 1 every slab lands in arena 0 at the same
+        // offsets the old single-mutex store produced.
+        let store = SpillStore::new(SpillConfig {
+            mem_budget: usize::MAX,
+            dir: None,
+            shards: 1,
+        });
+        let data = slabs(10, 64);
+        let mut expect_offset = 0u64;
+        for s in &data {
+            let r = store.append(s).unwrap();
+            assert_eq!(r.shard, 0);
+            assert_eq!(r.offset, expect_offset);
+            expect_offset += s.len() as u64;
+        }
+    }
+
+    #[test]
+    fn concurrent_spilled_readers_see_consistent_bytes() {
+        // Budget 0 forces every shard to spill; readers then hit the
+        // pread-outside-the-lock path while appends keep flushing.
+        let dir = std::env::temp_dir().join("adaptivec_spill_readers_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        {
+            let store = std::sync::Arc::new(SpillStore::new(SpillConfig {
+                mem_budget: 0,
+                dir: Some(dir.clone()),
+                shards: 2,
+            }));
+            let data = slabs(60, 300);
+            let refs: Vec<SlabRef> =
+                data.iter().map(|s| store.append(s).unwrap()).collect();
+            assert!(store.spilled());
+            let mut handles = Vec::new();
+            for _ in 0..4 {
+                let store = store.clone();
+                let refs = refs.clone();
+                let data = data.clone();
+                handles.push(std::thread::spawn(move || {
+                    let mut buf = Vec::new();
+                    for _ in 0..5 {
+                        for (r, s) in refs.iter().zip(&data) {
+                            store.read_slab(*r, &mut buf).unwrap();
+                            assert_eq!(&buf, s);
+                        }
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -635,6 +635,152 @@ impl ByteSource for FileSource {
     }
 }
 
+// ---------------------------------------------------------------------------
+// mmap-backed source (zero-copy chunk reads; zero-dep raw bindings)
+// ---------------------------------------------------------------------------
+
+/// Raw `mmap`/`munmap` bindings for 64-bit Unix — the same libc-free
+/// `extern "C"` route the ROADMAP prescribes for the reactor, so the
+/// zero-dependency policy holds. The `target_pointer_width = "64"`
+/// gate guarantees `off_t` is 64-bit (LP64), so the `i64` offset in
+/// the declaration matches the kernel ABI.
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod mmap_sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+}
+
+/// Whether mmap-backed sources are available on this target and not
+/// disabled via `ADAPTIVEC_NO_MMAP` (checked once per process, like
+/// the CRC backend pin in [`crate::codec::crc32`]).
+pub fn mmap_enabled() -> bool {
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    {
+        static ENABLED: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+        *ENABLED.get_or_init(|| std::env::var_os("ADAPTIVEC_NO_MMAP").is_none())
+    }
+    #[cfg(not(all(unix, target_pointer_width = "64")))]
+    {
+        false
+    }
+}
+
+/// mmap-backed [`ByteSource`]: the whole container file is mapped
+/// read-only/private, so [`ByteSource::slice`] hands out zero-copy
+/// borrows and `decode_chunk` feeds codecs straight from the page
+/// cache — no per-hit memcpy, no pread syscall, no LRU bookkeeping.
+///
+/// Safety argument (DESIGN.md §13): the mapping is `PROT_READ` +
+/// `MAP_PRIVATE` and container files are immutable once renamed into
+/// place — no writer in this codebase mutates a published container —
+/// so the mapped bytes are stable for the mapping's lifetime. An
+/// external truncation of the file could still fault a read (the POSIX
+/// mmap caveat); that is the same failure class as an external
+/// overwrite corrupting a pread, and the per-chunk CRC catches any
+/// bytes that do arrive.
+#[cfg(all(unix, target_pointer_width = "64"))]
+pub struct MmapSource {
+    ptr: *const u8,
+    len: usize,
+}
+
+// SAFETY: the mapping is read-only and never mutated through this
+// struct; `&self` access from any thread only loads immutable pages.
+#[cfg(all(unix, target_pointer_width = "64"))]
+unsafe impl Send for MmapSource {}
+#[cfg(all(unix, target_pointer_width = "64"))]
+unsafe impl Sync for MmapSource {}
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+impl MmapSource {
+    /// Map `path` read-only. Fails on empty files (POSIX rejects
+    /// zero-length mappings) — callers fall back to [`FileSource`].
+    pub fn open(path: impl AsRef<Path>) -> Result<MmapSource> {
+        use std::os::fd::AsRawFd;
+        let file = std::fs::File::open(path)?;
+        let len = usize::try_from(file.metadata()?.len())
+            .map_err(|_| Error::Other("file exceeds address space".into()))?;
+        if len == 0 {
+            return Err(Error::Other("cannot mmap an empty file".into()));
+        }
+        // SAFETY: `file` is a valid descriptor for `len` readable
+        // bytes; a fresh PROT_READ + MAP_PRIVATE mapping at a
+        // kernel-chosen address cannot alias Rust-owned memory.
+        let ptr = unsafe {
+            mmap_sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                mmap_sys::PROT_READ,
+                mmap_sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as usize == usize::MAX {
+            return Err(Error::Io(std::io::Error::last_os_error()));
+        }
+        // The descriptor can close here: POSIX keeps the mapping live
+        // until munmap.
+        Ok(MmapSource { ptr: ptr as *const u8, len })
+    }
+
+    /// The whole mapped file.
+    pub fn as_slice(&self) -> &[u8] {
+        // SAFETY: `ptr` is a live PROT_READ mapping of exactly `len`
+        // bytes, valid until the `munmap` in `Drop`.
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+}
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+impl Drop for MmapSource {
+    fn drop(&mut self) {
+        // SAFETY: exactly the range returned by the mmap in `open`;
+        // no borrow of the slice can outlive `self`.
+        unsafe {
+            mmap_sys::munmap(self.ptr.cast_mut().cast(), self.len);
+        }
+    }
+}
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+impl ByteSource for MmapSource {
+    fn len(&self) -> u64 {
+        self.len as u64
+    }
+
+    fn slice(&self, offset: u64, len: usize) -> Option<&[u8]> {
+        let start = usize::try_from(offset).ok()?;
+        self.as_slice().get(start..start.checked_add(len)?)
+    }
+
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<()> {
+        let bytes = self.slice(offset, buf.len()).ok_or_else(|| {
+            Error::Corrupt(format!(
+                "read [{offset}, +{}) past end of {}-byte mapping",
+                buf.len(),
+                self.len
+            ))
+        })?;
+        buf.copy_from_slice(bytes);
+        Ok(())
+    }
+}
+
 /// Zero-dep LRU byte-range cache over any [`ByteSource`]: repeated
 /// reads of the same `(offset, len)` range — the hot-chunk pattern of
 /// repeated `load_field`/`decode_chunk` calls — are served from memory
@@ -847,12 +993,31 @@ impl ContainerReader {
         Self::from_source(std::sync::Arc::new(FileSource::open(path)?))
     }
 
-    /// [`ContainerReader::open`] with an LRU chunk-range cache of
-    /// `capacity` bytes in front of the file, so hot repeated
-    /// `load_field`/`decode_chunk` reads skip pread syscalls.
+    /// [`ContainerReader::open`] tuned for hot repeated
+    /// `load_field`/`decode_chunk` reads. Where mmap is available (and
+    /// not disabled via `ADAPTIVEC_NO_MMAP`) the container is mapped
+    /// read-only and chunks decode zero-copy straight from the page
+    /// cache — dropping both the pread syscall and the per-hit memcpy
+    /// the LRU cache used to pay. Otherwise (non-Unix, 32-bit, mmap
+    /// failure, or opted out) it falls back to a [`FileSource`] behind
+    /// an LRU chunk-range cache of `capacity` bytes, exactly as
+    /// before.
     pub fn open_cached(path: impl AsRef<Path>, capacity: usize) -> Result<ContainerReader> {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        if mmap_enabled() {
+            if let Ok(m) = MmapSource::open(path.as_ref()) {
+                return Self::from_source(std::sync::Arc::new(m));
+            }
+        }
         let file = std::sync::Arc::new(FileSource::open(path)?);
         Self::from_source(std::sync::Arc::new(CachedSource::new(file, capacity)))
+    }
+
+    /// Open a container through an explicit [`MmapSource`] (no
+    /// fallback): zero-copy chunk decodes from the mapped file.
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    pub fn open_mmap(path: impl AsRef<Path>) -> Result<ContainerReader> {
+        Self::from_source(std::sync::Arc::new(MmapSource::open(path)?))
     }
 
     /// Parse a container's index from any [`ByteSource`].
@@ -1623,6 +1788,72 @@ mod tests {
         let a = cached.load_field(&reg, "b").unwrap();
         let b = plain.load_field(&reg, "b").unwrap();
         assert_eq!(a.data, b.data);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    #[test]
+    fn mmap_source_matches_pread_source_bytewise() {
+        let bytes = sample_v2().to_bytes();
+        let path = std::env::temp_dir().join("adaptivec_store_mmap_src_test.bin");
+        std::fs::write(&path, &bytes).unwrap();
+        let mapped = MmapSource::open(&path).unwrap();
+        let pread = FileSource::open(&path).unwrap();
+        assert_eq!(mapped.len(), pread.len());
+        assert_eq!(mapped.as_slice(), &bytes[..]);
+        // Sliding windows through both sources are byte-identical.
+        let mut a = vec![0u8; 7];
+        let mut b = vec![0u8; 7];
+        for off in (0..bytes.len().saturating_sub(7)).step_by(3) {
+            mapped.read_at(off as u64, &mut a).unwrap();
+            pread.read_at(off as u64, &mut b).unwrap();
+            assert_eq!(a, b, "window at {off}");
+        }
+        // The zero-copy borrow serves the same bytes without a copy.
+        let sl = mapped.slice(3, 20).unwrap();
+        assert_eq!(sl, &bytes[3..23]);
+        // Out-of-range reads fail on both, never fault.
+        let mut big = vec![0u8; bytes.len() + 1];
+        assert!(mapped.read_at(0, &mut big).is_err());
+        assert!(pread.read_at(0, &mut big).is_err());
+        assert!(mapped.slice(bytes.len() as u64 - 1, 2).is_none());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    #[test]
+    fn mmap_reader_decodes_identically() {
+        let bytes = sample_v2().to_bytes();
+        let path = std::env::temp_dir().join("adaptivec_store_mmap_reader_test.bin");
+        std::fs::write(&path, &bytes).unwrap();
+        let plain = ContainerReader::from_bytes(bytes).unwrap();
+        let mapped = ContainerReader::open_mmap(&path).unwrap();
+        assert_eq!(mapped.version, plain.version);
+        assert_eq!(mapped.fields, plain.fields);
+        let reg = CodecRegistry::default();
+        for (fi, f) in plain.fields.iter().enumerate() {
+            for ci in 0..f.chunks.len() {
+                assert_eq!(
+                    mapped.chunk_bytes(fi, ci).unwrap(),
+                    plain.chunk_bytes(fi, ci).unwrap()
+                );
+                let (da, _) = mapped.decode_chunk(&reg, fi, ci).unwrap();
+                let (db, _) = plain.decode_chunk(&reg, fi, ci).unwrap();
+                assert_eq!(da, db);
+            }
+        }
+        let a = mapped.load_field(&reg, "b").unwrap();
+        let b = plain.load_field(&reg, "b").unwrap();
+        assert_eq!(a.data, b.data);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    #[test]
+    fn mmap_rejects_empty_file() {
+        let path = std::env::temp_dir().join("adaptivec_store_mmap_empty_test.bin");
+        std::fs::write(&path, b"").unwrap();
+        assert!(MmapSource::open(&path).is_err());
         std::fs::remove_file(&path).ok();
     }
 

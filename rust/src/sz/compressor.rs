@@ -3,6 +3,7 @@
 //! (verified by property tests and by every round-trip in the benches).
 
 use super::huffman_stage;
+use super::kernels;
 use super::lorenzo;
 use super::quant::{LinearQuantizer, ESCAPE};
 use crate::codec::varint;
@@ -41,7 +42,30 @@ impl SzCompressor {
     }
 
     /// Compress `data` with an absolute error bound.
+    ///
+    /// The codec loop runs through the branch-light row kernels of
+    /// [`kernels`] (bit-identical to the per-point reference —
+    /// `ADAPTIVEC_SCALAR_KERNELS=1` pins the reference loops instead,
+    /// and the `kernel_equivalence` proptests compare the two).
     pub fn compress(&self, data: &[f32], dims: Dims, eb_abs: f64) -> Result<Vec<u8>> {
+        self.compress_with(data, dims, eb_abs, kernels::scalar_kernels_forced())
+    }
+
+    /// [`Self::compress`] pinned to the per-point reference loops —
+    /// the oracle the `kernel_equivalence` proptests compare against.
+    /// Output is bit-identical to [`Self::compress`] by construction
+    /// (and by test).
+    pub fn compress_reference(&self, data: &[f32], dims: Dims, eb_abs: f64) -> Result<Vec<u8>> {
+        self.compress_with(data, dims, eb_abs, true)
+    }
+
+    fn compress_with(
+        &self,
+        data: &[f32],
+        dims: Dims,
+        eb_abs: f64,
+        force_scalar: bool,
+    ) -> Result<Vec<u8>> {
         if eb_abs <= 0.0 || !eb_abs.is_finite() {
             return Err(Error::InvalidArg(format!("bad error bound {eb_abs}")));
         }
@@ -58,61 +82,12 @@ impl SzCompressor {
         let mut literals: Vec<u8> = Vec::new();
         let mut recon = vec![0.0f32; n];
 
-        // Single pass: predict from the reconstructed buffer, quantize
-        // the prediction error, write back the reconstruction.
-        let quantize_point = |i: usize, pred: f32, recon_i: &mut f32,
-                                  symbols: &mut Vec<u32>,
-                                  literals: &mut Vec<u8>| {
-            let x = data[i];
-            let err = x as f64 - pred as f64;
-            if let Some(sym) = q.quantize(err) {
-                let rec = (pred as f64 + q.reconstruct(sym)) as f32;
-                // f32 rounding may push past the bound near huge values;
-                // fall back to a literal then (exactly as SZ does).
-                if (rec as f64 - x as f64).abs() <= eb_abs {
-                    symbols.push(sym);
-                    *recon_i = rec;
-                    return;
-                }
-            }
-            symbols.push(ESCAPE);
-            literals.extend_from_slice(&x.to_le_bytes());
-            *recon_i = x;
-        };
-
-        match dims {
-            Dims::D1(_) => {
-                for i in 0..n {
-                    let pred = lorenzo::predict_1d(&recon, i);
-                    let mut r = 0.0;
-                    quantize_point(i, pred, &mut r, &mut symbols, &mut literals);
-                    recon[i] = r;
-                }
-            }
-            Dims::D2(ny, nx) => {
-                for y in 0..ny {
-                    for x in 0..nx {
-                        let i = y * nx + x;
-                        let pred = lorenzo::predict_2d(&recon, nx, y, x);
-                        let mut r = 0.0;
-                        quantize_point(i, pred, &mut r, &mut symbols, &mut literals);
-                        recon[i] = r;
-                    }
-                }
-            }
-            Dims::D3(nz, ny, nx) => {
-                for z in 0..nz {
-                    for y in 0..ny {
-                        for x in 0..nx {
-                            let i = (z * ny + y) * nx + x;
-                            let pred = lorenzo::predict_3d(&recon, ny, nx, z, y, x);
-                            let mut r = 0.0;
-                            quantize_point(i, pred, &mut r, &mut symbols, &mut literals);
-                            recon[i] = r;
-                        }
-                    }
-                }
-            }
+        if force_scalar {
+            Self::encode_points_scalar(
+                data, dims, &q, eb_abs, &mut symbols, &mut literals, &mut recon,
+            );
+        } else {
+            Self::encode_rows(data, dims, &q, eb_abs, &mut symbols, &mut literals, &mut recon);
         }
 
         // Stage III.
@@ -138,8 +113,155 @@ impl SzCompressor {
         Ok(out)
     }
 
+    /// Batched codec loop: one row-kernel call per row, with the
+    /// previous reconstructed rows pre-split out of `recon` so the
+    /// inner loops carry no per-point bounds checks or index math.
+    #[allow(clippy::too_many_arguments)]
+    fn encode_rows(
+        data: &[f32],
+        dims: Dims,
+        q: &LinearQuantizer,
+        eb_abs: f64,
+        symbols: &mut Vec<u32>,
+        literals: &mut Vec<u8>,
+        recon: &mut [f32],
+    ) {
+        match dims {
+            Dims::D1(_) => {
+                kernels::encode_row_1d(data, q, eb_abs, symbols, literals, recon);
+            }
+            Dims::D2(ny, nx) => {
+                for y in 0..ny {
+                    let (before, rest) = recon.split_at_mut(y * nx);
+                    let cur = &mut rest[..nx];
+                    let row = &data[y * nx..(y + 1) * nx];
+                    if y == 0 {
+                        kernels::encode_row_2d_first(row, q, eb_abs, symbols, literals, cur);
+                    } else {
+                        let prev = &before[(y - 1) * nx..];
+                        kernels::encode_row_2d(row, prev, q, eb_abs, symbols, literals, cur);
+                    }
+                }
+            }
+            Dims::D3(nz, ny, nx) => {
+                let sxy = ny * nx;
+                let zeros = vec![0.0f32; nx];
+                for z in 0..nz {
+                    for y in 0..ny {
+                        let start = (z * ny + y) * nx;
+                        let (before, rest) = recon.split_at_mut(start);
+                        let cur = &mut rest[..nx];
+                        let ym1: &[f32] =
+                            if y > 0 { &before[start - nx..] } else { &zeros };
+                        let zm1: &[f32] =
+                            if z > 0 { &before[start - sxy..] } else { &zeros };
+                        let zym1: &[f32] = if z > 0 && y > 0 {
+                            &before[start - sxy - nx..]
+                        } else {
+                            &zeros
+                        };
+                        kernels::encode_row_3d(
+                            &data[start..start + nx],
+                            ym1,
+                            zm1,
+                            zym1,
+                            q,
+                            eb_abs,
+                            symbols,
+                            literals,
+                            cur,
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Per-point reference codec loop — the pre-kernel formulation,
+    /// kept as the cross-checked scalar fallback
+    /// (`ADAPTIVEC_SCALAR_KERNELS=1`) and as the oracle for the
+    /// `kernel_equivalence` proptests.
+    #[allow(clippy::too_many_arguments)]
+    fn encode_points_scalar(
+        data: &[f32],
+        dims: Dims,
+        q: &LinearQuantizer,
+        eb_abs: f64,
+        symbols: &mut Vec<u32>,
+        literals: &mut Vec<u8>,
+        recon: &mut [f32],
+    ) {
+        let n = data.len();
+        // Single pass: predict from the reconstructed buffer, quantize
+        // the prediction error, write back the reconstruction.
+        let quantize_point = |i: usize, pred: f32, recon_i: &mut f32,
+                                  symbols: &mut Vec<u32>,
+                                  literals: &mut Vec<u8>| {
+            let x = data[i];
+            let err = x as f64 - pred as f64;
+            if let Some(sym) = q.quantize(err) {
+                let rec = (pred as f64 + q.reconstruct(sym)) as f32;
+                // f32 rounding may push past the bound near huge values;
+                // fall back to a literal then (exactly as SZ does).
+                if (rec as f64 - x as f64).abs() <= eb_abs {
+                    symbols.push(sym);
+                    *recon_i = rec;
+                    return;
+                }
+            }
+            symbols.push(ESCAPE);
+            literals.extend_from_slice(&x.to_le_bytes());
+            *recon_i = x;
+        };
+
+        match dims {
+            Dims::D1(_) => {
+                for i in 0..n {
+                    let pred = lorenzo::predict_1d(recon, i);
+                    let mut r = 0.0;
+                    quantize_point(i, pred, &mut r, symbols, literals);
+                    recon[i] = r;
+                }
+            }
+            Dims::D2(ny, nx) => {
+                for y in 0..ny {
+                    for x in 0..nx {
+                        let i = y * nx + x;
+                        let pred = lorenzo::predict_2d(recon, nx, y, x);
+                        let mut r = 0.0;
+                        quantize_point(i, pred, &mut r, symbols, literals);
+                        recon[i] = r;
+                    }
+                }
+            }
+            Dims::D3(nz, ny, nx) => {
+                for z in 0..nz {
+                    for y in 0..ny {
+                        for x in 0..nx {
+                            let i = (z * ny + y) * nx + x;
+                            let pred = lorenzo::predict_3d(recon, ny, nx, z, y, x);
+                            let mut r = 0.0;
+                            quantize_point(i, pred, &mut r, symbols, literals);
+                            recon[i] = r;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
     /// Decompress a stream produced by [`Self::compress`].
     pub fn decompress(&self, buf: &[u8]) -> Result<(Vec<f32>, Dims)> {
+        self.decompress_with(buf, kernels::scalar_kernels_forced())
+    }
+
+    /// [`Self::decompress`] pinned to the per-point reference loops —
+    /// the oracle the `kernel_equivalence` proptests compare against.
+    pub fn decompress_reference(&self, buf: &[u8]) -> Result<(Vec<f32>, Dims)> {
+        self.decompress_with(buf, true)
+    }
+
+    fn decompress_with(&self, buf: &[u8], force_scalar: bool) -> Result<(Vec<f32>, Dims)> {
         let mut pos = 0usize;
         let magic = varint::read_u64(buf, &mut pos)?;
         if magic != MAGIC as u64 {
@@ -176,23 +298,87 @@ impl SzCompressor {
 
         let q = LinearQuantizer::from_error_bound(eb_abs, capacity);
         let mut recon = vec![0.0f32; n];
-        let mut lit_pos = 0usize;
-        let mut next_literal = || -> Result<f32> {
-            if lit_pos + 4 > literals.len() {
-                return Err(Error::Corrupt("literal stream exhausted".into()));
-            }
-            let mut b = [0u8; 4];
-            b.copy_from_slice(&literals[lit_pos..lit_pos + 4]);
-            lit_pos += 4;
-            Ok(f32::from_le_bytes(b))
-        };
+        let mut lits = kernels::LiteralReader::new(&literals);
+        if force_scalar {
+            Self::decode_points_scalar(&symbols, dims, &q, &mut lits, &mut recon)?;
+        } else {
+            Self::decode_rows(&symbols, dims, &q, &mut lits, &mut recon)?;
+        }
+        Ok((recon, dims))
+    }
 
+    /// Batched decode loop (mirror of [`Self::encode_rows`]).
+    fn decode_rows(
+        symbols: &[u32],
+        dims: Dims,
+        q: &LinearQuantizer,
+        lits: &mut kernels::LiteralReader<'_>,
+        recon: &mut [f32],
+    ) -> Result<()> {
+        match dims {
+            Dims::D1(_) => kernels::decode_row_1d(symbols, q, lits, recon)?,
+            Dims::D2(ny, nx) => {
+                for y in 0..ny {
+                    let (before, rest) = recon.split_at_mut(y * nx);
+                    let cur = &mut rest[..nx];
+                    let syms = &symbols[y * nx..(y + 1) * nx];
+                    if y == 0 {
+                        kernels::decode_row_2d_first(syms, q, lits, cur)?;
+                    } else {
+                        let prev = &before[(y - 1) * nx..];
+                        kernels::decode_row_2d(syms, prev, q, lits, cur)?;
+                    }
+                }
+            }
+            Dims::D3(nz, ny, nx) => {
+                let sxy = ny * nx;
+                let zeros = vec![0.0f32; nx];
+                for z in 0..nz {
+                    for y in 0..ny {
+                        let start = (z * ny + y) * nx;
+                        let (before, rest) = recon.split_at_mut(start);
+                        let cur = &mut rest[..nx];
+                        let ym1: &[f32] =
+                            if y > 0 { &before[start - nx..] } else { &zeros };
+                        let zm1: &[f32] =
+                            if z > 0 { &before[start - sxy..] } else { &zeros };
+                        let zym1: &[f32] = if z > 0 && y > 0 {
+                            &before[start - sxy - nx..]
+                        } else {
+                            &zeros
+                        };
+                        kernels::decode_row_3d(
+                            &symbols[start..start + nx],
+                            ym1,
+                            zm1,
+                            zym1,
+                            q,
+                            lits,
+                            cur,
+                        )?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Per-point reference decode loop (the pre-kernel formulation) —
+    /// the `ADAPTIVEC_SCALAR_KERNELS=1` fallback and proptest oracle.
+    fn decode_points_scalar(
+        symbols: &[u32],
+        dims: Dims,
+        q: &LinearQuantizer,
+        lits: &mut kernels::LiteralReader<'_>,
+        recon: &mut [f32],
+    ) -> Result<()> {
+        let n = symbols.len();
         match dims {
             Dims::D1(_) => {
                 for i in 0..n {
-                    let pred = lorenzo::predict_1d(&recon, i);
+                    let pred = lorenzo::predict_1d(recon, i);
                     recon[i] = if symbols[i] == ESCAPE {
-                        next_literal()?
+                        lits.next()?
                     } else {
                         (pred as f64 + q.reconstruct(symbols[i])) as f32
                     };
@@ -202,9 +388,9 @@ impl SzCompressor {
                 for y in 0..ny {
                     for x in 0..nx {
                         let i = y * nx + x;
-                        let pred = lorenzo::predict_2d(&recon, nx, y, x);
+                        let pred = lorenzo::predict_2d(recon, nx, y, x);
                         recon[i] = if symbols[i] == ESCAPE {
-                            next_literal()?
+                            lits.next()?
                         } else {
                             (pred as f64 + q.reconstruct(symbols[i])) as f32
                         };
@@ -216,9 +402,9 @@ impl SzCompressor {
                     for y in 0..ny {
                         for x in 0..nx {
                             let i = (z * ny + y) * nx + x;
-                            let pred = lorenzo::predict_3d(&recon, ny, nx, z, y, x);
+                            let pred = lorenzo::predict_3d(recon, ny, nx, z, y, x);
                             recon[i] = if symbols[i] == ESCAPE {
-                                next_literal()?
+                                lits.next()?
                             } else {
                                 (pred as f64 + q.reconstruct(symbols[i])) as f32
                             };
@@ -227,7 +413,7 @@ impl SzCompressor {
                 }
             }
         }
-        Ok((recon, dims))
+        Ok(())
     }
 }
 

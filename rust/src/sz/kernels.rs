@@ -1,0 +1,594 @@
+//! Branch-light batch kernels for the SZ hot loops (DESIGN.md §13).
+//!
+//! The per-point closures in [`super::compressor`] hid two costs: a
+//! bounds-checked neighbor gather per point and a re-derived `(y, x)`
+//! decomposition per index. These kernels restructure both hot paths
+//! into row-span form:
+//!
+//! * **Codec rows** (`encode_row_*` / `decode_row_*`): the Lorenzo
+//!   prediction inside the codec reads the *reconstructed* buffer, so
+//!   the left neighbor is a loop-carried dependency — true SIMD is
+//!   impossible without changing the output. The win here is scalar
+//!   but branch-light: the carried `left` lives in a register,
+//!   previous-row neighbors stream from pre-split slices with the
+//!   bounds checks hoisted to one assert per row, and the `x = 0` /
+//!   first-row boundaries are peeled out of the inner loop.
+//! * **Prediction-error rows** (`row_errors_*`): the estimator's
+//!   Stage-I transform (paper §4.3) predicts from *original*
+//!   neighbors, which is embarrassingly parallel — these carry an
+//!   explicit SSE2 `core::arch` path (x86-64 baseline, no feature
+//!   detection needed) with per-lane IEEE f32 arithmetic in exactly
+//!   the scalar evaluation order, so results are bit-identical.
+//!
+//! Every kernel preserves the reference expression shape — including
+//! `0.0` boundary substitutions, whose `+0.0` terms are *not*
+//! algebraically removable (`-0.0 + 0.0 == +0.0`) — and the scalar
+//! reference forms stay exported for the differential property tests.
+//! `ADAPTIVEC_SCALAR_KERNELS=1` pins the scalar forms at runtime (the
+//! CI no-SIMD job), checked once per process like the CRC backend pin.
+
+use super::quant::{LinearQuantizer, ESCAPE};
+use crate::{Error, Result};
+
+/// Whether `ADAPTIVEC_SCALAR_KERNELS` pins the scalar reference
+/// kernels (checked once per process).
+pub fn scalar_kernels_forced() -> bool {
+    static FORCED: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *FORCED.get_or_init(|| {
+        std::env::var("ADAPTIVEC_SCALAR_KERNELS")
+            .map(|v| {
+                let v = v.trim();
+                !v.is_empty() && v != "0"
+            })
+            .unwrap_or(false)
+    })
+}
+
+/// Whether the explicit SIMD prediction-error path is compiled in for
+/// this target (SSE2 is baseline on x86-64).
+pub fn simd_available() -> bool {
+    cfg!(target_arch = "x86_64")
+}
+
+/// Label of the prediction-error kernel that will actually run —
+/// `"simd"` or `"scalar"` — for bench/report records.
+pub fn active_kernel() -> &'static str {
+    if simd_available() && !scalar_kernels_forced() {
+        "simd"
+    } else {
+        "scalar"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Codec row kernels (reconstructed-neighbor prediction, loop-carried)
+// ---------------------------------------------------------------------------
+
+/// Quantize one point given its prediction; pushes the symbol (or the
+/// escape + literal) and returns the reconstruction. This is the exact
+/// per-point body the old closure ran — the kernels only change how
+/// `pred` is produced.
+#[inline(always)]
+fn encode_point(
+    x: f32,
+    pred: f32,
+    q: &LinearQuantizer,
+    eb_abs: f64,
+    symbols: &mut Vec<u32>,
+    literals: &mut Vec<u8>,
+) -> f32 {
+    let err = x as f64 - pred as f64;
+    if let Some(sym) = q.quantize(err) {
+        let rec = (pred as f64 + q.reconstruct(sym)) as f32;
+        // f32 rounding may push past the bound near huge values; fall
+        // back to a literal then (exactly as SZ does).
+        if (rec as f64 - x as f64).abs() <= eb_abs {
+            symbols.push(sym);
+            return rec;
+        }
+    }
+    symbols.push(ESCAPE);
+    literals.extend_from_slice(&x.to_le_bytes());
+    x
+}
+
+/// Encode a whole 1D field (or any single row with no upper
+/// neighbors): the prediction is just the carried left reconstruction.
+pub fn encode_row_1d(
+    data: &[f32],
+    q: &LinearQuantizer,
+    eb_abs: f64,
+    symbols: &mut Vec<u32>,
+    literals: &mut Vec<u8>,
+    recon: &mut [f32],
+) {
+    assert_eq!(data.len(), recon.len());
+    let mut left = 0.0f32;
+    for (i, &x) in data.iter().enumerate() {
+        let rec = encode_point(x, left, q, eb_abs, symbols, literals);
+        recon[i] = rec;
+        left = rec;
+    }
+}
+
+/// Encode the first row of a 2D field: no upper neighbors, so the
+/// prediction is `left + 0.0 - 0.0` (the boundary-substituted Lorenzo
+/// expression — the `+0.0` is kept for `-0.0` bit-exactness).
+pub fn encode_row_2d_first(
+    data: &[f32],
+    q: &LinearQuantizer,
+    eb_abs: f64,
+    symbols: &mut Vec<u32>,
+    literals: &mut Vec<u8>,
+    recon: &mut [f32],
+) {
+    assert_eq!(data.len(), recon.len());
+    let mut left = 0.0f32;
+    for (i, &x) in data.iter().enumerate() {
+        let pred = left + 0.0 - 0.0;
+        let rec = encode_point(x, pred, q, eb_abs, symbols, literals);
+        recon[i] = rec;
+        left = rec;
+    }
+}
+
+/// Encode an interior 2D row against the previous reconstructed row:
+/// `pred = left + up - diag` with `left` carried in a register.
+pub fn encode_row_2d(
+    data: &[f32],
+    prev: &[f32],
+    q: &LinearQuantizer,
+    eb_abs: f64,
+    symbols: &mut Vec<u32>,
+    literals: &mut Vec<u8>,
+    recon: &mut [f32],
+) {
+    let nx = data.len();
+    assert!(recon.len() == nx && prev.len() >= nx && nx > 0);
+    let mut left = {
+        let pred = 0.0 + prev[0] - 0.0;
+        let rec = encode_point(data[0], pred, q, eb_abs, symbols, literals);
+        recon[0] = rec;
+        rec
+    };
+    for x in 1..nx {
+        let pred = left + prev[x] - prev[x - 1];
+        let rec = encode_point(data[x], pred, q, eb_abs, symbols, literals);
+        recon[x] = rec;
+        left = rec;
+    }
+}
+
+/// Encode a 3D row from its three reconstructed neighbor rows
+/// (`y−1`, `z−1`, and the `z−1,y−1` diagonal). Callers substitute a
+/// shared zero row for out-of-domain neighbors — loading `+0.0` is
+/// bit-identical to the reference's literal `0.0` terms, and the full
+/// 7-term inclusion–exclusion chain is evaluated in the reference
+/// order for every point.
+#[allow(clippy::too_many_arguments)]
+pub fn encode_row_3d(
+    data: &[f32],
+    ym1: &[f32],
+    zm1: &[f32],
+    zym1: &[f32],
+    q: &LinearQuantizer,
+    eb_abs: f64,
+    symbols: &mut Vec<u32>,
+    literals: &mut Vec<u8>,
+    recon: &mut [f32],
+) {
+    let nx = data.len();
+    assert!(
+        recon.len() == nx && ym1.len() >= nx && zm1.len() >= nx && zym1.len() >= nx && nx > 0
+    );
+    let mut left = {
+        let pred = 0.0 + ym1[0] + zm1[0] - 0.0 - 0.0 - zym1[0] + 0.0;
+        let rec = encode_point(data[0], pred, q, eb_abs, symbols, literals);
+        recon[0] = rec;
+        rec
+    };
+    for x in 1..nx {
+        let pred =
+            left + ym1[x] + zm1[x] - ym1[x - 1] - zm1[x - 1] - zym1[x] + zym1[x - 1];
+        let rec = encode_point(data[x], pred, q, eb_abs, symbols, literals);
+        recon[x] = rec;
+        left = rec;
+    }
+}
+
+/// Sequential reader over the literal byte stream (escape payloads).
+pub struct LiteralReader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> LiteralReader<'a> {
+    pub fn new(bytes: &'a [u8]) -> LiteralReader<'a> {
+        LiteralReader { bytes, pos: 0 }
+    }
+
+    #[inline(always)]
+    pub fn next(&mut self) -> Result<f32> {
+        let end = self.pos + 4;
+        if end > self.bytes.len() {
+            return Err(Error::Corrupt("literal stream exhausted".into()));
+        }
+        let mut b = [0u8; 4];
+        b.copy_from_slice(&self.bytes[self.pos..end]);
+        self.pos = end;
+        Ok(f32::from_le_bytes(b))
+    }
+}
+
+/// Reconstruct one point from its symbol and prediction.
+#[inline(always)]
+fn decode_point(
+    sym: u32,
+    pred: f32,
+    q: &LinearQuantizer,
+    lits: &mut LiteralReader<'_>,
+) -> Result<f32> {
+    if sym == ESCAPE {
+        lits.next()
+    } else {
+        Ok((pred as f64 + q.reconstruct(sym)) as f32)
+    }
+}
+
+/// Decode a whole 1D field (mirror of [`encode_row_1d`]).
+pub fn decode_row_1d(
+    symbols: &[u32],
+    q: &LinearQuantizer,
+    lits: &mut LiteralReader<'_>,
+    recon: &mut [f32],
+) -> Result<()> {
+    assert_eq!(symbols.len(), recon.len());
+    let mut left = 0.0f32;
+    for (i, &sym) in symbols.iter().enumerate() {
+        let rec = decode_point(sym, left, q, lits)?;
+        recon[i] = rec;
+        left = rec;
+    }
+    Ok(())
+}
+
+/// Decode the first row of a 2D field (mirror of
+/// [`encode_row_2d_first`]).
+pub fn decode_row_2d_first(
+    symbols: &[u32],
+    q: &LinearQuantizer,
+    lits: &mut LiteralReader<'_>,
+    recon: &mut [f32],
+) -> Result<()> {
+    assert_eq!(symbols.len(), recon.len());
+    let mut left = 0.0f32;
+    for (i, &sym) in symbols.iter().enumerate() {
+        let pred = left + 0.0 - 0.0;
+        let rec = decode_point(sym, pred, q, lits)?;
+        recon[i] = rec;
+        left = rec;
+    }
+    Ok(())
+}
+
+/// Decode an interior 2D row (mirror of [`encode_row_2d`]).
+pub fn decode_row_2d(
+    symbols: &[u32],
+    prev: &[f32],
+    q: &LinearQuantizer,
+    lits: &mut LiteralReader<'_>,
+    recon: &mut [f32],
+) -> Result<()> {
+    let nx = symbols.len();
+    assert!(recon.len() == nx && prev.len() >= nx && nx > 0);
+    let mut left = {
+        let pred = 0.0 + prev[0] - 0.0;
+        let rec = decode_point(symbols[0], pred, q, lits)?;
+        recon[0] = rec;
+        rec
+    };
+    for x in 1..nx {
+        let pred = left + prev[x] - prev[x - 1];
+        let rec = decode_point(symbols[x], pred, q, lits)?;
+        recon[x] = rec;
+        left = rec;
+    }
+    Ok(())
+}
+
+/// Decode a 3D row (mirror of [`encode_row_3d`]).
+pub fn decode_row_3d(
+    symbols: &[u32],
+    ym1: &[f32],
+    zm1: &[f32],
+    zym1: &[f32],
+    q: &LinearQuantizer,
+    lits: &mut LiteralReader<'_>,
+    recon: &mut [f32],
+) -> Result<()> {
+    let nx = symbols.len();
+    assert!(
+        recon.len() == nx && ym1.len() >= nx && zm1.len() >= nx && zym1.len() >= nx && nx > 0
+    );
+    let mut left = {
+        let pred = 0.0 + ym1[0] + zm1[0] - 0.0 - 0.0 - zym1[0] + 0.0;
+        let rec = decode_point(symbols[0], pred, q, lits)?;
+        recon[0] = rec;
+        rec
+    };
+    for x in 1..nx {
+        let pred =
+            left + ym1[x] + zm1[x] - ym1[x - 1] - zm1[x - 1] - zym1[x] + zym1[x - 1];
+        let rec = decode_point(symbols[x], pred, q, lits)?;
+        recon[x] = rec;
+        left = rec;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Prediction-error row kernels (original-neighbor prediction, SIMD)
+// ---------------------------------------------------------------------------
+
+/// 1D prediction errors for a whole field: `e[i] = data[i] - data[i-1]`
+/// (`- 0.0` at the origin).
+pub fn row_errors_1d(data: &[f32], out: &mut [f32]) {
+    assert_eq!(data.len(), out.len());
+    #[cfg(target_arch = "x86_64")]
+    if !scalar_kernels_forced() {
+        simd::row_errors_1d(data, out);
+        return;
+    }
+    row_errors_1d_scalar(data, out);
+}
+
+/// Scalar reference form of [`row_errors_1d`].
+pub fn row_errors_1d_scalar(data: &[f32], out: &mut [f32]) {
+    assert_eq!(data.len(), out.len());
+    if data.is_empty() {
+        return;
+    }
+    out[0] = data[0] - 0.0;
+    for i in 1..data.len() {
+        out[i] = data[i] - data[i - 1];
+    }
+}
+
+/// 2D prediction errors for one row against the previous *original*
+/// row: `e[x] = row[x] - (left + up - diag)`. First rows pass a zero
+/// row as `prev` (bit-identical to the boundary-substituted reference).
+pub fn row_errors_2d(row: &[f32], prev: &[f32], out: &mut [f32]) {
+    assert!(prev.len() >= row.len() && out.len() == row.len());
+    #[cfg(target_arch = "x86_64")]
+    if !scalar_kernels_forced() {
+        simd::row_errors_2d(row, prev, out);
+        return;
+    }
+    row_errors_2d_scalar(row, prev, out);
+}
+
+/// Scalar reference form of [`row_errors_2d`].
+pub fn row_errors_2d_scalar(row: &[f32], prev: &[f32], out: &mut [f32]) {
+    let nx = row.len();
+    assert!(prev.len() >= nx && out.len() == nx);
+    if nx == 0 {
+        return;
+    }
+    out[0] = row[0] - (0.0 + prev[0] - 0.0);
+    for x in 1..nx {
+        out[x] = row[x] - (row[x - 1] + prev[x] - prev[x - 1]);
+    }
+}
+
+/// 3D prediction errors for one row from its three *original* neighbor
+/// rows (zero rows substituted at the boundaries by the caller).
+pub fn row_errors_3d(row: &[f32], ym1: &[f32], zm1: &[f32], zym1: &[f32], out: &mut [f32]) {
+    let nx = row.len();
+    assert!(ym1.len() >= nx && zm1.len() >= nx && zym1.len() >= nx && out.len() == nx);
+    #[cfg(target_arch = "x86_64")]
+    if !scalar_kernels_forced() {
+        simd::row_errors_3d(row, ym1, zm1, zym1, out);
+        return;
+    }
+    row_errors_3d_scalar(row, ym1, zm1, zym1, out);
+}
+
+/// Scalar reference form of [`row_errors_3d`].
+pub fn row_errors_3d_scalar(
+    row: &[f32],
+    ym1: &[f32],
+    zm1: &[f32],
+    zym1: &[f32],
+    out: &mut [f32],
+) {
+    let nx = row.len();
+    assert!(ym1.len() >= nx && zm1.len() >= nx && zym1.len() >= nx && out.len() == nx);
+    if nx == 0 {
+        return;
+    }
+    out[0] = row[0] - (0.0 + ym1[0] + zm1[0] - 0.0 - 0.0 - zym1[0] + 0.0);
+    for x in 1..nx {
+        let pred = row[x - 1] + ym1[x] + zm1[x] - ym1[x - 1] - zm1[x - 1] - zym1[x]
+            + zym1[x - 1];
+        out[x] = row[x] - pred;
+    }
+}
+
+/// Explicit SSE2 forms of the prediction-error kernels. SSE2 is part
+/// of the x86-64 baseline, so no runtime feature detection is needed;
+/// per-lane `addps`/`subps` are IEEE f32 operations evaluated in the
+/// scalar reference order, so every lane is bit-identical to the
+/// scalar kernels (asserted by the `kernel_equivalence` proptests).
+#[cfg(target_arch = "x86_64")]
+mod simd {
+    use core::arch::x86_64::*;
+
+    const LANES: usize = 4;
+
+    pub fn row_errors_1d(data: &[f32], out: &mut [f32]) {
+        let n = data.len();
+        if n == 0 {
+            return;
+        }
+        out[0] = data[0] - 0.0;
+        let mut x = 1usize;
+        // SAFETY: loads at x-1..x+3 and stores at x..x+4 stay in
+        // bounds while x + LANES <= n (checked by the loop condition;
+        // slice lengths asserted equal by the caller).
+        unsafe {
+            while x + LANES <= n {
+                let cur = _mm_loadu_ps(data.as_ptr().add(x));
+                let left = _mm_loadu_ps(data.as_ptr().add(x - 1));
+                _mm_storeu_ps(out.as_mut_ptr().add(x), _mm_sub_ps(cur, left));
+                x += LANES;
+            }
+        }
+        while x < n {
+            out[x] = data[x] - data[x - 1];
+            x += 1;
+        }
+    }
+
+    pub fn row_errors_2d(row: &[f32], prev: &[f32], out: &mut [f32]) {
+        let nx = row.len();
+        if nx == 0 {
+            return;
+        }
+        out[0] = row[0] - (0.0 + prev[0] - 0.0);
+        let mut x = 1usize;
+        // SAFETY: all loads touch x-1..x+3 of slices with length
+        // >= nx (asserted by the caller); x + LANES <= nx bounds them.
+        unsafe {
+            while x + LANES <= nx {
+                let left = _mm_loadu_ps(row.as_ptr().add(x - 1));
+                let up = _mm_loadu_ps(prev.as_ptr().add(x));
+                let diag = _mm_loadu_ps(prev.as_ptr().add(x - 1));
+                let pred = _mm_sub_ps(_mm_add_ps(left, up), diag);
+                let cur = _mm_loadu_ps(row.as_ptr().add(x));
+                _mm_storeu_ps(out.as_mut_ptr().add(x), _mm_sub_ps(cur, pred));
+                x += LANES;
+            }
+        }
+        while x < nx {
+            out[x] = row[x] - (row[x - 1] + prev[x] - prev[x - 1]);
+            x += 1;
+        }
+    }
+
+    pub fn row_errors_3d(
+        row: &[f32],
+        ym1: &[f32],
+        zm1: &[f32],
+        zym1: &[f32],
+        out: &mut [f32],
+    ) {
+        let nx = row.len();
+        if nx == 0 {
+            return;
+        }
+        out[0] = row[0] - (0.0 + ym1[0] + zm1[0] - 0.0 - 0.0 - zym1[0] + 0.0);
+        let mut x = 1usize;
+        // SAFETY: as above — every pointer stays within slices whose
+        // lengths the caller asserted to be >= nx.
+        unsafe {
+            while x + LANES <= nx {
+                let a = _mm_loadu_ps(row.as_ptr().add(x - 1));
+                let b = _mm_loadu_ps(ym1.as_ptr().add(x));
+                let c = _mm_loadu_ps(zm1.as_ptr().add(x));
+                let d = _mm_loadu_ps(ym1.as_ptr().add(x - 1));
+                let e = _mm_loadu_ps(zm1.as_ptr().add(x - 1));
+                let f = _mm_loadu_ps(zym1.as_ptr().add(x));
+                let g = _mm_loadu_ps(zym1.as_ptr().add(x - 1));
+                // Reference chain: ((((((a + b) + c) - d) - e) - f) + g)
+                let mut pred = _mm_add_ps(a, b);
+                pred = _mm_add_ps(pred, c);
+                pred = _mm_sub_ps(pred, d);
+                pred = _mm_sub_ps(pred, e);
+                pred = _mm_sub_ps(pred, f);
+                pred = _mm_add_ps(pred, g);
+                let cur = _mm_loadu_ps(row.as_ptr().add(x));
+                _mm_storeu_ps(out.as_mut_ptr().add(x), _mm_sub_ps(cur, pred));
+                x += LANES;
+            }
+        }
+        while x < nx {
+            let pred = row[x - 1] + ym1[x] + zm1[x] - ym1[x - 1] - zm1[x - 1] - zym1[x]
+                + zym1[x - 1];
+            out[x] = row[x] - pred;
+            x += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wide_values(n: usize, seed: u64) -> Vec<f32> {
+        // Mix of smooth, huge, denormal, negative-zero, and
+        // NaN-adjacent magnitudes — the cases where op order shows.
+        let specials = [
+            0.0f32,
+            -0.0,
+            f32::MIN_POSITIVE,
+            -f32::MIN_POSITIVE,
+            1e-42,
+            -1e-42,
+            3.4e38,
+            -3.4e38,
+            1.0,
+            -1.0,
+        ];
+        let mut rng = crate::testing::Rng::new(seed);
+        (0..n)
+            .map(|i| {
+                if i % 7 == 0 {
+                    specials[(i / 7) % specials.len()]
+                } else {
+                    rng.range_f64(-1e6, 1e6) as f32
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn simd_rows_match_scalar_rows_bitwise() {
+        for n in [1usize, 2, 3, 4, 5, 7, 8, 16, 33, 100] {
+            let row = wide_values(n, 91 + n as u64);
+            let prev = wide_values(n, 191 + n as u64);
+            let zm1 = wide_values(n, 291 + n as u64);
+            let zym1 = wide_values(n, 391 + n as u64);
+            let mut a = vec![0.0f32; n];
+            let mut b = vec![0.0f32; n];
+
+            row_errors_1d(&row, &mut a);
+            row_errors_1d_scalar(&row, &mut b);
+            assert_eq!(bits(&a), bits(&b), "1d n={n}");
+
+            row_errors_2d(&row, &prev, &mut a);
+            row_errors_2d_scalar(&row, &prev, &mut b);
+            assert_eq!(bits(&a), bits(&b), "2d n={n}");
+
+            row_errors_3d(&row, &prev, &zm1, &zym1, &mut a);
+            row_errors_3d_scalar(&row, &prev, &zm1, &zym1, &mut b);
+            assert_eq!(bits(&a), bits(&b), "3d n={n}");
+        }
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn literal_reader_exhaustion_is_err() {
+        let mut r = LiteralReader::new(&[1, 2, 3, 4, 5]);
+        assert_eq!(r.next().unwrap(), f32::from_le_bytes([1, 2, 3, 4]));
+        assert!(r.next().is_err());
+    }
+
+    #[test]
+    fn active_kernel_names() {
+        assert!(matches!(active_kernel(), "simd" | "scalar"));
+        assert_eq!(simd_available(), cfg!(target_arch = "x86_64"));
+    }
+}

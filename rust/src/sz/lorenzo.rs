@@ -49,37 +49,91 @@ pub fn predict_3d(recon: &[f32], ny: usize, nx: usize, z: usize, y: usize, x: us
 /// Prediction errors computed against **original** neighbors for a set
 /// of sampled linear indices — the estimator's Stage-I transform.
 /// Returns one error per sample.
+///
+/// The sampler emits short *runs* of consecutive indices (4-wide block
+/// rows), so the coordinate decomposition is carried across a run
+/// instead of re-deriving `i / nx` and `i % nx` per point — the
+/// div/mod pair only runs when a run breaks.
 pub fn prediction_errors_original(data: &[f32], dims: Dims, samples: &[usize]) -> Vec<f32> {
     match dims {
         Dims::D1(_) => samples
             .iter()
             .map(|&i| data[i] - if i >= 1 { data[i - 1] } else { 0.0 })
             .collect(),
-        Dims::D2(_, nx) => samples
-            .iter()
-            .map(|&i| {
-                let (y, x) = (i / nx, i % nx);
-                data[i] - predict_2d(data, nx, y, x)
-            })
-            .collect(),
-        Dims::D3(_, ny, nx) => samples
-            .iter()
-            .map(|&i| {
-                let sxy = ny * nx;
-                let z = i / sxy;
-                let r = i % sxy;
-                let (y, x) = (r / nx, r % nx);
-                data[i] - predict_3d(data, ny, nx, z, y, x)
-            })
-            .collect(),
+        Dims::D2(_, nx) => {
+            let mut out = Vec::with_capacity(samples.len());
+            let (mut prev_i, mut y, mut x) = (usize::MAX, 0usize, 0usize);
+            for &i in samples {
+                if i > 0 && prev_i == i - 1 && x + 1 < nx {
+                    x += 1;
+                } else {
+                    y = i / nx;
+                    x = i % nx;
+                }
+                prev_i = i;
+                out.push(data[i] - predict_2d(data, nx, y, x));
+            }
+            out
+        }
+        Dims::D3(_, ny, nx) => {
+            let sxy = ny * nx;
+            let mut out = Vec::with_capacity(samples.len());
+            let (mut prev_i, mut z, mut y, mut x) = (usize::MAX, 0usize, 0usize, 0usize);
+            for &i in samples {
+                if i > 0 && prev_i == i - 1 && x + 1 < nx {
+                    x += 1;
+                } else {
+                    z = i / sxy;
+                    let r = i % sxy;
+                    y = r / nx;
+                    x = r % nx;
+                }
+                prev_i = i;
+                out.push(data[i] - predict_3d(data, ny, nx, z, y, x));
+            }
+            out
+        }
     }
 }
 
 /// Full-field prediction errors against original neighbors (used by
-/// Fig. 4's distribution dump and by tests).
+/// Fig. 4's distribution dump, the ablation benches, and tests).
+/// Runs through the batched row kernels of [`super::kernels`] — the
+/// SIMD path on x86-64 — which are bit-identical to the per-point
+/// form (original-neighbor prediction has no loop-carried state).
 pub fn prediction_errors_full(data: &[f32], dims: Dims) -> Vec<f32> {
-    let idx: Vec<usize> = (0..data.len()).collect();
-    prediction_errors_original(data, dims, &idx)
+    use super::kernels;
+    let mut out = vec![0.0f32; data.len()];
+    match dims {
+        Dims::D1(_) => kernels::row_errors_1d(data, &mut out),
+        Dims::D2(ny, nx) => {
+            let zeros = vec![0.0f32; nx];
+            for y in 0..ny {
+                let row = &data[y * nx..(y + 1) * nx];
+                let prev: &[f32] = if y > 0 { &data[(y - 1) * nx..] } else { &zeros };
+                kernels::row_errors_2d(row, prev, &mut out[y * nx..(y + 1) * nx]);
+            }
+        }
+        Dims::D3(nz, ny, nx) => {
+            let sxy = ny * nx;
+            let zeros = vec![0.0f32; nx];
+            for z in 0..nz {
+                for y in 0..ny {
+                    let start = (z * ny + y) * nx;
+                    let row = &data[start..start + nx];
+                    let ym1: &[f32] = if y > 0 { &data[start - nx..] } else { &zeros };
+                    let zm1: &[f32] = if z > 0 { &data[start - sxy..] } else { &zeros };
+                    let zym1: &[f32] = if z > 0 && y > 0 {
+                        &data[start - sxy - nx..]
+                    } else {
+                        &zeros
+                    };
+                    kernels::row_errors_3d(row, ym1, zm1, zym1, &mut out[start..start + nx]);
+                }
+            }
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -139,6 +193,46 @@ mod tests {
         assert_eq!(errs[0], 1.0);
         // (1,1): pred = 4 + 2 - 1 = 5, err = 1
         assert_eq!(errs[1 * nx + 1], 1.0);
+    }
+
+    #[test]
+    fn batched_full_errors_match_per_point_reference() {
+        use crate::testing::Rng;
+        let mut rng = Rng::new(43);
+        for dims in [Dims::D1(101), Dims::D2(7, 13), Dims::D3(3, 5, 9)] {
+            let n = dims.len();
+            let data: Vec<f32> = (0..n).map(|_| rng.range_f64(-1e5, 1e5) as f32).collect();
+            let idx: Vec<usize> = (0..n).collect();
+            let batched = prediction_errors_full(&data, dims);
+            let reference = prediction_errors_original(&data, dims, &idx);
+            let bits = |v: &[f32]| v.iter().map(|e| e.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&batched), bits(&reference), "{dims:?}");
+        }
+    }
+
+    #[test]
+    fn run_carried_coordinates_match_divmod() {
+        // Scattered samples (mixed runs and jumps, including row
+        // wraps) must decompose identically to a per-index div/mod.
+        use crate::testing::Rng;
+        let mut rng = Rng::new(44);
+        let dims = Dims::D3(4, 6, 5);
+        let n = dims.len();
+        let data: Vec<f32> = (0..n).map(|_| rng.range_f64(-10.0, 10.0) as f32).collect();
+        let samples: Vec<usize> =
+            vec![0, 1, 2, 3, 4, 5, 17, 18, 19, 20, 21, 29, 30, 31, 60, 61, 119, 0, 7];
+        let got = prediction_errors_original(&data, dims, &samples);
+        let (ny, nx, sxy) = (6usize, 5usize, 30usize);
+        let want: Vec<f32> = samples
+            .iter()
+            .map(|&i| {
+                let z = i / sxy;
+                let r = i % sxy;
+                data[i] - predict_3d(&data, ny, nx, z, r / nx, r % nx)
+            })
+            .collect();
+        let bits = |v: &[f32]| v.iter().map(|e| e.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&got), bits(&want));
     }
 
     #[test]

@@ -15,6 +15,7 @@
 
 pub mod compressor;
 pub mod huffman_stage;
+pub mod kernels;
 pub mod lorenzo;
 pub mod quant;
 pub mod relative;

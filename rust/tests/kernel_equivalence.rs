@@ -1,0 +1,266 @@
+//! Differential property tests for the hardware-speed hot paths
+//! (DESIGN.md §13): the batched/SIMD kernels must be **bit-identical**
+//! to the scalar per-point reference forms — same symbols, same
+//! literals, same reconstructions — across 1D/2D/3D layouts and
+//! adversarial float inputs (±0.0, denormals, huge magnitudes).
+//!
+//! The compressed stream encodes symbols + literals verbatim, so
+//! byte-equality of `compress` vs `compress_reference` proves the
+//! batched codec loop emits identical symbol and literal streams;
+//! bit-equality of the decompressed fields proves the reconstructions
+//! match point-for-point.
+
+use adaptivec::data::field::Dims;
+use adaptivec::sz::kernels;
+use adaptivec::sz::lorenzo;
+use adaptivec::sz::SzCompressor;
+use adaptivec::testing::proptest_lite::{forall, forall_vec_f32, Gen};
+use adaptivec::testing::Rng;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Wide-dynamic-range values salted with the denormal / signed-zero /
+/// near-overflow specials where evaluation order becomes observable.
+fn salt_specials(mut v: Vec<f32>) -> Vec<f32> {
+    const SPECIALS: [f32; 10] = [
+        0.0,
+        -0.0,
+        f32::MIN_POSITIVE,
+        -f32::MIN_POSITIVE,
+        1e-42,
+        -1e-42,
+        3.4e38,
+        -3.4e38,
+        1e-30,
+        -1e-30,
+    ];
+    for (i, x) in v.iter_mut().enumerate() {
+        if i % 5 == 0 {
+            *x = SPECIALS[(i / 5) % SPECIALS.len()];
+        }
+    }
+    v
+}
+
+/// Factor `n` into a (ny, nx) grid that is not degenerate when
+/// possible, so 2D runs exercise real row boundaries.
+fn grid_2d(n: usize) -> (usize, usize) {
+    for nx in (2..=n).rev() {
+        if n % nx == 0 && n / nx >= 2 {
+            return (n / nx, nx);
+        }
+    }
+    (1, n)
+}
+
+fn grid_3d(n: usize) -> Option<(usize, usize, usize)> {
+    for nz in 2..=n {
+        if n % nz != 0 {
+            continue;
+        }
+        let rest = n / nz;
+        let (ny, nx) = grid_2d(rest);
+        if ny >= 2 && nx >= 2 {
+            return Some((nz, ny, nx));
+        }
+    }
+    None
+}
+
+/// Compress + decompress through both the batched and the reference
+/// paths and assert full bit-identity of streams and reconstructions.
+fn assert_paths_identical(data: &[f32], dims: Dims, eb: f64) {
+    let sz = SzCompressor::default();
+    let fast = sz.compress(data, dims, eb).unwrap();
+    let refr = sz.compress_reference(data, dims, eb).unwrap();
+    assert_eq!(fast, refr, "compressed stream differs for {dims:?} eb={eb}");
+
+    let (rec_fast, d1) = sz.decompress(&fast).unwrap();
+    let (rec_ref, d2) = sz.decompress_reference(&fast).unwrap();
+    assert_eq!(d1, dims);
+    assert_eq!(d2, dims);
+    assert_eq!(bits(&rec_fast), bits(&rec_ref), "reconstruction differs for {dims:?}");
+
+    // And the bound still holds (sanity on top of equivalence).
+    for (&a, &b) in data.iter().zip(&rec_fast) {
+        assert!(
+            (a as f64 - b as f64).abs() <= eb * (1.0 + 1e-9),
+            "bound violated: {a} vs {b} (eb {eb})"
+        );
+    }
+}
+
+#[test]
+fn prop_codec_paths_bit_identical_1d() {
+    forall_vec_f32(
+        "kernels codec 1d bit-identity",
+        30,
+        Gen::vec_f32_wide(1..600),
+        |v| {
+            let v = salt_specials(v.to_vec());
+            for eb in [1e-3, 1e-7, 10.0] {
+                assert_paths_identical(&v, Dims::D1(v.len()), eb);
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_codec_paths_bit_identical_2d() {
+    forall_vec_f32(
+        "kernels codec 2d bit-identity",
+        25,
+        Gen::vec_f32_wide(4..600),
+        |v| {
+            let v = salt_specials(v.to_vec());
+            let (ny, nx) = grid_2d(v.len());
+            for eb in [1e-3, 1e-7] {
+                assert_paths_identical(&v[..ny * nx], Dims::D2(ny, nx), eb);
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_codec_paths_bit_identical_3d() {
+    forall_vec_f32(
+        "kernels codec 3d bit-identity",
+        25,
+        Gen::vec_f32_wide(8..600),
+        |v| {
+            let v = salt_specials(v.to_vec());
+            if let Some((nz, ny, nx)) = grid_3d(v.len()) {
+                for eb in [1e-3, 1e-7] {
+                    assert_paths_identical(&v[..nz * ny * nx], Dims::D3(nz, ny, nx), eb);
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_smooth_fields_bit_identical() {
+    // Smooth inputs drive the quantized (non-escape) path almost
+    // everywhere — the opposite regime from the wide generator.
+    forall_vec_f32(
+        "kernels codec smooth bit-identity",
+        15,
+        Gen::vec_f32_smooth(64..900, 50.0),
+        |v| {
+            let (ny, nx) = grid_2d(v.len());
+            assert_paths_identical(&v[..ny * nx], Dims::D2(ny, nx), 1e-3);
+            assert_paths_identical(v, Dims::D1(v.len()), 1e-4);
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_row_error_kernels_bit_identical() {
+    // Direct SIMD-vs-scalar comparison of the prediction-error kernels
+    // at every row width (tail handling) with special-salted inputs.
+    forall(
+        "row_errors simd vs scalar",
+        40,
+        Gen::usize(1..200),
+        |&n| {
+            let mut rng = Rng::new(0xBEEF ^ n as u64);
+            let gen_row = |rng: &mut Rng| {
+                salt_specials((0..n).map(|_| rng.range_f64(-1e7, 1e7) as f32).collect())
+            };
+            let row = gen_row(&mut rng);
+            let prev = gen_row(&mut rng);
+            let zm1 = gen_row(&mut rng);
+            let zym1 = gen_row(&mut rng);
+            let mut fast = vec![0.0f32; n];
+            let mut refr = vec![0.0f32; n];
+
+            kernels::row_errors_1d(&row, &mut fast);
+            kernels::row_errors_1d_scalar(&row, &mut refr);
+            if bits(&fast) != bits(&refr) {
+                return false;
+            }
+
+            kernels::row_errors_2d(&row, &prev, &mut fast);
+            kernels::row_errors_2d_scalar(&row, &prev, &mut refr);
+            if bits(&fast) != bits(&refr) {
+                return false;
+            }
+
+            kernels::row_errors_3d(&row, &prev, &zm1, &zym1, &mut fast);
+            kernels::row_errors_3d_scalar(&row, &prev, &zm1, &zym1, &mut refr);
+            bits(&fast) == bits(&refr)
+        },
+    );
+}
+
+#[test]
+fn prop_full_field_errors_match_per_point() {
+    // The batched full-field transform must equal the per-point
+    // original-neighbor reference at every index, for every dim shape.
+    forall_vec_f32(
+        "prediction_errors_full vs original",
+        25,
+        Gen::vec_f32_wide(8..500),
+        |v| {
+            let v = salt_specials(v.to_vec());
+            let mut shapes = vec![Dims::D1(v.len())];
+            let (ny, nx) = grid_2d(v.len());
+            shapes.push(Dims::D2(ny, nx));
+            if let Some((nz, ny, nx)) = grid_3d(v.len()) {
+                shapes.push(Dims::D3(nz, ny, nx));
+            }
+            for dims in shapes {
+                let n = dims.len();
+                let idx: Vec<usize> = (0..n).collect();
+                let batched = lorenzo::prediction_errors_full(&v[..n], dims);
+                let reference = lorenzo::prediction_errors_original(&v[..n], dims, &idx);
+                if bits(&batched) != bits(&reference) {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn denormal_heavy_field_roundtrips_identically() {
+    // A field made *entirely* of denormals and signed zeros: the
+    // quantizer sees errors far below delta, so everything lands in
+    // the zero bin — both paths must still agree bit-for-bit.
+    let v: Vec<f32> = (0..257)
+        .map(|i| match i % 4 {
+            0 => f32::MIN_POSITIVE * (i as f32),
+            1 => -1e-42,
+            2 => -0.0,
+            _ => 1e-44,
+        })
+        .collect();
+    assert_paths_identical(&v, Dims::D1(257), 1e-3);
+    assert_paths_identical(&v[..256], Dims::D2(16, 16), 1e-3);
+    assert_paths_identical(&v[..252], Dims::D3(7, 6, 6), 1e-3);
+}
+
+#[test]
+fn escape_heavy_field_roundtrips_identically() {
+    // Huge white noise against a tiny bound: nearly every point escapes
+    // to a literal, exercising the literal stream ordering end-to-end.
+    let mut rng = Rng::new(0xD1FF);
+    let v: Vec<f32> = (0..360).map(|_| rng.range_f64(-1e8, 1e8) as f32).collect();
+    assert_paths_identical(&v, Dims::D1(360), 1e-9);
+    assert_paths_identical(&v, Dims::D2(18, 20), 1e-9);
+    assert_paths_identical(&v, Dims::D3(6, 6, 10), 1e-9);
+}
+
+#[test]
+fn kernel_dispatch_reports_a_backend() {
+    // The active kernel is an env-pinned process-wide choice; whichever
+    // it is, the equivalence suite above proves it safe.
+    assert!(matches!(kernels::active_kernel(), "simd" | "scalar"));
+}

@@ -125,7 +125,7 @@ fn scratch_file_cleaned_up_on_sink_failure() {
     let dir = tmp_path("scratch_cleanup_dir");
     std::fs::create_dir_all(&dir).unwrap();
     let mut coord = Coordinator::new(SelectorConfig::default(), 2);
-    coord.spill = SpillConfig { mem_budget: 0, dir: Some(dir.clone()) };
+    coord.spill = SpillConfig { mem_budget: 0, dir: Some(dir.clone()), shards: 0 };
     let fs = fields(23, 2);
     // Reference run to size the container, so the failure limits hit
     // each phase deterministically: 0 = the magic itself, 16 =
