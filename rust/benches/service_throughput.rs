@@ -64,7 +64,8 @@ fn main() {
                 chunk_elems: 2048,
                 ..ServiceConfig::default()
             },
-        );
+        )
+        .expect("in-memory archive open cannot fail");
         let handle = svc.handle();
 
         let t0 = Instant::now();

@@ -10,7 +10,11 @@
 //!   from scratch) vs two-pass recompress (compress twice), the
 //!   headline write-path comparison, plus scratch accounting;
 //! * pread partial reads, raw vs through the LRU `CachedSource` vs
-//!   the zero-copy mmap source (`mmap_load` vs `pread_load` records).
+//!   the zero-copy mmap source (`mmap_load` vs `pread_load` records);
+//! * service archive hot vs cold fetch — the same batch served from
+//!   the in-memory hot set vs from a recovered shard file, plus the
+//!   index-only startup recovery scan (`archive_hot_fetch`,
+//!   `archive_cold_fetch`, `archive_recover_open` records).
 //!
 //! CI smoke knobs (`bench-smoke` job): `ADAPTIVEC_BENCH_ITERS` caps
 //! iterations, `ADAPTIVEC_BENCH_SCALE` shrinks the dataset, and
@@ -24,6 +28,7 @@ use adaptivec::bench_util::{
 use adaptivec::coordinator::store::{CachedSource, ContainerReader, FileSource};
 use adaptivec::data::Dataset;
 use adaptivec::engine::{Engine, EngineConfig, WritePlan};
+use adaptivec::service::{ArchiveConfig, ArchiveStore};
 
 fn main() {
     let eb = 1e-4;
@@ -266,6 +271,62 @@ fn main() {
         speedup(&tm_mem_field, &tm_mmap_field),
     ]);
     t.print("store_throughput — pread-backed partial reads");
+
+    // --- service archive: hot (memory) vs cold (shard file) fetch ---
+    // The same batch through the service's ArchiveStore, fetched from
+    // the hot set vs from a recovered shard directory (a reopened
+    // store starts with an empty reader cache, so the cold row pays
+    // exactly what a post-restart fetch pays; DESIGN.md §14).
+    let mut t = Table::new(&["archive fetch path", "time", "vs hot"]);
+    let arch_names: Vec<String> = fields.iter().map(|f| f.name.clone()).collect();
+    let (_, arch_bytes) = engine
+        .compress_chunked_to(&fields, Policy::RateDistortion, eb, 64 * 1024, Vec::new())
+        .unwrap();
+
+    let hot_store = ArchiveStore::open(ArchiveConfig::default(), 4).unwrap();
+    hot_store.insert(arch_names.clone(), arch_bytes.clone()).unwrap();
+    let tm_hot = bench(1, iters_override(5), || {
+        let r = hot_store.reader_for(&target).unwrap().unwrap();
+        engine.load_field(&r, &target).unwrap()
+    });
+    json.record("archive_hot_fetch", tm_hot);
+    t.row(&[
+        format!("hot fetch '{target}' (in-memory batch)"),
+        format!("{tm_hot}"),
+        "1.00x".into(),
+    ]);
+
+    let arch_root = tmp.join("archive_shards");
+    let cold_cfg = ArchiveConfig {
+        root_dir: Some(arch_root.clone()),
+        mem_budget: 0, // spill immediately: everything is cold
+        open_readers: 4,
+    };
+    {
+        let store = ArchiveStore::open(cold_cfg.clone(), 4).unwrap();
+        store.insert(arch_names, arch_bytes).unwrap();
+    }
+    let tm_recover =
+        bench(1, iters_override(5), || ArchiveStore::open(cold_cfg.clone(), 4).unwrap());
+    json.record("archive_recover_open", tm_recover);
+    t.row(&[
+        "startup recovery (index-only shard scan)".into(),
+        format!("{tm_recover}"),
+        "-".into(),
+    ]);
+
+    let cold_store = ArchiveStore::open(cold_cfg, 4).unwrap();
+    let tm_cold = bench(1, iters_override(5), || {
+        let r = cold_store.reader_for(&target).unwrap().unwrap();
+        engine.load_field(&r, &target).unwrap()
+    });
+    json.record("archive_cold_fetch", tm_cold);
+    t.row(&[
+        format!("cold fetch '{target}' (recovered shard)"),
+        format!("{tm_cold}"),
+        speedup(&tm_hot, &tm_cold),
+    ]);
+    t.print("store_throughput — service archive hot vs cold fetch");
     std::fs::remove_dir_all(&tmp).ok();
 
     json.write_env().expect("write bench JSON");

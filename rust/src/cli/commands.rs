@@ -17,7 +17,7 @@ use crate::engine::{Engine, EngineConfig, WritePlan};
 use crate::estimator::selector::{AutoSelector, CandidateSet, SelectorConfig};
 use crate::iosim::{FsModel, SvcModel, ThroughputModel, PROC_SWEEP};
 use crate::service::net::{Client, Server};
-use crate::service::{Service, ServiceConfig};
+use crate::service::{ArchiveConfig, Service, ServiceConfig};
 use crate::{Error, Result};
 use std::sync::Arc;
 
@@ -56,12 +56,20 @@ COMMANDS:
   inspect     --in FILE
   serve       [--addr 127.0.0.1:7845] [--workers N] [--queue-depth N]
               [--batch-max N] [--eb E] [--policy P] [--chunk-elems N]
-              [--codecs C]
+              [--codecs C] [--archive-dir DIR] [--archive-mem BYTES]
+              [--archive-readers N]
               (concurrent service front end over one shared engine:
                bounded request queue with Busy admission control,
                batched store passes, length-prefixed TCP frames; runs
                until a client sends --op shutdown, then prints the
-               final ServiceReport line)
+               final ServiceReport. With --archive-dir the archive is
+               persistent: batches past the --archive-mem hot budget
+               (default 64 MiB) spill to sharded container files, cold
+               fetches go through a bounded LRU of --archive-readers
+               open readers (default 16), restart recovers the whole
+               index from a shard scan, and shutdown flushes every
+               still-hot batch. Without it the archive is in-memory
+               only, as before)
   client      --op compress --dataset D [--scale S] [--seed N]
               [--retry-ms MS] [--retries N]
               | --op fetch --field NAME [--out FILE]
@@ -469,6 +477,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let chunk_elems: usize = args.get_or("chunk-elems", 64 * 1024)?;
     let policy = Policy::parse(args.get("policy").unwrap_or("ours"))
         .ok_or_else(|| Error::InvalidArg("bad --policy".into()))?;
+    // Archive persistence: without --archive-dir the archive stays in
+    // memory (nothing spills, nothing survives a restart).
+    let archive_dir = args.get("archive-dir").map(std::path::PathBuf::from);
+    let archive_mem: usize = args.get_or("archive-mem", 64 << 20)?;
+    let archive_readers: usize = args.get_or("archive-readers", 16)?;
     let cfg = selector_cfg(&args)?;
     args.check_unknown()?;
 
@@ -476,6 +489,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         selector_cfg: cfg,
         ..EngineConfig::default()
     }));
+    let archive = ArchiveConfig {
+        root_dir: archive_dir.clone(),
+        mem_budget: archive_mem,
+        open_readers: archive_readers,
+    };
     let svc = Service::start(
         engine,
         ServiceConfig {
@@ -485,9 +503,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             policy,
             eb_rel: eb,
             chunk_elems,
+            archive,
             ..ServiceConfig::default()
         },
-    );
+    )?;
+    let recovered = svc.report().archive;
     let server = Server::bind(svc.handle(), &addr)?;
     println!(
         "serving on {} (workers {workers}, queue depth {queue_depth}, batch max {batch_max}, \
@@ -495,8 +515,21 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         server.local_addr(),
         policy.name()
     );
+    match &archive_dir {
+        Some(dir) => println!(
+            "archive at {} (mem budget {} B, {} open readers): recovered {} fields \
+             from {} shards ({} corrupt skipped)",
+            dir.display(),
+            archive_mem,
+            archive_readers,
+            recovered.recovered_fields,
+            recovered.recovered_shards,
+            recovered.corrupt_shards,
+        ),
+        None => println!("archive in memory only (no --archive-dir: nothing survives restart)"),
+    }
     server.run()?;
-    // Shutdown requested by a client: drain, join, report.
+    // Shutdown requested by a client: drain, join, flush, report.
     println!("{}", svc.shutdown().summary());
     Ok(())
 }

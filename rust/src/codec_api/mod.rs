@@ -216,7 +216,10 @@ impl Codec for DctCodec {
 }
 
 /// Resolves selection bytes to codecs — the single source of truth for
-/// the {s_i} → codec mapping.
+/// the {s_i} → codec mapping (DESIGN.md §11). Every container chunk
+/// records the selection byte of the codec that wrote it; readers hand
+/// that byte back to the registry to decode, which is why new codecs
+/// extend the wire format without changing it.
 pub struct CodecRegistry {
     codecs: Vec<Box<dyn Codec>>,
 }

@@ -962,7 +962,10 @@ impl SourceCursor<'_> {
 /// demand — `load_field`/`load_chunk` never touch other payloads.
 /// Backed by a [`ByteSource`]: in-memory via [`ContainerReader::from_bytes`],
 /// pread-backed via [`ContainerReader::open`] (which reads the index
-/// up front and each requested chunk's exact byte range thereafter).
+/// up front and each requested chunk's exact byte range thereafter),
+/// or mmap-first via [`ContainerReader::open_cached`] (DESIGN.md §13).
+/// Index-only opens are what make the service archive's startup
+/// recovery O(fields) rather than O(bytes) (DESIGN.md §14).
 #[derive(Clone)]
 pub struct ContainerReader {
     source: std::sync::Arc<dyn ByteSource>,
@@ -1197,6 +1200,16 @@ impl ContainerReader {
     /// Field names in container order.
     pub fn field_names(&self) -> impl Iterator<Item = &str> {
         self.fields.iter().map(|f| f.name.as_str())
+    }
+
+    /// The complete container bytes, when the backing [`ByteSource`]
+    /// is contiguous in memory (`MemSource`, `MmapSource`). `None` for
+    /// pread-backed sources. Lets the service archive spill an
+    /// in-memory batch to its shard file verbatim — the write is
+    /// exactly the bytes the reader indexed, so a reopen of the shard
+    /// is byte-identical by construction.
+    pub fn source_bytes(&self) -> Option<&[u8]> {
+        self.source.slice(0, usize::try_from(self.source.len()).ok()?)
     }
 
     /// Bounds-checked chunk index lookup.

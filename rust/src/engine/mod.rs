@@ -111,10 +111,18 @@ impl Default for EngineConfig {
     }
 }
 
-/// The stateless engine core: selector config + codec registry +
-/// run-shaping knobs. All entry points take `&self`; the only mutable
-/// state is per-run (routers, pools, spill stores), so one engine is
-/// safely shared across threads (`Arc<Engine>` in the service layer).
+/// The stateless engine core (DESIGN.md §12): selector config + codec
+/// registry + run-shaping knobs. All entry points take `&self`; the
+/// only mutable state is per-run (routers, pools, spill stores), so
+/// one engine is safely shared across threads — `Arc<Engine>` behind
+/// [`crate::service::Service`] is the intended server shape.
+///
+/// The compress entry points ([`Engine::run`], [`Engine::run_chunked`],
+/// [`Engine::compress_chunked_to`]) produce the container wire formats
+/// of DESIGN.md §6; the load entry points ([`Engine::load_field`],
+/// [`Engine::load_reader`]) decode them back through any
+/// [`crate::coordinator::store::ContainerReader`], memory- or
+/// file-backed.
 #[derive(Debug)]
 pub struct Engine {
     cfg: EngineConfig,

@@ -4,26 +4,51 @@
 //! Rate-Distortion from Automatic Online Selection between SZ and ZFP"*
 //! (Tao, Di, Liang, Chen, Cappello — 2018).
 //!
-//! The crate contains three groups of functionality:
+//! The crate contains four groups of functionality:
 //!
 //! 1. **Substrates** — complete reimplementations of the two leading
 //!    error-bounded lossy compressors for HPC floating-point data:
 //!    [`sz`] (Lorenzo prediction + linear quantization + Huffman) and
 //!    [`zfp`] (4ⁿ block orthogonal transform + embedded bit-plane
-//!    coding), sharing the [`codec`] bit-stream / entropy-coding layer.
+//!    coding), sharing the [`codec`] bit-stream / entropy-coding layer,
+//!    plus [`dct`] as a third selectable codec behind the
+//!    [`codec_api::CodecRegistry`] trait surface.
 //! 2. **The paper's contribution** — the [`estimator`] module: a
 //!    low-overhead online model that predicts each compressor's
 //!    bit-rate and PSNR from a small sample of the data and selects the
 //!    rate-distortion-optimal codec per field (Algorithm 1).
 //! 3. **The runtime** — a [`coordinator`] that drives many fields
-//!    through estimation + compression on a worker pool, an [`iosim`]
+//!    through estimation + compression on a worker pool and owns the
+//!    seekable container formats ([`coordinator::store`]), an [`iosim`]
 //!    GPFS-like parallel-filesystem model for the 1,024-rank experiments
 //!    (paper Figs. 8–9), and a [`runtime`] PJRT bridge that can execute
 //!    the estimator's Stage-I transforms from an AOT-compiled JAX/Pallas
 //!    artifact instead of the native Rust path.
+//! 4. **The server** — a stateless, thread-safe [`engine::Engine`]
+//!    shared via `Arc`, wrapped by the concurrent [`service`] front end
+//!    (bounded queue, batching, TCP transport) over a persistent
+//!    sharded archive store ([`service::archive`]) that survives
+//!    restarts with bounded memory residency.
 //!
-//! See `DESIGN.md` for the full system inventory and the experiment
-//! index mapping every table/figure of the paper to a bench target.
+//! `DESIGN.md` holds the full system inventory; the module ↔ section
+//! map is:
+//!
+//! | Modules | DESIGN.md |
+//! |---|---|
+//! | [`sz`], [`zfp`], [`codec`] | §1–§5 substrates and entropy coding |
+//! | [`coordinator::store`] (containers, [`coordinator::store::ByteSource`]) | §6 wire formats |
+//! | [`coordinator`], [`baseline`] | §7 run invariants, §8 experiment index |
+//! | [`config`], [`testing`], [`bench_util`] | §9 offline environment |
+//! | [`runtime`] | §10 PJRT feature gate |
+//! | [`estimator`], [`dct`], [`codec_api`] | §11 multi-way selection |
+//! | [`engine`], [`service`] (+ [`cli`]) | §12 engine core and service front end |
+//! | [`codec::crc32`], [`sz::kernels`], mmap sources | §13 hardware dispatch |
+//! | [`service::archive`] | §14 persistent sharded archive store |
+//!
+//! `OPERATIONS.md` is the operator guide: every environment pin
+//! (`ADAPTIVEC_FORCE_CRC`, `ADAPTIVEC_SCALAR_KERNELS`,
+//! `ADAPTIVEC_NO_MMAP`, bench knobs), the serve/client quickstart, and
+//! how to read a [`service::stats::ServiceReport`].
 //!
 //! ## Quick start
 //!

@@ -1,0 +1,831 @@
+//! Persistent sharded archive store beneath the service (DESIGN.md
+//! §14): the layer that turns the in-memory batch archive into a
+//! restartable, bounded-residency store.
+//!
+//! A compressed batch enters **hot**: its container bytes live in
+//! memory behind a [`ContainerReader`], exactly as before. Once hot
+//! residency crosses [`ArchiveConfig::mem_budget`], the oldest batches
+//! **spill**: their bytes are written verbatim to a container file in
+//! a shard directory (keyed by the hash of the batch's first field
+//! name), published atomically by temp-write + rename + fsync, and the
+//! in-memory copy is evicted. Cold fields are fetched by reopening the
+//! shard file through a bounded LRU of open readers
+//! ([`ArchiveConfig::open_readers`]), each backed by the
+//! `mmap`-first / `CachedSource`-fallback machinery of
+//! [`ContainerReader::open_cached`].
+//!
+//! On startup, [`ArchiveStore::open`] recovers the full field index by
+//! scanning the shard directories: every shard file is opened
+//! *index-only* (the container wire format parses just the index —
+//! payloads are never touched), so recovery is O(fields), not
+//! O(bytes). Shard files carry a monotonic sequence number in their
+//! name; scanning in ascending order makes re-compressions of the same
+//! field name resolve last-write-wins across restarts exactly as they
+//! do within one process lifetime. A shard file that fails to open is
+//! counted ([`ArchiveStats::corrupt_shards`]) and skipped — a corrupt
+//! shard costs the fields it held, never the archive.
+//!
+//! **Byte-identity across the hot/cold boundary:** a spill writes the
+//! batch's container bytes unmodified, the per-chunk CRC-32 of the
+//! `ADAPTC03` format guards them on disk, and the cold fetch path
+//! decodes through the same registry as the hot path — so a fetch
+//! after spill (or after restart) returns bit-identical data to the
+//! in-memory fetch, which is itself bit-identical to the offline
+//! `compress_chunked_to` + `load_field` path.
+
+use super::BatchRecord;
+use crate::coordinator::store::ContainerReader;
+use crate::{Error, Result};
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Number of shard directories (`shard-00` … `shard-0f`) the archive
+/// fans batch files across. Fixed: the shard of a batch is
+/// `fnv1a(first field name) % SHARD_DIRS`, so related batches spread
+/// deterministically without any directory growing unboundedly deep.
+pub const SHARD_DIRS: u64 = 16;
+
+/// Per-cold-reader chunk-range cache budget handed to
+/// [`ContainerReader::open_cached`] on targets where mmap is
+/// unavailable or pinned off (`ADAPTIVEC_NO_MMAP`).
+const COLD_READER_CACHE_BYTES: usize = 8 << 20;
+
+/// Shard file extension (recovery scans only these).
+const SHARD_EXT: &str = "adptc";
+
+/// Archive tuning knobs (CLI: `serve --archive-dir/--archive-mem/
+/// --archive-readers`).
+#[derive(Clone, Debug)]
+pub struct ArchiveConfig {
+    /// Root of the shard directory tree. `None` keeps the archive
+    /// purely in memory (the pre-persistence behavior): nothing
+    /// spills, nothing survives the process, and `mem_budget` is not
+    /// enforced because there is nowhere to evict to.
+    pub root_dir: Option<PathBuf>,
+    /// Hot-set budget in container bytes: once in-memory batches
+    /// exceed this, the oldest spill to their shard files and are
+    /// evicted. `0` spills every batch as soon as it lands (cold-only
+    /// archive — useful for tests and strict-residency deployments).
+    pub mem_budget: usize,
+    /// Bounded LRU of open cold-shard [`ContainerReader`]s. Each open
+    /// reader costs a file mapping (or an LRU byte cache); past the
+    /// cap the least recently used is closed.
+    pub open_readers: usize,
+}
+
+impl Default for ArchiveConfig {
+    fn default() -> Self {
+        ArchiveConfig {
+            root_dir: None,
+            mem_budget: 64 << 20,
+            open_readers: 16,
+        }
+    }
+}
+
+/// Point-in-time archive health: residency, spill/evict/recovery
+/// counters, and reader-cache traffic. Plain data — shipped inside
+/// [`super::stats::ServiceReport`].
+#[derive(Clone, Debug, Default)]
+pub struct ArchiveStats {
+    /// Whether a `root_dir` backs this archive (spill + recovery on).
+    pub durable: bool,
+    /// Batches currently resident in memory.
+    pub hot_batches: usize,
+    /// Container bytes currently resident in memory.
+    pub hot_bytes: usize,
+    /// Field names currently served from shard files.
+    pub cold_fields: usize,
+    /// Total field names in the index (hot + cold).
+    pub fields: usize,
+    /// Batches durably written to shard files (spill or flush).
+    pub spills: u64,
+    /// Container bytes durably written.
+    pub spilled_bytes: u64,
+    /// Batches evicted from memory after a durable write.
+    pub evictions: u64,
+    /// Shard files indexed by startup recovery.
+    pub recovered_shards: u64,
+    /// Field names recovered from shard indexes at startup.
+    pub recovered_fields: u64,
+    /// Shard files skipped by recovery because their index would not
+    /// parse (corruption is contained, never a panic).
+    pub corrupt_shards: u64,
+    /// Cold fetches served by an already-open shard reader.
+    pub reader_hits: u64,
+    /// Cold fetches that had to (re)open a shard file.
+    pub reader_misses: u64,
+}
+
+impl ArchiveStats {
+    /// The grep-able summary fragment appended to the service report
+    /// line (`archive:` anchor).
+    pub fn summary(&self) -> String {
+        format!(
+            "archive: {} hot batches ({} B) / {} cold fields; \
+             spills {} ({} B), evictions {}; recovered {} fields from {} shards \
+             ({} corrupt skipped); reader cache {} hits / {} misses",
+            self.hot_batches,
+            self.hot_bytes,
+            self.cold_fields,
+            self.spills,
+            self.spilled_bytes,
+            self.evictions,
+            self.recovered_fields,
+            self.recovered_shards,
+            self.corrupt_shards,
+            self.reader_hits,
+            self.reader_misses,
+        )
+    }
+}
+
+/// Lock-free archive counters (bumped under I/O, read by snapshots).
+#[derive(Debug, Default)]
+struct ArchiveCounters {
+    spills: AtomicU64,
+    spilled_bytes: AtomicU64,
+    evictions: AtomicU64,
+    recovered_shards: AtomicU64,
+    recovered_fields: AtomicU64,
+    corrupt_shards: AtomicU64,
+    reader_hits: AtomicU64,
+    reader_misses: AtomicU64,
+}
+
+/// Where one field name currently resolves.
+#[derive(Clone, Debug)]
+enum FieldSlot {
+    /// Served from the in-memory batch with this sequence number.
+    Hot(u64),
+    /// Served from this shard file (opened on demand through the
+    /// reader LRU).
+    Cold(PathBuf),
+}
+
+/// One memory-resident batch: the reader over its container bytes plus
+/// the names it covers (needed to retarget their slots on spill).
+struct HotBatch {
+    names: Vec<String>,
+    reader: Arc<ContainerReader>,
+    bytes_len: usize,
+}
+
+/// Bounded LRU of open cold-shard readers.
+#[derive(Default)]
+struct ReaderCache {
+    map: HashMap<PathBuf, (Arc<ContainerReader>, u64)>,
+    tick: u64,
+}
+
+impl ReaderCache {
+    fn touch(&mut self, path: &Path) -> Option<Arc<ContainerReader>> {
+        self.tick += 1;
+        let tick = self.tick;
+        self.map.get_mut(path).map(|(r, stamp)| {
+            *stamp = tick;
+            Arc::clone(r)
+        })
+    }
+
+    fn insert(&mut self, path: PathBuf, reader: Arc<ContainerReader>, cap: usize) {
+        self.tick += 1;
+        let tick = self.tick;
+        self.map.insert(path, (reader, tick));
+        while self.map.len() > cap.max(1) {
+            let oldest = self
+                .map
+                .iter()
+                .min_by_key(|(_, (_, stamp))| *stamp)
+                .map(|(k, _)| k.clone());
+            match oldest {
+                Some(k) => {
+                    self.map.remove(&k);
+                }
+                None => break,
+            }
+        }
+    }
+}
+
+/// Mutable archive state behind one mutex. File writes happen
+/// *outside* the lock (the spill staging protocol below), so fetches
+/// never stall behind disk I/O.
+struct ArchiveState {
+    /// Field name → current location (last write wins).
+    fields: BTreeMap<String, FieldSlot>,
+    /// Memory-resident batches by sequence number (ascending order ==
+    /// insertion order, so eviction pops the front).
+    hot: BTreeMap<u64, HotBatch>,
+    /// Batches mid-spill: already claimed by a spilling thread,
+    /// removed from `hot`, still fetchable until the file lands.
+    in_flight: HashMap<u64, HotBatch>,
+    /// Bytes across `hot` + `in_flight`.
+    hot_bytes: usize,
+    /// Next batch sequence number (continues past recovered shards).
+    next_seq: u64,
+    /// Open cold readers (bounded LRU).
+    readers: ReaderCache,
+    /// Bounded diagnostic ring of recent raw batch bytes.
+    log: VecDeque<BatchRecord>,
+}
+
+/// The persistent sharded archive store. All methods take `&self`;
+/// one `Arc<ArchiveStore>` is shared by the service workers, the
+/// handle snapshots, and the shutdown path.
+pub struct ArchiveStore {
+    cfg: ArchiveConfig,
+    log_max: usize,
+    state: Mutex<ArchiveState>,
+    counters: ArchiveCounters,
+}
+
+impl std::fmt::Debug for ArchiveStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ArchiveStore").field("cfg", &self.cfg).finish()
+    }
+}
+
+/// FNV-1a over a field name — the shard-directory key. Stable across
+/// processes (recovery depends only on the directory scan, but keeping
+/// the key deterministic keeps shard layout reproducible).
+fn fnv1a(name: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// `shard-XX` directory name for a batch whose first field is `name`.
+fn shard_dir_name(name: &str) -> String {
+    format!("shard-{:02x}", fnv1a(name) % SHARD_DIRS)
+}
+
+/// Shard file name for batch `seq`. The zero-padded hex sequence makes
+/// lexicographic order equal numeric order, and recovery's
+/// last-write-wins depends on it.
+fn shard_file_name(seq: u64) -> String {
+    format!("batch-{seq:016x}.{SHARD_EXT}")
+}
+
+/// Parse the sequence number back out of a shard file name; `None`
+/// for foreign files (recovery ignores them).
+fn parse_shard_seq(file_name: &str) -> Option<u64> {
+    let rest = file_name.strip_prefix("batch-")?;
+    let hex = rest.strip_suffix(&format!(".{SHARD_EXT}"))?;
+    if hex.len() != 16 {
+        return None;
+    }
+    u64::from_str_radix(hex, 16).ok()
+}
+
+impl ArchiveStore {
+    /// Open an archive: create the shard tree (if durable) and recover
+    /// the field index by scanning every shard file index-only. The
+    /// recovered fields are all cold; memory residency starts at zero.
+    pub fn open(cfg: ArchiveConfig, log_max: usize) -> Result<ArchiveStore> {
+        let counters = ArchiveCounters::default();
+        let mut fields = BTreeMap::new();
+        let mut next_seq = 0u64;
+        if let Some(root) = &cfg.root_dir {
+            std::fs::create_dir_all(root)?;
+            // Collect (seq, path) across all shard dirs, then index in
+            // ascending sequence order so later batches win field names
+            // — the same last-write-wins the live insert path applies.
+            let mut found: Vec<(u64, PathBuf)> = Vec::new();
+            for entry in std::fs::read_dir(root)? {
+                let dir = entry?.path();
+                if !dir.is_dir() {
+                    continue;
+                }
+                for entry in std::fs::read_dir(&dir)? {
+                    let path = entry?.path();
+                    let Some(seq) = path
+                        .file_name()
+                        .and_then(|n| n.to_str())
+                        .and_then(parse_shard_seq)
+                    else {
+                        continue;
+                    };
+                    found.push((seq, path));
+                }
+            }
+            found.sort();
+            for (seq, path) in found {
+                next_seq = next_seq.max(seq + 1);
+                // Index-only open: parses magic + index, payloads
+                // untouched — recovery is O(fields), not O(bytes).
+                match ContainerReader::open(&path) {
+                    Ok(reader) => {
+                        counters.recovered_shards.fetch_add(1, Ordering::Relaxed);
+                        for name in reader.field_names() {
+                            fields.insert(name.to_string(), FieldSlot::Cold(path.clone()));
+                        }
+                    }
+                    Err(_) => {
+                        // A shard that will not even index is skipped:
+                        // its fields are lost, the archive is not.
+                        counters.corrupt_shards.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            let recovered = fields.len() as u64;
+            counters.recovered_fields.store(recovered, Ordering::Relaxed);
+        }
+        Ok(ArchiveStore {
+            cfg,
+            log_max,
+            state: Mutex::new(ArchiveState {
+                fields,
+                hot: BTreeMap::new(),
+                in_flight: HashMap::new(),
+                hot_bytes: 0,
+                next_seq,
+                readers: ReaderCache::default(),
+                log: VecDeque::new(),
+            }),
+            counters,
+        })
+    }
+
+    fn lock(&self) -> Result<MutexGuard<'_, ArchiveState>> {
+        self.state
+            .lock()
+            .map_err(|_| Error::Other("archive lock poisoned".into()))
+    }
+
+    /// Index one finished batch as hot, then spill the oldest batches
+    /// if the hot set is over budget. Re-compressing a name replaces
+    /// its mapping (last write wins); the raw-bytes log keeps only the
+    /// most recent `log_max` batches.
+    pub fn insert(&self, names: Vec<String>, bytes: Vec<u8>) -> Result<()> {
+        let bytes_len = bytes.len();
+        let reader = Arc::new(ContainerReader::from_bytes(bytes.clone())?);
+        {
+            let mut st = self.lock()?;
+            let seq = st.next_seq;
+            st.next_seq += 1;
+            for n in &names {
+                st.fields.insert(n.clone(), FieldSlot::Hot(seq));
+            }
+            st.hot.insert(seq, HotBatch { names: names.clone(), reader, bytes_len });
+            st.hot_bytes += bytes_len;
+            st.log.push_back(BatchRecord { names, bytes });
+            while st.log.len() > self.log_max.max(1) {
+                st.log.pop_front();
+            }
+        }
+        self.enforce_budget()
+    }
+
+    /// Spill oldest hot batches until residency is back under the
+    /// memory budget. No-op for in-memory archives (nowhere to evict
+    /// to — the pre-persistence behavior, residency unbounded).
+    fn enforce_budget(&self) -> Result<()> {
+        if self.cfg.root_dir.is_none() {
+            return Ok(());
+        }
+        loop {
+            let staged = {
+                let mut st = self.lock()?;
+                if st.hot_bytes <= self.cfg.mem_budget || st.hot.is_empty() {
+                    return Ok(());
+                }
+                self.stage_oldest(&mut st)
+            };
+            match staged {
+                Some(s) => self.complete_spill(s)?,
+                None => return Ok(()),
+            }
+        }
+    }
+
+    /// Durably write every memory-resident batch to its shard file and
+    /// evict it. Called on graceful shutdown (and drop) so a restart
+    /// recovers everything the service ever acknowledged — the fix for
+    /// the archive previously dying with the process. Returns how many
+    /// batches were written.
+    pub fn flush(&self) -> Result<usize> {
+        if self.cfg.root_dir.is_none() {
+            return Ok(0);
+        }
+        let mut flushed = 0usize;
+        loop {
+            let staged = {
+                let mut st = self.lock()?;
+                self.stage_oldest(&mut st)
+            };
+            match staged {
+                Some(s) => {
+                    self.complete_spill(s)?;
+                    flushed += 1;
+                }
+                None => return Ok(flushed),
+            }
+        }
+    }
+
+    /// Claim the oldest hot batch for spilling: move it to `in_flight`
+    /// (still fetchable) and pick its shard path. The file write
+    /// happens outside the lock in [`ArchiveStore::complete_spill`].
+    fn stage_oldest(&self, st: &mut ArchiveState) -> Option<StagedSpill> {
+        let (&seq, _) = st.hot.iter().next()?;
+        let batch = st.hot.remove(&seq).expect("key from iteration");
+        let root = self.cfg.root_dir.as_ref().expect("durable archives only");
+        let dir = root.join(shard_dir_name(batch.names.first().map(String::as_str).unwrap_or("")));
+        let path = dir.join(shard_file_name(seq));
+        let reader = Arc::clone(&batch.reader);
+        st.in_flight.insert(seq, batch);
+        Some(StagedSpill { seq, dir, path, reader })
+    }
+
+    /// Write a staged batch to its shard file (temp + fsync + rename —
+    /// the file is either fully published or absent) and retarget its
+    /// field slots to the cold path. On failure the batch returns to
+    /// the hot set untouched.
+    fn complete_spill(&self, s: StagedSpill) -> Result<()> {
+        let bytes = s
+            .reader
+            .source_bytes()
+            .ok_or_else(|| Error::Other("hot batch reader is not memory-backed".into()))?;
+        let wrote = write_shard_file(&s.dir, &s.path, bytes);
+        let mut st = self.lock()?;
+        let batch = st.in_flight.remove(&s.seq).expect("staged batch stays in flight");
+        match wrote {
+            Ok(()) => {
+                // Retarget only names still pointing at this batch — a
+                // newer insert may have taken a name over meanwhile.
+                for name in &batch.names {
+                    if let Some(slot) = st.fields.get_mut(name) {
+                        if matches!(slot, FieldSlot::Hot(seq) if *seq == s.seq) {
+                            *slot = FieldSlot::Cold(s.path.clone());
+                        }
+                    }
+                }
+                // Pre-warm the reader cache with the (memory-backed)
+                // reader under the cold path key: fetches racing the
+                // eviction stay hit-fast, and once the LRU drops it
+                // the next fetch reopens from the published file.
+                let cap = self.cfg.open_readers;
+                st.readers.insert(s.path, batch.reader, cap);
+                st.hot_bytes -= batch.bytes_len;
+                self.counters.spills.fetch_add(1, Ordering::Relaxed);
+                self.counters
+                    .spilled_bytes
+                    .fetch_add(batch.bytes_len as u64, Ordering::Relaxed);
+                self.counters.evictions.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+            Err(e) => {
+                // Failed write: the batch stays hot (and re-eligible),
+                // nothing was evicted, the caller sees the error.
+                st.hot.insert(s.seq, batch);
+                Err(e)
+            }
+        }
+    }
+
+    /// Resolve a field to a reader, hot or cold. `Ok(None)` means the
+    /// name was never archived. Cold resolutions go through the
+    /// bounded reader LRU; reopening uses [`ContainerReader::open_cached`]
+    /// (mmap-first, pread + LRU cache fallback), so repeated cold
+    /// fetches pay the open once per cache residency.
+    pub fn reader_for(&self, name: &str) -> Result<Option<Arc<ContainerReader>>> {
+        let slot = {
+            let mut st = self.lock()?;
+            match st.fields.get(name).cloned() {
+                None => return Ok(None),
+                Some(FieldSlot::Hot(seq)) => {
+                    if let Some(b) = st.hot.get(&seq).or_else(|| st.in_flight.get(&seq)) {
+                        return Ok(Some(Arc::clone(&b.reader)));
+                    }
+                    // Slot says hot but the batch is gone — a spill
+                    // retargeted concurrently; fall through by
+                    // re-reading the (now Cold) slot.
+                    match st.fields.get(name).cloned() {
+                        Some(FieldSlot::Cold(p)) => p,
+                        _ => return Ok(None),
+                    }
+                }
+                Some(FieldSlot::Cold(path)) => {
+                    if let Some(r) = st.readers.touch(&path) {
+                        self.counters.reader_hits.fetch_add(1, Ordering::Relaxed);
+                        return Ok(Some(r));
+                    }
+                    path
+                }
+            }
+        };
+        // Miss: open outside the lock so concurrent fetches of cached
+        // readers never stall behind this open.
+        self.counters.reader_misses.fetch_add(1, Ordering::Relaxed);
+        let reader = Arc::new(ContainerReader::open_cached(&slot, COLD_READER_CACHE_BYTES)?);
+        let mut st = self.lock()?;
+        let cap = self.cfg.open_readers;
+        st.readers.insert(slot, Arc::clone(&reader), cap);
+        Ok(Some(reader))
+    }
+
+    /// Recent raw batch container bytes (bounded diagnostic ring — the
+    /// byte-identity tests read it; spilling does not remove entries,
+    /// only the ring cap does).
+    pub fn records(&self) -> Vec<BatchRecord> {
+        self.lock().map(|st| st.log.iter().cloned().collect()).unwrap_or_default()
+    }
+
+    /// Field names currently in the index, hot and cold.
+    pub fn field_names(&self) -> Vec<String> {
+        self.lock().map(|st| st.fields.keys().cloned().collect()).unwrap_or_default()
+    }
+
+    /// Container bytes currently resident in memory.
+    pub fn hot_bytes(&self) -> usize {
+        self.lock().map(|st| st.hot_bytes).unwrap_or(0)
+    }
+
+    /// Snapshot the archive counters and residency.
+    pub fn stats(&self) -> ArchiveStats {
+        let (hot_batches, hot_bytes, cold_fields, fields) = self
+            .lock()
+            .map(|st| {
+                let cold = st
+                    .fields
+                    .values()
+                    .filter(|s| matches!(s, FieldSlot::Cold(_)))
+                    .count();
+                (st.hot.len() + st.in_flight.len(), st.hot_bytes, cold, st.fields.len())
+            })
+            .unwrap_or((0, 0, 0, 0));
+        let c = &self.counters;
+        ArchiveStats {
+            durable: self.cfg.root_dir.is_some(),
+            hot_batches,
+            hot_bytes,
+            cold_fields,
+            fields,
+            spills: c.spills.load(Ordering::Relaxed),
+            spilled_bytes: c.spilled_bytes.load(Ordering::Relaxed),
+            evictions: c.evictions.load(Ordering::Relaxed),
+            recovered_shards: c.recovered_shards.load(Ordering::Relaxed),
+            recovered_fields: c.recovered_fields.load(Ordering::Relaxed),
+            corrupt_shards: c.corrupt_shards.load(Ordering::Relaxed),
+            reader_hits: c.reader_hits.load(Ordering::Relaxed),
+            reader_misses: c.reader_misses.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Durably publish one shard file: write to a process-unique temp
+/// name, `fsync`, then `rename` over the final path — the shard is
+/// either fully present or absent, never half-written. The temp file
+/// is removed on any failure.
+fn write_shard_file(dir: &Path, path: &Path, bytes: &[u8]) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+    let mut f = std::fs::File::create(&tmp)?;
+    use std::io::Write as _;
+    if let Err(e) = f.write_all(bytes).and_then(|_| f.sync_all()) {
+        drop(f);
+        std::fs::remove_file(&tmp).ok();
+        return Err(e.into());
+    }
+    drop(f);
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        std::fs::remove_file(&tmp).ok();
+        return Err(e.into());
+    }
+    Ok(())
+}
+
+/// A batch claimed for spilling: sequence, destination, and the
+/// memory-backed reader whose source supplies the bytes to write.
+struct StagedSpill {
+    seq: u64,
+    dir: PathBuf,
+    path: PathBuf,
+    reader: Arc<ContainerReader>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::Policy;
+    use crate::data::atm;
+    use crate::engine::Engine;
+
+    fn batch_bytes(engine: &Engine, seeds: &[(u64, usize)]) -> (Vec<String>, Vec<u8>) {
+        let fields: Vec<_> =
+            seeds.iter().map(|&(s, i)| atm::generate_field_scaled(s, i, 0)).collect();
+        let (_, bytes) = engine
+            .compress_chunked_to(&fields, Policy::RateDistortion, 1e-3, 2048, Vec::new())
+            .unwrap();
+        (fields.iter().map(|f| f.name.clone()).collect(), bytes)
+    }
+
+    fn temp_root(tag: &str) -> PathBuf {
+        let p = std::env::temp_dir()
+            .join(format!("adaptivec_archive_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&p).ok();
+        p
+    }
+
+    #[test]
+    fn shard_names_roundtrip_and_are_stable() {
+        assert_eq!(parse_shard_seq(&shard_file_name(0)), Some(0));
+        assert_eq!(parse_shard_seq(&shard_file_name(0xdead_beef)), Some(0xdead_beef));
+        assert_eq!(parse_shard_seq("batch-zz.adptc"), None);
+        assert_eq!(parse_shard_seq("other.bin"), None);
+        // Same name, same shard — layout is deterministic.
+        assert_eq!(shard_dir_name("CLDHGH"), shard_dir_name("CLDHGH"));
+        assert!(shard_dir_name("CLDHGH").starts_with("shard-"));
+    }
+
+    #[test]
+    fn in_memory_archive_never_spills() {
+        let engine = Engine::default();
+        let store = ArchiveStore::open(ArchiveConfig::default(), 4).unwrap();
+        let (names, bytes) = batch_bytes(&engine, &[(91, 0)]);
+        store.insert(names.clone(), bytes).unwrap();
+        let st = store.stats();
+        assert!(!st.durable);
+        assert_eq!(st.spills, 0);
+        assert_eq!(st.hot_batches, 1);
+        assert!(store.reader_for(&names[0]).unwrap().is_some());
+        assert!(store.reader_for("never").unwrap().is_none());
+    }
+
+    #[test]
+    fn zero_budget_spills_every_batch_and_cold_fetch_is_byte_identical() {
+        let engine = Engine::default();
+        let root = temp_root("zero_budget");
+        let cfg = ArchiveConfig {
+            root_dir: Some(root.clone()),
+            mem_budget: 0,
+            open_readers: 2,
+        };
+        let store = ArchiveStore::open(cfg, 4).unwrap();
+        let (names, bytes) = batch_bytes(&engine, &[(92, 0), (92, 1)]);
+        store.insert(names.clone(), bytes.clone()).unwrap();
+        let st = store.stats();
+        assert_eq!(st.spills, 1);
+        assert_eq!(st.evictions, 1);
+        assert_eq!(st.hot_bytes, 0, "zero budget keeps nothing resident");
+        assert_eq!(st.cold_fields, names.len());
+
+        // Cold fetch decodes bit-identically to the offline reader.
+        let offline = ContainerReader::from_bytes(bytes).unwrap();
+        for n in &names {
+            let cold = store.reader_for(n).unwrap().expect("cold field resolves");
+            let want = engine.load_field(&offline, n).unwrap();
+            let got = engine.load_field(&cold, n).unwrap();
+            assert_eq!(got.dims, want.dims);
+            assert_eq!(got.data, want.data, "cold fetch of '{n}' diverged");
+        }
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn recovery_rebuilds_index_and_respects_last_write_wins() {
+        let engine = Engine::default();
+        let root = temp_root("recovery");
+        let cfg = ArchiveConfig {
+            root_dir: Some(root.clone()),
+            mem_budget: 0,
+            open_readers: 4,
+        };
+        {
+            let store = ArchiveStore::open(cfg.clone(), 4).unwrap();
+            let (names_a, bytes_a) = batch_bytes(&engine, &[(93, 0)]);
+            store.insert(names_a, bytes_a).unwrap();
+            // Re-compress the same field with different data: the
+            // later batch must win, in-process and across restart.
+            let (names_b, bytes_b) = batch_bytes(&engine, &[(94, 0)]);
+            let expect = {
+                let r = ContainerReader::from_bytes(bytes_b.clone()).unwrap();
+                engine.load_field(&r, &names_b[0]).unwrap()
+            };
+            store.insert(names_b.clone(), bytes_b).unwrap();
+            let live = store.reader_for(&names_b[0]).unwrap().unwrap();
+            assert_eq!(engine.load_field(&live, &names_b[0]).unwrap().data, expect.data);
+
+            // Restart: same root, fresh store.
+            let recovered = ArchiveStore::open(cfg.clone(), 4).unwrap();
+            let st = recovered.stats();
+            assert_eq!(st.recovered_shards, 2);
+            assert_eq!(st.recovered_fields, 1, "same name across both shards");
+            assert_eq!(st.corrupt_shards, 0);
+            let r = recovered.reader_for(&names_b[0]).unwrap().unwrap();
+            assert_eq!(
+                engine.load_field(&r, &names_b[0]).unwrap().data,
+                expect.data,
+                "recovery must resolve the later shard"
+            );
+            // New inserts continue the sequence past recovered shards.
+            let (names_c, bytes_c) = batch_bytes(&engine, &[(95, 1)]);
+            recovered.insert(names_c, bytes_c).unwrap();
+            assert_eq!(recovered.stats().spills, 1);
+        }
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn corrupt_shard_is_skipped_with_counter_not_a_panic() {
+        let engine = Engine::default();
+        let root = temp_root("corrupt");
+        let cfg = ArchiveConfig {
+            root_dir: Some(root.clone()),
+            mem_budget: 0,
+            open_readers: 4,
+        };
+        let (names_a, names_b) = {
+            let store = ArchiveStore::open(cfg.clone(), 4).unwrap();
+            let (names_a, bytes_a) = batch_bytes(&engine, &[(96, 0)]);
+            let (names_b, bytes_b) = batch_bytes(&engine, &[(96, 1)]);
+            store.insert(names_a.clone(), bytes_a).unwrap();
+            store.insert(names_b.clone(), bytes_b).unwrap();
+            (names_a, names_b)
+        };
+        // Corrupt the first batch's shard file (truncate to garbage).
+        let mut corrupted = 0;
+        for dir in std::fs::read_dir(&root).unwrap() {
+            let dir = dir.unwrap().path();
+            if !dir.is_dir() {
+                continue;
+            }
+            for f in std::fs::read_dir(&dir).unwrap() {
+                let p = f.unwrap().path();
+                if p.file_name().and_then(|n| n.to_str()) == Some(shard_file_name(0).as_str()) {
+                    std::fs::write(&p, b"not a container").unwrap();
+                    corrupted += 1;
+                }
+            }
+        }
+        assert_eq!(corrupted, 1, "batch 0's shard file must exist");
+        let recovered = ArchiveStore::open(cfg, 4).unwrap();
+        let st = recovered.stats();
+        assert_eq!(st.corrupt_shards, 1);
+        assert_eq!(st.recovered_shards, 1);
+        // The healthy batch still serves; the corrupt one is absent.
+        assert!(recovered.reader_for(&names_b[0]).unwrap().is_some());
+        assert!(recovered.reader_for(&names_a[0]).unwrap().is_none());
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn reader_lru_is_bounded_and_counts_hits() {
+        let engine = Engine::default();
+        let root = temp_root("lru");
+        let cfg = ArchiveConfig {
+            root_dir: Some(root.clone()),
+            mem_budget: 0,
+            open_readers: 1, // every alternating fetch evicts the other
+        };
+        let store = ArchiveStore::open(cfg, 8).unwrap();
+        let (names_a, bytes_a) = batch_bytes(&engine, &[(97, 0)]);
+        let (names_b, bytes_b) = batch_bytes(&engine, &[(97, 1)]);
+        store.insert(names_a.clone(), bytes_a).unwrap();
+        store.insert(names_b.clone(), bytes_b).unwrap();
+        // Spills pre-warm the cache; with cap 1 only batch B's reader
+        // survived. Fetch A (miss: reopen), A again (hit), then B
+        // (miss: A's reader evicted it), then A (miss again).
+        let base = store.stats();
+        store.reader_for(&names_a[0]).unwrap().unwrap();
+        store.reader_for(&names_a[0]).unwrap().unwrap();
+        store.reader_for(&names_b[0]).unwrap().unwrap();
+        store.reader_for(&names_a[0]).unwrap().unwrap();
+        let st = store.stats();
+        assert_eq!(st.reader_hits - base.reader_hits, 1);
+        assert_eq!(st.reader_misses - base.reader_misses, 3);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn flush_persists_hot_batches_for_recovery() {
+        let engine = Engine::default();
+        let root = temp_root("flush");
+        let cfg = ArchiveConfig {
+            root_dir: Some(root.clone()),
+            mem_budget: usize::MAX, // nothing spills on its own
+            open_readers: 4,
+        };
+        let names = {
+            let store = ArchiveStore::open(cfg.clone(), 4).unwrap();
+            let (names, bytes) = batch_bytes(&engine, &[(98, 0), (98, 1)]);
+            store.insert(names.clone(), bytes).unwrap();
+            assert_eq!(store.stats().spills, 0, "under budget: still hot");
+            assert_eq!(store.flush().unwrap(), 1);
+            assert_eq!(store.hot_bytes(), 0);
+            names
+        };
+        let recovered = ArchiveStore::open(cfg, 4).unwrap();
+        assert_eq!(recovered.stats().recovered_fields as usize, names.len());
+        for n in &names {
+            assert!(recovered.reader_for(n).unwrap().is_some(), "{n} lost across flush");
+        }
+        std::fs::remove_dir_all(&root).ok();
+    }
+}

@@ -16,25 +16,29 @@
 //! In-process callers use a [`ServiceHandle`] (cheap to clone, safe
 //! from any thread); remote callers go through [`net::Server`] /
 //! [`net::Client`], which translate frames into the same handle calls.
-//! Compressed batches land in an in-memory archive of container bytes,
-//! indexed per field, so `Fetch` decodes exactly one field's chunks
-//! through the engine's pread-style partial decode — byte-identical to
-//! the offline `compress_chunked_to` + `load_field` path, because it
-//! *is* that path.
+//! Compressed batches land in the [`archive`] store — hot batches in
+//! memory, cold batches spilled to sharded container files once the
+//! memory budget is crossed, the whole index recovered by a shard scan
+//! on restart — so `Fetch` decodes exactly one field's chunks through
+//! the engine's pread-style partial decode whether the batch is hot or
+//! cold. Either way the decode is byte-identical to the offline
+//! `compress_chunked_to` + `load_field` path, because it *is* that
+//! path.
 
+pub mod archive;
 pub mod batcher;
 pub mod net;
 pub mod queue;
 pub mod stats;
 
+pub use archive::{ArchiveConfig, ArchiveStats, ArchiveStore};
+
 use crate::baseline::Policy;
-use crate::coordinator::store::ContainerReader;
 use crate::data::field::Field;
 use crate::engine::Engine;
 use crate::{Error, Result};
-use std::collections::BTreeMap;
 use std::sync::atomic::Ordering;
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
 /// One request a client can make of the service.
@@ -105,6 +109,10 @@ pub struct ServiceConfig {
     /// the archive retains for inspection — a bounded diagnostic ring,
     /// not the archive itself (per-field readers are kept regardless).
     pub batch_log_max: usize,
+    /// Archive persistence knobs: shard root, hot-set memory budget,
+    /// open-reader cap. The default ([`ArchiveConfig::default`]) keeps
+    /// the archive purely in memory.
+    pub archive: ArchiveConfig,
 }
 
 impl Default for ServiceConfig {
@@ -118,6 +126,7 @@ impl Default for ServiceConfig {
             eb_rel: 1e-4,
             chunk_elems: 64 * 1024,
             batch_log_max: 16,
+            archive: ArchiveConfig::default(),
         }
     }
 }
@@ -131,77 +140,26 @@ pub struct BatchRecord {
     pub bytes: Vec<u8>,
 }
 
-/// In-memory archive of compressed batches: per-field readers for
-/// `Fetch`, plus a bounded ring of recent raw batch container bytes
-/// for inspection (the byte-identity tests and diagnostics read it;
-/// capping it keeps a long-running server's residency proportional to
-/// the live field set, not to everything it ever ingested).
-struct Archive {
-    readers: Mutex<BTreeMap<String, Arc<ContainerReader>>>,
-    batches: Mutex<std::collections::VecDeque<BatchRecord>>,
-    log_max: usize,
-}
-
-impl Archive {
-    fn new(log_max: usize) -> Archive {
-        Archive {
-            readers: Mutex::new(BTreeMap::new()),
-            batches: Mutex::new(std::collections::VecDeque::new()),
-            log_max,
-        }
-    }
-
-    /// Index one finished batch. Re-compressing a name replaces its
-    /// mapping (last write wins — the batcher guarantees one name
-    /// never appears twice within a pass); the raw-bytes log keeps
-    /// only the most recent `log_max` batches.
-    fn insert(&self, names: Vec<String>, bytes: Vec<u8>) -> Result<()> {
-        let reader = Arc::new(ContainerReader::from_bytes(bytes.clone())?);
-        {
-            let mut m = self
-                .readers
-                .lock()
-                .map_err(|_| Error::Other("service archive lock poisoned".into()))?;
-            for n in &names {
-                m.insert(n.clone(), Arc::clone(&reader));
-            }
-        }
-        let mut log = self
-            .batches
-            .lock()
-            .map_err(|_| Error::Other("service archive lock poisoned".into()))?;
-        log.push_back(BatchRecord { names, bytes });
-        while log.len() > self.log_max.max(1) {
-            log.pop_front();
-        }
-        Ok(())
-    }
-
-    fn reader_for(&self, name: &str) -> Option<Arc<ContainerReader>> {
-        self.readers.lock().ok()?.get(name).cloned()
-    }
-
-    fn records(&self) -> Vec<BatchRecord> {
-        self.batches.lock().map(|b| b.iter().cloned().collect()).unwrap_or_default()
-    }
-}
-
-/// A running service: worker threads + queue + archive around one
-/// shared engine. Dropping (or [`Service::shutdown`]) closes the queue,
-/// drains the backlog, and joins the workers.
+/// A running service: worker threads + queue + archive store around
+/// one shared engine. [`Service::shutdown`] (and `Drop`) closes the
+/// queue, drains the backlog, joins the workers, and flushes every
+/// still-hot batch to its shard file — a durable archive loses nothing
+/// the service ever acknowledged.
 pub struct Service {
     queue: Arc<queue::RequestQueue<Job>>,
     counters: Arc<stats::ServiceCounters>,
-    archive: Arc<Archive>,
+    archive: Arc<ArchiveStore>,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Service {
-    /// Spawn the worker threads and start serving.
-    pub fn start(engine: Arc<Engine>, cfg: ServiceConfig) -> Service {
+    /// Open (and, for durable configs, recover) the archive store,
+    /// spawn the worker threads, and start serving. Fails only if the
+    /// archive root cannot be created or scanned.
+    pub fn start(engine: Arc<Engine>, cfg: ServiceConfig) -> Result<Service> {
         let queue = Arc::new(queue::RequestQueue::new(cfg.queue_depth));
         let counters = Arc::new(stats::ServiceCounters::new());
-        let archive = Arc::new(Archive::new(cfg.batch_log_max));
+        let archive = Arc::new(ArchiveStore::open(cfg.archive.clone(), cfg.batch_log_max)?);
         let mut workers = Vec::new();
         for i in 0..cfg.workers.max(1) {
             let engine = Arc::clone(&engine);
@@ -216,7 +174,7 @@ impl Service {
                     .expect("spawn service worker"),
             );
         }
-        Service { queue, counters, archive, workers }
+        Ok(Service { queue, counters, archive, workers })
     }
 
     /// A clonable, thread-safe submission handle.
@@ -224,12 +182,19 @@ impl Service {
         ServiceHandle {
             queue: Arc::clone(&self.queue),
             counters: Arc::clone(&self.counters),
+            archive: Arc::clone(&self.archive),
         }
     }
 
     /// Direct counter snapshot (no queue round-trip).
     pub fn report(&self) -> stats::ServiceReport {
-        snapshot(&self.queue, &self.counters)
+        snapshot(&self.queue, &self.counters, &self.archive)
+    }
+
+    /// The archive store behind this service (counter assertions and
+    /// direct flushes in tests/benches).
+    pub fn archive(&self) -> &Arc<ArchiveStore> {
+        &self.archive
     }
 
     /// The most recent per-batch container bytes (a bounded ring of
@@ -239,23 +204,32 @@ impl Service {
         self.archive.records()
     }
 
-    /// Stop admitting, drain the backlog, join the workers, and return
-    /// the final report.
+    /// Stop admitting, drain the backlog, join the workers, flush the
+    /// archive, and return the final report.
     pub fn shutdown(mut self) -> stats::ServiceReport {
+        self.stop_and_flush();
+        snapshot(&self.queue, &self.counters, &self.archive)
+    }
+
+    /// Close the queue, join every worker, then durably write all
+    /// still-hot batches. Flushing *after* the join is what makes the
+    /// guarantee total: no worker can insert a batch once the flush
+    /// starts. A flush failure (e.g. disk full) is reported on stderr
+    /// rather than panicking the drop path.
+    fn stop_and_flush(&mut self) {
         self.queue.close();
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
-        snapshot(&self.queue, &self.counters)
+        if let Err(e) = self.archive.flush() {
+            eprintln!("adaptivec service: archive flush on shutdown failed: {e}");
+        }
     }
 }
 
 impl Drop for Service {
     fn drop(&mut self) {
-        self.queue.close();
-        for h in self.workers.drain(..) {
-            let _ = h.join();
-        }
+        self.stop_and_flush();
     }
 }
 
@@ -264,6 +238,7 @@ impl Drop for Service {
 pub struct ServiceHandle {
     queue: Arc<queue::RequestQueue<Job>>,
     counters: Arc<stats::ServiceCounters>,
+    archive: Arc<ArchiveStore>,
 }
 
 impl ServiceHandle {
@@ -299,7 +274,7 @@ impl ServiceHandle {
     /// Direct counter snapshot — never queued, so it works even when
     /// admission is rejecting.
     pub fn report(&self) -> stats::ServiceReport {
-        snapshot(&self.queue, &self.counters)
+        snapshot(&self.queue, &self.counters, &self.archive)
     }
 }
 
@@ -321,6 +296,7 @@ impl Ticket {
 fn snapshot(
     queue: &queue::RequestQueue<Job>,
     counters: &stats::ServiceCounters,
+    archive: &ArchiveStore,
 ) -> stats::ServiceReport {
     let q = queue.stats();
     stats::ServiceReport {
@@ -336,6 +312,7 @@ fn snapshot(
         p50: counters.latency.quantile(0.50),
         p99: counters.latency.quantile(0.99),
         latency_count: counters.latency.count(),
+        archive: archive.stats(),
     }
 }
 
@@ -359,7 +336,7 @@ fn worker_loop(
     engine: &Engine,
     cfg: &ServiceConfig,
     queue: &queue::RequestQueue<Job>,
-    archive: &Archive,
+    archive: &ArchiveStore,
     counters: &stats::ServiceCounters,
 ) {
     let batcher = batcher::Batcher {
@@ -385,7 +362,7 @@ fn worker_loop(
 fn compress_batch(
     engine: &Engine,
     cfg: &ServiceConfig,
-    archive: &Archive,
+    archive: &ArchiveStore,
     counters: &stats::ServiceCounters,
     batch: Vec<Job>,
 ) {
@@ -439,7 +416,7 @@ fn compress_batch(
 fn handle_single(
     engine: &Engine,
     queue: &queue::RequestQueue<Job>,
-    archive: &Archive,
+    archive: &ArchiveStore,
     counters: &stats::ServiceCounters,
     job: Job,
 ) {
@@ -447,12 +424,13 @@ fn handle_single(
     let result = match req {
         Request::Compress { .. } => unreachable!("batcher routes compress into batches"),
         Request::Fetch { name } => match archive.reader_for(&name) {
-            Some(reader) => engine.load_field(&reader, &name).map(Response::Field),
-            None => Err(Error::InvalidArg(format!(
+            Ok(Some(reader)) => engine.load_field(&reader, &name).map(Response::Field),
+            Ok(None) => Err(Error::InvalidArg(format!(
                 "field '{name}' is not in the service archive"
             ))),
+            Err(e) => Err(e),
         },
-        Request::Stats => Ok(Response::Stats(snapshot(queue, counters))),
+        Request::Stats => Ok(Response::Stats(snapshot(queue, counters, archive))),
         Request::Stall { millis } => {
             std::thread::sleep(std::time::Duration::from_millis(millis));
             Ok(Response::Stalled)
@@ -491,7 +469,7 @@ mod tests {
 
     #[test]
     fn compress_fetch_roundtrip() {
-        let svc = Service::start(test_engine(), test_cfg());
+        let svc = Service::start(test_engine(), test_cfg()).unwrap();
         let handle = svc.handle();
         let field = atm::generate_field_scaled(71, 0, 0);
         match handle.compress(field.clone()).unwrap() {
@@ -518,7 +496,7 @@ mod tests {
 
     #[test]
     fn fetch_of_unknown_field_is_an_error_not_a_hang() {
-        let svc = Service::start(test_engine(), test_cfg());
+        let svc = Service::start(test_engine(), test_cfg()).unwrap();
         let handle = svc.handle();
         assert!(handle.fetch("never-compressed").is_err());
         let report = svc.shutdown();
@@ -527,7 +505,7 @@ mod tests {
 
     #[test]
     fn stats_request_flows_through_the_queue() {
-        let svc = Service::start(test_engine(), test_cfg());
+        let svc = Service::start(test_engine(), test_cfg()).unwrap();
         let handle = svc.handle();
         let field = atm::generate_field_scaled(72, 1, 0);
         handle.compress(field).unwrap();
@@ -547,7 +525,8 @@ mod tests {
         let svc = Service::start(
             test_engine(),
             ServiceConfig { workers: 1, ..test_cfg() },
-        );
+        )
+        .unwrap();
         let handle = svc.handle();
         // Occupy the worker, then queue real work behind it.
         let stall = handle.submit(Request::Stall { millis: 150 }).unwrap();
@@ -567,5 +546,64 @@ mod tests {
         }
         assert_eq!(report.admitted, 4);
         assert_eq!(report.completed, 4);
+    }
+
+    #[test]
+    fn shutdown_flushes_hot_batches_to_shards() {
+        // Regression: a durable archive used to die with the process —
+        // batches still under the memory budget were never written.
+        // Graceful shutdown must flush them so a restart recovers all.
+        let root = std::env::temp_dir()
+            .join(format!("adaptivec_svc_flush_{}", std::process::id()));
+        std::fs::remove_dir_all(&root).ok();
+        let cfg = ServiceConfig {
+            archive: ArchiveConfig {
+                root_dir: Some(root.clone()),
+                mem_budget: usize::MAX, // nothing spills before shutdown
+                open_readers: 4,
+            },
+            ..test_cfg()
+        };
+        let field = atm::generate_field_scaled(75, 0, 0);
+        {
+            let svc = Service::start(test_engine(), cfg.clone()).unwrap();
+            svc.handle().compress(field.clone()).unwrap();
+            let report = svc.shutdown();
+            assert!(report.archive.spills >= 1, "shutdown must flush hot batches");
+            assert_eq!(report.archive.hot_bytes, 0, "flush must evict what it wrote");
+        }
+        let svc = Service::start(test_engine(), cfg).unwrap();
+        assert!(svc.report().archive.recovered_fields >= 1);
+        let restored = svc.handle().fetch(&field.name).unwrap();
+        assert_eq!(restored.dims, field.dims);
+        drop(svc);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn drop_without_shutdown_also_flushes() {
+        // The same guarantee on the implicit path: Drop flushes too.
+        let root = std::env::temp_dir()
+            .join(format!("adaptivec_svc_dropflush_{}", std::process::id()));
+        std::fs::remove_dir_all(&root).ok();
+        let cfg = ServiceConfig {
+            archive: ArchiveConfig {
+                root_dir: Some(root.clone()),
+                mem_budget: usize::MAX,
+                open_readers: 4,
+            },
+            ..test_cfg()
+        };
+        let field = atm::generate_field_scaled(76, 1, 0);
+        {
+            let svc = Service::start(test_engine(), cfg.clone()).unwrap();
+            svc.handle().compress(field.clone()).unwrap();
+            // No shutdown(): the service is simply dropped.
+        }
+        let svc = Service::start(test_engine(), cfg).unwrap();
+        let restored = svc.handle().fetch(&field.name).unwrap();
+        assert_eq!(restored.dims, field.dims);
+        drop(svc);
+        std::fs::remove_dir_all(&root).ok();
     }
 }

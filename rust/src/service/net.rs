@@ -435,7 +435,8 @@ impl Client {
         Ok(field)
     }
 
-    /// The server's one-line [`super::stats::ServiceReport`] summary.
+    /// The server's [`super::stats::ServiceReport`] summary text (the
+    /// service line plus the archive line).
     pub fn stats(&mut self) -> Result<String> {
         let resp = self.call(&[OP_STATS])?;
         let mut cur = Self::expect(&resp, OP_STATS_TEXT)?;
@@ -521,7 +522,8 @@ mod tests {
         let svc = Service::start(
             engine.clone(),
             ServiceConfig { eb_rel: 1e-3, chunk_elems: 2048, ..ServiceConfig::default() },
-        );
+        )
+        .unwrap();
         let server = Server::bind(svc.handle(), "127.0.0.1:0").unwrap();
         let addr = server.local_addr().to_string();
         let acceptor = std::thread::spawn(move || server.run());

@@ -139,6 +139,10 @@ pub struct ServiceReport {
     pub p99: Duration,
     /// Samples behind the latency quantiles.
     pub latency_count: u64,
+    /// Archive store health: hot/cold residency, spill/evict/recover
+    /// counters, reader-cache traffic (see
+    /// [`super::archive::ArchiveStats`]).
+    pub archive: super::archive::ArchiveStats,
 }
 
 impl ServiceReport {
@@ -151,13 +155,14 @@ impl ServiceReport {
         }
     }
 
-    /// The grep-able one-line summary (CI pins the `admitted` /
-    /// `batches` fields of this line).
+    /// The grep-able summary (CI pins the `admitted` / `batches`
+    /// fields of the first line and the `spills` / `recovered` fields
+    /// of the archive line).
     pub fn summary(&self) -> String {
         format!(
             "service: admitted {} / rejected {} / completed {} / errors {}; \
              queue depth {} (peak {}); batches {} (avg {:.2}, max {}); \
-             latency p50 {:.3} ms / p99 {:.3} ms over {} requests",
+             latency p50 {:.3} ms / p99 {:.3} ms over {} requests\n{}",
             self.admitted,
             self.rejected,
             self.completed,
@@ -170,6 +175,7 @@ impl ServiceReport {
             self.p50.as_secs_f64() * 1e3,
             self.p99.as_secs_f64() * 1e3,
             self.latency_count,
+            self.archive.summary(),
         )
     }
 }
@@ -235,11 +241,29 @@ mod tests {
             p50: Duration::from_micros(128),
             p99: Duration::from_micros(1024),
             latency_count: 10,
+            archive: super::super::archive::ArchiveStats {
+                durable: true,
+                hot_batches: 1,
+                hot_bytes: 4096,
+                cold_fields: 7,
+                fields: 8,
+                spills: 5,
+                spilled_bytes: 20_480,
+                evictions: 5,
+                recovered_shards: 2,
+                recovered_fields: 3,
+                corrupt_shards: 0,
+                reader_hits: 9,
+                reader_misses: 4,
+            },
         };
         let s = r.summary();
         assert!(s.contains("admitted 10"), "{s}");
         assert!(s.contains("rejected 2"), "{s}");
         assert!(s.contains("batches 3"), "{s}");
+        assert!(s.contains("archive:"), "{s}");
+        assert!(s.contains("spills 5"), "{s}");
+        assert!(s.contains("recovered 3 fields from 2 shards"), "{s}");
         assert!((r.mean_batch() - 3.0).abs() < 1e-12);
     }
 }

@@ -65,7 +65,7 @@ fn wait_queue_drained(handle: &adaptivec::service::ServiceHandle) {
 #[test]
 fn handle_roundtrip_is_byte_identical_to_offline_path() {
     let engine = engine();
-    let svc = Service::start(Arc::clone(&engine), svc_cfg());
+    let svc = Service::start(Arc::clone(&engine), svc_cfg()).unwrap();
     let handle = svc.handle();
     let fields = fields(6, 91);
 
@@ -104,7 +104,8 @@ fn one_coalesced_batch_reproduces_offline_container_bytes() {
     let svc = Service::start(
         Arc::clone(&engine),
         ServiceConfig { workers: 1, batch_max: 16, ..svc_cfg() },
-    );
+    )
+    .unwrap();
     let handle = svc.handle();
     let fields = fields(4, 92);
 
@@ -146,7 +147,8 @@ fn over_capacity_burst_rejects_busy_without_losing_accepted_requests() {
     let svc = Service::start(
         Arc::clone(&engine),
         ServiceConfig { workers: 1, queue_depth: 2, batch_max: 1, ..svc_cfg() },
-    );
+    )
+    .unwrap();
     let handle = svc.handle();
 
     // Pin the only worker, deterministically, then burst far past the
