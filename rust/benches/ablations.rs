@@ -203,8 +203,8 @@ fn ablate_engine() {
 }
 
 fn ablate_stage3() {
-    // Huffman vs range coder vs Huffman+zstd on real SZ symbol streams:
-    // quantifies the entropy gap the paper's +0.5 offset models.
+    // Huffman vs range coder on real SZ symbol streams: quantifies the
+    // entropy gap the paper's +0.5 offset models.
     use adaptivec::codec::arith;
     use adaptivec::sz::huffman_stage;
     let f = atm::generate_field(2018, 0);
@@ -288,6 +288,66 @@ fn ablate_fixed_rate() {
     t.print("Ablation 9 — ZFP fixed-rate mode rate-distortion (constant per-block budget)");
 }
 
+fn ablate_pipelines() {
+    // Staged pipelines (DESIGN.md §15): on rough fields at tight
+    // bounds, the bitround→SZ chain's lattice-atomic error
+    // distribution prices below plain SZ at iso-PSNR — and the
+    // candidate ranking picks it. Estimated and real rates side by
+    // side so the model's win is checkable against achieved bytes.
+    use adaptivec::codec_api::{CodecRegistry, PIPE_BITROUND_SZ};
+    use adaptivec::estimator::selector::{CandidateSet, Choice, PipelineMask};
+    use adaptivec::sz::SzCompressor;
+    let registry = CodecRegistry::default();
+    let sel = AutoSelector::new(SelectorConfig {
+        candidates: CandidateSet {
+            pipelines: PipelineMask::builtins(),
+            ..CandidateSet::all()
+        },
+        ..Default::default()
+    });
+    let mut t = Table::new(&[
+        "field",
+        "est BR sz",
+        "est BR bitround+sz",
+        "winner",
+        "real BR sz",
+        "real BR pipe",
+        "PSNR sz",
+        "PSNR pipe",
+    ]);
+    for idx in [4usize, 7, 9] {
+        let f = atm::generate_field_scaled(2018, idx, 1);
+        let vr = f.value_range();
+        if vr <= 0.0 {
+            continue;
+        }
+        let eb = 1e-4 * vr;
+        let (choice, est) = sel.select_abs(&f, eb, vr).unwrap();
+        let pipe = Choice::Pipeline(PIPE_BITROUND_SZ);
+        let n = f.len() as f64;
+        let sz_stream = SzCompressor::default().compress(&f.data, f.dims, eb).unwrap();
+        let p = registry.get(PIPE_BITROUND_SZ).unwrap();
+        let pipe_stream = p.compress(&f.data, f.dims, est.bound_for(pipe)).unwrap();
+        let (sz_rec, _) = SzCompressor::default().decompress(&sz_stream).unwrap();
+        let (pipe_rec, _) = p.decompress(&pipe_stream).unwrap();
+        let sz_stats = adaptivec::metrics::error_stats(&f.data, &sz_rec);
+        let pipe_stats = adaptivec::metrics::error_stats(&f.data, &pipe_rec);
+        t.row(&[
+            f.name.clone(),
+            format!("{:.3}", est.bit_rate_of(Choice::Sz)),
+            format!("{:.3}", est.bit_rate_of(pipe)),
+            choice.name().into(),
+            format!("{:.3}", sz_stream.len() as f64 * 8.0 / n),
+            format!("{:.3}", pipe_stream.len() as f64 * 8.0 / n),
+            format!("{:.2}", sz_stats.psnr),
+            format!("{:.2}", pipe_stats.psnr),
+        ]);
+    }
+    t.print(
+        "Ablation 10 — staged pipelines at eb 1e-4 (ATM; bitround+sz must win on rough fields at iso-or-better PSNR)",
+    );
+}
+
 fn main() {
     ablate_offset();
     ablate_sampling();
@@ -298,4 +358,5 @@ fn main() {
     ablate_stage3();
     ablate_multiway();
     ablate_fixed_rate();
+    ablate_pipelines();
 }

@@ -14,7 +14,7 @@ use crate::baseline::Policy;
 use crate::coordinator::store::ContainerReader;
 use crate::data::{Dataset, Field};
 use crate::engine::{Engine, EngineConfig, WritePlan};
-use crate::estimator::selector::{AutoSelector, CandidateSet, SelectorConfig};
+use crate::estimator::selector::{AutoSelector, CandidateSet, Choice, SelectorConfig};
 use crate::iosim::{FsModel, SvcModel, ThroughputModel, PROC_SWEEP};
 use crate::service::net::{Client, Server};
 use crate::service::{ArchiveConfig, Service, ServiceConfig};
@@ -30,7 +30,8 @@ COMMANDS:
   compress    --dataset <nyx|atm|hurricane> [--scale 0|1|2] [--eb 1e-4]
               [--policy ours|sz|zfp|dct|eb|optimum|baseline] [--workers N]
               [--out FILE] [--seed N] [--rsp 0.05] [--chunk-elems N]
-              [--codecs sz,zfp,dct] [--chunk-prior N] [--prior-band B]
+              [--codecs sz,zfp,dct] [--pipelines bitround+sz,delta+arith]
+              [--chunk-prior N] [--prior-band B]
               [--write-plan single|two-pass] [--spill-mem BYTES]
               (--chunk-elems > 0 streams a chunked, seekable container
                straight to disk — the full payload is never held in
@@ -46,18 +47,23 @@ COMMANDS:
                prior-covered chunk whose value range drifts past that
                relative band re-estimate itself (adaptive refresh);
                --codecs restricts the candidates the 'ours' policy
-               ranks)
+               ranks; --pipelines additionally admits composed staged
+               pipelines — bitround+sz, bitround+zfp,
+               bitround+sz+shuffle, delta+shuffle+huff, delta+arith —
+               into the ranking alongside any bare codec names listed.
+               The two flags share one grammar; pass only one of them)
   decompress  --in FILE [--outdir DIR] [--field NAME]
   estimate    --dataset D [--scale S] [--eb E] [--rsp 0.05] [--codecs C]
-  select      --dataset D [--scale S] [--eb E] [--codecs C]
+              [--pipelines P]
+  select      --dataset D [--scale S] [--eb E] [--codecs C] [--pipelines P]
   sweep       --dataset D [--scale S] [--bounds 1e-3,1e-4,1e-6]
   iobench     --dataset D [--scale S] [--eb E]
   info        --in FILE
   inspect     --in FILE
   serve       [--addr 127.0.0.1:7845] [--workers N] [--queue-depth N]
               [--batch-max N] [--eb E] [--policy P] [--chunk-elems N]
-              [--codecs C] [--archive-dir DIR] [--archive-mem BYTES]
-              [--archive-readers N]
+              [--codecs C] [--pipelines P] [--archive-dir DIR]
+              [--archive-mem BYTES] [--archive-readers N]
               (concurrent service front end over one shared engine:
                bounded request queue with Busy admission control,
                batched store passes, length-prefixed TCP frames; runs
@@ -82,9 +88,16 @@ COMMANDS:
 
 fn selector_cfg(args: &Args) -> Result<SelectorConfig> {
     let r_sp = args.get_or("rsp", SelectorConfig::default().r_sp)?;
-    let candidates = match args.get("codecs") {
-        Some(list) => CandidateSet::parse(list)?,
-        None => CandidateSet::all(),
+    let candidates = match (args.get("codecs"), args.get("pipelines")) {
+        (Some(_), Some(_)) => {
+            return Err(Error::InvalidArg(
+                "use --codecs or --pipelines, not both (either flag accepts bare codec \
+                 names and pipeline names alike)"
+                    .into(),
+            ))
+        }
+        (Some(list), None) | (None, Some(list)) => CandidateSet::parse(list)?,
+        (None, None) => CandidateSet::all(),
     };
     Ok(SelectorConfig { r_sp, candidates, ..SelectorConfig::default() })
 }
@@ -290,24 +303,28 @@ fn cmd_estimate(argv: &[String]) -> Result<()> {
     args.check_unknown()?;
     let sel = AutoSelector::new(cfg);
     println!(
-        "{:<22} {:>9} {:>9} {:>9} {:>10} {:>6}",
-        "field", "BR_sz", "BR_zfp", "BR_dct", "PSNR_tgt", "pick"
+        "{:<22} {:>9} {:>9} {:>9} {:>9} {:>10} {:>6}",
+        "field", "BR_sz", "BR_zfp", "BR_dct", "BR_pipe", "PSNR_tgt", "pick"
     );
     for f in &fields {
         let (choice, est) = sel.select(f, eb)?;
-        // DCT's column is only an estimate when DCT competes;
+        // A column is only an estimate when its candidate competes;
         // otherwise it is a sentinel (infinite), shown as "-".
-        let br_dct = if est.br_dct.is_finite() {
-            format!("{:.3}", est.br_dct)
-        } else {
-            "-".into()
-        };
+        let fin = |v: f64| if v.is_finite() { format!("{v:.3}") } else { "-".into() };
+        // Best composed-pipeline column (∞ when no pipeline competes).
+        let br_pipe = cfg
+            .candidates
+            .pipelines
+            .ids()
+            .map(|id| est.bit_rate_of(Choice::Pipeline(id)))
+            .fold(f64::INFINITY, f64::min);
         println!(
-            "{:<22} {:>9.3} {:>9.3} {:>9} {:>10.2} {:>6}",
+            "{:<22} {:>9.3} {:>9.3} {:>9} {:>9} {:>10.2} {:>6}",
             f.name,
             est.br_sz,
             est.br_zfp,
-            br_dct,
+            fin(est.br_dct),
+            fin(br_pipe),
             est.psnr_target,
             choice.name()
         );
@@ -843,6 +860,69 @@ mod tests {
         .unwrap();
         assert!(outdir.join(format!("{name}.f32")).is_file());
         std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    fn pipelines_flag_selects_composed_pipeline_chunks() {
+        use crate::codec_api::PIPE_BITROUND_SZ;
+        let tmp = std::env::temp_dir().join("adaptivec_cli_pipelines_test");
+        std::fs::create_dir_all(&tmp).unwrap();
+        let out = tmp.join("atm.adaptivec2");
+        let argv: Vec<String> = [
+            "--dataset", "atm", "--scale", "0", "--eb", "1e-3", "--out",
+            out.to_str().unwrap(), "--workers", "2", "--chunk-elems", "2048",
+            "--pipelines", "bitround+sz",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        run("compress", &argv).unwrap();
+        // A pipeline-only candidate set selects the composed pipeline
+        // (selection byte 4) for every chunk.
+        let reader = ContainerReader::open(&out).unwrap();
+        assert!(reader
+            .fields
+            .iter()
+            .flat_map(|f| f.chunks.iter())
+            .all(|c| c.selection == PIPE_BITROUND_SZ));
+        // `inspect` resolves the composed chunks by registry name.
+        run("inspect", &["--in".to_string(), out.to_str().unwrap().to_string()]).unwrap();
+        // And the container decompresses back to per-field f32 files.
+        let outdir = tmp.join("restored");
+        run(
+            "decompress",
+            &[
+                "--in".to_string(),
+                out.to_str().unwrap().to_string(),
+                "--outdir".to_string(),
+                outdir.to_str().unwrap().to_string(),
+            ],
+        )
+        .unwrap();
+        let name = reader.fields[0].name.clone();
+        assert!(outdir.join(format!("{name}.f32")).is_file());
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    fn codecs_and_pipelines_flags_are_exclusive() {
+        let argv: Vec<String> = [
+            "--dataset", "atm", "--scale", "0", "--codecs", "sz", "--pipelines",
+            "delta+arith",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let err = run("select", &argv).unwrap_err();
+        assert!(err.to_string().contains("not both"), "{err}");
+        // Pipeline names are accepted through --codecs too (one shared
+        // grammar), so mixed lists need only one flag.
+        let argv: Vec<String> =
+            ["--dataset", "atm", "--scale", "0", "--codecs", "sz,delta+arith"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        run("select", &argv).unwrap();
     }
 
     #[test]

@@ -1,38 +1,96 @@
-//! First-class codec dispatch: the [`Codec`] trait and the
-//! [`CodecRegistry`].
+//! First-class codec dispatch: the [`Codec`] trait, composable
+//! [`Pipeline`]s, and the [`CodecRegistry`].
 //!
 //! Algorithm 1's output is a compressed byte stream {C_i} plus
 //! selection bits {s_i}. Earlier versions hardcoded the selection as a
 //! two-variant enum with magic bytes `0`/`1` matched independently in
 //! the selector, router, store, and CLI; this module makes the mapping
-//! first-class so every backend — SZ, ZFP, the raw passthrough, and
-//! the blockwise-DCT coder — is one registry entry behind one
-//! interface.
+//! first-class so every backend — SZ, ZFP, the raw passthrough, the
+//! blockwise-DCT coder, and composed stage pipelines — is one registry
+//! entry behind one interface.
 //!
-//! Contract (DESIGN.md §4):
+//! Contract (DESIGN.md §4, §15):
 //!
-//! * `id()` is the on-disk selection byte. Ids are unique within a
-//!   registry and stable across container versions: 0 = SZ, 1 = ZFP,
-//!   2 = raw, 3 = DCT. New codecs claim the next free id.
-//! * `compress` produces a *bare* codec stream (no selection byte);
+//! * Every registry entry is a [`Pipeline`]: zero or more array→array
+//!   pre-stages, one array→bytes core codec, zero or more bytes→bytes
+//!   post-stages (see [`stage`]). A bare codec is the degenerate
+//!   single-stage pipeline and keeps its historical wire format
+//!   byte-for-byte.
+//! * `Pipeline::id()` is the on-disk selection byte. Ids are unique
+//!   within a registry and stable across container versions: 0 = SZ,
+//!   1 = ZFP, 2 = raw, 3 = DCT; composed built-ins claim 4+ (see
+//!   [`builtin_pipeline_name`]). New entries claim the next free id.
+//! * `compress` produces a *bare* pipeline stream (no selection byte);
 //!   `decompress` inverts it. SZ and ZFP streams self-describe their
 //!   dims; the raw stream intentionally does not (Container v1
 //!   compatibility) and decodes as [`Dims::D1`] — the container index
-//!   supplies the real dims on the v2 path.
+//!   supplies the real dims on the v2 path. Composed streams prepend
+//!   one varint-length-prefixed config blob per pre-stage, then the
+//!   post-processed core stream.
 //! * The registry is the **only** place that maps selection bytes to
-//!   codecs. Container framing (the leading selection byte of a
+//!   pipelines. Container framing (the leading selection byte of a
 //!   self-describing payload, the bare-raw quirk of v1 entries) lives
 //!   in the registry's encode/decode helpers, nowhere else.
 
+pub mod stage;
+
+use crate::codec::varint;
 use crate::data::field::Dims;
 use crate::dct::{DctCompressor, DctConfig};
 use crate::sz::{SzCompressor, SzConfig};
 use crate::zfp::{ZfpCompressor, ZfpConfig};
 use crate::{Error, Result};
+use stage::{ArithBytes, ArrayStage, BitRound, BytesStage, DeltaLorenzo, HuffBytes, ShuffleBytes};
 
-/// Which codec produced (or should produce) a stream — a thin `Copy`
-/// wrapper over the registry's stable codec ids, kept as the public
-/// selection vocabulary (the paper's s_i bits, generalized).
+/// First selection byte claimed by composed built-in pipelines (bare
+/// codecs own 0..=3).
+pub const FIRST_PIPELINE_ID: u8 = 4;
+
+/// Bit rounding to the error bound, then SZ at the remaining budget.
+pub const PIPE_BITROUND_SZ: u8 = 4;
+/// Bit rounding, then ZFP at the remaining budget.
+pub const PIPE_BITROUND_ZFP: u8 = 5;
+/// Bit rounding, SZ, then a byte shuffle over the core stream.
+pub const PIPE_BITROUND_SZ_SHUFFLE: u8 = 6;
+/// Lossless: Lorenzo residuals → raw bytes → shuffle → Huffman.
+pub const PIPE_DELTA_HUFF: u8 = 7;
+/// Lossless: Lorenzo residuals → raw bytes → range coder.
+pub const PIPE_DELTA_ARITH: u8 = 8;
+
+/// Number of composed-pipeline slots the estimator carries per-field
+/// columns for (selection ids `FIRST_PIPELINE_ID ..
+/// FIRST_PIPELINE_ID + MAX_COMPOSED`).
+pub const MAX_COMPOSED: usize = 8;
+
+/// Name of a composed built-in pipeline (`None` for bare-codec ids and
+/// unassigned bytes). Built-in ids are contiguous from
+/// [`FIRST_PIPELINE_ID`].
+pub const fn builtin_pipeline_name(id: u8) -> Option<&'static str> {
+    match id {
+        PIPE_BITROUND_SZ => Some("bitround+sz"),
+        PIPE_BITROUND_ZFP => Some("bitround+zfp"),
+        PIPE_BITROUND_SZ_SHUFFLE => Some("bitround+sz+shuffle"),
+        PIPE_DELTA_HUFF => Some("delta+shuffle+huff"),
+        PIPE_DELTA_ARITH => Some("delta+arith"),
+        _ => None,
+    }
+}
+
+/// Inverse of [`builtin_pipeline_name`] (case-insensitive).
+pub fn builtin_pipeline_id(name: &str) -> Option<u8> {
+    let mut id = FIRST_PIPELINE_ID;
+    while let Some(n) = builtin_pipeline_name(id) {
+        if n.eq_ignore_ascii_case(name) {
+            return Some(id);
+        }
+        id += 1;
+    }
+    None
+}
+
+/// Which registry entry produced (or should produce) a stream — a thin
+/// `Copy` wrapper over the registry's stable selection ids, kept as
+/// the public selection vocabulary (the paper's s_i bits, generalized).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Choice {
     Sz,
@@ -41,14 +99,17 @@ pub enum Choice {
     Raw,
     /// Blockwise-DCT transform coder (the §7 multi-way extension).
     Dct,
+    /// A composed stage pipeline, named by its selection id.
+    Pipeline(u8),
 }
 
 impl Choice {
-    /// Every registered choice, in selection-byte order.
+    /// Every bare-codec choice, in selection-byte order. Composed
+    /// pipelines are enumerated by the registry, not here.
     pub const ALL: [Choice; 4] = [Choice::Sz, Choice::Zfp, Choice::Raw, Choice::Dct];
 
     /// The on-disk selection byte. This is the compatibility shim over
-    /// codec ids; the registry entries are the source of truth.
+    /// registry ids; the registry entries are the source of truth.
     #[inline]
     pub const fn id(self) -> u8 {
         match self {
@@ -56,10 +117,11 @@ impl Choice {
             Self::Zfp => 1,
             Self::Raw => 2,
             Self::Dct => 3,
+            Self::Pipeline(id) => id,
         }
     }
 
-    /// Inverse of [`Choice::id`] for the built-in codecs.
+    /// Inverse of [`Choice::id`] for the built-in registry entries.
     #[inline]
     pub const fn from_id(id: u8) -> Option<Choice> {
         match id {
@@ -67,7 +129,13 @@ impl Choice {
             1 => Some(Self::Zfp),
             2 => Some(Self::Raw),
             3 => Some(Self::Dct),
-            _ => None,
+            _ => {
+                if builtin_pipeline_name(id).is_some() {
+                    Some(Self::Pipeline(id))
+                } else {
+                    None
+                }
+            }
         }
     }
 
@@ -77,6 +145,10 @@ impl Choice {
             Self::Zfp => "ZFP",
             Self::Raw => "raw",
             Self::Dct => "DCT",
+            Self::Pipeline(id) => match builtin_pipeline_name(id) {
+                Some(n) => n,
+                None => "pipeline",
+            },
         }
     }
 }
@@ -91,6 +163,13 @@ pub trait Codec: Send + Sync {
 
     /// Human-readable name (CLI tables, selection maps).
     fn name(&self) -> &'static str;
+
+    /// True if `decompress(compress(x))` restores `x` bit-exactly for
+    /// any bound. Pipelines use this to validate that exactness-
+    /// requiring pre-stages (delta) sit above a lossless core.
+    fn lossless(&self) -> bool {
+        false
+    }
 
     /// Compress `data` (shaped `dims`) under absolute bound `eb_abs`
     /// into a bare codec stream.
@@ -165,6 +244,10 @@ impl Codec for RawCodec {
         Choice::Raw.name()
     }
 
+    fn lossless(&self) -> bool {
+        true
+    }
+
     fn compress(&self, data: &[f32], dims: Dims, _eb_abs: f64) -> Result<Vec<u8>> {
         debug_assert_eq!(dims.len(), data.len());
         let mut out = Vec::with_capacity(data.len() * 4);
@@ -215,20 +298,181 @@ impl Codec for DctCodec {
     }
 }
 
-/// Resolves selection bytes to codecs — the single source of truth for
-/// the {s_i} → codec mapping (DESIGN.md §11). Every container chunk
-/// records the selection byte of the codec that wrote it; readers hand
-/// that byte back to the registry to decode, which is why new codecs
-/// extend the wire format without changing it.
+/// An ordered stage chain behind one selection byte: pre-stages →
+/// core codec → post-stages (DESIGN.md §15).
+///
+/// Wire format of a composed stream: one varint-length-prefixed config
+/// blob per pre-stage (declared order), then the core stream passed
+/// through the post-stages in order. A bare codec wrapped by
+/// [`Pipeline::single`] has zero stages and zero header bytes, so its
+/// stream is byte-identical to the historical flat-registry output —
+/// the compatibility invariant the differential tests pin.
+///
+/// Error-budget split: the absolute bound is divided evenly across the
+/// lossy participants (lossy pre-stages plus a lossy core), so the
+/// triangle inequality keeps the end-to-end pointwise error within
+/// `eb_abs`.
+pub struct Pipeline {
+    id: u8,
+    name: &'static str,
+    pre: Vec<Box<dyn ArrayStage>>,
+    core: Box<dyn Codec>,
+    post: Vec<Box<dyn BytesStage>>,
+}
+
+impl Pipeline {
+    /// Wrap a bare codec as the degenerate single-stage pipeline.
+    pub fn single(core: Box<dyn Codec>) -> Pipeline {
+        Pipeline { id: core.id(), name: core.name(), pre: Vec::new(), core, post: Vec::new() }
+    }
+
+    /// Build a composed pipeline. Rejects chains where a stage that
+    /// requires bit-exact downstream reconstruction (the delta
+    /// transform) is followed by any lossy stage or a lossy core.
+    pub fn composed(
+        id: u8,
+        name: &'static str,
+        pre: Vec<Box<dyn ArrayStage>>,
+        core: Box<dyn Codec>,
+        post: Vec<Box<dyn BytesStage>>,
+    ) -> Result<Pipeline> {
+        if let Some(i) = pre.iter().position(|s| s.requires_exact_downstream()) {
+            let later_lossless = pre[i + 1..].iter().all(|s| s.lossless());
+            if !later_lossless || !core.lossless() {
+                return Err(Error::InvalidArg(format!(
+                    "pipeline '{name}': stage '{}' requires bit-exact downstream \
+                     reconstruction, so every later pre-stage and the core codec \
+                     must be lossless",
+                    pre[i].name()
+                )));
+            }
+        }
+        Ok(Pipeline { id, name, pre, core, post })
+    }
+
+    /// Selection byte of this entry.
+    pub fn id(&self) -> u8 {
+        self.id
+    }
+
+    /// Display name (bare codec name or composed pipeline spec).
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// True for a bare codec with no pre/post stages.
+    pub fn is_single(&self) -> bool {
+        self.pre.is_empty() && self.post.is_empty()
+    }
+
+    /// True if the whole chain restores input bits exactly.
+    pub fn lossless(&self) -> bool {
+        self.core.lossless() && self.pre.iter().all(|s| s.lossless())
+    }
+
+    /// Compress under absolute bound `eb_abs` into a bare pipeline
+    /// stream (no selection byte).
+    pub fn compress(&self, data: &[f32], dims: Dims, eb_abs: f64) -> Result<Vec<u8>> {
+        if self.is_single() {
+            return self.core.compress(data, dims, eb_abs);
+        }
+        let lossy = self.pre.iter().filter(|s| !s.lossless()).count()
+            + usize::from(!self.core.lossless());
+        let allowance = if lossy > 0 { eb_abs / lossy as f64 } else { 0.0 };
+        let mut buf = data.to_vec();
+        let mut out = Vec::new();
+        for s in &self.pre {
+            let a = if s.lossless() { 0.0 } else { allowance };
+            let cfg = s.forward(&mut buf, dims, a)?;
+            varint::write_bytes(&mut out, &cfg);
+        }
+        let eb_core = if self.core.lossless() { eb_abs } else { allowance };
+        let mut bytes = self.core.compress(&buf, dims, eb_core)?;
+        for p in &self.post {
+            bytes = p.forward(&bytes)?;
+        }
+        out.extend_from_slice(&bytes);
+        Ok(out)
+    }
+
+    /// Invert [`Pipeline::compress`]. Truncated or malformed stage
+    /// config blobs decode as `Corrupt`, never a panic.
+    pub fn decompress(&self, stream: &[u8]) -> Result<(Vec<f32>, Dims)> {
+        if self.is_single() {
+            return self.core.decompress(stream);
+        }
+        let mut pos = 0;
+        let mut cfgs: Vec<&[u8]> = Vec::with_capacity(self.pre.len());
+        for _ in &self.pre {
+            cfgs.push(varint::read_bytes(stream, &mut pos)?);
+        }
+        let mut bytes = stream[pos..].to_vec();
+        for p in self.post.iter().rev() {
+            bytes = p.inverse(&bytes)?;
+        }
+        let (mut data, mut dims) = self.core.decompress(&bytes)?;
+        for (s, cfg) in self.pre.iter().zip(cfgs.iter()).rev() {
+            dims = s.inverse(&mut data, dims, cfg)?;
+        }
+        Ok((data, dims))
+    }
+}
+
+/// The composed built-in pipelines registered by
+/// [`CodecRegistry::standard`], ids [`FIRST_PIPELINE_ID`]..
+fn builtin_pipelines(sz: SzConfig, zfp: ZfpConfig) -> Vec<Pipeline> {
+    let p = |id, pre, core, post| {
+        let name = builtin_pipeline_name(id).expect("builtin id has a name");
+        Pipeline::composed(id, name, pre, core, post).expect("builtin pipeline is valid")
+    };
+    vec![
+        p(
+            PIPE_BITROUND_SZ,
+            vec![Box::new(BitRound) as Box<dyn ArrayStage>],
+            Box::new(SzCodec { cfg: sz }) as Box<dyn Codec>,
+            vec![],
+        ),
+        p(
+            PIPE_BITROUND_ZFP,
+            vec![Box::new(BitRound) as Box<dyn ArrayStage>],
+            Box::new(ZfpCodec { cfg: zfp }),
+            vec![],
+        ),
+        p(
+            PIPE_BITROUND_SZ_SHUFFLE,
+            vec![Box::new(BitRound) as Box<dyn ArrayStage>],
+            Box::new(SzCodec { cfg: sz }),
+            vec![Box::new(ShuffleBytes) as Box<dyn BytesStage>],
+        ),
+        p(
+            PIPE_DELTA_HUFF,
+            vec![Box::new(DeltaLorenzo) as Box<dyn ArrayStage>],
+            Box::new(RawCodec),
+            vec![Box::new(ShuffleBytes) as Box<dyn BytesStage>, Box::new(HuffBytes)],
+        ),
+        p(
+            PIPE_DELTA_ARITH,
+            vec![Box::new(DeltaLorenzo) as Box<dyn ArrayStage>],
+            Box::new(RawCodec),
+            vec![Box::new(ArithBytes) as Box<dyn BytesStage>],
+        ),
+    ]
+}
+
+/// Resolves selection bytes to pipelines — the single source of truth
+/// for the {s_i} → entry mapping (DESIGN.md §11, §15). Every container
+/// chunk records the selection byte of the entry that wrote it; readers
+/// hand that byte back to the registry to decode, which is why new
+/// pipelines extend the wire format without changing it.
 pub struct CodecRegistry {
-    codecs: Vec<Box<dyn Codec>>,
+    pipelines: Vec<Pipeline>,
 }
 
 impl std::fmt::Debug for CodecRegistry {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         let entries: Vec<String> =
-            self.codecs.iter().map(|c| format!("{}={}", c.id(), c.name())).collect();
-        f.debug_struct("CodecRegistry").field("codecs", &entries).finish()
+            self.pipelines.iter().map(|p| format!("{}={}", p.id(), p.name())).collect();
+        f.debug_struct("CodecRegistry").field("pipelines", &entries).finish()
     }
 }
 
@@ -241,68 +485,75 @@ impl Default for CodecRegistry {
 impl CodecRegistry {
     /// An empty registry (for custom codec sets).
     pub fn empty() -> Self {
-        CodecRegistry { codecs: Vec::new() }
+        CodecRegistry { pipelines: Vec::new() }
     }
 
-    /// The standard registry: SZ, ZFP, the raw passthrough, and DCT.
+    /// The standard registry: SZ, ZFP, the raw passthrough, DCT, and
+    /// the composed built-in pipelines.
     pub fn standard(sz: SzConfig, zfp: ZfpConfig, dct: DctConfig) -> Self {
         let mut r = CodecRegistry::empty();
         r.register(Box::new(SzCodec { cfg: sz })).expect("fresh registry");
         r.register(Box::new(ZfpCodec { cfg: zfp })).expect("fresh registry");
         r.register(Box::new(RawCodec)).expect("fresh registry");
         r.register(Box::new(DctCodec { cfg: dct })).expect("fresh registry");
+        for p in builtin_pipelines(sz, zfp) {
+            r.register_pipeline(p).expect("fresh registry");
+        }
         r
     }
 
-    /// Add a codec; rejects duplicate selection ids.
+    /// Add a bare codec as a single-stage pipeline; rejects duplicate
+    /// selection ids.
     pub fn register(&mut self, codec: Box<dyn Codec>) -> Result<()> {
-        if self.lookup(codec.id()).is_some() {
+        self.register_pipeline(Pipeline::single(codec))
+    }
+
+    /// Add a pipeline; rejects duplicate selection ids.
+    pub fn register_pipeline(&mut self, pipeline: Pipeline) -> Result<()> {
+        if self.lookup(pipeline.id()).is_some() {
             return Err(Error::InvalidArg(format!(
-                "codec id {} ('{}') already registered",
-                codec.id(),
-                codec.name()
+                "registry id {} ('{}') already registered",
+                pipeline.id(),
+                pipeline.name()
             )));
         }
-        self.codecs.push(codec);
+        self.pipelines.push(pipeline);
         Ok(())
     }
 
-    /// Codec for a selection byte, if registered.
-    pub fn lookup(&self, id: u8) -> Option<&dyn Codec> {
-        self.codecs.iter().find(|c| c.id() == id).map(|c| c.as_ref())
+    /// Pipeline for a selection byte, if registered.
+    pub fn lookup(&self, id: u8) -> Option<&Pipeline> {
+        self.pipelines.iter().find(|p| p.id() == id)
     }
 
-    /// Codec for a selection byte, or a corruption error.
-    pub fn get(&self, id: u8) -> Result<&dyn Codec> {
+    /// Pipeline for a selection byte, or a corruption error.
+    pub fn get(&self, id: u8) -> Result<&Pipeline> {
         self.lookup(id)
             .ok_or_else(|| Error::Corrupt(format!("bad selection bit {id}")))
     }
 
-    /// Codec by name (case-insensitive).
-    pub fn by_name(&self, name: &str) -> Option<&dyn Codec> {
-        self.codecs
-            .iter()
-            .find(|c| c.name().eq_ignore_ascii_case(name))
-            .map(|c| c.as_ref())
+    /// Pipeline by name (case-insensitive).
+    pub fn by_name(&self, name: &str) -> Option<&Pipeline> {
+        self.pipelines.iter().find(|p| p.name().eq_ignore_ascii_case(name))
     }
 
     /// Display name for a selection byte ("?" when unregistered).
     pub fn name_of(&self, id: u8) -> &'static str {
-        self.lookup(id).map(|c| c.name()).unwrap_or("?")
+        self.lookup(id).map(|p| p.name()).unwrap_or("?")
     }
 
     /// Registered (id, name) pairs, in registration order.
     pub fn entries(&self) -> impl Iterator<Item = (u8, &'static str)> + '_ {
-        self.codecs.iter().map(|c| (c.id(), c.name()))
+        self.pipelines.iter().map(|p| (p.id(), p.name()))
     }
 
     /// Compress into a self-describing container payload: one leading
-    /// selection byte, then the bare codec stream.
+    /// selection byte, then the bare pipeline stream.
     pub fn encode(&self, choice: Choice, data: &[f32], dims: Dims, eb_abs: f64) -> Result<Vec<u8>> {
-        let codec = self.get(choice.id())?;
-        let stream = codec.compress(data, dims, eb_abs)?;
+        let pipeline = self.get(choice.id())?;
+        let stream = pipeline.compress(data, dims, eb_abs)?;
         let mut out = Vec::with_capacity(stream.len() + 1);
-        out.push(codec.id());
+        out.push(pipeline.id());
         out.extend_from_slice(&stream);
         Ok(out)
     }
@@ -314,7 +565,7 @@ impl CodecRegistry {
         self.decode_stream(sel, stream)
     }
 
-    /// Decode a bare codec stream under an explicit selection byte.
+    /// Decode a bare pipeline stream under an explicit selection byte.
     pub fn decode_stream(&self, selection: u8, stream: &[u8]) -> Result<(Vec<f32>, Dims)> {
         self.get(selection)?.decompress(stream)
     }
@@ -355,29 +606,47 @@ mod tests {
         CodecRegistry::default()
     }
 
+    /// Every registered choice: the bare codecs plus the composed
+    /// built-in pipelines.
+    fn all_choices() -> Vec<Choice> {
+        let mut v = Choice::ALL.to_vec();
+        let mut id = FIRST_PIPELINE_ID;
+        while builtin_pipeline_name(id).is_some() {
+            v.push(Choice::Pipeline(id));
+            id += 1;
+        }
+        v
+    }
+
     #[test]
     fn choice_ids_roundtrip() {
-        for c in Choice::ALL {
+        for c in all_choices() {
             assert_eq!(Choice::from_id(c.id()), Some(c));
         }
         assert_eq!(Choice::Dct.id(), 3);
-        assert_eq!(Choice::from_id(7), None);
+        assert_eq!(Choice::from_id(PIPE_DELTA_HUFF), Some(Choice::Pipeline(PIPE_DELTA_HUFF)));
+        assert_eq!(Choice::from_id(42), None);
+        assert_eq!(Choice::Pipeline(PIPE_BITROUND_SZ).name(), "bitround+sz");
+        assert_eq!(builtin_pipeline_id("bitround+sz"), Some(PIPE_BITROUND_SZ));
+        assert_eq!(builtin_pipeline_id("BitRound+SZ"), Some(PIPE_BITROUND_SZ));
+        assert_eq!(builtin_pipeline_id("zstd"), None);
     }
 
     #[test]
     fn registry_resolves_all_standard_ids() {
         let r = registry();
-        for c in Choice::ALL {
-            let codec = r.get(c.id()).unwrap();
-            assert_eq!(codec.id(), c.id());
-            assert_eq!(codec.name(), c.name());
+        for c in all_choices() {
+            let p = r.get(c.id()).unwrap();
+            assert_eq!(p.id(), c.id());
+            assert_eq!(p.name(), c.name());
         }
-        assert!(r.get(9).is_err());
-        assert_eq!(r.name_of(9), "?");
+        assert!(r.get(42).is_err());
+        assert_eq!(r.name_of(42), "?");
         assert!(r.by_name("sz").is_some());
         assert!(r.by_name("dct").is_some());
+        assert!(r.by_name("bitround+sz+shuffle").is_some());
         assert!(r.by_name("zstd").is_none());
-        assert_eq!(r.entries().count(), 4);
+        assert_eq!(r.entries().count(), 9);
     }
 
     #[test]
@@ -387,12 +656,12 @@ mod tests {
     }
 
     #[test]
-    fn every_codec_roundtrips_through_encode_decode() {
+    fn every_entry_roundtrips_through_encode_decode() {
         let r = registry();
         let f = atm::generate_field_scaled(31, 0, 0);
         let vr = f.value_range();
         let eb = 1e-3 * vr;
-        for choice in Choice::ALL {
+        for choice in all_choices() {
             let payload = r.encode(choice, &f.data, f.dims, eb).unwrap();
             assert_eq!(payload[0], choice.id());
             let (data, dims) = r.decode(&payload).unwrap();
@@ -407,7 +676,80 @@ mod tests {
                 .map(|(a, b)| (a - b).abs() as f64)
                 .fold(0.0f64, f64::max);
             assert!(worst <= eb * (1.0 + 1e-6), "{choice:?}: {worst} > {eb}");
+            if r.get(choice.id()).unwrap().lossless() {
+                assert_eq!(data, f.data, "{choice:?}: lossless pipeline must be exact");
+            }
         }
+    }
+
+    #[test]
+    fn single_stage_pipelines_are_byte_identical_to_bare_codecs() {
+        // The compatibility invariant: wrapping a codec as a pipeline
+        // adds zero header bytes, so historical containers stay
+        // readable and new ones stay byte-identical.
+        let r = registry();
+        let f = atm::generate_field_scaled(29, 2, 0);
+        let eb = 1e-3 * f.value_range();
+        let direct: Vec<(Choice, Vec<u8>)> = vec![
+            (Choice::Sz, SzCompressor::new(SzConfig::default()).compress(&f.data, f.dims, eb).unwrap()),
+            (Choice::Zfp, ZfpCompressor::new(ZfpConfig::default()).compress(&f.data, f.dims, eb).unwrap()),
+            (Choice::Raw, RawCodec.compress(&f.data, f.dims, eb).unwrap()),
+            (Choice::Dct, DctCompressor::new(DctConfig::default()).compress(&f.data, f.dims, eb).unwrap()),
+        ];
+        for (choice, bare) in direct {
+            let via_pipeline = r.get(choice.id()).unwrap().compress(&f.data, f.dims, eb).unwrap();
+            assert_eq!(via_pipeline, bare, "{choice:?}");
+        }
+    }
+
+    #[test]
+    fn composed_pipeline_splits_budget_and_stays_bounded() {
+        let r = registry();
+        let f = atm::generate_field_scaled(47, 7, 0);
+        let eb = 1e-4 * f.value_range();
+        let p = r.get(PIPE_BITROUND_SZ).unwrap();
+        let stream = p.compress(&f.data, f.dims, eb).unwrap();
+        let (data, dims) = p.decompress(&stream).unwrap();
+        assert_eq!(dims, f.dims);
+        let worst = f
+            .data
+            .iter()
+            .zip(&data)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .fold(0.0f64, f64::max);
+        assert!(worst <= eb * (1.0 + 1e-6), "{worst} > {eb}");
+        // The composed stream differs from plain SZ at the same bound
+        // (the bitround stage consumed half the budget).
+        let plain = r.get(Choice::Sz.id()).unwrap().compress(&f.data, f.dims, eb).unwrap();
+        assert_ne!(stream, plain);
+    }
+
+    #[test]
+    fn composed_stream_corruption_is_an_error_not_a_panic() {
+        let r = registry();
+        let f = atm::generate_field_scaled(53, 3, 0);
+        let eb = 1e-3 * f.value_range();
+        for id in [PIPE_BITROUND_SZ, PIPE_BITROUND_SZ_SHUFFLE, PIPE_DELTA_HUFF, PIPE_DELTA_ARITH] {
+            let p = r.get(id).unwrap();
+            let stream = p.compress(&f.data, f.dims, eb).unwrap();
+            assert!(p.decompress(&stream).is_ok());
+            // Every strict prefix must fail cleanly.
+            for cut in [0usize, 1, 2, stream.len() / 2, stream.len() - 1] {
+                assert!(p.decompress(&stream[..cut]).is_err(), "pipeline {id} prefix {cut}");
+            }
+        }
+    }
+
+    #[test]
+    fn exactness_validation_rejects_lossy_core_under_delta() {
+        let bad = Pipeline::composed(
+            99,
+            "delta+sz",
+            vec![Box::new(DeltaLorenzo) as Box<dyn ArrayStage>],
+            Box::new(SzCodec::default()),
+            vec![],
+        );
+        assert!(bad.is_err());
     }
 
     #[test]

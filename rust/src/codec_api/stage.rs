@@ -1,0 +1,477 @@
+//! Composable codec stages (DESIGN.md §15).
+//!
+//! A [`Pipeline`](super::Pipeline) chains three kinds of stage, the
+//! decomposition zarrs uses for its codec chains:
+//!
+//! * **array→array pre-stages** ([`ArrayStage`]): transform the f32
+//!   field before the core coder sees it. Lossy pre-stages (bit
+//!   rounding) consume part of the pipeline's error budget; lossless
+//!   ones (the standalone delta/Lorenzo transform) must be inverted
+//!   bit-exactly, which constrains what may follow them.
+//! * **array→bytes core codecs**: the existing [`Codec`](super::Codec)
+//!   impls (SZ, ZFP, DCT, raw), unchanged.
+//! * **bytes→bytes post-stages** ([`BytesStage`]): reversible byte
+//!   transforms over the core stream — byte shuffle, Huffman, the
+//!   range coder.
+//!
+//! Every pre-stage emits a per-chunk *config blob* (possibly empty)
+//! that its inverse needs; the pipeline frames the blobs ahead of the
+//! core stream (varint length-prefixed, declared stage order) so a
+//! truncated blob decodes as `Corrupt`, never a panic.
+
+use crate::data::field::Dims;
+use crate::sz::lorenzo;
+use crate::{Error, Result};
+
+/// An f32 array→array transform applied before the core codec.
+///
+/// `forward` mutates the buffer in place and returns the config blob
+/// its `inverse` will need. `inverse` undoes the transform on the
+/// decoded buffer and returns the (possibly corrected) dims — the raw
+/// core codec reports `Dims::D1`, so a stage that records the true
+/// shape in its blob (delta/Lorenzo) restores it here.
+pub trait ArrayStage: Send + Sync {
+    /// Short lowercase name, the token used in `--pipelines` specs.
+    fn name(&self) -> &'static str;
+
+    /// True if `inverse(forward(x)) == x` bit-exactly.
+    fn lossless(&self) -> bool;
+
+    /// True if this stage's inverse is only valid when every later
+    /// stage (including the core codec) reproduces its output
+    /// bit-exactly — the delta transform's running reconstruction
+    /// diverges under any downstream loss.
+    fn requires_exact_downstream(&self) -> bool {
+        false
+    }
+
+    /// Apply the transform in place. `allowance` is this stage's share
+    /// of the pipeline's absolute error budget (0 for lossless
+    /// stages). Returns the config blob for [`ArrayStage::inverse`].
+    fn forward(&self, data: &mut [f32], dims: Dims, allowance: f64) -> Result<Vec<u8>>;
+
+    /// Undo the transform in place using the config blob recorded by
+    /// `forward`. Returns the dims of the restored array.
+    fn inverse(&self, data: &mut [f32], dims: Dims, cfg: &[u8]) -> Result<Dims>;
+}
+
+/// A reversible bytes→bytes transform applied after the core codec.
+pub trait BytesStage: Send + Sync {
+    /// Short lowercase name, the token used in `--pipelines` specs.
+    fn name(&self) -> &'static str;
+
+    fn forward(&self, bytes: &[u8]) -> Result<Vec<u8>>;
+
+    fn inverse(&self, bytes: &[u8]) -> Result<Vec<u8>>;
+}
+
+/// Round every value to the lattice `q·Z`, `q = 2·allowance`, so the
+/// stage's pointwise error is ≤ `allowance`. Rounding concentrates the
+/// downstream prediction-error distribution onto lattice atoms (the
+/// estimator's PDF transform models exactly this — see
+/// `ErrorPdf::bitround`), which is what lets a plug-in entropy estimate
+/// replace the extrapolated one on rough fields.
+///
+/// The quantization is evaluated in f64 with a per-value guard: if the
+/// rounded value cast back to f32 lands outside the allowance (huge
+/// magnitudes where one ulp exceeds the bound), the original value is
+/// kept — correctness over smoothness.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BitRound;
+
+impl ArrayStage for BitRound {
+    fn name(&self) -> &'static str {
+        "bitround"
+    }
+
+    fn lossless(&self) -> bool {
+        false
+    }
+
+    fn forward(&self, data: &mut [f32], _dims: Dims, allowance: f64) -> Result<Vec<u8>> {
+        if !(allowance > 0.0) || !allowance.is_finite() {
+            return Err(Error::InvalidArg(format!(
+                "bitround: allowance {allowance} must be positive and finite"
+            )));
+        }
+        let q = 2.0 * allowance;
+        for v in data.iter_mut() {
+            let x = *v as f64;
+            let r = ((x / q).round() * q) as f32;
+            // NaN fails the comparison and is kept unchanged.
+            if r.is_finite() && (r as f64 - x).abs() <= allowance {
+                *v = r;
+            }
+        }
+        Ok(Vec::new())
+    }
+
+    fn inverse(&self, _data: &mut [f32], dims: Dims, cfg: &[u8]) -> Result<Dims> {
+        if !cfg.is_empty() {
+            return Err(Error::Corrupt(format!(
+                "bitround: unexpected {}-byte config blob",
+                cfg.len()
+            )));
+        }
+        Ok(dims)
+    }
+}
+
+/// The SZ Lorenzo predictor lifted out as a standalone lossless
+/// transform: each value is replaced by the *bit-pattern difference*
+/// (wrapping u32 subtraction) between itself and its Lorenzo
+/// prediction from already-scanned neighbors. Smooth fields turn into
+/// near-zero-entropy residual planes that the byte-shuffle + entropy
+/// post-stages exploit.
+///
+/// Exactness contract: predictions are IEEE f32 arithmetic over the
+/// *original* neighbor values (forward walks the scan order backwards
+/// so neighbors are still untouched; inverse walks forwards so they
+/// are already restored), and the residual is pure bit arithmetic — so
+/// the inverse is bit-exact, including NaN/Inf payloads, provided
+/// every downstream stage is lossless. [`Pipeline`](super::Pipeline)
+/// construction enforces that via
+/// [`ArrayStage::requires_exact_downstream`].
+///
+/// The config blob records the field dims: the raw core codec's stream
+/// is shapeless (`Dims::D1`), and the inverse needs the true shape to
+/// re-run the predictor.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DeltaLorenzo;
+
+fn lorenzo_predict(data: &[f32], dims: Dims, i: usize) -> f32 {
+    let e = dims.extents();
+    match dims.ndim() {
+        1 => lorenzo::predict_1d(data, i),
+        2 => {
+            let nx = e[2];
+            lorenzo::predict_2d(data, nx, i / nx, i % nx)
+        }
+        _ => {
+            let (ny, nx) = (e[1], e[2]);
+            let plane = ny * nx;
+            lorenzo::predict_3d(data, ny, nx, i / plane, (i % plane) / nx, i % nx)
+        }
+    }
+}
+
+impl ArrayStage for DeltaLorenzo {
+    fn name(&self) -> &'static str {
+        "delta"
+    }
+
+    fn lossless(&self) -> bool {
+        true
+    }
+
+    fn requires_exact_downstream(&self) -> bool {
+        true
+    }
+
+    fn forward(&self, data: &mut [f32], dims: Dims, _allowance: f64) -> Result<Vec<u8>> {
+        if dims.len() != data.len() {
+            return Err(Error::InvalidArg(format!(
+                "delta: dims {dims} disagree with {} values",
+                data.len()
+            )));
+        }
+        // Reverse scan order: predictions only reference lower indices,
+        // which are still original when processed backwards.
+        for i in (0..data.len()).rev() {
+            let pred = lorenzo_predict(data, dims, i);
+            data[i] = f32::from_bits(data[i].to_bits().wrapping_sub(pred.to_bits()));
+        }
+        let mut cfg = Vec::new();
+        dims.encode(&mut cfg);
+        Ok(cfg)
+    }
+
+    fn inverse(&self, data: &mut [f32], _dims: Dims, cfg: &[u8]) -> Result<Dims> {
+        let mut pos = 0;
+        let dims = Dims::decode(cfg, &mut pos)?;
+        if pos != cfg.len() {
+            return Err(Error::Corrupt("delta: trailing config bytes".into()));
+        }
+        if dims.len() != data.len() {
+            return Err(Error::Corrupt(format!(
+                "delta: config dims {dims} disagree with {} decoded values",
+                data.len()
+            )));
+        }
+        // Forward scan order: lower indices are already restored when a
+        // prediction reads them.
+        for i in 0..data.len() {
+            let pred = lorenzo_predict(data, dims, i);
+            data[i] = f32::from_bits(data[i].to_bits().wrapping_add(pred.to_bits()));
+        }
+        Ok(dims)
+    }
+}
+
+/// Byte shuffle with stride 4 (one plane per f32 byte position): byte
+/// `4j+k` of the input lands in plane `k`. Groups the
+/// similarly-distributed residual bytes so a following entropy stage
+/// sees four peaked distributions instead of one mixed one. A
+/// non-multiple-of-4 tail is carried through verbatim after the planes.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShuffleBytes;
+
+const SHUFFLE_STRIDE: usize = 4;
+
+impl BytesStage for ShuffleBytes {
+    fn name(&self) -> &'static str {
+        "shuffle"
+    }
+
+    fn forward(&self, bytes: &[u8]) -> Result<Vec<u8>> {
+        let rows = bytes.len() / SHUFFLE_STRIDE;
+        let mut out = Vec::with_capacity(bytes.len());
+        for k in 0..SHUFFLE_STRIDE {
+            for j in 0..rows {
+                out.push(bytes[j * SHUFFLE_STRIDE + k]);
+            }
+        }
+        out.extend_from_slice(&bytes[rows * SHUFFLE_STRIDE..]);
+        Ok(out)
+    }
+
+    fn inverse(&self, bytes: &[u8]) -> Result<Vec<u8>> {
+        let rows = bytes.len() / SHUFFLE_STRIDE;
+        let mut out = vec![0u8; bytes.len()];
+        for k in 0..SHUFFLE_STRIDE {
+            for j in 0..rows {
+                out[j * SHUFFLE_STRIDE + k] = bytes[k * rows + j];
+            }
+        }
+        out[rows * SHUFFLE_STRIDE..].copy_from_slice(&bytes[rows * SHUFFLE_STRIDE..]);
+        Ok(out)
+    }
+}
+
+/// Canonical Huffman over raw bytes — `sz/huffman_stage.rs` promoted
+/// from an SZ-internal module to a registry post-stage. Empty input
+/// passes through (the symbol coder needs a non-empty alphabet).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HuffBytes;
+
+impl BytesStage for HuffBytes {
+    fn name(&self) -> &'static str {
+        "huff"
+    }
+
+    fn forward(&self, bytes: &[u8]) -> Result<Vec<u8>> {
+        if bytes.is_empty() {
+            return Ok(Vec::new());
+        }
+        let syms: Vec<u32> = bytes.iter().map(|&b| b as u32).collect();
+        crate::sz::huffman_stage::encode_symbols(&syms)
+    }
+
+    fn inverse(&self, bytes: &[u8]) -> Result<Vec<u8>> {
+        if bytes.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut pos = 0;
+        let syms = crate::sz::huffman_stage::decode_symbols(bytes, &mut pos)?;
+        if pos != bytes.len() {
+            return Err(Error::Corrupt("huff stage: trailing bytes".into()));
+        }
+        syms.iter()
+            .map(|&s| {
+                u8::try_from(s)
+                    .map_err(|_| Error::Corrupt(format!("huff stage: symbol {s} is not a byte")))
+            })
+            .collect()
+    }
+}
+
+/// Static range (arithmetic) coder over raw bytes — `codec/arith.rs`
+/// promoted to a registry post-stage. Reaches the Shannon bound to
+/// within ~0.01 bit/symbol where Huffman pays its up-to-1-bit
+/// quantization gap. Empty input passes through.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ArithBytes;
+
+impl BytesStage for ArithBytes {
+    fn name(&self) -> &'static str {
+        "arith"
+    }
+
+    fn forward(&self, bytes: &[u8]) -> Result<Vec<u8>> {
+        if bytes.is_empty() {
+            return Ok(Vec::new());
+        }
+        let syms: Vec<u32> = bytes.iter().map(|&b| b as u32).collect();
+        crate::codec::arith::encode(&syms)
+    }
+
+    fn inverse(&self, bytes: &[u8]) -> Result<Vec<u8>> {
+        if bytes.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut pos = 0;
+        let syms = crate::codec::arith::decode(bytes, &mut pos)?;
+        if pos != bytes.len() {
+            return Err(Error::Corrupt("arith stage: trailing bytes".into()));
+        }
+        syms.iter()
+            .map(|&s| {
+                u8::try_from(s)
+                    .map_err(|_| Error::Corrupt(format!("arith stage: symbol {s} is not a byte")))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::atm;
+    use crate::testing::Rng;
+
+    #[test]
+    fn bitround_respects_allowance_and_quantizes() {
+        let f = atm::generate_field_scaled(41, 0, 0);
+        let mut data = f.data.clone();
+        let allowance = 1e-3 * f.value_range();
+        let cfg = BitRound.forward(&mut data, f.dims, allowance).unwrap();
+        assert!(cfg.is_empty());
+        let q = 2.0 * allowance;
+        let mut changed = 0usize;
+        for (orig, rounded) in f.data.iter().zip(&data) {
+            let err = (*orig as f64 - *rounded as f64).abs();
+            assert!(err <= allowance, "{err} > {allowance}");
+            // Rounded values sit on the lattice unless the guard fired.
+            let lattice = ((*rounded as f64 / q).round() * q) as f32;
+            assert!(lattice == *rounded || *rounded == *orig);
+            if orig != rounded {
+                changed += 1;
+            }
+        }
+        assert!(changed > f.data.len() / 2, "rounding should move most values");
+        // Inverse is a no-op that validates its (empty) config.
+        let dims = BitRound.inverse(&mut data, f.dims, &[]).unwrap();
+        assert_eq!(dims, f.dims);
+        assert!(BitRound.inverse(&mut data, f.dims, &[1]).is_err());
+    }
+
+    #[test]
+    fn bitround_guards_pathological_values() {
+        let mut data = vec![f32::MAX, f32::MIN, f32::NAN, f32::INFINITY, 0.0, 1.0];
+        let orig = data.clone();
+        BitRound.forward(&mut data, Dims::D1(6), 0.25).unwrap();
+        // Huge magnitudes and non-finite values pass through unchanged.
+        assert_eq!(data[0], orig[0]);
+        assert_eq!(data[1], orig[1]);
+        assert!(data[2].is_nan());
+        assert_eq!(data[3], orig[3]);
+        assert_eq!(data[4], 0.0);
+        assert_eq!(data[5], 1.0);
+        assert!(BitRound.forward(&mut data, Dims::D1(6), 0.0).is_err());
+        assert!(BitRound.forward(&mut data, Dims::D1(6), f64::NAN).is_err());
+    }
+
+    #[test]
+    fn delta_roundtrips_bit_exactly_all_dims() {
+        let mut rng = Rng::new(77);
+        for dims in [Dims::D1(257), Dims::D2(17, 23), Dims::D3(5, 7, 11)] {
+            let mut data: Vec<f32> =
+                (0..dims.len()).map(|_| (rng.gauss() * 50.0) as f32).collect();
+            // Sprinkle specials: the inverse must restore exact bits.
+            data[0] = f32::NAN;
+            data[dims.len() / 2] = f32::INFINITY;
+            data[dims.len() - 1] = -0.0;
+            let orig = data.clone();
+            let cfg = DeltaLorenzo.forward(&mut data, dims, 0.0).unwrap();
+            assert_ne!(data, orig, "{dims}: transform should change the buffer");
+            let back_dims = DeltaLorenzo.inverse(&mut data, Dims::D1(dims.len()), &cfg).unwrap();
+            assert_eq!(back_dims, dims);
+            let same = orig.iter().zip(&data).all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "{dims}: inverse not bit-exact");
+        }
+    }
+
+    #[test]
+    fn delta_rejects_bad_config() {
+        let mut data = vec![1.0f32; 8];
+        let cfg = DeltaLorenzo.forward(&mut data, Dims::D1(8), 0.0).unwrap();
+        // Truncated blob, trailing bytes, and mismatched length all err.
+        assert!(DeltaLorenzo.inverse(&mut data, Dims::D1(8), &cfg[..cfg.len() - 1]).is_err());
+        let mut long = cfg.clone();
+        long.push(0);
+        assert!(DeltaLorenzo.inverse(&mut data, Dims::D1(8), &long).is_err());
+        let mut short = vec![1.0f32; 4];
+        assert!(DeltaLorenzo.inverse(&mut short, Dims::D1(4), &cfg).is_err());
+        // Forward with inconsistent dims is an argument error.
+        assert!(DeltaLorenzo.forward(&mut data, Dims::D1(9), 0.0).is_err());
+    }
+
+    #[test]
+    fn delta_flattens_smooth_fields() {
+        let f = atm::generate_field_scaled(43, 1, 0);
+        let mut data = f.data.clone();
+        DeltaLorenzo.forward(&mut data, f.dims, 0.0).unwrap();
+        // Residual high bytes of a smooth field concentrate near zero:
+        // the top residual byte's empirical entropy must be far below 8.
+        let mut counts = [0u64; 256];
+        for v in &data {
+            counts[(v.to_bits() >> 24) as usize] += 1;
+        }
+        let n = data.len() as f64;
+        let h: f64 = counts
+            .iter()
+            .filter(|&&c| c > 0)
+            .map(|&c| {
+                let p = c as f64 / n;
+                -p * p.log2()
+            })
+            .sum();
+        assert!(h < 6.0, "top residual byte entropy {h} should be well below 8");
+    }
+
+    #[test]
+    fn shuffle_roundtrips_all_tail_lengths() {
+        let mut rng = Rng::new(79);
+        for len in [0usize, 1, 2, 3, 4, 5, 31, 4096, 4097, 4099] {
+            let data: Vec<u8> = (0..len).map(|_| rng.range(0, 255) as u8).collect();
+            let fwd = ShuffleBytes.forward(&data).unwrap();
+            assert_eq!(fwd.len(), data.len());
+            let back = ShuffleBytes.inverse(&fwd).unwrap();
+            assert_eq!(back, data, "len {len}");
+        }
+        // Spot-check the plane layout: byte 4j+k lands in plane k.
+        let data: Vec<u8> = (0..8).collect();
+        let fwd = ShuffleBytes.forward(&data).unwrap();
+        assert_eq!(fwd, vec![0, 4, 1, 5, 2, 6, 3, 7]);
+    }
+
+    #[test]
+    fn entropy_byte_stages_roundtrip_and_reject_garbage() {
+        let mut rng = Rng::new(83);
+        // Peaked byte stream, like shuffled smooth-field residuals.
+        let data: Vec<u8> =
+            (0..20_000).map(|_| if rng.bool(0.9) { 0 } else { rng.range(1, 7) as u8 }).collect();
+        for stage in [&HuffBytes as &dyn BytesStage, &ArithBytes] {
+            let enc = stage.forward(&data).unwrap();
+            assert!(
+                enc.len() < data.len() / 2,
+                "{}: {} bytes should beat half of {}",
+                stage.name(),
+                enc.len(),
+                data.len()
+            );
+            assert_eq!(stage.inverse(&enc).unwrap(), data, "{}", stage.name());
+            // Empty passthrough.
+            assert!(stage.forward(&[]).unwrap().is_empty());
+            assert!(stage.inverse(&[]).unwrap().is_empty());
+            // Truncation is Corrupt, never a panic.
+            for cut in 1..enc.len().min(24) {
+                assert!(
+                    stage.inverse(&enc[..enc.len() - cut]).is_err(),
+                    "{}: truncated by {cut} must err",
+                    stage.name()
+                );
+            }
+        }
+    }
+}

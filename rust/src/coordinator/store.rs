@@ -650,6 +650,10 @@ mod mmap_sys {
 
     pub const PROT_READ: c_int = 1;
     pub const MAP_PRIVATE: c_int = 2;
+    /// `MADV_WILLNEED` — ask the kernel to start readahead on the
+    /// mapped range. Value 3 on every Unix this gate admits (Linux,
+    /// macOS, and the BSDs agree on the low madvise constants).
+    pub const MADV_WILLNEED: c_int = 3;
 
     extern "C" {
         pub fn mmap(
@@ -661,6 +665,7 @@ mod mmap_sys {
             offset: i64,
         ) -> *mut c_void;
         pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+        pub fn madvise(addr: *mut c_void, len: usize, advice: c_int) -> c_int;
     }
 }
 
@@ -672,6 +677,24 @@ pub fn mmap_enabled() -> bool {
     {
         static ENABLED: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
         *ENABLED.get_or_init(|| std::env::var_os("ADAPTIVEC_NO_MMAP").is_none())
+    }
+    #[cfg(not(all(unix, target_pointer_width = "64")))]
+    {
+        false
+    }
+}
+
+/// Whether freshly opened mappings get an `madvise(MADV_WILLNEED)`
+/// readahead hint. Pinned off via `ADAPTIVEC_NO_MADVISE` (checked once
+/// per process, same discipline as `ADAPTIVEC_NO_MMAP`): the hint is
+/// purely advisory, but a pin makes cold-read behavior reproducible
+/// when benchmarking page-cache effects or diagnosing I/O storms on
+/// spinning media.
+pub fn madvise_enabled() -> bool {
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    {
+        static ENABLED: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+        *ENABLED.get_or_init(|| std::env::var_os("ADAPTIVEC_NO_MADVISE").is_none())
     }
     #[cfg(not(all(unix, target_pointer_width = "64")))]
     {
@@ -732,6 +755,18 @@ impl MmapSource {
         };
         if ptr as usize == usize::MAX {
             return Err(Error::Io(std::io::Error::last_os_error()));
+        }
+        // Best-effort readahead: container reads walk the index then
+        // jump to chunk payloads, a pattern the kernel's on-demand
+        // fault readahead serves poorly on cold caches. WILLNEED is
+        // advisory — a failure (or the ADAPTIVEC_NO_MADVISE pin)
+        // changes timing, never bytes, so the result is ignored.
+        if madvise_enabled() {
+            // SAFETY: exactly the range the mmap above returned, still
+            // mapped; madvise does not invalidate the mapping.
+            unsafe {
+                mmap_sys::madvise(ptr, len, mmap_sys::MADV_WILLNEED);
+            }
         }
         // The descriptor can close here: POSIX keeps the mapping live
         // until munmap.
@@ -1830,6 +1865,23 @@ mod tests {
         assert!(mapped.read_at(0, &mut big).is_err());
         assert!(pread.read_at(0, &mut big).is_err());
         assert!(mapped.slice(bytes.len() as u64 - 1, 2).is_none());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    #[test]
+    fn madvise_hint_never_changes_mapped_bytes() {
+        // The WILLNEED hint fires inside MmapSource::open whenever the
+        // pin allows it; either way the mapping must serve the file
+        // verbatim — the hint may change timing, never content.
+        let _ = madvise_enabled(); // resolves the pin exactly once
+        let bytes = sample_v2().to_bytes();
+        let path = std::env::temp_dir().join("adaptivec_store_madvise_test.bin");
+        std::fs::write(&path, &bytes).unwrap();
+        for _ in 0..2 {
+            let mapped = MmapSource::open(&path).unwrap();
+            assert_eq!(mapped.as_slice(), &bytes[..]);
+        }
         std::fs::remove_file(&path).ok();
     }
 

@@ -26,7 +26,8 @@ pub mod pdf;
 pub mod quant_models;
 pub mod sampling;
 pub mod selector;
+pub mod stage_model;
 pub mod sz_model;
 pub mod zfp_model;
 
-pub use selector::{AutoSelector, CandidateSet, Choice, SelectorConfig};
+pub use selector::{AutoSelector, CandidateSet, Choice, PipelineMask, SelectorConfig};

@@ -42,7 +42,10 @@ impl Codec3 {
             Choice::Sz => Ok(Codec3::Sz),
             Choice::Zfp => Ok(Codec3::Zfp),
             Choice::Dct => Ok(Codec3::Dct),
-            Choice::Raw => Err(Error::InvalidArg("raw is not a 3-way candidate".into())),
+            Choice::Raw | Choice::Pipeline(_) => Err(Error::InvalidArg(format!(
+                "{} is not a 3-way candidate",
+                c.name()
+            ))),
         }
     }
 }

@@ -159,6 +159,38 @@ impl ErrorPdf {
         (h, k_n)
     }
 
+    /// Per-stage PDF transform (DESIGN.md §15): predict the effect of
+    /// a bit-rounding pre-stage with quantum `quantum` on this error
+    /// histogram. Rounding the *inputs* to the lattice `quantum·Z`
+    /// makes every downstream Lorenzo prediction error a lattice point
+    /// too (predictions are ± sums of lattice values), so each bin's
+    /// mass moves to the bin of its center snapped to the lattice.
+    /// With `quantum` equal to the bin width the transform is the
+    /// identity — the histogram's own binning already performs the
+    /// snap — and larger quanta concentrate mass (entropy never
+    /// rises). Escape mass stays escape.
+    pub fn bitround(&self, quantum: f64) -> ErrorPdf {
+        assert!(quantum > 0.0 && quantum.is_finite());
+        let nb = self.counts.len();
+        let n = (nb as i64 + 1) / 2; // counts.len() = 2n−1
+        let mut counts = vec![0u64; nb];
+        let mut escape = self.escape_count;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let center = (i as i64 - (n - 1)) as f64 * self.delta;
+            let snapped = (center / quantum).round() * quantum;
+            let q = (snapped / self.delta).round();
+            if q.abs() < n as f64 {
+                counts[(q as i64 + n - 1) as usize] += c;
+            } else {
+                escape += c;
+            }
+        }
+        ErrorPdf { delta: self.delta, counts, escape_count: escape, total: self.total }
+    }
+
     /// Measure of symmetry: |P(left wing) − P(right wing)| (paper
     /// assumes symmetric pred-error distributions; tested on our data).
     pub fn asymmetry(&self) -> f64 {
@@ -249,6 +281,26 @@ mod tests {
         let pdf = ErrorPdf::build(&errs, delta, 255);
         let expect = delta * delta / 12.0;
         assert!((pdf.expected_mse() - expect).abs() < expect * 0.01);
+    }
+
+    #[test]
+    fn bitround_transform_identity_and_concentration() {
+        let mut rng = Rng::new(135);
+        let errs: Vec<f32> = (0..50_000).map(|_| (rng.gauss() * 0.05) as f32).collect();
+        let delta = 0.004;
+        let pdf = ErrorPdf::build(&errs, delta, 4095);
+        // quantum == bin width: the binning already snaps, identity.
+        let same = pdf.bitround(delta);
+        assert_eq!(same.counts, pdf.counts);
+        assert_eq!(same.escape_count, pdf.escape_count);
+        // Coarser quantum concentrates mass: entropy must not rise and
+        // total mass is conserved.
+        let coarse = pdf.bitround(4.0 * delta);
+        assert_eq!(coarse.total, pdf.total);
+        let mass = |p: &ErrorPdf| p.counts.iter().sum::<u64>() + p.escape_count;
+        assert_eq!(mass(&coarse), mass(&pdf));
+        assert!(coarse.entropy() <= pdf.entropy() + 1e-12);
+        assert!(coarse.occupied_bins() <= pdf.occupied_bins());
     }
 
     #[test]

@@ -12,8 +12,12 @@
 //! format) plus the estimates for observability.
 
 use super::sampling::{sample_blocks, DEFAULT_RSP};
-use super::{dct_model, sz_model, zfp_model};
-use crate::codec_api::CodecRegistry;
+use super::{dct_model, stage_model, sz_model, zfp_model};
+use crate::codec_api::{
+    builtin_pipeline_id, builtin_pipeline_name, CodecRegistry, FIRST_PIPELINE_ID, MAX_COMPOSED,
+    PIPE_BITROUND_SZ, PIPE_BITROUND_SZ_SHUFFLE, PIPE_BITROUND_ZFP, PIPE_DELTA_ARITH,
+    PIPE_DELTA_HUFF,
+};
 use crate::data::field::{Dims, Field};
 use crate::dct::compressor::coeff_delta;
 use crate::dct::DctConfig;
@@ -26,13 +30,64 @@ use crate::{Error, Result};
 // here so `estimator::selector::Choice` keeps working.
 pub use crate::codec_api::Choice;
 
+/// Bit-set of composed pipeline ids competing in the ranking
+/// (selection bytes ≥ [`FIRST_PIPELINE_ID`]). A newtype over `u64` so
+/// [`CandidateSet`] stays `Copy` — the whole selector config is passed
+/// by value through the coordinator.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PipelineMask(pub u64);
+
+impl PipelineMask {
+    /// No composed pipelines (the default — bare codecs only, which
+    /// keeps default outputs byte-identical to the flat registry).
+    pub const NONE: PipelineMask = PipelineMask(0);
+
+    /// Every built-in composed pipeline.
+    pub fn builtins() -> Self {
+        let mut m = PipelineMask::NONE;
+        let mut id = FIRST_PIPELINE_ID;
+        while builtin_pipeline_name(id).is_some() {
+            m.insert(id);
+            id += 1;
+        }
+        m
+    }
+
+    /// Enable pipeline `id` (ignores out-of-range ids ≥ 64).
+    pub fn insert(&mut self, id: u8) {
+        if id < 64 {
+            self.0 |= 1u64 << id;
+        }
+    }
+
+    /// `true` if pipeline `id` competes.
+    pub fn contains(self, id: u8) -> bool {
+        id < 64 && self.0 & (1u64 << id) != 0
+    }
+
+    /// `true` if any pipeline competes.
+    pub fn any(self) -> bool {
+        self.0 != 0
+    }
+
+    /// Enabled pipeline ids in ascending order.
+    pub fn ids(self) -> impl Iterator<Item = u8> {
+        (0u8..64).filter(move |&id| self.contains(id))
+    }
+}
+
 /// Which codecs compete in the ranking. `Raw` never competes — it is
 /// the no-compression policy, not a rate-distortion candidate.
+/// Composed pipelines (DESIGN.md §15) compete only when enabled in
+/// `pipelines`; the default mask is empty so default selections (and
+/// therefore default outputs) match the historical flat registry
+/// byte-for-byte.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct CandidateSet {
     pub sz: bool,
     pub zfp: bool,
     pub dct: bool,
+    pub pipelines: PipelineMask,
 }
 
 impl Default for CandidateSet {
@@ -42,43 +97,52 @@ impl Default for CandidateSet {
 }
 
 impl CandidateSet {
-    /// Every registered rate-distortion codec (the default).
+    /// Every registered rate-distortion codec (the default). Composed
+    /// pipelines stay opt-in.
     pub const fn all() -> Self {
-        CandidateSet { sz: true, zfp: true, dct: true }
+        CandidateSet { sz: true, zfp: true, dct: true, pipelines: PipelineMask::NONE }
     }
 
     /// The paper's original Algorithm 1 matrix (SZ vs ZFP) — used by
     /// the Table 2–5 / Fig. 6–9 reproductions for fidelity.
     pub const fn two_way() -> Self {
-        CandidateSet { sz: true, zfp: true, dct: false }
+        CandidateSet { sz: true, zfp: true, dct: false, pipelines: PipelineMask::NONE }
     }
 
-    /// Parse a comma-separated codec list, e.g. `"sz,zfp,dct"`.
+    /// Parse a comma-separated candidate list: bare codec names
+    /// (`sz`, `zfp`, `dct`) and/or built-in pipeline names
+    /// (`bitround+sz`, `delta+arith`, …), e.g. `"sz,bitround+sz"`.
     /// Empty tokens (trailing commas) are ignored; an entirely empty
     /// list is an error.
     pub fn parse(s: &str) -> Result<Self> {
-        let mut set = CandidateSet { sz: false, zfp: false, dct: false };
+        let mut set =
+            CandidateSet { sz: false, zfp: false, dct: false, pipelines: PipelineMask::NONE };
         for tok in s.split(',') {
             match tok.trim().to_ascii_lowercase().as_str() {
                 "" => {}
                 "sz" => set.sz = true,
                 "zfp" => set.zfp = true,
                 "dct" => set.dct = true,
-                other => {
-                    return Err(Error::InvalidArg(format!(
-                        "unknown codec '{other}' (expected sz, zfp, dct)"
-                    )))
-                }
+                other => match builtin_pipeline_id(other) {
+                    Some(id) => set.pipelines.insert(id),
+                    None => {
+                        return Err(Error::InvalidArg(format!(
+                            "unknown candidate '{other}' (expected sz, zfp, dct, or a \
+                             built-in pipeline such as bitround+sz)"
+                        )))
+                    }
+                },
             }
         }
-        if !(set.sz || set.zfp || set.dct) {
+        if !(set.sz || set.zfp || set.dct) && !set.pipelines.any() {
             return Err(Error::InvalidArg("empty codec set".into()));
         }
         Ok(set)
     }
 
     /// Enabled candidates in stable ranking order (ties resolve toward
-    /// the earlier, longer-validated codec: SZ, then ZFP, then DCT).
+    /// the earlier, longer-validated codec: SZ, then ZFP, then DCT,
+    /// then composed pipelines by ascending id).
     pub fn choices(self) -> impl Iterator<Item = Choice> {
         [
             (self.sz, Choice::Sz),
@@ -87,6 +151,7 @@ impl CandidateSet {
         ]
         .into_iter()
         .filter_map(|(on, c)| on.then_some(c))
+        .chain(self.pipelines.ids().map(Choice::Pipeline))
     }
 
     /// `true` if `choice` competes in this set.
@@ -96,6 +161,7 @@ impl CandidateSet {
             Choice::Zfp => self.zfp,
             Choice::Dct => self.dct,
             Choice::Raw => false,
+            Choice::Pipeline(id) => self.pipelines.contains(id),
         }
     }
 
@@ -173,15 +239,31 @@ pub struct Estimates {
     /// Absolute pointwise bound handed to DCT (≤ the user bound; the
     /// codec derives its own coefficient bin size δ_c from it).
     pub eb_dct: f64,
+    /// Composed-pipeline bit-rate columns, slot `id −
+    /// FIRST_PIPELINE_ID` (∞ when not estimated / not a candidate).
+    pub br_pipe: [f64; MAX_COMPOSED],
+    /// Absolute bound handed to each composed pipeline (its iso-PSNR
+    /// operating point, ≤ the user bound).
+    pub eb_pipe: [f64; MAX_COMPOSED],
 }
 
 impl Estimates {
-    /// The bound Algorithm 1 hands to `choice`'s codec: SZ and DCT get
-    /// their iso-PSNR bounds, every other codec the user bound.
+    fn pipe_slot(id: u8) -> Option<usize> {
+        let slot = (id as usize).wrapping_sub(FIRST_PIPELINE_ID as usize);
+        (slot < MAX_COMPOSED).then_some(slot)
+    }
+
+    /// The bound Algorithm 1 hands to `choice`'s codec: SZ, DCT and
+    /// the composed pipelines get their iso-PSNR bounds, every other
+    /// codec the user bound.
     pub fn bound_for(&self, choice: Choice) -> f64 {
         match choice {
             Choice::Sz => self.eb_sz,
             Choice::Dct => self.eb_dct,
+            Choice::Pipeline(id) => match Self::pipe_slot(id) {
+                Some(s) => self.eb_pipe[s],
+                None => self.eb_zfp,
+            },
             _ => self.eb_zfp,
         }
     }
@@ -193,6 +275,10 @@ impl Estimates {
             Choice::Zfp => self.br_zfp,
             Choice::Dct => self.br_dct,
             Choice::Raw => 32.0,
+            Choice::Pipeline(id) => match Self::pipe_slot(id) {
+                Some(s) => self.br_pipe[s],
+                None => f64::INFINITY,
+            },
         }
     }
 }
@@ -311,6 +397,64 @@ impl AutoSelector {
             f64::INFINITY
         };
 
+        // Composed-pipeline columns (DESIGN.md §15). Each enabled
+        // pipeline is priced at its own iso-or-better operating point:
+        // lossy pre-stage chains split the user bound, lossless chains
+        // keep it. Columns for disabled pipelines stay at ∞ so they
+        // never win the rank.
+        let mut br_pipe = [f64::INFINITY; MAX_COMPOSED];
+        let mut eb_pipe = [eb; MAX_COMPOSED];
+        let mask = self.cfg.candidates.pipelines;
+        if mask.any() {
+            let slot = |id: u8| (id - FIRST_PIPELINE_ID) as usize;
+            // bitround+sz(+shuffle): at pipeline bound E the codec
+            // splits the budget so bitround quantum = SZ bin = E, two
+            // uniform error sources adding in variance to δ_eff = E·√2.
+            // Iso-PSNR with plain SZ's bin δ therefore sits at
+            // E = δ/√2, clamped at the user bound (where the pipeline
+            // is strictly *better* than the target, never worse). The
+            // shuffle variant is order-0-coded, hence rate-identical.
+            if mask.contains(PIPE_BITROUND_SZ) || mask.contains(PIPE_BITROUND_SZ_SHUFFLE) {
+                let eb_p = (delta / std::f64::consts::SQRT_2).min(eb);
+                let est = sz_model::estimate_bitround(
+                    &field.data,
+                    field.dims,
+                    &sample,
+                    eb_p,
+                    self.cfg.capacity,
+                    vr,
+                );
+                for id in [PIPE_BITROUND_SZ, PIPE_BITROUND_SZ_SHUFFLE] {
+                    if mask.contains(id) {
+                        br_pipe[slot(id)] = est.bit_rate;
+                        eb_pipe[slot(id)] = eb_p;
+                    }
+                }
+            }
+            // bitround+zfp: no bespoke model for rounding-then-ZFP —
+            // reuse ZFP's anchor column as a conservative stand-in
+            // (the rounding stage can only concentrate the input).
+            if mask.contains(PIPE_BITROUND_ZFP) {
+                br_pipe[slot(PIPE_BITROUND_ZFP)] = zfp_est.bit_rate;
+            }
+            // Lossless delta chains: sampled byte statistics
+            // (stage_model), full user bound untouched.
+            if mask.contains(PIPE_DELTA_HUFF) || mask.contains(PIPE_DELTA_ARITH) {
+                let le = stage_model::estimate_lossless_delta(
+                    &field.data,
+                    field.dims,
+                    &sample,
+                    field.len(),
+                );
+                if mask.contains(PIPE_DELTA_HUFF) {
+                    br_pipe[slot(PIPE_DELTA_HUFF)] = le.huff_bits;
+                }
+                if mask.contains(PIPE_DELTA_ARITH) {
+                    br_pipe[slot(PIPE_DELTA_ARITH)] = le.arith_bits;
+                }
+            }
+        }
+
         Ok(Estimates {
             br_sz: sz_est.bit_rate,
             br_zfp: zfp_est.bit_rate,
@@ -321,6 +465,8 @@ impl AutoSelector {
             // The DCT codec takes a *pointwise* bound and derives its
             // own coefficient bin size; invert `coeff_delta`.
             eb_dct: delta_dct * (block_size(ndim) as f64).sqrt() / 2.0,
+            br_pipe,
+            eb_pipe,
         })
     }
 
@@ -437,6 +583,8 @@ mod tests {
             eb_sz: 1.0,
             eb_zfp: 1.0,
             eb_dct: 1.0,
+            br_pipe: [f64::INFINITY; MAX_COMPOSED],
+            eb_pipe: [1.0; MAX_COMPOSED],
         };
         // Smallest BR wins; ties keep the earlier candidate.
         assert_eq!(CandidateSet::all().rank(&est).unwrap(), Choice::Dct);
@@ -444,6 +592,106 @@ mod tests {
         assert_eq!(CandidateSet::parse("dct").unwrap().names(), "DCT");
         assert!(CandidateSet::all().contains(Choice::Dct));
         assert!(!CandidateSet::all().contains(Choice::Raw));
+    }
+
+    #[test]
+    fn candidate_set_parses_pipelines() {
+        // Mixed codec + pipeline lists, case-insensitive.
+        let set = CandidateSet::parse("sz,BitRound+SZ,delta+arith").unwrap();
+        assert!(set.sz && !set.zfp && !set.dct);
+        assert!(set.pipelines.contains(PIPE_BITROUND_SZ));
+        assert!(set.pipelines.contains(PIPE_DELTA_ARITH));
+        assert!(!set.pipelines.contains(PIPE_DELTA_HUFF));
+        assert!(set.contains(Choice::Pipeline(PIPE_BITROUND_SZ)));
+        assert!(!set.contains(Choice::Pipeline(PIPE_DELTA_HUFF)));
+        // Pipeline-only lists are valid candidate sets.
+        let only = CandidateSet::parse("bitround+sz+shuffle").unwrap();
+        assert!(only.pipelines.contains(PIPE_BITROUND_SZ_SHUFFLE));
+        assert_eq!(only.names(), "bitround+sz+shuffle");
+        // choices() appends pipelines after bare codecs, ids ascending.
+        let got: Vec<Choice> = set.choices().collect();
+        assert_eq!(
+            got,
+            vec![
+                Choice::Sz,
+                Choice::Pipeline(PIPE_BITROUND_SZ),
+                Choice::Pipeline(PIPE_DELTA_ARITH)
+            ]
+        );
+        assert!(CandidateSet::parse("bitround+zstd").is_err());
+        // Builtins mask covers every registered composed pipeline.
+        let m = PipelineMask::builtins();
+        for id in [
+            PIPE_BITROUND_SZ,
+            PIPE_BITROUND_ZFP,
+            PIPE_BITROUND_SZ_SHUFFLE,
+            PIPE_DELTA_HUFF,
+            PIPE_DELTA_ARITH,
+        ] {
+            assert!(m.contains(id), "builtins missing id {id}");
+        }
+        assert!(!m.contains(Choice::Sz.id()));
+    }
+
+    #[test]
+    fn pipeline_candidates_select_and_roundtrip() {
+        // A pipeline-only candidate set must select, compress through
+        // the staged registry, and decompress within the user bound.
+        let cfg = SelectorConfig {
+            candidates: CandidateSet::parse("bitround+sz,delta+arith").unwrap(),
+            ..Default::default()
+        };
+        let sel = AutoSelector::new(cfg);
+        let f = atm::generate_field_scaled(31, 7, 0);
+        let vr = f.value_range();
+        let out = sel.compress(&f, 1e-3).unwrap();
+        assert!(matches!(out.choice, Choice::Pipeline(_)), "{:?}", out.choice);
+        assert_eq!(out.container[0], out.choice.id());
+        let recon = sel.decompress(&out.container).unwrap();
+        let stats = error_stats(&f.data, &recon);
+        assert!(
+            stats.max_abs_err <= 1e-3 * vr * (1.0 + 1e-6),
+            "{:?}: err {} bound {}",
+            out.choice,
+            stats.max_abs_err,
+            1e-3 * vr
+        );
+    }
+
+    #[test]
+    fn composed_pipeline_wins_on_rough_field_at_tight_bound() {
+        // The acceptance scenario: with pipelines enabled alongside
+        // the bare codecs, a rough field at a tight bound ranks
+        // bitround+sz strictly below plain SZ's estimated bit-rate at
+        // iso-PSNR (the atomic-distribution rate model skips the
+        // richness extrapolation plain SZ pays for).
+        let cfg = SelectorConfig {
+            candidates: CandidateSet {
+                pipelines: PipelineMask::builtins(),
+                ..CandidateSet::all()
+            },
+            ..Default::default()
+        };
+        let sel = AutoSelector::new(cfg);
+        let f = atm::generate_field_scaled(11, 7, 1); // Rough class
+        let (_, est) = sel.select(&f, 1e-4).unwrap();
+        let br_pipe = est.bit_rate_of(Choice::Pipeline(PIPE_BITROUND_SZ));
+        assert!(
+            br_pipe < est.br_sz,
+            "bitround+sz {br_pipe} should beat plain SZ {} on rough data",
+            est.br_sz
+        );
+        // The selected candidate carries the smallest estimate of all.
+        let (choice, est) = sel.select(&f, 1e-4).unwrap();
+        for c in sel.cfg.candidates.choices() {
+            assert!(
+                est.bit_rate_of(choice) <= est.bit_rate_of(c),
+                "{choice:?} vs {c:?}"
+            );
+        }
+        // And the winner's bound never loosens past the user's.
+        let eb = f.value_range() * 1e-4;
+        assert!(est.bound_for(choice) <= eb * (1.0 + 1e-12));
     }
 
     #[test]
@@ -535,6 +783,8 @@ mod tests {
                 eb_sz: 1.0,
                 eb_zfp: 1.0,
                 eb_dct: 1.0,
+                br_pipe: [f64::INFINITY; MAX_COMPOSED],
+                eb_pipe: [1.0; MAX_COMPOSED],
             },
             raw_bytes,
         };
@@ -563,7 +813,9 @@ mod tests {
         let sel = AutoSelector::default();
         let f = atm::generate_field_scaled(23, 0, 0);
         let mut out = sel.compress(&f, 1e-3).unwrap();
-        out.container[0] = 7;
+        // 0xEE is far past every registered id (bare codecs 0–3 and
+        // the built-in composed pipelines 4–8 are all valid now).
+        out.container[0] = 0xEE;
         assert!(sel.decompress(&out.container).is_err());
         assert!(sel.decompress(&[]).is_err());
     }

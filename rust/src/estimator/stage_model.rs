@@ -1,0 +1,140 @@
+//! Sampled-statistics rate model for pipeline stages that have no
+//! bespoke estimator (DESIGN.md §15) — the Black-Box Statistical
+//! Prediction idea (arxiv 2305.08801): rank a coder from sampled
+//! byte statistics instead of a hand-built model.
+//!
+//! Used for the lossless delta pipelines: the Lorenzo bit-pattern
+//! residual of each sampled point is split into its four LE bytes and
+//! the pipelines are priced from the pooled empirical byte
+//! distribution. Both post-coders are order-0 (static Huffman, static
+//! range coder), and order-0 coding is permutation-invariant — the
+//! byte shuffle moves bytes around but cannot change a single-table
+//! coder's rate — so one pooled entropy prices both chains; they
+//! differ only in the coder's gap to the entropy bound. (A
+//! context-modeling post-coder would exploit the shuffle's plane
+//! grouping; when one lands, this model grows a per-plane column.)
+
+use super::sampling::BlockSample;
+use crate::data::field::Dims;
+use crate::sz::lorenzo;
+
+/// Range-coder gap to the entropy bound (bits/value, all four byte
+/// planes together) — near zero by construction, kept non-zero so ties
+/// break toward Huffman's simpler decode path.
+const ARITH_GAP_BITS: f64 = 0.05;
+
+/// Huffman gap over the four coded bytes of one value — the same
+/// empirical constant the SZ model charges per coded stream.
+const HUFF_GAP_BITS: f64 = 0.5;
+
+/// Serialized table cost per distinct byte symbol (delta-varint symbol
+/// + varint code length / frequency), matching
+/// `sz_model::TABLE_BITS_PER_SYMBOL`.
+const TABLE_BITS_PER_SYMBOL: f64 = 16.0;
+
+/// Estimated bits/value for the two lossless delta pipelines.
+#[derive(Clone, Copy, Debug)]
+pub struct LosslessDeltaEstimate {
+    /// `delta+shuffle+huff`: 4 × pooled byte entropy + Huffman gap +
+    /// table.
+    pub huff_bits: f64,
+    /// `delta+arith`: 4 × pooled byte entropy + range-coder gap +
+    /// table.
+    pub arith_bits: f64,
+}
+
+/// Price the lossless delta pipelines from sampled byte statistics.
+/// Residuals are the exact transform the `delta` stage applies —
+/// wrapping bit-pattern subtraction against the Lorenzo prediction
+/// from original neighbors — so the sampled distribution is the
+/// coder's input distribution up to sampling noise (the byte alphabet
+/// is capped at 256, which a few thousand samples observe well; no
+/// richness extrapolation is needed).
+pub fn estimate_lossless_delta(
+    data: &[f32],
+    dims: Dims,
+    sample: &BlockSample,
+    field_len: usize,
+) -> LosslessDeltaEstimate {
+    let idx = sample.point_indices();
+    if idx.is_empty() || field_len == 0 {
+        // No statistics: price as raw passthrough.
+        return LosslessDeltaEstimate { huff_bits: 32.0, arith_bits: 32.0 };
+    }
+    let preds = lorenzo::predictions_original(data, dims, &idx);
+    let mut counts = [0u64; 256];
+    for (&i, p) in idx.iter().zip(&preds) {
+        let dbits = data[i].to_bits().wrapping_sub(p.to_bits());
+        for b in dbits.to_le_bytes() {
+            counts[b as usize] += 1;
+        }
+    }
+    let total = (idx.len() * 4) as f64;
+    let mut h = 0.0;
+    let mut occupied = 0usize;
+    for &c in &counts {
+        if c > 0 {
+            let p = c as f64 / total;
+            h -= p * p.log2();
+            occupied += 1;
+        }
+    }
+    let table = occupied as f64 * TABLE_BITS_PER_SYMBOL / field_len as f64;
+    LosslessDeltaEstimate {
+        huff_bits: 4.0 * h + HUFF_GAP_BITS + table,
+        arith_bits: 4.0 * h + ARITH_GAP_BITS + table,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::atm;
+    use crate::estimator::sampling::sample_blocks;
+
+    #[test]
+    fn smooth_fields_price_below_raw() {
+        let f = atm::generate_field_scaled(5, 0, 1); // Smooth class
+        let sample = sample_blocks(f.dims, 0.05);
+        let est = estimate_lossless_delta(&f.data, f.dims, &sample, f.len());
+        assert!(
+            est.huff_bits > 0.0 && est.huff_bits < 32.0,
+            "huff {} should beat raw",
+            est.huff_bits
+        );
+        // The range coder differs only by its smaller gap.
+        assert!(est.arith_bits < est.huff_bits);
+        assert!((est.huff_bits - est.arith_bits - (0.5 - 0.05)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn constant_field_prices_near_zero() {
+        let f = crate::data::field::Field::new(
+            "const",
+            crate::data::field::Dims::D2(64, 64),
+            vec![2.5f32; 4096],
+        );
+        let sample = sample_blocks(f.dims, 0.05);
+        let est = estimate_lossless_delta(&f.data, f.dims, &sample, f.len());
+        // All residual bytes are zero except the first point's: the
+        // pooled distribution is (near-)single-symbol.
+        assert!(est.huff_bits < 2.0, "constant field huff {}", est.huff_bits);
+        assert!(est.arith_bits < 2.0, "constant field arith {}", est.arith_bits);
+    }
+
+    #[test]
+    fn tracks_real_pipeline_size_on_smooth_field() {
+        use crate::codec_api::{CodecRegistry, PIPE_DELTA_ARITH, PIPE_DELTA_HUFF};
+        let f = atm::generate_field_scaled(5, 2, 0);
+        let sample = sample_blocks(f.dims, 0.25);
+        let est = estimate_lossless_delta(&f.data, f.dims, &sample, f.len());
+        let r = CodecRegistry::default();
+        for (id, est_bits) in [(PIPE_DELTA_HUFF, est.huff_bits), (PIPE_DELTA_ARITH, est.arith_bits)]
+        {
+            let stream = r.get(id).unwrap().compress(&f.data, f.dims, 1e-3).unwrap();
+            let real = stream.len() as f64 * 8.0 / f.len() as f64;
+            let rel = (est_bits - real) / real;
+            assert!(rel.abs() < 0.5, "pipeline {id}: estimated {est_bits:.2} b/v vs real {real:.2} b/v");
+        }
+    }
+}

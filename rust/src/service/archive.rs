@@ -117,6 +117,10 @@ pub struct ArchiveStats {
     pub reader_hits: u64,
     /// Cold fetches that had to (re)open a shard file.
     pub reader_misses: u64,
+    /// Shard files deleted because every field they held was
+    /// re-compressed into a newer batch (garbage collection — the disk
+    /// analogue of last-write-wins).
+    pub superseded_deleted: u64,
 }
 
 impl ArchiveStats {
@@ -126,7 +130,8 @@ impl ArchiveStats {
         format!(
             "archive: {} hot batches ({} B) / {} cold fields; \
              spills {} ({} B), evictions {}; recovered {} fields from {} shards \
-             ({} corrupt skipped); reader cache {} hits / {} misses",
+             ({} corrupt skipped); reader cache {} hits / {} misses; \
+             {} superseded shards deleted",
             self.hot_batches,
             self.hot_bytes,
             self.cold_fields,
@@ -138,6 +143,7 @@ impl ArchiveStats {
             self.corrupt_shards,
             self.reader_hits,
             self.reader_misses,
+            self.superseded_deleted,
         )
     }
 }
@@ -153,6 +159,7 @@ struct ArchiveCounters {
     corrupt_shards: AtomicU64,
     reader_hits: AtomicU64,
     reader_misses: AtomicU64,
+    superseded_deleted: AtomicU64,
 }
 
 /// Where one field name currently resolves.
@@ -208,6 +215,12 @@ impl ReaderCache {
             }
         }
     }
+
+    /// Drop a cached reader for a shard that is about to be deleted,
+    /// so its file handle / mapping is released before the unlink.
+    fn evict(&mut self, path: &Path) {
+        self.map.remove(path);
+    }
 }
 
 /// Mutable archive state behind one mutex. File writes happen
@@ -228,8 +241,34 @@ struct ArchiveState {
     next_seq: u64,
     /// Open cold readers (bounded LRU).
     readers: ReaderCache,
+    /// Live-field refcount per cold shard path: how many names in
+    /// `fields` currently resolve to each shard file. When a
+    /// re-compress retargets the last name away, the count hits zero
+    /// and the file is garbage — deleted outside the lock.
+    cold_refs: HashMap<PathBuf, usize>,
     /// Bounded diagnostic ring of recent raw batch bytes.
     log: VecDeque<BatchRecord>,
+}
+
+impl ArchiveState {
+    /// Count one fewer live name on `path`. Returns `true` when the
+    /// count reached zero: the shard is superseded, its cached reader
+    /// has been dropped, and the caller must delete the file once the
+    /// lock is released.
+    fn cold_ref_dec(&mut self, path: &Path) -> bool {
+        match self.cold_refs.get_mut(path) {
+            Some(n) if *n > 1 => {
+                *n -= 1;
+                false
+            }
+            Some(_) => {
+                self.cold_refs.remove(path);
+                self.readers.evict(path);
+                true
+            }
+            None => false,
+        }
+    }
 }
 
 /// The persistent sharded archive store. All methods take `&self`;
@@ -290,6 +329,7 @@ impl ArchiveStore {
     pub fn open(cfg: ArchiveConfig, log_max: usize) -> Result<ArchiveStore> {
         let counters = ArchiveCounters::default();
         let mut fields = BTreeMap::new();
+        let mut cold_refs: HashMap<PathBuf, usize> = HashMap::new();
         let mut next_seq = 0u64;
         if let Some(root) = &cfg.root_dir {
             std::fs::create_dir_all(root)?;
@@ -315,6 +355,9 @@ impl ArchiveStore {
                 }
             }
             found.sort();
+            // Shards that indexed cleanly, in scan order — candidates
+            // for the superseded sweep below.
+            let mut indexed: Vec<PathBuf> = Vec::new();
             for (seq, path) in found {
                 next_seq = next_seq.max(seq + 1);
                 // Index-only open: parses magic + index, payloads
@@ -322,8 +365,24 @@ impl ArchiveStore {
                 match ContainerReader::open(&path) {
                     Ok(reader) => {
                         counters.recovered_shards.fetch_add(1, Ordering::Relaxed);
+                        let mut any = false;
                         for name in reader.field_names() {
-                            fields.insert(name.to_string(), FieldSlot::Cold(path.clone()));
+                            any = true;
+                            let prev = fields
+                                .insert(name.to_string(), FieldSlot::Cold(path.clone()));
+                            if let Some(FieldSlot::Cold(old)) = prev {
+                                match cold_refs.get_mut(&old) {
+                                    Some(n) if *n > 1 => *n -= 1,
+                                    Some(_) => {
+                                        cold_refs.remove(&old);
+                                    }
+                                    None => {}
+                                }
+                            }
+                            *cold_refs.entry(path.clone()).or_insert(0) += 1;
+                        }
+                        if any {
+                            indexed.push(path);
                         }
                     }
                     Err(_) => {
@@ -331,6 +390,14 @@ impl ArchiveStore {
                         // its fields are lost, the archive is not.
                         counters.corrupt_shards.fetch_add(1, Ordering::Relaxed);
                     }
+                }
+            }
+            // Superseded sweep: a shard whose every field was re-won
+            // by a later shard serves nothing — the same garbage the
+            // live re-compress path deletes, discovered at startup.
+            for path in indexed {
+                if !cold_refs.contains_key(&path) && std::fs::remove_file(&path).is_ok() {
+                    counters.superseded_deleted.fetch_add(1, Ordering::Relaxed);
                 }
             }
             let recovered = fields.len() as u64;
@@ -346,6 +413,7 @@ impl ArchiveStore {
                 hot_bytes: 0,
                 next_seq,
                 readers: ReaderCache::default(),
+                cold_refs,
                 log: VecDeque::new(),
             }),
             counters,
@@ -360,17 +428,25 @@ impl ArchiveStore {
 
     /// Index one finished batch as hot, then spill the oldest batches
     /// if the hot set is over budget. Re-compressing a name replaces
-    /// its mapping (last write wins); the raw-bytes log keeps only the
-    /// most recent `log_max` batches.
+    /// its mapping (last write wins); a cold shard left with zero live
+    /// names by the replacement is deleted (outside the lock); the
+    /// raw-bytes log keeps only the most recent `log_max` batches.
     pub fn insert(&self, names: Vec<String>, bytes: Vec<u8>) -> Result<()> {
         let bytes_len = bytes.len();
         let reader = Arc::new(ContainerReader::from_bytes(bytes.clone())?);
-        {
+        let doomed = {
             let mut st = self.lock()?;
             let seq = st.next_seq;
             st.next_seq += 1;
+            let mut doomed: Vec<PathBuf> = Vec::new();
             for n in &names {
-                st.fields.insert(n.clone(), FieldSlot::Hot(seq));
+                if let Some(FieldSlot::Cold(old)) =
+                    st.fields.insert(n.clone(), FieldSlot::Hot(seq))
+                {
+                    if st.cold_ref_dec(&old) {
+                        doomed.push(old);
+                    }
+                }
             }
             st.hot.insert(seq, HotBatch { names: names.clone(), reader, bytes_len });
             st.hot_bytes += bytes_len;
@@ -378,8 +454,22 @@ impl ArchiveStore {
             while st.log.len() > self.log_max.max(1) {
                 st.log.pop_front();
             }
-        }
+            doomed
+        };
+        self.delete_superseded(&doomed);
         self.enforce_budget()
+    }
+
+    /// Best-effort unlink of superseded shard files. Called with the
+    /// state lock released; the paths were already dropped from the
+    /// field index, the refcount map, and the reader cache, so nothing
+    /// can resolve to them anymore. A failed unlink only leaks disk.
+    fn delete_superseded(&self, paths: &[PathBuf]) {
+        for p in paths {
+            if std::fs::remove_file(p).is_ok() {
+                self.counters.superseded_deleted.fetch_add(1, Ordering::Relaxed);
+            }
+        }
     }
 
     /// Spill oldest hot batches until residency is back under the
@@ -459,25 +549,42 @@ impl ArchiveStore {
             Ok(()) => {
                 // Retarget only names still pointing at this batch — a
                 // newer insert may have taken a name over meanwhile.
+                let mut retargeted = 0usize;
                 for name in &batch.names {
                     if let Some(slot) = st.fields.get_mut(name) {
                         if matches!(slot, FieldSlot::Hot(seq) if *seq == s.seq) {
                             *slot = FieldSlot::Cold(s.path.clone());
+                            retargeted += 1;
                         }
                     }
                 }
-                // Pre-warm the reader cache with the (memory-backed)
-                // reader under the cold path key: fetches racing the
-                // eviction stay hit-fast, and once the LRU drops it
-                // the next fetch reopens from the published file.
-                let cap = self.cfg.open_readers;
-                st.readers.insert(s.path, batch.reader, cap);
+                let doomed = if retargeted == 0 {
+                    // Every name was re-compressed while this batch
+                    // waited to spill: the file just published holds
+                    // only superseded data — delete it once the lock
+                    // drops instead of caching a reader over garbage.
+                    Some(s.path.clone())
+                } else {
+                    st.cold_refs.insert(s.path.clone(), retargeted);
+                    // Pre-warm the reader cache with the
+                    // (memory-backed) reader under the cold path key:
+                    // fetches racing the eviction stay hit-fast, and
+                    // once the LRU drops it the next fetch reopens
+                    // from the published file.
+                    let cap = self.cfg.open_readers;
+                    st.readers.insert(s.path.clone(), batch.reader, cap);
+                    None
+                };
                 st.hot_bytes -= batch.bytes_len;
                 self.counters.spills.fetch_add(1, Ordering::Relaxed);
                 self.counters
                     .spilled_bytes
                     .fetch_add(batch.bytes_len as u64, Ordering::Relaxed);
                 self.counters.evictions.fetch_add(1, Ordering::Relaxed);
+                drop(st);
+                if let Some(p) = doomed {
+                    self.delete_superseded(&[p]);
+                }
                 Ok(())
             }
             Err(e) => {
@@ -575,6 +682,7 @@ impl ArchiveStore {
             corrupt_shards: c.corrupt_shards.load(Ordering::Relaxed),
             reader_hits: c.reader_hits.load(Ordering::Relaxed),
             reader_misses: c.reader_misses.load(Ordering::Relaxed),
+            superseded_deleted: c.superseded_deleted.load(Ordering::Relaxed),
         }
     }
 }
@@ -712,11 +820,15 @@ mod tests {
             let live = store.reader_for(&names_b[0]).unwrap().unwrap();
             assert_eq!(engine.load_field(&live, &names_b[0]).unwrap().data, expect.data);
 
+            // The re-compress garbage-collected batch A's shard (its
+            // only field was re-won), so only batch B's file survives.
+            assert_eq!(store.stats().superseded_deleted, 1);
+
             // Restart: same root, fresh store.
             let recovered = ArchiveStore::open(cfg.clone(), 4).unwrap();
             let st = recovered.stats();
-            assert_eq!(st.recovered_shards, 2);
-            assert_eq!(st.recovered_fields, 1, "same name across both shards");
+            assert_eq!(st.recovered_shards, 1, "superseded shard was deleted");
+            assert_eq!(st.recovered_fields, 1);
             assert_eq!(st.corrupt_shards, 0);
             let r = recovered.reader_for(&names_b[0]).unwrap().unwrap();
             assert_eq!(
@@ -729,6 +841,86 @@ mod tests {
             recovered.insert(names_c, bytes_c).unwrap();
             assert_eq!(recovered.stats().spills, 1);
         }
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    /// All published shard files under `root`, any shard dir.
+    fn shard_files(root: &Path) -> Vec<PathBuf> {
+        let mut out = Vec::new();
+        if let Ok(dirs) = std::fs::read_dir(root) {
+            for dir in dirs.flatten() {
+                let dir = dir.path();
+                if !dir.is_dir() {
+                    continue;
+                }
+                for f in std::fs::read_dir(&dir).unwrap().flatten() {
+                    let p = f.path();
+                    if p.extension().and_then(|e| e.to_str()) == Some(SHARD_EXT) {
+                        out.push(p);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn recompress_deletes_superseded_shard_files() {
+        let engine = Engine::default();
+        let root = temp_root("gc");
+        let cfg = ArchiveConfig {
+            root_dir: Some(root.clone()),
+            mem_budget: 0,
+            open_readers: 4,
+        };
+        let store = ArchiveStore::open(cfg.clone(), 4).unwrap();
+        let (names_a, bytes_a) = batch_bytes(&engine, &[(120, 0)]);
+        store.insert(names_a, bytes_a).unwrap();
+        assert_eq!(shard_files(&root).len(), 1);
+        assert_eq!(store.stats().superseded_deleted, 0);
+
+        // Re-compress the same field name: the old shard file serves
+        // nothing anymore and must be unlinked — disk residency stays
+        // at one live file per live batch.
+        let (names_b, bytes_b) = batch_bytes(&engine, &[(121, 0)]);
+        let expect = {
+            let r = ContainerReader::from_bytes(bytes_b.clone()).unwrap();
+            engine.load_field(&r, &names_b[0]).unwrap()
+        };
+        store.insert(names_b.clone(), bytes_b).unwrap();
+        assert_eq!(shard_files(&root).len(), 1, "superseded shard must be deleted");
+        let st = store.stats();
+        assert_eq!(st.superseded_deleted, 1);
+        assert_eq!(st.cold_fields, 1);
+        // The survivor still serves the latest data.
+        let r = store.reader_for(&names_b[0]).unwrap().expect("field resolves after GC");
+        assert_eq!(engine.load_field(&r, &names_b[0]).unwrap().data, expect.data);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn spill_of_fully_retaken_batch_leaves_no_file_behind() {
+        let engine = Engine::default();
+        let root = temp_root("gc_inflight");
+        let cfg = ArchiveConfig {
+            root_dir: Some(root.clone()),
+            mem_budget: usize::MAX, // keep both batches hot until flush
+            open_readers: 4,
+        };
+        let store = ArchiveStore::open(cfg.clone(), 4).unwrap();
+        let (names_a, bytes_a) = batch_bytes(&engine, &[(122, 0)]);
+        let (names_b, bytes_b) = batch_bytes(&engine, &[(123, 0)]);
+        assert_eq!(names_a, names_b, "same field name re-compressed");
+        store.insert(names_a, bytes_a).unwrap();
+        // B takes the name while batch A is still hot: A's eventual
+        // spill publishes a file with zero live names.
+        store.insert(names_b.clone(), bytes_b).unwrap();
+        assert_eq!(store.flush().unwrap(), 2, "both hot batches get written");
+        assert_eq!(shard_files(&root).len(), 1, "batch A's file is garbage on arrival");
+        assert_eq!(store.stats().superseded_deleted, 1);
+        let recovered = ArchiveStore::open(cfg, 4).unwrap();
+        assert_eq!(recovered.stats().recovered_shards, 1);
+        assert!(recovered.reader_for(&names_b[0]).unwrap().is_some());
         std::fs::remove_dir_all(&root).ok();
     }
 

@@ -255,6 +255,7 @@ mod tests {
                 corrupt_shards: 0,
                 reader_hits: 9,
                 reader_misses: 4,
+                superseded_deleted: 1,
             },
         };
         let s = r.summary();

@@ -19,14 +19,15 @@ pub struct SzConfig {
     /// Quantization-bin capacity (2n−1 usable bins + escape). SZ-1.4's
     /// default is 65,536 intervals; we use 65,535 (odd, symmetric).
     pub capacity: u32,
-    /// Apply a zstd pass over the entropy-coded payload (SZ's optional
-    /// gzip stage; helps on highly repetitive fields).
-    pub zstd_stage: bool,
+    /// Apply a byte-level range-coder pass over the entropy-coded
+    /// payload (SZ's optional gzip stage; helps on highly repetitive
+    /// fields).
+    pub pack_stage: bool,
 }
 
 impl Default for SzConfig {
     fn default() -> Self {
-        SzConfig { capacity: 65_535, zstd_stage: false }
+        SzConfig { capacity: 65_535, pack_stage: false }
     }
 }
 
@@ -98,12 +99,12 @@ impl SzCompressor {
         dims.encode(&mut out);
         varint::write_f64(&mut out, eb_abs);
         varint::write_u64(&mut out, self.cfg.capacity as u64);
-        varint::write_u64(&mut out, self.cfg.zstd_stage as u64);
-        if self.cfg.zstd_stage {
+        varint::write_u64(&mut out, self.cfg.pack_stage as u64);
+        if self.cfg.pack_stage {
             let mut payload = Vec::with_capacity(huff.len() + literals.len());
             varint::write_bytes(&mut payload, &huff);
             varint::write_bytes(&mut payload, &literals);
-            let packed = huffman_stage::zstd_pack(&payload)?;
+            let packed = huffman_stage::pack(&payload)?;
             varint::write_u64(&mut out, payload.len() as u64);
             varint::write_bytes(&mut out, &packed);
         } else {
@@ -270,12 +271,12 @@ impl SzCompressor {
         let dims = Dims::decode(buf, &mut pos)?;
         let eb_abs = varint::read_f64(buf, &mut pos)?;
         let capacity = varint::read_u64(buf, &mut pos)? as u32;
-        let zstd_stage = varint::read_u64(buf, &mut pos)? != 0;
+        let pack_stage = varint::read_u64(buf, &mut pos)? != 0;
 
-        let (huff, literals): (Vec<u8>, Vec<u8>) = if zstd_stage {
+        let (huff, literals): (Vec<u8>, Vec<u8>) = if pack_stage {
             let raw_len = varint::read_u64(buf, &mut pos)? as usize;
             let packed = varint::read_bytes(buf, &mut pos)?;
-            let payload = huffman_stage::zstd_unpack(packed, raw_len)?;
+            let payload = huffman_stage::unpack(packed, raw_len)?;
             let mut p = 0;
             let h = varint::read_bytes(&payload, &mut p)?.to_vec();
             let l = varint::read_bytes(&payload, &mut p)?.to_vec();
@@ -496,10 +497,10 @@ mod tests {
     }
 
     #[test]
-    fn zstd_stage_roundtrip() {
+    fn pack_stage_roundtrip() {
         let mut rng = Rng::new(76);
         let f = grf_2d(&mut rng, 48, 48, 3.5);
-        let sz = SzCompressor::new(SzConfig { zstd_stage: true, ..Default::default() });
+        let sz = SzCompressor::new(SzConfig { pack_stage: true, ..Default::default() });
         let comp = sz.compress(&f, Dims::D2(48, 48), 1e-3).unwrap();
         let (recon, _) = sz.decompress(&comp).unwrap();
         let stats = error_stats(&f, &recon);

@@ -1,6 +1,8 @@
 //! Stage III for SZ: canonical Huffman over quantization symbols with a
-//! serialized code table, plus an optional zstd pass over the whole
-//! payload (SZ-1.4's optional gzip stage, upgraded).
+//! serialized code table, plus an optional byte-level recompression
+//! pass over the whole payload (SZ-1.4's optional gzip stage,
+//! reimplemented on the in-tree range coder — no external codec
+//! dependency).
 
 use crate::codec::{varint, BitReader, BitWriter, HuffmanDecoder, HuffmanEncoder};
 use crate::{Error, Result};
@@ -45,17 +47,37 @@ pub fn decode_symbols(buf: &[u8], pos: &mut usize) -> Result<Vec<u32>> {
     Ok(out)
 }
 
-/// Optional lossless recompression of a payload. Level 1 keeps the
-/// throughput hit small; SZ gets most of its ratio from Huffman already.
-pub fn zstd_pack(payload: &[u8]) -> Result<Vec<u8>> {
-    zstd::bulk::compress(payload, 1)
-        .map_err(|e| Error::Other(format!("zstd compress: {e}")))
+/// Optional lossless recompression of a payload through the static
+/// range coder over raw bytes. SZ gets most of its ratio from Huffman
+/// already; this squeezes residual byte-level redundancy (helps on
+/// highly repetitive fields) without any external codec dependency.
+pub fn pack(payload: &[u8]) -> Result<Vec<u8>> {
+    if payload.is_empty() {
+        return Ok(Vec::new());
+    }
+    let syms: Vec<u32> = payload.iter().map(|&b| b as u32).collect();
+    crate::codec::arith::encode(&syms)
 }
 
-/// Inverse of [`zstd_pack`].
-pub fn zstd_unpack(payload: &[u8], capacity_hint: usize) -> Result<Vec<u8>> {
-    zstd::bulk::decompress(payload, capacity_hint.max(1 << 16))
-        .map_err(|e| Error::Other(format!("zstd decompress: {e}")))
+/// Inverse of [`pack`]. `capacity_hint` pre-sizes the output (the
+/// caller knows the unpacked length from the container framing).
+pub fn unpack(payload: &[u8], capacity_hint: usize) -> Result<Vec<u8>> {
+    if payload.is_empty() {
+        return Ok(Vec::new());
+    }
+    let mut pos = 0;
+    let syms = crate::codec::arith::decode(payload, &mut pos)?;
+    if pos != payload.len() {
+        return Err(Error::Corrupt("pack stage: trailing bytes".into()));
+    }
+    let mut out = Vec::with_capacity(syms.len().max(capacity_hint.min(syms.len())));
+    for &s in &syms {
+        out.push(
+            u8::try_from(s)
+                .map_err(|_| Error::Corrupt(format!("pack stage: symbol {s} is not a byte")))?,
+        );
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -92,12 +114,17 @@ mod tests {
     }
 
     #[test]
-    fn zstd_roundtrip() {
+    fn pack_roundtrip() {
         let data: Vec<u8> = (0..10_000u32).flat_map(|i| (i % 17).to_le_bytes()).collect();
-        let packed = zstd_pack(&data).unwrap();
+        let packed = pack(&data).unwrap();
         assert!(packed.len() < data.len());
-        let unpacked = zstd_unpack(&packed, data.len()).unwrap();
+        let unpacked = unpack(&packed, data.len()).unwrap();
         assert_eq!(unpacked, data);
+        // Empty payloads pass through both directions.
+        assert!(pack(&[]).unwrap().is_empty());
+        assert!(unpack(&[], 0).unwrap().is_empty());
+        // Truncated packed streams are corruption, not a panic.
+        assert!(unpack(&packed[..packed.len() / 2], data.len()).is_err());
     }
 
     #[test]

@@ -15,10 +15,13 @@
 //!   first-row boundaries are peeled out of the inner loop.
 //! * **Prediction-error rows** (`row_errors_*`): the estimator's
 //!   Stage-I transform (paper §4.3) predicts from *original*
-//!   neighbors, which is embarrassingly parallel — these carry an
-//!   explicit SSE2 `core::arch` path (x86-64 baseline, no feature
-//!   detection needed) with per-lane IEEE f32 arithmetic in exactly
-//!   the scalar evaluation order, so results are bit-identical.
+//!   neighbors, which is embarrassingly parallel — these carry
+//!   explicit `core::arch` paths: a 4-lane SSE2 tier (x86-64 baseline,
+//!   no detection needed) and an 8-lane AVX2 widening selected at
+//!   runtime via `is_x86_feature_detected!` (pin off with
+//!   `ADAPTIVEC_NO_AVX2`). Both tiers do per-lane IEEE f32 arithmetic
+//!   in exactly the scalar evaluation order, so results are
+//!   bit-identical across scalar/SSE2/AVX2.
 //!
 //! Every kernel preserves the reference expression shape — including
 //! `0.0` boundary substitutions, whose `+0.0` terms are *not*
@@ -51,13 +54,13 @@ pub fn simd_available() -> bool {
 }
 
 /// Label of the prediction-error kernel that will actually run —
-/// `"simd"` or `"scalar"` — for bench/report records.
+/// `"avx2"`, `"sse2"`, or `"scalar"` — for bench/report records.
 pub fn active_kernel() -> &'static str {
-    if simd_available() && !scalar_kernels_forced() {
-        "simd"
-    } else {
-        "scalar"
+    #[cfg(target_arch = "x86_64")]
+    if !scalar_kernels_forced() {
+        return if simd::avx2_enabled() { "avx2" } else { "sse2" };
     }
+    "scalar"
 }
 
 // ---------------------------------------------------------------------------
@@ -414,18 +417,66 @@ pub fn row_errors_3d_scalar(
     }
 }
 
-/// Explicit SSE2 forms of the prediction-error kernels. SSE2 is part
-/// of the x86-64 baseline, so no runtime feature detection is needed;
-/// per-lane `addps`/`subps` are IEEE f32 operations evaluated in the
-/// scalar reference order, so every lane is bit-identical to the
-/// scalar kernels (asserted by the `kernel_equivalence` proptests).
+/// Explicit SIMD forms of the prediction-error kernels. SSE2 is part
+/// of the x86-64 baseline, so the 4-lane forms need no runtime
+/// detection; the 8-lane AVX2 widenings are selected once per process
+/// via `is_x86_feature_detected!` (pinned off by `ADAPTIVEC_NO_AVX2`,
+/// so the SSE2 tier stays testable on AVX2 hardware). Per-lane
+/// `addps`/`subps`/`vaddps`/`vsubps` are IEEE f32 operations evaluated
+/// in the scalar reference order — lane width never changes any lane's
+/// expression — so every tier is bit-identical to the scalar kernels
+/// (asserted by the `kernel_equivalence` proptests).
 #[cfg(target_arch = "x86_64")]
 mod simd {
     use core::arch::x86_64::*;
 
     const LANES: usize = 4;
+    const LANES8: usize = 8;
+
+    /// Whether the AVX2 widenings run (CPU support detected once per
+    /// process and not pinned off via `ADAPTIVEC_NO_AVX2`).
+    pub fn avx2_enabled() -> bool {
+        static ENABLED: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+        *ENABLED.get_or_init(|| {
+            std::env::var_os("ADAPTIVEC_NO_AVX2").is_none()
+                && std::arch::is_x86_feature_detected!("avx2")
+        })
+    }
 
     pub fn row_errors_1d(data: &[f32], out: &mut [f32]) {
+        if avx2_enabled() {
+            // SAFETY: avx2_enabled() verified CPU support.
+            unsafe { row_errors_1d_avx2(data, out) };
+            return;
+        }
+        row_errors_1d_sse2(data, out);
+    }
+
+    pub fn row_errors_2d(row: &[f32], prev: &[f32], out: &mut [f32]) {
+        if avx2_enabled() {
+            // SAFETY: avx2_enabled() verified CPU support.
+            unsafe { row_errors_2d_avx2(row, prev, out) };
+            return;
+        }
+        row_errors_2d_sse2(row, prev, out);
+    }
+
+    pub fn row_errors_3d(
+        row: &[f32],
+        ym1: &[f32],
+        zm1: &[f32],
+        zym1: &[f32],
+        out: &mut [f32],
+    ) {
+        if avx2_enabled() {
+            // SAFETY: avx2_enabled() verified CPU support.
+            unsafe { row_errors_3d_avx2(row, ym1, zm1, zym1, out) };
+            return;
+        }
+        row_errors_3d_sse2(row, ym1, zm1, zym1, out);
+    }
+
+    fn row_errors_1d_sse2(data: &[f32], out: &mut [f32]) {
         let n = data.len();
         if n == 0 {
             return;
@@ -449,7 +500,31 @@ mod simd {
         }
     }
 
-    pub fn row_errors_2d(row: &[f32], prev: &[f32], out: &mut [f32]) {
+    /// 8-lane widening of [`row_errors_1d_sse2`]: same loads shifted
+    /// by one element, same per-lane subtract, twice the stride.
+    #[target_feature(enable = "avx2")]
+    unsafe fn row_errors_1d_avx2(data: &[f32], out: &mut [f32]) {
+        let n = data.len();
+        if n == 0 {
+            return;
+        }
+        out[0] = data[0] - 0.0;
+        let mut x = 1usize;
+        // SAFETY: loads at x-1..x+7 and stores at x..x+8 stay in
+        // bounds while x + LANES8 <= n.
+        while x + LANES8 <= n {
+            let cur = _mm256_loadu_ps(data.as_ptr().add(x));
+            let left = _mm256_loadu_ps(data.as_ptr().add(x - 1));
+            _mm256_storeu_ps(out.as_mut_ptr().add(x), _mm256_sub_ps(cur, left));
+            x += LANES8;
+        }
+        while x < n {
+            out[x] = data[x] - data[x - 1];
+            x += 1;
+        }
+    }
+
+    fn row_errors_2d_sse2(row: &[f32], prev: &[f32], out: &mut [f32]) {
         let nx = row.len();
         if nx == 0 {
             return;
@@ -475,7 +550,34 @@ mod simd {
         }
     }
 
-    pub fn row_errors_3d(
+    /// 8-lane widening of [`row_errors_2d_sse2`]: `(left + up) - diag`
+    /// per lane, in the reference order.
+    #[target_feature(enable = "avx2")]
+    unsafe fn row_errors_2d_avx2(row: &[f32], prev: &[f32], out: &mut [f32]) {
+        let nx = row.len();
+        if nx == 0 {
+            return;
+        }
+        out[0] = row[0] - (0.0 + prev[0] - 0.0);
+        let mut x = 1usize;
+        // SAFETY: all loads touch x-1..x+7 of slices with length
+        // >= nx (asserted by the caller); x + LANES8 <= nx bounds them.
+        while x + LANES8 <= nx {
+            let left = _mm256_loadu_ps(row.as_ptr().add(x - 1));
+            let up = _mm256_loadu_ps(prev.as_ptr().add(x));
+            let diag = _mm256_loadu_ps(prev.as_ptr().add(x - 1));
+            let pred = _mm256_sub_ps(_mm256_add_ps(left, up), diag);
+            let cur = _mm256_loadu_ps(row.as_ptr().add(x));
+            _mm256_storeu_ps(out.as_mut_ptr().add(x), _mm256_sub_ps(cur, pred));
+            x += LANES8;
+        }
+        while x < nx {
+            out[x] = row[x] - (row[x - 1] + prev[x] - prev[x - 1]);
+            x += 1;
+        }
+    }
+
+    fn row_errors_3d_sse2(
         row: &[f32],
         ym1: &[f32],
         zm1: &[f32],
@@ -510,6 +612,52 @@ mod simd {
                 _mm_storeu_ps(out.as_mut_ptr().add(x), _mm_sub_ps(cur, pred));
                 x += LANES;
             }
+        }
+        while x < nx {
+            let pred = row[x - 1] + ym1[x] + zm1[x] - ym1[x - 1] - zm1[x - 1] - zym1[x]
+                + zym1[x - 1];
+            out[x] = row[x] - pred;
+            x += 1;
+        }
+    }
+
+    /// 8-lane widening of [`row_errors_3d_sse2`]: the 7-term
+    /// inclusion–exclusion chain in the exact reference association,
+    /// per lane.
+    #[target_feature(enable = "avx2")]
+    unsafe fn row_errors_3d_avx2(
+        row: &[f32],
+        ym1: &[f32],
+        zm1: &[f32],
+        zym1: &[f32],
+        out: &mut [f32],
+    ) {
+        let nx = row.len();
+        if nx == 0 {
+            return;
+        }
+        out[0] = row[0] - (0.0 + ym1[0] + zm1[0] - 0.0 - 0.0 - zym1[0] + 0.0);
+        let mut x = 1usize;
+        // SAFETY: as above — every pointer stays within slices whose
+        // lengths the caller asserted to be >= nx; x + LANES8 <= nx.
+        while x + LANES8 <= nx {
+            let a = _mm256_loadu_ps(row.as_ptr().add(x - 1));
+            let b = _mm256_loadu_ps(ym1.as_ptr().add(x));
+            let c = _mm256_loadu_ps(zm1.as_ptr().add(x));
+            let d = _mm256_loadu_ps(ym1.as_ptr().add(x - 1));
+            let e = _mm256_loadu_ps(zm1.as_ptr().add(x - 1));
+            let f = _mm256_loadu_ps(zym1.as_ptr().add(x));
+            let g = _mm256_loadu_ps(zym1.as_ptr().add(x - 1));
+            // Reference chain: ((((((a + b) + c) - d) - e) - f) + g)
+            let mut pred = _mm256_add_ps(a, b);
+            pred = _mm256_add_ps(pred, c);
+            pred = _mm256_sub_ps(pred, d);
+            pred = _mm256_sub_ps(pred, e);
+            pred = _mm256_sub_ps(pred, f);
+            pred = _mm256_add_ps(pred, g);
+            let cur = _mm256_loadu_ps(row.as_ptr().add(x));
+            _mm256_storeu_ps(out.as_mut_ptr().add(x), _mm256_sub_ps(cur, pred));
+            x += LANES8;
         }
         while x < nx {
             let pred = row[x - 1] + ym1[x] + zm1[x] - ym1[x - 1] - zm1[x - 1] - zym1[x]
@@ -588,7 +736,7 @@ mod tests {
 
     #[test]
     fn active_kernel_names() {
-        assert!(matches!(active_kernel(), "simd" | "scalar"));
+        assert!(matches!(active_kernel(), "avx2" | "sse2" | "scalar"));
         assert_eq!(simd_available(), cfg!(target_arch = "x86_64"));
     }
 }

@@ -96,6 +96,32 @@ pub fn prediction_errors_original(data: &[f32], dims: Dims, samples: &[usize]) -
     }
 }
 
+/// Lorenzo predictions from **original** neighbors for a set of
+/// sampled linear indices — the values themselves, not the errors.
+/// Used by the stage estimator (`estimator/stage_model.rs`) to price
+/// the delta pipeline's *bit-pattern* residuals
+/// `bits(data[i]) − bits(pred)`, which an f32 subtraction of the error
+/// from the value cannot reproduce exactly.
+pub fn predictions_original(data: &[f32], dims: Dims, samples: &[usize]) -> Vec<f32> {
+    match dims {
+        Dims::D1(_) => samples.iter().map(|&i| predict_1d(data, i)).collect(),
+        Dims::D2(_, nx) => samples
+            .iter()
+            .map(|&i| predict_2d(data, nx, i / nx, i % nx))
+            .collect(),
+        Dims::D3(_, ny, nx) => {
+            let sxy = ny * nx;
+            samples
+                .iter()
+                .map(|&i| {
+                    let r = i % sxy;
+                    predict_3d(data, ny, nx, i / sxy, r / nx, r % nx)
+                })
+                .collect()
+        }
+    }
+}
+
 /// Full-field prediction errors against original neighbors (used by
 /// Fig. 4's distribution dump, the ablation benches, and tests).
 /// Runs through the batched row kernels of [`super::kernels`] — the

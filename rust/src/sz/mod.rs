@@ -11,7 +11,8 @@
 //!   size δ = 2·eb into 2n−1 bins (default 65,535); out-of-range
 //!   prediction errors become "unpredictable" literals.
 //! * **Stage III (lossless)** — [`huffman_stage`]: canonical Huffman
-//!   over the bin indices, optional zstd recompression of the payload.
+//!   over the bin indices, optional range-coder recompression of the
+//!   payload.
 
 pub mod compressor;
 pub mod huffman_stage;

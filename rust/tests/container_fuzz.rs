@@ -184,3 +184,100 @@ fn truncation_points_fuzzed() {
         }
     });
 }
+
+/// A real chunked container whose chunks select composed pipelines
+/// (staged selection bytes ≥ FIRST_PIPELINE_ID, DESIGN.md §15).
+fn v2_pipeline_bytes() -> Vec<u8> {
+    use adaptivec::estimator::selector::CandidateSet;
+    let cfg = SelectorConfig {
+        candidates: CandidateSet::parse("bitround+sz,delta+arith").unwrap(),
+        ..SelectorConfig::default()
+    };
+    let coord = Coordinator::new(cfg, 2);
+    let report = coord.run_chunked(&fields(2), Policy::RateDistortion, 1e-3, 2048).unwrap();
+    report.to_container().to_bytes()
+}
+
+#[test]
+fn unknown_pipeline_selection_bytes_rejected_at_decode() {
+    // Ids just past the registered pipeline range, and far past it,
+    // must surface as Err from the registry — never a panic or a
+    // misrouted decode through a neighboring pipeline.
+    use adaptivec::codec_api::FIRST_PIPELINE_ID;
+    let registry = CodecRegistry::default();
+    let reader = ContainerReader::from_bytes(v2_pipeline_bytes()).unwrap();
+    let max_registered = (0u8..=255).filter(|&id| registry.lookup(id).is_some()).max().unwrap();
+    assert!(max_registered >= FIRST_PIPELINE_ID, "pipeline run registered no pipelines");
+    for bad in [max_registered + 1, 63, 200, 0xEE] {
+        for (fi, f) in reader.fields.iter().enumerate() {
+            for ci in 0..f.chunks.len() {
+                let mut r = reader.clone();
+                r.fields[fi].chunks[ci].selection = bad;
+                assert!(
+                    r.decode_chunk(&registry, fi, ci).is_err(),
+                    "selection byte {bad} decoded"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn truncated_pipeline_stage_configs_error_never_panic() {
+    // Composed pipeline streams lead with varint-framed stage config
+    // blobs; cutting the stream anywhere inside them (or anywhere at
+    // all) must decode as Err, never a panic or wild allocation.
+    use adaptivec::codec_api::FIRST_PIPELINE_ID;
+    let registry = CodecRegistry::default();
+    let reader = ContainerReader::from_bytes(v2_pipeline_bytes()).unwrap();
+    let mut pipeline_chunks = 0usize;
+    for (fi, f) in reader.fields.iter().enumerate() {
+        for (ci, c) in f.chunks.iter().enumerate() {
+            if c.selection < FIRST_PIPELINE_ID {
+                continue;
+            }
+            pipeline_chunks += 1;
+            let bytes = reader.chunk_bytes(fi, ci).unwrap();
+            // Every prefix that clips the stream proper must error.
+            for cut in [0usize, 1, 2, bytes.len() / 2, bytes.len().saturating_sub(1)] {
+                let _ = registry.decode_stream(c.selection, &bytes[..cut.min(bytes.len())]);
+            }
+            assert!(registry.decode_stream(c.selection, &[]).is_err());
+            assert!(registry.decode_stream(c.selection, &bytes[..1.min(bytes.len())]).is_err());
+            // The untruncated stream still decodes.
+            registry.decode_stream(c.selection, &bytes).unwrap();
+        }
+    }
+    assert!(pipeline_chunks > 0, "no pipeline-selected chunks to fuzz");
+}
+
+#[test]
+fn pipeline_streams_random_flips_never_panic() {
+    // Random single-byte corruption anywhere in a composed pipeline
+    // stream: decode must be total (Ok or Err), with CRC off the table
+    // because we feed the registry directly.
+    use adaptivec::codec_api::FIRST_PIPELINE_ID;
+    let registry = CodecRegistry::default();
+    let reader = ContainerReader::from_bytes(v2_pipeline_bytes()).unwrap();
+    let mut streams: Vec<(u8, Vec<u8>)> = Vec::new();
+    for (fi, f) in reader.fields.iter().enumerate() {
+        for (ci, c) in f.chunks.iter().enumerate() {
+            if c.selection >= FIRST_PIPELINE_ID {
+                streams.push((c.selection, reader.chunk_bytes(fi, ci).unwrap()));
+            }
+        }
+    }
+    assert!(!streams.is_empty());
+    let n = streams.len();
+    let gen = Gen::<(usize, usize, u8)>::new(move |r| {
+        (r.below(n), r.below(1 << 20), (1u8) << r.below(8))
+    });
+    forall("pipeline stream flips never panic", 200, gen, |&(si, pos, mask)| {
+        let (sel, stream) = &streams[si];
+        let mut bad = stream.clone();
+        let p = pos % bad.len();
+        bad[p] ^= mask;
+        let _ = registry.decode_stream(*sel, &bad);
+        true
+    });
+}

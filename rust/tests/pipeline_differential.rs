@@ -1,0 +1,143 @@
+//! Differential proof for the staged-pipeline refactor (DESIGN.md
+//! §15): the default pipeline set must reproduce the flat registry's
+//! outputs **byte-identically**. Two layers of evidence:
+//!
+//! 1. Stream level — `CodecRegistry::encode` for every bare codec id
+//!    equals the selection byte + the codec's direct `compress` output
+//!    across fields and bounds (the single-stage fast path adds zero
+//!    header bytes).
+//! 2. Container level — chunked containers written under the default
+//!    candidate set carry only bare-codec selection bytes, and every
+//!    chunk payload decodes through the **direct** compressor,
+//!    bypassing the pipeline layer entirely. A pipeline wire header
+//!    would break that decode, so this pins the format, not just the
+//!    values.
+
+use adaptivec::baseline::Policy;
+use adaptivec::codec_api::{Choice, Codec, CodecRegistry, RawCodec, FIRST_PIPELINE_ID};
+use adaptivec::coordinator::store::ContainerReader;
+use adaptivec::coordinator::Coordinator;
+use adaptivec::data::{atm, Field};
+use adaptivec::dct::{DctCompressor, DctConfig};
+use adaptivec::estimator::selector::SelectorConfig;
+use adaptivec::sz::{SzCompressor, SzConfig};
+use adaptivec::zfp::{ZfpCompressor, ZfpConfig};
+
+fn fields() -> Vec<Field> {
+    // One field per data class: Smooth, Fraction, Rough.
+    [0usize, 4, 7].iter().map(|&i| atm::generate_field_scaled(2018, i, 0)).collect()
+}
+
+/// The pre-refactor flat path: direct compressor dispatch, no
+/// pipeline layer.
+fn flat_compress(choice: Choice, data: &[f32], dims: adaptivec::data::field::Dims, eb: f64) -> Vec<u8> {
+    match choice {
+        Choice::Sz => SzCompressor::new(SzConfig::default()).compress(data, dims, eb).unwrap(),
+        Choice::Zfp => ZfpCompressor::new(ZfpConfig::default()).compress(data, dims, eb).unwrap(),
+        Choice::Dct => DctCompressor::new(DctConfig::default()).compress(data, dims, eb).unwrap(),
+        _ => RawCodec.compress(data, dims, eb).unwrap(),
+    }
+}
+
+#[test]
+fn registry_streams_match_flat_path_across_fields_and_bounds() {
+    let registry = CodecRegistry::default();
+    for f in fields() {
+        let vr = f.value_range();
+        for eb_rel in [1e-3, 1e-4] {
+            let eb = eb_rel * vr;
+            for choice in Choice::ALL {
+                let flat = flat_compress(choice, &f.data, f.dims, eb);
+                let framed = registry.encode(choice, &f.data, f.dims, eb).unwrap();
+                assert_eq!(framed[0], choice.id());
+                assert_eq!(
+                    &framed[1..],
+                    flat.as_slice(),
+                    "{choice:?} at {eb_rel:e} on {}",
+                    f.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn default_chunked_containers_carry_flat_registry_streams() {
+    // Default candidate set (no pipelines): for every policy and
+    // chunking, each chunk must be a bare-codec stream that the direct
+    // compressor can decode without going through the pipeline layer.
+    let registry = CodecRegistry::default();
+    let fields = fields();
+    for policy in [Policy::RateDistortion, Policy::AlwaysSz, Policy::AlwaysZfp] {
+        for chunk_elems in [2048usize, 100_000] {
+            let coord = Coordinator::new(SelectorConfig::default(), 2);
+            let report = coord.run_chunked(&fields, policy, 1e-3, chunk_elems).unwrap();
+            let reader =
+                ContainerReader::from_bytes(report.to_container().to_bytes()).unwrap();
+            for (fi, fld) in reader.fields.iter().enumerate() {
+                for (ci, c) in fld.chunks.iter().enumerate() {
+                    assert!(
+                        c.selection < FIRST_PIPELINE_ID,
+                        "{policy:?}: default run selected pipeline id {}",
+                        c.selection
+                    );
+                    let bytes = reader.chunk_bytes(fi, ci).unwrap();
+                    let via_registry = registry.decode_stream(c.selection, &bytes).unwrap();
+                    // Bypass the registry entirely: the stream must be
+                    // a plain codec stream, so the direct decompressor
+                    // accepts it byte-for-byte.
+                    let direct = match Choice::from_id(c.selection).unwrap() {
+                        Choice::Sz => SzCompressor::default().decompress(&bytes).unwrap(),
+                        Choice::Zfp => {
+                            ZfpCompressor::new(ZfpConfig::default()).decompress(&bytes).unwrap()
+                        }
+                        Choice::Dct => {
+                            DctCompressor::new(DctConfig::default()).decompress(&bytes).unwrap()
+                        }
+                        _ => RawCodec.decompress(&bytes).unwrap(),
+                    };
+                    let same_bits = via_registry
+                        .0
+                        .iter()
+                        .zip(&direct.0)
+                        .all(|(a, b)| a.to_bits() == b.to_bits());
+                    assert!(
+                        same_bits && via_registry.0.len() == direct.0.len(),
+                        "{policy:?} chunk ({fi},{ci}) decodes differently"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn enabling_pipelines_leaves_bare_codec_streams_unchanged() {
+    // The estimator may *select* differently once pipelines compete,
+    // but any chunk that still selects a bare codec must produce the
+    // exact bytes the flat path produced.
+    use adaptivec::estimator::selector::{CandidateSet, PipelineMask};
+    let cfg = SelectorConfig {
+        candidates: CandidateSet { pipelines: PipelineMask::builtins(), ..CandidateSet::all() },
+        ..SelectorConfig::default()
+    };
+    let coord = Coordinator::new(cfg, 2);
+    let fields = fields();
+    let report = coord.run_chunked(&fields, Policy::RateDistortion, 1e-3, 2048).unwrap();
+    let reader = ContainerReader::from_bytes(report.to_container().to_bytes()).unwrap();
+    let registry = CodecRegistry::default();
+    for (fi, fld) in reader.fields.iter().enumerate() {
+        for (ci, c) in fld.chunks.iter().enumerate() {
+            let bytes = reader.chunk_bytes(fi, ci).unwrap();
+            // Every chunk decodes through the registry.
+            registry.decode_stream(c.selection, &bytes).unwrap();
+            // Bare-codec chunks remain flat streams even when
+            // pipelines competed for the selection.
+            if c.selection == Choice::Sz.id() {
+                SzCompressor::default().decompress(&bytes).unwrap();
+            } else if c.selection == Choice::Zfp.id() {
+                ZfpCompressor::new(ZfpConfig::default()).decompress(&bytes).unwrap();
+            }
+        }
+    }
+}
