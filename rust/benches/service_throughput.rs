@@ -141,5 +141,37 @@ fn main() {
     }
     t.print("service_throughput — iosim SvcModel (analytical)");
 
+    // Regression guard for the fault-injection layer: compiled in
+    // (`--features faults`) but with no site armed, a failpoint check
+    // is one relaxed atomic load — its per-call cost must stay in the
+    // measurement noise or the hooks cannot ship in hot paths.
+    #[cfg(feature = "faults")]
+    {
+        use adaptivec::testing::failpoints;
+        let calls = 5_000_000u32;
+        let t0 = Instant::now();
+        for _ in 0..calls {
+            failpoints::check("bench.disarmed").expect("disarmed failpoint must be a no-op");
+        }
+        let wall = t0.elapsed();
+        let per_call = wall / calls;
+        let ns = wall.as_secs_f64() * 1e9 / calls as f64;
+        json.record(
+            "fault_check_disarmed",
+            Timing { mean: per_call, std_dev: Duration::ZERO, iters: calls },
+        );
+        let mut t = Table::new(&["calls", "wall", "per call"]);
+        t.row(&[
+            calls.to_string(),
+            format!("{:.3} ms", wall.as_secs_f64() * 1e3),
+            format!("{ns:.2} ns"),
+        ]);
+        t.print("service_throughput — disarmed failpoint overhead (guard)");
+        assert!(
+            per_call < Duration::from_nanos(200),
+            "disarmed failpoint check costs {ns:.2} ns/call — no longer in the noise"
+        );
+    }
+
     json.write_env().expect("write bench JSON");
 }

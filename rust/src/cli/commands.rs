@@ -16,7 +16,7 @@ use crate::data::{Dataset, Field};
 use crate::engine::{Engine, EngineConfig, WritePlan};
 use crate::estimator::selector::{AutoSelector, CandidateSet, Choice, SelectorConfig};
 use crate::iosim::{FsModel, SvcModel, ThroughputModel, PROC_SWEEP};
-use crate::service::net::{Client, Server};
+use crate::service::net::{Client, ClientConfig, NetConfig, Server};
 use crate::service::{ArchiveConfig, Service, ServiceConfig};
 use crate::{Error, Result};
 use std::sync::Arc;
@@ -64,6 +64,8 @@ COMMANDS:
               [--batch-max N] [--eb E] [--policy P] [--chunk-elems N]
               [--codecs C] [--pipelines P] [--archive-dir DIR]
               [--archive-mem BYTES] [--archive-readers N]
+              [--read-timeout-ms MS] [--write-timeout-ms MS]
+              [--idle-timeout-ms MS]
               (concurrent service front end over one shared engine:
                bounded request queue with Busy admission control,
                batched store passes, length-prefixed TCP frames; runs
@@ -75,15 +77,21 @@ COMMANDS:
                open readers (default 16), restart recovers the whole
                index from a shard scan, and shutdown flushes every
                still-hot batch. Without it the archive is in-memory
-               only, as before)
+               only, as before. Timeouts guard the transport: a client
+               stalled mid-frame past --read-timeout-ms (default
+               30000) is disconnected, an idle connection is closed
+               after --idle-timeout-ms (default 300000); 0 disables a
+               deadline)
   client      --op compress --dataset D [--scale S] [--seed N]
               [--retry-ms MS] [--retries N]
               | --op fetch --field NAME [--out FILE]
               | --op stats | --op shutdown
               [--addr 127.0.0.1:7845]
+              [--timeout-ms MS] [--timeout-retries N]
               (drives a running `adaptivec serve`; compress retries
                Busy rejections with backoff and reports how many it
-               absorbed)
+               absorbed; deadline expiries reconnect and retry up to
+               --timeout-retries times)
 ";
 
 fn selector_cfg(args: &Args) -> Result<SelectorConfig> {
@@ -499,6 +507,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let archive_dir = args.get("archive-dir").map(std::path::PathBuf::from);
     let archive_mem: usize = args.get_or("archive-mem", 64 << 20)?;
     let archive_readers: usize = args.get_or("archive-readers", 16)?;
+    // Transport deadlines (0 = disabled): per-read/write socket
+    // timeouts plus the idle budget for quiet connections.
+    let read_timeout_ms: u64 = args.get_or("read-timeout-ms", 30_000)?;
+    let write_timeout_ms: u64 = args.get_or("write-timeout-ms", 30_000)?;
+    let idle_timeout_ms: u64 = args.get_or("idle-timeout-ms", 300_000)?;
     let cfg = selector_cfg(&args)?;
     args.check_unknown()?;
 
@@ -525,7 +538,12 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         },
     )?;
     let recovered = svc.report().archive;
-    let server = Server::bind(svc.handle(), &addr)?;
+    let net = NetConfig {
+        read_timeout: std::time::Duration::from_millis(read_timeout_ms),
+        write_timeout: std::time::Duration::from_millis(write_timeout_ms),
+        idle_timeout: std::time::Duration::from_millis(idle_timeout_ms),
+    };
+    let server = Server::bind_with(svc.handle(), &addr, net)?;
     println!(
         "serving on {} (workers {workers}, queue depth {queue_depth}, batch max {batch_max}, \
          policy {}, eb_rel {eb:.0e}, {chunk_elems} elems/chunk)",
@@ -555,13 +573,23 @@ fn cmd_client(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv, &[])?;
     let addr = args.get("addr").unwrap_or("127.0.0.1:7845").to_string();
     let op = args.get("op").unwrap_or("stats").to_string();
+    // Transport deadlines (0 = disabled) and the reconnect-and-retry
+    // budget for expiries — retrying is safe, every op is idempotent.
+    let timeout_ms: u64 = args.get_or("timeout-ms", 30_000)?;
+    let timeout_retries: u32 = args.get_or("timeout-retries", 2)?;
+    let net_cfg = ClientConfig {
+        read_timeout: std::time::Duration::from_millis(timeout_ms),
+        write_timeout: std::time::Duration::from_millis(timeout_ms),
+        timeout_retries,
+        ..ClientConfig::default()
+    };
     match op.as_str() {
         "compress" => {
             let fields = load_dataset(&args)?;
             let retry_ms: u64 = args.get_or("retry-ms", 10)?;
             let retries: u32 = args.get_or("retries", 500)?;
             args.check_unknown()?;
-            let mut client = Client::connect(&addr)?;
+            let mut client = Client::connect_with(&addr, net_cfg)?;
             let t0 = std::time::Instant::now();
             let (mut raw, mut stored, mut busy) = (0u64, 0u64, 0u64);
             for f in &fields {
@@ -600,7 +628,7 @@ fn cmd_client(argv: &[String]) -> Result<()> {
             let name = args.require("field")?.to_string();
             let out = args.get("out").map(str::to_string);
             args.check_unknown()?;
-            let field = Client::connect(&addr)?.fetch(&name)?;
+            let field = Client::connect_with(&addr, net_cfg)?.fetch(&name)?;
             match out {
                 Some(path) => {
                     use std::io::Write as _;
@@ -626,11 +654,11 @@ fn cmd_client(argv: &[String]) -> Result<()> {
         }
         "stats" => {
             args.check_unknown()?;
-            println!("{}", Client::connect(&addr)?.stats()?);
+            println!("{}", Client::connect_with(&addr, net_cfg)?.stats()?);
         }
         "shutdown" => {
             args.check_unknown()?;
-            Client::connect(&addr)?.shutdown()?;
+            Client::connect_with(&addr, net_cfg)?.shutdown()?;
             println!("server shutdown requested");
         }
         other => {

@@ -21,6 +21,7 @@
 //! of a shard file is immutable), so concurrent readers do not
 //! serialize on each other's disk time.
 
+use crate::testing::failpoints;
 use crate::{Error, Result};
 use std::io::{Seek, SeekFrom, Write};
 use std::path::PathBuf;
@@ -221,6 +222,7 @@ impl SpillStore {
             SEQ.fetch_add(1, Ordering::Relaxed)
         );
         let path = dir.join(name);
+        failpoints::check("spill.create")?;
         let file = std::fs::OpenOptions::new()
             .read(true)
             .write(true)
@@ -244,6 +246,7 @@ impl SpillStore {
         if meta.wbuf.is_empty() {
             return Ok(());
         }
+        failpoints::check("spill.flush")?;
         let mut file = shard.file.get().expect("flush only after spill");
         file.seek(SeekFrom::Start(meta.flushed))?;
         file.write_all(&meta.wbuf)?;
@@ -299,6 +302,7 @@ impl SpillStore {
         buf: &mut [u8],
     ) -> Result<()> {
         drop(meta);
+        failpoints::check("spill.read")?;
         use std::os::unix::fs::FileExt;
         let file = shard.file.get().expect("spilled shard has a file");
         file.read_exact_at(buf, offset)?;
@@ -315,6 +319,7 @@ impl SpillStore {
         buf: &mut [u8],
     ) -> Result<()> {
         use std::io::Read;
+        failpoints::check("spill.read")?;
         let _hold_cursor = meta;
         let mut file = shard.file.get().expect("spilled shard has a file");
         file.seek(SeekFrom::Start(offset))?;

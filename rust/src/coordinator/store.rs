@@ -39,6 +39,7 @@ use crate::codec::crc32;
 use crate::codec::varint;
 use crate::codec_api::CodecRegistry;
 use crate::data::field::{Dims, Field};
+use crate::testing::failpoints;
 use crate::{Error, Result};
 use std::io::{Read, Write};
 use std::path::Path;
@@ -391,6 +392,7 @@ impl<W: Write> ContainerV2Writer<W> {
     /// successors (the primitive under both public supply APIs).
     fn emit_next(&mut self, stream: &[u8]) -> Result<()> {
         self.check_declared(self.next, stream)?;
+        failpoints::check("store.sink_write")?;
         self.sink.write_all(stream)?;
         self.written += stream.len() as u64;
         self.next += 1;
@@ -616,6 +618,7 @@ impl ByteSource for FileSource {
                 self.len
             )));
         }
+        failpoints::check("store.pread")?;
         #[cfg(unix)]
         {
             use std::os::unix::fs::FileExt;
@@ -734,6 +737,7 @@ impl MmapSource {
     /// zero-length mappings) — callers fall back to [`FileSource`].
     pub fn open(path: impl AsRef<Path>) -> Result<MmapSource> {
         use std::os::fd::AsRawFd;
+        failpoints::check("store.mmap")?;
         let file = std::fs::File::open(path)?;
         let len = usize::try_from(file.metadata()?.len())
             .map_err(|_| Error::Other("file exceeds address space".into()))?;

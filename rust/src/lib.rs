@@ -44,6 +44,7 @@
 //! | [`engine`], [`service`] (+ [`cli`]) | §12 engine core and service front end |
 //! | [`codec::crc32`], [`sz::kernels`], mmap sources | §13 hardware dispatch |
 //! | [`service::archive`] | §14 persistent sharded archive store |
+//! | [`testing::failpoints`] + hardening | §16 fault injection and graceful degradation |
 //!
 //! `OPERATIONS.md` is the operator guide: every environment pin
 //! (`ADAPTIVEC_FORCE_CRC`, `ADAPTIVEC_SCALAR_KERNELS`,
@@ -94,6 +95,14 @@ pub enum Error {
     /// The service request queue is at its high-water mark — the
     /// admission-control rejection (back off and retry, or shed).
     Busy,
+    /// An internal invariant broke (inconsistent staging map, a
+    /// panicking worker batch): the request failed but the service
+    /// survives and keeps serving. Where a panic would once have
+    /// killed a thread, its tickets now resolve to this.
+    Internal(String),
+    /// A transport deadline expired (read/write/idle timeout on the
+    /// net layer). Clients treat it as retryable with backoff.
+    Timeout(String),
     Other(String),
 }
 
@@ -105,6 +114,8 @@ impl std::fmt::Display for Error {
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Runtime(m) => write!(f, "pjrt runtime error: {m}"),
             Error::Busy => write!(f, "service busy: request queue at high-water mark"),
+            Error::Internal(m) => write!(f, "internal error: {m}"),
+            Error::Timeout(m) => write!(f, "timeout: {m}"),
             Error::Other(m) => write!(f, "{m}"),
         }
     }

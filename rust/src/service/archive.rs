@@ -32,14 +32,31 @@
 //! after spill (or after restart) returns bit-identical data to the
 //! in-memory fetch, which is itself bit-identical to the offline
 //! `compress_chunked_to` + `load_field` path.
+//!
+//! **Failure hardening (DESIGN.md §16):** a spill write that fails
+//! transiently (EIO, interrupted) is retried with bounded exponential
+//! backoff ([`ArchiveStats::io_retries`] counts the retries). A write
+//! that fails hard — ENOSPC, or transient errors past the retry budget
+//! — no longer errors the insert path: the archive enters **degraded
+//! memory-only mode** (inserts keep succeeding, eviction pauses, the
+//! `degraded:` flag + first cause surface in [`ArchiveStats`] and the
+//! service report line) and each subsequent insert probes one spill;
+//! the first success clears the flag and drains the backlog. The spill
+//! staging protocol itself returns typed [`Error::Internal`] instead
+//! of panicking on an inconsistent map, so a bug there also degrades
+//! rather than killing the inserting worker. Every durability step
+//! (temp write, fsync, rename, publish, staging) carries a named
+//! [`crate::testing::failpoints`] site the fault suite drives.
 
 use super::BatchRecord;
 use crate::coordinator::store::ContainerReader;
+use crate::testing::failpoints;
 use crate::{Error, Result};
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
 
 /// Number of shard directories (`shard-00` … `shard-0f`) the archive
 /// fans batch files across. Fixed: the shard of a batch is
@@ -54,6 +71,46 @@ const COLD_READER_CACHE_BYTES: usize = 8 << 20;
 
 /// Shard file extension (recovery scans only these).
 const SHARD_EXT: &str = "adptc";
+
+/// Max transient-error retries per durable shard write, on top of the
+/// first attempt. Exponential backoff between attempts.
+const SPILL_RETRIES: u32 = 4;
+
+/// First retry backoff; doubles per retry up to the cap. Worst case
+/// one write burns 2+4+8+16 = 30 ms before the archive degrades.
+const RETRY_BACKOFF_MS: u64 = 2;
+const RETRY_BACKOFF_CAP_MS: u64 = 50;
+
+/// Unix errno for "no space left on device" — the degraded-mode
+/// trigger. Compared against `raw_os_error`, so a no-op off-unix.
+const ENOSPC: i32 = 28;
+
+/// Unix errno for a device-level I/O error: transient, retried.
+const EIO: i32 = 5;
+
+/// Is this an error worth retrying? Device hiccups and interruptions
+/// are; ENOSPC is not (retrying a full disk just burns time — degrade
+/// instead), and non-I/O errors never are.
+fn is_transient_io(e: &Error) -> bool {
+    match e {
+        Error::Io(io) => {
+            matches!(
+                io.kind(),
+                std::io::ErrorKind::Interrupted
+                    | std::io::ErrorKind::TimedOut
+                    | std::io::ErrorKind::WouldBlock
+            ) || io.raw_os_error() == Some(EIO)
+        }
+        _ => false,
+    }
+}
+
+/// ENOSPC classification for diagnostics (the degraded reason string
+/// flags it explicitly so operators know to free disk, not replace
+/// hardware).
+fn is_enospc(e: &Error) -> bool {
+    matches!(e, Error::Io(io) if io.raw_os_error() == Some(ENOSPC))
+}
 
 /// Archive tuning knobs (CLI: `serve --archive-dir/--archive-mem/
 /// --archive-readers`).
@@ -121,6 +178,18 @@ pub struct ArchiveStats {
     /// re-compressed into a newer batch (garbage collection — the disk
     /// analogue of last-write-wins).
     pub superseded_deleted: u64,
+    /// Transient spill-write failures absorbed by the bounded
+    /// exponential-backoff retry (each retry attempt counts once).
+    pub io_retries: u64,
+    /// Whether the archive is currently in degraded memory-only mode:
+    /// a spill failed hard, eviction is paused, inserts continue.
+    pub degraded: bool,
+    /// First cause of the current degraded episode (empty if healthy).
+    pub degraded_reason: String,
+    /// Healthy→degraded transitions over the archive's lifetime.
+    pub degraded_events: u64,
+    /// Degraded→healthy recoveries (a probe spill or flush succeeded).
+    pub degraded_recoveries: u64,
 }
 
 impl ArchiveStats {
@@ -131,7 +200,8 @@ impl ArchiveStats {
             "archive: {} hot batches ({} B) / {} cold fields; \
              spills {} ({} B), evictions {}; recovered {} fields from {} shards \
              ({} corrupt skipped); reader cache {} hits / {} misses; \
-             {} superseded shards deleted",
+             {} superseded shards deleted; io retries {}, degraded events {} \
+             ({} recovered); degraded: {}",
             self.hot_batches,
             self.hot_bytes,
             self.cold_fields,
@@ -144,6 +214,14 @@ impl ArchiveStats {
             self.reader_hits,
             self.reader_misses,
             self.superseded_deleted,
+            self.io_retries,
+            self.degraded_events,
+            self.degraded_recoveries,
+            if self.degraded {
+                format!("yes ({})", self.degraded_reason)
+            } else {
+                "no".to_string()
+            },
         )
     }
 }
@@ -160,6 +238,9 @@ struct ArchiveCounters {
     reader_hits: AtomicU64,
     reader_misses: AtomicU64,
     superseded_deleted: AtomicU64,
+    io_retries: AtomicU64,
+    degraded_events: AtomicU64,
+    degraded_recoveries: AtomicU64,
 }
 
 /// Where one field name currently resolves.
@@ -248,6 +329,10 @@ struct ArchiveState {
     cold_refs: HashMap<PathBuf, usize>,
     /// Bounded diagnostic ring of recent raw batch bytes.
     log: VecDeque<BatchRecord>,
+    /// `Some(first cause)` while in degraded memory-only mode: a spill
+    /// failed hard, eviction is paused, inserts keep succeeding, each
+    /// insert probes one spill until the device writes again.
+    degraded: Option<String>,
 }
 
 impl ArchiveState {
@@ -344,11 +429,19 @@ impl ArchiveStore {
                 }
                 for entry in std::fs::read_dir(&dir)? {
                     let path = entry?.path();
-                    let Some(seq) = path
-                        .file_name()
-                        .and_then(|n| n.to_str())
-                        .and_then(parse_shard_seq)
-                    else {
+                    let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+                        continue;
+                    };
+                    if name.contains(".tmp.") {
+                        // Leftover from a spill interrupted mid-write
+                        // (crash between temp create and rename). The
+                        // publish protocol guarantees it was never
+                        // indexed; sweep it so torn bytes cannot
+                        // accumulate on disk.
+                        std::fs::remove_file(&path).ok();
+                        continue;
+                    }
+                    let Some(seq) = parse_shard_seq(name) else {
                         continue;
                     };
                     found.push((seq, path));
@@ -415,6 +508,7 @@ impl ArchiveStore {
                 readers: ReaderCache::default(),
                 cold_refs,
                 log: VecDeque::new(),
+                degraded: None,
             }),
             counters,
         })
@@ -431,6 +525,11 @@ impl ArchiveStore {
     /// its mapping (last write wins); a cold shard left with zero live
     /// names by the replacement is deleted (outside the lock); the
     /// raw-bytes log keeps only the most recent `log_max` batches.
+    ///
+    /// Spill failures never fail the insert: the batch is indexed and
+    /// fetchable either way, and a hard write failure flips the
+    /// archive into degraded memory-only mode (see [`ArchiveStats`])
+    /// instead of surfacing here.
     pub fn insert(&self, names: Vec<String>, bytes: Vec<u8>) -> Result<()> {
         let bytes_len = bytes.len();
         let reader = Arc::new(ContainerReader::from_bytes(bytes.clone())?);
@@ -457,7 +556,8 @@ impl ArchiveStore {
             doomed
         };
         self.delete_superseded(&doomed);
-        self.enforce_budget()
+        self.maintain();
+        Ok(())
     }
 
     /// Best-effort unlink of superseded shard files. Called with the
@@ -472,6 +572,96 @@ impl ArchiveStore {
         }
     }
 
+    /// Post-insert housekeeping: spill toward the memory budget, and
+    /// absorb spill failures into the degraded-mode state machine
+    /// instead of surfacing them to the inserter.
+    ///
+    /// Healthy: spill (with transient retries) until under budget; a
+    /// hard failure flips degraded. Degraded: probe exactly one spill
+    /// without retries — while the device still fails, stay
+    /// memory-only (eviction paused, residency growing past budget by
+    /// design); the first success clears the flag, counts a recovery,
+    /// and drains the backlog.
+    fn maintain(&self) {
+        if self.cfg.root_dir.is_none() {
+            return;
+        }
+        let degraded = self.lock().map(|st| st.degraded.is_some()).unwrap_or(false);
+        if degraded {
+            match self.spill_step(false) {
+                Ok(true) => {
+                    if let Ok(mut st) = self.lock() {
+                        st.degraded = None;
+                    }
+                    self.counters.degraded_recoveries.fetch_add(1, Ordering::Relaxed);
+                    if let Err(e) = self.enforce_budget() {
+                        self.enter_degraded(&e);
+                    }
+                }
+                Ok(false) => {}
+                Err(_) => {}
+            }
+        } else if let Err(e) = self.enforce_budget() {
+            self.enter_degraded(&e);
+        }
+    }
+
+    /// Flip to degraded memory-only mode (idempotent — the first cause
+    /// of an episode is kept). Inserts continue, eviction pauses, the
+    /// flag and reason surface through [`ArchiveStats`].
+    fn enter_degraded(&self, cause: &Error) {
+        if let Ok(mut st) = self.lock() {
+            if st.degraded.is_none() {
+                let tag = if is_enospc(cause) { "out of space: " } else { "" };
+                st.degraded = Some(format!("{tag}{cause}"));
+                self.counters.degraded_events.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Run `op`, retrying transient I/O errors up to [`SPILL_RETRIES`]
+    /// times with capped exponential backoff. ENOSPC and non-I/O
+    /// errors are never retried — they are degraded-mode triggers,
+    /// not turbulence.
+    fn retry_transient(&self, mut op: impl FnMut() -> Result<()>) -> Result<()> {
+        let mut backoff = Duration::from_millis(RETRY_BACKOFF_MS);
+        let mut attempts = 0u32;
+        loop {
+            match op() {
+                Ok(()) => return Ok(()),
+                Err(e) if attempts < SPILL_RETRIES && is_transient_io(&e) => {
+                    attempts += 1;
+                    self.counters.io_retries.fetch_add(1, Ordering::Relaxed);
+                    std::thread::sleep(backoff);
+                    backoff = backoff
+                        .saturating_mul(2)
+                        .min(Duration::from_millis(RETRY_BACKOFF_CAP_MS));
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Spill one oldest hot batch if residency is over budget.
+    /// `Ok(true)` = one batch written and evicted; `Ok(false)` =
+    /// nothing to do (under budget or no hot batches).
+    fn spill_step(&self, with_retries: bool) -> Result<bool> {
+        let staged = {
+            let mut st = self.lock()?;
+            if st.hot_bytes <= self.cfg.mem_budget || st.hot.is_empty() {
+                return Ok(false);
+            }
+            self.stage_oldest(&mut st)?
+        };
+        match staged {
+            Some(s) => {
+                self.complete_spill(s, with_retries)?;
+                Ok(true)
+            }
+            None => Ok(false),
+        }
+    }
+
     /// Spill oldest hot batches until residency is back under the
     /// memory budget. No-op for in-memory archives (nowhere to evict
     /// to — the pre-persistence behavior, residency unbounded).
@@ -479,19 +669,8 @@ impl ArchiveStore {
         if self.cfg.root_dir.is_none() {
             return Ok(());
         }
-        loop {
-            let staged = {
-                let mut st = self.lock()?;
-                if st.hot_bytes <= self.cfg.mem_budget || st.hot.is_empty() {
-                    return Ok(());
-                }
-                self.stage_oldest(&mut st)
-            };
-            match staged {
-                Some(s) => self.complete_spill(s)?,
-                None => return Ok(()),
-            }
-        }
+        while self.spill_step(true)? {}
+        Ok(())
     }
 
     /// Durably write every memory-resident batch to its shard file and
@@ -507,44 +686,81 @@ impl ArchiveStore {
         loop {
             let staged = {
                 let mut st = self.lock()?;
-                self.stage_oldest(&mut st)
+                self.stage_oldest(&mut st)?
             };
             match staged {
                 Some(s) => {
-                    self.complete_spill(s)?;
+                    self.complete_spill(s, true)?;
                     flushed += 1;
                 }
-                None => return Ok(flushed),
+                None => break,
             }
         }
+        // A full flush is proof the device writes again: clear any
+        // degraded episode (shutdown-time recovery counts too).
+        if flushed > 0 {
+            if let Ok(mut st) = self.lock() {
+                if st.degraded.take().is_some() {
+                    self.counters.degraded_recoveries.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        Ok(flushed)
     }
 
     /// Claim the oldest hot batch for spilling: move it to `in_flight`
     /// (still fetchable) and pick its shard path. The file write
     /// happens outside the lock in [`ArchiveStore::complete_spill`].
-    fn stage_oldest(&self, st: &mut ArchiveState) -> Option<StagedSpill> {
-        let (&seq, _) = st.hot.iter().next()?;
-        let batch = st.hot.remove(&seq).expect("key from iteration");
-        let root = self.cfg.root_dir.as_ref().expect("durable archives only");
+    ///
+    /// Staging inconsistencies return typed [`Error::Internal`] — the
+    /// caller degrades the archive; nothing here panics the inserting
+    /// worker.
+    fn stage_oldest(&self, st: &mut ArchiveState) -> Result<Option<StagedSpill>> {
+        let root = self
+            .cfg
+            .root_dir
+            .as_ref()
+            .ok_or_else(|| Error::Internal("staging a spill on a memory-only archive".into()))?;
+        let Some((&seq, _)) = st.hot.iter().next() else {
+            return Ok(None);
+        };
+        failpoints::check("archive.spill.stage")
+            .map_err(|e| Error::Internal(format!("staging fault injected: {e}")))?;
+        let batch = st
+            .hot
+            .remove(&seq)
+            .ok_or_else(|| Error::Internal(format!("hot batch {seq} vanished during staging")))?;
         let dir = root.join(shard_dir_name(batch.names.first().map(String::as_str).unwrap_or("")));
         let path = dir.join(shard_file_name(seq));
         let reader = Arc::clone(&batch.reader);
         st.in_flight.insert(seq, batch);
-        Some(StagedSpill { seq, dir, path, reader })
+        Ok(Some(StagedSpill { seq, dir, path, reader }))
     }
 
     /// Write a staged batch to its shard file (temp + fsync + rename —
     /// the file is either fully published or absent) and retarget its
     /// field slots to the cold path. On failure the batch returns to
-    /// the hot set untouched.
-    fn complete_spill(&self, s: StagedSpill) -> Result<()> {
+    /// the hot set untouched. `with_retries` selects the transient
+    /// retry wrapper (on for normal spills/flushes, off for the
+    /// degraded-mode probe, which must stay cheap while the device is
+    /// down).
+    fn complete_spill(&self, s: StagedSpill, with_retries: bool) -> Result<()> {
         let bytes = s
             .reader
             .source_bytes()
             .ok_or_else(|| Error::Other("hot batch reader is not memory-backed".into()))?;
-        let wrote = write_shard_file(&s.dir, &s.path, bytes);
+        let wrote = if with_retries {
+            self.retry_transient(|| write_shard_file(&s.dir, &s.path, bytes))
+        } else {
+            write_shard_file(&s.dir, &s.path, bytes)
+        };
         let mut st = self.lock()?;
-        let batch = st.in_flight.remove(&s.seq).expect("staged batch stays in flight");
+        let Some(batch) = st.in_flight.remove(&s.seq) else {
+            return Err(Error::Internal(format!(
+                "staged batch {} missing from the in-flight map",
+                s.seq
+            )));
+        };
         match wrote {
             Ok(()) => {
                 // Retarget only names still pointing at this batch — a
@@ -656,7 +872,7 @@ impl ArchiveStore {
 
     /// Snapshot the archive counters and residency.
     pub fn stats(&self) -> ArchiveStats {
-        let (hot_batches, hot_bytes, cold_fields, fields) = self
+        let (hot_batches, hot_bytes, cold_fields, fields, degraded_reason) = self
             .lock()
             .map(|st| {
                 let cold = st
@@ -664,9 +880,15 @@ impl ArchiveStore {
                     .values()
                     .filter(|s| matches!(s, FieldSlot::Cold(_)))
                     .count();
-                (st.hot.len() + st.in_flight.len(), st.hot_bytes, cold, st.fields.len())
+                (
+                    st.hot.len() + st.in_flight.len(),
+                    st.hot_bytes,
+                    cold,
+                    st.fields.len(),
+                    st.degraded.clone(),
+                )
             })
-            .unwrap_or((0, 0, 0, 0));
+            .unwrap_or((0, 0, 0, 0, None));
         let c = &self.counters;
         ArchiveStats {
             durable: self.cfg.root_dir.is_some(),
@@ -683,6 +905,11 @@ impl ArchiveStore {
             reader_hits: c.reader_hits.load(Ordering::Relaxed),
             reader_misses: c.reader_misses.load(Ordering::Relaxed),
             superseded_deleted: c.superseded_deleted.load(Ordering::Relaxed),
+            io_retries: c.io_retries.load(Ordering::Relaxed),
+            degraded: degraded_reason.is_some(),
+            degraded_reason: degraded_reason.unwrap_or_default(),
+            degraded_events: c.degraded_events.load(Ordering::Relaxed),
+            degraded_recoveries: c.degraded_recoveries.load(Ordering::Relaxed),
         }
     }
 }
@@ -696,16 +923,35 @@ fn write_shard_file(dir: &Path, path: &Path, bytes: &[u8]) -> Result<()> {
     let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
     let mut f = std::fs::File::create(&tmp)?;
     use std::io::Write as _;
-    if let Err(e) = f.write_all(bytes).and_then(|_| f.sync_all()) {
+    // Each durability step carries a failpoint site: the fault suite
+    // injects errors / torn writes here and the crash torture aborts
+    // the process here — the publish protocol must keep the invariant
+    // "fully present or absent" through every one of them.
+    let write = match failpoints::write_fault("archive.spill.temp_write", bytes.len()) {
+        failpoints::WriteFault::None => f.write_all(bytes),
+        failpoints::WriteFault::Short(n, e) => f.write_all(&bytes[..n]).and(Err(e)),
+        failpoints::WriteFault::Err(e) => Err(e),
+    };
+    let synced = write
+        .and_then(|_| failpoints::check("archive.spill.fsync"))
+        .and_then(|_| f.sync_all());
+    if let Err(e) = synced {
         drop(f);
         std::fs::remove_file(&tmp).ok();
         return Err(e.into());
     }
     drop(f);
-    if let Err(e) = std::fs::rename(&tmp, path) {
+    let renamed = failpoints::check("archive.spill.rename")
+        .map_err(Error::from)
+        .and_then(|_| std::fs::rename(&tmp, path).map_err(Error::from));
+    if let Err(e) = renamed {
         std::fs::remove_file(&tmp).ok();
-        return Err(e.into());
+        return Err(e);
     }
+    // Post-publish site: only meaningful for kill policies (the file
+    // is already live; an injected error here re-queues the batch and
+    // the eventual re-spill rewrites the same path idempotently).
+    failpoints::check("archive.spill.publish")?;
     Ok(())
 }
 

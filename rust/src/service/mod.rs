@@ -36,6 +36,7 @@ pub use archive::{ArchiveConfig, ArchiveStats, ArchiveStore};
 use crate::baseline::Policy;
 use crate::data::field::Field;
 use crate::engine::Engine;
+use crate::testing::failpoints;
 use crate::{Error, Result};
 use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc};
@@ -170,7 +171,11 @@ impl Service {
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("adaptivec-svc-{i}"))
-                    .spawn(move || worker_loop(&engine, &cfg, &queue, &archive, &counters))
+                    .spawn(move || {
+                        counters.workers_alive.fetch_add(1, Ordering::Relaxed);
+                        let _alive = AliveGuard(Arc::clone(&counters));
+                        worker_loop(&engine, &cfg, &queue, &archive, &counters);
+                    })
                     .expect("spawn service worker"),
             );
         }
@@ -309,10 +314,35 @@ fn snapshot(
         batches: counters.batches.load(Ordering::Relaxed),
         batched_requests: counters.batched_requests.load(Ordering::Relaxed),
         max_batch: counters.max_batch.load(Ordering::Relaxed),
+        workers_alive: counters.workers_alive.load(Ordering::Relaxed),
+        worker_panics: counters.worker_panics.load(Ordering::Relaxed),
         p50: counters.latency.quantile(0.50),
         p99: counters.latency.quantile(0.99),
         latency_count: counters.latency.count(),
         archive: archive.stats(),
+    }
+}
+
+/// Decrements `workers_alive` on every worker exit path — clean
+/// return or unwind — so a dying worker is a visible capacity loss in
+/// the report instead of a silent slowdown.
+struct AliveGuard(Arc<stats::ServiceCounters>);
+
+impl Drop for AliveGuard {
+    fn drop(&mut self) {
+        self.0.workers_alive.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Human-readable panic payload (panics carry `&str` or `String` in
+/// practice; anything else is reported opaquely).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
     }
 }
 
@@ -378,15 +408,35 @@ fn compress_batch(
             _ => unreachable!("batcher only batches compress requests"),
         }
     }
-    let outcome = engine
-        .compress_chunked_to(&fields, cfg.policy, cfg.eb_rel, cfg.chunk_elems, Vec::new())
-        .and_then(|(report, bytes)| {
-            let names: Vec<String> = fields.iter().map(|f| f.name.clone()).collect();
-            archive.insert(names, bytes)?;
-            Ok(report)
-        });
+    // Panic containment (DESIGN.md §16): a panic anywhere in the
+    // compress + insert path is caught here, resolved into
+    // `Error::Internal` for every ticket in the pass, and the worker
+    // keeps serving. The engine and archive only publish state on
+    // success (the container is built in scratch space; the archive
+    // inserts under its own lock), so an unwound pass leaves no
+    // half-written batch behind.
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        failpoints::check("service.batch").map_err(Error::from)?;
+        engine
+            .compress_chunked_to(&fields, cfg.policy, cfg.eb_rel, cfg.chunk_elems, Vec::new())
+            .and_then(|(report, bytes)| {
+                let names: Vec<String> = fields.iter().map(|f| f.name.clone()).collect();
+                archive.insert(names, bytes)?;
+                Ok(report)
+            })
+    }));
     match outcome {
-        Ok(report) => {
+        Err(payload) => {
+            counters.worker_panics.fetch_add(1, Ordering::Relaxed);
+            let msg = format!(
+                "batch compression panicked: {}",
+                panic_message(payload.as_ref())
+            );
+            for (reply, enqueued) in &replies {
+                respond(counters, reply, *enqueued, Err(Error::Internal(msg.clone())));
+            }
+        }
+        Ok(Ok(report)) => {
             counters.record_batch(batch_size);
             for ((reply, enqueued), fs) in replies.iter().zip(&report.fields) {
                 respond(
@@ -403,7 +453,7 @@ fn compress_batch(
                 );
             }
         }
-        Err(e) => {
+        Ok(Err(e)) => {
             // The whole pass failed: every requester learns why.
             let msg = format!("batch compression failed: {e}");
             for (reply, enqueued) in &replies {
@@ -421,7 +471,10 @@ fn handle_single(
     job: Job,
 ) {
     let Job { req, reply, enqueued } = job;
-    let result = match req {
+    // Same containment as `compress_batch`: a panic while serving one
+    // request resolves its ticket with `Error::Internal` and the
+    // worker moves on.
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| match req {
         Request::Compress { .. } => unreachable!("batcher routes compress into batches"),
         Request::Fetch { name } => match archive.reader_for(&name) {
             Ok(Some(reader)) => engine.load_field(&reader, &name).map(Response::Field),
@@ -434,6 +487,16 @@ fn handle_single(
         Request::Stall { millis } => {
             std::thread::sleep(std::time::Duration::from_millis(millis));
             Ok(Response::Stalled)
+        }
+    }));
+    let result = match outcome {
+        Ok(result) => result,
+        Err(payload) => {
+            counters.worker_panics.fetch_add(1, Ordering::Relaxed);
+            Err(Error::Internal(format!(
+                "request handling panicked: {}",
+                panic_message(payload.as_ref())
+            )))
         }
     };
     respond(counters, &reply, enqueued, result);

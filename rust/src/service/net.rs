@@ -21,11 +21,66 @@
 
 use super::{Request, Response, ServiceHandle};
 use crate::data::field::{Dims, Field};
+use crate::testing::failpoints;
 use crate::{Error, Result};
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Transport deadlines (DESIGN.md §16). `Duration::ZERO` disables a
+/// deadline. The server distinguishes *idle* from *stalled*: a
+/// connection with no frame in flight may sit quiet up to
+/// `idle_timeout` (polled at `read_timeout` granularity) and is then
+/// closed cleanly; a peer that stops mid-frame is disconnected as soon
+/// as `read_timeout` expires, so one stalled client can never pin a
+/// connection thread forever.
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Per-read socket deadline (also the idle-poll granularity).
+    pub read_timeout: Duration,
+    /// Per-write socket deadline.
+    pub write_timeout: Duration,
+    /// How long a connection may sit between frames before the server
+    /// closes it. Needs a nonzero `read_timeout` to be enforced.
+    pub idle_timeout: Duration,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            read_timeout: Duration::from_secs(30),
+            write_timeout: Duration::from_secs(30),
+            idle_timeout: Duration::from_secs(300),
+        }
+    }
+}
+
+/// `Duration::ZERO` means "no deadline" (`None` for the socket option).
+fn deadline(d: Duration) -> Option<Duration> {
+    if d.is_zero() {
+        None
+    } else {
+        Some(d)
+    }
+}
+
+fn is_timeout_io(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+/// Re-tag an io-level deadline expiry as [`Error::Timeout`] so callers
+/// can tell "retry with backoff" apart from a hard failure.
+fn map_timeout(e: Error, what: &str) -> Error {
+    match e {
+        Error::Io(io) if is_timeout_io(&io) => Error::Timeout(format!("{what} deadline expired")),
+        other => other,
+    }
+}
 
 /// Upper bound on one frame body — rejects corrupt/hostile lengths
 /// before any allocation.
@@ -177,6 +232,7 @@ fn decode_field(cur: &mut Cur) -> Result<Field> {
 }
 
 fn write_frame(w: &mut impl Write, body: &[u8]) -> Result<()> {
+    failpoints::check("net.write_frame")?;
     if body.len() as u64 > MAX_FRAME as u64 {
         return Err(Error::InvalidArg(format!("frame of {} bytes exceeds cap", body.len())));
     }
@@ -189,6 +245,7 @@ fn write_frame(w: &mut impl Write, body: &[u8]) -> Result<()> {
 /// Read one frame body. `Ok(None)` = clean EOF at a frame boundary
 /// (the peer closed the connection).
 fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
+    failpoints::check("net.read_frame")?;
     let mut len = [0u8; 4];
     let mut got = 0usize;
     while got < 4 {
@@ -207,6 +264,50 @@ fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
     Ok(Some(body))
 }
 
+/// Server-side frame read with the idle/stalled distinction. The
+/// stream's read deadline acts as the poll granularity: each expiry
+/// with zero header bytes in hand just re-checks the idle budget;
+/// an expiry *mid-frame* means the peer stalled and the connection is
+/// torn down with [`Error::Timeout`]. `Ok(None)` = close the
+/// connection cleanly (peer EOF at a boundary, or idle deadline).
+fn read_frame_with_deadlines(
+    stream: &mut TcpStream,
+    idle_timeout: Duration,
+) -> Result<Option<Vec<u8>>> {
+    failpoints::check("net.read_frame")?;
+    let idle_since = Instant::now();
+    let mut len = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        match stream.read(&mut len[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => return Err(Error::Corrupt("connection closed mid-frame".into())),
+            Ok(n) => got += n,
+            Err(e) if is_timeout_io(&e) && got == 0 => {
+                if !idle_timeout.is_zero() && idle_since.elapsed() >= idle_timeout {
+                    return Ok(None);
+                }
+            }
+            Err(e) if is_timeout_io(&e) => {
+                return Err(Error::Timeout("client stalled mid-frame header".into()));
+            }
+            Err(e) => return Err(Error::Io(e)),
+        }
+    }
+    let len = u32::from_le_bytes(len);
+    if len > MAX_FRAME {
+        return Err(Error::Corrupt(format!("frame length {len} exceeds cap")));
+    }
+    let mut body = vec![0u8; len as usize];
+    if let Err(e) = stream.read_exact(&mut body) {
+        if is_timeout_io(&e) {
+            return Err(Error::Timeout("client stalled mid-frame body".into()));
+        }
+        return Err(Error::Io(e));
+    }
+    Ok(Some(body))
+}
+
 // ---------------------------------------------------------------- server
 
 /// TCP acceptor bound to an address, serving a [`ServiceHandle`].
@@ -215,16 +316,23 @@ pub struct Server {
     addr: SocketAddr,
     handle: ServiceHandle,
     stop: Arc<AtomicBool>,
+    net: NetConfig,
 }
 
 impl Server {
     /// Bind `addr` (e.g. `"127.0.0.1:7845"`, or port 0 for an
     /// ephemeral port — tests read it back via
-    /// [`Server::local_addr`]).
+    /// [`Server::local_addr`]) with the default [`NetConfig`]
+    /// deadlines.
     pub fn bind(handle: ServiceHandle, addr: &str) -> Result<Server> {
+        Server::bind_with(handle, addr, NetConfig::default())
+    }
+
+    /// [`Server::bind`] with explicit transport deadlines.
+    pub fn bind_with(handle: ServiceHandle, addr: &str, net: NetConfig) -> Result<Server> {
         let listener = TcpListener::bind(addr)?;
         let addr = listener.local_addr()?;
-        Ok(Server { listener, addr, handle, stop: Arc::new(AtomicBool::new(false)) })
+        Ok(Server { listener, addr, handle, stop: Arc::new(AtomicBool::new(false)), net })
     }
 
     pub fn local_addr(&self) -> SocketAddr {
@@ -246,8 +354,9 @@ impl Server {
             let handle = self.handle.clone();
             let stop = Arc::clone(&self.stop);
             let addr = self.addr;
+            let net = self.net.clone();
             std::thread::spawn(move || {
-                let _ = serve_conn(stream, &handle, &stop, addr);
+                let _ = serve_conn(stream, &handle, &stop, addr, &net);
             });
         }
         Ok(())
@@ -255,14 +364,20 @@ impl Server {
 }
 
 /// Handle one client connection: frames in, service calls, frames out.
+/// A deadline expiry (stalled peer, exhausted idle budget) ends the
+/// connection without touching any other client — each connection owns
+/// its thread and its socket, nothing else.
 fn serve_conn(
     mut stream: TcpStream,
     handle: &ServiceHandle,
     stop: &AtomicBool,
     addr: SocketAddr,
+    net: &NetConfig,
 ) -> Result<()> {
+    stream.set_read_timeout(deadline(net.read_timeout))?;
+    stream.set_write_timeout(deadline(net.write_timeout))?;
     loop {
-        let body = match read_frame(&mut stream)? {
+        let body = match read_frame_with_deadlines(&mut stream, net.idle_timeout)? {
             Some(b) => b,
             None => return Ok(()),
         };
@@ -368,22 +483,88 @@ pub struct CompressAck {
     pub batch_size: u64,
 }
 
+/// Client-side deadlines and retry policy. A deadline expiry surfaces
+/// as [`Error::Timeout`]; `call` then reconnects (the old socket may
+/// hold a half-written frame) and retries up to `timeout_retries`
+/// times with doubling backoff. The retry is safe because every
+/// request is idempotent: compress re-inserts under last-write-wins,
+/// fetch/stats/stall change nothing.
+#[derive(Clone, Debug)]
+pub struct ClientConfig {
+    /// Socket read deadline (`Duration::ZERO` = none).
+    pub read_timeout: Duration,
+    /// Socket write deadline (`Duration::ZERO` = none).
+    pub write_timeout: Duration,
+    /// Reconnect-and-retry attempts after a timeout (0 = fail fast).
+    pub timeout_retries: u32,
+    /// Initial retry backoff; doubles per attempt.
+    pub backoff: Duration,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        ClientConfig {
+            read_timeout: Duration::from_secs(30),
+            write_timeout: Duration::from_secs(30),
+            timeout_retries: 2,
+            backoff: Duration::from_millis(50),
+        }
+    }
+}
+
 /// Blocking TCP client for the frame protocol. Busy rejections surface
-/// as [`Error::Busy`] so callers can back off and retry.
+/// as [`Error::Busy`] so callers can back off and retry; deadline
+/// expiries surface as [`Error::Timeout`] after the configured
+/// reconnect-and-retry budget is spent.
 pub struct Client {
     stream: TcpStream,
+    addr: String,
+    cfg: ClientConfig,
 }
 
 impl Client {
     pub fn connect(addr: &str) -> Result<Client> {
-        Ok(Client { stream: TcpStream::connect(addr)? })
+        Client::connect_with(addr, ClientConfig::default())
     }
 
-    /// One request/response exchange; returns the response body with
-    /// busy/error frames already mapped onto `Err`.
+    /// [`Client::connect`] with explicit deadlines and retry policy.
+    pub fn connect_with(addr: &str, cfg: ClientConfig) -> Result<Client> {
+        let stream = Self::open(addr, &cfg)?;
+        Ok(Client { stream, addr: addr.to_string(), cfg })
+    }
+
+    fn open(addr: &str, cfg: &ClientConfig) -> Result<TcpStream> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_read_timeout(deadline(cfg.read_timeout))?;
+        stream.set_write_timeout(deadline(cfg.write_timeout))?;
+        Ok(stream)
+    }
+
+    /// One request/response exchange with bounded timeout retry;
+    /// returns the response body with busy/error frames already mapped
+    /// onto `Err`.
     fn call(&mut self, body: &[u8]) -> Result<Vec<u8>> {
-        write_frame(&mut self.stream, body)?;
-        let resp = read_frame(&mut self.stream)?
+        let mut backoff = self.cfg.backoff;
+        let mut attempts = 0u32;
+        loop {
+            match self.call_once(body) {
+                Err(Error::Timeout(_)) if attempts < self.cfg.timeout_retries => {
+                    attempts += 1;
+                    std::thread::sleep(backoff);
+                    backoff = backoff.saturating_mul(2);
+                    // The old connection may hold a half-written
+                    // frame: start clean before retrying.
+                    self.stream = Self::open(&self.addr, &self.cfg)?;
+                }
+                other => return other,
+            }
+        }
+    }
+
+    fn call_once(&mut self, body: &[u8]) -> Result<Vec<u8>> {
+        write_frame(&mut self.stream, body).map_err(|e| map_timeout(e, "client write"))?;
+        let resp = read_frame(&mut self.stream)
+            .map_err(|e| map_timeout(e, "client read"))?
             .ok_or_else(|| Error::Other("server closed the connection".into()))?;
         match resp.first().copied() {
             Some(OP_BUSY) => Err(Error::Busy),
@@ -556,6 +737,51 @@ mod tests {
         assert!(client.fetch("missing").is_err());
 
         client.shutdown().unwrap();
+        acceptor.join().unwrap().unwrap();
+        svc.shutdown();
+    }
+
+    #[test]
+    fn stalled_client_is_disconnected_without_blocking_others() {
+        let engine = Arc::new(Engine::new(EngineConfig { workers: 1, ..EngineConfig::default() }));
+        let svc = Service::start(
+            engine,
+            ServiceConfig { workers: 1, ..ServiceConfig::default() },
+        )
+        .unwrap();
+        let net = NetConfig {
+            read_timeout: Duration::from_millis(40),
+            write_timeout: Duration::from_millis(500),
+            idle_timeout: Duration::from_millis(150),
+        };
+        let server = Server::bind_with(svc.handle(), "127.0.0.1:0", net).unwrap();
+        let addr = server.local_addr();
+        let acceptor = std::thread::spawn(move || server.run());
+
+        // A peer that writes 2 of the 4 length-prefix bytes and then
+        // stalls: the read deadline must tear it down.
+        let mut stalled = TcpStream::connect(addr).unwrap();
+        stalled.write_all(&[0x07, 0x00]).unwrap();
+        // Meanwhile a healthy client on its own connection is served.
+        let mut healthy = Client::connect(&addr.to_string()).unwrap();
+        assert!(healthy.stats().unwrap().contains("admitted"), "healthy client must be served");
+        // The stalled connection gets closed (EOF or reset), never a
+        // silent forever-hang.
+        stalled.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut buf = [0u8; 1];
+        let got = stalled.read(&mut buf);
+        assert!(matches!(got, Ok(0) | Err(_)), "stalled connection must be dropped: {got:?}");
+
+        // An idle connection (zero bytes ever sent) is closed once the
+        // idle budget runs out — it does not hold a thread forever.
+        let mut idle = TcpStream::connect(addr).unwrap();
+        idle.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let start = Instant::now();
+        let got = idle.read(&mut buf);
+        assert!(matches!(got, Ok(0) | Err(_)), "idle connection must be closed: {got:?}");
+        assert!(start.elapsed() >= Duration::from_millis(100), "closed only after the idle budget");
+
+        healthy.shutdown().unwrap();
         acceptor.join().unwrap().unwrap();
         svc.shutdown();
     }

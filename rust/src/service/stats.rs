@@ -93,6 +93,14 @@ pub struct ServiceCounters {
     pub batched_requests: AtomicU64,
     /// Largest single store pass so far.
     pub max_batch: AtomicU64,
+    /// Worker threads currently alive (incremented on spawn,
+    /// decremented by a drop guard on any exit path — a silent worker
+    /// death is a visible capacity loss, not a mystery slowdown).
+    pub workers_alive: AtomicU64,
+    /// Panics caught (and contained) inside worker batch execution.
+    /// Each one resolved its tickets with `Error::Internal` and the
+    /// worker kept serving.
+    pub worker_panics: AtomicU64,
     /// End-to-end (enqueue → reply ready) request latency.
     pub latency: LatencyHistogram,
 }
@@ -133,6 +141,10 @@ pub struct ServiceReport {
     pub batched_requests: u64,
     /// Largest single store pass.
     pub max_batch: u64,
+    /// Worker threads alive at snapshot time.
+    pub workers_alive: u64,
+    /// Panics contained inside worker batch execution so far.
+    pub worker_panics: u64,
     /// Median end-to-end latency (bucket upper edge).
     pub p50: Duration,
     /// 99th-percentile end-to-end latency (bucket upper edge).
@@ -155,18 +167,22 @@ impl ServiceReport {
         }
     }
 
-    /// The grep-able summary (CI pins the `admitted` / `batches`
-    /// fields of the first line and the `spills` / `recovered` fields
-    /// of the archive line).
+    /// The grep-able summary (CI pins the `admitted` / `batches` /
+    /// `workers_alive` / `worker_panics` fields of the first line and
+    /// the `spills` / `recovered` / `degraded` fields of the archive
+    /// line).
     pub fn summary(&self) -> String {
         format!(
             "service: admitted {} / rejected {} / completed {} / errors {}; \
+             workers_alive {} / worker_panics {}; \
              queue depth {} (peak {}); batches {} (avg {:.2}, max {}); \
              latency p50 {:.3} ms / p99 {:.3} ms over {} requests\n{}",
             self.admitted,
             self.rejected,
             self.completed,
             self.errors,
+            self.workers_alive,
+            self.worker_panics,
             self.queue_depth,
             self.queue_peak,
             self.batches,
@@ -238,6 +254,8 @@ mod tests {
             batches: 3,
             batched_requests: 9,
             max_batch: 4,
+            workers_alive: 2,
+            worker_panics: 1,
             p50: Duration::from_micros(128),
             p99: Duration::from_micros(1024),
             latency_count: 10,
@@ -256,15 +274,39 @@ mod tests {
                 reader_hits: 9,
                 reader_misses: 4,
                 superseded_deleted: 1,
+                io_retries: 2,
+                degraded: false,
+                degraded_reason: String::new(),
+                degraded_events: 1,
+                degraded_recoveries: 1,
             },
         };
         let s = r.summary();
         assert!(s.contains("admitted 10"), "{s}");
         assert!(s.contains("rejected 2"), "{s}");
         assert!(s.contains("batches 3"), "{s}");
+        assert!(s.contains("workers_alive 2"), "{s}");
+        assert!(s.contains("worker_panics 1"), "{s}");
         assert!(s.contains("archive:"), "{s}");
         assert!(s.contains("spills 5"), "{s}");
         assert!(s.contains("recovered 3 fields from 2 shards"), "{s}");
+        assert!(s.contains("io retries 2"), "{s}");
+        assert!(s.contains("degraded: no"), "{s}");
         assert!((r.mean_batch() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degraded_archive_surfaces_reason_in_summary() {
+        let mut a = super::super::archive::ArchiveStats {
+            durable: true,
+            degraded: true,
+            degraded_reason: "out of space: io error: injected".into(),
+            degraded_events: 1,
+            ..Default::default()
+        };
+        assert!(a.summary().contains("degraded: yes (out of space:"), "{}", a.summary());
+        a.degraded = false;
+        a.degraded_reason.clear();
+        assert!(a.summary().contains("degraded: no"), "{}", a.summary());
     }
 }

@@ -1,0 +1,509 @@
+//! Deterministic failpoint layer (DESIGN.md §16): named fault-injection
+//! sites threaded through every durability- and availability-critical
+//! path — archive spill (temp write / fsync / rename / publish /
+//! staging), spill-store slab I/O, `ByteSource` preads and mmap,
+//! container sink writes, service worker batch execution, and net
+//! frame read/write.
+//!
+//! The layer is **zero-dep and deterministic**: a policy fires on exact
+//! hit counts (`fail_nth(3)` fails the third hit of a site, every run),
+//! never on wall-clock or randomness, so every fault test reproduces
+//! bit-for-bit.
+//!
+//! ## Cost when off
+//!
+//! Call sites run in the archive spill path and the per-frame net loop,
+//! so the disarmed check must be ~free. The real implementation
+//! (compiled under `cfg(test)` or `--features faults`) fast-paths on a
+//! single relaxed atomic load — one predictable branch, no lock, no
+//! allocation. Release builds without the `faults` feature compile the
+//! stub below: an inlined `Ok(())`, i.e. nothing at all.
+//!
+//! ## Arming
+//!
+//! Programmatic (tests): [`arm`] / [`disarm`] / [`disarm_all`], with
+//! [`hits`] / [`fired`] counters for assertions. Environmental (CI
+//! e2e against a real binary built with `--features faults`):
+//!
+//! ```text
+//! ADAPTIVEC_FAILPOINTS="site:policy[;site:policy...]"
+//! ```
+//!
+//! Policies (all counts 1-based on the site's hit counter):
+//!
+//! | policy | effect |
+//! |---|---|
+//! | `fail_nth(n)` | hit `n` returns an injected `EIO` |
+//! | `err_every(k,eio\|enospc)` | every `k`-th hit returns that errno |
+//! | `short_write(frac)` | first hit tears the write at `len*frac` bytes, then `EIO` |
+//! | `panic_once` | first hit panics (worker-containment tests) |
+//! | `delay_ms(d)` | every hit sleeps `d` ms, then passes |
+//! | `kill_nth(n)` | hit `n` aborts the process (crash torture) |
+//!
+//! A malformed spec is reported on stderr and ignored — a bad env var
+//! must never take down a production service that happens to have the
+//! feature compiled in.
+
+/// Every failpoint site compiled into the crate. The table is the
+/// contract between the hardening code and the fault tests; an env
+/// spec naming a site outside it warns (likely a typo) but still arms,
+/// so tests can use private scratch sites.
+pub const SITES: &[&str] = &[
+    "archive.spill.stage",
+    "archive.spill.temp_write",
+    "archive.spill.fsync",
+    "archive.spill.rename",
+    "archive.spill.publish",
+    "spill.create",
+    "spill.flush",
+    "spill.read",
+    "store.pread",
+    "store.mmap",
+    "store.sink_write",
+    "service.batch",
+    "net.read_frame",
+    "net.write_frame",
+];
+
+/// Which errno an injected I/O failure carries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Errno {
+    /// Transient device error — the retry path must absorb it.
+    Eio,
+    /// Out of space — not transient; triggers degraded mode.
+    Enospc,
+}
+
+/// One site's injection policy (see the module table).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Policy {
+    FailNth(u64),
+    ErrEvery(u64, Errno),
+    ShortWrite(f64),
+    PanicOnce,
+    DelayMs(u64),
+    KillNth(u64),
+}
+
+/// What a write-shaped site should do, from [`write_fault`]. `Short`
+/// models a torn write: the caller writes only the prefix, then
+/// surfaces the error — exactly what a crash mid-`write_all` leaves
+/// on disk.
+#[derive(Debug)]
+pub enum WriteFault {
+    None,
+    Err(std::io::Error),
+    Short(usize, std::io::Error),
+}
+
+/// The injected error for `errno`: a real OS errno on unix (so
+/// `raw_os_error` classification in the retry/degrade paths sees
+/// exactly what a real device would produce), a tagged
+/// `ErrorKind::Other` elsewhere.
+pub fn injected(errno: Errno) -> std::io::Error {
+    if cfg!(unix) {
+        let code = match errno {
+            Errno::Eio => 5,
+            Errno::Enospc => 28,
+        };
+        std::io::Error::from_raw_os_error(code)
+    } else {
+        let msg = match errno {
+            Errno::Eio => "injected EIO",
+            Errno::Enospc => "injected ENOSPC",
+        };
+        std::io::Error::other(msg)
+    }
+}
+
+#[cfg(any(test, feature = "faults"))]
+mod imp {
+    use super::{injected, Errno, Policy, WriteFault, SITES};
+    use std::collections::HashMap;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::{Mutex, MutexGuard, OnceLock};
+
+    /// Number of currently armed sites. `u64::MAX` means the env spec
+    /// has not been parsed yet (forces one slow-path pass through
+    /// [`registry`], which stores the real count); `0` afterwards is
+    /// the disarmed fast path: one relaxed load, one branch.
+    static ARMED: AtomicU64 = AtomicU64::new(u64::MAX);
+
+    struct SiteState {
+        policy: Policy,
+        hits: u64,
+        fired: u64,
+    }
+
+    static REGISTRY: OnceLock<Mutex<HashMap<String, SiteState>>> = OnceLock::new();
+
+    fn lock(m: &Mutex<HashMap<String, SiteState>>) -> MutexGuard<'_, HashMap<String, SiteState>> {
+        // A panic while armed (panic_once does exactly that) must not
+        // poison the layer for the rest of the process.
+        m.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn registry() -> &'static Mutex<HashMap<String, SiteState>> {
+        REGISTRY.get_or_init(|| {
+            let mut map = HashMap::new();
+            if let Ok(spec) = std::env::var("ADAPTIVEC_FAILPOINTS") {
+                match parse_spec(&spec) {
+                    Ok(entries) => {
+                        for (site, policy) in entries {
+                            if !SITES.contains(&site.as_str()) {
+                                eprintln!(
+                                    "adaptivec failpoints: unknown site '{site}' \
+                                     (arming anyway; known sites are in testing::failpoints::SITES)"
+                                );
+                            }
+                            map.insert(site, SiteState { policy, hits: 0, fired: 0 });
+                        }
+                    }
+                    Err(e) => {
+                        eprintln!("adaptivec failpoints: ignoring ADAPTIVEC_FAILPOINTS: {e}");
+                    }
+                }
+            }
+            ARMED.store(map.len() as u64, Ordering::Relaxed);
+            Mutex::new(map)
+        })
+    }
+
+    /// Parse an `ADAPTIVEC_FAILPOINTS` spec (see the module docs for
+    /// the grammar). Pure — the CLI/e2e surface is testable without
+    /// touching the process environment.
+    pub fn parse_spec(spec: &str) -> Result<Vec<(String, Policy)>, String> {
+        let mut out = Vec::new();
+        for entry in spec.split(';').map(str::trim).filter(|s| !s.is_empty()) {
+            let (site, policy) = entry
+                .split_once(':')
+                .ok_or_else(|| format!("'{entry}': expected site:policy"))?;
+            out.push((site.trim().to_string(), parse_policy(policy.trim())?));
+        }
+        Ok(out)
+    }
+
+    fn parse_policy(s: &str) -> Result<Policy, String> {
+        let (name, args) = match s.split_once('(') {
+            Some((n, rest)) => {
+                let inner = rest.strip_suffix(')').ok_or_else(|| format!("'{s}': missing ')'"))?;
+                (n.trim(), inner.trim())
+            }
+            None => (s, ""),
+        };
+        let int = |a: &str| {
+            a.trim()
+                .parse::<u64>()
+                .map_err(|_| format!("'{s}': bad integer '{a}'"))
+        };
+        match name {
+            "fail_nth" => Ok(Policy::FailNth(int(args)?.max(1))),
+            "kill_nth" => Ok(Policy::KillNth(int(args)?.max(1))),
+            "delay_ms" => Ok(Policy::DelayMs(int(args)?)),
+            "panic_once" => Ok(Policy::PanicOnce),
+            "short_write" => {
+                let frac: f64 = args
+                    .parse()
+                    .map_err(|_| format!("'{s}': bad fraction '{args}'"))?;
+                if !(0.0..1.0).contains(&frac) {
+                    return Err(format!("'{s}': fraction must be in [0, 1)"));
+                }
+                Ok(Policy::ShortWrite(frac))
+            }
+            "err_every" => {
+                let (k, errno) = args
+                    .split_once(',')
+                    .ok_or_else(|| format!("'{s}': expected err_every(k,eio|enospc)"))?;
+                let errno = match errno.trim().to_ascii_lowercase().as_str() {
+                    "eio" => Errno::Eio,
+                    "enospc" => Errno::Enospc,
+                    other => return Err(format!("'{s}': unknown errno '{other}'")),
+                };
+                Ok(Policy::ErrEvery(int(k)?.max(1), errno))
+            }
+            other => Err(format!("unknown failpoint policy '{other}'")),
+        }
+    }
+
+    /// Arm `site` with `policy`, resetting its counters.
+    pub fn arm(site: &str, policy: Policy) {
+        let mut map = lock(registry());
+        map.insert(site.to_string(), SiteState { policy, hits: 0, fired: 0 });
+        ARMED.store(map.len() as u64, Ordering::Relaxed);
+    }
+
+    /// Disarm `site` (its counters are discarded).
+    pub fn disarm(site: &str) {
+        let mut map = lock(registry());
+        map.remove(site);
+        ARMED.store(map.len() as u64, Ordering::Relaxed);
+    }
+
+    /// Disarm every site.
+    pub fn disarm_all() {
+        let mut map = lock(registry());
+        map.clear();
+        ARMED.store(0, Ordering::Relaxed);
+    }
+
+    /// Times `site` has been evaluated while armed (0 if not armed).
+    pub fn hits(site: &str) -> u64 {
+        lock(registry()).get(site).map_or(0, |s| s.hits)
+    }
+
+    /// Times `site`'s policy actually fired (0 if not armed).
+    pub fn fired(site: &str) -> u64 {
+        lock(registry()).get(site).map_or(0, |s| s.fired)
+    }
+
+    /// What one hit of `site` resolved to, decided under the registry
+    /// lock; side effects (sleep / panic / abort) happen after the
+    /// lock is released.
+    enum Act {
+        Pass,
+        Fail(Errno),
+        Short(f64),
+        Panic(String),
+        Delay(u64),
+        Kill(String),
+    }
+
+    fn act_for(site: &str) -> Act {
+        if ARMED.load(Ordering::Relaxed) == 0 {
+            return Act::Pass;
+        }
+        let mut map = lock(registry());
+        let Some(st) = map.get_mut(site) else {
+            return Act::Pass;
+        };
+        st.hits += 1;
+        let hits = st.hits;
+        match st.policy {
+            Policy::FailNth(n) => {
+                if hits == n {
+                    st.fired += 1;
+                    Act::Fail(Errno::Eio)
+                } else {
+                    Act::Pass
+                }
+            }
+            Policy::ErrEvery(k, errno) => {
+                if hits % k == 0 {
+                    st.fired += 1;
+                    Act::Fail(errno)
+                } else {
+                    Act::Pass
+                }
+            }
+            Policy::ShortWrite(frac) => {
+                if hits == 1 {
+                    st.fired += 1;
+                    Act::Short(frac)
+                } else {
+                    Act::Pass
+                }
+            }
+            Policy::PanicOnce => {
+                if st.fired == 0 {
+                    st.fired += 1;
+                    Act::Panic(format!("failpoint '{site}': injected panic (panic_once)"))
+                } else {
+                    Act::Pass
+                }
+            }
+            Policy::DelayMs(ms) => {
+                st.fired += 1;
+                Act::Delay(ms)
+            }
+            Policy::KillNth(n) => {
+                if hits == n {
+                    st.fired += 1;
+                    Act::Kill(site.to_string())
+                } else {
+                    Act::Pass
+                }
+            }
+        }
+    }
+
+    /// Evaluate `site`. Disarmed: one relaxed load. Armed: may return
+    /// an injected I/O error, sleep, panic, or abort the process.
+    pub fn check(site: &str) -> std::io::Result<()> {
+        match act_for(site) {
+            Act::Pass => Ok(()),
+            Act::Fail(errno) => Err(injected(errno)),
+            // A short write at a site checked via `check` degenerates
+            // to a plain EIO — only `write_fault` callers can tear.
+            Act::Short(_) => Err(injected(Errno::Eio)),
+            Act::Panic(msg) => panic!("{msg}"),
+            Act::Delay(ms) => {
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+                Ok(())
+            }
+            Act::Kill(site) => {
+                eprintln!("adaptivec failpoints: aborting process at '{site}' (kill_nth)");
+                std::process::abort();
+            }
+        }
+    }
+
+    /// Evaluate a write-shaped `site` about to write `len` bytes.
+    /// `Short(n, e)`: write only the first `n` bytes, then surface `e`
+    /// — the torn write a mid-`write_all` crash leaves behind.
+    pub fn write_fault(site: &str, len: usize) -> WriteFault {
+        match act_for(site) {
+            Act::Pass => WriteFault::None,
+            Act::Fail(errno) => WriteFault::Err(injected(errno)),
+            Act::Short(frac) => {
+                let n = ((len as f64) * frac) as usize;
+                WriteFault::Short(n.min(len), injected(Errno::Eio))
+            }
+            Act::Panic(msg) => panic!("{msg}"),
+            Act::Delay(ms) => {
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+                WriteFault::None
+            }
+            Act::Kill(site) => {
+                eprintln!("adaptivec failpoints: aborting process at '{site}' (kill_nth)");
+                std::process::abort();
+            }
+        }
+    }
+}
+
+#[cfg(any(test, feature = "faults"))]
+pub use imp::{arm, check, disarm, disarm_all, fired, hits, parse_spec, write_fault};
+
+#[cfg(not(any(test, feature = "faults")))]
+mod stub {
+    use super::WriteFault;
+
+    /// Disarmed-build stub: inlines to nothing.
+    #[inline(always)]
+    pub fn check(_site: &str) -> std::io::Result<()> {
+        Ok(())
+    }
+
+    /// Disarmed-build stub: inlines to nothing.
+    #[inline(always)]
+    pub fn write_fault(_site: &str, _len: usize) -> WriteFault {
+        WriteFault::None
+    }
+}
+
+#[cfg(not(any(test, feature = "faults")))]
+pub use stub::{check, write_fault};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Unit tests share the process-global registry with nothing else
+    // in the lib test binary (no other unit test arms a site), but
+    // they run in parallel with each other: each test uses its own
+    // scratch site names and never calls `disarm_all`.
+
+    #[test]
+    fn disarmed_site_always_passes() {
+        for _ in 0..100 {
+            assert!(check("test.never_armed").is_ok());
+        }
+        assert_eq!(hits("test.never_armed"), 0);
+    }
+
+    #[test]
+    fn fail_nth_fires_exactly_once() {
+        arm("test.fail_nth", Policy::FailNth(3));
+        assert!(check("test.fail_nth").is_ok());
+        assert!(check("test.fail_nth").is_ok());
+        let err = check("test.fail_nth").expect_err("third hit must fail");
+        if cfg!(unix) {
+            assert_eq!(err.raw_os_error(), Some(5), "EIO");
+        }
+        assert!(check("test.fail_nth").is_ok(), "fourth hit passes again");
+        assert_eq!(hits("test.fail_nth"), 4);
+        assert_eq!(fired("test.fail_nth"), 1);
+        disarm("test.fail_nth");
+        assert!(check("test.fail_nth").is_ok());
+    }
+
+    #[test]
+    fn err_every_is_periodic_and_carries_errno() {
+        arm("test.err_every", Policy::ErrEvery(2, Errno::Enospc));
+        let outcomes: Vec<bool> = (0..6).map(|_| check("test.err_every").is_err()).collect();
+        assert_eq!(outcomes, [false, true, false, true, false, true]);
+        if cfg!(unix) {
+            arm("test.err_every", Policy::ErrEvery(1, Errno::Enospc));
+            let err = check("test.err_every").expect_err("every hit fails");
+            assert_eq!(err.raw_os_error(), Some(28), "ENOSPC");
+        }
+        disarm("test.err_every");
+    }
+
+    #[test]
+    fn short_write_tears_first_hit_only() {
+        arm("test.short", Policy::ShortWrite(0.5));
+        match write_fault("test.short", 100) {
+            WriteFault::Short(n, e) => {
+                assert_eq!(n, 50);
+                if cfg!(unix) {
+                    assert_eq!(e.raw_os_error(), Some(5), "torn writes surface EIO");
+                }
+            }
+            other => panic!("expected Short, got {other:?}"),
+        }
+        assert!(matches!(write_fault("test.short", 100), WriteFault::None));
+        disarm("test.short");
+    }
+
+    #[test]
+    fn panic_once_panics_once_then_passes() {
+        arm("test.panic", Policy::PanicOnce);
+        let caught = std::panic::catch_unwind(|| check("test.panic"));
+        let msg = match caught {
+            Err(p) => p
+                .downcast_ref::<String>()
+                .cloned()
+                .unwrap_or_else(|| "?".into()),
+            Ok(_) => panic!("first hit must panic"),
+        };
+        assert!(msg.contains("test.panic"), "{msg}");
+        assert!(check("test.panic").is_ok(), "second hit passes");
+        disarm("test.panic");
+    }
+
+    #[test]
+    fn spec_grammar_roundtrips() {
+        let spec = "a.b:fail_nth(3); c.d:err_every(2, enospc) ;e:short_write(0.25);\
+                    f:panic_once;g:delay_ms(7);h:kill_nth(2)";
+        let parsed = parse_spec(spec).unwrap();
+        assert_eq!(
+            parsed,
+            vec![
+                ("a.b".into(), Policy::FailNth(3)),
+                ("c.d".into(), Policy::ErrEvery(2, Errno::Enospc)),
+                ("e".into(), Policy::ShortWrite(0.25)),
+                ("f".into(), Policy::PanicOnce),
+                ("g".into(), Policy::DelayMs(7)),
+                ("h".into(), Policy::KillNth(2)),
+            ]
+        );
+        assert!(parse_spec("nocolon").is_err());
+        assert!(parse_spec("a:fail_nth(x)").is_err());
+        assert!(parse_spec("a:short_write(1.5)").is_err());
+        assert!(parse_spec("a:err_every(2,ebadf)").is_err());
+        assert!(parse_spec("a:frobnicate").is_err());
+        assert!(parse_spec("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn every_documented_site_is_in_the_table() {
+        // The hardening code references sites by string literal; this
+        // pins the table so DESIGN.md §16 and the code cannot drift
+        // silently (grep-audited in review, asserted here for count).
+        assert_eq!(SITES.len(), 14);
+        for s in SITES {
+            assert!(s.chars().all(|c| c.is_ascii_lowercase() || c == '.' || c == '_'), "{s}");
+        }
+    }
+}

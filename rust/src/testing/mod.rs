@@ -1,8 +1,10 @@
-//! Test / simulation support: deterministic PRNG and a minimal
+//! Test / simulation support: deterministic PRNG, a minimal
 //! property-testing harness (`proptest` is unavailable in the offline
 //! build environment; `proptest_lite` covers the same invariant-testing
-//! role — see DESIGN.md §9).
+//! role — see DESIGN.md §9), and the deterministic failpoint layer
+//! behind the fault-injection suite (`failpoints`, DESIGN.md §16).
 
+pub mod failpoints;
 pub mod proptest_lite;
 pub mod rng;
 

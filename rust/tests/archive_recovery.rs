@@ -13,9 +13,9 @@
 
 use adaptivec::baseline::Policy;
 use adaptivec::data::atm;
-use adaptivec::data::field::Field;
+use adaptivec::data::field::{Dims, Field};
 use adaptivec::engine::{Engine, EngineConfig};
-use adaptivec::service::{ArchiveConfig, Service, ServiceConfig};
+use adaptivec::service::{ArchiveConfig, ArchiveStore, Service, ServiceConfig};
 use std::path::PathBuf;
 use std::sync::Arc;
 
@@ -175,5 +175,88 @@ fn corrupt_shard_is_contained_to_its_own_fields() {
     assert_eq!(served.data, offline(&engine, &keep).data, "healthy shard unaffected");
     assert!(handle.fetch(&lose.name).is_err(), "mangled shard's field is gone, not wrong");
     svc.shutdown();
+    std::fs::remove_dir_all(&root).ok();
+}
+
+/// Torn-write recovery, exhaustively: a shard file truncated at
+/// *every* byte boundary (a crashed write, a partial copy, a torn
+/// block) must never panic the open and never decode to wrong bytes —
+/// the only allowed outcomes are "skipped and counted corrupt" or
+/// "absent" or "byte-identical".
+#[test]
+fn truncated_shard_at_every_byte_boundary_is_contained() {
+    let engine = engine();
+    let root = temp_root("truncate");
+    // A deliberately tiny field: the loop below reopens the archive
+    // once per byte of the published shard.
+    let data: Vec<f32> = (0..128).map(|i| (i as f32 * 0.37).sin()).collect();
+    let field = Field::new("torn-probe", Dims::D2(8, 16), data);
+    let want = offline(&engine, &field);
+
+    let store_cfg = ArchiveConfig { root_dir: Some(root.clone()), mem_budget: 0, open_readers: 4 };
+    {
+        let store = ArchiveStore::open(store_cfg.clone(), 4).unwrap();
+        let (_, bytes) = engine
+            .compress_chunked_to(
+                std::slice::from_ref(&field),
+                Policy::RateDistortion,
+                EB,
+                CHUNK,
+                Vec::new(),
+            )
+            .unwrap();
+        store.insert(vec![field.name.clone()], bytes).unwrap();
+        assert_eq!(store.stats().spills, 1, "zero budget publishes exactly one shard");
+    }
+    // Locate the single shard file just published.
+    let mut shards = Vec::new();
+    for dir in std::fs::read_dir(&root).unwrap() {
+        let dir = dir.unwrap().path();
+        if dir.is_dir() {
+            for f in std::fs::read_dir(&dir).unwrap() {
+                shards.push(f.unwrap().path());
+            }
+        }
+    }
+    assert_eq!(shards.len(), 1, "expected exactly one shard file");
+    let shard = shards.pop().unwrap();
+    let whole = std::fs::read(&shard).unwrap();
+    assert!(whole.len() > 8, "shard implausibly small: {} bytes", whole.len());
+
+    for cut in 0..whole.len() {
+        std::fs::write(&shard, &whole[..cut]).unwrap();
+        let store = ArchiveStore::open(store_cfg.clone(), 4)
+            .unwrap_or_else(|e| panic!("open must survive truncation at byte {cut}: {e}"));
+        let stats = store.stats();
+        if stats.corrupt_shards == 1 {
+            // Skipped and counted: the field is absent, not wrong.
+            assert!(
+                store.reader_for(&field.name).unwrap().is_none(),
+                "byte {cut}: a corrupt shard must not index its fields"
+            );
+        } else {
+            // The index happened to parse. Decoding must then yield
+            // exactly the original bytes or a clean error — the
+            // per-stream lengths and CRC-32 make "plausible but
+            // wrong" unreachable.
+            assert_eq!(stats.corrupt_shards, 0);
+            if let Some(reader) = store.reader_for(&field.name).unwrap() {
+                if let Ok(served) = engine.load_field(&reader, &field.name) {
+                    assert_eq!(
+                        served.data, want.data,
+                        "byte {cut}: truncated shard decoded to different bytes"
+                    );
+                }
+            }
+        }
+    }
+
+    // Restore the full shard: everything comes back, nothing sticky.
+    std::fs::write(&shard, &whole).unwrap();
+    let store = ArchiveStore::open(store_cfg, 4).unwrap();
+    assert_eq!(store.stats().corrupt_shards, 0);
+    let reader = store.reader_for(&field.name).unwrap().expect("restored shard indexes");
+    assert_eq!(engine.load_field(&reader, &field.name).unwrap().data, want.data);
+    drop(store);
     std::fs::remove_dir_all(&root).ok();
 }

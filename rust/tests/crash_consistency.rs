@@ -1,0 +1,214 @@
+//! Crash-consistency torture (DESIGN.md §16): re-exec this test as a
+//! child process, abort it at a seeded failpoint inside the archive
+//! spill publish protocol, then reopen the archive root and assert the
+//! recovery invariants:
+//!
+//! * open never panics and counts zero corrupt shards — a crash can
+//!   only leave a swept `.tmp.` orphan or a fully published shard,
+//!   never a half-indexed one;
+//! * the recovered field set is exactly the batches whose publish
+//!   completed before the abort (a strict prefix of the insert order),
+//!   with last-write-wins when a re-compressed name's later shard
+//!   survived;
+//! * every surviving field decodes byte-identical to the offline
+//!   reference compression of the same field;
+//! * the reopened archive accepts fresh inserts.
+//!
+//! Requires `--features faults`: the kill policy lives in the
+//! failpoint layer and arms through `ADAPTIVEC_FAILPOINTS`, exactly
+//! the path a CI e2e run uses against a real binary.
+
+#![cfg(feature = "faults")]
+
+use adaptivec::baseline::Policy;
+use adaptivec::data::atm;
+use adaptivec::data::field::Field;
+use adaptivec::engine::{Engine, EngineConfig};
+use adaptivec::service::{ArchiveConfig, ArchiveStore};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// When set, this process is the torture child: run the workload
+/// against the given archive root (the seeded failpoint aborts us
+/// somewhere in the middle).
+const CHILD_ENV: &str = "ADAPTIVEC_CRASH_CHILD_ROOT";
+
+const EB: f64 = 1e-3;
+const CHUNK: usize = 2048;
+
+fn engine() -> Engine {
+    Engine::new(EngineConfig { workers: 1, ..EngineConfig::default() })
+}
+
+fn archive_cfg(root: &Path) -> ArchiveConfig {
+    ArchiveConfig { root_dir: Some(root.to_path_buf()), mem_budget: 0, open_readers: 4 }
+}
+
+/// The deterministic workload both lives agree on: six single-field
+/// batches with unique names, then a seventh batch re-compressing the
+/// first name with different data (the last-write-wins probe). With a
+/// zero memory budget each insert publishes its shard before the next
+/// starts, so failpoint hit `k` always lands in batch `k`.
+fn workload() -> Vec<Field> {
+    let mut fields = Vec::new();
+    for i in 0..6u64 {
+        let mut f = atm::generate_field_scaled(90 + i, (i % 4) as usize, 0);
+        f.name = format!("torture-{i:02}");
+        fields.push(f);
+    }
+    let mut dup = atm::generate_field_scaled(99, 1, 0);
+    dup.name = "torture-00".into();
+    fields.push(dup);
+    fields
+}
+
+fn pack(engine: &Engine, f: &Field) -> (Vec<String>, Vec<u8>) {
+    let (_, bytes) = engine
+        .compress_chunked_to(
+            std::slice::from_ref(f),
+            Policy::RateDistortion,
+            EB,
+            CHUNK,
+            Vec::new(),
+        )
+        .unwrap();
+    (vec![f.name.clone()], bytes)
+}
+
+/// Offline reference decode — what a surviving shard must serve,
+/// byte for byte.
+fn offline(engine: &Engine, f: &Field) -> Field {
+    let (_, bytes) = pack(engine, f);
+    let reader = adaptivec::coordinator::store::ContainerReader::from_bytes(bytes).unwrap();
+    engine.load_field(&reader, &f.name).unwrap()
+}
+
+/// Child branch: insert the workload until the seeded kill aborts us.
+/// Exits 0 only if no failpoint fired — the parent asserts it never
+/// gets that far.
+fn run_child(root: &Path) -> ! {
+    let engine = engine();
+    let store = ArchiveStore::open(archive_cfg(root), 8).expect("child open");
+    for f in workload() {
+        let (names, bytes) = pack(&engine, &f);
+        store.insert(names, bytes).expect("child insert");
+    }
+    std::process::exit(0);
+}
+
+fn assert_no_stray_tmp(root: &Path, ctx: &str) {
+    for dir in std::fs::read_dir(root).unwrap() {
+        let dir = dir.unwrap().path();
+        if !dir.is_dir() {
+            continue;
+        }
+        for f in std::fs::read_dir(&dir).unwrap() {
+            let p = f.unwrap().path();
+            let name = p.file_name().unwrap().to_string_lossy().into_owned();
+            assert!(!name.contains(".tmp."), "{ctx}: stray temp file {p:?} survived recovery");
+        }
+    }
+}
+
+#[test]
+fn crash_torture_recovers_at_every_kill_point() {
+    if let Ok(root) = std::env::var(CHILD_ENV) {
+        run_child(Path::new(&root));
+    }
+
+    // Kill points across every stage of the publish protocol, early
+    // and late in the workload. Hits are 1-based per site; with one
+    // batch per hit, `publish` at hit n dies *after* batch n's rename
+    // (n batches live), every other site dies *before* batch n
+    // publishes (n-1 batches live).
+    let kill_points: &[(&str, u64)] = &[
+        ("archive.spill.stage", 1),
+        ("archive.spill.temp_write", 1),
+        ("archive.spill.temp_write", 4),
+        ("archive.spill.fsync", 2),
+        ("archive.spill.fsync", 6),
+        ("archive.spill.rename", 3),
+        ("archive.spill.rename", 7),
+        ("archive.spill.publish", 2),
+        ("archive.spill.publish", 5),
+        ("archive.spill.publish", 7),
+    ];
+
+    let exe = std::env::current_exe().unwrap();
+    let engine = engine();
+    let fields = workload();
+
+    for (point, &(site, n)) in kill_points.iter().enumerate() {
+        let ctx = format!("kill point {point} ({site}:kill_nth({n}))");
+        let root: PathBuf =
+            std::env::temp_dir().join(format!("adaptivec_crash_{point}_{}", std::process::id()));
+        std::fs::remove_dir_all(&root).ok();
+
+        // Re-exec ourselves as the torture child, aborted at the seed.
+        let out = std::process::Command::new(&exe)
+            .arg("crash_torture_recovers_at_every_kill_point")
+            .arg("--exact")
+            .arg("--test-threads=1")
+            .env(CHILD_ENV, &root)
+            .env("ADAPTIVEC_FAILPOINTS", format!("{site}:kill_nth({n})"))
+            .output()
+            .expect("spawn torture child");
+        assert!(
+            !out.status.success(),
+            "{ctx}: the child must die at the failpoint, not finish \
+             (stderr: {})",
+            String::from_utf8_lossy(&out.stderr)
+        );
+
+        // Reopen: recovery must never panic, never count corruption,
+        // and must sweep any torn temp file the abort left behind.
+        let store = ArchiveStore::open(archive_cfg(&root), 8)
+            .unwrap_or_else(|e| panic!("{ctx}: reopen failed: {e}"));
+        let stats = store.stats();
+        assert_eq!(stats.corrupt_shards, 0, "{ctx}: a crash must not publish a torn shard");
+        assert_no_stray_tmp(&root, &ctx);
+
+        // Exactly the batches published before the abort survive,
+        // with last-write-wins on the re-compressed name.
+        let published = (if site == "archive.spill.publish" { n } else { n - 1 }) as usize;
+        let mut expect: BTreeMap<String, &Field> = BTreeMap::new();
+        for f in fields.iter().take(published) {
+            expect.insert(f.name.clone(), f);
+        }
+        let mut names = store.field_names();
+        names.sort();
+        let want: Vec<String> = expect.keys().cloned().collect();
+        assert_eq!(names, want, "{ctx}: recovered field set");
+        assert_eq!(stats.recovered_fields as usize, expect.len(), "{ctx}");
+        for (name, f) in &expect {
+            let reader = store
+                .reader_for(name)
+                .unwrap_or_else(|e| panic!("{ctx}: reader for {name}: {e}"))
+                .unwrap_or_else(|| panic!("{ctx}: {name} indexed but unreadable"));
+            let served = engine.load_field(&reader, name).unwrap();
+            let want = offline(&engine, f);
+            assert_eq!(
+                served.data, want.data,
+                "{ctx}: {name} must decode byte-identical to the offline path"
+            );
+        }
+        if published == fields.len() {
+            // The dup batch won "torture-00": its superseded original
+            // shard serves nothing and the open must have deleted it.
+            assert!(stats.superseded_deleted >= 1, "{ctx}: superseded sweep");
+        }
+
+        // The survivor keeps working: a fresh insert publishes and
+        // serves through the same archive.
+        let mut extra = atm::generate_field_scaled(123, 2, 0);
+        extra.name = "torture-extra".into();
+        let (extra_names, bytes) = pack(&engine, &extra);
+        store.insert(extra_names, bytes).unwrap_or_else(|e| panic!("{ctx}: fresh insert: {e}"));
+        let reader = store.reader_for("torture-extra").unwrap().expect("fresh field indexed");
+        let served = engine.load_field(&reader, "torture-extra").unwrap();
+        assert_eq!(served.data, offline(&engine, &extra).data, "{ctx}: fresh insert roundtrip");
+
+        drop(store);
+        std::fs::remove_dir_all(&root).ok();
+    }
+}

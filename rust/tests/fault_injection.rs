@@ -1,0 +1,274 @@
+//! End-to-end failure hardening under deterministic fault injection
+//! (DESIGN.md §16). Requires `--features faults` — without it the
+//! failpoint layer compiles to a no-op stub and this whole file is
+//! compiled out.
+//!
+//! Covered here:
+//! * transient `EIO` on the spill temp write is absorbed by the
+//!   bounded retry loop (counted in `io_retries`, archive healthy);
+//! * `ENOSPC` flips the archive into degraded memory-only mode —
+//!   inserts keep succeeding, eviction pauses, and the flag clears
+//!   (counted as a recovery) once writes succeed again;
+//! * a torn (short) temp write is retried and never leaves a stray
+//!   temp file or a torn published shard behind;
+//! * a panic inside worker batch execution resolves the tickets with
+//!   `Error::Internal` while the worker survives and keeps serving;
+//! * mmap/pread faults on the cold-read path surface as errors (or
+//!   fall back), never panics.
+
+#![cfg(feature = "faults")]
+
+use adaptivec::baseline::Policy as CodecPolicy;
+use adaptivec::data::atm;
+use adaptivec::data::field::Field;
+use adaptivec::engine::{Engine, EngineConfig};
+use adaptivec::service::{ArchiveConfig, ArchiveStore, Service, ServiceConfig};
+use adaptivec::testing::failpoints::{self, Errno, Policy};
+use adaptivec::Error;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+const EB: f64 = 1e-3;
+const CHUNK: usize = 2048;
+
+/// The failpoint registry is process-global and the test harness runs
+/// tests in parallel: every test that arms a site holds this lock (and
+/// disarms before releasing), so injections never leak across tests.
+fn serialize() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+fn engine() -> Engine {
+    Engine::new(EngineConfig { workers: 1, ..EngineConfig::default() })
+}
+
+fn temp_root(tag: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("adaptivec_faults_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&p).ok();
+    p
+}
+
+fn archive_cfg(root: &Path) -> ArchiveConfig {
+    ArchiveConfig { root_dir: Some(root.to_path_buf()), mem_budget: 0, open_readers: 4 }
+}
+
+/// Compress one field exactly the way the tests insert it.
+fn pack(engine: &Engine, f: &Field) -> (Vec<String>, Vec<u8>) {
+    let (_, bytes) = engine
+        .compress_chunked_to(
+            std::slice::from_ref(f),
+            CodecPolicy::RateDistortion,
+            EB,
+            CHUNK,
+            Vec::new(),
+        )
+        .unwrap();
+    (vec![f.name.clone()], bytes)
+}
+
+/// Offline reference decode — the byte-identity yardstick.
+fn offline(engine: &Engine, f: &Field) -> Field {
+    let (_, bytes) = pack(engine, f);
+    let reader = adaptivec::coordinator::store::ContainerReader::from_bytes(bytes).unwrap();
+    engine.load_field(&reader, &f.name).unwrap()
+}
+
+fn fetch(engine: &Engine, store: &ArchiveStore, name: &str) -> Field {
+    let reader = store.reader_for(name).unwrap().expect("field indexed");
+    engine.load_field(&reader, name).unwrap()
+}
+
+fn assert_no_stray_tmp(root: &Path) {
+    for dir in std::fs::read_dir(root).unwrap() {
+        let dir = dir.unwrap().path();
+        if !dir.is_dir() {
+            continue;
+        }
+        for f in std::fs::read_dir(&dir).unwrap() {
+            let p = f.unwrap().path();
+            let name = p.file_name().unwrap().to_string_lossy().into_owned();
+            assert!(!name.contains(".tmp."), "stray temp file {p:?} left behind");
+        }
+    }
+}
+
+#[test]
+fn transient_eio_on_spill_is_retried_and_absorbed() {
+    let _guard = serialize();
+    let engine = engine();
+    let root = temp_root("eio");
+    let store = ArchiveStore::open(archive_cfg(&root), 4).unwrap();
+    let field = atm::generate_field_scaled(60, 0, 0);
+
+    // First temp write fails with EIO; the retry loop's second attempt
+    // must publish the shard as if nothing happened.
+    failpoints::arm("archive.spill.temp_write", Policy::FailNth(1));
+    let (names, bytes) = pack(&engine, &field);
+    store.insert(names, bytes).unwrap();
+    failpoints::disarm("archive.spill.temp_write");
+
+    let stats = store.stats();
+    assert_eq!(stats.spills, 1, "spill must succeed on retry");
+    assert!(stats.io_retries >= 1, "the transient failure must be counted");
+    assert!(!stats.degraded, "a retried transient is not a degraded episode");
+    assert_eq!(stats.hot_bytes, 0, "budget 0 must evict after the spill");
+    assert_no_stray_tmp(&root);
+    assert_eq!(fetch(&engine, &store, &field.name).data, offline(&engine, &field).data);
+    drop(store);
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn enospc_degrades_to_memory_only_then_recovers() {
+    let _guard = serialize();
+    let engine = engine();
+    let root = temp_root("enospc");
+    let store = ArchiveStore::open(archive_cfg(&root), 8).unwrap();
+    let fields: Vec<Field> = (0..3).map(|i| atm::generate_field_scaled(61, i, 0)).collect();
+
+    // Every write fails with ENOSPC: not transient, so the archive
+    // must flip degraded — and *inserts must keep succeeding*.
+    failpoints::arm("archive.spill.temp_write", Policy::ErrEvery(1, Errno::Enospc));
+    for f in &fields[..2] {
+        let (names, bytes) = pack(&engine, f);
+        store.insert(names, bytes).unwrap();
+    }
+    let stats = store.stats();
+    assert!(stats.degraded, "hard ENOSPC must degrade the archive");
+    assert_eq!(stats.degraded_events, 1, "one episode, however many failures");
+    assert_eq!(stats.spills, 0);
+    assert!(stats.hot_bytes > 0, "eviction pauses: batches stay resident");
+    if cfg!(unix) {
+        assert!(
+            stats.degraded_reason.contains("out of space"),
+            "reason must name the cause: {}",
+            stats.degraded_reason
+        );
+    }
+    // Degraded reads still work — both batches are hot.
+    assert_eq!(fetch(&engine, &store, &fields[0].name).data, offline(&engine, &fields[0]).data);
+
+    // Device recovers: the next insert's probe spill must succeed,
+    // clear the flag, and drain the whole backlog.
+    failpoints::disarm("archive.spill.temp_write");
+    let (names, bytes) = pack(&engine, &fields[2]);
+    store.insert(names, bytes).unwrap();
+    let stats = store.stats();
+    assert!(!stats.degraded, "flag must clear once writes recover");
+    assert_eq!(stats.degraded_recoveries, 1);
+    assert_eq!(stats.spills, 3, "the backlog must drain, not just the probe");
+    assert_eq!(stats.hot_bytes, 0);
+    for f in &fields {
+        assert_eq!(fetch(&engine, &store, &f.name).data, offline(&engine, f).data, "{}", f.name);
+    }
+    assert_no_stray_tmp(&root);
+    drop(store);
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn torn_temp_write_is_retried_and_publishes_whole_bytes() {
+    let _guard = serialize();
+    let engine = engine();
+    let root = temp_root("torn");
+    let field = atm::generate_field_scaled(62, 1, 0);
+    {
+        let store = ArchiveStore::open(archive_cfg(&root), 4).unwrap();
+        // First attempt writes only 40% of the shard then errors; the
+        // retry must start over and publish the full container.
+        failpoints::arm("archive.spill.temp_write", Policy::ShortWrite(0.4));
+        let (names, bytes) = pack(&engine, &field);
+        store.insert(names, bytes).unwrap();
+        failpoints::disarm("archive.spill.temp_write");
+        let stats = store.stats();
+        assert_eq!(stats.spills, 1);
+        assert!(stats.io_retries >= 1);
+        assert_no_stray_tmp(&root);
+    }
+    // A fresh open proves it from disk: the shard indexes cleanly and
+    // decodes byte-identical — nothing torn was ever published.
+    let store = ArchiveStore::open(archive_cfg(&root), 4).unwrap();
+    let stats = store.stats();
+    assert_eq!(stats.corrupt_shards, 0, "a torn write must never publish");
+    assert_eq!(stats.recovered_fields, 1);
+    assert_eq!(fetch(&engine, &store, &field.name).data, offline(&engine, &field).data);
+    drop(store);
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn worker_panic_resolves_tickets_and_worker_survives() {
+    let _guard = serialize();
+    let cfg = ServiceConfig {
+        workers: 1,
+        eb_rel: EB,
+        chunk_elems: CHUNK,
+        ..ServiceConfig::default()
+    };
+    let svc = Service::start(Arc::new(engine()), cfg).unwrap();
+    let handle = svc.handle();
+    let field = atm::generate_field_scaled(63, 0, 0);
+
+    failpoints::arm("service.batch", Policy::PanicOnce);
+    let err = handle.compress(field.clone()).expect_err("the panicking pass must fail the ticket");
+    failpoints::disarm("service.batch");
+    match &err {
+        Error::Internal(m) => assert!(m.contains("panicked"), "{m}"),
+        other => panic!("expected Error::Internal, got {other:?}"),
+    }
+
+    // The same (sole) worker keeps serving: the next compress and a
+    // fetch both succeed, and the report shows the contained panic.
+    handle.compress(field.clone()).unwrap();
+    assert_eq!(handle.fetch(&field.name).unwrap().dims, field.dims);
+    let report = handle.report();
+    assert_eq!(report.worker_panics, 1, "{}", report.summary());
+    assert_eq!(report.workers_alive, 1, "{}", report.summary());
+    assert!(report.summary().contains("worker_panics 1"));
+    svc.shutdown();
+}
+
+#[test]
+fn cold_read_faults_error_or_fall_back_never_panic() {
+    let _guard = serialize();
+    let engine = engine();
+    let root = temp_root("coldread");
+    let field = atm::generate_field_scaled(64, 2, 0);
+    {
+        let store = ArchiveStore::open(archive_cfg(&root), 4).unwrap();
+        let (names, bytes) = pack(&engine, &field);
+        store.insert(names, bytes).unwrap();
+        assert_eq!(store.stats().spills, 1);
+    }
+
+    // mmap refused: open_cached must fall back to the pread source and
+    // the fetch must still decode byte-identically.
+    {
+        let store = ArchiveStore::open(archive_cfg(&root), 4).unwrap();
+        failpoints::arm("store.mmap", Policy::ErrEvery(1, Errno::Eio));
+        let got = fetch(&engine, &store, &field.name);
+        failpoints::disarm("store.mmap");
+        assert_eq!(got.data, offline(&engine, &field).data, "pread fallback must serve");
+    }
+
+    // Every positioned read failing: the fetch must surface an error —
+    // not a panic, not wrong bytes.
+    {
+        let store = ArchiveStore::open(archive_cfg(&root), 4).unwrap();
+        failpoints::arm("store.mmap", Policy::ErrEvery(1, Errno::Eio));
+        failpoints::arm("store.pread", Policy::ErrEvery(1, Errno::Eio));
+        let outcome = store.reader_for(&field.name).and_then(|r| match r {
+            Some(reader) => engine.load_field(&reader, &field.name).map(|_| ()),
+            None => Ok(()),
+        });
+        failpoints::disarm("store.mmap");
+        failpoints::disarm("store.pread");
+        assert!(outcome.is_err(), "unreadable cold shard must error cleanly");
+        // Faults cleared: the same store serves the field again.
+        assert_eq!(fetch(&engine, &store, &field.name).data, offline(&engine, &field).data);
+    }
+    std::fs::remove_dir_all(&root).ok();
+}
