@@ -8,12 +8,22 @@
 //! scales the per-client request count (default 4 → 24 requests per
 //! client; CI's `1` sends 6), `ADAPTIVEC_BENCH_SCALE` sizes the
 //! dataset, `ADAPTIVEC_BENCH_JSON=<path>` writes the artifact.
+//!
+//! Network transport rows (the epoll reactor path): a
+//! concurrent-connection scaling row (`service_conns_10k`; count
+//! overridable via `ADAPTIVEC_BENCH_CONNS`, auto-clamped to the fd
+//! limit) and a frame-pipelining comparison on one socket
+//! (`service_pipeline_depth_{1,16}`) proving depth 16 outruns depth 1.
 
-use adaptivec::bench_util::{bytes_h, iters_override, scale_override, JsonReport, Table, Timing};
+use adaptivec::bench_util::{
+    bytes_h, iters_override, raise_nofile_limit, scale_override, JsonReport, Table, Timing,
+};
+use adaptivec::data::field::Field;
 use adaptivec::data::Dataset;
 use adaptivec::engine::{Engine, EngineConfig};
 use adaptivec::iosim::SvcModel;
-use adaptivec::service::{Request, Service, ServiceConfig};
+use adaptivec::service::net::{Client, NetConfig, Server};
+use adaptivec::service::{reactor, Request, Service, ServiceConfig};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -117,6 +127,186 @@ fn main() {
         ]);
     }
     t.print("service_throughput — requests/sec and latency vs batch_max");
+
+    // --- Network transport: concurrent connections at scale ---
+    //
+    // One reactor thread holding `conns` live sockets (10k by
+    // default), opened by 8 client threads that each round-trip one
+    // stats frame per connection and then keep every socket open until
+    // the sweep ends — the readiness-driven design's reason to exist;
+    // the thread-per-connection fallback would need 10k stacks for
+    // this. The JSON record is always `service_conns_10k` (the CI grep
+    // anchor); `iters` carries the actual connection count.
+    {
+        let mut conns: usize = std::env::var("ADAPTIVEC_BENCH_CONNS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(10_000);
+        if !reactor::epoll_enabled() {
+            // Thread-per-connection fallback: 10k stacks is a stress
+            // test of the OS, not of this crate. Keep the row alive
+            // but small.
+            conns = conns.min(256);
+        }
+        // Client + server side of every socket, plus headroom.
+        let want_fds = (2 * conns + 1024) as u64;
+        let fd_cap = raise_nofile_limit(want_fds);
+        if fd_cap != 0 && fd_cap < want_fds {
+            conns = ((fd_cap.saturating_sub(1024)) / 2) as usize;
+            eprintln!("fd limit {fd_cap} clamps the sweep to {conns} connections");
+        }
+        let client_threads = 8usize;
+
+        let engine = Arc::new(Engine::new(EngineConfig { workers: 2, ..EngineConfig::default() }));
+        let svc = Service::start(
+            engine,
+            ServiceConfig {
+                workers: 2,
+                queue_depth: 256,
+                batch_max: 16,
+                eb_rel: eb,
+                chunk_elems: 2048,
+                ..ServiceConfig::default()
+            },
+        )
+        .expect("in-memory archive open cannot fail");
+        let server = Server::bind_with(
+            svc.handle(),
+            "127.0.0.1:0",
+            NetConfig { max_conns: 16_384, ..NetConfig::default() },
+        )
+        .expect("bind loopback");
+        let addr = server.local_addr().to_string();
+        let srv = std::thread::spawn(move || server.run());
+
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for c in 0..client_threads {
+                let addr = &addr;
+                let mine = conns / client_threads + usize::from(c < conns % client_threads);
+                scope.spawn(move || {
+                    let mut held = Vec::with_capacity(mine);
+                    for _ in 0..mine {
+                        let mut client = Client::connect(addr).expect("connect to loopback");
+                        client.stats().expect("stats round-trip");
+                        held.push(client);
+                    }
+                    held // kept open until the scope joins
+                });
+            }
+        });
+        let wall = t0.elapsed();
+
+        let mut closer = Client::connect(&addr).expect("connect for shutdown");
+        closer.shutdown().expect("server shutdown");
+        drop(closer);
+        srv.join().expect("server thread").expect("server run");
+        let report = svc.shutdown();
+        assert!(
+            report.conns_peak >= conns as u64,
+            "peak {} connections, expected at least {conns}",
+            report.conns_peak
+        );
+        assert!(report.frames >= conns as u64, "every connection sent one frame");
+
+        let cps = conns as f64 / wall.as_secs_f64();
+        json.record(
+            "service_conns_10k",
+            Timing { mean: wall, std_dev: Duration::ZERO, iters: conns as u32 },
+        );
+        let mut t = Table::new(&["conns", "wall", "conns/s", "peak open", "frames", "reactor"]);
+        t.row(&[
+            conns.to_string(),
+            format!("{:.3} s", wall.as_secs_f64()),
+            format!("{cps:.0}"),
+            report.conns_peak.to_string(),
+            report.frames.to_string(),
+            if reactor::epoll_enabled() { "epoll".into() } else { "threads".to_string() },
+        ]);
+        t.print("service_throughput — concurrent connections (open + 1 frame each, then held)");
+    }
+
+    // --- Network transport: frame pipelining depth on one socket ---
+    //
+    // The same compress workload pushed through a single connection at
+    // depth 1 (request, wait, repeat) vs depth 16 (window of in-flight
+    // frames matched by correlation id). Depth 1 leaves the batcher
+    // starved — one request in the service at a time — while depth 16
+    // keeps both workers fed without opening N sockets; the assert
+    // below is the bench's contract.
+    {
+        let m = 24 * iters_override(4) as usize;
+        let mut rps_by_depth = Vec::new();
+        let mut t = Table::new(&["depth", "wall", "req/s", "batches", "avg batch", "svc p99"]);
+        for &depth in &[1usize, 16] {
+            let engine =
+                Arc::new(Engine::new(EngineConfig { workers: 2, ..EngineConfig::default() }));
+            let svc = Service::start(
+                engine,
+                ServiceConfig {
+                    workers: 2,
+                    queue_depth: 256,
+                    // Below the pipeline depth so a full window always
+                    // spans several batches and both workers stay busy.
+                    batch_max: 8,
+                    eb_rel: eb,
+                    chunk_elems: 2048,
+                    ..ServiceConfig::default()
+                },
+            )
+            .expect("in-memory archive open cannot fail");
+            let server = Server::bind(svc.handle(), "127.0.0.1:0").expect("bind loopback");
+            let addr = server.local_addr().to_string();
+            let srv = std::thread::spawn(move || server.run());
+
+            let fields: Vec<Field> = (0..m)
+                .map(|i| {
+                    let mut f = base_fields[i % base_fields.len()].clone();
+                    f.name = format!("{}@d{depth}r{i}", f.name);
+                    f
+                })
+                .collect();
+            let mut client = Client::connect(&addr).expect("connect to loopback");
+            let t0 = Instant::now();
+            let acks = client.compress_pipelined(&fields, depth).expect("pipelined compress");
+            let wall = t0.elapsed();
+            assert_eq!(acks.len(), m, "every pipelined frame must be answered");
+            client.shutdown().expect("server shutdown");
+            srv.join().expect("server thread").expect("server run");
+            let report = svc.shutdown();
+            assert_eq!(report.completed, m as u64, "every compress must complete");
+
+            let rps = m as f64 / wall.as_secs_f64();
+            rps_by_depth.push(rps);
+            json.record(
+                &format!("service_pipeline_depth_{depth}"),
+                Timing { mean: wall, std_dev: Duration::ZERO, iters: m as u32 },
+            );
+            json.record(
+                &format!("service_pipeline_p99_depth_{depth}"),
+                Timing { mean: report.p99, std_dev: Duration::ZERO, iters: m as u32 },
+            );
+            t.row(&[
+                depth.to_string(),
+                format!("{:.3} s", wall.as_secs_f64()),
+                format!("{rps:.1}"),
+                report.batches.to_string(),
+                format!("{:.2}", report.mean_batch()),
+                format!("{:.3} ms", report.p99.as_secs_f64() * 1e3),
+            ]);
+        }
+        t.print("service_throughput — pipelining depth on one connection");
+        // The thread-per-connection fallback serves one frame at a
+        // time, so only the reactor path guarantees the win.
+        if reactor::epoll_enabled() {
+            assert!(
+                rps_by_depth[1] > rps_by_depth[0],
+                "depth-16 pipelining ({:.1} req/s) must beat depth-1 ({:.1} req/s)",
+                rps_by_depth[1],
+                rps_by_depth[0]
+            );
+        }
+    }
 
     // The analytical counterpart (iosim::SvcModel): same batch sweep,
     // compression time approximated from one offline run.

@@ -301,10 +301,12 @@ fn main() {
         root_dir: Some(arch_root.clone()),
         mem_budget: 0, // spill immediately: everything is cold
         open_readers: 4,
+        background_spill: true,
     };
     {
         let store = ArchiveStore::open(cold_cfg.clone(), 4).unwrap();
         store.insert(arch_names, arch_bytes).unwrap();
+        store.quiesce();
     }
     let tm_recover =
         bench(1, iters_override(5), || ArchiveStore::open(cold_cfg.clone(), 4).unwrap());

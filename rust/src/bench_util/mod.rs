@@ -103,6 +103,45 @@ impl JsonReport {
     }
 }
 
+/// Best-effort raise of the process's open-file soft limit toward
+/// `want` (clamped to the hard limit) — benches that hold thousands of
+/// sockets at once outgrow the usual 1024-descriptor default. Raw
+/// `extern "C"` syscall bindings, same zero-dependency pattern as the
+/// mmap and epoll layers. Returns the soft limit in effect afterwards;
+/// 0 means the limit could not even be read (treat as "unknown").
+#[cfg(all(target_os = "linux", target_pointer_width = "64"))]
+pub fn raise_nofile_limit(want: u64) -> u64 {
+    #[repr(C)]
+    struct Rlimit {
+        rlim_cur: u64,
+        rlim_max: u64,
+    }
+    const RLIMIT_NOFILE: i32 = 7;
+    extern "C" {
+        fn getrlimit(resource: i32, rlim: *mut Rlimit) -> i32;
+        fn setrlimit(resource: i32, rlim: *const Rlimit) -> i32;
+    }
+    unsafe {
+        let mut rl = Rlimit { rlim_cur: 0, rlim_max: 0 };
+        if getrlimit(RLIMIT_NOFILE, &mut rl) != 0 {
+            return 0;
+        }
+        if rl.rlim_cur < want {
+            let raised = Rlimit { rlim_cur: want.min(rl.rlim_max), rlim_max: rl.rlim_max };
+            if setrlimit(RLIMIT_NOFILE, &raised) == 0 {
+                return raised.rlim_cur;
+            }
+        }
+        rl.rlim_cur
+    }
+}
+
+/// Non-Linux fallback: no raw rlimit bindings, report "unknown".
+#[cfg(not(all(target_os = "linux", target_pointer_width = "64")))]
+pub fn raise_nofile_limit(_want: u64) -> u64 {
+    0
+}
+
 /// Time `f`: `warmup` throwaway runs then `iters` measured runs.
 pub fn bench<T>(warmup: u32, iters: u32, mut f: impl FnMut() -> T) -> Timing {
     assert!(iters > 0);
@@ -292,5 +331,16 @@ mod tests {
         // The env vars are unset in the test environment.
         assert_eq!(iters_override(7), 7);
         assert_eq!(scale_override(1), 1);
+    }
+
+    #[test]
+    #[cfg(all(target_os = "linux", target_pointer_width = "64"))]
+    fn nofile_limit_reads_and_never_shrinks() {
+        // Asking for 1 fd never lowers the limit: the helper only ever
+        // raises, so this just reads the current soft limit.
+        let before = raise_nofile_limit(1);
+        assert!(before >= 1, "soft limit must be readable");
+        let again = raise_nofile_limit(before);
+        assert_eq!(again, before, "idempotent at the current limit");
     }
 }

@@ -65,33 +65,47 @@ COMMANDS:
               [--codecs C] [--pipelines P] [--archive-dir DIR]
               [--archive-mem BYTES] [--archive-readers N]
               [--read-timeout-ms MS] [--write-timeout-ms MS]
-              [--idle-timeout-ms MS]
+              [--idle-timeout-ms MS] [--max-conns N]
+              [--conn-inflight-bytes BYTES]
               (concurrent service front end over one shared engine:
                bounded request queue with Busy admission control,
                batched store passes, length-prefixed TCP frames; runs
                until a client sends --op shutdown, then prints the
-               final ServiceReport. With --archive-dir the archive is
-               persistent: batches past the --archive-mem hot budget
-               (default 64 MiB) spill to sharded container files, cold
-               fetches go through a bounded LRU of --archive-readers
-               open readers (default 16), restart recovers the whole
-               index from a shard scan, and shutdown flushes every
-               still-hot batch. Without it the archive is in-memory
-               only, as before. Timeouts guard the transport: a client
-               stalled mid-frame past --read-timeout-ms (default
-               30000) is disconnected, an idle connection is closed
-               after --idle-timeout-ms (default 300000); 0 disables a
-               deadline)
+               final ServiceReport. On linux-64 the transport is a
+               readiness-driven epoll reactor — nonblocking sockets,
+               frame pipelining by correlation id, and backpressure
+               instead of rejection: at --max-conns (default 4096) the
+               server stops accepting and the backlog defers, and a
+               connection past --conn-inflight-bytes (default 64 MiB)
+               of admitted-but-unanswered request bytes stops being
+               read until responses drain. ADAPTIVEC_NO_EPOLL=1 (or a
+               non-linux target) falls back to one thread per
+               connection with the same wire protocol. With
+               --archive-dir the archive is persistent: batches past
+               the --archive-mem hot budget (default 64 MiB) spill to
+               sharded container files on a background spiller thread,
+               cold fetches go through a bounded LRU of
+               --archive-readers open readers (default 16), restart
+               recovers the whole index from a shard scan, and
+               shutdown flushes every still-hot batch. Without it the
+               archive is in-memory only, as before. Timeouts guard
+               the transport: a client stalled mid-frame past
+               --read-timeout-ms (default 30000) is disconnected, an
+               idle connection is closed after --idle-timeout-ms
+               (default 300000); 0 disables a deadline)
   client      --op compress --dataset D [--scale S] [--seed N]
-              [--retry-ms MS] [--retries N]
+              [--retry-ms MS] [--retries N] [--pipeline N]
               | --op fetch --field NAME [--out FILE]
               | --op stats | --op shutdown
               [--addr 127.0.0.1:7845]
               [--timeout-ms MS] [--timeout-retries N]
               (drives a running `adaptivec serve`; compress retries
                Busy rejections with backoff and reports how many it
-               absorbed; deadline expiries reconnect and retry up to
-               --timeout-retries times)
+               absorbed; --pipeline N keeps up to N compress frames in
+               flight on the one connection — responses are matched by
+               correlation id, and pipelined runs do not retry Busy;
+               deadline expiries on serial calls reconnect and retry
+               up to --timeout-retries times)
 ";
 
 fn selector_cfg(args: &Args) -> Result<SelectorConfig> {
@@ -210,10 +224,15 @@ fn cmd_compress(argv: &[String]) -> Result<()> {
         // two-pass), proven by the report's call counters.
         let work = match report.write_plan {
             WritePlan::SinglePassSpill => format!(
-                "{} of {chunks} chunks compressed once (single-pass spill, peak scratch {} B{})",
+                "{} of {chunks} chunks compressed once (single-pass spill, peak scratch {} B{}{})",
                 report.compress_calls.total(),
                 report.peak_scratch_bytes,
                 if report.scratch_spilled { ", spilled to temp file" } else { ", in memory" },
+                if report.spliced_prefetched > 0 {
+                    format!(", {} slabs splice-prefetched", report.spliced_prefetched)
+                } else {
+                    String::new()
+                },
             ),
             WritePlan::TwoPassRecompress => format!(
                 "{chunks} chunks compressed twice (two-pass recompress, {:.2}s regenerating)",
@@ -512,6 +531,12 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let read_timeout_ms: u64 = args.get_or("read-timeout-ms", 30_000)?;
     let write_timeout_ms: u64 = args.get_or("write-timeout-ms", 30_000)?;
     let idle_timeout_ms: u64 = args.get_or("idle-timeout-ms", 300_000)?;
+    // Transport admission: at the connection cap the server stops
+    // accepting (backlog defers, nothing is rejected); past the
+    // per-connection in-flight byte budget the reactor stops reading
+    // that connection until responses drain.
+    let max_conns: usize = args.get_or("max-conns", 4096)?;
+    let conn_inflight_bytes: usize = args.get_or("conn-inflight-bytes", 64 << 20)?;
     let cfg = selector_cfg(&args)?;
     args.check_unknown()?;
 
@@ -523,6 +548,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         root_dir: archive_dir.clone(),
         mem_budget: archive_mem,
         open_readers: archive_readers,
+        background_spill: true,
     };
     let svc = Service::start(
         engine,
@@ -542,6 +568,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         read_timeout: std::time::Duration::from_millis(read_timeout_ms),
         write_timeout: std::time::Duration::from_millis(write_timeout_ms),
         idle_timeout: std::time::Duration::from_millis(idle_timeout_ms),
+        max_conns,
+        conn_inflight_bytes,
     };
     let server = Server::bind_with(svc.handle(), &addr, net)?;
     println!(
@@ -588,9 +616,37 @@ fn cmd_client(argv: &[String]) -> Result<()> {
             let fields = load_dataset(&args)?;
             let retry_ms: u64 = args.get_or("retry-ms", 10)?;
             let retries: u32 = args.get_or("retries", 500)?;
+            // Frame pipelining: keep up to N compress requests in
+            // flight on the one connection. Depth 1 is the serial
+            // path with per-field Busy retries; deeper pipelines do
+            // not retry (a Busy fails the run — raise --queue-depth
+            // or lower --pipeline instead).
+            let pipeline: usize = args.get_or("pipeline", 1)?;
             args.check_unknown()?;
             let mut client = Client::connect_with(&addr, net_cfg)?;
             let t0 = std::time::Instant::now();
+            if pipeline > 1 {
+                let acks = client.compress_pipelined(&fields, pipeline)?;
+                let (mut raw, mut stored) = (0u64, 0u64);
+                for ack in &acks {
+                    raw += ack.raw_bytes;
+                    stored += ack.stored_bytes;
+                    println!(
+                        "compressed {:<22} {:>10} -> {:>9} bytes ({} chunks, batch of {})",
+                        ack.name, ack.raw_bytes, ack.stored_bytes, ack.chunks, ack.batch_size
+                    );
+                }
+                println!(
+                    "client: {} fields (pipeline depth {pipeline}), {} -> {} bytes \
+                     (ratio {:.2}), wall {:.2}s",
+                    fields.len(),
+                    raw,
+                    stored,
+                    raw as f64 / stored.max(1) as f64,
+                    t0.elapsed().as_secs_f64()
+                );
+                return Ok(());
+            }
             let (mut raw, mut stored, mut busy) = (0u64, 0u64, 0u64);
             for f in &fields {
                 // Busy is the admission-control signal, not a failure:

@@ -288,6 +288,105 @@ impl SpillStore {
         Self::read_spilled(shard, meta, start, buf)
     }
 
+    /// Read one slab without ever mutating the shard: the overlap
+    /// splice uses this to prefetch slabs while pool workers are still
+    /// appending, so it must not force a flush (which would inject
+    /// synchronous scratch I/O into the append path) and must serve
+    /// bytes that are still in the write-behind buffer from memory.
+    ///
+    /// Returns `true` when the slab was served from the immutable
+    /// flushed prefix of the scratch file (positioned I/O, lock
+    /// dropped first on unix), `false` when it was copied out of
+    /// memory — the shard's `mem` fast path or its `wbuf` — under the
+    /// lock. Either way `buf` holds exactly the slab's bytes: splice
+    /// order, not storage tier, defines the container output.
+    pub fn read_slab_concurrent(&self, slab: SlabRef, buf: &mut Vec<u8>) -> Result<bool> {
+        let shard = self.shards.get(slab.shard as usize).ok_or_else(|| {
+            Error::InvalidArg(format!(
+                "slab shard {} out of range of {}-shard spill store",
+                slab.shard,
+                self.shards.len()
+            ))
+        })?;
+        let meta = Self::lock(shard)?;
+        let (start, end) = (slab.offset, slab.offset.checked_add(slab.len));
+        let end = end.filter(|&e| e <= meta.total).ok_or_else(|| {
+            Error::InvalidArg(format!(
+                "slab [{start}, +{}) out of range of {}-byte spill shard",
+                slab.len, meta.total
+            ))
+        })?;
+        buf.clear();
+        buf.resize(slab.len as usize, 0);
+        if shard.file.get().is_none() {
+            buf.copy_from_slice(&meta.mem[start as usize..end as usize]);
+            return Ok(false);
+        }
+        if end <= meta.flushed {
+            Self::read_spilled(shard, meta, start, buf)?;
+            return Ok(true);
+        }
+        let flushed = meta.flushed;
+        if start >= flushed {
+            // Entirely in the write-behind buffer: copy under the
+            // lock, no flush.
+            let a = (start - flushed) as usize;
+            let b = (end - flushed) as usize;
+            buf.copy_from_slice(&meta.wbuf[a..b]);
+            return Ok(false);
+        }
+        // Straddles the flush boundary. Flushes drain the whole
+        // buffer, so a slab cannot straddle today — handled anyway so
+        // a future partial-flush policy cannot corrupt the splice.
+        let file_part = (flushed - start) as usize;
+        Self::read_file_range_locked(shard, start, &mut buf[..file_part])?;
+        buf[file_part..].copy_from_slice(&meta.wbuf[..(end - flushed) as usize]);
+        Ok(false)
+    }
+
+    /// Whether `slab` lies entirely in the immutable flushed prefix of
+    /// its shard's scratch file — i.e. whether
+    /// [`SpillStore::read_slab_concurrent`] would serve it with
+    /// positioned file I/O instead of a memory copy. Monotone: files
+    /// are never un-created and `flushed` only grows, so once this
+    /// returns `true` it stays `true`. The overlap splice polls it
+    /// before committing to a prefetch read, so purely in-memory runs
+    /// never pay a staging copy. Out-of-range slabs are just `false`.
+    pub fn slab_flushed(&self, slab: SlabRef) -> bool {
+        let Some(shard) = self.shards.get(slab.shard as usize) else {
+            return false;
+        };
+        if shard.file.get().is_none() {
+            return false;
+        }
+        let Ok(meta) = Self::lock(shard) else {
+            return false;
+        };
+        slab.offset.checked_add(slab.len).is_some_and(|end| end <= meta.flushed)
+    }
+
+    /// Positioned read of a flushed file range with the shard lock
+    /// held (the straddle path above — the caller still needs `wbuf`
+    /// to stay put while it copies the tail).
+    #[cfg(unix)]
+    fn read_file_range_locked(shard: &Shard, offset: u64, buf: &mut [u8]) -> Result<()> {
+        failpoints::check("spill.read")?;
+        use std::os::unix::fs::FileExt;
+        let file = shard.file.get().expect("spilled shard has a file");
+        file.read_exact_at(buf, offset)?;
+        Ok(())
+    }
+
+    #[cfg(not(unix))]
+    fn read_file_range_locked(shard: &Shard, offset: u64, buf: &mut [u8]) -> Result<()> {
+        use std::io::Read;
+        failpoints::check("spill.read")?;
+        let mut file = shard.file.get().expect("spilled shard has a file");
+        file.seek(SeekFrom::Start(offset))?;
+        file.read_exact(buf)?;
+        Ok(())
+    }
+
     /// Positioned read of a spilled, already-flushed range.
     ///
     /// Unix: `flushed` only grows and flushes never rewrite
@@ -531,6 +630,62 @@ mod tests {
             assert_eq!(r.offset, expect_offset);
             expect_offset += s.len() as u64;
         }
+    }
+
+    #[test]
+    fn concurrent_read_never_flushes_and_reports_its_tier() {
+        let dir = std::env::temp_dir().join("adaptivec_spill_conc_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        {
+            // Memory fast path: always served under the lock.
+            let store = SpillStore::new(SpillConfig {
+                mem_budget: usize::MAX,
+                dir: Some(dir.clone()),
+                shards: 1,
+            });
+            let r = store.append(b"hot bytes").unwrap();
+            let mut buf = Vec::new();
+            assert!(!store.slab_flushed(r), "no file, nothing flushed");
+            assert!(!store.read_slab_concurrent(r, &mut buf).unwrap());
+            assert_eq!(buf, b"hot bytes");
+        }
+        {
+            // Spilled shard: a slab big enough to push the
+            // write-behind buffer through lands in the flushed prefix
+            // (read outside the lock); a small one after it stays in
+            // `wbuf` and must be served from memory WITHOUT forcing a
+            // flush.
+            let store = SpillStore::new(SpillConfig {
+                mem_budget: 0,
+                dir: Some(dir.clone()),
+                shards: 1,
+            });
+            let big: Vec<u8> = (0..WRITE_BEHIND + 123).map(|i| (i % 251) as u8).collect();
+            let r_big = store.append(&big).unwrap();
+            // This append pushes the write-behind buffer over its
+            // threshold, flushing both slabs through...
+            let r_tail = store.append(b"tail").unwrap();
+            // ...while this one lands in the now-empty buffer.
+            let r_buffered = store.append(b"more").unwrap();
+            let mut buf = Vec::new();
+            assert!(store.slab_flushed(r_big));
+            assert!(store.slab_flushed(r_tail));
+            assert!(!store.slab_flushed(r_buffered), "still in wbuf");
+            assert!(store.read_slab_concurrent(r_big, &mut buf).unwrap(), "flushed prefix");
+            assert_eq!(buf, big);
+            assert!(store.read_slab_concurrent(r_tail, &mut buf).unwrap(), "flushed prefix");
+            assert_eq!(buf, b"tail");
+            assert!(!store.read_slab_concurrent(r_buffered, &mut buf).unwrap(), "still buffered");
+            assert_eq!(buf, b"more");
+            // The ordinary splice read still works afterwards.
+            store.read_slab(r_buffered, &mut buf).unwrap();
+            assert_eq!(buf, b"more");
+            // Range validation matches read_slab.
+            let oob = SlabRef { offset: u64::MAX, len: 1, ..r_buffered };
+            assert!(store.read_slab_concurrent(oob, &mut buf).is_err());
+            assert!(!store.slab_flushed(oob));
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

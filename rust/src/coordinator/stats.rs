@@ -315,6 +315,13 @@ pub struct StreamedRunReport {
     /// Whether the spill store overflowed its memory budget into a
     /// temp file (always `false` for two-pass).
     pub scratch_spilled: bool,
+    /// Chunks whose scratch slab the overlap splice staged back into
+    /// memory ahead of the final splice pass (overlapping late
+    /// compression jobs), so the splice served them without touching
+    /// the scratch file. 0 when the run never spilled, when
+    /// [`crate::engine::EngineConfig::splice_overlap`] is off, or
+    /// under two-pass, which has no splice at all.
+    pub spliced_prefetched: u64,
     /// Codec `compress` invocations by selection byte: single-pass
     /// totals exactly one per chunk; two-pass pays one extra per chunk
     /// for regeneration.
@@ -494,6 +501,7 @@ mod tests {
             peak_payload_bytes: 16,
             peak_scratch_bytes: 26,
             scratch_spilled: false,
+            spliced_prefetched: 0,
             compress_calls: CompressCalls(
                 [(Choice::Sz.id(), 1u64), (Choice::Raw.id(), 1)].into_iter().collect(),
             ),

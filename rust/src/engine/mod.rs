@@ -30,6 +30,12 @@ use crate::Result;
 /// field's selection prior instead of re-sampling (DESIGN.md §11).
 pub const DEFAULT_CHUNK_PRIOR_ELEMS: usize = 64 * 1024;
 
+/// Byte cap on the overlap splice's in-memory staging
+/// ([`EngineConfig::splice_overlap`]): the prefetcher stops staging
+/// once this many slab bytes are resident, bounding the memory the
+/// overlap trades for scratch-file read latency.
+pub const SPLICE_PREFETCH_BUDGET: usize = 64 << 20;
+
 /// Which protocol [`Engine::compress_chunked_to`] streams a container
 /// with (DESIGN.md §6).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -96,6 +102,18 @@ pub struct EngineConfig {
     /// chunk inherits). Refreshes are counted per run
     /// ([`stats::StreamedRunReport::prior_refreshes`]).
     pub prior_drift_band: f64,
+    /// Overlap the final splice against late compression jobs
+    /// ([`WritePlan::SinglePassSpill`] only): a prefetcher thread
+    /// re-reads slabs that have already reached the scratch file's
+    /// flushed prefix back into a bounded in-memory stage (at most
+    /// [`SPLICE_PREFETCH_BUDGET`] bytes) while the last chunks are
+    /// still compressing, so the splice pass serves them from memory
+    /// instead of paying scratch-file reads serially after the final
+    /// chunk lands. Container bytes are identical with the overlap on
+    /// or off; [`stats::StreamedRunReport::spliced_prefetched`]
+    /// counts the chunks it covered. Purely in-memory runs stage
+    /// nothing (there is no file latency to hide).
+    pub splice_overlap: bool,
 }
 
 impl Default for EngineConfig {
@@ -107,6 +125,7 @@ impl Default for EngineConfig {
             write_plan: WritePlan::default(),
             spill: spill::SpillConfig::default(),
             prior_drift_band: 0.0,
+            splice_overlap: true,
         }
     }
 }
@@ -415,7 +434,9 @@ impl Engine {
         }
     }
 
-    /// Single-pass spill protocol: compress once, spill, splice.
+    /// Single-pass spill protocol: compress once, spill, splice —
+    /// with the splice prefetch overlapped against late compression
+    /// jobs when [`EngineConfig::splice_overlap`] is on.
     fn run_chunked_single_pass<W: std::io::Write>(
         &self,
         fields: &[Field],
@@ -424,58 +445,148 @@ impl Engine {
         chunk_elems: usize,
         sink: W,
     ) -> Result<(stats::StreamedRunReport, W)> {
+        use std::collections::{HashMap, VecDeque};
+
         let router = self.router(policy, eb_rel);
         let (jobs, chunks_per_field) = self.chunk_jobs(&router, fields, chunk_elems)?;
         let scratch_store = spill::SpillStore::new(self.cfg.spill.clone());
+        let store_ref = &scratch_store;
+        let overlap = self.cfg.splice_overlap;
 
         // The only compression pass: decide + compress each chunk and
         // append the finished payload to the spill store in completion
         // order. Prior-covered chunks skip staging entirely (the span
         // compresses in place); the rest stage into the per-worker
         // reusable scratch. The store deletes its temp file on drop,
-        // so every `?` below also cleans up the scratch space.
-        let store_ref = &scratch_store;
-        let sizings = pool::run_jobs_scoped(
-            self.workers(),
-            &jobs,
-            router::CompressScratch::default,
-            |j, scratch| {
-                let span = &j.field.data[j.start..j.start + j.dims.len()];
-                let decision = match j.prior.as_ref() {
-                    // Adaptive prior refresh: a drifted chunk falls
-                    // through to independent estimation below.
-                    Some(p) if !router.prior_drifted(span, p) => {
-                        router.decide_from_prior(p, j.chunk_idx)
+        // so every error path below also cleans up the scratch space.
+        //
+        // Overlapped splice prefetch: every completed chunk announces
+        // its (flat index, slab) on a channel, and a prefetcher thread
+        // re-reads slabs that have already reached the scratch file's
+        // flushed prefix back into a byte-capped in-memory stage while
+        // later chunks are still compressing. The splice pass then
+        // serves those chunks from the stage — same bytes, read while
+        // compression still had the CPUs, instead of serially after
+        // the last chunk lands. Prefetch read errors are swallowed on
+        // purpose: the splice pass re-reads through `read_slab` and
+        // surfaces them with its own error context.
+        let indexed: Vec<(usize, &ChunkJob)> = jobs.iter().enumerate().collect();
+        let (done_tx, done_rx) = std::sync::mpsc::channel::<(usize, spill::SlabRef)>();
+        let done_tx = std::sync::Mutex::new(done_tx);
+        let (sizings, mut staged) = std::thread::scope(|scope| {
+            let prefetcher = overlap.then(|| {
+                scope.spawn(move || {
+                    let mut pending: VecDeque<(usize, spill::SlabRef)> = VecDeque::new();
+                    let mut staged: HashMap<usize, Vec<u8>> = HashMap::new();
+                    let mut staged_bytes = 0usize;
+                    // Live phase: stage in completion order, oldest
+                    // first. Within a shard an unflushed slab blocks
+                    // its juniors (they cannot have flushed before
+                    // it), so head-of-line waiting is free; across
+                    // shards the drain phase below catches up.
+                    'live: while let Ok(ev) = done_rx.recv() {
+                        pending.push_back(ev);
+                        while let Some(&(idx, slab)) = pending.front() {
+                            if staged_bytes >= SPLICE_PREFETCH_BUDGET {
+                                break 'live;
+                            }
+                            if !store_ref.slab_flushed(slab) {
+                                break;
+                            }
+                            pending.pop_front();
+                            let mut buf = Vec::new();
+                            if store_ref.read_slab_concurrent(slab, &mut buf).is_ok() {
+                                staged_bytes += buf.len();
+                                staged.insert(idx, buf);
+                            }
+                        }
                     }
-                    _ => {
-                        router.decide(scratch.stage_chunk(j.field, j.chunk_idx, j.start, j.dims))?
+                    // Drain phase: the channel closed, so appends are
+                    // done and flush state is final — sweep whatever
+                    // is still pending, skipping (not blocking on)
+                    // slabs stuck in a write-behind buffer.
+                    for (idx, slab) in pending {
+                        if staged_bytes >= SPLICE_PREFETCH_BUDGET {
+                            break;
+                        }
+                        if !store_ref.slab_flushed(slab) {
+                            continue;
+                        }
+                        let mut buf = Vec::new();
+                        if store_ref.read_slab_concurrent(slab, &mut buf).is_ok() {
+                            staged_bytes += buf.len();
+                            staged.insert(idx, buf);
+                        }
                     }
-                };
-                let t0 = std::time::Instant::now();
-                let stream = router.compress_decided_span(span, j.dims, &decision)?;
-                let compress_time = t0.elapsed();
-                let decl = store::ChunkDecl::of(decision.selection(), &stream);
-                let slab = store_ref.append(&stream)?;
-                Ok(ChunkOutcome {
-                    decision,
-                    decl,
-                    raw_bytes: span.len() as u64 * 4,
-                    compress_time,
-                    slab: Some(slab),
+                    staged
                 })
-            },
-        )?;
+            });
+            let sizings = pool::run_jobs_scoped(
+                self.workers(),
+                &indexed,
+                router::CompressScratch::default,
+                |&(idx, j), scratch| {
+                    let span = &j.field.data[j.start..j.start + j.dims.len()];
+                    let decision = match j.prior.as_ref() {
+                        // Adaptive prior refresh: a drifted chunk
+                        // falls through to independent estimation.
+                        Some(p) if !router.prior_drifted(span, p) => {
+                            router.decide_from_prior(p, j.chunk_idx)
+                        }
+                        _ => router
+                            .decide(scratch.stage_chunk(j.field, j.chunk_idx, j.start, j.dims))?,
+                    };
+                    let t0 = std::time::Instant::now();
+                    let stream = router.compress_decided_span(span, j.dims, &decision)?;
+                    let compress_time = t0.elapsed();
+                    let decl = store::ChunkDecl::of(decision.selection(), &stream);
+                    let slab = store_ref.append(&stream)?;
+                    if overlap {
+                        if let Ok(tx) = done_tx.lock() {
+                            let _ = tx.send((idx, slab));
+                        }
+                    }
+                    Ok(ChunkOutcome {
+                        decision,
+                        decl,
+                        raw_bytes: span.len() as u64 * 4,
+                        compress_time,
+                        slab: Some(slab),
+                    })
+                },
+            );
+            // Close the channel (even on a pool error) so the
+            // prefetcher's recv loop ends, then collect its stage. A
+            // prefetcher panic degrades to an empty stage rather than
+            // failing the run.
+            drop(done_tx);
+            let staged = match prefetcher {
+                Some(handle) => handle.join().unwrap_or_default(),
+                None => HashMap::new(),
+            };
+            (sizings, staged)
+        });
+        let sizings = sizings?;
         let peak_scratch_bytes = scratch_store.total_bytes();
         let scratch_spilled = scratch_store.spilled();
 
         // All sizes + CRCs known: emit magic + index, then splice the
         // slabs into the sink in declared order — the sink written
-        // sequentially, each slab read exactly once (positioned).
+        // sequentially, each slab served from the prefetch stage when
+        // the overlap got to it, read from the store (exactly once,
+        // positioned) otherwise.
         let decls = build_decls(fields, &chunks_per_field, &sizings, chunk_elems);
         let mut writer = store::ContainerV2Writer::new(sink, &decls)?;
         let mut buf = Vec::new();
         let mut peak_payload = 0u64;
+        let mut spliced_prefetched = 0u64;
         for (idx, s) in sizings.iter().enumerate() {
+            if let Some(bytes) = staged.remove(&idx) {
+                spliced_prefetched += 1;
+                peak_payload = peak_payload.max(bytes.len() as u64);
+                writer.put_chunk(idx, &bytes)?;
+                continue;
+            }
             scratch_store.read_slab(s.slab.expect("single-pass chunks spill"), &mut buf)?;
             peak_payload = peak_payload.max(buf.len() as u64);
             writer.put_chunk(idx, &buf)?;
@@ -491,6 +602,7 @@ impl Engine {
             peak_payload_bytes: peak_payload,
             peak_scratch_bytes,
             scratch_spilled,
+            spliced_prefetched,
             compress_calls: stats::CompressCalls(router.compress_calls().snapshot()),
             recompress_time: std::time::Duration::ZERO,
             prior_refreshes: router.prior_refreshes(),
@@ -563,6 +675,7 @@ impl Engine {
             peak_payload_bytes: peak_payload,
             peak_scratch_bytes: 0,
             scratch_spilled: false,
+            spliced_prefetched: 0,
             compress_calls: stats::CompressCalls(router.compress_calls().snapshot()),
             recompress_time,
             prior_refreshes: router.prior_refreshes(),
@@ -818,6 +931,64 @@ mod tests {
             .unwrap();
         assert_eq!(b1, b4, "worker count must not change output");
         assert_eq!(r1.prior_refreshes, r4.prior_refreshes);
+    }
+
+    #[test]
+    fn splice_overlap_is_byte_identical_and_prefetches_spilled_slabs() {
+        use crate::data::field::Dims;
+        // Raw passthrough keeps the chunks fast and the scratch bytes
+        // large: three 128k-element fields at 16k-element chunks push
+        // ~1.5 MB through a zero-budget single-shard spill store, so
+        // several write-behind flushes are guaranteed and the overlap
+        // must stage at least one flushed slab.
+        let n = 128 * 1024;
+        let fields: Vec<Field> = (0..3usize)
+            .map(|k| {
+                let data = (0..n).map(|i| ((i * (k + 1)) as f32 * 0.001).sin()).collect();
+                Field::new(format!("raw{k}"), Dims::D1(n), data)
+            })
+            .collect();
+        let dir = std::env::temp_dir().join("adaptivec_splice_overlap_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mk = |splice_overlap| {
+            Engine::new(EngineConfig {
+                workers: 3,
+                splice_overlap,
+                spill: spill::SpillConfig {
+                    mem_budget: 0,
+                    dir: Some(dir.clone()),
+                    shards: 1,
+                },
+                ..EngineConfig::default()
+            })
+        };
+        let (rep_on, on) = mk(true)
+            .compress_chunked_to(&fields, Policy::NoCompression, 1e-3, 16 * 1024, Vec::new())
+            .unwrap();
+        let (rep_off, off) = mk(false)
+            .compress_chunked_to(&fields, Policy::NoCompression, 1e-3, 16 * 1024, Vec::new())
+            .unwrap();
+        assert!(on == off, "overlap must not change container bytes");
+        assert!(rep_on.scratch_spilled);
+        assert!(rep_on.spliced_prefetched >= 1, "flushed slabs must be staged");
+        assert!(rep_on.spliced_prefetched <= rep_on.total_chunks() as u64);
+        assert_eq!(rep_off.spliced_prefetched, 0);
+        std::fs::remove_dir_all(&dir).ok();
+
+        // In-memory runs have no file latency to hide: nothing is
+        // staged, and the bytes still match the buffered path.
+        let engine = engine_with(2);
+        let small = small_fields(2);
+        let (rep, bytes) = engine
+            .compress_chunked_to(&small, Policy::RateDistortion, 1e-3, 2048, Vec::new())
+            .unwrap();
+        assert_eq!(rep.spliced_prefetched, 0, "never spilled");
+        let buffered = engine
+            .run_chunked(&small, Policy::RateDistortion, 1e-3, 2048)
+            .unwrap()
+            .to_container()
+            .to_bytes();
+        assert_eq!(bytes, buffered);
     }
 
     #[test]

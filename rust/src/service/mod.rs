@@ -29,6 +29,7 @@ pub mod archive;
 pub mod batcher;
 pub mod net;
 pub mod queue;
+pub mod reactor;
 pub mod stats;
 
 pub use archive::{ArchiveConfig, ArchiveStats, ArchiveStore};
@@ -79,11 +80,34 @@ pub enum Response {
     Stalled,
 }
 
+/// Where one job's answer goes. In-process callers wait on a channel
+/// ([`Ticket`]); the readiness reactor ([`net`]) can't block on a
+/// channel per frame, so it registers a completion hook that posts the
+/// result back to the event loop and wakes it. Workers don't care:
+/// both are one `deliver` at resolution time.
+pub(crate) enum ReplyTo {
+    Chan(mpsc::Sender<Result<Response>>),
+    Hook(Box<dyn FnOnce(Result<Response>) + Send>),
+}
+
+impl ReplyTo {
+    /// Hand the requester its answer. A dropped channel receiver (the
+    /// client gave up) is not an error — the work is already done.
+    pub(crate) fn deliver(self, result: Result<Response>) {
+        match self {
+            ReplyTo::Chan(tx) => {
+                let _ = tx.send(result);
+            }
+            ReplyTo::Hook(hook) => hook(result),
+        }
+    }
+}
+
 /// One queued request: what was asked, where to answer, and when it
 /// was admitted (end-to-end latency anchor).
 pub(crate) struct Job {
     pub(crate) req: Request,
-    pub(crate) reply: mpsc::Sender<Result<Response>>,
+    pub(crate) reply: ReplyTo,
     pub(crate) enqueued: Instant,
 }
 
@@ -251,11 +275,33 @@ impl ServiceHandle {
     /// its high-water mark — the admission-control rejection.
     pub fn submit(&self, req: Request) -> Result<Ticket> {
         let (tx, rx) = mpsc::channel();
-        let job = Job { req, reply: tx, enqueued: Instant::now() };
+        let job = Job { req, reply: ReplyTo::Chan(tx), enqueued: Instant::now() };
         match self.queue.push(job) {
             Ok(()) => Ok(Ticket { rx }),
             Err(_rejected) => Err(Error::Busy),
         }
+    }
+
+    /// Submit with a completion hook instead of a ticket: `hook` runs
+    /// on the resolving worker thread with the job's result. This is
+    /// the reactor's pipelining primitive — it must never block, so it
+    /// gets its answers pushed instead of parking a thread per frame.
+    pub(crate) fn submit_hook(
+        &self,
+        req: Request,
+        hook: Box<dyn FnOnce(Result<Response>) + Send>,
+    ) -> Result<()> {
+        let job = Job { req, reply: ReplyTo::Hook(hook), enqueued: Instant::now() };
+        match self.queue.push(job) {
+            Ok(()) => Ok(()),
+            Err(_rejected) => Err(Error::Busy),
+        }
+    }
+
+    /// Shared counters (transport gauges live here too, so the wire
+    /// front end and the in-process path report through one snapshot).
+    pub(crate) fn counters(&self) -> &Arc<stats::ServiceCounters> {
+        &self.counters
     }
 
     /// Submit and block for the answer.
@@ -319,6 +365,11 @@ fn snapshot(
         p50: counters.latency.quantile(0.50),
         p99: counters.latency.quantile(0.99),
         latency_count: counters.latency.count(),
+        conns_open: counters.conns_open.load(Ordering::Relaxed),
+        conns_peak: counters.conns_peak.load(Ordering::Relaxed),
+        frames: counters.frames.load(Ordering::Relaxed),
+        depth_p50: counters.depth.quantile(0.50),
+        depth_max: counters.depth.max(),
         archive: archive.stats(),
     }
 }
@@ -346,11 +397,10 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
     }
 }
 
-/// Answer one job and account for it. A dropped receiver (client gave
-/// up) is not an error — the work is already done.
+/// Answer one job and account for it.
 fn respond(
     counters: &stats::ServiceCounters,
-    reply: &mpsc::Sender<Result<Response>>,
+    reply: ReplyTo,
     enqueued: Instant,
     result: Result<Response>,
 ) {
@@ -359,7 +409,7 @@ fn respond(
         Err(_) => counters.errors.fetch_add(1, Ordering::Relaxed),
     };
     counters.latency.record(enqueued.elapsed());
-    let _ = reply.send(result);
+    reply.deliver(result);
 }
 
 fn worker_loop(
@@ -432,17 +482,17 @@ fn compress_batch(
                 "batch compression panicked: {}",
                 panic_message(payload.as_ref())
             );
-            for (reply, enqueued) in &replies {
-                respond(counters, reply, *enqueued, Err(Error::Internal(msg.clone())));
+            for (reply, enqueued) in replies {
+                respond(counters, reply, enqueued, Err(Error::Internal(msg.clone())));
             }
         }
         Ok(Ok(report)) => {
             counters.record_batch(batch_size);
-            for ((reply, enqueued), fs) in replies.iter().zip(&report.fields) {
+            for ((reply, enqueued), fs) in replies.into_iter().zip(&report.fields) {
                 respond(
                     counters,
                     reply,
-                    *enqueued,
+                    enqueued,
                     Ok(Response::Compressed {
                         name: fs.name.clone(),
                         raw_bytes: fs.raw_bytes(),
@@ -456,8 +506,8 @@ fn compress_batch(
         Ok(Err(e)) => {
             // The whole pass failed: every requester learns why.
             let msg = format!("batch compression failed: {e}");
-            for (reply, enqueued) in &replies {
-                respond(counters, reply, *enqueued, Err(Error::Other(msg.clone())));
+            for (reply, enqueued) in replies {
+                respond(counters, reply, enqueued, Err(Error::Other(msg.clone())));
             }
         }
     }
@@ -499,7 +549,7 @@ fn handle_single(
             )))
         }
     };
-    respond(counters, &reply, enqueued, result);
+    respond(counters, reply, enqueued, result);
 }
 
 #[cfg(test)]
@@ -624,6 +674,7 @@ mod tests {
                 root_dir: Some(root.clone()),
                 mem_budget: usize::MAX, // nothing spills before shutdown
                 open_readers: 4,
+                background_spill: true,
             },
             ..test_cfg()
         };
@@ -654,6 +705,7 @@ mod tests {
                 root_dir: Some(root.clone()),
                 mem_budget: usize::MAX,
                 open_readers: 4,
+                background_spill: true,
             },
             ..test_cfg()
         };

@@ -1,20 +1,36 @@
-//! std-only TCP front end: length-prefixed request/response frames
-//! over `std::net`, one thread per connection, translating the wire
-//! into [`ServiceHandle`] calls (no protocol state lives here — the
-//! queue and its admission control see remote and in-process requests
-//! identically).
+//! TCP front end: length-prefixed request/response frames over
+//! `std::net`, translating the wire into [`ServiceHandle`] calls (no
+//! protocol state lives above the framing layer — the queue and its
+//! admission control see remote and in-process requests identically).
+//!
+//! Two serving strategies share one wire protocol (DESIGN.md §17):
+//!
+//! * **readiness reactor** (linux-64, default): nonblocking sockets
+//!   multiplexed over the raw-epoll [`super::reactor::Poller`], with
+//!   per-connection read/write buffers that carry partial frames
+//!   across readiness events, frame pipelining (responses matched by
+//!   correlation id, written in completion order), a connection-count
+//!   cap and per-connection in-flight byte budget that *backpressure*
+//!   (stop reading) instead of rejecting, and transport deadlines kept
+//!   on a [`super::reactor::TimerWheel`];
+//! * **thread per connection** (fallback everywhere else, or under the
+//!   `ADAPTIVEC_NO_EPOLL` pin): the PR 5 path — blocking sockets,
+//!   socket-timeout deadlines, one frame in flight per connection.
 //!
 //! ## Frame format
 //!
 //! ```text
 //! frame  := len:u32le body            (len = body length, ≤ 1 GiB)
-//! body   := opcode:u8 payload
+//! body   := opcode:u8 corr:u32le payload
 //! ```
 //!
-//! Request opcodes: `0x01` compress (name, dims, f32 data), `0x02`
-//! fetch (name), `0x03` stats, `0x04` shutdown, `0x05` stall (millis —
-//! test instrumentation). Response opcodes: `0x80` compressed ack,
-//! `0x81` field, `0x82` stats text, `0x83` ok, `0xFE` **busy** (the
+//! `corr` is a client-chosen correlation id echoed verbatim on the
+//! response, so one connection can keep many requests in flight and
+//! match answers written back in completion order. Request opcodes:
+//! `0x01` compress (name, dims, f32 data), `0x02` fetch (name), `0x03`
+//! stats, `0x04` shutdown, `0x05` stall (millis — test
+//! instrumentation). Response opcodes: `0x80` compressed ack, `0x81`
+//! field, `0x82` stats text, `0x83` ok, `0xFE` **busy** (the
 //! admission-control rejection, surfaced to clients as
 //! [`Error::Busy`]), `0xFF` error text. All integers little-endian;
 //! strings and byte runs are `u32` length-prefixed.
@@ -29,22 +45,31 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// Transport deadlines (DESIGN.md §16). `Duration::ZERO` disables a
-/// deadline. The server distinguishes *idle* from *stalled*: a
-/// connection with no frame in flight may sit quiet up to
-/// `idle_timeout` (polled at `read_timeout` granularity) and is then
-/// closed cleanly; a peer that stops mid-frame is disconnected as soon
-/// as `read_timeout` expires, so one stalled client can never pin a
-/// connection thread forever.
+/// Transport deadlines and admission bounds (DESIGN.md §17).
+/// `Duration::ZERO` disables a deadline. The server distinguishes
+/// *idle* from *stalled*: a connection with no frame in flight may sit
+/// quiet up to `idle_timeout` and is then closed cleanly; a peer that
+/// stops mid-frame is disconnected once `read_timeout` expires, so one
+/// stalled client can never pin server resources forever.
 #[derive(Clone, Debug)]
 pub struct NetConfig {
-    /// Per-read socket deadline (also the idle-poll granularity).
+    /// How long a peer may stall mid-frame before disconnection (on
+    /// the thread path this is also the idle-poll granularity).
     pub read_timeout: Duration,
-    /// Per-write socket deadline.
+    /// How long a response write may sit without progress.
     pub write_timeout: Duration,
     /// How long a connection may sit between frames before the server
-    /// closes it. Needs a nonzero `read_timeout` to be enforced.
+    /// closes it. On the thread path this needs a nonzero
+    /// `read_timeout` to be enforced.
     pub idle_timeout: Duration,
+    /// Most connections served at once. At the cap the server stops
+    /// accepting (backlog defers, nothing is rejected) and resumes as
+    /// connections close.
+    pub max_conns: usize,
+    /// Per-connection budget of in-flight request bytes. Past it the
+    /// reactor stops reading that connection (backpressure) until
+    /// responses drain; requests already admitted are never dropped.
+    pub conn_inflight_bytes: usize,
 }
 
 impl Default for NetConfig {
@@ -53,6 +78,8 @@ impl Default for NetConfig {
             read_timeout: Duration::from_secs(30),
             write_timeout: Duration::from_secs(30),
             idle_timeout: Duration::from_secs(300),
+            max_conns: 4096,
+            conn_inflight_bytes: 64 << 20,
         }
     }
 }
@@ -85,6 +112,10 @@ fn map_timeout(e: Error, what: &str) -> Error {
 /// Upper bound on one frame body — rejects corrupt/hostile lengths
 /// before any allocation.
 const MAX_FRAME: u32 = 1 << 30;
+
+/// Minimum in-flight-byte charge per admitted frame, so tiny requests
+/// (fetch, stall) still count against the connection budget.
+const FRAME_CHARGE_FLOOR: usize = 1024;
 
 // Request opcodes.
 const OP_COMPRESS: u8 = 0x01;
@@ -264,7 +295,7 @@ fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
     Ok(Some(body))
 }
 
-/// Server-side frame read with the idle/stalled distinction. The
+/// Thread-path frame read with the idle/stalled distinction. The
 /// stream's read deadline acts as the poll granularity: each expiry
 /// with zero header bytes in hand just re-checks the idle budget;
 /// an expiry *mid-frame* means the peer stalled and the connection is
@@ -322,13 +353,12 @@ pub struct Server {
 impl Server {
     /// Bind `addr` (e.g. `"127.0.0.1:7845"`, or port 0 for an
     /// ephemeral port — tests read it back via
-    /// [`Server::local_addr`]) with the default [`NetConfig`]
-    /// deadlines.
+    /// [`Server::local_addr`]) with the default [`NetConfig`].
     pub fn bind(handle: ServiceHandle, addr: &str) -> Result<Server> {
         Server::bind_with(handle, addr, NetConfig::default())
     }
 
-    /// [`Server::bind`] with explicit transport deadlines.
+    /// [`Server::bind`] with explicit transport deadlines and bounds.
     pub fn bind_with(handle: ServiceHandle, addr: &str, net: NetConfig) -> Result<Server> {
         let listener = TcpListener::bind(addr)?;
         let addr = listener.local_addr()?;
@@ -339,10 +369,23 @@ impl Server {
         self.addr
     }
 
-    /// Accept loop: one thread per connection, until a shutdown frame
-    /// arrives. Blocking — callers wanting a background server spawn
-    /// this on a thread.
+    /// Serve until a shutdown frame arrives. Blocking — callers
+    /// wanting a background server spawn this on a thread. Uses the
+    /// readiness reactor where available (linux-64 without the
+    /// `ADAPTIVEC_NO_EPOLL` pin), the thread-per-connection path
+    /// everywhere else.
     pub fn run(self) -> Result<()> {
+        #[cfg(all(target_os = "linux", target_pointer_width = "64"))]
+        if super::reactor::epoll_enabled() {
+            return reactor_serve::run(self);
+        }
+        self.run_threads()
+    }
+
+    /// Fallback accept loop: one thread per connection. The connection
+    /// cap is honored by deferring further accepts (nothing is
+    /// rejected) until a serving thread exits.
+    fn run_threads(self) -> Result<()> {
         for stream in self.listener.incoming() {
             if self.stop.load(Ordering::SeqCst) {
                 break;
@@ -351,22 +394,34 @@ impl Server {
                 Ok(s) => s,
                 Err(_) => continue,
             };
+            if failpoints::check("net.accept").is_err() {
+                continue; // injected accept failure: drop the socket
+            }
+            let counters = Arc::clone(self.handle.counters());
+            while counters.conns_open.load(Ordering::Relaxed) >= self.net.max_conns as u64 {
+                if self.stop.load(Ordering::SeqCst) {
+                    return Ok(());
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
             let handle = self.handle.clone();
             let stop = Arc::clone(&self.stop);
             let addr = self.addr;
             let net = self.net.clone();
+            counters.conn_opened();
             std::thread::spawn(move || {
                 let _ = serve_conn(stream, &handle, &stop, addr, &net);
+                counters.conn_closed();
             });
         }
         Ok(())
     }
 }
 
-/// Handle one client connection: frames in, service calls, frames out.
-/// A deadline expiry (stalled peer, exhausted idle budget) ends the
-/// connection without touching any other client — each connection owns
-/// its thread and its socket, nothing else.
+/// Thread path: handle one client connection — frames in, service
+/// calls, frames out, one frame in flight at a time. A deadline expiry
+/// (stalled peer, exhausted idle budget) ends the connection without
+/// touching any other client.
 fn serve_conn(
     mut stream: TcpStream,
     handle: &ServiceHandle,
@@ -383,11 +438,15 @@ fn serve_conn(
         };
         let mut cur = Cur::new(&body);
         let opcode = cur.u8()?;
+        let corr = cur.u32()?;
+        handle.counters().record_frame(1);
         let reply = match opcode {
             OP_SHUTDOWN => {
                 cur.done()?;
                 stop.store(true, Ordering::SeqCst);
-                write_frame(&mut stream, &[OP_OK])?;
+                let mut out = vec![OP_OK];
+                put_u32(&mut out, corr);
+                write_frame(&mut stream, &out)?;
                 // Wake the (blocking) acceptor so `run` observes
                 // `stop`. A 0.0.0.0 / :: bind is not connectable on
                 // every platform — aim the wake at loopback instead.
@@ -410,26 +469,28 @@ fn serve_conn(
                 // Answered directly from the counters — works even
                 // while admission is rejecting.
                 let mut out = vec![OP_STATS_TEXT];
+                put_u32(&mut out, corr);
                 put_str(&mut out, &handle.report().summary());
                 out
             }
             OP_COMPRESS => {
                 let field = decode_field(&mut cur)?;
                 cur.done()?;
-                respond_frame(handle.call(Request::Compress { field }))
+                respond_frame(corr, handle.call(Request::Compress { field }))
             }
             OP_FETCH => {
                 let name = cur.str()?;
                 cur.done()?;
-                respond_frame(handle.call(Request::Fetch { name }))
+                respond_frame(corr, handle.call(Request::Fetch { name }))
             }
             OP_STALL => {
                 let millis = cur.u64()?;
                 cur.done()?;
-                respond_frame(handle.call(Request::Stall { millis }))
+                respond_frame(corr, handle.call(Request::Stall { millis }))
             }
             other => {
                 let mut out = vec![OP_ERROR];
+                put_u32(&mut out, corr);
                 put_str(&mut out, &format!("unknown opcode {other:#04x}"));
                 out
             }
@@ -438,11 +499,13 @@ fn serve_conn(
     }
 }
 
-/// Map a service outcome onto a response frame body.
-fn respond_frame(outcome: Result<Response>) -> Vec<u8> {
+/// Map a service outcome onto a response frame body tagged with the
+/// request's correlation id.
+fn respond_frame(corr: u32, outcome: Result<Response>) -> Vec<u8> {
     match outcome {
         Ok(Response::Compressed { name, raw_bytes, stored_bytes, chunks, batch_size }) => {
             let mut out = vec![OP_COMPRESSED];
+            put_u32(&mut out, corr);
             put_str(&mut out, &name);
             put_u64(&mut out, raw_bytes);
             put_u64(&mut out, stored_bytes);
@@ -452,21 +515,652 @@ fn respond_frame(outcome: Result<Response>) -> Vec<u8> {
         }
         Ok(Response::Field(field)) => {
             let mut out = vec![OP_FIELD];
+            put_u32(&mut out, corr);
             encode_field(&mut out, &field);
             out
         }
         Ok(Response::Stats(report)) => {
             let mut out = vec![OP_STATS_TEXT];
+            put_u32(&mut out, corr);
             put_str(&mut out, &report.summary());
             out
         }
-        Ok(Response::Stalled) => vec![OP_OK],
-        Err(Error::Busy) => vec![OP_BUSY],
+        Ok(Response::Stalled) => {
+            let mut out = vec![OP_OK];
+            put_u32(&mut out, corr);
+            out
+        }
+        Err(Error::Busy) => {
+            let mut out = vec![OP_BUSY];
+            put_u32(&mut out, corr);
+            out
+        }
         Err(e) => {
             let mut out = vec![OP_ERROR];
+            put_u32(&mut out, corr);
             put_str(&mut out, &e.to_string());
             out
         }
+    }
+}
+
+// ---------------------------------------------------------------- reactor
+
+/// Readiness-driven serving (DESIGN.md §17): one thread multiplexes
+/// every connection over the raw-epoll [`super::reactor::Poller`].
+/// Buffer ownership is strict — each connection owns its read buffer
+/// (partial inbound frames) and write buffer (queued responses);
+/// workers never touch either. Workers hand results to the
+/// [`reactor_serve::Completions`] queue and wake the loop through a
+/// `UnixStream` pair, so the reactor alone writes sockets.
+#[cfg(all(target_os = "linux", target_pointer_width = "64"))]
+mod reactor_serve {
+    use super::*;
+    use crate::service::reactor::{Event, Interest, Poller, TimerEntry, TimerWheel};
+    use crate::service::stats::ServiceCounters;
+    use std::os::fd::AsRawFd;
+    use std::os::unix::net::UnixStream;
+    use std::sync::Mutex;
+
+    const TOKEN_LISTENER: u64 = u64::MAX;
+    const TOKEN_WAKER: u64 = u64::MAX - 1;
+
+    /// One resolved job on its way back to a connection. `serial`
+    /// guards slot reuse: a completion for a connection that died (and
+    /// whose slot now holds a newcomer) is recognized and dropped.
+    struct Completion {
+        token: usize,
+        serial: u64,
+        corr: u32,
+        charge: usize,
+        result: Result<Response>,
+    }
+
+    /// Worker → reactor handoff: results land here and a byte on the
+    /// waker pipe makes the `epoll_wait` return.
+    pub(super) struct Completions {
+        q: Mutex<Vec<Completion>>,
+        wake: UnixStream,
+    }
+
+    impl Completions {
+        fn post(&self, c: Completion) {
+            self.q.lock().unwrap_or_else(|e| e.into_inner()).push(c);
+            // A full pipe means a wake is already pending; a closed
+            // one means the reactor exited — both are fine to ignore.
+            let _ = (&self.wake).write(&[1u8]);
+        }
+    }
+
+    /// Per-connection reactor state.
+    struct Conn {
+        stream: TcpStream,
+        serial: u64,
+        interest: Interest,
+        /// Inbound bytes not yet parsed into frames.
+        rbuf: Vec<u8>,
+        /// Outbound response bytes; `[wpos..]` still unwritten.
+        wbuf: Vec<u8>,
+        wpos: usize,
+        /// Frames admitted to the service, answer not yet queued.
+        inflight: usize,
+        inflight_bytes: usize,
+        /// Backpressure: reads suspended until in-flight bytes drain.
+        paused: bool,
+        last_activity: Instant,
+        /// When the current partial inbound frame started (read
+        /// deadline anchor).
+        rbuf_since: Option<Instant>,
+        /// When the pending write last made progress (write deadline
+        /// anchor).
+        wbuf_since: Option<Instant>,
+        /// Deadline generation: bumped whenever the deadline moves, so
+        /// stale wheel entries are dropped at fire time.
+        gen: u64,
+    }
+
+    /// The earliest deadline this connection is currently subject to.
+    /// Exactly one class applies at a time: stalled-read (partial
+    /// frame pending, not server-paused), stalled-write (unflushed
+    /// response bytes), or idle (fully quiescent).
+    fn next_deadline(conn: &Conn, net: &NetConfig) -> Option<Instant> {
+        let mut due: Option<Instant> = None;
+        let mut consider = |at: Instant| {
+            due = Some(match due {
+                Some(d) if d <= at => d,
+                _ => at,
+            });
+        };
+        if !conn.paused && !conn.rbuf.is_empty() {
+            if let (Some(t), Some(since)) = (deadline(net.read_timeout), conn.rbuf_since) {
+                consider(since + t);
+            }
+        }
+        if conn.wpos < conn.wbuf.len() {
+            if let (Some(t), Some(since)) = (deadline(net.write_timeout), conn.wbuf_since) {
+                consider(since + t);
+            }
+        }
+        if conn.rbuf.is_empty() && conn.inflight == 0 && conn.wpos >= conn.wbuf.len() {
+            if let Some(t) = deadline(net.idle_timeout) {
+                consider(conn.last_activity + t);
+            }
+        }
+        due
+    }
+
+    struct Reactor {
+        poller: Poller,
+        listener: TcpListener,
+        handle: ServiceHandle,
+        stop: Arc<AtomicBool>,
+        net: NetConfig,
+        conns: Vec<Option<Conn>>,
+        /// Slots freed before the current event batch (safe to reuse).
+        free: Vec<usize>,
+        /// Slots freed during the current batch — promoted to `free`
+        /// at the top of the next loop turn, so a stale event can
+        /// never land on a newcomer reusing the slot.
+        free_pending: Vec<usize>,
+        n_conns: usize,
+        listener_paused: bool,
+        next_serial: u64,
+        completions: Arc<Completions>,
+        waker_rx: UnixStream,
+        wheel: TimerWheel,
+        counters: Arc<ServiceCounters>,
+    }
+
+    pub(super) fn run(server: Server) -> Result<()> {
+        let Server { listener, addr: _, handle, stop, net } = server;
+        listener.set_nonblocking(true)?;
+        let poller = Poller::new()?;
+        let (waker_rx, waker_tx) = UnixStream::pair()?;
+        waker_rx.set_nonblocking(true)?;
+        waker_tx.set_nonblocking(true)?;
+        poller.add(listener.as_raw_fd(), TOKEN_LISTENER, Interest::READ)?;
+        poller.add(waker_rx.as_raw_fd(), TOKEN_WAKER, Interest::READ)?;
+        let counters = Arc::clone(handle.counters());
+        let mut r = Reactor {
+            poller,
+            listener,
+            handle,
+            stop,
+            net,
+            conns: Vec::new(),
+            free: Vec::new(),
+            free_pending: Vec::new(),
+            n_conns: 0,
+            listener_paused: false,
+            next_serial: 0,
+            completions: Arc::new(Completions { q: Mutex::new(Vec::new()), wake: waker_tx }),
+            waker_rx,
+            wheel: TimerWheel::new(Duration::from_millis(5), 512),
+            counters,
+        };
+        r.run()
+    }
+
+    impl Reactor {
+        fn run(&mut self) -> Result<()> {
+            let mut events: Vec<Event> = Vec::new();
+            let mut fired: Vec<TimerEntry> = Vec::new();
+            loop {
+                self.free.append(&mut self.free_pending);
+                let timeout = if self.wheel.is_armed() {
+                    self.wheel.tick_ms().min(i32::MAX as u64) as i32
+                } else {
+                    50
+                };
+                // An injected poll failure skips one wait — the loop
+                // itself must survive any fault here.
+                if failpoints::check("net.poll_wait").is_ok() {
+                    self.poller.wait(&mut events, timeout)?;
+                    for ev in events.clone() {
+                        self.dispatch(ev);
+                    }
+                }
+                self.drain_completions();
+                self.expire_deadlines(&mut fired);
+                if self.stop.load(Ordering::SeqCst) {
+                    return Ok(());
+                }
+            }
+        }
+
+        fn dispatch(&mut self, ev: Event) {
+            match ev.token {
+                TOKEN_LISTENER => self.accept_ready(),
+                TOKEN_WAKER => {
+                    let mut buf = [0u8; 256];
+                    while matches!((&self.waker_rx).read(&mut buf), Ok(n) if n > 0) {}
+                }
+                t => {
+                    let idx = t as usize;
+                    if self.conns.get(idx).map_or(true, |c| c.is_none()) {
+                        return; // closed earlier in this batch
+                    }
+                    if ev.readable {
+                        self.handle_readable(idx);
+                    }
+                    if ev.writable {
+                        self.try_flush(idx);
+                    }
+                    if ev.hangup && !ev.readable {
+                        // Nothing left to read: the peer is gone.
+                        self.close(idx);
+                    }
+                }
+            }
+        }
+
+        fn accept_ready(&mut self) {
+            loop {
+                if self.n_conns >= self.net.max_conns {
+                    self.pause_listener();
+                    return;
+                }
+                match self.listener.accept() {
+                    Ok((stream, _peer)) => {
+                        if failpoints::check("net.accept").is_err() {
+                            continue; // injected accept failure: drop it
+                        }
+                        if stream.set_nonblocking(true).is_err() {
+                            continue;
+                        }
+                        self.next_serial += 1;
+                        let conn = Conn {
+                            stream,
+                            serial: self.next_serial,
+                            interest: Interest::READ,
+                            rbuf: Vec::new(),
+                            wbuf: Vec::new(),
+                            wpos: 0,
+                            inflight: 0,
+                            inflight_bytes: 0,
+                            paused: false,
+                            last_activity: Instant::now(),
+                            rbuf_since: None,
+                            wbuf_since: None,
+                            gen: 0,
+                        };
+                        let idx = match self.free.pop() {
+                            Some(i) => {
+                                self.conns[i] = Some(conn);
+                                i
+                            }
+                            None => {
+                                self.conns.push(Some(conn));
+                                self.conns.len() - 1
+                            }
+                        };
+                        let fd = self.conns[idx].as_ref().expect("just placed").stream.as_raw_fd();
+                        if self.poller.add(fd, idx as u64, Interest::READ).is_err() {
+                            self.conns[idx] = None;
+                            self.free_pending.push(idx);
+                            continue;
+                        }
+                        self.n_conns += 1;
+                        self.counters.conn_opened();
+                        self.refresh(idx);
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => return,
+                }
+            }
+        }
+
+        fn pause_listener(&mut self) {
+            if !self.listener_paused
+                && self
+                    .poller
+                    .modify(self.listener.as_raw_fd(), TOKEN_LISTENER, Interest::NONE)
+                    .is_ok()
+            {
+                self.listener_paused = true;
+            }
+        }
+
+        fn resume_listener(&mut self) {
+            if self.listener_paused
+                && self
+                    .poller
+                    .modify(self.listener.as_raw_fd(), TOKEN_LISTENER, Interest::READ)
+                    .is_ok()
+            {
+                self.listener_paused = false;
+                self.accept_ready();
+            }
+        }
+
+        fn handle_readable(&mut self, idx: usize) {
+            if failpoints::check("net.readable").is_err() {
+                self.close(idx);
+                return;
+            }
+            let mut tmp = [0u8; 64 * 1024];
+            loop {
+                let Some(conn) = self.conns[idx].as_mut() else { return };
+                if conn.paused {
+                    break;
+                }
+                match conn.stream.read(&mut tmp) {
+                    Ok(0) => {
+                        // Peer EOF. Nothing in our protocol follows a
+                        // half-close: wind the connection down.
+                        self.close(idx);
+                        return;
+                    }
+                    Ok(n) => {
+                        if conn.rbuf.is_empty() {
+                            conn.rbuf_since = Some(Instant::now());
+                        }
+                        conn.rbuf.extend_from_slice(&tmp[..n]);
+                        conn.last_activity = Instant::now();
+                        if !self.parse_frames(idx) {
+                            return; // connection closed
+                        }
+                        if n < tmp.len() {
+                            break; // socket drained (level-triggered re-reports otherwise)
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        self.close(idx);
+                        return;
+                    }
+                }
+            }
+            self.refresh(idx);
+        }
+
+        /// Lift every complete frame out of `rbuf` and process it.
+        /// Stops at a partial frame or when backpressure pauses the
+        /// connection (buffered frames then wait for responses to
+        /// drain). Returns `false` if the connection was closed.
+        fn parse_frames(&mut self, idx: usize) -> bool {
+            loop {
+                let body = {
+                    let Some(conn) = self.conns[idx].as_mut() else { return false };
+                    if conn.paused || conn.rbuf.len() < 4 {
+                        break;
+                    }
+                    let hdr = [conn.rbuf[0], conn.rbuf[1], conn.rbuf[2], conn.rbuf[3]];
+                    let len = u32::from_le_bytes(hdr);
+                    if len > MAX_FRAME {
+                        self.close(idx);
+                        return false;
+                    }
+                    let total = 4 + len as usize;
+                    if conn.rbuf.len() < total {
+                        break;
+                    }
+                    let body: Vec<u8> = conn.rbuf[4..total].to_vec();
+                    conn.rbuf.drain(..total);
+                    let now = Instant::now();
+                    conn.rbuf_since = if conn.rbuf.is_empty() { None } else { Some(now) };
+                    conn.last_activity = now;
+                    body
+                };
+                if !self.process_frame(idx, &body) {
+                    return false;
+                }
+            }
+            true
+        }
+
+        /// Handle one complete frame. Returns `false` if the
+        /// connection was closed (corrupt framing).
+        fn process_frame(&mut self, idx: usize, body: &[u8]) -> bool {
+            let (serial, depth) = {
+                let Some(conn) = self.conns[idx].as_ref() else { return false };
+                (conn.serial, conn.inflight as u64 + 1)
+            };
+            self.counters.record_frame(depth);
+            let mut cur = Cur::new(body);
+            let (Ok(opcode), Ok(corr)) = (cur.u8(), cur.u32()) else {
+                self.close(idx);
+                return false;
+            };
+            match opcode {
+                OP_SHUTDOWN => {
+                    if cur.done().is_err() {
+                        self.close(idx);
+                        return false;
+                    }
+                    let mut out = vec![OP_OK];
+                    put_u32(&mut out, corr);
+                    self.queue_reply(idx, &out);
+                    self.flush_before_exit(idx);
+                    // The run loop observes the flag and returns after
+                    // this turn's completions drain.
+                    self.stop.store(true, Ordering::SeqCst);
+                    true
+                }
+                OP_STATS => {
+                    if cur.done().is_err() {
+                        self.close(idx);
+                        return false;
+                    }
+                    // Answered inline from the counters — works even
+                    // while admission is rejecting.
+                    let mut out = vec![OP_STATS_TEXT];
+                    put_u32(&mut out, corr);
+                    put_str(&mut out, &self.handle.report().summary());
+                    self.queue_reply(idx, &out);
+                    true
+                }
+                OP_COMPRESS | OP_FETCH | OP_STALL => {
+                    let req = match decode_request(opcode, &mut cur) {
+                        Ok(r) => r,
+                        Err(_) => {
+                            self.close(idx);
+                            return false;
+                        }
+                    };
+                    let charge = body.len().max(FRAME_CHARGE_FLOOR);
+                    let completions = Arc::clone(&self.completions);
+                    let token = idx;
+                    let hook = Box::new(move |result: Result<Response>| {
+                        completions.post(Completion { token, serial, corr, charge, result });
+                    });
+                    match self.handle.submit_hook(req, hook) {
+                        Ok(()) => {
+                            let Some(conn) = self.conns[idx].as_mut() else { return false };
+                            conn.inflight += 1;
+                            conn.inflight_bytes += charge;
+                            if conn.inflight_bytes > self.net.conn_inflight_bytes {
+                                conn.paused = true;
+                            }
+                        }
+                        Err(e) => {
+                            // Queue at its high-water mark (or any
+                            // other admission failure): answer now.
+                            self.queue_reply(idx, &respond_frame(corr, Err(e)));
+                        }
+                    }
+                    true
+                }
+                other => {
+                    let mut out = vec![OP_ERROR];
+                    put_u32(&mut out, corr);
+                    put_str(&mut out, &format!("unknown opcode {other:#04x}"));
+                    self.queue_reply(idx, &out);
+                    true
+                }
+            }
+        }
+
+        /// Append one framed response to the connection's write buffer
+        /// and push as much as the socket will take.
+        fn queue_reply(&mut self, idx: usize, body: &[u8]) {
+            {
+                let Some(conn) = self.conns[idx].as_mut() else { return };
+                conn.wbuf.extend_from_slice(&(body.len() as u32).to_le_bytes());
+                conn.wbuf.extend_from_slice(body);
+                if conn.wbuf_since.is_none() {
+                    conn.wbuf_since = Some(Instant::now());
+                }
+            }
+            self.try_flush(idx);
+        }
+
+        fn try_flush(&mut self, idx: usize) {
+            if self.conns.get(idx).map_or(true, |c| c.is_none()) {
+                return;
+            }
+            if failpoints::check("net.writable").is_err() {
+                self.close(idx);
+                return;
+            }
+            loop {
+                let Some(conn) = self.conns[idx].as_mut() else { return };
+                if conn.wpos >= conn.wbuf.len() {
+                    conn.wbuf.clear();
+                    conn.wpos = 0;
+                    conn.wbuf_since = None;
+                    break;
+                }
+                match conn.stream.write(&conn.wbuf[conn.wpos..]) {
+                    Ok(0) => {
+                        self.close(idx);
+                        return;
+                    }
+                    Ok(n) => {
+                        conn.wpos += n;
+                        let now = Instant::now();
+                        conn.wbuf_since = Some(now);
+                        conn.last_activity = now;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        self.close(idx);
+                        return;
+                    }
+                }
+            }
+            self.refresh(idx);
+        }
+
+        /// Re-derive epoll interest and the wheel deadline from the
+        /// connection's buffer/in-flight state.
+        fn refresh(&mut self, idx: usize) {
+            let now = Instant::now();
+            let (fd, want, gen, due) = {
+                let Some(conn) = self.conns[idx].as_mut() else { return };
+                let want = Interest {
+                    readable: !conn.paused,
+                    writable: conn.wpos < conn.wbuf.len(),
+                };
+                conn.gen += 1;
+                (conn.stream.as_raw_fd(), want, conn.gen, next_deadline(conn, &self.net))
+            };
+            let registered = self.conns[idx].as_ref().expect("checked above").interest;
+            if want != registered {
+                if self.poller.modify(fd, idx as u64, want).is_err() {
+                    self.close(idx);
+                    return;
+                }
+                if let Some(conn) = self.conns[idx].as_mut() {
+                    conn.interest = want;
+                }
+            }
+            if let Some(at) = due {
+                self.wheel.schedule(now, at, idx, gen);
+            }
+        }
+
+        /// Move worker results onto their connections' write buffers,
+        /// uncharging the in-flight budget and resuming paused reads.
+        fn drain_completions(&mut self) {
+            let drained = std::mem::take(
+                &mut *self.completions.q.lock().unwrap_or_else(|e| e.into_inner()),
+            );
+            for c in drained {
+                let alive = self.conns.get_mut(c.token).and_then(|slot| slot.as_mut());
+                let Some(conn) = alive else { continue };
+                if conn.serial != c.serial {
+                    continue; // the slot was reused; this answer is moot
+                }
+                conn.inflight = conn.inflight.saturating_sub(1);
+                conn.inflight_bytes = conn.inflight_bytes.saturating_sub(c.charge);
+                let unpaused = conn.paused && conn.inflight_bytes <= self.net.conn_inflight_bytes;
+                if unpaused {
+                    conn.paused = false;
+                    if !conn.rbuf.is_empty() {
+                        conn.rbuf_since = Some(Instant::now());
+                    }
+                }
+                self.queue_reply(c.token, &respond_frame(c.corr, c.result));
+                if unpaused && self.parse_frames(c.token) {
+                    self.refresh(c.token);
+                }
+            }
+        }
+
+        /// Fire due timers; each live entry re-checks the deadline it
+        /// stands for (it may have moved — generations catch that) and
+        /// either closes the connection or re-arms.
+        fn expire_deadlines(&mut self, fired: &mut Vec<TimerEntry>) {
+            fired.clear();
+            let now = Instant::now();
+            self.wheel.advance(now, fired);
+            for e in fired.drain(..) {
+                let Some(conn) = self.conns.get(e.token).and_then(|c| c.as_ref()) else {
+                    continue;
+                };
+                if conn.gen != e.gen {
+                    continue; // deadline moved since this was parked
+                }
+                match next_deadline(conn, &self.net) {
+                    Some(at) if at <= now => self.close(e.token),
+                    Some(at) => self.wheel.schedule(now, at, e.token, e.gen),
+                    None => {}
+                }
+            }
+        }
+
+        /// One best-effort blocking flush, used only on the shutdown
+        /// path so the final `OK` reaches the client before the
+        /// reactor returns.
+        fn flush_before_exit(&mut self, idx: usize) {
+            if let Some(conn) = self.conns[idx].as_mut() {
+                if conn.wpos < conn.wbuf.len() {
+                    let _ = conn.stream.set_nonblocking(false);
+                    let _ = conn.stream.set_write_timeout(Some(Duration::from_secs(1)));
+                    let _ = conn.stream.write_all(&conn.wbuf[conn.wpos..]);
+                    let _ = conn.stream.flush();
+                    conn.wpos = conn.wbuf.len();
+                }
+            }
+        }
+
+        fn close(&mut self, idx: usize) {
+            if let Some(conn) = self.conns[idx].take() {
+                let _ = self.poller.delete(conn.stream.as_raw_fd());
+                self.n_conns -= 1;
+                self.counters.conn_closed();
+                self.free_pending.push(idx);
+                if self.listener_paused && self.n_conns < self.net.max_conns {
+                    self.resume_listener();
+                }
+            }
+        }
+    }
+
+    /// Decode the payload of a worker-bound request frame.
+    fn decode_request(opcode: u8, cur: &mut Cur) -> Result<Request> {
+        let req = match opcode {
+            OP_COMPRESS => Request::Compress { field: decode_field(cur)? },
+            OP_FETCH => Request::Fetch { name: cur.str()? },
+            OP_STALL => Request::Stall { millis: cur.u64()? },
+            other => return Err(Error::Corrupt(format!("not a worker opcode: {other:#04x}"))),
+        };
+        cur.done()?;
+        Ok(req)
     }
 }
 
@@ -484,11 +1178,12 @@ pub struct CompressAck {
 }
 
 /// Client-side deadlines and retry policy. A deadline expiry surfaces
-/// as [`Error::Timeout`]; `call` then reconnects (the old socket may
-/// hold a half-written frame) and retries up to `timeout_retries`
+/// as [`Error::Timeout`]; serial calls then reconnect (the old socket
+/// may hold a half-written frame) and retry up to `timeout_retries`
 /// times with doubling backoff. The retry is safe because every
 /// request is idempotent: compress re-inserts under last-write-wins,
-/// fetch/stats/stall change nothing.
+/// fetch/stats/stall change nothing. Pipelined calls do not retry —
+/// with many frames in flight the caller decides what to reissue.
 #[derive(Clone, Debug)]
 pub struct ClientConfig {
     /// Socket read deadline (`Duration::ZERO` = none).
@@ -515,11 +1210,15 @@ impl Default for ClientConfig {
 /// Blocking TCP client for the frame protocol. Busy rejections surface
 /// as [`Error::Busy`] so callers can back off and retry; deadline
 /// expiries surface as [`Error::Timeout`] after the configured
-/// reconnect-and-retry budget is spent.
+/// reconnect-and-retry budget is spent. Every request carries a fresh
+/// correlation id; [`Client::compress_pipelined`] /
+/// [`Client::fetch_pipelined`] keep up to `depth` frames in flight on
+/// the one connection and match answers by id.
 pub struct Client {
     stream: TcpStream,
     addr: String,
     cfg: ClientConfig,
+    next_corr: u32,
 }
 
 impl Client {
@@ -530,7 +1229,7 @@ impl Client {
     /// [`Client::connect`] with explicit deadlines and retry policy.
     pub fn connect_with(addr: &str, cfg: ClientConfig) -> Result<Client> {
         let stream = Self::open(addr, &cfg)?;
-        Ok(Client { stream, addr: addr.to_string(), cfg })
+        Ok(Client { stream, addr: addr.to_string(), cfg, next_corr: 0 })
     }
 
     fn open(addr: &str, cfg: &ClientConfig) -> Result<TcpStream> {
@@ -540,14 +1239,49 @@ impl Client {
         Ok(stream)
     }
 
+    fn alloc_corr(&mut self) -> u32 {
+        self.next_corr = self.next_corr.wrapping_add(1);
+        self.next_corr
+    }
+
+    fn request_frame(op: u8, corr: u32, payload: &[u8]) -> Vec<u8> {
+        let mut body = Vec::with_capacity(5 + payload.len());
+        body.push(op);
+        put_u32(&mut body, corr);
+        body.extend_from_slice(payload);
+        body
+    }
+
+    /// Validate a raw response frame against the correlation id we
+    /// sent, mapping busy/error frames onto `Err`.
+    fn check_response(resp: Vec<u8>, want_corr: u32) -> Result<Vec<u8>> {
+        if resp.len() < 5 {
+            return Err(Error::Corrupt("short response frame".into()));
+        }
+        let corr = u32::from_le_bytes([resp[1], resp[2], resp[3], resp[4]]);
+        if corr != want_corr {
+            return Err(Error::Corrupt(format!(
+                "correlation id mismatch: sent {want_corr}, got {corr}"
+            )));
+        }
+        match resp[0] {
+            OP_BUSY => Err(Error::Busy),
+            OP_ERROR => {
+                let mut cur = Cur::new(&resp[5..]);
+                Err(Error::Other(format!("server error: {}", cur.str()?)))
+            }
+            _ => Ok(resp),
+        }
+    }
+
     /// One request/response exchange with bounded timeout retry;
     /// returns the response body with busy/error frames already mapped
     /// onto `Err`.
-    fn call(&mut self, body: &[u8]) -> Result<Vec<u8>> {
+    fn call(&mut self, op: u8, payload: &[u8]) -> Result<Vec<u8>> {
         let mut backoff = self.cfg.backoff;
         let mut attempts = 0u32;
         loop {
-            match self.call_once(body) {
+            match self.call_once(op, payload) {
                 Err(Error::Timeout(_)) if attempts < self.cfg.timeout_retries => {
                     attempts += 1;
                     std::thread::sleep(backoff);
@@ -561,25 +1295,58 @@ impl Client {
         }
     }
 
-    fn call_once(&mut self, body: &[u8]) -> Result<Vec<u8>> {
-        write_frame(&mut self.stream, body).map_err(|e| map_timeout(e, "client write"))?;
+    fn call_once(&mut self, op: u8, payload: &[u8]) -> Result<Vec<u8>> {
+        let corr = self.alloc_corr();
+        let body = Self::request_frame(op, corr, payload);
+        write_frame(&mut self.stream, &body).map_err(|e| map_timeout(e, "client write"))?;
         let resp = read_frame(&mut self.stream)
             .map_err(|e| map_timeout(e, "client read"))?
             .ok_or_else(|| Error::Other("server closed the connection".into()))?;
-        match resp.first().copied() {
-            Some(OP_BUSY) => Err(Error::Busy),
-            Some(OP_ERROR) => {
-                let mut cur = Cur::new(&resp[1..]);
-                Err(Error::Other(format!("server error: {}", cur.str()?)))
+        Self::check_response(resp, corr)
+    }
+
+    /// Pipelined exchange: write until `depth` requests are in flight,
+    /// then alternate reading one answer / writing the next, matching
+    /// answers to slots by correlation id. Per-request outcomes come
+    /// back in request order regardless of server completion order.
+    fn pipeline_call(
+        &mut self,
+        requests: &[(u8, Vec<u8>)],
+        depth: usize,
+    ) -> Result<Vec<Result<Vec<u8>>>> {
+        let depth = depth.max(1);
+        let n = requests.len();
+        let mut results: Vec<Option<Result<Vec<u8>>>> = (0..n).map(|_| None).collect();
+        let mut pending: std::collections::HashMap<u32, usize> = std::collections::HashMap::new();
+        let mut next = 0usize;
+        while next < n || !pending.is_empty() {
+            while next < n && pending.len() < depth {
+                let (op, payload) = &requests[next];
+                let corr = self.alloc_corr();
+                let body = Self::request_frame(*op, corr, payload);
+                write_frame(&mut self.stream, &body).map_err(|e| map_timeout(e, "client write"))?;
+                pending.insert(corr, next);
+                next += 1;
             }
-            Some(_) => Ok(resp),
-            None => Err(Error::Corrupt("empty response frame".into())),
+            let resp = read_frame(&mut self.stream)
+                .map_err(|e| map_timeout(e, "client read"))?
+                .ok_or_else(|| Error::Other("server closed the connection".into()))?;
+            if resp.len() < 5 {
+                return Err(Error::Corrupt("short response frame".into()));
+            }
+            let corr = u32::from_le_bytes([resp[1], resp[2], resp[3], resp[4]]);
+            let slot = pending.remove(&corr).ok_or_else(|| {
+                Error::Corrupt(format!("response for unknown correlation id {corr}"))
+            })?;
+            results[slot] = Some(Self::check_response(resp, corr));
         }
+        Ok(results.into_iter().map(|r| r.expect("every slot answered")).collect())
     }
 
     fn expect(resp: &[u8], opcode: u8) -> Result<Cur<'_>> {
         let mut cur = Cur::new(resp);
         let got = cur.u8()?;
+        let _corr = cur.u32()?; // validated in check_response
         if got != opcode {
             return Err(Error::Corrupt(format!(
                 "expected response opcode {opcode:#04x}, got {got:#04x}"
@@ -588,12 +1355,7 @@ impl Client {
         Ok(cur)
     }
 
-    /// Compress one field on the server.
-    pub fn compress(&mut self, field: &Field) -> Result<CompressAck> {
-        let mut body = vec![OP_COMPRESS];
-        encode_field(&mut body, field);
-        let resp = self.call(&body)?;
-        let mut cur = Self::expect(&resp, OP_COMPRESSED)?;
+    fn parse_ack(mut cur: Cur) -> Result<CompressAck> {
         let ack = CompressAck {
             name: cur.str()?,
             raw_bytes: cur.u64()?,
@@ -605,21 +1367,73 @@ impl Client {
         Ok(ack)
     }
 
+    /// Compress one field on the server.
+    pub fn compress(&mut self, field: &Field) -> Result<CompressAck> {
+        let mut payload = Vec::new();
+        encode_field(&mut payload, field);
+        let resp = self.call(OP_COMPRESS, &payload)?;
+        Self::parse_ack(Self::expect(&resp, OP_COMPRESSED)?)
+    }
+
     /// Fetch one field back from the server archive.
     pub fn fetch(&mut self, name: &str) -> Result<Field> {
-        let mut body = vec![OP_FETCH];
-        put_str(&mut body, name);
-        let resp = self.call(&body)?;
+        let mut payload = Vec::new();
+        put_str(&mut payload, name);
+        let resp = self.call(OP_FETCH, &payload)?;
         let mut cur = Self::expect(&resp, OP_FIELD)?;
         let field = decode_field(&mut cur)?;
         cur.done()?;
         Ok(field)
     }
 
+    /// Compress many fields over this one connection with up to
+    /// `depth` frames in flight; acks come back in `fields` order.
+    pub fn compress_pipelined(
+        &mut self,
+        fields: &[Field],
+        depth: usize,
+    ) -> Result<Vec<CompressAck>> {
+        let requests: Vec<(u8, Vec<u8>)> = fields
+            .iter()
+            .map(|f| {
+                let mut payload = Vec::new();
+                encode_field(&mut payload, f);
+                (OP_COMPRESS, payload)
+            })
+            .collect();
+        self.pipeline_call(&requests, depth)?
+            .into_iter()
+            .map(|r| Self::parse_ack(Self::expect(&r?, OP_COMPRESSED)?))
+            .collect()
+    }
+
+    /// Fetch many fields over this one connection with up to `depth`
+    /// frames in flight; fields come back in `names` order.
+    pub fn fetch_pipelined(&mut self, names: &[&str], depth: usize) -> Result<Vec<Field>> {
+        let requests: Vec<(u8, Vec<u8>)> = names
+            .iter()
+            .map(|name| {
+                let mut payload = Vec::new();
+                put_str(&mut payload, name);
+                (OP_FETCH, payload)
+            })
+            .collect();
+        self.pipeline_call(&requests, depth)?
+            .into_iter()
+            .map(|r| {
+                let resp = r?;
+                let mut cur = Self::expect(&resp, OP_FIELD)?;
+                let field = decode_field(&mut cur)?;
+                cur.done()?;
+                Ok(field)
+            })
+            .collect()
+    }
+
     /// The server's [`super::stats::ServiceReport`] summary text (the
-    /// service line plus the archive line).
+    /// service, transport, and archive lines).
     pub fn stats(&mut self) -> Result<String> {
-        let resp = self.call(&[OP_STATS])?;
+        let resp = self.call(OP_STATS, &[])?;
         let mut cur = Self::expect(&resp, OP_STATS_TEXT)?;
         let text = cur.str()?;
         cur.done()?;
@@ -629,17 +1443,16 @@ impl Client {
     /// Test instrumentation: occupy one server worker for `millis`.
     #[doc(hidden)]
     pub fn stall(&mut self, millis: u64) -> Result<()> {
-        let mut body = vec![OP_STALL];
-        put_u64(&mut body, millis);
-        let resp = self.call(&body)?;
+        let mut payload = Vec::new();
+        put_u64(&mut payload, millis);
+        let resp = self.call(OP_STALL, &payload)?;
         Self::expect(&resp, OP_OK)?.done()
     }
 
     /// Ask the server to stop accepting connections and exit its
-    /// accept loop (in-flight connections finish their current
-    /// request).
+    /// serve loop (in-flight requests finish first).
     pub fn shutdown(&mut self) -> Result<()> {
-        let resp = self.call(&[OP_SHUTDOWN])?;
+        let resp = self.call(OP_SHUTDOWN, &[])?;
         Self::expect(&resp, OP_OK)?.done()
     }
 }
@@ -649,7 +1462,9 @@ mod tests {
     use super::*;
     use crate::data::atm;
     use crate::engine::{Engine, EngineConfig};
+    use crate::service::reactor;
     use crate::service::{Service, ServiceConfig};
+    use crate::testing::failpoints::Policy as FpPolicy;
 
     #[test]
     fn field_codec_roundtrips_all_dims() {
@@ -698,6 +1513,20 @@ mod tests {
     }
 
     #[test]
+    fn correlation_ids_echo_and_mismatches_are_rejected() {
+        let frame = respond_frame(0xA1B2C3D4, Ok(Response::Stalled));
+        assert_eq!(frame[0], OP_OK);
+        assert_eq!(u32::from_le_bytes([frame[1], frame[2], frame[3], frame[4]]), 0xA1B2C3D4);
+        assert!(Client::check_response(frame.clone(), 0xA1B2C3D4).is_ok());
+        assert!(matches!(
+            Client::check_response(frame, 0xA1B2C3D5),
+            Err(Error::Corrupt(_))
+        ));
+        let busy = respond_frame(7, Err(Error::Busy));
+        assert!(matches!(Client::check_response(busy, 7), Err(Error::Busy)));
+    }
+
+    #[test]
     fn loopback_compress_fetch_stats_shutdown() {
         let engine = Arc::new(Engine::new(EngineConfig { workers: 2, ..EngineConfig::default() }));
         let svc = Service::start(
@@ -734,6 +1563,7 @@ mod tests {
 
         let stats = client.stats().unwrap();
         assert!(stats.contains("admitted"), "{stats}");
+        assert!(stats.contains("transport: conns open"), "{stats}");
         assert!(client.fetch("missing").is_err());
 
         client.shutdown().unwrap();
@@ -753,6 +1583,7 @@ mod tests {
             read_timeout: Duration::from_millis(40),
             write_timeout: Duration::from_millis(500),
             idle_timeout: Duration::from_millis(150),
+            ..NetConfig::default()
         };
         let server = Server::bind_with(svc.handle(), "127.0.0.1:0", net).unwrap();
         let addr = server.local_addr();
@@ -785,4 +1616,186 @@ mod tests {
         acceptor.join().unwrap().unwrap();
         svc.shutdown();
     }
+
+    /// Satellite: pipelining correctness under randomized readiness.
+    /// N interleaved compress/fetch frames ride one connection with a
+    /// `delay_ms` failpoint jittering how bytes split across readable
+    /// events; every response must match its correlation id and every
+    /// fetched payload must be byte-identical to the offline path.
+    #[test]
+    fn pipelined_interleaved_frames_match_correlation_ids_and_offline_bytes() {
+        let engine = Arc::new(Engine::new(EngineConfig { workers: 2, ..EngineConfig::default() }));
+        // batch_max 1: each compress is its own store pass, so the
+        // offline single-field container is the exact reference.
+        let svc = Service::start(
+            engine.clone(),
+            ServiceConfig {
+                workers: 2,
+                batch_max: 1,
+                eb_rel: 1e-3,
+                chunk_elems: 2048,
+                ..ServiceConfig::default()
+            },
+        )
+        .unwrap();
+        let server = Server::bind(svc.handle(), "127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+        let acceptor = std::thread::spawn(move || server.run());
+
+        let fields: Vec<Field> = (0..6).map(|i| atm::generate_field_scaled(91, i, 0)).collect();
+        crate::testing::failpoints::arm("net.readable", FpPolicy::DelayMs(1));
+
+        let mut client = Client::connect(&addr).unwrap();
+        // Phase 1: three compresses in flight at once.
+        let acks = client.compress_pipelined(&fields[..3], 4).unwrap();
+        for (ack, f) in acks.iter().zip(&fields[..3]) {
+            assert_eq!(ack.name, f.name);
+        }
+        // Phase 2: compress/fetch frames interleaved in one window.
+        let mut requests: Vec<(u8, Vec<u8>)> = Vec::new();
+        for i in 0..3 {
+            let mut p = Vec::new();
+            encode_field(&mut p, &fields[3 + i]);
+            requests.push((OP_COMPRESS, p));
+            let mut p = Vec::new();
+            put_str(&mut p, &fields[i].name);
+            requests.push((OP_FETCH, p));
+        }
+        let outcomes = client.pipeline_call(&requests, 4).unwrap();
+        for (k, outcome) in outcomes.into_iter().enumerate() {
+            let resp = outcome.unwrap();
+            let i = k / 2;
+            if k % 2 == 0 {
+                let ack = Client::parse_ack(Client::expect(&resp, OP_COMPRESSED).unwrap()).unwrap();
+                assert_eq!(ack.name, fields[3 + i].name, "ack must match its correlation id");
+            } else {
+                let mut cur = Client::expect(&resp, OP_FIELD).unwrap();
+                let got = decode_field(&mut cur).unwrap();
+                assert_eq!(got.name, fields[i].name, "field must match its correlation id");
+            }
+        }
+        // Every stored field decodes byte-identically to the offline
+        // path, pipelined fetches included.
+        let names: Vec<&str> = fields.iter().map(|f| f.name.as_str()).collect();
+        let fetched = client.fetch_pipelined(&names, 6).unwrap();
+        for (f, got) in fields.iter().zip(&fetched) {
+            let (_, bytes) = engine
+                .compress_chunked_to(
+                    std::slice::from_ref(f),
+                    crate::baseline::Policy::RateDistortion,
+                    1e-3,
+                    2048,
+                    Vec::new(),
+                )
+                .unwrap();
+            let reader = crate::coordinator::store::ContainerReader::from_bytes(bytes).unwrap();
+            let offline = engine.load_field(&reader, &f.name).unwrap();
+            assert_eq!(got.dims, offline.dims);
+            assert_eq!(got.data, offline.data, "pipelined fetch must match offline decode");
+        }
+        crate::testing::failpoints::disarm("net.readable");
+
+        client.shutdown().unwrap();
+        acceptor.join().unwrap().unwrap();
+        svc.shutdown();
+    }
+
+    #[test]
+    fn pipelining_depth_is_observed_and_backpressure_bounds_it() {
+        let mk = |conn_inflight_bytes: usize| {
+            let engine =
+                Arc::new(Engine::new(EngineConfig { workers: 1, ..EngineConfig::default() }));
+            let svc = Service::start(
+                engine,
+                ServiceConfig { workers: 1, ..ServiceConfig::default() },
+            )
+            .unwrap();
+            let net = NetConfig { conn_inflight_bytes, ..NetConfig::default() };
+            let server = Server::bind_with(svc.handle(), "127.0.0.1:0", net).unwrap();
+            let addr = server.local_addr().to_string();
+            let acceptor = std::thread::spawn(move || server.run());
+            (svc, addr, acceptor)
+        };
+        let stalls = |client: &mut Client, n: usize, millis: u64, depth: usize| {
+            let mut payload = Vec::new();
+            put_u64(&mut payload, millis);
+            let reqs: Vec<(u8, Vec<u8>)> = (0..n).map(|_| (OP_STALL, payload.clone())).collect();
+            client.pipeline_call(&reqs, depth).unwrap()
+        };
+
+        // Generous budget: all 8 frames are admitted while the single
+        // worker chews the first stall, so the reactor observes the
+        // full pipeline depth. (The thread path serves one frame at a
+        // time, so depth stays 1 there.)
+        if reactor::epoll_enabled() {
+            let (svc, addr, acceptor) = mk(NetConfig::default().conn_inflight_bytes);
+            let mut client = Client::connect(&addr).unwrap();
+            for r in stalls(&mut client, 8, 15, 8) {
+                r.unwrap();
+            }
+            let report = svc.report();
+            assert_eq!(report.depth_max, 8, "all 8 frames must be in flight at once");
+            assert!(report.frames >= 8);
+            client.shutdown().unwrap();
+            acceptor.join().unwrap().unwrap();
+            svc.shutdown();
+        }
+
+        // One-byte budget: every admitted frame trips backpressure, so
+        // in-flight depth never exceeds 1 — yet nothing is rejected
+        // and every pipelined request completes.
+        let (svc, addr, acceptor) = mk(1);
+        let mut client = Client::connect(&addr).unwrap();
+        for r in stalls(&mut client, 8, 1, 8) {
+            r.unwrap();
+        }
+        let report = svc.report();
+        assert_eq!(report.completed, 8, "backpressure defers, it must not reject");
+        assert_eq!(report.depth_max, 1, "budget of 1 byte admits one frame at a time");
+        client.shutdown().unwrap();
+        acceptor.join().unwrap().unwrap();
+        svc.shutdown();
+    }
+
+    #[test]
+    fn connection_cap_defers_accepts_instead_of_rejecting() {
+        let engine = Arc::new(Engine::new(EngineConfig { workers: 1, ..EngineConfig::default() }));
+        let svc = Service::start(
+            engine,
+            ServiceConfig { workers: 1, ..ServiceConfig::default() },
+        )
+        .unwrap();
+        let net = NetConfig { max_conns: 1, ..NetConfig::default() };
+        let server = Server::bind_with(svc.handle(), "127.0.0.1:0", net).unwrap();
+        let addr = server.local_addr().to_string();
+        let acceptor = std::thread::spawn(move || server.run());
+
+        // First connection takes the only slot.
+        let mut first = Client::connect(&addr).unwrap();
+        assert!(first.stats().unwrap().contains("admitted"));
+
+        // Second connection sits in the backlog: its request is not
+        // answered while the cap is held...
+        let mut second = TcpStream::connect(&addr).unwrap();
+        let mut body = vec![OP_STATS];
+        put_u32(&mut body, 42);
+        write_frame(&mut second, &body).unwrap();
+        second.set_read_timeout(Some(Duration::from_millis(300))).unwrap();
+        let mut buf = [0u8; 4];
+        assert!(second.read(&mut buf).is_err(), "capped-out connection must wait, not be served");
+
+        // ...and is served as soon as the first connection closes.
+        drop(first);
+        second.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let resp = read_frame(&mut second).unwrap().expect("deferred connection must be served");
+        assert_eq!(resp[0], OP_STATS_TEXT);
+        assert_eq!(u32::from_le_bytes([resp[1], resp[2], resp[3], resp[4]]), 42);
+
+        drop(second);
+        let mut closer = Client::connect(&addr).unwrap();
+        closer.shutdown().unwrap();
+        acceptor.join().unwrap().unwrap();
+        svc.shutdown();
+    }
 }
+

@@ -1,0 +1,397 @@
+//! Readiness reactor plumbing for the TCP front end (DESIGN.md §17):
+//! raw `epoll` syscall bindings, a thin [`Poller`] wrapper, and a
+//! hashed [`TimerWheel`] that re-expresses the transport deadlines as
+//! reactor timers instead of per-socket timeouts.
+//!
+//! Zero-dependency policy: like the PR 6 mmap bindings in
+//! [`crate::coordinator::store`], the syscalls are declared as raw
+//! `extern "C"` items under a `target_os = "linux"` +
+//! `target_pointer_width = "64"` gate — no libc crate, no mio. On any
+//! other target (or under the `ADAPTIVEC_NO_EPOLL` pin)
+//! [`epoll_enabled`] returns `false` and the server falls back to the
+//! PR 5 thread-per-connection path, which remains compiled everywhere.
+
+#[cfg(all(target_os = "linux", target_pointer_width = "64"))]
+pub use imp::{Event, Interest, Poller};
+
+use std::time::{Duration, Instant};
+
+/// Whether the readiness reactor is available on this target and not
+/// disabled via `ADAPTIVEC_NO_EPOLL` (checked once per process, same
+/// discipline as `ADAPTIVEC_NO_MMAP`). When `false`, [`super::net`]
+/// serves every connection on its own thread exactly as before.
+pub fn epoll_enabled() -> bool {
+    #[cfg(all(target_os = "linux", target_pointer_width = "64"))]
+    {
+        static ENABLED: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+        *ENABLED.get_or_init(|| std::env::var_os("ADAPTIVEC_NO_EPOLL").is_none())
+    }
+    #[cfg(not(all(target_os = "linux", target_pointer_width = "64")))]
+    {
+        false
+    }
+}
+
+#[cfg(all(target_os = "linux", target_pointer_width = "64"))]
+mod imp {
+    use std::io;
+    use std::os::fd::RawFd;
+
+    /// Raw epoll bindings. The kernel packs `epoll_event` on x86-64
+    /// only; every other 64-bit Linux uses natural alignment — the
+    /// `cfg_attr` reproduces exactly the kernel ABI per arch.
+    mod epoll_sys {
+        use std::os::raw::c_int;
+
+        pub const EPOLL_CLOEXEC: c_int = 0o2000000;
+        pub const EPOLL_CTL_ADD: c_int = 1;
+        pub const EPOLL_CTL_DEL: c_int = 2;
+        pub const EPOLL_CTL_MOD: c_int = 3;
+
+        pub const EPOLLIN: u32 = 0x001;
+        pub const EPOLLOUT: u32 = 0x004;
+        pub const EPOLLERR: u32 = 0x008;
+        pub const EPOLLHUP: u32 = 0x010;
+        pub const EPOLLRDHUP: u32 = 0x2000;
+
+        #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+        #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+        #[derive(Clone, Copy)]
+        pub struct EpollEvent {
+            pub events: u32,
+            pub data: u64,
+        }
+
+        extern "C" {
+            pub fn epoll_create1(flags: c_int) -> c_int;
+            pub fn epoll_ctl(
+                epfd: c_int,
+                op: c_int,
+                fd: c_int,
+                event: *mut EpollEvent,
+            ) -> c_int;
+            pub fn epoll_wait(
+                epfd: c_int,
+                events: *mut EpollEvent,
+                maxevents: c_int,
+                timeout: c_int,
+            ) -> c_int;
+            pub fn close(fd: c_int) -> c_int;
+        }
+    }
+
+    /// What a registration wants to hear about.
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    pub struct Interest {
+        pub readable: bool,
+        pub writable: bool,
+    }
+
+    impl Interest {
+        pub const READ: Interest = Interest { readable: true, writable: false };
+        pub const WRITE: Interest = Interest { readable: false, writable: true };
+        pub const BOTH: Interest = Interest { readable: true, writable: true };
+        /// Registered but deaf: keeps the fd in the set (so errors and
+        /// hangups still surface) while backpressure pauses reads.
+        pub const NONE: Interest = Interest { readable: false, writable: false };
+
+        fn mask(self) -> u32 {
+            let mut m = epoll_sys::EPOLLRDHUP; // always hear half-close
+            if self.readable {
+                m |= epoll_sys::EPOLLIN;
+            }
+            if self.writable {
+                m |= epoll_sys::EPOLLOUT;
+            }
+            m
+        }
+    }
+
+    /// One readiness event, decoded out of the kernel mask.
+    #[derive(Clone, Copy, Debug)]
+    pub struct Event {
+        pub token: u64,
+        pub readable: bool,
+        pub writable: bool,
+        /// `EPOLLERR`/`EPOLLHUP`/`EPOLLRDHUP`: the peer is gone or the
+        /// socket broke — the connection should wind down.
+        pub hangup: bool,
+    }
+
+    /// Thin safe wrapper over one epoll instance (level-triggered).
+    pub struct Poller {
+        epfd: RawFd,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            // SAFETY: plain syscall, no pointers.
+            let epfd = unsafe { epoll_sys::epoll_create1(epoll_sys::EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Poller { epfd })
+        }
+
+        fn ctl(&self, op: i32, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            let mut ev = epoll_sys::EpollEvent { events: interest.mask(), data: token };
+            let evp = if op == epoll_sys::EPOLL_CTL_DEL {
+                std::ptr::null_mut()
+            } else {
+                &mut ev as *mut _
+            };
+            // SAFETY: `ev` outlives the call; the kernel copies it.
+            let rc = unsafe { epoll_sys::epoll_ctl(self.epfd, op, fd, evp) };
+            if rc < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        pub fn add(&self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            self.ctl(epoll_sys::EPOLL_CTL_ADD, fd, token, interest)
+        }
+
+        pub fn modify(&self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            self.ctl(epoll_sys::EPOLL_CTL_MOD, fd, token, interest)
+        }
+
+        pub fn delete(&self, fd: RawFd) -> io::Result<()> {
+            self.ctl(epoll_sys::EPOLL_CTL_DEL, fd, 0, Interest::NONE)
+        }
+
+        /// Wait up to `timeout_ms` (0 = poll, negative = forever) and
+        /// decode the ready set into `out`. `EINTR` is absorbed (an
+        /// empty return — the caller's loop re-waits).
+        pub fn wait(&self, out: &mut Vec<Event>, timeout_ms: i32) -> io::Result<()> {
+            const CAP: usize = 1024;
+            let mut raw = [epoll_sys::EpollEvent { events: 0, data: 0 }; CAP];
+            // SAFETY: `raw` is a valid buffer of CAP entries for the
+            // duration of the call.
+            let n = unsafe {
+                epoll_sys::epoll_wait(self.epfd, raw.as_mut_ptr(), CAP as i32, timeout_ms)
+            };
+            out.clear();
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(e);
+            }
+            for ev in raw.iter().take(n as usize) {
+                let bits = ev.events;
+                out.push(Event {
+                    token: ev.data,
+                    readable: bits & epoll_sys::EPOLLIN != 0,
+                    writable: bits & epoll_sys::EPOLLOUT != 0,
+                    hangup: bits
+                        & (epoll_sys::EPOLLERR | epoll_sys::EPOLLHUP | epoll_sys::EPOLLRDHUP)
+                        != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            // SAFETY: epfd came from epoll_create1 and is closed once.
+            unsafe {
+                epoll_sys::close(self.epfd);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- timers
+
+/// One scheduled deadline: which connection, and the generation its
+/// owner stamped at scheduling time. A connection bumps its generation
+/// every time its deadline moves (frame progress, new frame, reply
+/// flushed), so stale wheel entries are recognized and dropped at fire
+/// time instead of being hunted down at re-arm time — O(1) re-arms, at
+/// the cost of dead entries riding the wheel until their slot comes up.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TimerEntry {
+    pub token: usize,
+    pub gen: u64,
+    due_tick: u64,
+}
+
+/// Hashed timer wheel: `slots` buckets of `tick` granularity. Entries
+/// never fire early; an entry past the horizon is parked in the last
+/// reachable slot and re-examined when it comes up (the owner re-arms
+/// it with the remaining time). Deadlines here are coarse by design —
+/// they bound misbehaving peers, they do not pace I/O.
+pub struct TimerWheel {
+    tick: Duration,
+    slots: Vec<Vec<TimerEntry>>,
+    /// Last tick index already drained.
+    cursor: u64,
+    base: Instant,
+    armed: usize,
+}
+
+impl TimerWheel {
+    pub fn new(tick: Duration, slots: usize) -> TimerWheel {
+        assert!(!tick.is_zero() && slots >= 2, "degenerate timer wheel");
+        TimerWheel {
+            tick,
+            slots: (0..slots).map(|_| Vec::new()).collect(),
+            cursor: 0,
+            base: Instant::now(),
+            armed: 0,
+        }
+    }
+
+    /// The farthest future a single scheduling can express; later
+    /// deadlines get parked and re-armed on the rebound.
+    pub fn horizon(&self) -> Duration {
+        self.tick * (self.slots.len() as u32 - 1)
+    }
+
+    fn tick_of(&self, t: Instant) -> u64 {
+        let dt = t.saturating_duration_since(self.base);
+        (dt.as_nanos() / self.tick.as_nanos().max(1)) as u64
+    }
+
+    /// Park `token`/`gen` to fire no earlier than `fire_at`.
+    pub fn schedule(&mut self, now: Instant, fire_at: Instant, token: usize, gen: u64) {
+        let now_tick = self.tick_of(now).max(self.cursor);
+        // +1: an entry always lands in a future slot, never the one
+        // being drained (firing early would break deadline semantics).
+        let due = self.tick_of(fire_at).max(now_tick) + 1;
+        let parked = due.min(now_tick + self.slots.len() as u64 - 1);
+        let slot = (parked % self.slots.len() as u64) as usize;
+        self.slots[slot].push(TimerEntry { token, gen, due_tick: parked });
+        self.armed += 1;
+    }
+
+    /// Drain every entry that has come due by `now` into `out`.
+    pub fn advance(&mut self, now: Instant, out: &mut Vec<TimerEntry>) {
+        let now_tick = self.tick_of(now);
+        if now_tick <= self.cursor {
+            return;
+        }
+        // Walk at most one full turn; older ticks alias onto the same
+        // slots anyway.
+        let turns = (now_tick - self.cursor).min(self.slots.len() as u64);
+        for i in 1..=turns {
+            let slot = ((self.cursor + i) % self.slots.len() as u64) as usize;
+            let bucket = &mut self.slots[slot];
+            let mut k = 0;
+            while k < bucket.len() {
+                if bucket[k].due_tick <= now_tick {
+                    out.push(bucket.swap_remove(k));
+                    self.armed -= 1;
+                } else {
+                    k += 1;
+                }
+            }
+        }
+        self.cursor = now_tick;
+    }
+
+    /// Whether anything is parked — the reactor's cue to keep its wait
+    /// timeout at tick granularity.
+    pub fn is_armed(&self) -> bool {
+        self.armed > 0
+    }
+
+    /// Wheel granularity in whole milliseconds (≥ 1).
+    pub fn tick_ms(&self) -> u64 {
+        self.tick.as_millis().max(1) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wheel_never_fires_early() {
+        let mut w = TimerWheel::new(Duration::from_millis(10), 16);
+        let t0 = Instant::now();
+        w.schedule(t0, t0 + Duration::from_millis(50), 7, 1);
+        let mut out = Vec::new();
+        w.advance(t0 + Duration::from_millis(30), &mut out);
+        assert!(out.is_empty(), "40 ms of slack left, nothing may fire");
+        w.advance(t0 + Duration::from_millis(75), &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!((out[0].token, out[0].gen), (7, 1));
+        assert!(!w.is_armed());
+    }
+
+    #[test]
+    fn wheel_parks_past_horizon_and_refires() {
+        let mut w = TimerWheel::new(Duration::from_millis(10), 8);
+        let t0 = Instant::now();
+        // Far past the ~70 ms horizon: parked at the last reachable
+        // slot, fires there, and the owner is expected to re-arm.
+        w.schedule(t0, t0 + Duration::from_secs(5), 3, 9);
+        let mut out = Vec::new();
+        w.advance(t0 + Duration::from_millis(200), &mut out);
+        assert_eq!(out.len(), 1, "parked entry must surface at the horizon");
+        assert_eq!(out[0].token, 3);
+    }
+
+    #[test]
+    fn wheel_multiple_tokens_and_generations() {
+        let mut w = TimerWheel::new(Duration::from_millis(5), 32);
+        let t0 = Instant::now();
+        for token in 0..20usize {
+            w.schedule(t0, t0 + Duration::from_millis(5 * (token as u64 + 1)), token, token as u64);
+        }
+        let mut out = Vec::new();
+        w.advance(t0 + Duration::from_millis(1000), &mut out);
+        assert_eq!(out.len(), 20);
+        let mut tokens: Vec<usize> = out.iter().map(|e| e.token).collect();
+        tokens.sort_unstable();
+        assert_eq!(tokens, (0..20).collect::<Vec<_>>());
+    }
+
+    #[cfg(all(target_os = "linux", target_pointer_width = "64"))]
+    #[test]
+    fn poller_reports_unixstream_readiness() {
+        use std::io::{Read, Write};
+        use std::os::fd::AsRawFd;
+        let (mut a, mut b) = std::os::unix::net::UnixStream::pair().unwrap();
+        a.set_nonblocking(true).unwrap();
+        b.set_nonblocking(true).unwrap();
+        let poller = Poller::new().unwrap();
+        poller.add(a.as_raw_fd(), 11, Interest::READ).unwrap();
+
+        let mut events = Vec::new();
+        poller.wait(&mut events, 0).unwrap();
+        assert!(events.is_empty(), "nothing written yet");
+
+        b.write_all(b"x").unwrap();
+        poller.wait(&mut events, 1000).unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].token, 11);
+        assert!(events[0].readable);
+
+        let mut buf = [0u8; 8];
+        let n = a.read(&mut buf).unwrap();
+        assert_eq!(n, 1);
+
+        // Interest::NONE keeps the fd registered but silent for data.
+        poller.modify(a.as_raw_fd(), 11, Interest::NONE).unwrap();
+        b.write_all(b"y").unwrap();
+        poller.wait(&mut events, 50).unwrap();
+        assert!(
+            events.iter().all(|e| !e.readable),
+            "paused registration must not report readable"
+        );
+        poller.modify(a.as_raw_fd(), 11, Interest::READ).unwrap();
+        poller.wait(&mut events, 1000).unwrap();
+        assert!(events.iter().any(|e| e.token == 11 && e.readable));
+
+        // Peer hangup surfaces so the reactor can reap the slot.
+        drop(b);
+        poller.wait(&mut events, 1000).unwrap();
+        assert!(events.iter().any(|e| e.token == 11 && e.hangup));
+        poller.delete(a.as_raw_fd()).unwrap();
+    }
+}

@@ -77,6 +77,79 @@ impl LatencyHistogram {
     }
 }
 
+/// Number of power-of-two pipelining-depth buckets: bucket `i` covers
+/// depths `[2^i, 2^(i+1))`, so 16 buckets reach depth 65535 — far past
+/// any sane frame-pipelining window.
+const DEPTH_BUCKETS: usize = 16;
+
+/// Lock-free histogram of per-connection pipelining depth (in-flight
+/// frames observed each time a frame is admitted). Same power-of-two
+/// bucket scheme as [`LatencyHistogram`], sized for small integers.
+#[derive(Debug)]
+pub struct DepthHistogram {
+    buckets: [AtomicU64; DEPTH_BUCKETS],
+    max: AtomicU64,
+}
+
+impl Default for DepthHistogram {
+    fn default() -> Self {
+        DepthHistogram::new()
+    }
+}
+
+impl DepthHistogram {
+    pub fn new() -> DepthHistogram {
+        DepthHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(depth: u64) -> usize {
+        if depth <= 1 {
+            0
+        } else {
+            ((63 - depth.leading_zeros()) as usize).min(DEPTH_BUCKETS - 1)
+        }
+    }
+
+    /// Record one observation of `depth` in-flight frames.
+    pub fn record(&self, depth: u64) {
+        self.buckets[Self::bucket_of(depth)].fetch_add(1, Ordering::Relaxed);
+        self.max.fetch_max(depth, Ordering::Relaxed);
+    }
+
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Deepest pipeline ever observed.
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Depth quantile `q` in [0, 1], reported as the upper edge of the
+    /// bucket the q-th sample falls in (`2^(i+1) - 1`, i.e. the
+    /// largest depth the bucket can hold). Zero when empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return (1u64 << (i as u32 + 1)) - 1;
+            }
+        }
+        (1u64 << DEPTH_BUCKETS as u32) - 1
+    }
+}
+
 /// Shared mutable counters behind a running service (workers bump,
 /// snapshots read). Queue-side admission counters live on the
 /// [`super::queue::RequestQueue`] itself; these cover the completion
@@ -103,6 +176,16 @@ pub struct ServiceCounters {
     pub worker_panics: AtomicU64,
     /// End-to-end (enqueue → reply ready) request latency.
     pub latency: LatencyHistogram,
+    /// Transport connections currently open (both reactor and
+    /// thread-per-connection paths maintain this gauge).
+    pub conns_open: AtomicU64,
+    /// Most connections ever open at once.
+    pub conns_peak: AtomicU64,
+    /// Complete frames read off the wire (requests, all opcodes).
+    pub frames: AtomicU64,
+    /// In-flight frames per connection, sampled at each frame
+    /// admission — the pipelining depth distribution.
+    pub depth: DepthHistogram,
 }
 
 impl ServiceCounters {
@@ -115,6 +198,24 @@ impl ServiceCounters {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_requests.fetch_add(size as u64, Ordering::Relaxed);
         self.max_batch.fetch_max(size as u64, Ordering::Relaxed);
+    }
+
+    /// Account one accepted transport connection.
+    pub fn conn_opened(&self) {
+        let now = self.conns_open.fetch_add(1, Ordering::Relaxed) + 1;
+        self.conns_peak.fetch_max(now, Ordering::Relaxed);
+    }
+
+    /// Account one closed transport connection.
+    pub fn conn_closed(&self) {
+        self.conns_open.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Account one complete request frame admitted with `depth` frames
+    /// now in flight on its connection (including itself).
+    pub fn record_frame(&self, depth: u64) {
+        self.frames.fetch_add(1, Ordering::Relaxed);
+        self.depth.record(depth);
     }
 }
 
@@ -151,6 +252,16 @@ pub struct ServiceReport {
     pub p99: Duration,
     /// Samples behind the latency quantiles.
     pub latency_count: u64,
+    /// Transport connections open at snapshot time.
+    pub conns_open: u64,
+    /// Most connections ever open at once.
+    pub conns_peak: u64,
+    /// Complete request frames read off the wire.
+    pub frames: u64,
+    /// Median pipelining depth (bucket upper edge).
+    pub depth_p50: u64,
+    /// Deepest pipeline observed on any connection.
+    pub depth_max: u64,
     /// Archive store health: hot/cold residency, spill/evict/recover
     /// counters, reader-cache traffic (see
     /// [`super::archive::ArchiveStats`]).
@@ -176,7 +287,9 @@ impl ServiceReport {
             "service: admitted {} / rejected {} / completed {} / errors {}; \
              workers_alive {} / worker_panics {}; \
              queue depth {} (peak {}); batches {} (avg {:.2}, max {}); \
-             latency p50 {:.3} ms / p99 {:.3} ms over {} requests\n{}",
+             latency p50 {:.3} ms / p99 {:.3} ms over {} requests\n\
+             transport: conns open {} (peak {}); frames {}; \
+             pipeline depth p50 {} / max {}\n{}",
             self.admitted,
             self.rejected,
             self.completed,
@@ -191,6 +304,11 @@ impl ServiceReport {
             self.p50.as_secs_f64() * 1e3,
             self.p99.as_secs_f64() * 1e3,
             self.latency_count,
+            self.conns_open,
+            self.conns_peak,
+            self.frames,
+            self.depth_p50,
+            self.depth_max,
             self.archive.summary(),
         )
     }
@@ -232,6 +350,42 @@ mod tests {
     }
 
     #[test]
+    fn depth_histogram_tracks_pipeline_shape() {
+        let d = DepthHistogram::new();
+        assert_eq!(d.quantile(0.5), 0, "empty histogram");
+        assert_eq!(d.max(), 0);
+        // Mostly serial traffic with one deep burst.
+        for _ in 0..90 {
+            d.record(1);
+        }
+        for _ in 0..9 {
+            d.record(4);
+        }
+        d.record(16);
+        assert_eq!(d.count(), 100);
+        // p50 lands in the depth-1 bucket [1, 2) → edge 1.
+        assert_eq!(d.quantile(0.50), 1);
+        // p99 lands in the depth-4 bucket [4, 8) → edge 7.
+        assert_eq!(d.quantile(0.99), 7);
+        assert_eq!(d.max(), 16);
+    }
+
+    #[test]
+    fn connection_gauges_track_open_and_peak() {
+        let c = ServiceCounters::new();
+        c.conn_opened();
+        c.conn_opened();
+        c.conn_opened();
+        c.conn_closed();
+        assert_eq!(c.conns_open.load(Ordering::Relaxed), 2);
+        assert_eq!(c.conns_peak.load(Ordering::Relaxed), 3);
+        c.record_frame(1);
+        c.record_frame(5);
+        assert_eq!(c.frames.load(Ordering::Relaxed), 2);
+        assert_eq!(c.depth.max(), 5);
+    }
+
+    #[test]
     fn counters_track_batches() {
         let c = ServiceCounters::new();
         c.record_batch(4);
@@ -259,6 +413,11 @@ mod tests {
             p50: Duration::from_micros(128),
             p99: Duration::from_micros(1024),
             latency_count: 10,
+            conns_open: 3,
+            conns_peak: 6,
+            frames: 42,
+            depth_p50: 1,
+            depth_max: 16,
             archive: super::super::archive::ArchiveStats {
                 durable: true,
                 hot_batches: 1,
@@ -287,6 +446,9 @@ mod tests {
         assert!(s.contains("batches 3"), "{s}");
         assert!(s.contains("workers_alive 2"), "{s}");
         assert!(s.contains("worker_panics 1"), "{s}");
+        assert!(s.contains("transport: conns open 3 (peak 6)"), "{s}");
+        assert!(s.contains("frames 42"), "{s}");
+        assert!(s.contains("pipeline depth p50 1 / max 16"), "{s}");
         assert!(s.contains("archive:"), "{s}");
         assert!(s.contains("spills 5"), "{s}");
         assert!(s.contains("recovered 3 fields from 2 shards"), "{s}");

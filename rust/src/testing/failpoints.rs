@@ -63,6 +63,10 @@ pub const SITES: &[&str] = &[
     "service.batch",
     "net.read_frame",
     "net.write_frame",
+    "net.accept",
+    "net.poll_wait",
+    "net.readable",
+    "net.writable",
 ];
 
 /// Which errno an injected I/O failure carries.
@@ -501,7 +505,7 @@ mod tests {
         // The hardening code references sites by string literal; this
         // pins the table so DESIGN.md §16 and the code cannot drift
         // silently (grep-audited in review, asserted here for count).
-        assert_eq!(SITES.len(), 14);
+        assert_eq!(SITES.len(), 18);
         for s in SITES {
             assert!(s.chars().all(|c| c.is_ascii_lowercase() || c == '.' || c == '_'), "{s}");
         }

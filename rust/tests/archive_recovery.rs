@@ -37,6 +37,7 @@ fn cfg(root: &PathBuf, mem_budget: usize) -> ServiceConfig {
             root_dir: Some(root.clone()),
             mem_budget,
             open_readers: 4,
+            background_spill: true,
         },
         ..ServiceConfig::default()
     }
@@ -193,7 +194,12 @@ fn truncated_shard_at_every_byte_boundary_is_contained() {
     let field = Field::new("torn-probe", Dims::D2(8, 16), data);
     let want = offline(&engine, &field);
 
-    let store_cfg = ArchiveConfig { root_dir: Some(root.clone()), mem_budget: 0, open_readers: 4 };
+    let store_cfg = ArchiveConfig {
+        root_dir: Some(root.clone()),
+        mem_budget: 0,
+        open_readers: 4,
+        background_spill: true,
+    };
     {
         let store = ArchiveStore::open(store_cfg.clone(), 4).unwrap();
         let (_, bytes) = engine
@@ -206,6 +212,7 @@ fn truncated_shard_at_every_byte_boundary_is_contained() {
             )
             .unwrap();
         store.insert(vec![field.name.clone()], bytes).unwrap();
+        store.quiesce();
         assert_eq!(store.stats().spills, 1, "zero budget publishes exactly one shard");
     }
     // Locate the single shard file just published.

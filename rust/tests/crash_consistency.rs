@@ -41,7 +41,14 @@ fn engine() -> Engine {
 }
 
 fn archive_cfg(root: &Path) -> ArchiveConfig {
-    ArchiveConfig { root_dir: Some(root.to_path_buf()), mem_budget: 0, open_readers: 4 }
+    // Inline spills: the kill_nth fault points must fire on the
+    // inserting thread at deterministic call counts.
+    ArchiveConfig {
+        root_dir: Some(root.to_path_buf()),
+        mem_budget: 0,
+        open_readers: 4,
+        background_spill: false,
+    }
 }
 
 /// The deterministic workload both lives agree on: six single-field

@@ -14,7 +14,11 @@
 //! * a panic inside worker batch execution resolves the tickets with
 //!   `Error::Internal` while the worker survives and keeps serving;
 //! * mmap/pread faults on the cold-read path surface as errors (or
-//!   fall back), never panics.
+//!   fall back), never panics;
+//! * a slow-loris dribbler (one mid-frame byte per tick, every byte
+//!   inside the per-read window) is torn down by the reactor's pinned
+//!   read deadline while a well-behaved connection keeps being served
+//!   and injected `net.poll_wait` faults are absorbed by the loop.
 
 #![cfg(feature = "faults")]
 
@@ -22,11 +26,14 @@ use adaptivec::baseline::Policy as CodecPolicy;
 use adaptivec::data::atm;
 use adaptivec::data::field::Field;
 use adaptivec::engine::{Engine, EngineConfig};
-use adaptivec::service::{ArchiveConfig, ArchiveStore, Service, ServiceConfig};
+use adaptivec::service::net::{Client, NetConfig, Server};
+use adaptivec::service::{reactor, ArchiveConfig, ArchiveStore, Service, ServiceConfig};
 use adaptivec::testing::failpoints::{self, Errno, Policy};
 use adaptivec::Error;
+use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::Duration;
 
 const EB: f64 = 1e-3;
 const CHUNK: usize = 2048;
@@ -52,7 +59,14 @@ fn temp_root(tag: &str) -> PathBuf {
 }
 
 fn archive_cfg(root: &Path) -> ArchiveConfig {
-    ArchiveConfig { root_dir: Some(root.to_path_buf()), mem_budget: 0, open_readers: 4 }
+    // Inline spills: these tests assert retry/degraded counters
+    // immediately after each insert.
+    ArchiveConfig {
+        root_dir: Some(root.to_path_buf()),
+        mem_budget: 0,
+        open_readers: 4,
+        background_spill: false,
+    }
 }
 
 /// Compress one field exactly the way the tests insert it.
@@ -271,4 +285,92 @@ fn cold_read_faults_error_or_fall_back_never_panic() {
         assert_eq!(fetch(&engine, &store, &field.name).data, offline(&engine, &field).data);
     }
     std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn slow_loris_dribbler_is_closed_without_stalling_others() {
+    let _guard = serialize();
+    // Only the readiness reactor pins a connection's read deadline at
+    // the first byte of a partial frame; the thread path's per-read
+    // socket timeouts reset on every byte, so a dribbler keeps those
+    // alive by design. Nothing to assert without epoll.
+    if !reactor::epoll_enabled() {
+        return;
+    }
+    let eng = engine();
+    let svc = Service::start(
+        Arc::new(engine()),
+        ServiceConfig { workers: 1, eb_rel: EB, chunk_elems: CHUNK, ..ServiceConfig::default() },
+    )
+    .unwrap();
+    let server = Server::bind_with(
+        svc.handle(),
+        "127.0.0.1:0",
+        NetConfig { read_timeout: Duration::from_millis(200), ..NetConfig::default() },
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+    let acceptor = std::thread::spawn(move || server.run());
+
+    // The reactor loop must also shrug off injected poll faults while
+    // it polices the dribbler (each skips exactly one epoll_wait).
+    failpoints::arm("net.poll_wait", Policy::ErrEvery(25, Errno::Eio));
+
+    // The dribbler declares a plausible 64-byte frame, then feeds one
+    // body byte per 20 ms tick — every byte lands well inside the
+    // 200 ms window, so a per-read timeout would never fire.
+    let mut loris = std::net::TcpStream::connect(&addr).unwrap();
+    loris.set_nodelay(true).ok();
+    loris.write_all(&64u32.to_le_bytes()).unwrap();
+    let t0 = std::time::Instant::now();
+    let dribble = std::thread::spawn(move || {
+        let mut write_failed = false;
+        for _ in 0..200 {
+            if loris.write_all(&[0x5a]).is_err() {
+                write_failed = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        let closed = write_failed || {
+            // Writes can outlive the server-side close by a round trip
+            // (the first write after the FIN only provokes the RST); a
+            // read makes the teardown unambiguous. A timeout here means
+            // the connection is still open — i.e. the defense failed.
+            loris.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+            let mut b = [0u8; 1];
+            match loris.read(&mut b) {
+                Ok(0) => true,
+                Ok(_) => false,
+                Err(e) => !matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ),
+            }
+        };
+        (closed, t0.elapsed())
+    });
+
+    // While the loris dribbles, a well-behaved connection round-trips
+    // a compress, a byte-identical fetch, and a stats frame: the
+    // stalled partial frame pins neither the reactor nor the worker.
+    let field = atm::generate_field_scaled(77, 0, 0);
+    let mut client = Client::connect(&addr).unwrap();
+    let ack = client.compress(&field).unwrap();
+    assert_eq!(ack.name, field.name);
+    let got = client.fetch(&field.name).unwrap();
+    assert_eq!(got.data, offline(&eng, &field).data, "served bytes must match offline");
+    assert!(client.stats().unwrap().contains("transport:"));
+
+    let (closed, waited) = dribble.join().unwrap();
+    failpoints::disarm("net.poll_wait");
+    assert!(closed, "the dribbling connection must be torn down by the read deadline");
+    assert!(
+        waited >= Duration::from_millis(150),
+        "torn down after {waited:?} — before the pinned deadline could have fired"
+    );
+
+    client.shutdown().unwrap();
+    acceptor.join().unwrap().unwrap();
+    svc.shutdown();
 }
